@@ -1,0 +1,9 @@
+"""Repo-root pytest shim: the compile-path package lives under
+python/ (it is build-time-only and never installed), so running
+``pytest python/tests/`` from the repo root needs python/ on sys.path.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

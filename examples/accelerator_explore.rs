@@ -1,0 +1,102 @@
+//! Design-space exploration of the HDP co-processor: sweep core count,
+//! PE geometry, SRAM budget and bit profile for HDP-Edge/Server-like
+//! instances, and show where each design is compute- vs DRAM-bound —
+//! the ablation study DESIGN.md calls out for §IV.
+//!
+//! ```sh
+//! cargo run --release --example accelerator_explore
+//! ```
+
+use anyhow::Result;
+use hdp::sim::{baselines::Workload, SimConfig, W12};
+use hdp::util::csv::{Cell, Table};
+
+fn report(cfg: &SimConfig, w: &Workload) -> (f64, f64, f64) {
+    let hdp = hdp::sim::baselines::hdp(cfg, w);
+    let dense = hdp::sim::baselines::dense(cfg, w);
+    (hdp.cycles, dense.cycles / hdp.cycles, hdp.energy_pj / 1e6)
+}
+
+fn main() -> Result<()> {
+    let w = Workload {
+        n_layers: 12,       // BERT-Base geometry for the design study
+        seq_len: 512,
+        d_head: 64,
+        n_heads: 12,
+        kept_density: 0.30, // the paper's ~70% block pruning point
+        head_kept_frac: 0.85,
+    };
+
+    println!("workload: BERT-Base-shaped attention, l={}, {}x{} heads, \
+              kept density {:.2}, heads kept {:.2}\n",
+             w.seq_len, w.n_layers, w.n_heads, w.kept_density, w.head_kept_frac);
+
+    let mut t = Table::new(&[
+        "design", "cores", "pe", "sram_kb", "bits", "cycles_m",
+        "speedup_vs_dense", "energy_uj", "bound",
+    ]);
+
+    let mut designs: Vec<(String, SimConfig)> = vec![
+        ("hdp-edge".into(), SimConfig::edge()),
+        ("hdp-server".into(), SimConfig::server()),
+        ("hdp-edge-12bit".into(), SimConfig::edge().with_widths(W12)),
+    ];
+    // Core scaling ablation.
+    for cores in [2usize, 8, 16] {
+        let mut c = SimConfig::server();
+        c.n_cores = cores;
+        designs.push((format!("server-{cores}core"), c));
+    }
+    // PE array geometry ablation.
+    for (r, cdim) in [(4usize, 4usize), (8, 8), (16, 16)] {
+        let mut c = SimConfig::edge();
+        c.pe_rows = r;
+        c.pe_cols = cdim;
+        designs.push((format!("edge-pe{r}x{cdim}"), c));
+    }
+    // SRAM ablation: resident vs streamed K.
+    for kb in [8.0f64, 32.0, 256.0] {
+        let mut c = SimConfig::edge();
+        c.sram_bytes = kb * 1024.0;
+        designs.push((format!("edge-sram{kb:.0}k"), c));
+    }
+
+    println!("{:<18} {:>6} {:>7} {:>8} {:>5} {:>10} {:>9} {:>10}  {}",
+             "design", "cores", "PEs", "sram", "bits", "cycles(M)",
+             "speedup", "energy µJ", "bound");
+    for (name, cfg) in &designs {
+        let (cycles, speedup, uj) = report(cfg, &w);
+        // Is the design DRAM-bound? Compare against a config with
+        // infinite bandwidth.
+        let mut unbound = cfg.clone();
+        unbound.dram_bytes_per_cycle = 1e12;
+        let (c2, _, _) = report(&unbound, &w);
+        let bound = if cycles > c2 * 1.05 { "DRAM" } else { "compute" };
+        println!("{:<18} {:>6} {:>7} {:>7.0}k {:>5} {:>10.1} {:>8.2}x {:>10.1}  {}",
+                 name, cfg.n_cores,
+                 format!("{}x{}", cfg.pe_rows, cfg.pe_cols),
+                 cfg.sram_bytes / 1024.0, cfg.widths.total,
+                 cycles / 1e6, speedup, uj, bound);
+        t.row(&[
+            Cell::s(name.as_str()), Cell::I(cfg.n_cores as i64),
+            Cell::s(format!("{}x{}", cfg.pe_rows, cfg.pe_cols)),
+            Cell::F(cfg.sram_bytes / 1024.0),
+            Cell::I(cfg.widths.total as i64),
+            Cell::F(cycles / 1e6), Cell::F(speedup), Cell::F(uj),
+            Cell::s(bound),
+        ]);
+    }
+    t.write("results/accelerator_explore.csv")?;
+
+    // Sparsity sensitivity: how the advantage scales with what the
+    // algorithm actually delivers.
+    println!("\nsparsity sensitivity (hdp-edge, speedup vs dense):");
+    let cfg = SimConfig::edge();
+    for kd in [1.0f32, 0.7, 0.5, 0.3, 0.15, 0.05] {
+        let w2 = Workload { kept_density: kd, ..w };
+        let (_, s, _) = report(&cfg, &w2);
+        println!("  kept density {kd:>4.2} -> {s:>5.2}x");
+    }
+    println!("\ncsv: results/accelerator_explore.csv");
+    Ok(())
+}

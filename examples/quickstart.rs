@@ -1,0 +1,74 @@
+//! Quickstart: load the AOT artifacts, initialize a model, run one
+//! batch through dense and HDP attention, and print what the pruning
+//! did — the 60-second tour of the public API.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use hdp::data::{Dataset, Split, Stream};
+use hdp::model::evaluator::Variant;
+use hdp::model::{Evaluator, ParamStore};
+use hdp::runtime::Runtime;
+use hdp::sim::{self, SimConfig};
+
+fn main() -> Result<()> {
+    // 1. Open the artifact bundle (HLO text + manifest, produced once
+    //    by `make artifacts`; python is not needed from here on).
+    let rt = Runtime::open("artifacts")?;
+    println!("models in manifest: {:?}",
+             rt.manifest.models.keys().collect::<Vec<_>>());
+
+    // 2. Initialize weights on-device via the AOT `init` entry. For
+    //    trained checkpoints, see `hdp train` / ParamStore::load.
+    let params = ParamStore::init(&rt, "tiny", 42)?;
+    println!("tiny: {} tensors, {} weights", params.names.len(),
+             params.total_weights());
+
+    // 3. Evaluate a few batches of the synthetic SST-2-like set through
+    //    dense attention and through HDP (Algorithm 2) at a moderate
+    //    operating point.
+    let ev = Evaluator::new(&rt, &params)?;
+    let dense = ev.run(Dataset::Sst2s, 42, 64, Variant::Dense)?;
+    let hdp = ev.run(Dataset::Sst2s, 42, 64, Variant::Hdp {
+        rho: 0.4,            // block pruning ratio (Algorithm 2, line 15)
+        tau: 1024.0,         // early head pruning threshold
+        qstep: 1.0 / 4096.0, // Q4.12 fixed point
+        use_ff: false,       // drop FQ·FK — the approximation
+        use_hw: false,
+    })?;
+    println!("\ndense  accuracy {:.3}", dense.accuracy);
+    println!("hdp    accuracy {:.3}", hdp.accuracy);
+    println!("hdp    kept block density {:.3} (pruned {:.1}%)",
+             hdp.mean_density(), 100.0 * (1.0 - hdp.mean_density()));
+    println!("hdp    heads kept {:.3}", hdp.mean_head_kept());
+    println!("hdp    net sparsity {:.3}", hdp.net_sparsity());
+
+    // 4. Ask the co-processor model what that pruning buys on silicon.
+    let cfg = SimConfig::edge();
+    let spec = rt.model("tiny")?;
+    let hdp_chip = sim::estimate_model(
+        &cfg, spec.config.n_layers, spec.config.seq_len, spec.config.d_head,
+        spec.config.n_heads, hdp.mean_density() as f32,
+        hdp.mean_head_kept() as f32, false);
+    let mut dense_chip = sim::ChipReport::default();
+    for _ in 0..spec.config.n_layers {
+        dense_chip.add_serial(&sim::estimate_layer_dense(
+            &cfg, spec.config.seq_len, spec.config.d_head,
+            spec.config.n_heads));
+    }
+    println!("\nHDP-Edge co-processor estimate (attention only):");
+    println!("  dense: {:>10.0} cycles  {:>8.2} µJ", dense_chip.cycles,
+             dense_chip.energy_pj / 1e6);
+    println!("  hdp:   {:>10.0} cycles  {:>8.2} µJ  ({:.2}x faster, {:.2}x less energy)",
+             hdp_chip.cycles, hdp_chip.energy_pj / 1e6,
+             dense_chip.cycles / hdp_chip.cycles,
+             dense_chip.energy_pj / hdp_chip.energy_pj);
+
+    // 5. Peek at one example so the data substrate is visible too.
+    let mut s = Stream::new(Dataset::Sst2s, Split::Eval, spec.config.seq_len, 42);
+    let ex = s.next_example();
+    println!("\nsample tokens[..12]: {:?}  label: {}", &ex.tokens[..12], ex.label);
+    Ok(())
+}

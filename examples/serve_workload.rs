@@ -1,0 +1,82 @@
+//! Serving example: Poisson request arrivals through the dynamic
+//! batcher into the PJRT engine, with per-request co-processor timing
+//! attached. Reports throughput and the latency distribution — the
+//! "serving paper" view of the coordinator.
+//!
+//! ```sh
+//! cargo run --release --example serve_workload [n_requests] [rate_rps]
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use hdp::coordinator::{Batcher, Engine, Request, ServeMode};
+use hdp::data::{Dataset, Split, Stream};
+use hdp::model::ParamStore;
+use hdp::runtime::Runtime;
+use hdp::sim::SimConfig;
+use hdp::util::rng::SplitMix64;
+use hdp::util::stats::percentile;
+
+fn main() -> Result<()> {
+    let mut args = std::env::args().skip(1);
+    let n: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(256);
+    let rate: f64 = args.next().and_then(|s| s.parse().ok()).unwrap_or(200.0);
+
+    let rt = Arc::new(Runtime::open("artifacts")?);
+    // Use the trained checkpoint when present, fresh init otherwise.
+    let params = ParamStore::load("weights/tiny.sst2s.hdpw")
+        .or_else(|_| ParamStore::init(&rt, "tiny", 42))?;
+    let spec = rt.model("tiny")?;
+    let batcher = Arc::new(Batcher::new(spec.config.eval_batch,
+                                        Duration::from_millis(4)));
+    let engine = Engine::new(
+        Arc::clone(&rt),
+        &params,
+        ServeMode::Hdp { rho: 0.4, tau: 2048.0, qstep: 1.0 / 4096.0 },
+        SimConfig::edge(),
+        Arc::clone(&batcher),
+    )?;
+    // Warm the executable so the first batch isn't a compile.
+    rt.executable("tiny", "hdp_fwd")?;
+
+    println!("serving {n} requests at ~{rate:.0} req/s (Poisson), \
+              max batch {}, linger 4ms", spec.config.eval_batch);
+    let seq_len = spec.config.seq_len;
+    let producer = {
+        let b = Arc::clone(&batcher);
+        std::thread::spawn(move || {
+            let mut rng = SplitMix64::new(7);
+            let mut stream = Stream::new(Dataset::Sst2s, Split::Eval, seq_len, 42);
+            for id in 0..n as u64 {
+                let ex = stream.next_example();
+                b.submit(Request {
+                    id,
+                    tokens: ex.tokens.iter().map(|&t| t as i32).collect(),
+                    enqueued: Instant::now(),
+                });
+                std::thread::sleep(Duration::from_secs_f64(rng.next_exp(rate)));
+            }
+            b.close();
+        })
+    };
+
+    let t0 = Instant::now();
+    let responses = engine.run_loop();
+    producer.join().unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+
+    let lat: Vec<f64> = responses.iter().map(|r| r.e2e_seconds * 1e3).collect();
+    println!("\nserved {} responses in {wall:.2}s ({:.1} req/s)",
+             responses.len(), responses.len() as f64 / wall);
+    println!("e2e latency  p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms",
+             percentile(&lat, 50.0), percentile(&lat, 95.0),
+             percentile(&lat, 99.0));
+    println!("\n{}", engine.metrics.report());
+    if let Some(r) = responses.first() {
+        println!("simulated HDP-Edge attention latency per batch: {:.3} ms",
+                 r.sim_seconds * 1e3);
+    }
+    Ok(())
+}

@@ -1,0 +1,225 @@
+"""AOT compiler: lower every (model x entry point) to HLO **text** and
+write ``artifacts/manifest.json``.
+
+HLO text — not ``HloModuleProto.serialize()`` — is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids which the
+xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Python runs only here, once (``make artifacts``); the rust binary is
+self-contained afterwards.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts [--force]
+        [--models tiny,base]``
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import EVAL_BATCH, MODELS, TRAIN_BATCH
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(
+        tuple(shape), {"f32": jnp.float32, "i32": jnp.int32}[dtype])
+
+
+def io(name, shape, dtype="f32"):
+    return {"name": name, "dtype": dtype, "shape": list(shape)}
+
+
+def build_entries(cfg):
+    """Yield (entry_name, fn, input_specs, output_specs).
+
+    input_specs / output_specs are manifest dicts; the positional order
+    here is the PJRT calling convention the rust runtime relies on.
+    """
+    shapes = cfg.param_shapes()
+    n = len(shapes)
+    l, L, H = cfg.seq_len, cfg.n_layers, cfg.n_heads
+    dh, C = cfg.d_head, cfg.n_classes
+
+    p_in = [io(f"param.{nm}", sh) for nm, sh in shapes]
+    p_specs = [spec(sh) for _, sh in shapes]
+    p_out = [io(f"param.{nm}", sh) for nm, sh in shapes]
+    m_in = [io(f"adam_m.{nm}", sh) for nm, sh in shapes]
+    v_in = [io(f"adam_v.{nm}", sh) for nm, sh in shapes]
+    tok = lambda b: io("tokens", (b, l), "i32")
+    tok_s = lambda b: spec((b, l), "i32")
+    f32s = lambda nm: io(nm, ())
+    B, TB = EVAL_BATCH, TRAIN_BATCH
+
+    def split_params(args, k=1):
+        """args = k param-lists then the rest."""
+        return [list(args[i * n:(i + 1) * n]) for i in range(k)], list(args[k * n:])
+
+    # --- init ------------------------------------------------------------
+    def init_fn(seed):
+        return tuple(M.init_params(cfg, seed))
+    yield ("init", init_fn, [spec((), "i32")], [io("seed", (), "i32")], p_out)
+
+    # --- dense forward ---------------------------------------------------
+    def dense_fn(*args):
+        (ps,), (tokens,) = split_params(args)
+        return (M.dense_forward(cfg, ps, tokens),)
+    yield ("dense_fwd", dense_fn, p_specs + [tok_s(B)],
+           p_in + [tok(B)], [io("logits", (B, C))])
+
+    # --- probe (Fig. 2): dense forward returning attention probs ---------
+    def probe_fn(*args):
+        (ps,), (tokens,) = split_params(args)
+        logits, probs = M.dense_forward(cfg, ps, tokens, return_probs=True)
+        return logits, probs
+    yield ("probe_fwd", probe_fn, p_specs + [tok_s(1)],
+           p_in + [tok(1)],
+           [io("logits", (1, C)), io("attn_probs", (L, 1, H, l, l))])
+
+    # --- HDP forward (the headline artifact) ------------------------------
+    def hdp_fn(*args):
+        (ps,), rest = split_params(args)
+        tokens, rho, tau, qstep, use_ff, use_hw = rest
+        return M.hdp_forward(cfg, ps, tokens, rho, tau, qstep, use_ff, use_hw)
+    yield ("hdp_fwd", hdp_fn,
+           p_specs + [tok_s(B)] + [spec(())] * 5,
+           p_in + [tok(B), f32s("rho"), f32s("tau"), f32s("qstep"),
+                   f32s("use_ff"), f32s("use_hw_softmax")],
+           [io("logits", (B, C)), io("kept_density", (L, H)),
+            io("head_kept", (L, H))])
+
+    # --- Top-K baseline forward -------------------------------------------
+    def topk_fn(*args):
+        (ps,), rest = split_params(args)
+        tokens, keep_frac, qstep = rest
+        return M.topk_forward(cfg, ps, tokens, keep_frac, qstep)
+    yield ("topk_fwd", topk_fn,
+           p_specs + [tok_s(B)] + [spec(())] * 2,
+           p_in + [tok(B), f32s("keep_frac"), f32s("qstep")],
+           [io("logits", (B, C)), io("kept_density", (L, H))])
+
+    # --- SpAtten cascaded head pruning baseline ----------------------------
+    def spatten_fn(*args):
+        (ps,), rest = split_params(args)
+        tokens, prune_frac = rest
+        return M.spatten_forward(cfg, ps, tokens, prune_frac)
+    yield ("spatten_fwd", spatten_fn,
+           p_specs + [tok_s(B), spec(())],
+           p_in + [tok(B), f32s("prune_frac")],
+           [io("logits", (B, C)), io("head_alive", (L, H))])
+
+    # --- dense train step ---------------------------------------------------
+    def train_fn(*args):
+        (ps, ms, vs), rest = split_params(args, 3)
+        step, tokens, labels, lr = rest
+        nps, nms, nvs, nstep, loss = M.train_step(
+            cfg, ps, ms, vs, step, tokens, labels, lr)
+        return tuple(nps) + tuple(nms) + tuple(nvs) + (nstep, loss)
+    t_in = (p_in + m_in + v_in +
+            [f32s("step"), tok(TB), io("labels", (TB,), "i32"), f32s("lr")])
+    t_specs = (p_specs * 3 +
+               [spec(()), tok_s(TB), spec((TB,), "i32"), spec(())])
+    t_out = (p_out + m_in + v_in + [f32s("step"), f32s("loss")])
+    yield ("train_step", train_fn, t_specs, t_in, t_out)
+
+    # --- HDP fine-tuning step (Fig. 11b) -------------------------------------
+    def hdp_train_fn(*args):
+        (ps, ms, vs), rest = split_params(args, 3)
+        step, tokens, labels, lr, rho, tau, qstep = rest
+        nps, nms, nvs, nstep, loss = M.hdp_train_step(
+            cfg, ps, ms, vs, step, tokens, labels, lr, rho, tau, qstep)
+        return tuple(nps) + tuple(nms) + tuple(nvs) + (nstep, loss)
+    yield ("hdp_train_step", hdp_train_fn,
+           t_specs + [spec(())] * 3,
+           t_in + [f32s("rho"), f32s("tau"), f32s("qstep")],
+           t_out)
+
+    # --- raw attention unit (rust cross-validation target) -------------------
+    def unit_fn(iq, fq, ik, fk, v, rho, tau, inv, use_ff, use_hw):
+        return M.hdp_attn_unit(iq, fq, ik, fk, v, rho, tau, inv,
+                               use_ff, use_hw)
+    hs = spec((H, l, dh))
+    yield ("hdp_attn_unit", unit_fn,
+           [hs] * 5 + [spec(())] * 5,
+           [io("iq", (H, l, dh)), io("fq", (H, l, dh)),
+            io("ik", (H, l, dh)), io("fk", (H, l, dh)),
+            io("v", (H, l, dh)), f32s("rho"), f32s("tau"),
+            f32s("inv_scale"), f32s("use_ff"), f32s("use_hw_softmax")],
+           [io("out", (H, l, dh)), io("probs", (H, l, l)),
+            io("kept_density", (H,)), io("head_kept", (H,))])
+
+
+def compile_model(cfg, outdir, force=False):
+    entries = {}
+    for name, fn, in_specs, in_io, out_io in build_entries(cfg):
+        fname = f"{cfg.name}.{name}.hlo.txt"
+        path = os.path.join(outdir, fname)
+        entries[name] = {"file": fname, "inputs": in_io, "outputs": out_io}
+        if os.path.exists(path) and not force:
+            print(f"  [skip] {fname}")
+            continue
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  [ok]   {fname}  {len(text)/1e6:.2f} MB  {time.time()-t0:.1f}s")
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--models", default="tiny,base")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    # Merge into any existing manifest so partial --models runs don't
+    # clobber other models' entries.
+    mpath0 = os.path.join(args.out, "manifest.json")
+    manifest = {"format": 1, "models": {}}
+    if os.path.exists(mpath0):
+        try:
+            with open(mpath0) as f:
+                manifest = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            pass
+    for mname in args.models.split(","):
+        cfg = MODELS[mname]
+        print(f"model {mname}:")
+        entries = compile_model(cfg, args.out, args.force)
+        manifest["models"][mname] = {
+            "config": {
+                "vocab_size": cfg.vocab_size, "n_layers": cfg.n_layers,
+                "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+                "seq_len": cfg.seq_len, "d_ff": cfg.d_ff,
+                "n_classes": cfg.n_classes, "d_head": cfg.d_head,
+                "train_batch": TRAIN_BATCH, "eval_batch": EVAL_BATCH,
+            },
+            "params": [{"name": nm, "shape": list(sh)}
+                       for nm, sh in cfg.param_shapes()],
+            "entries": entries,
+        }
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Model / quantization configurations shared across the compile path.
+
+Two encoder geometries stand in for the paper's evaluation models (see
+DESIGN.md §Substitutions):
+
+* ``tiny``  — BERT-Tiny's exact shape: 2 layers, d=128, 2 heads (d_h=64).
+* ``base``  — a scaled BERT-Base: 4 layers, d=256, 8 heads (d_h=32),
+  keeping the "many heads" regime (32 heads total) that gives the paper
+  its 13-17% head-pruning headroom.
+
+The quantization profiles model the co-processor's host interface: Q/K/V
+arrive in fixed point (paper §IV: "quantized by another processor in
+fixed point 16 bit format"). ``q4_12`` is the 16-bit profile used for the
+main results; ``q4_8`` is the 12-bit profile used for the SpAtten
+comparison (paper §V-B).
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    """Fixed-point profile for the HDP integer/fraction decomposition."""
+
+    name: str
+    int_bits: int  # integer bits excluding sign
+    frac_bits: int
+
+    @property
+    def total_bits(self) -> int:
+        return self.int_bits + self.frac_bits + 1  # + sign
+
+    @property
+    def amax(self) -> float:
+        """Largest representable magnitude."""
+        return float(2**self.int_bits) - 2.0**-self.frac_bits
+
+    @property
+    def target_amax(self) -> float:
+        """Calibration point: 99.5th-percentile |x| maps here.
+
+        Half the integer range, so integer parts carry the bulk of the
+        signal while headroom absorbs the tail above the percentile.
+        """
+        return float(2**self.int_bits) / 2.0
+
+
+Q4_12 = QuantConfig("q4_12", int_bits=3, frac_bits=12)  # 16-bit
+Q4_8 = QuantConfig("q4_8", int_bits=3, frac_bits=8)  # 12-bit
+
+QUANTS = {q.name: q for q in (Q4_12, Q4_8)}
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Encoder-only transformer geometry."""
+
+    name: str
+    vocab_size: int
+    n_layers: int
+    d_model: int
+    n_heads: int
+    seq_len: int
+    d_ff: int
+    n_classes: int = 2
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def n_blocks_per_row(self) -> int:
+        """Number of 2x2 blocks along one side of the l x l score matrix."""
+        assert self.seq_len % 2 == 0
+        return self.seq_len // 2
+
+    def param_shapes(self):
+        """Ordered (name, shape) list — the AOT/rust interchange contract.
+
+        The rust parameter store (rust/src/model/params.rs) indexes
+        parameters by position in this list; keep it append-only.
+        """
+        d, f, v, l = self.d_model, self.d_ff, self.vocab_size, self.seq_len
+        shapes = [
+            ("tok_emb", (v, d)),
+            ("pos_emb", (l, d)),
+        ]
+        for i in range(self.n_layers):
+            p = f"layer{i}."
+            shapes += [
+                (p + "ln1.g", (d,)),
+                (p + "ln1.b", (d,)),
+                (p + "wqkv", (d, 3 * d)),
+                (p + "bqkv", (3 * d,)),
+                (p + "wo", (d, d)),
+                (p + "bo", (d,)),
+                (p + "ln2.g", (d,)),
+                (p + "ln2.b", (d,)),
+                (p + "w1", (d, f)),
+                (p + "b1", (f,)),
+                (p + "w2", (f, d)),
+                (p + "b2", (d,)),
+            ]
+        shapes += [
+            ("ln_f.g", (d,)),
+            ("ln_f.b", (d,)),
+            ("cls.w", (d, self.n_classes)),
+            ("cls.b", (self.n_classes,)),
+        ]
+        return shapes
+
+
+TINY = ModelConfig(
+    name="tiny", vocab_size=256, n_layers=2, d_model=128, n_heads=2,
+    seq_len=64, d_ff=256,
+)
+BASE = ModelConfig(
+    name="base", vocab_size=256, n_layers=4, d_model=256, n_heads=8,
+    seq_len=128, d_ff=512,
+)
+
+MODELS = {m.name: m for m in (TINY, BASE)}
+
+# Batch sizes baked into the AOT artifacts (PJRT executables have static
+# shapes; the rust batcher pads up to these).
+TRAIN_BATCH = 32
+EVAL_BATCH = 32

@@ -1,0 +1,204 @@
+"""Synthetic GLUE-like datasets, bit-identical to ``rust/src/data/``.
+
+The paper evaluates on SST-2 and CoLA, which (like the pre-trained BERT
+checkpoints) are not available in this sandbox. These generators build
+the closest synthetic equivalents (DESIGN.md §Substitutions):
+
+* ``sst2s`` — sentiment-like: a handful of polarity-bearing "lexicon"
+  tokens decide the label (with negation tokens that flip the next
+  lexicon token). Mirrors SST-2's property that a few key tokens carry
+  the signal, which is exactly what makes attention prunable.
+* ``colas`` — acceptability-like: the label is whether the sequence's
+  bracket tokens are properly matched and nested. A global structural
+  judgement, like CoLA; harder, so pruning headroom is lower.
+
+Both python and rust implement the same splitmix64 PRNG and the same
+sampling algorithm so that the training set the rust driver streams
+through PJRT equals the one pytest validates. ``python/tests/test_data.py``
+and ``rust/src/data/mod.rs`` pin identical golden vectors.
+"""
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+MASK64 = (1 << 64) - 1
+
+# ---------------------------------------------------------------------------
+# splitmix64 — the shared cross-language PRNG.
+# ---------------------------------------------------------------------------
+
+
+class SplitMix64:
+    """splitmix64 (Steele et al.) — tiny, seedable, cross-language."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+    def next_below(self, n: int) -> int:
+        """Uniform integer in [0, n) via 128-bit multiply (Lemire, biased
+        by < 2^-64 — fine for data generation, and trivially portable)."""
+        return ((self.next_u64() * n) >> 64) & MASK64
+
+    def next_f64(self) -> float:
+        """Uniform in [0, 1) with 53 bits."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+
+# ---------------------------------------------------------------------------
+# Token-space layout (shared constants; rust mirrors these).
+# ---------------------------------------------------------------------------
+
+PAD = 0
+POS_LO, POS_HI = 10, 19  # positive lexicon (inclusive)
+NEG_LO, NEG_HI = 20, 29  # negative lexicon
+FLIP_LO, FLIP_HI = 30, 31  # negation: flips polarity of next lexicon token
+OPEN_LO, OPEN_HI = 40, 43  # bracket opens; close = open + 4
+CLOSE_LO, CLOSE_HI = 44, 47
+FILLER_LO = 48  # filler/distractor tokens occupy [FILLER_LO, vocab)
+
+P_LEXICON = 0.15
+P_FLIP = 0.05
+
+
+@dataclass(frozen=True)
+class Example:
+    tokens: List[int]
+    label: int
+
+
+def _gen_sst2s(rng: SplitMix64, seq_len: int, vocab: int) -> Example:
+    """One sentiment-like example. Score = Σ ±1 over lexicon tokens
+    (sign flipped when the previous token is a negation); label = score>0.
+    Zero scores are broken by overwriting one filler with a lexicon token.
+    """
+    toks = [0] * seq_len
+    for i in range(seq_len):
+        r = rng.next_f64()
+        if r < P_LEXICON:
+            if rng.next_below(2) == 0:
+                toks[i] = POS_LO + rng.next_below(POS_HI - POS_LO + 1)
+            else:
+                toks[i] = NEG_LO + rng.next_below(NEG_HI - NEG_LO + 1)
+        elif r < P_LEXICON + P_FLIP:
+            toks[i] = FLIP_LO + rng.next_below(FLIP_HI - FLIP_LO + 1)
+        else:
+            toks[i] = FILLER_LO + rng.next_below(vocab - FILLER_LO)
+    score = _sst2s_score(toks)
+    if score == 0:
+        # Force a decisive token over some filler position (first filler).
+        want_pos = rng.next_below(2) == 0
+        tok = (POS_LO + rng.next_below(POS_HI - POS_LO + 1)) if want_pos else (
+            NEG_LO + rng.next_below(NEG_HI - NEG_LO + 1))
+        for i in range(seq_len):
+            if toks[i] >= FILLER_LO:
+                toks[i] = tok
+                break
+        score = _sst2s_score(toks)
+    return Example(toks, 1 if score > 0 else 0)
+
+
+def _sst2s_score(toks: List[int]) -> int:
+    score = 0
+    for i, t in enumerate(toks):
+        flipped = i > 0 and FLIP_LO <= toks[i - 1] <= FLIP_HI
+        if POS_LO <= t <= POS_HI:
+            score += -1 if flipped else 1
+        elif NEG_LO <= t <= NEG_HI:
+            score += 1 if flipped else -1
+    return score
+
+
+def _gen_colas(rng: SplitMix64, seq_len: int, vocab: int) -> Example:
+    """One acceptability-like example: balanced-bracket grammar.
+
+    Positives: a random properly nested bracket string (depth ≤ 4, 4
+    bracket kinds) interleaved with fillers. Negatives: same, then one
+    corruption (mismatched kind, orphaned close, or swapped pair).
+    """
+    label = int(rng.next_below(2))
+    toks = [0] * seq_len
+    stack: List[int] = []
+    bracket_pos: List[int] = []
+    for i in range(seq_len):
+        remaining = seq_len - i
+        # Must close everything before running out of room.
+        must_close = len(stack) >= remaining
+        r = rng.next_f64()
+        if must_close or (stack and r < 0.18):
+            kind = stack.pop()
+            toks[i] = CLOSE_LO + kind
+            bracket_pos.append(i)
+        elif len(stack) < 4 and r < 0.36:
+            kind = int(rng.next_below(4))
+            stack.append(kind)
+            toks[i] = OPEN_LO + kind
+            bracket_pos.append(i)
+        else:
+            toks[i] = FILLER_LO + rng.next_below(vocab - FILLER_LO)
+    # stack is empty by construction (must_close forces closure).
+    if label == 0 and bracket_pos:
+        j = bracket_pos[rng.next_below(len(bracket_pos))]
+        t = toks[j]
+        mode = rng.next_below(3)
+        if mode == 0:
+            # Change bracket kind (mismatch).
+            if OPEN_LO <= t <= OPEN_HI:
+                toks[j] = OPEN_LO + ((t - OPEN_LO + 1 + rng.next_below(3)) % 4)
+            else:
+                toks[j] = CLOSE_LO + ((t - CLOSE_LO + 1 + rng.next_below(3)) % 4)
+        elif mode == 1:
+            # Flip open <-> close (orphans a bracket).
+            toks[j] = t + 4 if t <= OPEN_HI else t - 4
+        else:
+            # Overwrite with filler (drops one side of a pair).
+            toks[j] = FILLER_LO + rng.next_below(vocab - FILLER_LO)
+        if _colas_wellformed(toks):
+            # Corruption can accidentally stay well-formed (e.g. "()"->
+            # "[]" relabels a whole pair only if both sides changed —
+            # single-site edits rarely do, but overwriting a lone pair's
+            # open AND having no close is always caught; the residual
+            # case is overwriting when brackets elsewhere still match).
+            # Force a guaranteed corruption: orphan close at position 0.
+            toks[0] = CLOSE_LO + rng.next_below(4)
+    if label == 1 and not bracket_pos:
+        pass  # vacuously well-formed
+    return Example(toks, 1 if _colas_wellformed(toks) else 0)
+
+
+def _colas_wellformed(toks: List[int]) -> bool:
+    stack: List[int] = []
+    for t in toks:
+        if OPEN_LO <= t <= OPEN_HI:
+            stack.append(t - OPEN_LO)
+        elif CLOSE_LO <= t <= CLOSE_HI:
+            if not stack or stack.pop() != t - CLOSE_LO:
+                return False
+    return not stack
+
+
+GENERATORS = {"sst2s": _gen_sst2s, "colas": _gen_colas}
+
+
+def generate(dataset: str, split: str, n: int, seq_len: int,
+             vocab: int = 256, seed: int = 42) -> Tuple[List[List[int]], List[int]]:
+    """Deterministic dataset: stream n examples for (dataset, split, seed).
+
+    The per-split stream seed mixes the base seed with a split tag so
+    train/eval never overlap. Rust uses the identical derivation.
+    """
+    split_tag = {"train": 0x7472, "eval": 0x6576, "probe": 0x7072}[split]
+    rng = SplitMix64((seed * 0x9E3779B97F4A7C15 + split_tag) & MASK64)
+    gen = GENERATORS[dataset]
+    xs, ys = [], []
+    for _ in range(n):
+        ex = gen(rng, seq_len, vocab)
+        xs.append(ex.tokens)
+        ys.append(ex.label)
+    return xs, ys

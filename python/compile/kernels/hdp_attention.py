@@ -1,0 +1,182 @@
+"""Layer-1 Pallas kernels for HDP attention.
+
+The co-processor's per-head pipeline (paper Fig. 4) maps onto Pallas as:
+
+* grid = (H,) — HDP processes attention heads sequentially (§IV-A
+  "HDP processes each attention head sequentially"); each grid step is
+  one head resident in VMEM.
+* The PE array's output-stationary tiled matmul becomes the in-VMEM
+  ``iq @ ik.T`` with the 2x2 block-importance reduction fused on the
+  accumulator outputs (the importance tap on the PE accumulators in
+  Fig. 4 right).
+* The Sparsity Engine's per-block-row min/max/mean -> Theta -> mask is
+  straight-line jnp on the theta tile.
+* FUM (fetch-upon-mask) becomes masking of the fractional products; the
+  DRAM-traffic consequence is modeled by the rust cycle simulator, the
+  numerics are bit-exact here.
+
+``interpret=True`` everywhere: the kernels lower to plain HLO so the
+rust PJRT CPU client can execute the AOT artifacts (real-TPU Mosaic
+custom-calls cannot run on CPU — see DESIGN.md §Hardware-Adaptation for
+the VMEM/MXU discussion).
+
+The kernel bodies call the *same* jnp helpers as the oracle in
+``ref.py``, so kernel-vs-ref equality (checked by pytest/hypothesis)
+validates the Pallas plumbing (grids, BlockSpecs, scalar broadcast)
+rather than re-derived math.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# ---------------------------------------------------------------------------
+# Fused per-head HDP attention kernel (Algorithm 2 end to end)
+# ---------------------------------------------------------------------------
+
+
+def _hdp_kernel(rho_ref, tau_ref, inv_ref, useff_ref, usehw_ref,
+                iq_ref, fq_ref, ik_ref, fk_ref, v_ref,
+                out_ref, probs_ref, dens_ref, kept_ref, *, block):
+    out, probs, dens, kept = ref.hdp_head_ref(
+        iq_ref[0], fq_ref[0], ik_ref[0], fk_ref[0], v_ref[0],
+        rho_ref[0], tau_ref[0], inv_ref[0],
+        use_ff=useff_ref[0], use_hw_softmax=usehw_ref[0], block=block,
+    )
+    out_ref[0] = out
+    probs_ref[0] = probs
+    dens_ref[0] = dens
+    kept_ref[0] = kept
+
+
+def hdp_attention(iq, fq, ik, fk, v, rho, tau, inv_scale,
+                  use_ff, use_hw_softmax, *, block=2):
+    """Multi-head HDP attention via the fused Pallas kernel.
+
+    Args:
+      iq, fq, ik, fk: integer/fraction parts of quantized Q/K, [H, l, d_h].
+      v: [H, l, d_h] float values.
+      rho, tau, inv_scale, use_ff, use_hw_softmax: runtime scalars
+        (python floats or traced 0-d arrays).
+
+    Returns (out [H, l, d_h], probs [H, l, l], kept_density [H],
+             head_kept [H]).
+    """
+    h, l, dh = iq.shape
+    scal = lambda x: jnp.asarray(x, jnp.float32).reshape(1)
+    sspec = pl.BlockSpec((1,), lambda i: (0,))
+    hspec = pl.BlockSpec((1, l, dh), lambda i: (i, 0, 0))
+    pspec = pl.BlockSpec((1, l, l), lambda i: (i, 0, 0))
+    vspec = pl.BlockSpec((1,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_hdp_kernel, block=block),
+        grid=(h,),
+        in_specs=[sspec] * 5 + [hspec] * 5,
+        out_specs=[hspec, pspec, vspec, vspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, l, dh), jnp.float32),
+            jax.ShapeDtypeStruct((h, l, l), jnp.float32),
+            jax.ShapeDtypeStruct((h,), jnp.float32),
+            jax.ShapeDtypeStruct((h,), jnp.float32),
+        ],
+        interpret=True,
+    )(scal(rho), scal(tau), scal(inv_scale), scal(use_ff),
+      scal(use_hw_softmax), iq, fq, ik, fk, v)
+
+
+# ---------------------------------------------------------------------------
+# Integer-score + block-importance kernel (the PE-array stage alone).
+# Used by tests and by the fig2-style probes; mirrors the first pipeline
+# stage of the co-processor before the Sparsity Engine decides anything.
+# ---------------------------------------------------------------------------
+
+
+def _int_score_kernel(iq_ref, ik_ref, score_ref, theta_ref, *, block):
+    int_score = iq_ref[0] @ ik_ref[0].T
+    score_ref[0] = int_score
+    theta_ref[0] = ref.block_importance(int_score, block)
+
+
+def int_score_theta(iq, ik, *, block=2):
+    """[H, l, d_h] x2 -> (int_score [H, l, l], theta [H, l/b, l/b])."""
+    h, l, dh = iq.shape
+    nb = l // block
+    hspec = pl.BlockSpec((1, l, dh), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_int_score_kernel, block=block),
+        grid=(h,),
+        in_specs=[hspec, hspec],
+        out_specs=[
+            pl.BlockSpec((1, l, l), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, nb, nb), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, l, l), jnp.float32),
+            jax.ShapeDtypeStruct((h, nb, nb), jnp.float32),
+        ],
+        interpret=True,
+    )(iq, ik)
+
+
+# ---------------------------------------------------------------------------
+# Top-K baseline kernel (Fig. 7 comparator)
+# ---------------------------------------------------------------------------
+
+
+def _topk_kernel(keep_ref, inv_ref, usehw_ref,
+                 iq_ref, fq_ref, ik_ref, fk_ref, v_ref,
+                 out_ref, probs_ref, dens_ref, *, block):
+    out, probs, dens = ref.topk_head_ref(
+        iq_ref[0], fq_ref[0], ik_ref[0], fk_ref[0], v_ref[0],
+        keep_ref[0], inv_ref[0], use_hw_softmax=usehw_ref[0], block=block,
+    )
+    out_ref[0] = out
+    probs_ref[0] = probs
+    dens_ref[0] = dens
+
+
+def topk_attention(iq, fq, ik, fk, v, keep_frac, inv_scale,
+                   use_hw_softmax=0.0, *, block=2):
+    """Multi-head Top-K block-pruned attention. Same contract as
+    :func:`hdp_attention` minus head pruning / approximation knobs."""
+    h, l, dh = iq.shape
+    scal = lambda x: jnp.asarray(x, jnp.float32).reshape(1)
+    sspec = pl.BlockSpec((1,), lambda i: (0,))
+    hspec = pl.BlockSpec((1, l, dh), lambda i: (i, 0, 0))
+    pspec = pl.BlockSpec((1, l, l), lambda i: (i, 0, 0))
+    vspec = pl.BlockSpec((1,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_topk_kernel, block=block),
+        grid=(h,),
+        in_specs=[sspec] * 3 + [hspec] * 5,
+        out_specs=[hspec, pspec, vspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, l, dh), jnp.float32),
+            jax.ShapeDtypeStruct((h, l, l), jnp.float32),
+            jax.ShapeDtypeStruct((h,), jnp.float32),
+        ],
+        interpret=True,
+    )(scal(keep_frac), scal(inv_scale), scal(use_hw_softmax),
+      iq, fq, ik, fk, v)
+
+
+# ---------------------------------------------------------------------------
+# Hardware softmax as a standalone kernel (softmax-unit ablation)
+# ---------------------------------------------------------------------------
+
+
+def _hw_softmax_kernel(x_ref, o_ref):
+    o_ref[...] = ref.hw_softmax(x_ref[...])
+
+
+def hw_softmax(x):
+    """Row-wise polynomial softmax over the last axis of a 2-D array."""
+    return pl.pallas_call(
+        _hw_softmax_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,211 @@
+"""Pure-jnp oracle for the HDP kernels — a direct transcription of the
+paper's Algorithm 2 (block pruning, early head pruning, approximation)
+plus the fixed-point front end and the hardware softmax numerics.
+
+Everything here is the *correctness* reference: the Pallas kernels in
+``hdp_attention.py`` must match these functions bit-for-bit on the
+pre-softmax path (all quantities are exact in f32 — see DESIGN.md
+§Numerics) and to tight tolerance after softmax. The rust functional
+model (rust/src/attention/hdp.rs) and the cycle simulator cross-validate
+against AOT'd wrappers of these same functions.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e9  # pruned scores are excluded from softmax (finite to keep
+# fully-pruned rows NaN-free; they then degrade to uniform attention)
+
+
+# ---------------------------------------------------------------------------
+# Fixed point: quantize + integer/fraction split
+# ---------------------------------------------------------------------------
+
+def calibrate_scale(x, qc, eps=1e-6):
+    """Per-tensor calibration: map the 99.5th percentile of |x| onto
+    ``qc.target_amax`` (half the integer range). Returns a scalar scale
+    ``s`` such that ``x * s`` is quantized. Mirrors the paper's host
+    quantizer (§IV: Q/K/V arrive pre-quantized in 16-bit fixed point)."""
+    flat = jnp.sort(jnp.abs(x).ravel())
+    p = flat[int(0.995 * (flat.shape[0] - 1))]  # 99.5th percentile
+    return qc.target_amax / (p + eps)
+
+
+def quantize(x, scale, qc):
+    """Scale then round-to-nearest onto the Q(int,frac) grid, saturating."""
+    step = 2.0 ** (-qc.frac_bits)
+    q = jnp.round(x * scale / step) * step
+    return jnp.clip(q, -qc.amax, qc.amax)
+
+
+def split_int_frac(q):
+    """q == i + f with i integer-valued, |f| < 1, sign(f) matching q
+    (truncation toward zero — the hardware splits the two's-complement
+    fields, which for our symmetric range behaves like trunc)."""
+    i = jnp.trunc(q)
+    return i, q - i
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 pieces
+# ---------------------------------------------------------------------------
+
+def block_importance(int_score, block=2):
+    """theta: absolute sum over each (block x block) tile of the integer
+    score matrix. [..., l, l] -> [..., l/b, l/b]."""
+    *lead, l, l2 = int_score.shape
+    nb, nb2 = l // block, l2 // block
+    t = int_score.reshape(*lead, nb, block, nb2, block)
+    return jnp.sum(jnp.abs(t), axis=(-3, -1))
+
+
+def row_threshold(theta, rho):
+    """Theta_i per block-row (Algorithm 2, line 15):
+
+        rho in [0, 1):   Theta =  rho*max + (1-rho)*mean
+        rho in (-1, 0):  Theta = -rho*min + (1+rho)*mean
+
+    ``rho`` may be a traced scalar; both branches are computed and
+    selected so the expression stays jittable with runtime rho."""
+    mn = jnp.min(theta, axis=-1, keepdims=True)
+    mx = jnp.max(theta, axis=-1, keepdims=True)
+    mean = jnp.mean(theta, axis=-1, keepdims=True)
+    pos = rho * mx + (1.0 - rho) * mean
+    neg = -rho * mn + (1.0 + rho) * mean
+    return jnp.where(rho >= 0.0, pos, neg)
+
+
+def block_mask(theta, rho):
+    """1 for kept blocks (theta >= Theta), 0 for pruned."""
+    return (theta >= row_threshold(theta, rho)).astype(jnp.float32)
+
+
+def expand_mask(mask, block=2):
+    """[..., nb, nb] block mask -> [..., l, l] element mask."""
+    m = jnp.repeat(mask, block, axis=-1)
+    return jnp.repeat(m, block, axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# Hardware softmax (paper §IV-E): 2nd-order polynomial exponent +
+# linear-approximation reciprocal.
+# ---------------------------------------------------------------------------
+
+LOG2E = 1.4426950408889634
+# Quadratic fit for 2^r on r in [0, 1) (max rel err ~1e-2).
+_P2 = (0.3371894346, 0.6576362914, 1.0017247597)
+
+
+def hw_exp(x):
+    """e^x ~= 2^(x*log2e); integer part exact via exp2, fraction via poly2."""
+    y = x * LOG2E
+    n = jnp.floor(y)
+    r = y - n
+    p = (_P2[0] * r + _P2[1]) * r + _P2[2]
+    return p * jnp.exp2(n)
+
+
+def hw_reciprocal(x):
+    """1/x for x > 0: frexp-normalize the mantissa m into [0.5, 1), seed
+    with the minimax linear approximation 1/m ~= 48/17 - 32/17 m, then
+    one hardware-friendly Newton step (two mults + one sub)."""
+    m, e = jnp.frexp(x)  # x = m * 2^e, m in [0.5, 1)
+    r = 48.0 / 17.0 - (32.0 / 17.0) * m
+    r = r * (2.0 - m * r)
+    return jnp.ldexp(r, -e)
+
+
+def hw_softmax(scores, axis=-1):
+    """Row-wise softmax built from the co-processor's approximate units."""
+    s = scores - jnp.max(scores, axis=axis, keepdims=True)
+    e = hw_exp(s)
+    return e * hw_reciprocal(jnp.sum(e, axis=axis, keepdims=True))
+
+
+def exact_softmax(scores, axis=-1):
+    s = scores - jnp.max(scores, axis=axis, keepdims=True)
+    e = jnp.exp(s)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# Full single-head HDP attention (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def hdp_head_ref(iq, fq, ik, fk, v, rho, tau, inv_scale, use_ff=0.0,
+                 use_hw_softmax=0.0, block=2):
+    """One attention head through Algorithm 2.
+
+    Args:
+      iq, fq: integer / fractional parts of quantized Q_h, [l, d_h].
+      ik, fk: same for K_h.
+      v: value matrix [l, d_h] (float; the functional model keeps V in
+         full precision — the simulator studies V quantization separately).
+      rho: block pruning ratio rho_B in (-1, 1), runtime scalar.
+      tau: head pruning threshold tau_H (compared against theta_head),
+           runtime scalar.
+      inv_scale: 1 / (s_q * s_k * sqrt(d_head)) — undoes quantization
+           scaling and applies the attention temperature in one multiply.
+      use_ff: 1.0 adds the FQ.FK term back (exact product — the
+           "without approximation" arm of Fig. 9); 0.0 drops it (HDP).
+      use_hw_softmax: 1.0 routes through the polynomial softmax unit.
+
+    Returns (out [l, d_h], probs [l, l], kept_density scalar,
+             head_kept scalar in {0.,1.}).
+    """
+    int_score = iq @ ik.T
+    theta = block_importance(int_score, block)
+    theta_head = jnp.sum(theta)
+    mask_b = block_mask(theta, rho)
+    head_kept = (theta_head > tau).astype(jnp.float32)
+
+    f1 = iq @ fk.T
+    f2 = fq @ ik.T
+    ff = fq @ fk.T
+    score_q = int_score + f1 + f2 + use_ff * ff
+    score = score_q * inv_scale
+
+    mask_el = expand_mask(mask_b, block)
+    score = jnp.where(mask_el > 0.0, score, NEG_INF)
+
+    probs = jnp.where(
+        use_hw_softmax > 0.0, hw_softmax(score), exact_softmax(score)
+    )
+    out = (probs @ v) * head_kept
+    kept_density = jnp.mean(mask_b)
+    return out, probs, kept_density, head_kept
+
+
+def topk_head_ref(iq, fq, ik, fk, v, keep_frac, inv_scale,
+                  use_hw_softmax=0.0, block=2):
+    """Top-K 2x2 block pruning baseline (paper Fig. 7 comparator).
+
+    Keeps the ceil(keep_frac * nb) most-important blocks per block-row,
+    using the same integer-product importance. keep_frac is a runtime
+    scalar, so the cut is a threshold at the k-th order statistic (ties
+    keep slightly more — the measured ratio is reported, not the target).
+    Kept blocks use the exact quantized product (the paper's Top-K is
+    pruning-only, no approximation)."""
+    int_score = iq @ ik.T
+    theta = block_importance(int_score, block)
+    nb = theta.shape[-1]
+    order = jnp.sort(theta, axis=-1)[..., ::-1]  # descending
+    k = jnp.clip(jnp.ceil(keep_frac * nb) - 1.0, 0.0, nb - 1.0)
+    k = k.astype(jnp.int32)
+    kth = jnp.take_along_axis(
+        order, jnp.broadcast_to(k, theta.shape[:-1])[..., None], axis=-1
+    )
+    mask_b = (theta >= kth).astype(jnp.float32)
+
+    score = (int_score + iq @ fk.T + fq @ ik.T + fq @ fk.T) * inv_scale
+    score = jnp.where(expand_mask(mask_b, block) > 0.0, score, NEG_INF)
+    probs = jnp.where(
+        use_hw_softmax > 0.0, hw_softmax(score), exact_softmax(score)
+    )
+    return probs @ v, probs, jnp.mean(mask_b)
+
+
+def dense_head_ref(q, k, v):
+    """Float reference attention (no quantization, no pruning)."""
+    score = (q @ k.T) / jnp.sqrt(jnp.float32(q.shape[-1]))
+    probs = exact_softmax(score)
+    return probs @ v, probs

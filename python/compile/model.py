@@ -1,0 +1,321 @@
+"""Layer-2: the encoder-only transformer (JAX), every attention variant,
+and the AOT-able training step.
+
+All entry points here are pure functions over a *flat list* of parameter
+arrays ordered by ``ModelConfig.param_shapes()`` — that ordering is the
+interchange contract with the rust parameter store. Pruning knobs
+(rho_B, tau_H, quantization step, approximation / hw-softmax flags) are
+runtime scalars so a single AOT artifact serves every sweep point of
+every figure.
+
+Attention variants:
+  dense    — float reference (also the training path for the main
+             checkpoints; the paper prunes pre-trained models without
+             retraining).
+  hdp      — Algorithm 2 through the Layer-1 Pallas kernels.
+  topk     — Top-K 2x2 block pruning baseline (Fig. 7).
+  spatten  — SpAtten-style cascaded head pruning baseline (Fig. 11a):
+             per-example head importance accumulated across layers from
+             |attention output|; once pruned, a head stays pruned in all
+             subsequent layers.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import hdp_attention as kern
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed):
+    """Initialize the flat parameter list from an int32 seed scalar.
+
+    Scaled-normal init for matrices, zeros/ones for biases/LN — standard
+    BERT-style init, expressed so it lowers to a single HLO with the seed
+    as a runtime input (the rust driver owns seeding).
+    """
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in cfg.param_shapes():
+        key, sub = jax.random.split(key)
+        if name.endswith((".g",)):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith((".b", "b1", "b2", "bqkv", "bo")) or name == "cls.b":
+            out.append(jnp.zeros(shape, jnp.float32))
+        elif name in ("tok_emb", "pos_emb"):
+            out.append(0.02 * jax.random.normal(sub, shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            out.append(jax.random.normal(sub, shape, jnp.float32)
+                       / jnp.sqrt(jnp.float32(fan_in)))
+    return out
+
+
+def _named(cfg: ModelConfig, params):
+    names = [n for n, _ in cfg.param_shapes()]
+    assert len(names) == len(params), (len(names), len(params))
+    return dict(zip(names, params))
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _qkv(p, i, x, cfg):
+    """Project to per-head Q, K, V: [B, l, d] -> 3 x [B, H, l, d_h]."""
+    h = layer_norm(x, p[f"layer{i}.ln1.g"], p[f"layer{i}.ln1.b"])
+    qkv = h @ p[f"layer{i}.wqkv"] + p[f"layer{i}.bqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    def heads(t):
+        b, l, d = t.shape
+        return t.reshape(b, l, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    return heads(q), heads(k), heads(v)
+
+
+def _merge_heads(o):
+    """[B, H, l, d_h] -> [B, l, d]."""
+    b, h, l, dh = o.shape
+    return o.transpose(0, 2, 1, 3).reshape(b, l, h * dh)
+
+
+def _ffn(p, i, x):
+    h = layer_norm(x, p[f"layer{i}.ln2.g"], p[f"layer{i}.ln2.b"])
+    h = jax.nn.gelu(h @ p[f"layer{i}.w1"] + p[f"layer{i}.b1"])
+    return h @ p[f"layer{i}.w2"] + p[f"layer{i}.b2"]
+
+
+def _embed(p, tokens):
+    return p["tok_emb"][tokens] + p["pos_emb"][None, :, :]
+
+
+def _head_out(p, cfg, x):
+    h = layer_norm(x, p["ln_f.g"], p["ln_f.b"])
+    pooled = jnp.mean(h, axis=1)
+    return pooled @ p["cls.w"] + p["cls.b"]
+
+
+def _quant_split(t, qstep):
+    """Per-tensor calibrated quantization + int/frac split for a [B,H,l,dh]
+    activation. Returns (int_part, frac_part, scale).
+
+    Calibration and rounding sit behind ``stop_gradient``: the forward
+    values are the exact fixed-point grid, while gradients use the
+    straight-through estimator (round/trunc have zero derivative, which
+    would otherwise starve the HDP fine-tuning path of Fig. 11b).
+    """
+    flat = jnp.sort(jax.lax.stop_gradient(jnp.abs(t)).ravel())
+    p = flat[int(0.995 * (flat.shape[0] - 1))]  # 99.5th percentile
+    scale = 4.0 / (p + 1e-6)  # target_amax = half the 3-bit integer range
+    amax = 8.0 - qstep
+    qs = t * scale
+    qq = jnp.clip(jnp.round(qs / qstep) * qstep, -amax, amax)
+    q = qs + jax.lax.stop_gradient(qq - qs)  # forward: qq; backward: identity
+    i = jax.lax.stop_gradient(jnp.trunc(qq))
+    return i, q - i, scale
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def dense_forward(cfg, params, tokens, return_probs=False):
+    """Float reference forward. Returns logits [B, n_classes]; with
+    ``return_probs`` also the attention probabilities [L, B, H, l, l]
+    (the Fig. 2 probe)."""
+    p = _named(cfg, params)
+    x = _embed(p, tokens)
+    all_probs = []
+    for i in range(cfg.n_layers):
+        q, k, v = _qkv(p, i, x, cfg)
+        score = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+            jnp.float32(cfg.d_head))
+        probs = ref.exact_softmax(score)
+        if return_probs:
+            all_probs.append(probs)
+        o = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+        x = x + _merge_heads(o) @ p[f"layer{i}.wo"] + p[f"layer{i}.bo"]
+        x = x + _ffn(p, i, x)
+    logits = _head_out(p, cfg, x)
+    if return_probs:
+        return logits, jnp.stack(all_probs)
+    return logits
+
+
+def hdp_forward(cfg, params, tokens, rho, tau, qstep, use_ff, use_hw,
+                use_kernel=True):
+    """HDP forward. ``use_kernel=True`` routes attention through the
+    Layer-1 Pallas kernels (the inference artifacts); ``False`` uses the
+    numerically-identical jnp oracle — required for the training path,
+    since ``pallas_call`` has no autodiff rule (pytest asserts the two
+    paths agree, so the gradients are faithful to the kernels).
+
+    Returns (logits [B, C], kept_density [L, H] mean over batch,
+    head_kept [L, H] fraction of examples where the head survived).
+    """
+    p = _named(cfg, params)
+    x = _embed(p, tokens)
+    dens_layers, kept_layers = [], []
+    for i in range(cfg.n_layers):
+        q, k, v = _qkv(p, i, x, cfg)
+        iq, fq, sq = _quant_split(q, qstep)
+        ik, fk, sk = _quant_split(k, qstep)
+        inv = 1.0 / (sq * sk * jnp.sqrt(jnp.float32(cfg.d_head)))
+        if use_kernel:
+            attn = lambda a, b, c, d, e: kern.hdp_attention(
+                a, b, c, d, e, rho, tau, inv, use_ff, use_hw)
+        else:
+            attn = jax.vmap(  # over heads; batch vmap applied below
+                lambda a, b, c, d, e: ref.hdp_head_ref(
+                    a, b, c, d, e, rho, tau, inv,
+                    use_ff=use_ff, use_hw_softmax=use_hw))
+        o, _probs, dens, kept = jax.vmap(attn)(iq, fq, ik, fk, v)
+        dens_layers.append(jnp.mean(dens, axis=0))
+        kept_layers.append(jnp.mean(kept, axis=0))
+        x = x + _merge_heads(o) @ p[f"layer{i}.wo"] + p[f"layer{i}.bo"]
+        x = x + _ffn(p, i, x)
+    logits = _head_out(p, cfg, x)
+    return logits, jnp.stack(dens_layers), jnp.stack(kept_layers)
+
+
+def topk_forward(cfg, params, tokens, keep_frac, qstep):
+    """Top-K block-pruning baseline forward (exact quantized scores)."""
+    p = _named(cfg, params)
+    x = _embed(p, tokens)
+    dens_layers = []
+    for i in range(cfg.n_layers):
+        q, k, v = _qkv(p, i, x, cfg)
+        iq, fq, sq = _quant_split(q, qstep)
+        ik, fk, sk = _quant_split(k, qstep)
+        inv = 1.0 / (sq * sk * jnp.sqrt(jnp.float32(cfg.d_head)))
+        o, _probs, dens = jax.vmap(
+            lambda a, b, c, d, e: kern.topk_attention(
+                a, b, c, d, e, keep_frac, inv)
+        )(iq, fq, ik, fk, v)
+        dens_layers.append(jnp.mean(dens, axis=0))
+        x = x + _merge_heads(o) @ p[f"layer{i}.wo"] + p[f"layer{i}.bo"]
+        x = x + _ffn(p, i, x)
+    logits = _head_out(p, cfg, x)
+    return logits, jnp.stack(dens_layers)
+
+
+def spatten_forward(cfg, params, tokens, prune_frac):
+    """SpAtten-style cascaded head pruning (Fig. 11a baseline).
+
+    Head importance is accumulated per example across layers as the sum
+    of |attention output|; after layer j the schedule targets
+    floor(prune_frac * H_total * (j+1)/L) pruned heads, and a pruned head
+    never comes back (the cascade the paper criticizes: importance is
+    data- AND layer-dependent, so cascading over-prunes).
+    Returns (logits, alive [L, H] fraction of examples head alive).
+    """
+    p = _named(cfg, params)
+    x = _embed(p, tokens)
+    bsz = tokens.shape[0]
+    hh = cfg.n_heads
+    alive = jnp.ones((bsz, hh), jnp.float32)
+    imp = jnp.zeros((bsz, hh), jnp.float32)
+    alive_layers = []
+    for i in range(cfg.n_layers):
+        q, k, v = _qkv(p, i, x, cfg)
+        score = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+            jnp.float32(cfg.d_head))
+        probs = ref.exact_softmax(score)
+        o = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+        o = o * alive[:, :, None, None]
+        alive_layers.append(jnp.mean(alive, axis=0))
+        imp = imp + jnp.sum(jnp.abs(o), axis=(2, 3))
+        # Cascade schedule: by layer i, prune_frac*(i+1)/L of all heads.
+        n_prune = jnp.floor(
+            prune_frac * hh * (i + 1) / cfg.n_layers).astype(jnp.int32)
+        order = jnp.sort(imp, axis=-1)  # ascending
+        idx = jnp.clip(n_prune - 1, 0, hh - 1)
+        thresh = jnp.take_along_axis(
+            order, jnp.broadcast_to(idx, (bsz,))[:, None], axis=-1)
+        new_alive = jnp.where(n_prune > 0,
+                              (imp > thresh).astype(jnp.float32),
+                              jnp.ones_like(alive))
+        alive = alive * new_alive  # cascaded: never resurrect
+        x = x + _merge_heads(o) @ p[f"layer{i}.wo"] + p[f"layer{i}.bo"]
+        x = x + _ffn(p, i, x)
+    logits = _head_out(p, cfg, x)
+    return logits, jnp.stack(alive_layers)
+
+
+# ---------------------------------------------------------------------------
+# Training (Adam + cross entropy), AOT-able
+# ---------------------------------------------------------------------------
+
+
+def _xent(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def loss_dense(cfg, params, tokens, labels):
+    return _xent(dense_forward(cfg, params, tokens), labels)
+
+
+def loss_hdp(cfg, params, tokens, labels, rho, tau, qstep):
+    logits, _, _ = hdp_forward(cfg, params, tokens, rho, tau, qstep,
+                               jnp.float32(0.0), jnp.float32(0.0),
+                               use_kernel=False)
+    return _xent(logits, labels)
+
+
+def adam_step(grads, params, m, v, step, lr,
+              b1=0.9, b2=0.999, eps=1e-8):
+    step = step + 1.0
+    new_p, new_m, new_v = [], [], []
+    for g, p, mi, vi in zip(grads, params, m, v):
+        mi = b1 * mi + (1 - b1) * g
+        vi = b2 * vi + (1 - b2) * jnp.square(g)
+        mhat = mi / (1 - b1 ** step)
+        vhat = vi / (1 - b2 ** step)
+        new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + eps))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v, step
+
+
+def train_step(cfg, params, m, v, step, tokens, labels, lr):
+    """One dense-attention Adam step. Returns (params', m', v', step', loss)."""
+    loss, grads = jax.value_and_grad(
+        lambda ps: loss_dense(cfg, ps, tokens, labels))(params)
+    new_p, new_m, new_v, step = adam_step(grads, params, m, v, step, lr)
+    return new_p, new_m, new_v, step, loss
+
+
+def hdp_train_step(cfg, params, m, v, step, tokens, labels, lr,
+                   rho, tau, qstep):
+    """One Adam step *through the HDP attention path* — the "fine-tuned"
+    variant of Fig. 11b (gradients flow through kept scores; the
+    mask/threshold comparisons are straight-through-zero)."""
+    loss, grads = jax.value_and_grad(
+        lambda ps: loss_hdp(cfg, ps, tokens, labels, rho, tau, qstep))(params)
+    new_p, new_m, new_v, step = adam_step(grads, params, m, v, step, lr)
+    return new_p, new_m, new_v, step, loss
+
+
+# ---------------------------------------------------------------------------
+# Single-head unit entry (rust <-> jax cross-validation)
+# ---------------------------------------------------------------------------
+
+
+def hdp_attn_unit(iq, fq, ik, fk, v, rho, tau, inv_scale, use_ff, use_hw):
+    """Raw multi-head HDP attention on pre-split inputs — the artifact the
+    rust functional model and cycle simulator validate against."""
+    return kern.hdp_attention(iq, fq, ik, fk, v, rho, tau, inv_scale,
+                              use_ff, use_hw)

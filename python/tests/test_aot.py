@@ -1,0 +1,103 @@
+"""AOT pipeline tests: entry specs are self-consistent and the lowered
+HLO honors the manifest contract (input count/order, output count).
+
+These run the *lowering* (cheap) but not full artifact generation; the
+round-trip through PJRT is exercised by the rust integration tests.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.configs import MODELS, TINY
+
+
+def entries(cfg):
+    return {name: (fn, specs, in_io, out_io)
+            for name, fn, specs, in_io, out_io in aot.build_entries(cfg)}
+
+
+class TestEntrySpecs:
+    def test_all_entries_present(self):
+        e = entries(TINY)
+        assert set(e) == {
+            "init", "dense_fwd", "probe_fwd", "hdp_fwd", "topk_fwd",
+            "spatten_fwd", "train_step", "hdp_train_step", "hdp_attn_unit",
+        }
+
+    @pytest.mark.parametrize("name", ["init", "dense_fwd", "hdp_fwd",
+                                      "topk_fwd", "spatten_fwd",
+                                      "hdp_attn_unit"])
+    def test_spec_matches_io(self, name):
+        fn, specs, in_io, out_io = entries(TINY)[name]
+        assert len(specs) == len(in_io)
+        for s, d in zip(specs, in_io):
+            assert tuple(d["shape"]) == s.shape
+            want = jnp.int32 if d["dtype"] == "i32" else jnp.float32
+            assert s.dtype == want
+
+    def test_train_step_io_counts(self):
+        fn, specs, in_io, out_io = entries(TINY)["train_step"]
+        n = len(TINY.param_shapes())
+        assert len(in_io) == 3 * n + 4
+        assert len(out_io) == 3 * n + 2
+
+    def test_eval_outputs_run(self):
+        """Abstract-eval each entry: shapes of outputs match the manifest."""
+        for name, (fn, specs, in_io, out_io) in entries(TINY).items():
+            out = jax.eval_shape(fn, *specs)
+            flat = jax.tree_util.tree_leaves(out)
+            assert len(flat) == len(out_io), name
+            for got, want in zip(flat, out_io):
+                assert tuple(got.shape) == tuple(want["shape"]), (
+                    name, want["name"])
+
+
+class TestHloText:
+    def test_lowering_produces_hlo_text(self):
+        fn, specs, _, _ = entries(TINY)["hdp_attn_unit"]
+        lowered = jax.jit(fn).lower(*specs)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+    def test_artifacts_exist_if_built(self):
+        """When artifacts/ is populated (make artifacts), the manifest and
+        every referenced file must exist and be parseable."""
+        adir = os.path.join(os.path.dirname(__file__), "..", "..",
+                            "artifacts")
+        mpath = os.path.join(adir, "manifest.json")
+        if not os.path.exists(mpath):
+            pytest.skip("artifacts not built yet")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        assert manifest["format"] == 1
+        for mname, mdl in manifest["models"].items():
+            assert mname in MODELS
+            for ename, ent in mdl["entries"].items():
+                path = os.path.join(adir, ent["file"])
+                assert os.path.exists(path), ent["file"]
+                with open(path) as f:
+                    head = f.read(64)
+                assert head.startswith("HloModule"), ent["file"]
+
+    def test_manifest_params_match_config(self):
+        adir = os.path.join(os.path.dirname(__file__), "..", "..",
+                            "artifacts")
+        mpath = os.path.join(adir, "manifest.json")
+        if not os.path.exists(mpath):
+            pytest.skip("artifacts not built yet")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        for mname, mdl in manifest["models"].items():
+            cfg = MODELS[mname]
+            want = [(nm, list(sh)) for nm, sh in cfg.param_shapes()]
+            got = [(p["name"], p["shape"]) for p in mdl["params"]]
+            got = [(n.replace("param.", "", 1) if n.startswith("param.")
+                    else n, s) for n, s in got]
+            assert [(f"{n}", s) for n, s in want] == got

@@ -1,0 +1,299 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the core correctness signal for the compute stack: the kernels
+must match ``ref.py`` exactly on the pre-softmax path (all quantities
+are exact in f32) and to float tolerance after softmax. Hypothesis
+sweeps shapes, pruning ratios (both rho branches), thresholds and seeds.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import Q4_8, Q4_12
+from compile.kernels import hdp_attention as K
+from compile.kernels import ref
+
+
+def make_inputs(seed, h, l, dh, qc=Q4_12, spread=2.0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(h, l, dh)).astype(np.float32)) * spread
+    k = jnp.asarray(rng.normal(size=(h, l, dh)).astype(np.float32)) * spread
+    v = jnp.asarray(rng.normal(size=(h, l, dh)).astype(np.float32))
+    s = ref.calibrate_scale(q, qc)
+    iq, fq = ref.split_int_frac(ref.quantize(q, s, qc))
+    ik, fk = ref.split_int_frac(ref.quantize(k, s, qc))
+    inv = 1.0 / (s * s * jnp.sqrt(jnp.float32(dh)))
+    return iq, fq, ik, fk, v, inv
+
+
+def vmap_ref(fn):
+    """Map a single-head ref over the head axis."""
+    return jax.vmap(fn)
+
+
+shape_st = st.sampled_from([
+    (1, 8, 4), (2, 16, 8), (2, 16, 64), (3, 32, 16), (2, 64, 32),
+    (1, 128, 32), (4, 8, 8),
+])
+
+
+class TestHdpKernel:
+    @settings(max_examples=20, deadline=None)
+    @given(shape=shape_st, seed=st.integers(0, 2**31 - 1),
+           rho=st.floats(-0.95, 0.95), tau=st.floats(0.0, 500.0),
+           use_ff=st.sampled_from([0.0, 1.0]),
+           use_hw=st.sampled_from([0.0, 1.0]))
+    def test_matches_ref(self, shape, seed, rho, tau, use_ff, use_hw):
+        h, l, dh = shape
+        iq, fq, ik, fk, v, inv = make_inputs(seed, h, l, dh)
+        out, probs, dens, kept = K.hdp_attention(
+            iq, fq, ik, fk, v, rho, tau, inv, use_ff, use_hw)
+        ro, rp, rd, rk = vmap_ref(
+            lambda a, b, c, d, e: ref.hdp_head_ref(
+                a, b, c, d, e, rho, tau, inv,
+                use_ff=use_ff, use_hw_softmax=use_hw))(iq, fq, ik, fk, v)
+        np.testing.assert_allclose(out, ro, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(probs, rp, rtol=1e-6, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(dens), np.asarray(rd))
+        np.testing.assert_array_equal(np.asarray(kept), np.asarray(rk))
+
+    def test_no_pruning_matches_dense_quantized(self):
+        # rho = -1 => Theta = min => theta >= Theta everywhere => nothing
+        # pruned (any rho > -1 would near-zero-prune theta=0 blocks);
+        # use_ff=1 => exact quantized product. The result must equal
+        # plain softmax attention on the quantized values.
+        h, l, dh = 2, 16, 8
+        iq, fq, ik, fk, v, inv = make_inputs(7, h, l, dh)
+        out, _, dens, kept = K.hdp_attention(
+            iq, fq, ik, fk, v, -1.0, -1.0, inv, 1.0, 0.0)
+        q = iq + fq
+        k = ik + fk
+        ref_out = vmap_ref(lambda a, b, c: ref.exact_softmax(
+            (a @ b.T) * inv) @ c)(q, k, v)
+        assert float(jnp.min(dens)) == 1.0
+        assert float(jnp.min(kept)) == 1.0
+        np.testing.assert_allclose(out, ref_out, rtol=1e-5, atol=1e-5)
+
+    def test_head_pruned_outputs_zero(self):
+        h, l, dh = 2, 16, 8
+        iq, fq, ik, fk, v, inv = make_inputs(3, h, l, dh)
+        out, _, _, kept = K.hdp_attention(
+            iq, fq, ik, fk, v, 0.0, 1e9, inv, 0.0, 0.0)
+        assert float(jnp.max(kept)) == 0.0
+        assert float(jnp.max(jnp.abs(out))) == 0.0
+
+    def test_rho_zero_keeps_above_mean(self):
+        # rho = 0 => Theta = mean: kept blocks are exactly those with
+        # theta >= row mean.
+        h, l, dh = 1, 16, 8
+        iq, fq, ik, fk, v, inv = make_inputs(11, h, l, dh)
+        _, probs, dens, _ = K.hdp_attention(
+            iq, fq, ik, fk, v, 0.0, 0.0, inv, 0.0, 0.0)
+        theta = ref.block_importance(iq @ jnp.swapaxes(ik, -1, -2))
+        mask = (theta >= jnp.mean(theta, axis=-1, keepdims=True))
+        expect = float(jnp.mean(mask.astype(jnp.float32)))
+        assert abs(float(dens[0]) - expect) < 1e-6
+
+    def test_pruned_blocks_get_zero_prob(self):
+        h, l, dh = 1, 16, 8
+        iq, fq, ik, fk, v, inv = make_inputs(5, h, l, dh)
+        _, probs, _, _ = K.hdp_attention(
+            iq, fq, ik, fk, v, 0.5, 0.0, inv, 0.0, 0.0)
+        theta = ref.block_importance(iq[0] @ ik[0].T)
+        mask = ref.expand_mask(ref.block_mask(theta, 0.5))
+        pruned_probs = np.asarray(probs[0])[np.asarray(mask) == 0.0]
+        assert pruned_probs.size > 0
+        assert pruned_probs.max() < 1e-12
+
+    def test_monotone_density_in_rho(self):
+        h, l, dh = 2, 32, 16
+        iq, fq, ik, fk, v, inv = make_inputs(13, h, l, dh)
+        dens = []
+        for rho in (-0.9, -0.5, 0.0, 0.4, 0.8):
+            _, _, d, _ = K.hdp_attention(
+                iq, fq, ik, fk, v, rho, 0.0, inv, 0.0, 0.0)
+            dens.append(float(jnp.mean(d)))
+        # Theta is nondecreasing in rho on each branch and across the
+        # branch joint (rho->0- and rho->0+ both give Theta=mean).
+        assert all(a >= b - 1e-9 for a, b in zip(dens, dens[1:]))
+
+
+class TestIntScoreKernel:
+    @settings(max_examples=15, deadline=None)
+    @given(shape=shape_st, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, shape, seed):
+        h, l, dh = shape
+        iq, _, ik, _, _, _ = make_inputs(seed, h, l, dh)
+        score, theta = K.int_score_theta(iq, ik)
+        rs = jnp.einsum("hld,hmd->hlm", iq, ik)
+        np.testing.assert_allclose(score, rs, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(
+            theta, ref.block_importance(rs), rtol=1e-6, atol=1e-6)
+
+    def test_integer_exactness(self):
+        # Integer x integer products must be exact integers in f32.
+        iq, _, ik, _, _, _ = make_inputs(0, 2, 32, 16)
+        score, theta = K.int_score_theta(iq, ik)
+        assert float(jnp.max(jnp.abs(score - jnp.round(score)))) == 0.0
+        assert float(jnp.max(jnp.abs(theta - jnp.round(theta)))) == 0.0
+
+
+class TestTopkKernel:
+    @settings(max_examples=15, deadline=None)
+    @given(shape=shape_st, seed=st.integers(0, 2**31 - 1),
+           keep=st.floats(0.05, 1.0))
+    def test_matches_ref(self, shape, seed, keep):
+        h, l, dh = shape
+        iq, fq, ik, fk, v, inv = make_inputs(seed, h, l, dh)
+        out, probs, dens = K.topk_attention(iq, fq, ik, fk, v, keep, inv)
+        ro, rp, rd = vmap_ref(
+            lambda a, b, c, d, e: ref.topk_head_ref(
+                a, b, c, d, e, keep, inv))(iq, fq, ik, fk, v)
+        np.testing.assert_allclose(out, ro, rtol=1e-6, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(dens), np.asarray(rd))
+
+    def test_keeps_at_least_k(self):
+        # Ties can keep more, never fewer, than ceil(keep*nb) per row.
+        h, l, dh = 2, 32, 16
+        iq, fq, ik, fk, v, inv = make_inputs(17, h, l, dh)
+        for keep in (0.1, 0.25, 0.5, 0.75):
+            _, _, dens = K.topk_attention(iq, fq, ik, fk, v, keep, inv)
+            nb = l // 2
+            min_per_row = np.ceil(keep * nb) / nb
+            assert float(jnp.min(dens)) >= min_per_row - 1e-6
+
+    def test_keep_all(self):
+        h, l, dh = 1, 16, 8
+        iq, fq, ik, fk, v, inv = make_inputs(19, h, l, dh)
+        _, _, dens = K.topk_attention(iq, fq, ik, fk, v, 1.0, inv)
+        assert float(jnp.min(dens)) == 1.0
+
+
+class TestHwSoftmax:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           rows=st.integers(1, 16), cols=st.integers(2, 64),
+           scale=st.floats(0.1, 8.0))
+    def test_close_to_exact(self, seed, rows, cols, scale):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(rows, cols)).astype(np.float32))
+        x = x * scale
+        approx = K.hw_softmax(x)
+        exact = ref.exact_softmax(x)
+        # Polynomial exp (~1e-3 rel) + Newton-refined reciprocal: rows
+        # sum to ~1 and elementwise error stays small.
+        np.testing.assert_allclose(approx, exact, atol=1e-2)
+        np.testing.assert_allclose(
+            jnp.sum(approx, axis=-1), jnp.ones(rows), atol=2e-2)
+
+    def test_hw_exp_accuracy(self):
+        x = jnp.linspace(-20.0, 3.0, 1001)
+        rel = jnp.abs(ref.hw_exp(x) - jnp.exp(x)) / jnp.exp(x)
+        assert float(jnp.max(rel)) < 5e-3
+
+    def test_hw_reciprocal_accuracy(self):
+        x = jnp.concatenate([jnp.linspace(1e-3, 1.0, 500),
+                             jnp.linspace(1.0, 1e4, 500)])
+        rel = jnp.abs(ref.hw_reciprocal(x) - 1.0 / x) * x
+        assert float(jnp.max(rel)) < 5e-3
+
+
+class TestQuantization:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           qc=st.sampled_from([Q4_12, Q4_8]),
+           spread=st.floats(0.1, 10.0))
+    def test_split_identity(self, seed, qc, spread):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(64,)).astype(np.float32)) * spread
+        s = ref.calibrate_scale(x, qc)
+        q = ref.quantize(x, s, qc)
+        i, f = ref.split_int_frac(q)
+        np.testing.assert_array_equal(np.asarray(i + f), np.asarray(q))
+        assert float(jnp.max(jnp.abs(f))) < 1.0
+        assert float(jnp.max(jnp.abs(i))) <= 2**qc.int_bits
+        # integer part is integral, fraction is on the grid
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(jnp.trunc(i)))
+        step = 2.0 ** (-qc.frac_bits)
+        np.testing.assert_allclose(
+            np.asarray(f / step), np.round(np.asarray(f / step)), atol=1e-4)
+
+    def test_quantize_error_bound(self):
+        x = jnp.linspace(-3.0, 3.0, 1001)
+        s = ref.calibrate_scale(x, Q4_12)
+        q = ref.quantize(x, s, Q4_12)
+        err = jnp.max(jnp.abs(q - x * s))
+        assert float(err) <= 2.0 ** (-Q4_12.frac_bits) / 2 + 1e-7
+
+    def test_sign_match(self):
+        x = jnp.asarray([-2.75, -0.3, 0.0, 0.4, 3.25], jnp.float32)
+        i, f = ref.split_int_frac(x)
+        np.testing.assert_array_equal(np.asarray(i),
+                                      np.asarray([-2.0, -0.0, 0.0, 0.0, 3.0]))
+        assert all(fi == 0 or np.sign(fi) == np.sign(xi)
+                   for fi, xi in zip(np.asarray(f), np.asarray(x)))
+
+
+class TestThresholdFormula:
+    """Algorithm 2 line 15 — both branches, bounds."""
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), rho=st.floats(-0.99, 0.99),
+           nb=st.integers(2, 64))
+    def test_bounds(self, seed, rho, nb):
+        rng = np.random.default_rng(seed)
+        theta = jnp.asarray(
+            np.abs(rng.normal(size=(4, nb))).astype(np.float32)) * 10
+        th = ref.row_threshold(theta, rho)
+        mn = jnp.min(theta, axis=-1, keepdims=True)
+        mx = jnp.max(theta, axis=-1, keepdims=True)
+        mean = jnp.mean(theta, axis=-1, keepdims=True)
+        if rho >= 0:
+            # Theta in [mean, max]: convex combination.
+            assert bool(jnp.all(th >= mean - 1e-5))
+            assert bool(jnp.all(th <= mx + 1e-5))
+            # at least the argmax block survives
+            mask = ref.block_mask(theta, rho)
+            assert bool(jnp.all(jnp.sum(mask, axis=-1) >= 1))
+        else:
+            # Theta = mean + |rho|(mean - min) <= mean but >= ... below mean
+            # shifted toward min: Theta in [min-ish, mean].
+            assert bool(jnp.all(th <= mean + 1e-5))
+
+    def test_rho_limits(self):
+        theta = jnp.asarray([[1.0, 2.0, 3.0, 10.0]])
+        mean = 4.0
+        np.testing.assert_allclose(ref.row_threshold(theta, 0.0), [[mean]])
+        # rho -> 1: threshold -> max (only the max block kept)
+        np.testing.assert_allclose(
+            ref.row_threshold(theta, 0.99), [[0.99 * 10 + 0.01 * mean]])
+        # rho -> -1: Theta -> -(-1)*min + 0*mean = min: everything kept
+        np.testing.assert_allclose(
+            ref.row_threshold(theta, -0.99),
+            [[0.99 * 1.0 + 0.01 * mean]], rtol=1e-5)
+
+
+class TestBlockImportance:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           l=st.sampled_from([4, 8, 16, 32]),
+           block=st.sampled_from([2, 4]))
+    def test_partition_sum(self, seed, l, block):
+        rng = np.random.default_rng(seed)
+        s = jnp.asarray(rng.normal(size=(l, l)).astype(np.float32))
+        theta = ref.block_importance(s, block)
+        assert theta.shape == (l // block, l // block)
+        np.testing.assert_allclose(
+            jnp.sum(theta), jnp.sum(jnp.abs(s)), rtol=1e-5)
+
+    def test_known_values(self):
+        s = jnp.asarray([[1., -2., 0., 0.],
+                         [3., 4., 0., 1.],
+                         [0., 0., -1., -1.],
+                         [0., 0., 1., 1.]])
+        theta = ref.block_importance(s, 2)
+        np.testing.assert_array_equal(
+            np.asarray(theta), np.asarray([[10., 1.], [0., 4.]]))

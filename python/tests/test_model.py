@@ -1,0 +1,172 @@
+"""Layer-2 model tests: shapes, variant consistency, training signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import model as M
+from compile.configs import BASE, TINY
+
+QSTEP = 2.0 ** -12
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = TINY
+    params = M.init_params(cfg, 1)
+    xs, ys = D.generate("sst2s", "eval", 8, cfg.seq_len)
+    toks = jnp.asarray(np.array(xs), jnp.int32)
+    labels = jnp.asarray(np.array(ys), jnp.int32)
+    return cfg, params, toks, labels
+
+
+class TestShapes:
+    def test_param_shapes_tiny(self, tiny_setup):
+        cfg, params, _, _ = tiny_setup
+        for p, (nm, sh) in zip(params, cfg.param_shapes()):
+            assert p.shape == sh, nm
+
+    def test_param_count_base(self):
+        # ~3.4M params for the scaled-base stand-in.
+        n = sum(int(np.prod(sh)) for _, sh in BASE.param_shapes())
+        assert 2_000_000 < n < 5_000_000
+
+    def test_forward_shapes(self, tiny_setup):
+        cfg, params, toks, _ = tiny_setup
+        lg = M.dense_forward(cfg, params, toks)
+        assert lg.shape == (8, cfg.n_classes)
+        lg2, dens, kept = M.hdp_forward(
+            cfg, params, toks, 0.3, 0.0, QSTEP, 0.0, 0.0)
+        assert lg2.shape == (8, cfg.n_classes)
+        assert dens.shape == (cfg.n_layers, cfg.n_heads)
+        assert kept.shape == (cfg.n_layers, cfg.n_heads)
+
+    def test_probe_shapes(self, tiny_setup):
+        cfg, params, toks, _ = tiny_setup
+        lg, probs = M.dense_forward(cfg, params, toks[:1], return_probs=True)
+        assert probs.shape == (cfg.n_layers, 1, cfg.n_heads,
+                               cfg.seq_len, cfg.seq_len)
+        # valid probability rows
+        np.testing.assert_allclose(
+            np.asarray(jnp.sum(probs, axis=-1)), 1.0, atol=1e-5)
+
+
+class TestVariantConsistency:
+    def test_kernel_vs_ref_path(self, tiny_setup):
+        cfg, params, toks, _ = tiny_setup
+        a = M.hdp_forward(cfg, params, toks, 0.3, 0.0, QSTEP, 0.0, 0.0,
+                          use_kernel=True)
+        b = M.hdp_forward(cfg, params, toks, 0.3, 0.0, QSTEP, 0.0, 0.0,
+                          use_kernel=False)
+        for x, y in zip(a, b):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-6, atol=1e-6)
+
+    def test_hdp_no_pruning_close_to_dense(self, tiny_setup):
+        # With pruning off and exact product, HDP == dense up to
+        # quantization error only.
+        cfg, params, toks, _ = tiny_setup
+        dense = M.dense_forward(cfg, params, toks)
+        hdp, dens, kept = M.hdp_forward(
+            cfg, params, toks, -1.0, -1.0, QSTEP, 1.0, 0.0)
+        assert float(jnp.min(dens)) == 1.0
+        assert float(jnp.min(kept)) == 1.0
+        # logits differ only through quantization noise
+        np.testing.assert_allclose(np.asarray(hdp), np.asarray(dense),
+                                   atol=0.35)
+        # labels mostly agree
+        agree = jnp.mean((jnp.argmax(hdp, -1) == jnp.argmax(dense, -1))
+                         .astype(jnp.float32))
+        assert float(agree) >= 0.75
+
+    def test_spatten_zero_prune_is_dense(self, tiny_setup):
+        cfg, params, toks, _ = tiny_setup
+        dense = M.dense_forward(cfg, params, toks)
+        sp, alive = M.spatten_forward(cfg, params, toks, 0.0)
+        np.testing.assert_allclose(np.asarray(sp), np.asarray(dense),
+                                   rtol=1e-5, atol=1e-5)
+        assert float(jnp.min(alive)) == 1.0
+
+    def test_spatten_cascade_monotone(self, tiny_setup):
+        # Once pruned, a head never comes back: alive fraction is
+        # nonincreasing across layers.
+        cfg, params, toks, _ = tiny_setup
+        _, alive = M.spatten_forward(cfg, params, toks, 0.6)
+        a = np.asarray(jnp.mean(alive, axis=1))
+        assert all(x >= y - 1e-6 for x, y in zip(a, a[1:]))
+
+    def test_topk_keep_all_close_to_dense(self, tiny_setup):
+        cfg, params, toks, _ = tiny_setup
+        dense = M.dense_forward(cfg, params, toks)
+        tk, dens = M.topk_forward(cfg, params, toks, 1.0, QSTEP)
+        assert float(jnp.min(dens)) == 1.0
+        np.testing.assert_allclose(np.asarray(tk), np.asarray(dense),
+                                   atol=0.35)
+
+    def test_density_decreases_with_rho(self, tiny_setup):
+        cfg, params, toks, _ = tiny_setup
+        d = []
+        for rho in (-0.8, 0.0, 0.6, 0.9):
+            _, dens, _ = M.hdp_forward(cfg, params, toks, rho, 0.0, QSTEP,
+                                       0.0, 0.0)
+            d.append(float(jnp.mean(dens)))
+        assert all(x >= y - 1e-9 for x, y in zip(d, d[1:]))
+
+
+class TestTraining:
+    def test_dense_training_reduces_loss(self, tiny_setup):
+        # Overfit one fixed batch: a deterministic convergence signal
+        # (full-corpus convergence is the rust E2E example's job).
+        cfg, params, _, _ = tiny_setup
+        params = [jnp.array(p) for p in params]
+        m = [jnp.zeros_like(p) for p in params]
+        v = [jnp.zeros_like(p) for p in params]
+        step = jnp.float32(0)
+        xs, ys = D.generate("sst2s", "train", 16, cfg.seq_len)
+        toks = jnp.asarray(np.array(xs), jnp.int32)
+        labels = jnp.asarray(np.array(ys), jnp.int32)
+        fn = jax.jit(lambda p, m, v, s: M.train_step(
+            cfg, p, m, v, s, toks, labels, jnp.float32(1e-3)))
+        losses = []
+        for _ in range(30):
+            params, m, v, step, loss = fn(params, m, v, step)
+            losses.append(float(loss))
+        assert losses[-1] < 0.5 * losses[0], losses
+
+    def test_hdp_train_step_moves_params(self, tiny_setup):
+        cfg, params, toks, labels = tiny_setup
+        m = [jnp.zeros_like(p) for p in params]
+        v = [jnp.zeros_like(p) for p in params]
+        nps, _, _, step, loss = M.hdp_train_step(
+            cfg, params, m, v, jnp.float32(0), toks, labels,
+            jnp.float32(1e-3), 0.3, 0.0, QSTEP)
+        assert float(step) == 1.0
+        assert np.isfinite(float(loss))
+        delta = sum(float(jnp.sum(jnp.abs(a - b)))
+                    for a, b in zip(nps, params))
+        assert delta > 0.0
+
+    def test_adam_step_math(self):
+        # One Adam step on a scalar: matches the closed form.
+        g = [jnp.asarray([2.0])]
+        p = [jnp.asarray([1.0])]
+        m = [jnp.asarray([0.0])]
+        v = [jnp.asarray([0.0])]
+        np_, nm, nv, step = M.adam_step(g, p, m, v, jnp.float32(0),
+                                        jnp.float32(0.1))
+        # mhat = g, vhat = g^2 -> update = lr * g/|g| = 0.1
+        np.testing.assert_allclose(float(np_[0][0]), 1.0 - 0.1, rtol=1e-4)
+        assert float(step) == 1.0
+
+
+class TestLayerNorm:
+    def test_normalizes(self):
+        x = jnp.asarray(np.random.default_rng(0)
+                        .normal(2.0, 3.0, (4, 8)).astype(np.float32))
+        y = M.layer_norm(x, jnp.ones(8), jnp.zeros(8))
+        np.testing.assert_allclose(np.asarray(jnp.mean(y, -1)), 0.0,
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(jnp.std(y, -1)), 1.0,
+                                   atol=1e-2)

@@ -1,0 +1,81 @@
+//! Benchmarks of the cycle simulator itself (wallclock of simulation,
+//! not of the simulated chip) plus the headline simulated-accelerator
+//! comparison table across sequence lengths — the bench that
+//! regenerates the §IV architecture numbers.
+
+use hdp::attention::hdp::HdpParams;
+use hdp::fixed::{quant_split_tensor, QuantProfile};
+use hdp::sim::{self, baselines, SimConfig};
+use hdp::tensor::Tensor;
+use hdp::util::bench::Bench;
+use hdp::util::rng::SplitMix64;
+
+fn head_tensors(seed: u64, l: usize, dh: usize)
+    -> (Tensor, Tensor, Tensor, Tensor, Tensor, f32) {
+    let mut r = SplitMix64::new(seed);
+    let mut randv = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| r.next_normal() as f32 * 2.0).collect()
+    };
+    let prof = QuantProfile::Q4_12;
+    let (iq, fq, sq) = quant_split_tensor(&randv(l * dh), prof);
+    let (ik, fk, sk) = quant_split_tensor(&randv(l * dh), prof);
+    let inv = 1.0 / (sq * sk * (dh as f32).sqrt());
+    (
+        Tensor::new(&[l, dh], iq),
+        Tensor::new(&[l, dh], fq),
+        Tensor::new(&[l, dh], ik),
+        Tensor::new(&[l, dh], fk),
+        Tensor::new(&[l, dh], randv(l * dh)),
+        inv,
+    )
+}
+
+fn main() {
+    let b = Bench::default();
+    println!("== functional head simulation (cycle accounting + numerics) ==");
+    for l in [64usize, 128, 256] {
+        let (iq, fq, ik, fk, v, inv) = head_tensors(1, l, 64);
+        let macs = 2.0 * (l * l * 64) as f64;
+        b.run_throughput(
+            &format!("sim::run_head l={l} d=64"),
+            macs,
+            "simMAC",
+            || {
+                sim::run_head(
+                    &SimConfig::edge(), &iq, &fq, &ik, &fk, &v,
+                    HdpParams { rho: 0.4, tau: 0.0, inv_scale: inv, ..Default::default() },
+                )
+            },
+        );
+    }
+
+    println!("\n== closed-form estimates (sweep building block) ==");
+    b.run("sim::estimate_model base-shaped", || {
+        sim::estimate_model(&SimConfig::edge(), 12, 512, 64, 12, 0.3, 0.85, false)
+    });
+
+    println!("\n== simulated accelerator comparison (paper §IV shape) ==");
+    println!("{:<10} {:>6} {:>12} {:>12} {:>12}", "accel", "l",
+             "speedup", "energy-save", "dram-save");
+    for l in [128usize, 512, 1024] {
+        let w = baselines::Workload {
+            n_layers: 12, seq_len: l, d_head: 64, n_heads: 12,
+            kept_density: 0.30, head_kept_frac: 0.85,
+        };
+        let cfg = SimConfig::edge();
+        let dense = baselines::dense(&cfg, &w);
+        for (name, rep) in [
+            ("a3", baselines::a3(&cfg, &w)),
+            ("spatten", baselines::spatten(&cfg, &w)),
+            ("energon", baselines::energon(&cfg, &w)),
+            ("acceltran", baselines::acceltran(&cfg, &w)),
+            ("hdp", baselines::hdp(&cfg, &w)),
+        ] {
+            println!("{:<10} {:>6} {:>11.2}x {:>11.2}x {:>11.2}x",
+                     name, l,
+                     dense.cycles / rep.cycles,
+                     dense.energy_pj / rep.energy_pj,
+                     dense.dram_bytes / rep.dram_bytes);
+        }
+    }
+}

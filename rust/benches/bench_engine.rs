@@ -1,0 +1,61 @@
+//! Serving-engine benchmark: batcher overhead vs raw PJRT execution,
+//! and end-to-end batch serving throughput — quantifies that the
+//! coordinator (L3) is not the bottleneck (the §Perf target).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hdp::coordinator::{Batcher, Engine, Request, ServeMode};
+use hdp::data::{Dataset, Split, Stream};
+use hdp::model::ParamStore;
+use hdp::runtime::Runtime;
+use hdp::sim::SimConfig;
+use hdp::util::bench::Bench;
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("bench_engine: artifacts not built; skipping");
+        return;
+    }
+    let rt = Arc::new(Runtime::open(dir).unwrap());
+    let params = ParamStore::init(&rt, "tiny", 42).unwrap();
+    let spec = rt.model("tiny").unwrap().clone();
+    let batch = spec.config.eval_batch;
+
+    let batcher = Arc::new(Batcher::new(batch, Duration::from_millis(1)));
+    let engine = Engine::new(
+        Arc::clone(&rt), &params,
+        ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 },
+        SimConfig::edge(), Arc::clone(&batcher),
+    ).unwrap();
+    rt.executable("tiny", "hdp_fwd").unwrap();
+
+    let mut stream = Stream::new(Dataset::Sst2s, Split::Eval,
+                                 spec.config.seq_len, 42);
+    let reqs: Vec<Request> = (0..batch as u64)
+        .map(|id| Request {
+            id,
+            tokens: stream.next_example().tokens.iter().map(|&t| t as i32).collect(),
+            enqueued: Instant::now(),
+        })
+        .collect();
+
+    let b = Bench { target_time: 3.0, min_samples: 5, max_samples: 60 };
+    println!("== engine batch path (PJRT + padding + sim attribution) ==");
+    let m = b.run_throughput("engine.serve_batch tiny (full batch)",
+                             batch as f64, "req",
+                             || engine.serve_batch(&reqs).unwrap());
+
+    println!("\n== batcher overhead (no compute) ==");
+    let m2 = b.run("batcher submit+drain one full batch", || {
+        let bt = Batcher::new(batch, Duration::from_millis(100));
+        for r in &reqs {
+            bt.submit(r.clone());
+        }
+        bt.next_batch().unwrap()
+    });
+    let overhead = m2.mean() / m.mean();
+    println!("\nbatcher overhead vs batch compute: {:.3}% (target <5%)",
+             overhead * 100.0);
+}

@@ -1,0 +1,82 @@
+//! Microbenchmarks of the hot building blocks: the functional
+//! Algorithm 2 stages, the sparsity engine, fixed-point conversion and
+//! the substrate tensor ops — the profile targets of the §Perf pass.
+
+use hdp::attention::hdp::{block_importance, block_mask, hdp_head, HdpParams};
+use hdp::attention::topk::topk_mask;
+use hdp::fixed::{quant_split_tensor, QuantProfile};
+use hdp::sim::SparsityEngine;
+use hdp::tensor::Tensor;
+use hdp::util::bench::Bench;
+use hdp::util::rng::SplitMix64;
+
+fn randt(shape: &[usize], seed: u64) -> Tensor {
+    let mut r = SplitMix64::new(seed);
+    Tensor::from_fn(shape, |_| r.next_normal() as f32)
+}
+
+fn main() {
+    let b = Bench::default();
+
+    println!("== tensor substrate ==");
+    let a = randt(&[128, 64], 1);
+    let c = randt(&[128, 64], 2);
+    b.run_throughput("matmul_nt 128x64 · 128x64ᵀ",
+                     (128 * 128 * 64) as f64, "MAC",
+                     || a.matmul_nt(&c));
+    let s = randt(&[128, 128], 3);
+    b.run_throughput("softmax_rows 128x128", (128 * 128) as f64, "elem",
+                     || s.softmax_rows());
+
+    println!("\n== fixed point ==");
+    let xs: Vec<f32> = {
+        let mut r = SplitMix64::new(5);
+        (0..128 * 64).map(|_| r.next_normal() as f32 * 2.0).collect()
+    };
+    b.run_throughput("quant_split_tensor 128x64", xs.len() as f64, "elem",
+                     || quant_split_tensor(&xs, QuantProfile::Q4_12));
+
+    println!("\n== Algorithm 2 stages ==");
+    let int_score = randt(&[128, 128], 7).scale(8.0);
+    b.run_throughput("block_importance 128x128", (128 * 128) as f64, "elem",
+                     || block_importance(&int_score, 2));
+    let theta = block_importance(&int_score, 2);
+    b.run("block_mask 64x64 (threshold rule)", || block_mask(&theta, 0.4));
+    b.run("topk_mask 64x64 (sorting rule)", || topk_mask(&theta, 0.3));
+
+    println!("\n== sparsity engine (streaming) ==");
+    b.run_throughput("SE stream 64x64 thetas", (64 * 64) as f64, "theta",
+                     || {
+        let mut se = SparsityEngine::new(0.4, 0.0);
+        for i in 0..64 {
+            for j in 0..64 {
+                se.push_theta(theta.at(i, j));
+                let _ = j;
+            }
+            se.end_row();
+            let _ = i;
+        }
+        se.end_head()
+    });
+
+    println!("\n== full functional head (Algorithm 2) ==");
+    let prof = QuantProfile::Q4_12;
+    let mut r = SplitMix64::new(11);
+    let mut randv = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| r.next_normal() as f32 * 2.0).collect()
+    };
+    let (iq, fq, _) = quant_split_tensor(&randv(128 * 64), prof);
+    let (ik, fk, _) = quant_split_tensor(&randv(128 * 64), prof);
+    let v = Tensor::new(&[128, 64], randv(128 * 64));
+    let t = |d: &[f32]| Tensor::new(&[128, 64], d.to_vec());
+    let (iq, fq, ik, fk) = (t(&iq), t(&fq), t(&ik), t(&fk));
+    for rho in [0.0f32, 0.5, 0.9] {
+        b.run_throughput(
+            &format!("hdp_head 128x64 rho={rho}"),
+            (3 * 128 * 128 * 64) as f64, "MAC",
+            || hdp_head(&iq, &fq, &ik, &fk, &v,
+                        HdpParams { rho, inv_scale: 0.05, tau: -1.0,
+                                    ..Default::default() }),
+        );
+    }
+}

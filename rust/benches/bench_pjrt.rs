@@ -1,0 +1,65 @@
+//! PJRT execution latency of the AOT artifacts: dense vs HDP forward,
+//! the attention unit, and one train step — the L2/L3 boundary costs on
+//! *this* host (the simulated-silicon numbers live in
+//! bench_attention_sim). Skips politely without artifacts.
+
+use hdp::data::{Dataset, Split, Stream};
+use hdp::model::ParamStore;
+use hdp::runtime::{lit_i32, lit_scalar_f32, Runtime};
+use hdp::util::bench::Bench;
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("bench_pjrt: artifacts not built (run `make artifacts`); skipping");
+        return;
+    }
+    let rt = Runtime::open(dir).unwrap();
+    let b = Bench { target_time: 3.0, min_samples: 5, max_samples: 60 };
+
+    for model in ["tiny", "base"] {
+        let spec = rt.model(model).unwrap().clone();
+        let cfg = spec.config;
+        let params = ParamStore::init(&rt, model, 42).unwrap();
+        let plits = params.to_literals().unwrap();
+        let mut stream = Stream::new(Dataset::Sst2s, Split::Eval, cfg.seq_len, 42);
+        let (toks, labels) = stream.next_batch(cfg.eval_batch);
+
+        println!("\n== {model} (l={}, {} layers, {} heads, batch {}) ==",
+                 cfg.seq_len, cfg.n_layers, cfg.n_heads, cfg.eval_batch);
+        let mk_inputs = |extra: &[f32]| -> Vec<xla::Literal> {
+            let mut v: Vec<xla::Literal> = params.to_literals().unwrap();
+            v.push(lit_i32(&toks, &[cfg.eval_batch, cfg.seq_len]).unwrap());
+            v.extend(extra.iter().map(|&x| lit_scalar_f32(x)));
+            v
+        };
+        drop(plits);
+
+        // warm compiles out of the timing loop
+        rt.executable(model, "dense_fwd").unwrap();
+        rt.executable(model, "hdp_fwd").unwrap();
+
+        let ex = cfg.eval_batch as f64;
+        b.run_throughput(&format!("{model}.dense_fwd"), ex, "ex", || {
+            rt.execute(model, "dense_fwd", &mk_inputs(&[])).unwrap()
+        });
+        b.run_throughput(&format!("{model}.hdp_fwd rho=0.4"), ex, "ex", || {
+            rt.execute(model, "hdp_fwd",
+                       &mk_inputs(&[0.4, 0.0, 1.0 / 4096.0, 0.0, 0.0]))
+                .unwrap()
+        });
+        b.run_throughput(&format!("{model}.topk_fwd keep=0.3"), ex, "ex", || {
+            rt.execute(model, "topk_fwd", &mk_inputs(&[0.3, 1.0 / 4096.0]))
+                .unwrap()
+        });
+
+        // one train step (params+m+v threading included)
+        let mut tr = hdp::model::Trainer::new(&rt, &params).unwrap();
+        let tb = cfg.train_batch;
+        let (ttoks, tlabels) = stream.next_batch(tb);
+        let _ = labels;
+        b.run(&format!("{model}.train_step"), || {
+            tr.step(&ttoks, &tlabels, 1e-3).unwrap()
+        });
+    }
+}

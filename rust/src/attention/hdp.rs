@@ -1,0 +1,406 @@
+//! Algorithm 2 — integer-based block pruning, early head pruning and
+//! integer/fraction approximation — as a functional rust model.
+//!
+//! This mirrors `python/compile/kernels/ref.py::hdp_head_ref` operation
+//! for operation. The pre-softmax path is exact in f32 (integer×integer
+//! products are integers; integer×fraction products need ≤ int_bits +
+//! frac_bits + log2(d_h) < 24 mantissa bits), so rust and jax agree
+//! bit-for-bit there; post-softmax agreement is to float tolerance.
+//! The integration test `rust/tests/pjrt_roundtrip.rs` checks this
+//! against the `hdp_attn_unit` artifact.
+
+use crate::tensor::Tensor;
+
+pub const NEG_INF: f32 = -1e9;
+
+/// Runtime knobs of Algorithm 2.
+#[derive(Debug, Clone, Copy)]
+pub struct HdpParams {
+    /// Block pruning ratio rho_B in (-1, 1) (line 15 of Algorithm 2).
+    pub rho: f32,
+    /// Head pruning threshold tau_H (theta_head <= tau prunes the head).
+    pub tau: f32,
+    /// 1 / (s_q * s_k * sqrt(d_h)): undoes quantization scaling and
+    /// applies the attention temperature.
+    pub inv_scale: f32,
+    /// Add the FQ·FK term back (exact product; Fig. 9's "without
+    /// approximation" arm).
+    pub use_ff: bool,
+    /// Route through the polynomial softmax unit numerics.
+    pub use_hw_softmax: bool,
+    /// Block edge (the paper uses 2).
+    pub block: usize,
+}
+
+impl Default for HdpParams {
+    fn default() -> Self {
+        Self {
+            rho: 0.0,
+            tau: 0.0,
+            inv_scale: 1.0,
+            use_ff: false,
+            use_hw_softmax: false,
+            block: 2,
+        }
+    }
+}
+
+/// Everything one head's pass produces — the simulator reads the mask
+/// and decision trail out of this.
+#[derive(Debug, Clone)]
+pub struct HdpHeadOutput {
+    pub out: Tensor,
+    pub probs: Tensor,
+    /// Block keep mask `[l/b, l/b]` (1 kept, 0 pruned).
+    pub mask: Tensor,
+    /// Block importances theta `[l/b, l/b]`.
+    pub theta: Tensor,
+    pub theta_head: f32,
+    pub head_kept: bool,
+    /// Fraction of kept blocks.
+    pub kept_density: f32,
+}
+
+/// theta: absolute sum over each (b x b) tile of the integer score.
+pub fn block_importance(int_score: &Tensor, block: usize) -> Tensor {
+    let (l, l2) = (int_score.rows(), int_score.cols());
+    assert_eq!(l % block, 0);
+    assert_eq!(l2 % block, 0);
+    let (nb, nb2) = (l / block, l2 / block);
+    let mut theta = Tensor::zeros(&[nb, nb2]);
+    for i in 0..l {
+        for j in 0..l2 {
+            let v = theta.at(i / block, j / block) + int_score.at(i, j).abs();
+            theta.set(i / block, j / block, v);
+        }
+    }
+    theta
+}
+
+/// Theta_i per block-row (Algorithm 2, line 15).
+pub fn row_threshold(theta_row: &[f32], rho: f32) -> f32 {
+    let n = theta_row.len() as f32;
+    let mn = theta_row.iter().cloned().fold(f32::INFINITY, f32::min);
+    let mx = theta_row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mean = theta_row.iter().sum::<f32>() / n;
+    if rho >= 0.0 {
+        rho * mx + (1.0 - rho) * mean
+    } else {
+        -rho * mn + (1.0 + rho) * mean
+    }
+}
+
+/// Keep mask: 1 where theta >= Theta(row).
+pub fn block_mask(theta: &Tensor, rho: f32) -> Tensor {
+    let (nb, nb2) = (theta.rows(), theta.cols());
+    let mut mask = Tensor::zeros(&[nb, nb2]);
+    for i in 0..nb {
+        let th = row_threshold(theta.row(i), rho);
+        for j in 0..nb2 {
+            mask.set(i, j, f32::from(theta.at(i, j) >= th));
+        }
+    }
+    mask
+}
+
+/// Hardware softmax numerics (paper §IV-E): 2nd-order polynomial exp +
+/// Newton-refined linear reciprocal. Mirrors `ref.hw_softmax`.
+pub fn hw_softmax_rows(scores: &Tensor) -> Tensor {
+    let (m, n) = (scores.rows(), scores.cols());
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let row = scores.row(i);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for (j, &x) in row.iter().enumerate() {
+            let e = hw_exp(x - mx);
+            out[i * n + j] = e;
+            sum += e;
+        }
+        let r = hw_reciprocal(sum);
+        for j in 0..n {
+            out[i * n + j] *= r;
+        }
+    }
+    Tensor::new(&[m, n], out)
+}
+
+const LOG2E: f32 = std::f32::consts::LOG2_E;
+const P2: (f32, f32, f32) = (0.337_189_44, 0.657_636_3, 1.001_724_76);
+
+pub fn hw_exp(x: f32) -> f32 {
+    let y = x * LOG2E;
+    let n = y.floor();
+    let r = y - n;
+    let p = (P2.0 * r + P2.1) * r + P2.2;
+    p * (n).exp2()
+}
+
+pub fn hw_reciprocal(x: f32) -> f32 {
+    // frexp: x = m * 2^e with m in [0.5, 1)
+    let e = x.log2().floor() as i32 + 1;
+    let m = x / (e as f32).exp2();
+    let mut r = 48.0 / 17.0 - (32.0 / 17.0) * m;
+    r = r * (2.0 - m * r);
+    r / (e as f32).exp2()
+}
+
+/// One attention head through Algorithm 2. Inputs are the quantized
+/// fields `iq,fq,ik,fk` (`[l, d_h]` each, `value = int + frac`) and the
+/// float values `v`.
+pub fn hdp_head(
+    iq: &Tensor,
+    fq: &Tensor,
+    ik: &Tensor,
+    fk: &Tensor,
+    v: &Tensor,
+    p: HdpParams,
+) -> HdpHeadOutput {
+    let l = iq.rows();
+    let int_score = iq.matmul_nt(ik);
+    let theta = block_importance(&int_score, p.block);
+    let theta_head: f32 = theta.data().iter().sum();
+    let mask = block_mask(&theta, p.rho);
+    let head_kept = theta_head > p.tau;
+    let kept_density =
+        mask.data().iter().sum::<f32>() / mask.len() as f32;
+
+    // Approximated score for kept blocks only — like the hardware's
+    // FUM stage, the fractional products are never formed for pruned
+    // blocks (§Perf: this made high-sparsity simulation *faster* rather
+    // than slower, and matches the PE-array behaviour exactly).
+    let b = p.block;
+    let dh = iq.cols();
+    let mut score = Tensor::zeros(&[l, l]);
+    score.data_mut().fill(NEG_INF);
+    let (iqd, fqd, ikd, fkd) = (iq.data(), fq.data(), ik.data(), fk.data());
+    for bi in 0..l / b {
+        for bj in 0..l / b {
+            if mask.at(bi, bj) == 0.0 {
+                continue;
+            }
+            for i in bi * b..(bi + 1) * b {
+                let iqr = &iqd[i * dh..(i + 1) * dh];
+                let fqr = &fqd[i * dh..(i + 1) * dh];
+                for j in bj * b..(bj + 1) * b {
+                    let ikr = &ikd[j * dh..(j + 1) * dh];
+                    let fkr = &fkd[j * dh..(j + 1) * dh];
+                    let mut acc = int_score.at(i, j);
+                    // IQ·FK + FQ·IK (+ FQ·FK when exact)
+                    if p.use_ff {
+                        for k in 0..dh {
+                            acc += iqr[k] * fkr[k]
+                                + fqr[k] * (ikr[k] + fkr[k]);
+                        }
+                    } else {
+                        for k in 0..dh {
+                            acc += iqr[k] * fkr[k] + fqr[k] * ikr[k];
+                        }
+                    }
+                    score.set(i, j, acc * p.inv_scale);
+                }
+            }
+        }
+    }
+
+    let probs = if p.use_hw_softmax {
+        hw_softmax_rows(&score)
+    } else {
+        score.softmax_rows()
+    };
+    let out = if head_kept {
+        probs.matmul(v)
+    } else {
+        Tensor::zeros(&[l, v.cols()])
+    };
+    HdpHeadOutput { out, probs, mask, theta, theta_head, head_kept, kept_density }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{quant_split_tensor, QuantProfile};
+    use crate::util::prop::{check, prop_assert, prop_assert_close};
+    use crate::util::rng::SplitMix64;
+
+    fn rand_inputs(
+        seed: u64,
+        l: usize,
+        dh: usize,
+    ) -> (Tensor, Tensor, Tensor, Tensor, Tensor, f32) {
+        let mut r = SplitMix64::new(seed);
+        let mut randv =
+            |n: usize| -> Vec<f32> { (0..n).map(|_| r.next_normal() as f32 * 2.0).collect() };
+        let q = randv(l * dh);
+        let k = randv(l * dh);
+        let v = randv(l * dh);
+        let prof = QuantProfile::Q4_12;
+        let (iq, fq, sq) = quant_split_tensor(&q, prof);
+        let (ik, fk, sk) = quant_split_tensor(&k, prof);
+        let inv = 1.0 / (sq * sk * (dh as f32).sqrt());
+        (
+            Tensor::new(&[l, dh], iq),
+            Tensor::new(&[l, dh], fq),
+            Tensor::new(&[l, dh], ik),
+            Tensor::new(&[l, dh], fk),
+            Tensor::new(&[l, dh], v),
+            inv,
+        )
+    }
+
+    #[test]
+    fn block_importance_known() {
+        let s = Tensor::new(
+            &[4, 4],
+            vec![
+                1.0, -2.0, 0.0, 0.0, //
+                3.0, 4.0, 0.0, 1.0, //
+                0.0, 0.0, -1.0, -1.0, //
+                0.0, 0.0, 1.0, 1.0,
+            ],
+        );
+        let theta = block_importance(&s, 2);
+        assert_eq!(theta.data(), &[10.0, 1.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn threshold_branches() {
+        let row = [1.0, 2.0, 3.0, 10.0];
+        let mean = 4.0;
+        assert!((row_threshold(&row, 0.0) - mean).abs() < 1e-6);
+        assert!((row_threshold(&row, 1.0) - 10.0).abs() < 1e-6);
+        assert!((row_threshold(&row, -1.0) - 1.0).abs() < 1e-6);
+        let t = row_threshold(&row, 0.5);
+        assert!((t - (0.5 * 10.0 + 0.5 * mean)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn head_pruned_is_zero() {
+        let (iq, fq, ik, fk, v, inv) = rand_inputs(3, 16, 8);
+        let out = hdp_head(
+            &iq, &fq, &ik, &fk, &v,
+            HdpParams { tau: 1e9, inv_scale: inv, ..Default::default() },
+        );
+        assert!(!out.head_kept);
+        assert_eq!(out.out.abs_sum(), 0.0);
+    }
+
+    #[test]
+    fn no_pruning_matches_quantized_dense() {
+        let (iq, fq, ik, fk, v, inv) = rand_inputs(7, 16, 8);
+        let out = hdp_head(
+            &iq, &fq, &ik, &fk, &v,
+            HdpParams {
+                rho: -1.0,
+                tau: -1.0,
+                inv_scale: inv,
+                use_ff: true,
+                ..Default::default()
+            },
+        );
+        assert!((out.kept_density - 1.0).abs() < 1e-6);
+        let q = iq.add(&fq);
+        let k = ik.add(&fk);
+        let dense = q.matmul_nt(&k).scale(inv).softmax_rows().matmul(&v);
+        assert!(out.out.max_abs_diff(&dense) < 1e-4);
+    }
+
+    #[test]
+    fn pruned_blocks_zero_probability() {
+        let (iq, fq, ik, fk, v, inv) = rand_inputs(5, 16, 8);
+        let p = HdpParams { rho: 0.5, inv_scale: inv, tau: -1.0, ..Default::default() };
+        let out = hdp_head(&iq, &fq, &ik, &fk, &v, p);
+        let mut saw_pruned = false;
+        for i in 0..16 {
+            for j in 0..16 {
+                if out.mask.at(i / 2, j / 2) == 0.0 {
+                    saw_pruned = true;
+                    assert!(out.probs.at(i, j) < 1e-10);
+                }
+            }
+        }
+        assert!(saw_pruned);
+    }
+
+    #[test]
+    fn hw_softmax_close_to_exact() {
+        let mut r = SplitMix64::new(11);
+        let s = Tensor::from_fn(&[8, 32], |_| r.next_normal() as f32 * 4.0);
+        let d = hw_softmax_rows(&s).max_abs_diff(&s.softmax_rows());
+        assert!(d < 1e-2, "{d}");
+    }
+
+    #[test]
+    fn prop_density_monotone_in_rho() {
+        check("kept density nonincreasing in rho", 30, |g| {
+            let l = *g.choice(&[8usize, 16, 32]);
+            let (iq, fq, ik, fk, v, inv) = rand_inputs(g.u64(0, 1 << 40), l, 8);
+            let mut last = f32::INFINITY;
+            for rho in [-0.9f32, -0.4, 0.0, 0.4, 0.9] {
+                let o = hdp_head(
+                    &iq, &fq, &ik, &fk, &v,
+                    HdpParams { rho, inv_scale: inv, tau: -1.0, ..Default::default() },
+                );
+                prop_assert(o.kept_density <= last + 1e-6, "monotone")?;
+                last = o.kept_density;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_row_keeps_argmax_for_positive_rho() {
+        check("argmax block survives when rho in [0,1)", 50, |g| {
+            let nb = g.usize(2, 32);
+            let theta_data: Vec<f32> =
+                (0..nb).map(|_| g.f32(0.0, 100.0)).collect();
+            let theta = Tensor::new(&[1, nb], theta_data.clone());
+            let rho = g.f32(0.0, 0.99);
+            let mask = block_mask(&theta, rho);
+            let kept: f32 = mask.data().iter().sum();
+            prop_assert(kept >= 1.0, "at least argmax kept")?;
+            // and the argmax specifically is kept
+            let amax = theta_data
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            prop_assert(mask.at(0, amax) == 1.0, "argmax kept")
+        });
+    }
+
+    #[test]
+    fn prop_theta_conserves_abs_sum() {
+        check("sum(theta) == sum(|int_score|) == theta_head", 30, |g| {
+            let l = *g.choice(&[8usize, 16]);
+            let (iq, _fq, ik, _fk, _v, _inv) =
+                rand_inputs(g.u64(0, 1 << 40), l, 8);
+            let s = iq.matmul_nt(&ik);
+            let theta = block_importance(&s, 2);
+            prop_assert_close(
+                theta.data().iter().sum::<f32>() as f64,
+                s.abs_sum() as f64,
+                1e-2,
+                "conservation",
+            )
+        });
+    }
+
+    #[test]
+    fn hw_reciprocal_accuracy() {
+        for &x in &[0.001f32, 0.3, 1.0, 2.0, 17.5, 1000.0] {
+            let rel = (hw_reciprocal(x) - 1.0 / x).abs() * x;
+            assert!(rel < 5e-3, "x={x} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn hw_exp_accuracy() {
+        for i in 0..100 {
+            let x = -20.0 + 0.23 * i as f32;
+            let rel = (hw_exp(x) - x.exp()).abs() / x.exp();
+            assert!(rel < 5e-3, "x={x} rel={rel}");
+        }
+    }
+}

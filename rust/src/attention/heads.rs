@@ -1,0 +1,164 @@
+//! Head-pruning policies at the multi-head level.
+//!
+//! * [`SpattenCascade`] — SpAtten's cascaded Top-K head pruning
+//!   (Fig. 11a baseline): per-inference head importance accumulated
+//!   across layers from |attention output|; once a head is pruned it is
+//!   pruned in all subsequent layers.
+//! * [`hdp_early_decisions`] — the paper's early decision: theta_head
+//!   (from the integer score alone) vs tau_H, made *before* the
+//!   fractional work, independently per layer.
+
+/// Cascaded head-pruning state across layers of one inference.
+#[derive(Debug, Clone)]
+pub struct SpattenCascade {
+    n_heads: usize,
+    n_layers: usize,
+    /// Target fraction of all heads pruned by the last layer.
+    prune_frac: f32,
+    cumulative_importance: Vec<f64>,
+    alive: Vec<bool>,
+    layer: usize,
+}
+
+impl SpattenCascade {
+    pub fn new(n_heads: usize, n_layers: usize, prune_frac: f32) -> Self {
+        Self {
+            n_heads,
+            n_layers,
+            prune_frac,
+            cumulative_importance: vec![0.0; n_heads],
+            alive: vec![true; n_heads],
+            layer: 0,
+        }
+    }
+
+    pub fn alive(&self) -> &[bool] {
+        &self.alive
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.alive.iter().filter(|a| **a).count()
+    }
+
+    /// Feed layer `self.layer`'s per-head |attention output| sums and
+    /// advance the cascade schedule: after layer j, floor(prune_frac *
+    /// H * (j+1)/L) heads (by lowest cumulative importance) are dead.
+    pub fn observe_layer(&mut self, head_abs_sums: &[f64]) {
+        assert_eq!(head_abs_sums.len(), self.n_heads);
+        assert!(self.layer < self.n_layers, "cascade observed too many layers");
+        for (imp, (&s, &alive)) in self
+            .cumulative_importance
+            .iter_mut()
+            .zip(head_abs_sums.iter().zip(&self.alive))
+        {
+            if alive {
+                *imp += s;
+            }
+        }
+        let n_prune = ((self.prune_frac * self.n_heads as f32
+            * (self.layer + 1) as f32
+            / self.n_layers as f32)
+            .floor() as usize)
+            .min(self.n_heads.saturating_sub(1));
+        if n_prune > 0 {
+            let mut order: Vec<usize> = (0..self.n_heads).collect();
+            order.sort_by(|&a, &b| {
+                self.cumulative_importance[a]
+                    .partial_cmp(&self.cumulative_importance[b])
+                    .unwrap()
+            });
+            for &h in order.iter().take(n_prune) {
+                self.alive[h] = false; // cascaded: never resurrected
+            }
+        }
+        self.layer += 1;
+    }
+}
+
+/// HDP's early per-layer head decisions: keep head h iff
+/// `theta_head[h] > tau`. No state across layers — the paper's point
+/// (§V-B) is that importance is data- and layer-dependent, so a head
+/// pruned in layer j may run in layer j+1.
+pub fn hdp_early_decisions(theta_heads: &[f32], tau: f32) -> Vec<bool> {
+    theta_heads.iter().map(|&t| t > tau).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, prop_assert};
+
+    #[test]
+    fn no_prune_at_zero_frac() {
+        let mut c = SpattenCascade::new(4, 3, 0.0);
+        for _ in 0..3 {
+            c.observe_layer(&[1.0, 2.0, 3.0, 4.0]);
+        }
+        assert_eq!(c.alive_count(), 4);
+    }
+
+    #[test]
+    fn prunes_lowest_importance_first() {
+        let mut c = SpattenCascade::new(4, 1, 0.5);
+        c.observe_layer(&[10.0, 1.0, 5.0, 0.5]);
+        assert_eq!(c.alive(), &[true, false, true, false]);
+    }
+
+    #[test]
+    fn cascade_never_resurrects() {
+        let mut c = SpattenCascade::new(4, 2, 0.5);
+        c.observe_layer(&[0.0, 10.0, 10.0, 10.0]); // prunes head 0 (25%)
+        assert!(!c.alive()[0]);
+        // head 0 would now look "important" but must stay dead
+        c.observe_layer(&[1000.0, 1.0, 1.0, 1.0]);
+        assert!(!c.alive()[0]);
+        assert_eq!(c.alive_count(), 2);
+    }
+
+    #[test]
+    fn keeps_at_least_one_head() {
+        let mut c = SpattenCascade::new(4, 1, 1.0);
+        c.observe_layer(&[1.0, 2.0, 3.0, 4.0]);
+        assert!(c.alive_count() >= 1);
+    }
+
+    #[test]
+    fn schedule_is_gradual() {
+        let mut c = SpattenCascade::new(8, 4, 0.5);
+        let mut alive_counts = Vec::new();
+        for _ in 0..4 {
+            c.observe_layer(&[1.0; 8]);
+            alive_counts.push(c.alive_count());
+        }
+        // nonincreasing, ending at H - floor(0.5*8) = 4
+        assert!(alive_counts.windows(2).all(|w| w[0] >= w[1]));
+        assert_eq!(*alive_counts.last().unwrap(), 4);
+    }
+
+    #[test]
+    fn hdp_decisions_independent_per_layer() {
+        let l1 = hdp_early_decisions(&[5.0, 0.1, 3.0], 1.0);
+        let l2 = hdp_early_decisions(&[0.5, 9.0, 3.0], 1.0);
+        assert_eq!(l1, vec![true, false, true]);
+        assert_eq!(l2, vec![false, true, true]); // head 0 dead here, alive above
+    }
+
+    #[test]
+    fn prop_cascade_alive_monotone() {
+        check("cascade alive count nonincreasing", 50, |g| {
+            let h = g.usize(2, 16);
+            let layers = g.usize(1, 8);
+            let frac = g.f32(0.0, 1.0);
+            let mut c = SpattenCascade::new(h, layers, frac);
+            let mut last = h;
+            for _ in 0..layers {
+                let sums: Vec<f64> =
+                    (0..h).map(|_| g.f64(0.0, 10.0)).collect();
+                c.observe_layer(&sums);
+                prop_assert(c.alive_count() <= last, "monotone")?;
+                last = c.alive_count();
+            }
+            prop_assert(c.alive_count() >= 1, "at least one head")
+        });
+    }
+}

@@ -1,0 +1,16 @@
+//! Functional attention models: the paper's Algorithm 2 and the
+//! baselines it is compared against, on plain rust tensors.
+//!
+//! These are *behavioural mirrors* of the jax/Pallas stack: the cycle
+//! simulator consumes their masks/decisions (which blocks/heads were
+//! pruned) to account cycles, DRAM traffic and energy, and the
+//! integration tests cross-validate them against the AOT artifacts.
+
+pub mod hdp;
+pub mod heads;
+pub mod reference;
+pub mod topk;
+
+pub use hdp::{hdp_head, HdpHeadOutput, HdpParams};
+pub use reference::dense_head;
+pub use topk::topk_head;

@@ -1,0 +1,56 @@
+//! Float reference attention (no quantization, no pruning) — the
+//! oracle the pruned variants are compared against.
+
+use crate::tensor::Tensor;
+
+/// One dense attention head: `softmax(q kᵀ / sqrt(d_h)) v`.
+/// `q`, `k`, `v` are `[l, d_h]`.
+pub fn dense_head(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+    let dh = q.cols() as f32;
+    let score = q.matmul_nt(k).scale(1.0 / dh.sqrt());
+    score.softmax_rows().matmul(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn randt(shape: &[usize], seed: u64) -> Tensor {
+        let mut r = SplitMix64::new(seed);
+        Tensor::from_fn(shape, |_| r.next_normal() as f32)
+    }
+
+    #[test]
+    fn output_shape() {
+        let q = randt(&[8, 4], 1);
+        let k = randt(&[8, 4], 2);
+        let v = randt(&[8, 4], 3);
+        assert_eq!(dense_head(&q, &k, &v).shape(), &[8, 4]);
+    }
+
+    #[test]
+    fn uniform_scores_average_values() {
+        // q = 0 -> scores all equal -> output = column mean of v.
+        let q = Tensor::zeros(&[4, 2]);
+        let k = randt(&[4, 2], 5);
+        let v = randt(&[4, 2], 6);
+        let out = dense_head(&q, &k, &v);
+        for c in 0..2 {
+            let mean: f32 = (0..4).map(|r| v.at(r, c)).sum::<f32>() / 4.0;
+            for r in 0..4 {
+                assert!((out.at(r, c) - mean).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn attends_to_matching_key() {
+        // One key aligned with the query and scaled up dominates.
+        let q = Tensor::new(&[1, 2], vec![10.0, 0.0]);
+        let k = Tensor::new(&[3, 2], vec![10.0, 0.0, -10.0, 0.0, 0.0, 10.0]);
+        let v = Tensor::new(&[3, 2], vec![1.0, 0.0, 2.0, 0.0, 3.0, 0.0]);
+        let out = dense_head(&q, &k, &v);
+        assert!((out.at(0, 0) - 1.0).abs() < 1e-3, "{}", out.at(0, 0));
+    }
+}

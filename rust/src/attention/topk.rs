@@ -1,0 +1,164 @@
+//! Top-K 2×2 block pruning — the paper's Fig. 7 comparator.
+//!
+//! Same integer-product block importance as HDP, but each block-row
+//! keeps exactly the K most important blocks (an oracle selection that
+//! needs a sorter in hardware — the cost HDP's threshold rule avoids).
+//! Mirrors `ref.topk_head_ref`.
+
+use crate::tensor::Tensor;
+
+use super::hdp::NEG_INF;
+
+/// Output of one Top-K head (subset of the HDP trail).
+#[derive(Debug, Clone)]
+pub struct TopkHeadOutput {
+    pub out: Tensor,
+    pub probs: Tensor,
+    pub mask: Tensor,
+    pub kept_density: f32,
+}
+
+/// Keep mask with exactly-K-per-row semantics (ties keep extra, like
+/// the jax reference: threshold at the k-th order statistic).
+pub fn topk_mask(theta: &Tensor, keep_frac: f32) -> Tensor {
+    let (nbr, nbc) = (theta.rows(), theta.cols());
+    let k = ((keep_frac * nbc as f32).ceil() as usize).clamp(1, nbc);
+    let mut mask = Tensor::zeros(&[nbr, nbc]);
+    let mut row: Vec<f32> = Vec::with_capacity(nbc);
+    for i in 0..nbr {
+        row.clear();
+        row.extend_from_slice(theta.row(i));
+        row.sort_by(|a, b| b.partial_cmp(a).unwrap()); // descending
+        let kth = row[k - 1];
+        for j in 0..nbc {
+            mask.set(i, j, f32::from(theta.at(i, j) >= kth));
+        }
+    }
+    mask
+}
+
+/// One Top-K pruned head on quantized fields. Kept blocks use the
+/// exact quantized product (Top-K is pruning-only, no approximation).
+pub fn topk_head(
+    iq: &Tensor,
+    fq: &Tensor,
+    ik: &Tensor,
+    fk: &Tensor,
+    v: &Tensor,
+    keep_frac: f32,
+    inv_scale: f32,
+    block: usize,
+) -> TopkHeadOutput {
+    let l = iq.rows();
+    let int_score = iq.matmul_nt(ik);
+    let theta = super::hdp::block_importance(&int_score, block);
+    let mask = topk_mask(&theta, keep_frac);
+    let kept_density = mask.data().iter().sum::<f32>() / mask.len() as f32;
+
+    let q = iq.add(fq);
+    let k = ik.add(fk);
+    let exact = q.matmul_nt(&k);
+    let mut score = Tensor::zeros(&[l, l]);
+    for i in 0..l {
+        for j in 0..l {
+            let s = if mask.at(i / block, j / block) > 0.0 {
+                exact.at(i, j) * inv_scale
+            } else {
+                NEG_INF
+            };
+            score.set(i, j, s);
+        }
+    }
+    let probs = score.softmax_rows();
+    let out = probs.matmul(v);
+    TopkHeadOutput { out, probs, mask, kept_density }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::hdp::block_importance;
+    use crate::util::prop::{check, prop_assert};
+    use crate::util::rng::SplitMix64;
+
+    fn randt(shape: &[usize], seed: u64) -> Tensor {
+        let mut r = SplitMix64::new(seed);
+        Tensor::from_fn(shape, |_| (r.next_below(9) as f32) - 4.0)
+    }
+
+    #[test]
+    fn keeps_exactly_k_without_ties() {
+        let theta = Tensor::new(&[2, 4], vec![4.0, 1.0, 3.0, 2.0, 10.0, 20.0, 30.0, 40.0]);
+        let mask = topk_mask(&theta, 0.5);
+        assert_eq!(mask.data(), &[1.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn ties_keep_extra_never_fewer() {
+        let theta = Tensor::new(&[1, 4], vec![5.0, 5.0, 5.0, 1.0]);
+        let mask = topk_mask(&theta, 0.25); // k=1 but three tie at 5
+        assert_eq!(mask.data().iter().sum::<f32>(), 3.0);
+    }
+
+    #[test]
+    fn keep_all() {
+        let theta = Tensor::new(&[1, 4], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(topk_mask(&theta, 1.0).data().iter().sum::<f32>(), 4.0);
+    }
+
+    #[test]
+    fn prop_keeps_at_least_k_per_row() {
+        check("topk keeps >= ceil(keep*nb) per row", 100, |g| {
+            let nb = g.usize(2, 32);
+            let keep = g.f32(0.05, 1.0);
+            let theta =
+                Tensor::new(&[1, nb], (0..nb).map(|_| g.f32(0.0, 50.0)).collect());
+            let mask = topk_mask(&theta, keep);
+            let k = ((keep * nb as f32).ceil() as usize).clamp(1, nb);
+            prop_assert(
+                mask.data().iter().sum::<f32>() as usize >= k,
+                "at least k kept",
+            )
+        });
+    }
+
+    #[test]
+    fn head_end_to_end_shapes() {
+        let iq = randt(&[8, 4], 1);
+        let fq = randt(&[8, 4], 2).scale(0.1);
+        let ik = randt(&[8, 4], 3);
+        let fk = randt(&[8, 4], 4).scale(0.1);
+        let v = randt(&[8, 4], 5);
+        let o = topk_head(&iq, &fq, &ik, &fk, &v, 0.5, 0.1, 2);
+        assert_eq!(o.out.shape(), &[8, 4]);
+        assert!(o.kept_density >= 0.5 - 1e-6);
+        // pruned entries carry no probability
+        for i in 0..8 {
+            for j in 0..8 {
+                if o.mask.at(i / 2, j / 2) == 0.0 {
+                    assert!(o.probs.at(i, j) < 1e-10);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn importance_consistent_with_hdp() {
+        // Both methods rank blocks with the same integer importance.
+        let iq = randt(&[8, 4], 7);
+        let ik = randt(&[8, 4], 8);
+        let theta = block_importance(&iq.matmul_nt(&ik), 2);
+        let m1 = topk_mask(&theta, 0.25);
+        // the top-1 block per row must also survive HDP at any rho<1
+        let m2 = crate::attention::hdp::block_mask(&theta, 0.95);
+        for i in 0..theta.rows() {
+            for j in 0..theta.cols() {
+                if m2.at(i, j) == 1.0 && theta.at(i, j)
+                    == theta.row(i).iter().cloned().fold(f32::MIN, f32::max)
+                {
+                    assert_eq!(m1.at(i, j), 1.0);
+                }
+            }
+        }
+    }
+}

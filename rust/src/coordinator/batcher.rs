@@ -1,0 +1,164 @@
+//! Dynamic batcher: requests queue up and are released as batches when
+//! either the executable's batch capacity fills or the oldest request
+//! has lingered past the deadline — the standard serving trade between
+//! throughput (big batches) and tail latency (short linger).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One classification request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub enqueued: Instant,
+}
+
+#[derive(Debug)]
+struct Queue {
+    items: VecDeque<Request>,
+    closed: bool,
+}
+
+/// Thread-safe dynamic batching queue.
+#[derive(Debug)]
+pub struct Batcher {
+    q: Mutex<Queue>,
+    cv: Condvar,
+    pub max_batch: usize,
+    pub linger: Duration,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, linger: Duration) -> Self {
+        assert!(max_batch > 0);
+        Self {
+            q: Mutex::new(Queue { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            max_batch,
+            linger,
+        }
+    }
+
+    pub fn submit(&self, req: Request) {
+        let mut q = self.q.lock().unwrap();
+        assert!(!q.closed, "submit after close");
+        q.items.push_back(req);
+        self.cv.notify_all();
+    }
+
+    /// Signal that no more requests will arrive; pending ones still drain.
+    pub fn close(&self) {
+        self.q.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn pending(&self) -> usize {
+        self.q.lock().unwrap().items.len()
+    }
+
+    /// Block until a batch is ready (full, lingered, or queue closed
+    /// with leftovers). Returns `None` when closed and drained.
+    pub fn next_batch(&self) -> Option<Vec<Request>> {
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if q.items.len() >= self.max_batch {
+                return Some(drain(&mut q.items, self.max_batch));
+            }
+            if let Some(first) = q.items.front() {
+                let age = first.enqueued.elapsed();
+                if age >= self.linger || q.closed {
+                    let n = q.items.len().min(self.max_batch);
+                    return Some(drain(&mut q.items, n));
+                }
+                let wait = self.linger - age;
+                let (guard, _timeout) = self.cv.wait_timeout(q, wait).unwrap();
+                q = guard;
+            } else if q.closed {
+                return None;
+            } else {
+                q = self.cv.wait(q).unwrap();
+            }
+        }
+    }
+}
+
+fn drain(items: &mut VecDeque<Request>, n: usize) -> Vec<Request> {
+    items.drain(..n).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> Request {
+        Request { id, tokens: vec![0; 8], enqueued: Instant::now() }
+    }
+
+    #[test]
+    fn full_batch_released_immediately() {
+        let b = Batcher::new(4, Duration::from_secs(10));
+        for i in 0..4 {
+            b.submit(req(i));
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch[0].id, 0); // FIFO
+    }
+
+    #[test]
+    fn linger_releases_partial_batch() {
+        let b = Batcher::new(64, Duration::from_millis(20));
+        b.submit(req(1));
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b = Batcher::new(8, Duration::from_secs(10));
+        b.submit(req(1));
+        b.submit(req(2));
+        b.close();
+        assert_eq!(b.next_batch().unwrap().len(), 2);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn oversized_queue_splits_into_batches() {
+        let b = Batcher::new(3, Duration::from_millis(1));
+        for i in 0..7 {
+            b.submit(req(i));
+        }
+        b.close();
+        let sizes: Vec<usize> =
+            std::iter::from_fn(|| b.next_batch()).map(|v| v.len()).collect();
+        assert_eq!(sizes, vec![3, 3, 1]);
+    }
+
+    #[test]
+    fn concurrent_producer_consumer() {
+        let b = Arc::new(Batcher::new(8, Duration::from_millis(5)));
+        let p = Arc::clone(&b);
+        let producer = std::thread::spawn(move || {
+            for i in 0..100 {
+                p.submit(req(i));
+                if i % 10 == 0 {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+            p.close();
+        });
+        let mut seen = 0;
+        while let Some(batch) = b.next_batch() {
+            assert!(batch.len() <= 8);
+            seen += batch.len();
+        }
+        producer.join().unwrap();
+        assert_eq!(seen, 100);
+    }
+}

@@ -1,0 +1,203 @@
+//! Serving engine: worker threads pull batches from the [`Batcher`],
+//! pad them to the executable's static batch shape, run `hdp_fwd` (or
+//! `dense_fwd`) through PJRT, and attach per-request co-processor
+//! timing/energy from the cycle simulator driven by the *measured*
+//! pruning diagnostics of that very batch — the integration a host DNN
+//! accelerator embedding the HDP co-processor would expose.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::model::ParamStore;
+use crate::runtime::{lit_i32, lit_scalar_f32, to_vec_f32, Runtime};
+use crate::sim::{self, SimConfig};
+
+use super::batcher::{Batcher, Request};
+use super::metrics::Metrics;
+
+/// Attention variant served by the engine.
+#[derive(Debug, Clone, Copy)]
+pub enum ServeMode {
+    Dense,
+    Hdp { rho: f32, tau: f32, qstep: f32 },
+}
+
+/// One served response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub label: i32,
+    pub e2e_seconds: f64,
+    /// Simulated co-processor latency for this request's attention work.
+    pub sim_seconds: f64,
+}
+
+pub struct Engine {
+    rt: Arc<Runtime>,
+    pub model: String,
+    params: Vec<Vec<f32>>,
+    param_shapes: Vec<Vec<usize>>,
+    pub batcher: Arc<Batcher>,
+    pub metrics: Arc<Metrics>,
+    mode: ServeMode,
+    sim_cfg: SimConfig,
+    batch: usize,
+    seq_len: usize,
+    n_layers: usize,
+    n_heads: usize,
+    d_head: usize,
+    responses: Arc<Mutex<Vec<Response>>>,
+    inflight: Arc<AtomicU64>,
+}
+
+impl Engine {
+    pub fn new(
+        rt: Arc<Runtime>,
+        params: &ParamStore,
+        mode: ServeMode,
+        sim_cfg: SimConfig,
+        batcher: Arc<Batcher>,
+    ) -> Result<Self> {
+        let spec = rt.model(&params.model)?;
+        params.check_against(spec)?;
+        let cfg = spec.config;
+        Ok(Self {
+            rt,
+            model: params.model.clone(),
+            params: params.data.clone(),
+            param_shapes: params.shapes.clone(),
+            batcher,
+            metrics: Arc::new(Metrics::new()),
+            mode,
+            sim_cfg,
+            batch: cfg.eval_batch,
+            seq_len: cfg.seq_len,
+            n_layers: cfg.n_layers,
+            n_heads: cfg.n_heads,
+            d_head: cfg.d_head,
+            responses: Arc::new(Mutex::new(Vec::new())),
+            inflight: Arc::new(AtomicU64::new(0)),
+        })
+    }
+
+    fn entry(&self) -> &'static str {
+        match self.mode {
+            ServeMode::Dense => "dense_fwd",
+            ServeMode::Hdp { .. } => "hdp_fwd",
+        }
+    }
+
+    fn param_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.params
+            .iter()
+            .zip(&self.param_shapes)
+            .map(|(d, s)| crate::runtime::lit_f32(d, s))
+            .collect()
+    }
+
+    /// Serve one batch synchronously; used by the worker loop and the
+    /// benches (which drive it without threads).
+    pub fn serve_batch(&self, reqs: &[Request]) -> Result<Vec<Response>> {
+        let t0 = Instant::now();
+        anyhow::ensure!(!reqs.is_empty() && reqs.len() <= self.batch);
+        // Pad to the executable's static batch with the last request.
+        let mut toks: Vec<i32> = Vec::with_capacity(self.batch * self.seq_len);
+        for r in reqs {
+            anyhow::ensure!(r.tokens.len() == self.seq_len,
+                            "request {}: wrong seq len", r.id);
+            toks.extend_from_slice(&r.tokens);
+        }
+        for _ in reqs.len()..self.batch {
+            let last = &reqs[reqs.len() - 1].tokens;
+            toks.extend_from_slice(last);
+        }
+
+        let mut inputs = self.param_literals()?;
+        inputs.push(lit_i32(&toks, &[self.batch, self.seq_len])?);
+        if let ServeMode::Hdp { rho, tau, qstep } = self.mode {
+            inputs.push(lit_scalar_f32(rho));
+            inputs.push(lit_scalar_f32(tau));
+            inputs.push(lit_scalar_f32(qstep));
+            inputs.push(lit_scalar_f32(0.0)); // use_ff
+            inputs.push(lit_scalar_f32(0.0)); // use_hw_softmax
+        }
+        let exe = self.rt.executable(&self.model, self.entry())?;
+        let outs = self.rt.execute_prepared(&exe, &inputs)?;
+        let compute_s = t0.elapsed().as_secs_f64();
+        let logits = to_vec_f32(&outs[0])?;
+
+        // Co-processor model: feed the batch's measured diagnostics to
+        // the cycle simulator.
+        let (sim_cycles, sim_energy, sim_dram, pruned, total) =
+            if outs.len() >= 3 {
+                let dens = to_vec_f32(&outs[1])?;
+                let kept = to_vec_f32(&outs[2])?;
+                let mean_d =
+                    dens.iter().sum::<f32>() / dens.len().max(1) as f32;
+                let mean_k =
+                    kept.iter().sum::<f32>() / kept.len().max(1) as f32;
+                let rep = sim::estimate_model(
+                    &self.sim_cfg, self.n_layers, self.seq_len, self.d_head,
+                    self.n_heads, mean_d, mean_k, false);
+                (rep.cycles, rep.energy_pj, rep.dram_bytes,
+                 rep.heads_pruned as u64, rep.heads_total as u64)
+            } else {
+                let rep = {
+                    let mut t = sim::ChipReport::default();
+                    for _ in 0..self.n_layers {
+                        t.add_serial(&sim::estimate_layer_dense(
+                            &self.sim_cfg, self.seq_len, self.d_head,
+                            self.n_heads));
+                    }
+                    t
+                };
+                (rep.cycles, rep.energy_pj, rep.dram_bytes, 0,
+                 rep.heads_total as u64)
+            };
+        self.metrics.record_sim(sim_cycles, sim_energy, sim_dram,
+                                pruned, total);
+        let sim_seconds = self.sim_cfg.cycles_to_seconds(sim_cycles);
+
+        let now = Instant::now();
+        let queue_s: Vec<f64> = reqs
+            .iter()
+            .map(|r| (now - r.enqueued).as_secs_f64() - compute_s)
+            .map(|q| q.max(0.0))
+            .collect();
+        let e2e: Vec<f64> =
+            reqs.iter().map(|r| (now - r.enqueued).as_secs_f64()).collect();
+        self.metrics.record_batch(reqs.len(), &queue_s, compute_s, &e2e);
+
+        Ok(reqs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| Response {
+                id: r.id,
+                label: i32::from(logits[2 * i + 1] > logits[2 * i]),
+                e2e_seconds: e2e[i],
+                sim_seconds,
+            })
+            .collect())
+    }
+
+    /// Consume the batcher until it closes and drains, executing on the
+    /// calling thread. PJRT's CPU client is `Rc`-based (not `Send`), so
+    /// the execution loop is pinned to the thread that owns the
+    /// runtime; XLA parallelizes *inside* each executable run, and
+    /// request producers live on other threads feeding the batcher —
+    /// the standard single-executor / many-producer coordinator shape.
+    pub fn run_loop(&self) -> Vec<Response> {
+        while let Some(batch) = self.batcher.next_batch() {
+            self.inflight.fetch_add(1, Ordering::SeqCst);
+            match self.serve_batch(&batch) {
+                Ok(resps) => self.responses.lock().unwrap().extend(resps),
+                Err(e) => eprintln!("batch failed: {e:#}"),
+            }
+            self.inflight.fetch_sub(1, Ordering::SeqCst);
+        }
+        std::mem::take(&mut self.responses.lock().unwrap())
+    }
+}

@@ -1,0 +1,150 @@
+//! Serving metrics: latency histograms (queue / compute / end-to-end),
+//! throughput counters and pruning statistics, shared across worker
+//! threads behind a mutex (recording is a few adds — contention-free at
+//! our request rates).
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::Histogram;
+
+#[derive(Debug, Default)]
+struct Inner {
+    queue: Histogram,
+    compute: Histogram,
+    e2e: Histogram,
+    requests: u64,
+    batches: u64,
+    batched_requests: u64,
+    // co-processor model aggregates
+    sim_cycles: f64,
+    sim_energy_pj: f64,
+    sim_dram_bytes: f64,
+    heads_pruned: u64,
+    heads_total: u64,
+}
+
+#[derive(Debug)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self { inner: Mutex::new(Inner::default()), started: Instant::now() }
+    }
+
+    pub fn record_batch(&self, batch_size: usize, queue_s: &[f64],
+                        compute_s: f64, e2e_s: &[f64]) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        m.batched_requests += batch_size as u64;
+        m.requests += queue_s.len() as u64;
+        for &q in queue_s {
+            m.queue.record(q);
+        }
+        m.compute.record(compute_s);
+        for &e in e2e_s {
+            m.e2e.record(e);
+        }
+    }
+
+    pub fn record_sim(&self, cycles: f64, energy_pj: f64, dram_bytes: f64,
+                      heads_pruned: u64, heads_total: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.sim_cycles += cycles;
+        m.sim_energy_pj += energy_pj;
+        m.sim_dram_bytes += dram_bytes;
+        m.heads_pruned += heads_pruned;
+        m.heads_total += heads_total;
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.inner.lock().unwrap().requests
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        m.requests as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        if m.batches == 0 {
+            0.0
+        } else {
+            m.batched_requests as f64 / m.batches as f64
+        }
+    }
+
+    pub fn e2e_quantile(&self, q: f64) -> f64 {
+        self.inner.lock().unwrap().e2e.quantile(q)
+    }
+
+    pub fn report(&self) -> String {
+        let m = self.inner.lock().unwrap();
+        let mut s = String::new();
+        s.push_str(&format!(
+            "requests      {}  ({:.1} req/s, mean batch {:.2})\n",
+            m.requests,
+            m.requests as f64 / self.started.elapsed().as_secs_f64().max(1e-9),
+            if m.batches == 0 { 0.0 } else { m.batched_requests as f64 / m.batches as f64 },
+        ));
+        s.push_str(&format!("queue latency  {}\n", m.queue.summary("s")));
+        s.push_str(&format!("batch compute  {}\n", m.compute.summary("s")));
+        s.push_str(&format!("e2e latency    {}\n", m.e2e.summary("s")));
+        if m.heads_total > 0 {
+            s.push_str(&format!(
+                "co-processor   {:.2}M cycles, {:.2} µJ, {:.2} MB DRAM, {}/{} heads pruned\n",
+                m.sim_cycles / 1e6,
+                m.sim_energy_pj / 1e6,
+                m.sim_dram_bytes / 1e6,
+                m.heads_pruned,
+                m.heads_total,
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let m = Metrics::new();
+        m.record_batch(4, &[0.001, 0.002, 0.001, 0.003], 0.010,
+                       &[0.011, 0.012, 0.011, 0.013]);
+        m.record_batch(2, &[0.002, 0.002], 0.008, &[0.010, 0.010]);
+        assert_eq!(m.requests(), 6);
+        assert_eq!(m.mean_batch_size(), 3.0);
+        let r = m.report();
+        assert!(r.contains("requests"));
+        assert!(r.contains("e2e latency"));
+        assert!(m.e2e_quantile(0.5) > 0.0);
+    }
+
+    #[test]
+    fn sim_aggregation() {
+        let m = Metrics::new();
+        m.record_sim(1000.0, 500.0, 2048.0, 2, 16);
+        m.record_sim(1000.0, 500.0, 2048.0, 3, 16);
+        let r = m.report();
+        assert!(r.contains("5/32 heads pruned"), "{r}");
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let m = Metrics::new();
+        assert_eq!(m.mean_batch_size(), 0.0);
+        assert!(m.report().contains("requests      0"));
+    }
+}

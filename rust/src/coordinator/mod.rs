@@ -1,0 +1,13 @@
+//! Layer-3 serving coordinator: dynamic batcher, PJRT worker engine
+//! with the co-processor timing model attached, and serving metrics.
+//! (Thread-based: the offline sandbox has no tokio; a fixed worker pool
+//! over a condvar queue covers the same ground for a CPU-bound PJRT
+//! backend.)
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+
+pub use batcher::{Batcher, Request};
+pub use engine::{Engine, Response, ServeMode};
+pub use metrics::Metrics;

@@ -1,0 +1,223 @@
+//! Fixed-point numerics for the HDP front end.
+//!
+//! The co-processor receives Q/K/V "quantized by another processor in
+//! fixed point 16 bit format" (paper §IV-A). This module is that host
+//! quantizer plus the integer/fraction field split that Algorithm 2's
+//! decisions are made on. Two profiles:
+//!
+//! * [`QuantProfile::Q4_12`] — 16-bit (1 sign + 3 integer + 12 fraction),
+//!   the main results.
+//! * [`QuantProfile::Q4_8`]  — 12-bit (1 + 3 + 8), the SpAtten
+//!   comparison (paper §V-B quantizes to 12 bits).
+//!
+//! Mirrors `python/compile/kernels/ref.py` (`quantize`, `split_int_frac`)
+//! and `python/compile/model.py::_quant_split`; the integration tests
+//! check rust-vs-jax equality through the AOT artifacts.
+
+/// A fixed-point profile: sign + `int_bits` + `frac_bits`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuantProfile {
+    pub int_bits: u32,
+    pub frac_bits: u32,
+}
+
+impl QuantProfile {
+    pub const Q4_12: QuantProfile = QuantProfile { int_bits: 3, frac_bits: 12 };
+    pub const Q4_8: QuantProfile = QuantProfile { int_bits: 3, frac_bits: 8 };
+
+    pub fn total_bits(&self) -> u32 {
+        1 + self.int_bits + self.frac_bits
+    }
+
+    /// Quantization step (value of one LSB).
+    pub fn step(&self) -> f32 {
+        (2.0f32).powi(-(self.frac_bits as i32))
+    }
+
+    /// Largest representable magnitude.
+    pub fn amax(&self) -> f32 {
+        (1u32 << self.int_bits) as f32 - self.step()
+    }
+
+    /// Calibration point: the 99.5th percentile of |x| maps here (half
+    /// the integer range) so integer parts carry the bulk of the signal.
+    pub fn target_amax(&self) -> f32 {
+        (1u32 << self.int_bits) as f32 / 2.0
+    }
+}
+
+/// A quantized value split into fields: `value == int_part + frac_part`
+/// with `int_part` integral, `|frac_part| < 1`, signs matching
+/// (two's-complement-field behaviour ≙ truncation toward zero).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fixed {
+    pub int_part: f32,
+    pub frac_part: f32,
+}
+
+impl Fixed {
+    pub fn value(&self) -> f32 {
+        self.int_part + self.frac_part
+    }
+}
+
+/// Per-tensor calibrated scale: 99.5th percentile of |x| → target_amax.
+/// Matches `model._quant_split` (sort + static index, not interpolation).
+pub fn calibrate_scale(xs: &[f32], profile: QuantProfile) -> f32 {
+    assert!(!xs.is_empty());
+    let mut mags: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+    let idx = (0.995 * (mags.len() - 1) as f64) as usize;
+    // §Perf: selection instead of a full sort — calibration is on the
+    // per-batch hot path of the functional pipeline (O(n) vs O(n log n),
+    // ~4x on 8k-element tensors).
+    let (_, kth, _) =
+        mags.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+    profile.target_amax() / (*kth + 1e-6)
+}
+
+/// Quantize one pre-scaled value onto the profile's grid (round to
+/// nearest, saturate).
+pub fn quantize(x: f32, scale: f32, profile: QuantProfile) -> f32 {
+    let step = profile.step();
+    let q = (x * scale / step).round() * step;
+    q.clamp(-profile.amax(), profile.amax())
+}
+
+/// Split a quantized value into integer/fraction fields.
+pub fn split(q: f32) -> Fixed {
+    let int_part = q.trunc();
+    Fixed { int_part, frac_part: q - int_part }
+}
+
+/// Quantize + split a whole tensor with per-tensor calibration.
+/// Returns (int parts, frac parts, scale).
+pub fn quant_split_tensor(
+    xs: &[f32],
+    profile: QuantProfile,
+) -> (Vec<f32>, Vec<f32>, f32) {
+    let scale = calibrate_scale(xs, profile);
+    let mut ints = Vec::with_capacity(xs.len());
+    let mut fracs = Vec::with_capacity(xs.len());
+    for &x in xs {
+        let f = split(quantize(x, scale, profile));
+        ints.push(f.int_part);
+        fracs.push(f.frac_part);
+    }
+    (ints, fracs, scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, prop_assert, prop_assert_close};
+
+    #[test]
+    fn profile_constants() {
+        let q = QuantProfile::Q4_12;
+        assert_eq!(q.total_bits(), 16);
+        assert_eq!(q.step(), 1.0 / 4096.0);
+        assert_eq!(q.amax(), 8.0 - 1.0 / 4096.0);
+        assert_eq!(q.target_amax(), 4.0);
+        assert_eq!(QuantProfile::Q4_8.total_bits(), 12);
+    }
+
+    #[test]
+    fn split_known_values() {
+        assert_eq!(split(2.75), Fixed { int_part: 2.0, frac_part: 0.75 });
+        let s = split(-1.25);
+        assert_eq!(s.int_part, -1.0);
+        assert!((s.frac_part + 0.25).abs() < 1e-6);
+        assert_eq!(split(0.5).int_part, 0.0);
+        assert_eq!(split(-0.5).int_part, 0.0); // trunc toward zero
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        let q = QuantProfile::Q4_12;
+        assert_eq!(quantize(100.0, 1.0, q), q.amax());
+        assert_eq!(quantize(-100.0, 1.0, q), -q.amax());
+    }
+
+    #[test]
+    fn quantize_grid() {
+        let q = QuantProfile::Q4_8;
+        let v = quantize(1.23456, 1.0, q);
+        let steps = v / q.step();
+        assert!((steps - steps.round()).abs() < 1e-5);
+        assert!((v - 1.23456).abs() <= q.step() / 2.0 + 1e-6);
+    }
+
+    // -- properties ---------------------------------------------------------
+
+    #[test]
+    fn prop_split_identity() {
+        check("split identity i+f==q, |f|<1, sign match", 500, |g| {
+            let profile = *g.choice(&[QuantProfile::Q4_12, QuantProfile::Q4_8]);
+            let x = g.f32(-20.0, 20.0);
+            let q = quantize(x, 1.0, profile);
+            let f = split(q);
+            prop_assert_close(f.value() as f64, q as f64, 1e-7, "identity")?;
+            prop_assert(f.frac_part.abs() < 1.0, "|frac| < 1")?;
+            prop_assert(f.int_part.fract() == 0.0, "int part integral")?;
+            prop_assert(
+                f.frac_part == 0.0 || f.frac_part.signum() == q.signum(),
+                "sign match",
+            )
+        });
+    }
+
+    #[test]
+    fn prop_quantize_error_bound() {
+        check("quantize error <= step/2 inside range", 500, |g| {
+            let profile = *g.choice(&[QuantProfile::Q4_12, QuantProfile::Q4_8]);
+            let x = g.f32(-7.5, 7.5);
+            let q = quantize(x, 1.0, profile);
+            prop_assert(
+                (q - x).abs() <= profile.step() / 2.0 + 1e-6,
+                format!("err {} > step/2", (q - x).abs()),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_calibrated_integer_range() {
+        check("calibrated ints stay within the integer field", 100, |g| {
+            let n = g.usize(64, 512);
+            let spread = g.f32(0.05, 10.0);
+            let xs: Vec<f32> =
+                (0..n).map(|_| g.normal_f32() * spread).collect();
+            let profile = QuantProfile::Q4_12;
+            let (ints, fracs, scale) = quant_split_tensor(&xs, profile);
+            prop_assert(scale > 0.0, "positive scale")?;
+            for (&i, &f) in ints.iter().zip(&fracs) {
+                prop_assert(
+                    i.abs() <= (1u32 << profile.int_bits) as f32,
+                    "int field bound",
+                )?;
+                prop_assert(f.abs() < 1.0, "frac bound")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_integer_products_exact() {
+        // IQ·IK products must be exact in f32 — the basis of the
+        // integer-decision guarantee.
+        check("integer products exact in f32", 200, |g| {
+            let a = g.u64(0, 8) as f32 * if g.bool() { 1.0 } else { -1.0 };
+            let b = g.u64(0, 8) as f32 * if g.bool() { 1.0 } else { -1.0 };
+            let p = a * b;
+            prop_assert(p.fract() == 0.0 && p.abs() <= 64.0, "exact product")
+        });
+    }
+
+    #[test]
+    fn matches_python_quantizer_semantics() {
+        // Spot vector mirrored in python/tests/test_kernel.py
+        // TestQuantization::test_sign_match.
+        let xs = [-2.75f32, -0.3, 0.0, 0.4, 3.25];
+        let got: Vec<f32> = xs.iter().map(|&x| split(x).int_part).collect();
+        assert_eq!(got, vec![-2.0, -0.0, 0.0, 0.0, 3.0]);
+    }
+}

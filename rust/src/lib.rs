@@ -1,0 +1,28 @@
+//! # HDP — Hybrid Dynamic Pruning
+//!
+//! A production-shaped reproduction of *"Hybrid Dynamic Pruning: A
+//! Pathway to Efficient Transformer Inference"* (Jaradat et al., 2024):
+//! an algorithm–architecture co-design that accelerates transformer
+//! attention with integer-based 2×2 block pruning, early head pruning
+//! and an integer/fraction approximation, executed by a multi-core
+//! co-processor.
+//!
+//! Three layers (see DESIGN.md):
+//! * **L1/L2 (build time)** — JAX + Pallas kernels AOT-lowered to HLO
+//!   text artifacts (`python/compile/`, `make artifacts`).
+//! * **L3 (this crate)** — the runtime: PJRT execution of the
+//!   artifacts, the functional Algorithm-2 model, the cycle-level HDP
+//!   co-processor simulator with baseline accelerator cost models, and
+//!   a serving coordinator (dynamic batcher + metrics) with the
+//!   figure-reproduction harness behind the `hdp` CLI.
+
+pub mod attention;
+pub mod coordinator;
+pub mod data;
+pub mod fixed;
+pub mod model;
+pub mod repro;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod util;

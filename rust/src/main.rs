@@ -1,0 +1,306 @@
+//! `hdp` — the leader binary: training, evaluation, serving and the
+//! figure-reproduction harness, all over the AOT artifacts (python
+//! never runs at this point).
+//!
+//! ```text
+//! hdp train  --model tiny --dataset sst2s --steps 400
+//! hdp eval   --model tiny --dataset sst2s --rho 0.4 --tau 4096
+//! hdp serve  --model tiny --dataset sst2s --requests 256 --rate 50
+//! hdp repro  --figs fig7,fig8 --models tiny --eval-n 256
+//! hdp arch
+//! hdp table1
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use hdp::coordinator::{Batcher, Engine, Request, ServeMode};
+use hdp::data::{Dataset, Split, Stream};
+use hdp::model::{Evaluator, ParamStore, Trainer};
+use hdp::model::evaluator::Variant;
+use hdp::model::trainer::HdpTrainKnobs;
+use hdp::repro::figures;
+use hdp::runtime::Runtime;
+use hdp::sim::SimConfig;
+use hdp::util::cli::Args;
+use hdp::util::rng::SplitMix64;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
+    let r = match cmd {
+        "train" => cmd_train(rest),
+        "eval" => cmd_eval(rest),
+        "serve" => cmd_serve(rest),
+        "repro" => cmd_repro(rest),
+        "arch" => cmd_arch(rest),
+        "table1" => {
+            figures::table1();
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            Err(anyhow::anyhow!("unknown command '{other}'"))
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "hdp — Hybrid Dynamic Pruning (paper reproduction)\n\n\
+         commands:\n\
+         \x20 train   train a checkpoint through the AOT train_step (PJRT)\n\
+         \x20 eval    accuracy + pruning diagnostics for one config\n\
+         \x20 serve   dynamic-batched serving with co-processor timing\n\
+         \x20 repro   regenerate the paper's figures (CSV into results/)\n\
+         \x20 arch    accelerator comparison (cycle simulator)\n\
+         \x20 table1  capability matrix\n\n\
+         run `hdp <command> --help` for flags"
+    );
+}
+
+fn open_runtime(args: &Args) -> Result<Runtime> {
+    Runtime::open(args.get("artifacts"))
+}
+
+fn cmd_train(rest: &[String]) -> Result<()> {
+    let args = Args::new("hdp train", "train a checkpoint via PJRT")
+        .flag("model", "tiny", "model config (tiny|base)")
+        .flag("dataset", "sst2s", "dataset (sst2s|colas)")
+        .flag("steps", "400", "training steps")
+        .flag("lr", "0.001", "Adam learning rate")
+        .flag("seed", "42", "data + init seed")
+        .flag("artifacts", "artifacts", "artifacts directory")
+        .flag("weights-dir", "weights", "output weights directory")
+        .flag("log-every", "20", "print mean loss every N steps")
+        .switch("hdp", "fine-tune through the HDP attention path (Fig. 11b)")
+        .flag("rho", "0.0", "HDP fine-tune: block pruning ratio")
+        .flag("tau", "4096", "HDP fine-tune: head pruning threshold")
+        .switch("q12", "HDP fine-tune at the 12-bit profile")
+        .flag("init-from", "", "start from existing weights instead of init")
+        .parse(rest)?;
+
+    let rt = open_runtime(&args)?;
+    let model = args.get("model");
+    let dataset = Dataset::parse(&args.get("dataset"))?;
+    let seed = args.get_usize("seed")? as u64;
+    let steps = args.get_usize("steps")?;
+    let lr = args.get_f64("lr")? as f32;
+    let is_hdp = args.get_bool("hdp");
+
+    let init_from = args.get("init-from");
+    let params = if init_from.is_empty() {
+        println!("initializing {model} (seed {seed})");
+        ParamStore::init(&rt, &model, seed as i32)?
+    } else {
+        println!("loading {init_from}");
+        ParamStore::load(&init_from)?
+    };
+    println!("{} parameter tensors, {} weights", params.names.len(),
+             params.total_weights());
+
+    let mut trainer = Trainer::new(&rt, &params)?;
+    let knobs = is_hdp.then(|| HdpTrainKnobs {
+        rho: args.get_f64("rho").unwrap_or(0.0) as f32,
+        tau: args.get_f64("tau").unwrap_or(0.0) as f32,
+        qstep: if args.get_bool("q12") { figures::QSTEP12 } else { figures::QSTEP16 },
+    });
+    let t0 = Instant::now();
+    let curve = trainer.train(dataset, seed, steps, lr, knobs,
+                              args.get_usize("log-every")?)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("trained {steps} steps in {dt:.1}s ({:.2} steps/s); \
+              loss {:.4} -> {:.4}",
+             steps as f64 / dt,
+             curve.first().copied().unwrap_or(f32::NAN),
+             curve.last().copied().unwrap_or(f32::NAN));
+
+    let suffix = if is_hdp { "hdpft" } else { dataset.name() };
+    let out = format!("{}/{}.{}.hdpw", args.get("weights-dir"), model,
+                      if is_hdp { format!("{}.{suffix}", dataset.name()) }
+                      else { suffix.to_string() });
+    trainer.params()?.save(&out)?;
+    println!("saved {out}");
+
+    // Quick eval so the training run reports accuracy too.
+    let ev = Evaluator::new(&rt, &trainer.params()?)?;
+    let r = ev.run(dataset, seed, 256, Variant::Dense)?;
+    println!("eval (dense attention): accuracy {:.4} on {} examples",
+             r.accuracy, r.n);
+    Ok(())
+}
+
+fn cmd_eval(rest: &[String]) -> Result<()> {
+    let args = Args::new("hdp eval", "accuracy + pruning diagnostics")
+        .flag("model", "tiny", "model config")
+        .flag("dataset", "sst2s", "dataset")
+        .flag("weights-dir", "weights", "weights directory")
+        .flag("artifacts", "artifacts", "artifacts directory")
+        .flag("n", "512", "eval examples")
+        .flag("variant", "hdp", "dense|hdp|topk|spatten")
+        .flag("rho", "0.0", "block pruning ratio")
+        .flag("tau", "0", "head pruning threshold")
+        .flag("keep", "0.5", "topk keep fraction")
+        .flag("prune", "0.2", "spatten prune fraction")
+        .switch("exact", "disable the approximation (adds FQ.FK)")
+        .switch("hw-softmax", "use the polynomial softmax unit numerics")
+        .switch("q12", "12-bit profile")
+        .parse(rest)?;
+
+    let rt = open_runtime(&args)?;
+    let model = args.get("model");
+    let dataset = Dataset::parse(&args.get("dataset"))?;
+    let params = figures::load_weights(&args.get("weights-dir"), &model,
+                                       dataset.name())?;
+    let ev = Evaluator::new(&rt, &params)?;
+    let qstep = if args.get_bool("q12") { figures::QSTEP12 } else { figures::QSTEP16 };
+    let variant = match args.get("variant").as_str() {
+        "dense" => Variant::Dense,
+        "hdp" => Variant::Hdp {
+            rho: args.get_f64("rho")? as f32,
+            tau: args.get_f64("tau")? as f32,
+            qstep,
+            use_ff: args.get_bool("exact"),
+            use_hw: args.get_bool("hw-softmax"),
+        },
+        "topk" => Variant::Topk { keep_frac: args.get_f64("keep")? as f32, qstep },
+        "spatten" => Variant::Spatten { prune_frac: args.get_f64("prune")? as f32 },
+        v => anyhow::bail!("unknown variant '{v}'"),
+    };
+    let t0 = Instant::now();
+    let r = ev.run(dataset, 42, args.get_usize("n")?, variant)?;
+    println!("accuracy      {:.4}  ({} examples, {:.1}s)", r.accuracy, r.n,
+             t0.elapsed().as_secs_f64());
+    println!("block density {:.4}  (pruned {:.1}%)", r.mean_density(),
+             100.0 * (1.0 - r.mean_density()));
+    println!("heads kept    {:.4}  (pruned {:.1}%)", r.mean_head_kept(),
+             100.0 * (1.0 - r.mean_head_kept()));
+    println!("net sparsity  {:.4}", r.net_sparsity());
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let args = Args::new("hdp serve", "dynamic-batched serving demo")
+        .flag("model", "tiny", "model config")
+        .flag("dataset", "sst2s", "request distribution")
+        .flag("weights-dir", "weights", "weights directory")
+        .flag("artifacts", "artifacts", "artifacts directory")
+        .flag("requests", "256", "number of requests")
+        .flag("rate", "100", "Poisson arrival rate (req/s)")
+        .flag("linger-ms", "5", "batcher linger deadline")
+        .flag("mode", "hdp", "hdp|dense")
+        .flag("rho", "0.4", "HDP block pruning ratio")
+        .flag("tau", "4096", "HDP head pruning threshold")
+        .flag("chip", "edge", "co-processor model: edge|server")
+        .parse(rest)?;
+
+    let rt = Arc::new(open_runtime(&args)?);
+    let model = args.get("model");
+    let dataset = Dataset::parse(&args.get("dataset"))?;
+    let params = figures::load_weights(&args.get("weights-dir"), &model,
+                                       dataset.name())?;
+    let spec = rt.model(&model)?;
+    let batcher = Arc::new(Batcher::new(
+        spec.config.eval_batch,
+        Duration::from_millis(args.get_usize("linger-ms")? as u64),
+    ));
+    let mode = match args.get("mode").as_str() {
+        "dense" => ServeMode::Dense,
+        _ => ServeMode::Hdp {
+            rho: args.get_f64("rho")? as f32,
+            tau: args.get_f64("tau")? as f32,
+            qstep: figures::QSTEP16,
+        },
+    };
+    let chip = if args.get("chip") == "server" { SimConfig::server() } else { SimConfig::edge() };
+    let engine = Engine::new(Arc::clone(&rt), &params, mode, chip,
+                             Arc::clone(&batcher))?;
+    // Warm the executable before requests arrive.
+    let _ = rt.executable(&model, match mode {
+        ServeMode::Dense => "dense_fwd",
+        ServeMode::Hdp { .. } => "hdp_fwd",
+    })?;
+
+    let n = args.get_usize("requests")?;
+    let rate = args.get_f64("rate")?;
+    let seq_len = spec.config.seq_len;
+    let producer_batcher = Arc::clone(&batcher);
+    let producer = std::thread::spawn(move || {
+        let mut rng = SplitMix64::new(7);
+        let mut stream = Stream::new(dataset, Split::Eval, seq_len, 42);
+        for id in 0..n as u64 {
+            let ex = stream.next_example();
+            producer_batcher.submit(Request {
+                id,
+                tokens: ex.tokens.iter().map(|&t| t as i32).collect(),
+                enqueued: Instant::now(),
+            });
+            std::thread::sleep(Duration::from_secs_f64(rng.next_exp(rate)));
+        }
+        producer_batcher.close();
+    });
+
+    let responses = engine.run_loop();
+    producer.join().unwrap();
+    println!("served {} responses", responses.len());
+    println!("{}", engine.metrics.report());
+    if let Some(r) = responses.first() {
+        println!("co-processor latency per request (simulated): {:.3} ms",
+                 r.sim_seconds * 1e3);
+    }
+    Ok(())
+}
+
+fn cmd_repro(rest: &[String]) -> Result<()> {
+    let args = Args::new("hdp repro", "regenerate the paper's figures")
+        .flag("figs", "fig2,fig7,fig8,fig9,fig10,fig11,table1,arch",
+              "comma-separated figure list")
+        .flag("models", "tiny,base", "models to sweep")
+        .flag("datasets", "sst2s,colas", "datasets to sweep")
+        .flag("weights-dir", "weights", "weights directory")
+        .flag("artifacts", "artifacts", "artifacts directory")
+        .flag("out", "results", "output directory for CSVs")
+        .flag("eval-n", "256", "eval examples per sweep point")
+        .parse(rest)?;
+
+    let rt = open_runtime(&args)?;
+    let out = args.get("out");
+    let wd = args.get("weights-dir");
+    let models = args.get_list("models");
+    let datasets = args.get_list("datasets");
+    let n = args.get_usize("eval-n")?;
+    for fig in args.get_list("figs") {
+        let t0 = Instant::now();
+        println!("==== {fig} ====");
+        match fig.as_str() {
+            "fig2" => figures::fig2(&rt, &wd, &out)?,
+            "fig7" => figures::fig7(&rt, &wd, &out, &models, &datasets, n)?,
+            "fig8" => figures::fig8(&rt, &wd, &out, &models, &datasets, n)?,
+            "fig9" => figures::fig9(&rt, &wd, &out, &models, &datasets, n)?,
+            "fig10" => figures::fig10(&rt, &wd, &out, &datasets, n)?,
+            "fig11" => figures::fig11(&rt, &wd, &out, n)?,
+            "table1" => figures::table1(),
+            "arch" => figures::arch(Some(&rt), &wd, &out, n)?,
+            other => anyhow::bail!("unknown figure '{other}'"),
+        }
+        println!("({fig} took {:.1}s)\n", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}
+
+fn cmd_arch(rest: &[String]) -> Result<()> {
+    let args = Args::new("hdp arch", "accelerator comparison (no artifacts needed)")
+        .flag("out", "results", "output directory")
+        .parse(rest)?;
+    figures::arch(None, "weights", &args.get("out"), 0)
+}

@@ -1,0 +1,231 @@
+//! Evaluator: accuracy + pruning diagnostics over the synthetic eval
+//! sets, one AOT forward entry at a time. This is the measurement core
+//! every figure-reproduction harness calls.
+
+use anyhow::Result;
+
+use crate::data::{Dataset, Split, Stream};
+use crate::runtime::{lit_i32, lit_scalar_f32, to_vec_f32, Runtime};
+
+use super::params::ParamStore;
+
+/// Which forward variant to evaluate.
+#[derive(Debug, Clone, Copy)]
+pub enum Variant {
+    Dense,
+    /// rho, tau, qstep, use_ff, use_hw_softmax
+    Hdp { rho: f32, tau: f32, qstep: f32, use_ff: bool, use_hw: bool },
+    /// keep_frac, qstep
+    Topk { keep_frac: f32, qstep: f32 },
+    /// prune_frac
+    Spatten { prune_frac: f32 },
+}
+
+impl Variant {
+    fn entry(&self) -> &'static str {
+        match self {
+            Variant::Dense => "dense_fwd",
+            Variant::Hdp { .. } => "hdp_fwd",
+            Variant::Topk { .. } => "topk_fwd",
+            Variant::Spatten { .. } => "spatten_fwd",
+        }
+    }
+}
+
+/// Aggregated evaluation result.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub accuracy: f64,
+    pub n: usize,
+    /// Mean kept-block density per (layer, head), when the variant
+    /// reports it ([L, H] flattened row-major; empty for dense).
+    pub kept_density: Vec<f64>,
+    /// Mean head-survival per (layer, head) (hdp: head_kept; spatten:
+    /// alive; empty otherwise).
+    pub head_kept: Vec<f64>,
+    pub n_layers: usize,
+    pub n_heads: usize,
+}
+
+impl EvalResult {
+    pub fn mean_density(&self) -> f64 {
+        if self.kept_density.is_empty() {
+            1.0
+        } else {
+            self.kept_density.iter().sum::<f64>() / self.kept_density.len() as f64
+        }
+    }
+
+    pub fn mean_head_kept(&self) -> f64 {
+        if self.head_kept.is_empty() {
+            1.0
+        } else {
+            self.head_kept.iter().sum::<f64>() / self.head_kept.len() as f64
+        }
+    }
+
+    /// Net fraction of Q·K score work pruned: pruned heads drop all of
+    /// their blocks, kept heads drop (1 - density) (paper Fig. 10's
+    /// "net pruning ratio").
+    pub fn net_sparsity(&self) -> f64 {
+        if self.kept_density.is_empty() {
+            return 0.0;
+        }
+        let mut kept_work = 0.0;
+        for (d, h) in self.kept_density.iter().zip(&self.head_kept) {
+            kept_work += d * h;
+        }
+        1.0 - kept_work / self.kept_density.len() as f64
+    }
+}
+
+pub struct Evaluator<'rt> {
+    rt: &'rt Runtime,
+    model: String,
+    params: Vec<xla::Literal>,
+    batch: usize,
+    seq_len: usize,
+    n_layers: usize,
+    n_heads: usize,
+}
+
+impl<'rt> Evaluator<'rt> {
+    pub fn new(rt: &'rt Runtime, params: &ParamStore) -> Result<Self> {
+        let spec = rt.model(&params.model)?;
+        params.check_against(spec)?;
+        Ok(Self {
+            rt,
+            model: params.model.clone(),
+            params: params.to_literals()?,
+            batch: spec.config.eval_batch,
+            seq_len: spec.config.seq_len,
+            n_layers: spec.config.n_layers,
+            n_heads: spec.config.n_heads,
+        })
+    }
+
+    /// Evaluate `n_examples` (rounded down to whole batches) of the
+    /// eval split.
+    pub fn run(&self, dataset: Dataset, seed: u64, n_examples: usize,
+               variant: Variant) -> Result<EvalResult> {
+        let entry = variant.entry();
+        let exe = self.rt.executable(&self.model, entry)?;
+        let mut stream = Stream::new(dataset, Split::Eval, self.seq_len, seed);
+        let batches = (n_examples / self.batch).max(1);
+        let lh = self.n_layers * self.n_heads;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut dens_sum = vec![0.0f64; lh];
+        let mut kept_sum = vec![0.0f64; lh];
+        let mut diag_batches = 0usize;
+
+        for _ in 0..batches {
+            let (toks, labels) = stream.next_batch(self.batch);
+            // Rebuild the param literal list each batch (literal clones
+            // are cheap host copies; params dominate but stay modest).
+            let mut inputs: Vec<xla::Literal> = self
+                .params
+                .iter()
+                .map(clone_literal)
+                .collect::<Result<_>>()?;
+            inputs.push(lit_i32(&toks, &[self.batch, self.seq_len])?);
+            match variant {
+                Variant::Dense => {}
+                Variant::Hdp { rho, tau, qstep, use_ff, use_hw } => {
+                    inputs.push(lit_scalar_f32(rho));
+                    inputs.push(lit_scalar_f32(tau));
+                    inputs.push(lit_scalar_f32(qstep));
+                    inputs.push(lit_scalar_f32(f32::from(use_ff)));
+                    inputs.push(lit_scalar_f32(f32::from(use_hw)));
+                }
+                Variant::Topk { keep_frac, qstep } => {
+                    inputs.push(lit_scalar_f32(keep_frac));
+                    inputs.push(lit_scalar_f32(qstep));
+                }
+                Variant::Spatten { prune_frac } => {
+                    inputs.push(lit_scalar_f32(prune_frac));
+                }
+            }
+            let outs = self.rt.execute_prepared(&exe, &inputs)?;
+            let logits = to_vec_f32(&outs[0])?;
+            for (i, &label) in labels.iter().enumerate() {
+                let l0 = logits[2 * i];
+                let l1 = logits[2 * i + 1];
+                let pred = i32::from(l1 > l0);
+                correct += usize::from(pred == label);
+                total += 1;
+            }
+            if outs.len() > 1 {
+                let d = to_vec_f32(&outs[1])?;
+                for (s, &x) in dens_sum.iter_mut().zip(&d) {
+                    *s += x as f64;
+                }
+                if outs.len() > 2 {
+                    let k = to_vec_f32(&outs[2])?;
+                    for (s, &x) in kept_sum.iter_mut().zip(&k) {
+                        *s += x as f64;
+                    }
+                } else {
+                    // spatten: second output is head_alive
+                }
+                diag_batches += 1;
+            }
+        }
+
+        let (kept_density, head_kept) = match variant {
+            Variant::Dense => (Vec::new(), Vec::new()),
+            Variant::Hdp { .. } => (
+                dens_sum.iter().map(|s| s / diag_batches as f64).collect(),
+                kept_sum.iter().map(|s| s / diag_batches as f64).collect(),
+            ),
+            Variant::Topk { .. } => (
+                dens_sum.iter().map(|s| s / diag_batches as f64).collect(),
+                vec![1.0; lh],
+            ),
+            Variant::Spatten { .. } => (
+                Vec::new(),
+                dens_sum.iter().map(|s| s / diag_batches as f64).collect(),
+            ),
+        };
+        Ok(EvalResult {
+            accuracy: correct as f64 / total as f64,
+            n: total,
+            kept_density,
+            head_kept,
+            n_layers: self.n_layers,
+            n_heads: self.n_heads,
+        })
+    }
+
+    /// Fig. 2 probe: dense attention probabilities for one example.
+    /// Returns ([L,H,l,l] flattened, l).
+    pub fn probe(&self, dataset: Dataset, seed: u64, example_idx: usize)
+                 -> Result<(Vec<f32>, usize)> {
+        let mut stream = Stream::new(dataset, Split::Probe, self.seq_len, seed);
+        let mut ex = stream.next_example();
+        for _ in 0..example_idx {
+            ex = stream.next_example();
+        }
+        let toks: Vec<i32> = ex.tokens.iter().map(|&t| t as i32).collect();
+        let mut inputs: Vec<xla::Literal> =
+            self.params.iter().map(clone_literal).collect::<Result<_>>()?;
+        inputs.push(lit_i32(&toks, &[1, self.seq_len])?);
+        let outs = self.rt.execute(&self.model, "probe_fwd", &inputs)?;
+        Ok((to_vec_f32(&outs[1])?, self.seq_len))
+    }
+}
+
+/// The xla crate's Literal has no Clone; round-trip through host data.
+fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
+    let shape = l.array_shape()?;
+    let dims: Vec<i64> = shape.dims().to_vec();
+    match l.ty()? {
+        xla::ElementType::F32 => {
+            Ok(xla::Literal::vec1(&l.to_vec::<f32>()?).reshape(&dims)?)
+        }
+        xla::ElementType::S32 => {
+            Ok(xla::Literal::vec1(&l.to_vec::<i32>()?).reshape(&dims)?)
+        }
+        t => anyhow::bail!("clone_literal: unsupported type {t:?}"),
+    }
+}

@@ -1,0 +1,13 @@
+//! Model-state management on the rust side: parameter store (init via
+//! the AOT `init` entry, save/load in a simple binary format), the
+//! training driver that runs `train_step`/`hdp_train_step` through
+//! PJRT, and the evaluator that sweeps the forward entries over the
+//! synthetic eval sets.
+
+pub mod params;
+pub mod trainer;
+pub mod evaluator;
+
+pub use evaluator::{EvalResult, Evaluator};
+pub use params::ParamStore;
+pub use trainer::Trainer;

@@ -1,0 +1,218 @@
+//! Parameter store: the rust-side owner of model weights.
+//!
+//! Weights are born on-device (the AOT `init` entry seeded from the
+//! CLI), travel through training as PJRT literals, and persist in a
+//! small self-describing binary format (`*.hdpw`) so eval/serve runs
+//! never retrain.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{lit_f32, lit_scalar_i32, to_vec_f32, ModelSpec, Runtime};
+
+const MAGIC: &[u8; 4] = b"HDPW";
+const VERSION: u32 = 1;
+
+/// Named, shaped f32 arrays in the manifest's parameter order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamStore {
+    pub model: String,
+    pub names: Vec<String>,
+    pub shapes: Vec<Vec<usize>>,
+    pub data: Vec<Vec<f32>>,
+}
+
+impl ParamStore {
+    /// Initialize on-device via the AOT `init` entry.
+    pub fn init(rt: &Runtime, model: &str, seed: i32) -> Result<ParamStore> {
+        let spec = rt.model(model)?.clone();
+        let outs = rt.execute(model, "init", &[lit_scalar_i32(seed)])?;
+        Self::from_literals(&spec, &outs)
+    }
+
+    pub fn from_literals(spec: &ModelSpec, lits: &[xla::Literal]) -> Result<ParamStore> {
+        anyhow::ensure!(
+            lits.len() == spec.params.len(),
+            "expected {} param literals, got {}",
+            spec.params.len(),
+            lits.len()
+        );
+        let mut data = Vec::with_capacity(lits.len());
+        for (lit, (name, shape)) in lits.iter().zip(&spec.params) {
+            let v = to_vec_f32(lit)?;
+            anyhow::ensure!(
+                v.len() == shape.iter().product::<usize>(),
+                "param {name}: wrong element count"
+            );
+            data.push(v);
+        }
+        Ok(ParamStore {
+            model: spec.name.clone(),
+            names: spec.params.iter().map(|(n, _)| n.clone()).collect(),
+            shapes: spec.params.iter().map(|(_, s)| s.clone()).collect(),
+            data,
+        })
+    }
+
+    pub fn to_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.data
+            .iter()
+            .zip(&self.shapes)
+            .map(|(d, s)| lit_f32(d, s))
+            .collect()
+    }
+
+    pub fn total_weights(&self) -> usize {
+        self.data.iter().map(Vec::len).sum()
+    }
+
+    // -- persistence ---------------------------------------------------------
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        let mname = self.model.as_bytes();
+        w.write_all(&(mname.len() as u32).to_le_bytes())?;
+        w.write_all(mname)?;
+        w.write_all(&(self.names.len() as u32).to_le_bytes())?;
+        for ((name, shape), data) in
+            self.names.iter().zip(&self.shapes).zip(&self.data)
+        {
+            let nb = name.as_bytes();
+            w.write_all(&(nb.len() as u32).to_le_bytes())?;
+            w.write_all(nb)?;
+            w.write_all(&(shape.len() as u32).to_le_bytes())?;
+            for &d in shape {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for &x in data {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<ParamStore> {
+        let path = path.as_ref();
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("opening weights {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "not an HDPW weights file");
+        let version = read_u32(&mut r)?;
+        anyhow::ensure!(version == VERSION, "weights version {version}");
+        let mlen = read_u32(&mut r)? as usize;
+        let mut mname = vec![0u8; mlen];
+        r.read_exact(&mut mname)?;
+        let n = read_u32(&mut r)? as usize;
+        let mut names = Vec::with_capacity(n);
+        let mut shapes = Vec::with_capacity(n);
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            let nlen = read_u32(&mut r)? as usize;
+            let mut nb = vec![0u8; nlen];
+            r.read_exact(&mut nb)?;
+            names.push(String::from_utf8(nb).context("param name utf8")?);
+            let rank = read_u32(&mut r)? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                let mut b = [0u8; 8];
+                r.read_exact(&mut b)?;
+                shape.push(u64::from_le_bytes(b) as usize);
+            }
+            let count: usize = shape.iter().product();
+            let mut buf = vec![0u8; count * 4];
+            r.read_exact(&mut buf)?;
+            let vals: Vec<f32> = buf
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            shapes.push(shape);
+            data.push(vals);
+        }
+        Ok(ParamStore {
+            model: String::from_utf8(mname).context("model name utf8")?,
+            names,
+            shapes,
+            data,
+        })
+    }
+
+    /// Validate against the manifest the weights will be used with.
+    pub fn check_against(&self, spec: &ModelSpec) -> Result<()> {
+        anyhow::ensure!(self.model == spec.name,
+                        "weights are for '{}', manifest wants '{}'",
+                        self.model, spec.name);
+        anyhow::ensure!(self.names.len() == spec.params.len(), "param count");
+        for ((n, s), (wn, ws)) in
+            spec.params.iter().zip(self.names.iter().zip(&self.shapes))
+        {
+            anyhow::ensure!(n == wn && s == ws,
+                            "param mismatch: manifest {n}{s:?} vs weights {wn}{ws:?}");
+        }
+        Ok(())
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ParamStore {
+        ParamStore {
+            model: "tiny".into(),
+            names: vec!["a".into(), "b".into()],
+            shapes: vec![vec![2, 3], vec![4]],
+            data: vec![vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![-1.0, 0.0, 0.5, 9.0]],
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("hdp_params_test");
+        let path = dir.join("w.hdpw");
+        let p = sample();
+        p.save(&path).unwrap();
+        let q = ParamStore::load(&path).unwrap();
+        assert_eq!(p, q);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("hdp_params_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.hdpw");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(ParamStore::load(&path).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn total_weights() {
+        assert_eq!(sample().total_weights(), 10);
+    }
+
+    #[test]
+    fn literals_roundtrip() {
+        let p = sample();
+        let lits = p.to_literals().unwrap();
+        assert_eq!(lits.len(), 2);
+        assert_eq!(crate::runtime::to_vec_f32(&lits[0]).unwrap(), p.data[0]);
+    }
+}

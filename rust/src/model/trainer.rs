@@ -1,0 +1,149 @@
+//! Training driver: the rust loop around the AOT'd `train_step` /
+//! `hdp_train_step` executables. All optimizer state (Adam m/v, step
+//! counter) lives as PJRT literals and is threaded output→input, so a
+//! training step is one `execute` call with zero host-side math —
+//! python never runs.
+
+use anyhow::Result;
+
+use crate::data::{Dataset, Split, Stream};
+use crate::runtime::{lit_i32, lit_scalar_f32, Runtime};
+
+use super::params::ParamStore;
+
+/// Pruning knobs for HDP-aware fine-tuning (Fig. 11b).
+#[derive(Debug, Clone, Copy)]
+pub struct HdpTrainKnobs {
+    pub rho: f32,
+    pub tau: f32,
+    pub qstep: f32,
+}
+
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    pub model: String,
+    n: usize,
+    batch: usize,
+    seq_len: usize,
+    /// params ++ m ++ v, as literals, in entry order.
+    state: Vec<xla::Literal>,
+    step_lit: xla::Literal,
+    pub steps_done: u64,
+    pub losses: Vec<f32>,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Start from a parameter store (fresh init or loaded checkpoint);
+    /// Adam state starts at zero.
+    pub fn new(rt: &'rt Runtime, params: &ParamStore) -> Result<Self> {
+        let spec = rt.model(&params.model)?;
+        params.check_against(spec)?;
+        let mut state = params.to_literals()?;
+        // m and v: zeros with the same shapes.
+        for _ in 0..2 {
+            for (d, s) in params.data.iter().zip(&params.shapes) {
+                let zeros = vec![0.0f32; d.len()];
+                state.push(crate::runtime::lit_f32(&zeros, s)?);
+            }
+        }
+        Ok(Self {
+            rt,
+            model: params.model.clone(),
+            n: params.names.len(),
+            batch: spec.config.train_batch,
+            seq_len: spec.config.seq_len,
+            state,
+            step_lit: lit_scalar_f32(0.0),
+            steps_done: 0,
+            losses: Vec::new(),
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn run_step(&mut self, entry: &str, tokens: &[i32], labels: &[i32],
+                lr: f32, knobs: Option<HdpTrainKnobs>) -> Result<f32> {
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(3 * self.n + 7);
+        // Cheap clones are not available on Literal; rebuild input list by
+        // draining state (it is replaced by the outputs below).
+        let state = std::mem::take(&mut self.state);
+        inputs.extend(state);
+        inputs.push(take_scalar(&mut self.step_lit));
+        inputs.push(lit_i32(tokens, &[self.batch, self.seq_len])?);
+        inputs.push(lit_i32(labels, &[self.batch])?);
+        inputs.push(lit_scalar_f32(lr));
+        if let Some(k) = knobs {
+            inputs.push(lit_scalar_f32(k.rho));
+            inputs.push(lit_scalar_f32(k.tau));
+            inputs.push(lit_scalar_f32(k.qstep));
+        }
+        let mut outs = self.rt.execute(&self.model, entry, &inputs)?;
+        // outputs: params ++ m ++ v ++ step ++ loss
+        let loss = outs
+            .pop()
+            .expect("loss output")
+            .get_first_element::<f32>()?;
+        self.step_lit = outs.pop().expect("step output");
+        self.state = outs;
+        debug_assert_eq!(self.state.len(), 3 * self.n);
+        self.steps_done += 1;
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// One dense-attention Adam step.
+    pub fn step(&mut self, tokens: &[i32], labels: &[i32], lr: f32) -> Result<f32> {
+        self.run_step("train_step", tokens, labels, lr, None)
+    }
+
+    /// One HDP-attention fine-tuning step (Fig. 11b).
+    pub fn hdp_step(&mut self, tokens: &[i32], labels: &[i32], lr: f32,
+                    knobs: HdpTrainKnobs) -> Result<f32> {
+        self.run_step("hdp_train_step", tokens, labels, lr, Some(knobs))
+    }
+
+    /// Train `steps` steps streaming from the dataset; returns the loss
+    /// curve segment. `log_every = 0` disables logging.
+    pub fn train(
+        &mut self,
+        dataset: Dataset,
+        seed: u64,
+        steps: usize,
+        lr: f32,
+        knobs: Option<HdpTrainKnobs>,
+        log_every: usize,
+    ) -> Result<Vec<f32>> {
+        let mut stream = Stream::new(dataset, Split::Train, self.seq_len, seed);
+        // Skip ahead past whatever earlier segments consumed.
+        for _ in 0..self.steps_done {
+            let _ = stream.next_batch(self.batch);
+        }
+        let mut curve = Vec::with_capacity(steps);
+        for i in 0..steps {
+            let (toks, labels) = stream.next_batch(self.batch);
+            let loss = match knobs {
+                None => self.step(&toks, &labels, lr)?,
+                Some(k) => self.hdp_step(&toks, &labels, lr, k)?,
+            };
+            curve.push(loss);
+            if log_every > 0 && (i + 1) % log_every == 0 {
+                let window = &curve[curve.len().saturating_sub(log_every)..];
+                let avg: f32 = window.iter().sum::<f32>() / window.len() as f32;
+                println!("step {:>5}  loss {:.4}", self.steps_done, avg);
+            }
+        }
+        Ok(curve)
+    }
+
+    /// Snapshot current parameters back to the host.
+    pub fn params(&self) -> Result<ParamStore> {
+        let spec = self.rt.model(&self.model)?;
+        ParamStore::from_literals(spec, &self.state[..self.n])
+    }
+}
+
+fn take_scalar(slot: &mut xla::Literal) -> xla::Literal {
+    std::mem::replace(slot, lit_scalar_f32(0.0))
+}

@@ -1,0 +1,5 @@
+//! Figure/table reproduction harness — one module per paper artifact.
+//! Each writes a CSV under `results/` and prints a summary; see
+//! DESIGN.md's experiment index and EXPERIMENTS.md for paper-vs-measured.
+
+pub mod figures;

@@ -1,0 +1,237 @@
+//! Manifest model: the typed view of `artifacts/manifest.json` written
+//! by `python/compile/aot.py`. Input/output order here *is* the PJRT
+//! calling convention.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: String, // "f32" | "i32"
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl EntrySpec {
+    /// Index of a named input (panics with context if missing —
+    /// manifest mismatches are programming errors).
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|i| i.name == name)
+            .ok_or_else(|| anyhow::anyhow!("no input '{name}'"))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|o| o.name == name)
+            .ok_or_else(|| anyhow::anyhow!("no output '{name}'"))
+    }
+}
+
+/// Model geometry as baked into the artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub d_ff: usize,
+    pub n_classes: usize,
+    pub d_head: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub config: ModelConfig,
+    /// Ordered (name, shape) — the parameter interchange contract.
+    pub params: Vec<(String, Vec<usize>)>,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+impl ModelSpec {
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn total_weights(&self) -> usize {
+        self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelSpec>,
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    Ok(j.as_arr()
+        .context("shape not an array")?
+        .iter()
+        .map(|d| d.as_usize().context("shape dim not a number"))
+        .collect::<Result<_>>()?)
+}
+
+fn io_of(j: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: j.req("name")?.as_str().context("io name")?.to_string(),
+        dtype: j.req("dtype")?.as_str().context("io dtype")?.to_string(),
+        shape: shape_of(j.req("shape")?)?,
+    })
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).context("manifest json")?;
+        let fmt = root.req("format")?.as_usize().context("format")?;
+        anyhow::ensure!(fmt == 1, "unsupported manifest format {fmt}");
+        let mut models = BTreeMap::new();
+        for (name, m) in root.req("models")?.as_obj().context("models")? {
+            let c = m.req("config")?;
+            let cfg = ModelConfig {
+                vocab_size: c.req("vocab_size")?.as_usize().context("vocab")?,
+                n_layers: c.req("n_layers")?.as_usize().context("layers")?,
+                d_model: c.req("d_model")?.as_usize().context("d_model")?,
+                n_heads: c.req("n_heads")?.as_usize().context("heads")?,
+                seq_len: c.req("seq_len")?.as_usize().context("seq_len")?,
+                d_ff: c.req("d_ff")?.as_usize().context("d_ff")?,
+                n_classes: c.req("n_classes")?.as_usize().context("classes")?,
+                d_head: c.req("d_head")?.as_usize().context("d_head")?,
+                train_batch: c.req("train_batch")?.as_usize().context("tb")?,
+                eval_batch: c.req("eval_batch")?.as_usize().context("eb")?,
+            };
+            let params = m
+                .req("params")?
+                .as_arr()
+                .context("params")?
+                .iter()
+                .map(|p| {
+                    Ok((
+                        p.req("name")?.as_str().context("param name")?.to_string(),
+                        shape_of(p.req("shape")?)?,
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let mut entries = BTreeMap::new();
+            for (ename, e) in m.req("entries")?.as_obj().context("entries")? {
+                let inputs = e
+                    .req("inputs")?
+                    .as_arr()
+                    .context("inputs")?
+                    .iter()
+                    .map(io_of)
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = e
+                    .req("outputs")?
+                    .as_arr()
+                    .context("outputs")?
+                    .iter()
+                    .map(io_of)
+                    .collect::<Result<Vec<_>>>()?;
+                entries.insert(
+                    ename.clone(),
+                    EntrySpec {
+                        file: e.req("file")?.as_str().context("file")?.to_string(),
+                        inputs,
+                        outputs,
+                    },
+                );
+            }
+            models.insert(
+                name.clone(),
+                ModelSpec { name: name.clone(), config: cfg, params, entries },
+            );
+        }
+        Ok(Manifest { models })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+ "format": 1,
+ "models": {
+  "tiny": {
+   "config": {"vocab_size": 256, "n_layers": 2, "d_model": 128,
+              "n_heads": 2, "seq_len": 64, "d_ff": 256, "n_classes": 2,
+              "d_head": 64, "train_batch": 32, "eval_batch": 32},
+   "params": [{"name": "tok_emb", "shape": [256, 128]},
+              {"name": "pos_emb", "shape": [64, 128]}],
+   "entries": {
+    "dense_fwd": {
+     "file": "tiny.dense_fwd.hlo.txt",
+     "inputs": [{"name": "param.tok_emb", "dtype": "f32", "shape": [256, 128]},
+                {"name": "tokens", "dtype": "i32", "shape": [32, 64]}],
+     "outputs": [{"name": "logits", "dtype": "f32", "shape": [32, 2]}]
+    }
+   }
+  }
+ }
+}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let tiny = &m.models["tiny"];
+        assert_eq!(tiny.config.n_heads, 2);
+        assert_eq!(tiny.config.d_head, 64);
+        assert_eq!(tiny.n_params(), 2);
+        assert_eq!(tiny.total_weights(), 256 * 128 + 64 * 128);
+        let e = &tiny.entries["dense_fwd"];
+        assert_eq!(e.file, "tiny.dense_fwd.hlo.txt");
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[1].dtype, "i32");
+        assert_eq!(e.input_index("tokens").unwrap(), 1);
+        assert_eq!(e.output_index("logits").unwrap(), 0);
+        assert!(e.input_index("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = SAMPLE.replace("\"format\": 1", "\"format\": 9");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let p = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if let Ok(text) = std::fs::read_to_string(p) {
+            let m = Manifest::parse(&text).unwrap();
+            assert!(m.models.contains_key("tiny"));
+            assert!(m.models.contains_key("base"));
+            for spec in m.models.values() {
+                for required in
+                    ["init", "dense_fwd", "hdp_fwd", "topk_fwd",
+                     "spatten_fwd", "train_step", "hdp_train_step",
+                     "probe_fwd", "hdp_attn_unit"]
+                {
+                    assert!(spec.entries.contains_key(required),
+                            "{}.{}", spec.name, required);
+                }
+            }
+        }
+    }
+}

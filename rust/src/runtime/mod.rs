@@ -1,0 +1,178 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/manifest.json` +
+//! `*.hlo.txt` written by `python/compile/aot.py`) and executes them on
+//! the CPU PJRT client. This is the only place the crate touches XLA;
+//! python never runs at inference time.
+//!
+//! Interchange notes (see /opt/xla-example/README.md):
+//! * HLO **text** is the format — `HloModuleProto::from_text_file`
+//!   reassigns instruction ids, avoiding the 64-bit-id protos of
+//!   jax ≥ 0.5 that xla_extension 0.5.1 rejects.
+//! * Entries are lowered with `return_tuple=True`, so every execution
+//!   returns one tuple literal that we decompose.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+pub use manifest::{EntrySpec, IoSpec, Manifest, ModelSpec};
+
+/// A loaded artifact bundle: PJRT client + lazily-compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    // Compilation is expensive (seconds for the big train-step modules);
+    // cache per (model, entry). Mutex: PJRT execution itself is
+    // thread-safe, we only guard the map.
+    cache: Mutex<HashMap<(String, String), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open `dir` (usually `artifacts/`), parse the manifest, create the
+    /// CPU PJRT client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {} — run `make artifacts` first", mpath.display()))?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.manifest
+            .models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model '{name}' not in manifest"))
+    }
+
+    /// Compile (or fetch from cache) one entry's executable.
+    pub fn executable(
+        &self,
+        model: &str,
+        entry: &str,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let key = (model.to_string(), entry.to_string());
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(std::sync::Arc::clone(exe));
+        }
+        let spec = self
+            .model(model)?
+            .entries
+            .get(entry)
+            .ok_or_else(|| anyhow::anyhow!("entry '{model}.{entry}' not in manifest"))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {model}.{entry}"))?,
+        );
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(key, std::sync::Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute `model.entry` with positional inputs (manifest order) and
+    /// return the flattened tuple outputs.
+    pub fn execute(
+        &self,
+        model: &str,
+        entry: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let spec = &self.model(model)?.entries[entry];
+        anyhow::ensure!(
+            inputs.len() == spec.inputs.len(),
+            "{model}.{entry}: got {} inputs, manifest wants {}",
+            inputs.len(),
+            spec.inputs.len()
+        );
+        let exe = self.executable(model, entry)?;
+        self.execute_prepared(&exe, inputs)
+    }
+
+    /// Execute an already-compiled executable (hot path: no map lookup,
+    /// no spec validation).
+    pub fn execute_prepared(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+/// f32 tensor -> literal with shape.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// i32 tensor -> literal with shape.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// f32 scalar literal.
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// i32 scalar literal.
+pub fn lit_scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Literal -> Vec<f32>.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need artifacts live in rust/tests/ (integration)
+    // so `cargo test --lib` stays artifact-free. Literal helpers are
+    // testable standalone.
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.element_count(), 6);
+    }
+
+    #[test]
+    fn literal_scalar() {
+        let l = lit_scalar_f32(2.5);
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 2.5);
+        let i = lit_scalar_i32(-7);
+        assert_eq!(i.get_first_element::<i32>().unwrap(), -7);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_errors() {
+        assert!(lit_f32(&[1.0, 2.0, 3.0], &[2, 2]).is_err());
+    }
+}

@@ -1,0 +1,243 @@
+//! Multi-core HDP accelerator: heads are distributed across cores
+//! (longest-processing-time-first once sizes are known, round-robin for
+//! the estimate path); chip latency is the slowest core, bounded below
+//! by shared DRAM bandwidth; energy adds across cores.
+
+use crate::attention::hdp::HdpParams;
+use crate::tensor::Tensor;
+
+use super::config::SimConfig;
+use super::core::{cost_head, cost_head_dense, run_head, HeadRun, Report};
+
+/// Aggregate report of one attention layer (or a whole model).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ChipReport {
+    /// Chip latency in cycles (max over cores, DRAM-bound if needed).
+    pub cycles: f64,
+    /// Total energy over all cores.
+    pub energy_pj: f64,
+    pub dram_bytes: f64,
+    pub macs: f64,
+    pub heads_total: usize,
+    pub heads_pruned: usize,
+    pub mean_kept_density: f64,
+}
+
+impl ChipReport {
+    pub fn seconds(&self, cfg: &SimConfig) -> f64 {
+        cfg.cycles_to_seconds(self.cycles)
+    }
+
+    pub fn add_serial(&mut self, o: &ChipReport) {
+        // Layers run back to back.
+        self.cycles += o.cycles;
+        self.energy_pj += o.energy_pj;
+        self.dram_bytes += o.dram_bytes;
+        self.macs += o.macs;
+        let t = (self.heads_total + o.heads_total).max(1);
+        self.mean_kept_density = (self.mean_kept_density
+            * self.heads_total as f64
+            + o.mean_kept_density * o.heads_total as f64)
+            / t as f64;
+        self.heads_total += o.heads_total;
+        self.heads_pruned += o.heads_pruned;
+    }
+}
+
+/// Pack per-head reports onto cores and roll up the chip view.
+fn pack(cfg: &SimConfig, reports: &[Report], densities: &[f32],
+        pruned: usize) -> ChipReport {
+    let mut cores = vec![0.0f64; cfg.n_cores];
+    // LPT: longest first onto the least-loaded core.
+    let mut order: Vec<usize> = (0..reports.len()).collect();
+    order.sort_by(|&a, &b| reports[b].cycles.partial_cmp(&reports[a].cycles).unwrap());
+    for &i in &order {
+        let min = cores
+            .iter_mut()
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+            .unwrap();
+        *min += reports[i].cycles;
+    }
+    let compute_cycles = cores.iter().cloned().fold(0.0, f64::max);
+    let total_dram: f64 = reports.iter().map(|r| r.dram_bytes).sum();
+    // Shared DRAM: the chip can never finish faster than the bus.
+    let cycles = compute_cycles.max(total_dram / cfg.dram_bytes_per_cycle);
+    ChipReport {
+        cycles,
+        energy_pj: reports.iter().map(|r| r.energy_pj).sum(),
+        dram_bytes: total_dram,
+        macs: reports.iter().map(|r| r.macs).sum(),
+        heads_total: reports.len(),
+        heads_pruned: pruned,
+        mean_kept_density: if densities.is_empty() {
+            0.0
+        } else {
+            densities.iter().map(|&d| d as f64).sum::<f64>() / densities.len() as f64
+        },
+    }
+}
+
+/// Functional + cycle-accurate pass over one layer's heads.
+/// `heads[i] = (iq, fq, ik, fk, v)`.
+pub fn run_layer(
+    cfg: &SimConfig,
+    heads: &[(&Tensor, &Tensor, &Tensor, &Tensor, &Tensor)],
+    params: HdpParams,
+) -> (Vec<HeadRun>, ChipReport) {
+    let runs: Vec<HeadRun> = heads
+        .iter()
+        .map(|(iq, fq, ik, fk, v)| run_head(cfg, iq, fq, ik, fk, v, params))
+        .collect();
+    let reports: Vec<Report> = runs.iter().map(|r| r.report).collect();
+    let dens: Vec<f32> = runs.iter().map(|r| r.out.kept_density).collect();
+    let pruned = runs.iter().filter(|r| !r.out.head_kept).count();
+    let chip = pack(cfg, &reports, &dens, pruned);
+    (runs, chip)
+}
+
+/// Closed-form estimate for sweeps: `n_heads` heads of `[l, d_head]`
+/// with a mean kept-block density and a fraction of heads pruned early.
+pub fn estimate_layer(
+    cfg: &SimConfig,
+    l: usize,
+    d_head: usize,
+    n_heads: usize,
+    kept_density: f32,
+    head_kept_frac: f32,
+    use_ff: bool,
+) -> ChipReport {
+    let kept_heads = (head_kept_frac * n_heads as f32).round() as usize;
+    let mut reports = Vec::with_capacity(n_heads);
+    let mut dens = Vec::with_capacity(n_heads);
+    for i in 0..n_heads {
+        let kept = i < kept_heads;
+        reports.push(cost_head(cfg, l, d_head, None, kept_density, kept, use_ff));
+        dens.push(kept_density);
+    }
+    pack(cfg, &reports, &dens, n_heads - kept_heads)
+}
+
+/// Dense baseline on the same multi-core substrate.
+pub fn estimate_layer_dense(
+    cfg: &SimConfig,
+    l: usize,
+    d_head: usize,
+    n_heads: usize,
+) -> ChipReport {
+    let reports: Vec<Report> =
+        (0..n_heads).map(|_| cost_head_dense(cfg, l, d_head)).collect();
+    let dens = vec![1.0f32; n_heads];
+    pack(cfg, &reports, &dens, 0)
+}
+
+/// Whole-model estimate: `n_layers` attention layers back to back.
+pub fn estimate_model(
+    cfg: &SimConfig,
+    n_layers: usize,
+    l: usize,
+    d_head: usize,
+    n_heads: usize,
+    kept_density: f32,
+    head_kept_frac: f32,
+    use_ff: bool,
+) -> ChipReport {
+    let mut total = ChipReport::default();
+    for _ in 0..n_layers {
+        total.add_serial(&estimate_layer(
+            cfg, l, d_head, n_heads, kept_density, head_kept_frac, use_ff,
+        ));
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{quant_split_tensor, QuantProfile};
+    use crate::util::rng::SplitMix64;
+
+    fn head_tensors(seed: u64, l: usize, dh: usize)
+        -> (Tensor, Tensor, Tensor, Tensor, Tensor) {
+        let mut r = SplitMix64::new(seed);
+        let mut randv = |n: usize| -> Vec<f32> {
+            (0..n).map(|_| r.next_normal() as f32 * 2.0).collect()
+        };
+        let prof = QuantProfile::Q4_12;
+        let (iq, fq, _) = quant_split_tensor(&randv(l * dh), prof);
+        let (ik, fk, _) = quant_split_tensor(&randv(l * dh), prof);
+        (
+            Tensor::new(&[l, dh], iq),
+            Tensor::new(&[l, dh], fq),
+            Tensor::new(&[l, dh], ik),
+            Tensor::new(&[l, dh], fk),
+            Tensor::new(&[l, dh], randv(l * dh)),
+        )
+    }
+
+    #[test]
+    fn multicore_speedup() {
+        // Same heads on edge (1 core) vs server (4 cores): the chip
+        // latency must shrink, energy per head must not.
+        let heads: Vec<_> = (0..8).map(|i| head_tensors(i, 64, 32)).collect();
+        let refs: Vec<_> = heads
+            .iter()
+            .map(|(a, b, c, d, e)| (a, b, c, d, e))
+            .collect();
+        let p = HdpParams { rho: 0.3, tau: -1.0, inv_scale: 0.05, ..Default::default() };
+        let (_, edge) = run_layer(&SimConfig::edge(), &refs, p);
+        let (_, server) = run_layer(&SimConfig::server(), &refs, p);
+        assert!(server.cycles < edge.cycles / 2.0,
+                "server {} vs edge {}", server.cycles, edge.cycles);
+    }
+
+    #[test]
+    fn estimate_vs_functional_agree() {
+        let cfg = SimConfig::edge();
+        let heads: Vec<_> = (0..4).map(|i| head_tensors(100 + i, 64, 32)).collect();
+        let refs: Vec<_> = heads.iter().map(|(a, b, c, d, e)| (a, b, c, d, e)).collect();
+        let p = HdpParams { rho: 0.4, tau: -1.0, inv_scale: 0.05, ..Default::default() };
+        let (runs, chip) = run_layer(&cfg, &refs, p);
+        let mean_d = runs.iter().map(|r| r.out.kept_density).sum::<f32>() / 4.0;
+        let est = estimate_layer(&cfg, 64, 32, 4, mean_d, 1.0, false);
+        let rel = (est.cycles - chip.cycles).abs() / chip.cycles;
+        assert!(rel < 0.2, "estimate off by {rel}");
+    }
+
+    #[test]
+    fn head_pruning_reduces_chip_cost() {
+        let cfg = SimConfig::edge();
+        let all = estimate_layer(&cfg, 128, 32, 8, 0.5, 1.0, false);
+        let some = estimate_layer(&cfg, 128, 32, 8, 0.5, 0.75, false);
+        assert!(some.cycles < all.cycles);
+        assert!(some.energy_pj < all.energy_pj);
+        assert_eq!(some.heads_pruned, 2);
+    }
+
+    #[test]
+    fn hdp_faster_than_dense_at_paper_sparsity() {
+        // Paper's net result: ~70% block sparsity + ~15% head pruning.
+        let cfg = SimConfig::edge();
+        let hdp = estimate_model(&cfg, 4, 128, 32, 8, 0.30, 0.85, false);
+        let dense = {
+            let mut t = ChipReport::default();
+            for _ in 0..4 {
+                t.add_serial(&estimate_layer_dense(&cfg, 128, 32, 8));
+            }
+            t
+        };
+        let speedup = dense.cycles / hdp.cycles;
+        let esave = dense.energy_pj / hdp.energy_pj;
+        assert!(speedup > 1.5, "speedup {speedup}");
+        assert!(esave > 1.4, "energy ratio {esave}");
+        assert!(hdp.dram_bytes < dense.dram_bytes);
+    }
+
+    #[test]
+    fn model_estimate_scales_with_layers() {
+        let cfg = SimConfig::edge();
+        let one = estimate_model(&cfg, 1, 64, 32, 4, 0.5, 1.0, false);
+        let four = estimate_model(&cfg, 4, 64, 32, 4, 0.5, 1.0, false);
+        assert!((four.cycles / one.cycles - 4.0).abs() < 1e-6);
+        assert_eq!(four.heads_total, 16);
+    }
+}

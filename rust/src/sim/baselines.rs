@@ -1,0 +1,337 @@
+//! Baseline accelerator cost models on the *same* PE/DRAM/softmax
+//! substrates — each implements its paper's pruning policy, so the
+//! comparison isolates policy, not process node (DESIGN.md
+//! §Substitutions). All models take the measured attention sparsity of
+//! the workload as input and return a [`ChipReport`].
+//!
+//! | model      | prunes                      | decision cost           | DRAM behaviour            |
+//! |------------|-----------------------------|-------------------------|---------------------------|
+//! | dense      | nothing                     | —                       | fetch everything          |
+//! | A3 [19]    | near-zero scores (elements) | sort-based candidates   | **fetch everything** (on-chip approximation only) |
+//! | SpAtten[20]| tokens + heads, cascaded    | Top-K unit (sorter)     | fetch kept tokens         |
+//! | Energon[15]| elements, multi-round       | low-precision pre-pass  | element-granular (uncoalesced) fetch |
+//! | AccelTran  | elements below threshold    | free (comparator)       | fetch everything (dense layout) |
+//! | HDP (ours) | 2×2 blocks + early heads    | integer pre-pass + SE   | FUM block-coalesced fetch |
+
+use super::accelerator::ChipReport;
+use super::config::{MacKind, SimConfig};
+use super::memory::{fetch_full, k_operand_traffic};
+use super::pe_array::{masked_matmul_cost, matmul_cost};
+use super::softmax_unit::softmax_cost;
+
+/// Dense K-operand fetch shared by the element-granular baselines.
+fn k_fetch_dense(cfg: &SimConfig, l: usize, dh: usize)
+    -> super::memory::Traffic {
+    let nb = (l / cfg.block) as f64;
+    k_operand_traffic(cfg, l, dh, cfg.bytes_per_elem(), nb * nb, nb * nb, nb)
+}
+
+/// Workload description shared by every baseline.
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub d_head: usize,
+    pub n_heads: usize,
+    /// Fraction of attention entries that matter (measured on the
+    /// trained model; the same number HDP's blocks approximate).
+    pub kept_density: f32,
+    /// Fraction of heads that are genuinely useful.
+    pub head_kept_frac: f32,
+}
+
+fn roll_up(cfg: &SimConfig, per_head: super::core::Report, w: &Workload,
+           heads_pruned_frac: f32) -> ChipReport {
+    let heads = w.n_layers * w.n_heads;
+    let per_core = heads as f64 / cfg.n_cores as f64;
+    let compute = per_head.cycles * per_core.ceil();
+    let dram = per_head.dram_bytes * heads as f64;
+    ChipReport {
+        cycles: compute.max(dram / cfg.dram_bytes_per_cycle),
+        energy_pj: per_head.energy_pj * heads as f64,
+        dram_bytes: dram,
+        macs: per_head.macs * heads as f64,
+        heads_total: heads,
+        heads_pruned: (heads_pruned_frac * heads as f32).round() as usize,
+        mean_kept_density: w.kept_density as f64,
+    }
+}
+
+/// Dense attention accelerator (no sparsity support).
+pub fn dense(cfg: &SimConfig, w: &Workload) -> ChipReport {
+    roll_up(cfg, super::core::cost_head_dense(cfg, w.seq_len, w.d_head), w, 0.0)
+}
+
+/// A3-like: approximates/skips near-zero score computation via a
+/// sort-based candidate search, but *requires loading all data onto the
+/// chip* — no DRAM saving (its documented limitation).
+pub fn a3(cfg: &SimConfig, w: &Workload) -> ChipReport {
+    let (l, dh) = (w.seq_len, w.d_head);
+    let d = w.kept_density as f64;
+    let mut r = super::core::Report::default();
+    // full Q/K fetch — the no-DRAM-saving property
+    let mut t = fetch_full(cfg, l, dh);
+    t.add(k_fetch_dense(cfg, l, dh));
+    // candidate search: per query row, a sorted-key scan costs ~dh log dh
+    let search_cycles = (l as f64) * (dh as f64) * (dh as f64).log2() / cfg.macs_per_cycle();
+    // score compute only for kept candidates, full width
+    let qk = masked_matmul_cost(cfg, l, dh, l, d, MacKind::Full);
+    r.cycles += (qk.cycles + search_cycles).max(t.dram_cycles(cfg));
+    r.energy_pj += qk.energy_pj + search_cycles * 0.1 + t.energy_pj(cfg);
+    r.dram_bytes += t.dram_bytes;
+    r.macs += qk.macs;
+
+    let sm = softmax_cost(cfg, l, d * (l * l) as f64);
+    r.cycles += sm.cycles;
+    r.energy_pj += sm.energy_pj;
+
+    let mut t2 = fetch_full(cfg, l, dh);
+    t2.add(fetch_full(cfg, l, dh));
+    let av = masked_matmul_cost(cfg, l, l, dh, d, MacKind::Full);
+    r.cycles += av.cycles.max(t2.dram_cycles(cfg));
+    r.energy_pj += av.energy_pj + t2.energy_pj(cfg);
+    r.dram_bytes += t2.dram_bytes;
+    r.macs += av.macs;
+    roll_up(cfg, r, w, 0.0)
+}
+
+/// SpAtten-like: cascaded token pruning (rows/cols of the score matrix
+/// shrink as layers go) + cascaded head pruning decided *after* full
+/// head computation, both via Top-K sorters.
+pub fn spatten(cfg: &SimConfig, w: &Workload) -> ChipReport {
+    let heads = w.n_layers * w.n_heads;
+    // Tokens kept decay linearly toward the same net element density
+    // HDP reaches; heads decay toward head_kept_frac by the last layer.
+    let mut total = ChipReport::default();
+    let target_tok = (w.kept_density as f64).sqrt(); // row×col factor
+    for layer in 0..w.n_layers {
+        let fl = (layer + 1) as f64 / w.n_layers as f64;
+        let tok_frac = 1.0 - (1.0 - target_tok) * fl;
+        let head_frac = 1.0 - (1.0 - w.head_kept_frac as f64) * fl;
+        let l_eff = ((w.seq_len as f64) * tok_frac).ceil() as usize;
+        let heads_alive = ((w.n_heads as f64) * head_frac).ceil() as usize;
+        let mut per_head = super::core::cost_head_dense(cfg, l_eff, w.d_head);
+        // Top-K token selection: bitonic-ish sorter, l log^2 l cycles.
+        let ll = w.seq_len as f64;
+        let topk_cycles = ll * ll.log2() * ll.log2() / cfg.macs_per_cycle();
+        per_head.cycles += topk_cycles;
+        per_head.energy_pj += topk_cycles * 0.2;
+        let wl = Workload { n_layers: 1, n_heads: heads_alive, ..*w };
+        total.add_serial(&roll_up(cfg, per_head, &wl, 0.0));
+    }
+    total.heads_total = heads;
+    total.heads_pruned =
+        heads - ((w.head_kept_frac * heads as f32).round() as usize).min(heads);
+    total
+}
+
+/// Energon-like: a low-precision (int-field) filtering pre-pass over
+/// all Q·K, then full-precision compute for selected elements. The
+/// selected-element fetch is *uncoalesced* (element-granular sparsity):
+/// every selected element pays a whole burst.
+pub fn energon(cfg: &SimConfig, w: &Workload) -> ChipReport {
+    let (l, dh) = (w.seq_len, w.d_head);
+    let d = w.kept_density as f64;
+    let nb = (l / cfg.block) as f64;
+    let mut r = super::core::Report::default();
+    // pre-pass: low-precision over everything (mixed precision is its
+    // trick — same idea as HDP's integer pass)
+    let int_bytes = cfg.widths.int_field as f64 / 8.0;
+    let mut t = k_operand_traffic(cfg, l, dh, int_bytes, nb * nb, nb * nb, nb);
+    t.dram_bytes += l as f64 * dh as f64 * int_bytes;
+    t.sram_bytes += l as f64 * dh as f64 * int_bytes;
+    let pre = matmul_cost(cfg, l, dh, l, MacKind::IntInt);
+    r.cycles += pre.cycles.max(t.dram_cycles(cfg));
+    r.energy_pj += pre.energy_pj + t.energy_pj(cfg);
+    r.dram_bytes += t.dram_bytes;
+    r.macs += pre.macs;
+
+    // second round: full-precision for the selected *elements*. The
+    // sparsity is element-granular (not block-coalesced), so streamed
+    // fetches pay a ~1.5x burst-fragmentation premium — the irregular-
+    // access weakness the paper points at.
+    let sel = d * (l * l) as f64;
+    let touched = nb * (1.0 - (1.0 - d).powf(nb));
+    let mut t2 = k_operand_traffic(
+        cfg, l, dh, cfg.bytes_per_elem(), d * nb * nb, nb * nb, touched);
+    t2.dram_bytes *= 1.5;
+    t2.sram_bytes *= 1.5;
+    let qk = masked_matmul_cost(cfg, l, dh, l, d, MacKind::Full);
+    r.cycles += qk.cycles.max(t2.dram_cycles(cfg));
+    r.energy_pj += qk.energy_pj + t2.energy_pj(cfg);
+    r.dram_bytes += t2.dram_bytes;
+    r.macs += qk.macs;
+
+    let sm = softmax_cost(cfg, l, sel);
+    r.cycles += sm.cycles;
+    r.energy_pj += sm.energy_pj;
+
+    let mut t3 = fetch_full(cfg, l, dh);
+    t3.add(fetch_full(cfg, l, dh));
+    let av = masked_matmul_cost(cfg, l, l, dh, d, MacKind::Full);
+    r.cycles += av.cycles.max(t3.dram_cycles(cfg));
+    r.energy_pj += av.energy_pj + t3.energy_pj(cfg);
+    r.dram_bytes += t3.dram_bytes;
+    r.macs += av.macs;
+    roll_up(cfg, r, w, 0.0)
+}
+
+/// AccelTran-like: threshold (comparator) element pruning inside the
+/// matmuls; dense data layout, so DRAM traffic stays dense and skipped
+/// elements still cost pipeline bubbles (half a slot).
+pub fn acceltran(cfg: &SimConfig, w: &Workload) -> ChipReport {
+    let (l, dh) = (w.seq_len, w.d_head);
+    let d = w.kept_density as f64;
+    let eff = d + (1.0 - d) * 0.5; // bubbles on skipped elements
+    let mut r = super::core::Report::default();
+    let mut t = fetch_full(cfg, l, dh);
+    t.add(k_fetch_dense(cfg, l, dh)); // dense layout: fetch everything
+    let qk = masked_matmul_cost(cfg, l, dh, l, eff, MacKind::Full);
+    // energy only for the really-computed part:
+    let qk_real = masked_matmul_cost(cfg, l, dh, l, d, MacKind::Full);
+    r.cycles += qk.cycles.max(t.dram_cycles(cfg));
+    r.energy_pj += qk_real.energy_pj + t.energy_pj(cfg);
+    r.dram_bytes += t.dram_bytes;
+    r.macs += qk_real.macs;
+
+    let sm = softmax_cost(cfg, l, d * (l * l) as f64);
+    r.cycles += sm.cycles;
+    r.energy_pj += sm.energy_pj;
+
+    let mut t2 = fetch_full(cfg, l, dh);
+    t2.add(fetch_full(cfg, l, dh));
+    let av = masked_matmul_cost(cfg, l, l, dh, eff, MacKind::Full);
+    let av_real = masked_matmul_cost(cfg, l, l, dh, d, MacKind::Full);
+    r.cycles += av.cycles.max(t2.dram_cycles(cfg));
+    r.energy_pj += av_real.energy_pj + t2.energy_pj(cfg);
+    r.dram_bytes += t2.dram_bytes;
+    r.macs += av_real.macs;
+    roll_up(cfg, r, w, 0.0)
+}
+
+/// HDP itself through the same closed-form interface.
+pub fn hdp(cfg: &SimConfig, w: &Workload) -> ChipReport {
+    super::accelerator::estimate_model(
+        cfg, w.n_layers, w.seq_len, w.d_head, w.n_heads,
+        w.kept_density, w.head_kept_frac, false,
+    )
+}
+
+/// Table I of the paper: qualitative capability matrix, kept in code so
+/// the repro harness prints what the implementations actually support.
+pub fn table1() -> Vec<(&'static str, [bool; 6])> {
+    // columns: head pruning, block pruning, approximation, tiled matmul,
+    //          sparsity-aware, dynamic inference
+    vec![
+        ("A3", [false, false, true, false, false, true]),
+        ("SpAtten", [true, false, false, false, true, true]),
+        ("Energon", [false, false, false, false, true, true]),
+        ("AccelTran", [false, false, false, true, true, true]),
+        ("HDP (ours)", [true, true, true, true, true, true]),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn workload() -> Workload {
+        Workload {
+            n_layers: 4,
+            seq_len: 128,
+            d_head: 32,
+            n_heads: 8,
+            kept_density: 0.30,
+            head_kept_frac: 0.85,
+        }
+    }
+
+    #[test]
+    fn hdp_wins_energy_against_all() {
+        // The paper's headline: HDP saves energy vs every baseline at
+        // its operating point (cheap integer decisions + FUM + early
+        // head pruning).
+        let cfg = SimConfig::edge();
+        let w = workload();
+        let ours = hdp(&cfg, &w).energy_pj;
+        for (name, rep) in [
+            ("dense", dense(&cfg, &w)),
+            ("a3", a3(&cfg, &w)),
+            ("energon", energon(&cfg, &w)),
+            ("acceltran", acceltran(&cfg, &w)),
+        ] {
+            assert!(ours < rep.energy_pj, "{name}: ours {ours} vs {}", rep.energy_pj);
+        }
+    }
+
+    #[test]
+    fn a3_saves_no_dram() {
+        let cfg = SimConfig::edge();
+        let w = workload();
+        let d = dense(&cfg, &w);
+        let a = a3(&cfg, &w);
+        assert!((a.dram_bytes - d.dram_bytes).abs() / d.dram_bytes < 0.01,
+                "A3 must fetch everything");
+    }
+
+    #[test]
+    fn hdp_saves_dram_at_long_sequences() {
+        // FUM pays off once K no longer fits in the core buffer and must
+        // be re-streamed (the paper's l >= 512 regime).
+        let cfg = SimConfig::edge();
+        let w = Workload { seq_len: 512, d_head: 64, ..workload() };
+        let d = dense(&cfg, &w);
+        let h = hdp(&cfg, &w);
+        assert!(h.dram_bytes < 0.7 * d.dram_bytes,
+                "hdp {} vs dense {}", h.dram_bytes, d.dram_bytes);
+    }
+
+    #[test]
+    fn everyone_beats_dense_on_cycles() {
+        let cfg = SimConfig::edge();
+        let w = workload();
+        let d = dense(&cfg, &w).cycles;
+        for (name, rep) in [
+            ("a3", a3(&cfg, &w)),
+            ("spatten", spatten(&cfg, &w)),
+            ("energon", energon(&cfg, &w)),
+            ("acceltran", acceltran(&cfg, &w)),
+            ("hdp", hdp(&cfg, &w)),
+        ] {
+            assert!(rep.cycles < d, "{name} {} vs dense {d}", rep.cycles);
+        }
+    }
+
+    #[test]
+    fn speedup_grows_with_seq_len() {
+        // Attention dominance grows quadratically; HDP's advantage with it.
+        let cfg = SimConfig::edge();
+        let mut last = 0.0;
+        for l in [64usize, 128, 256, 512] {
+            let w = Workload { seq_len: l, ..workload() };
+            let s = dense(&cfg, &w).cycles / hdp(&cfg, &w).cycles;
+            assert!(s > last * 0.8, "speedup should not collapse: {s} at l={l}");
+            last = s;
+        }
+        assert!(last > 1.8, "long-sequence speedup {last}");
+    }
+
+    #[test]
+    fn energon_pays_uncoalesced_dram_premium_vs_hdp() {
+        let cfg = SimConfig::edge();
+        let w = workload();
+        assert!(energon(&cfg, &w).dram_bytes > hdp(&cfg, &w).dram_bytes);
+    }
+
+    #[test]
+    fn table1_matches_paper() {
+        let t = table1();
+        assert_eq!(t.len(), 5);
+        let hdp_row = t.iter().find(|(n, _)| n.starts_with("HDP")).unwrap();
+        assert!(hdp_row.1.iter().all(|&b| b), "HDP checks every column");
+        let a3_row = t.iter().find(|(n, _)| *n == "A3").unwrap();
+        assert!(a3_row.1[2] && !a3_row.1[0], "A3: approximation, no head pruning");
+        let sp = t.iter().find(|(n, _)| *n == "SpAtten").unwrap();
+        assert!(sp.1[0] && !sp.1[1], "SpAtten: head pruning, no block pruning");
+    }
+}

@@ -1,0 +1,206 @@
+//! Co-processor geometry, timing and energy model.
+//!
+//! The paper reports two ASIC instances, **HDP-Edge** and **HDP-Server**
+//! (§VI), without publishing the full PPA tables in the provided text;
+//! we therefore parameterize the simulator with an explicit,
+//! documented cost table and report *relative* latency/energy (which is
+//! what the comparisons claim). Energy constants follow the usual
+//! Horowitz-style scaling used by SpAtten/Energon evaluations:
+//!
+//! * a b-bit × c-bit multiply costs ~ (b·c)/(16·16) of a 16-bit MAC —
+//!   this is exactly why HDP's integer-only decision phase (4×4) and
+//!   dropped FQ·FK term (12×12) save energy;
+//! * off-chip DRAM access costs ~two orders of magnitude more per byte
+//!   than SRAM — why FUM (fetch-upon-mask) and early head pruning
+//!   dominate the savings at long sequence lengths.
+
+/// Fixed-point field widths used in cost scaling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Widths {
+    /// Total operand width in bits (sign + int + frac).
+    pub total: u32,
+    /// Integer field (incl. sign) — the decision phase's operand width.
+    pub int_field: u32,
+    /// Fraction field.
+    pub frac_field: u32,
+}
+
+pub const W16: Widths = Widths { total: 16, int_field: 4, frac_field: 12 };
+pub const W12: Widths = Widths { total: 12, int_field: 4, frac_field: 8 };
+
+/// Operand kinds for a MAC, used to scale multiplier energy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MacKind {
+    /// int × int (the Integer_atten pass).
+    IntInt,
+    /// int × frac (the two approximation fractions).
+    IntFrac,
+    /// frac × frac (only the exact/no-approximation arm computes this).
+    FracFrac,
+    /// full-width × full-width (dense baselines).
+    Full,
+}
+
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub name: &'static str,
+    pub n_cores: usize,
+    /// PE array geometry per core (pe_rows × pe_cols MACs per cycle).
+    pub pe_rows: usize,
+    pub pe_cols: usize,
+    pub freq_ghz: f64,
+    /// Off-chip bandwidth, bytes per cycle (per chip, shared by cores).
+    pub dram_bytes_per_cycle: f64,
+    /// Energy constants (picojoules).
+    pub e_mac16_pj: f64,
+    pub e_sram_pj_per_byte: f64,
+    pub e_dram_pj_per_byte: f64,
+    /// On-chip buffer per core (bytes) — decides whether the K operand
+    /// is resident or re-streamed per Q block-row (the regime where FUM
+    /// pays off, §IV-A).
+    pub sram_bytes: f64,
+    /// Softmax unit: parallel lanes, per-element exp cost and per-row
+    /// reciprocal cost.
+    pub softmax_lanes: f64,
+    pub e_exp_pj: f64,
+    pub exp_cycles_per_elem: f64,
+    pub recip_cycles_per_row: f64,
+    /// Sparsity engine per-theta processing cost.
+    pub se_cycles_per_block: f64,
+    pub e_se_pj_per_block: f64,
+    /// Operand widths (16-bit main profile, 12-bit SpAtten comparison).
+    pub widths: Widths,
+    /// Pruning block edge.
+    pub block: usize,
+}
+
+impl SimConfig {
+    /// Single-core edge instance (paper's HDP-Edge).
+    pub fn edge() -> SimConfig {
+        SimConfig {
+            name: "hdp-edge",
+            n_cores: 1,
+            pe_rows: 4,
+            pe_cols: 8,
+            freq_ghz: 1.0,
+            dram_bytes_per_cycle: 8.0, // ~8 GB/s @ 1 GHz (LPDDR4-class)
+            sram_bytes: 32.0 * 1024.0,
+            softmax_lanes: 8.0,
+            e_mac16_pj: 0.3,
+            e_sram_pj_per_byte: 0.15,
+            e_dram_pj_per_byte: 20.0,
+            e_exp_pj: 0.6,
+            exp_cycles_per_elem: 1.0,
+            recip_cycles_per_row: 4.0,
+            se_cycles_per_block: 1.0,
+            e_se_pj_per_block: 0.05,
+            widths: W16,
+            block: 2,
+        }
+    }
+
+    /// Multi-core server instance (paper's HDP-Server).
+    pub fn server() -> SimConfig {
+        SimConfig {
+            name: "hdp-server",
+            n_cores: 4,
+            pe_rows: 8,
+            pe_cols: 16,
+            freq_ghz: 1.0,
+            dram_bytes_per_cycle: 64.0, // ~64 GB/s @ 1 GHz (HBM-class slice)
+            sram_bytes: 128.0 * 1024.0,
+            ..Self::edge()
+        }
+    }
+
+    pub fn with_widths(mut self, w: Widths) -> Self {
+        self.widths = w;
+        self
+    }
+
+    /// MACs retired per cycle by one core's PE array at full width.
+    pub fn macs_per_cycle(&self) -> f64 {
+        (self.pe_rows * self.pe_cols) as f64
+    }
+
+    /// Precision-scalable MAC throughput (DVAFS-style): a multiplier
+    /// sized for `total`-bit operands retires `16/max(width)` narrow
+    /// MACs per cycle — this is what makes HDP's 4-bit integer decision
+    /// pass cheap in *time* as well as energy.
+    pub fn macs_per_cycle_for(&self, kind: MacKind) -> f64 {
+        let w = self.widths;
+        let widest = match kind {
+            MacKind::IntInt => w.int_field,
+            MacKind::IntFrac | MacKind::FracFrac => w.frac_field,
+            MacKind::Full => w.total,
+        };
+        self.macs_per_cycle() * (w.total as f64 / widest as f64)
+    }
+
+    /// Bytes per stored element in DRAM/SRAM.
+    pub fn bytes_per_elem(&self) -> f64 {
+        self.widths.total as f64 / 8.0
+    }
+
+    /// Energy of one MAC of the given kind (bit-width scaled).
+    pub fn mac_energy_pj(&self, kind: MacKind) -> f64 {
+        let w = self.widths;
+        let bits = |k: MacKind| -> f64 {
+            match k {
+                MacKind::IntInt => (w.int_field * w.int_field) as f64,
+                MacKind::IntFrac => (w.int_field * w.frac_field) as f64,
+                MacKind::FracFrac => (w.frac_field * w.frac_field) as f64,
+                MacKind::Full => (w.total * w.total) as f64,
+            }
+        };
+        self.e_mac16_pj * bits(kind) / (16.0 * 16.0)
+    }
+
+    pub fn cycles_to_seconds(&self, cycles: f64) -> f64 {
+        cycles / (self.freq_ghz * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_sane() {
+        let e = SimConfig::edge();
+        let s = SimConfig::server();
+        assert_eq!(e.n_cores, 1);
+        assert!(s.n_cores > e.n_cores);
+        assert!(s.macs_per_cycle() > e.macs_per_cycle());
+        assert!(s.dram_bytes_per_cycle > e.dram_bytes_per_cycle);
+        assert_eq!(e.bytes_per_elem(), 2.0);
+    }
+
+    #[test]
+    fn mac_energy_ordering() {
+        // int*int < int*frac < frac*frac < full — the approximation's
+        // energy argument in one assert.
+        let c = SimConfig::edge();
+        let ii = c.mac_energy_pj(MacKind::IntInt);
+        let if_ = c.mac_energy_pj(MacKind::IntFrac);
+        let ff = c.mac_energy_pj(MacKind::FracFrac);
+        let full = c.mac_energy_pj(MacKind::Full);
+        assert!(ii < if_ && if_ < ff && ff < full);
+        assert!((full - c.e_mac16_pj).abs() < 1e-12);
+        // dropped FQ·FK saves 144/256 = 56% of a full MAC's multiplier energy
+        assert!((ff / full - 144.0 / 256.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn twelve_bit_profile() {
+        let c = SimConfig::edge().with_widths(W12);
+        assert_eq!(c.bytes_per_elem(), 1.5);
+        assert!(c.mac_energy_pj(MacKind::Full) < 0.3);
+    }
+
+    #[test]
+    fn time_conversion() {
+        let c = SimConfig::edge();
+        assert!((c.cycles_to_seconds(1e9) - 1.0).abs() < 1e-12);
+    }
+}

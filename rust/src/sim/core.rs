@@ -1,0 +1,365 @@
+//! One HDP core's per-head pipeline (paper §IV-A workflow):
+//!
+//! 1. fetch integer fields of Q, K → `Integer_Q × Integer_K` on the PE
+//!    array, block importances tapped off the accumulators into the SE;
+//! 2. SE emits per-row masks (END_R) and the head decision (END_H);
+//! 3. head pruned → stop: the remaining ~¾ of compute and *all*
+//!    remaining DRAM traffic are skipped;
+//! 4. head kept → FUM-fetch fraction fields for surviving blocks only,
+//!    compute the two fraction products on the PE array, sum with the
+//!    adder, softmax the kept entries, multiply by V, write back.
+//!
+//! Each phase's latency is `max(compute, DRAM)` — the tiled dataflow
+//! double-buffers fetches behind compute (§IV-B).
+
+use crate::attention::hdp::{hdp_head, HdpHeadOutput, HdpParams};
+use crate::tensor::Tensor;
+
+use super::config::{MacKind, SimConfig};
+use super::memory::{fetch_full, k_operand_traffic, Traffic};
+use super::pe_array::{masked_matmul_cost, matmul_cost};
+use super::softmax_unit::softmax_cost;
+
+/// Mask statistics the memory model needs: kept blocks and the unions
+/// of touched block-rows / block-columns.
+#[derive(Debug, Clone, Copy)]
+struct MaskStats {
+    kept_blocks: f64,
+    total_blocks: f64,
+    union_rows: f64,
+    union_cols: f64,
+}
+
+impl MaskStats {
+    fn from_mask(mask: &Tensor) -> MaskStats {
+        let (nbr, nbc) = (mask.rows(), mask.cols());
+        let mut rows = vec![false; nbr];
+        let mut cols = vec![false; nbc];
+        let mut kept = 0.0;
+        for i in 0..nbr {
+            for j in 0..nbc {
+                if mask.at(i, j) > 0.0 {
+                    kept += 1.0;
+                    rows[i] = true;
+                    cols[j] = true;
+                }
+            }
+        }
+        MaskStats {
+            kept_blocks: kept,
+            total_blocks: (nbr * nbc) as f64,
+            union_rows: rows.iter().filter(|t| **t).count() as f64,
+            union_cols: cols.iter().filter(|t| **t).count() as f64,
+        }
+    }
+
+    /// Expected-value stats for a Bernoulli(d) mask over nb×nb blocks.
+    fn from_density(nb: f64, d: f64) -> MaskStats {
+        let touched = nb * (1.0 - (1.0 - d).powf(nb));
+        MaskStats {
+            kept_blocks: d * nb * nb,
+            total_blocks: nb * nb,
+            union_rows: touched,
+            union_cols: touched,
+        }
+    }
+}
+
+/// Cost record of one head pass (or an aggregate of many).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Report {
+    pub cycles: f64,
+    pub energy_pj: f64,
+    pub dram_bytes: f64,
+    pub sram_bytes: f64,
+    pub macs: f64,
+}
+
+impl Report {
+    pub fn add(&mut self, o: &Report) {
+        self.cycles += o.cycles;
+        self.energy_pj += o.energy_pj;
+        self.dram_bytes += o.dram_bytes;
+        self.sram_bytes += o.sram_bytes;
+        self.macs += o.macs;
+    }
+
+    pub fn seconds(&self, cfg: &SimConfig) -> f64 {
+        cfg.cycles_to_seconds(self.cycles)
+    }
+}
+
+/// A head pass with its functional result attached.
+#[derive(Debug)]
+pub struct HeadRun {
+    pub out: HdpHeadOutput,
+    pub report: Report,
+}
+
+fn phase(report: &mut Report, cfg: &SimConfig, compute_cycles: f64,
+         compute_energy: f64, traffic: Traffic) {
+    report.cycles += compute_cycles.max(traffic.dram_cycles(cfg));
+    report.energy_pj += compute_energy + traffic.energy_pj(cfg);
+    report.dram_bytes += traffic.dram_bytes;
+    report.sram_bytes += traffic.sram_bytes;
+}
+
+/// Run one head functionally *and* account its cycles/energy/traffic.
+pub fn run_head(
+    cfg: &SimConfig,
+    iq: &Tensor,
+    fq: &Tensor,
+    ik: &Tensor,
+    fk: &Tensor,
+    v: &Tensor,
+    params: HdpParams,
+) -> HeadRun {
+    let (l, dh) = (iq.rows(), iq.cols());
+    let out = hdp_head(iq, fq, ik, fk, v, params);
+    let report = cost_head(cfg, l, dh, Some(&out.mask), out.kept_density,
+                           out.head_kept, params.use_ff);
+    HeadRun { out, report }
+}
+
+/// Pure cost model of one head given its pruning outcome. When `mask`
+/// is present the FUM traffic is exact; otherwise it is estimated from
+/// the density (used by the closed-form sweeps).
+pub fn cost_head(
+    cfg: &SimConfig,
+    l: usize,
+    dh: usize,
+    mask: Option<&Tensor>,
+    kept_density: f32,
+    head_kept: bool,
+    use_ff: bool,
+) -> Report {
+    let mut r = Report::default();
+    let d = kept_density as f64;
+    let nb = (l / cfg.block) as f64;
+    let int_bytes = cfg.widths.int_field as f64 / 8.0;
+    let frac_bytes = cfg.widths.frac_field as f64 / 8.0;
+    let stats = match mask {
+        Some(m) => MaskStats::from_mask(m),
+        None => MaskStats::from_density(nb, d),
+    };
+    let dense_stats = MaskStats {
+        kept_blocks: nb * nb,
+        total_blocks: nb * nb,
+        union_rows: nb,
+        union_cols: nb,
+    };
+
+    // Phase 1: integer-field fetch (Q once, K resident-or-streamed) +
+    // Integer_Q × Integer_K with the SE consuming θ at stream rate.
+    let mut int_fetch = Traffic {
+        dram_bytes: l as f64 * dh as f64 * int_bytes, // IQ once
+        sram_bytes: l as f64 * dh as f64 * int_bytes,
+    };
+    int_fetch.add(k_operand_traffic(
+        cfg, l, dh, int_bytes,
+        dense_stats.kept_blocks, dense_stats.total_blocks, nb,
+    ));
+    let int_mm = matmul_cost(cfg, l, dh, l, MacKind::IntInt);
+    let se_cycles = nb * nb * cfg.se_cycles_per_block; // concurrent stream
+    let se_energy = nb * nb * 2.0 * cfg.e_se_pj_per_block;
+    phase(&mut r, cfg, int_mm.cycles.max(se_cycles),
+          int_mm.energy_pj + se_energy, int_fetch);
+    r.macs += int_mm.macs;
+
+    if !head_kept {
+        return r; // early head pruning: everything below is skipped
+    }
+
+    // Phase 2: FUM fraction fetch (FQ rows touched once; FK resident-
+    // or-streamed gated by the mask) + the two fraction products
+    // (+ exact FF term if approximation is disabled).
+    let mut fum = Traffic {
+        dram_bytes: stats.union_rows * cfg.block as f64 * dh as f64 * frac_bytes,
+        sram_bytes: stats.union_rows * cfg.block as f64 * dh as f64 * frac_bytes,
+    };
+    fum.add(k_operand_traffic(
+        cfg, l, dh, frac_bytes,
+        stats.kept_blocks, stats.total_blocks, stats.union_cols,
+    ));
+    let mut frac_mm = masked_matmul_cost(cfg, l, dh, l, d, MacKind::IntFrac);
+    frac_mm.add(masked_matmul_cost(cfg, l, dh, l, d, MacKind::IntFrac));
+    if use_ff {
+        frac_mm.add(masked_matmul_cost(cfg, l, dh, l, d, MacKind::FracFrac));
+    }
+    // Adder stage: 2 adds per kept score element, wide accumulators.
+    let kept_elems = d * (l * l) as f64;
+    let adder_cycles = kept_elems / cfg.macs_per_cycle();
+    let adder_energy = kept_elems * 2.0 * 0.01; // pJ-level adds
+    phase(&mut r, cfg, frac_mm.cycles + adder_cycles,
+          frac_mm.energy_pj + adder_energy, fum);
+    r.macs += frac_mm.macs;
+
+    // Phase 3: softmax over kept entries.
+    let sm = softmax_cost(cfg, l, kept_elems);
+    phase(&mut r, cfg, sm.cycles, sm.energy_pj, Traffic::default());
+
+    // Phase 4: fetch V (full precision) + attention_prob x V skipping
+    // pruned columns, then write the head output back to DRAM.
+    let v_fetch = fetch_full(cfg, l, dh);
+    let av = masked_matmul_cost(cfg, l, l, dh, d, MacKind::Full);
+    let writeback = fetch_full(cfg, l, dh);
+    let mut t = v_fetch;
+    t.add(writeback);
+    phase(&mut r, cfg, av.cycles, av.energy_pj, t);
+    r.macs += av.macs;
+
+    r
+}
+
+/// Dense-attention cost of the same head on the same substrate
+/// (no SE, no masks, full-width everything) — the speedup denominator.
+pub fn cost_head_dense(cfg: &SimConfig, l: usize, dh: usize) -> Report {
+    let mut r = Report::default();
+    let nb = (l / cfg.block) as f64;
+    let qk_fetch = {
+        let mut t = fetch_full(cfg, l, dh); // Q once
+        // K at full width, resident-or-streamed, nothing masked.
+        t.add(k_operand_traffic(cfg, l, dh, cfg.bytes_per_elem(),
+                                nb * nb, nb * nb, nb));
+        t
+    };
+    let qk = matmul_cost(cfg, l, dh, l, MacKind::Full);
+    phase(&mut r, cfg, qk.cycles, qk.energy_pj, qk_fetch);
+    r.macs += qk.macs;
+
+    let sm = softmax_cost(cfg, l, (l * l) as f64);
+    phase(&mut r, cfg, sm.cycles, sm.energy_pj, Traffic::default());
+
+    let mut t = fetch_full(cfg, l, dh); // V
+    t.add(fetch_full(cfg, l, dh)); // writeback
+    let av = matmul_cost(cfg, l, l, dh, MacKind::Full);
+    phase(&mut r, cfg, av.cycles, av.energy_pj, t);
+    r.macs += av.macs;
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{quant_split_tensor, QuantProfile};
+    use crate::util::prop::{check, prop_assert};
+    use crate::util::rng::SplitMix64;
+
+    fn inputs(seed: u64, l: usize, dh: usize)
+        -> (Tensor, Tensor, Tensor, Tensor, Tensor, f32) {
+        let mut r = SplitMix64::new(seed);
+        let mut randv = |n: usize| -> Vec<f32> {
+            (0..n).map(|_| r.next_normal() as f32 * 2.0).collect()
+        };
+        let prof = QuantProfile::Q4_12;
+        let (iq, fq, sq) = quant_split_tensor(&randv(l * dh), prof);
+        let (ik, fk, sk) = quant_split_tensor(&randv(l * dh), prof);
+        let inv = 1.0 / (sq * sk * (dh as f32).sqrt());
+        (
+            Tensor::new(&[l, dh], iq),
+            Tensor::new(&[l, dh], fq),
+            Tensor::new(&[l, dh], ik),
+            Tensor::new(&[l, dh], fk),
+            Tensor::new(&[l, dh], randv(l * dh)),
+            inv,
+        )
+    }
+
+    #[test]
+    fn pruned_head_is_much_cheaper() {
+        let cfg = SimConfig::edge();
+        let (iq, fq, ik, fk, v, inv) = inputs(1, 64, 32);
+        let kept = run_head(&cfg, &iq, &fq, &ik, &fk, &v,
+            HdpParams { rho: 0.0, tau: -1.0, inv_scale: inv, ..Default::default() });
+        let pruned = run_head(&cfg, &iq, &fq, &ik, &fk, &v,
+            HdpParams { rho: 0.0, tau: 1e9, inv_scale: inv, ..Default::default() });
+        assert!(kept.out.head_kept && !pruned.out.head_kept);
+        assert!(pruned.report.cycles < 0.5 * kept.report.cycles);
+        assert!(pruned.report.dram_bytes < 0.5 * kept.report.dram_bytes);
+        assert!(pruned.report.energy_pj < 0.5 * kept.report.energy_pj);
+    }
+
+    #[test]
+    fn hdp_beats_dense_on_cycles_and_energy() {
+        // The headline claim at moderate sparsity.
+        let cfg = SimConfig::edge();
+        let (iq, fq, ik, fk, v, inv) = inputs(2, 128, 32);
+        let run = run_head(&cfg, &iq, &fq, &ik, &fk, &v,
+            HdpParams { rho: 0.5, tau: -1.0, inv_scale: inv, ..Default::default() });
+        let dense = cost_head_dense(&cfg, 128, 32);
+        assert!(run.out.kept_density < 0.6, "{}", run.out.kept_density);
+        assert!(run.report.energy_pj < dense.energy_pj,
+                "hdp {} vs dense {}", run.report.energy_pj, dense.energy_pj);
+        assert!(run.report.cycles < dense.cycles);
+    }
+
+    #[test]
+    fn estimate_close_to_exact_mask_accounting() {
+        let cfg = SimConfig::edge();
+        let (iq, fq, ik, fk, v, inv) = inputs(3, 64, 32);
+        let run = run_head(&cfg, &iq, &fq, &ik, &fk, &v,
+            HdpParams { rho: 0.3, tau: -1.0, inv_scale: inv, ..Default::default() });
+        let est = cost_head(&cfg, 64, 32, None, run.out.kept_density,
+                            true, false);
+        let rel = (est.cycles - run.report.cycles).abs() / run.report.cycles;
+        assert!(rel < 0.15, "estimate off by {rel}");
+    }
+
+    #[test]
+    fn prop_cost_monotone_in_density() {
+        check("head cost monotone in kept density", 50, |g| {
+            let cfg = SimConfig::edge();
+            let l = *g.choice(&[32usize, 64, 128]);
+            let d1 = g.f32(0.0, 1.0);
+            let d2 = g.f32(0.0, 1.0);
+            let (lo, hi) = if d1 < d2 { (d1, d2) } else { (d2, d1) };
+            let a = cost_head(&cfg, l, 32, None, lo, true, false);
+            let b = cost_head(&cfg, l, 32, None, hi, true, false);
+            prop_assert(a.cycles <= b.cycles + 1e-6, "cycles")?;
+            prop_assert(a.energy_pj <= b.energy_pj + 1e-6, "energy")?;
+            prop_assert(a.dram_bytes <= b.dram_bytes + 1e-6, "dram")
+        });
+    }
+
+    #[test]
+    fn prop_skipped_macs_match_mask() {
+        // Work conservation: MACs performed = int pass + kept fraction
+        // passes + kept AV.
+        check("MAC accounting matches mask", 30, |g| {
+            let cfg = SimConfig::edge();
+            let l = *g.choice(&[16usize, 32]);
+            let dh = 16;
+            let (iq, fq, ik, fk, v, inv) = inputs(g.u64(0, 1 << 40), l, dh);
+            let rho = g.f32(-0.5, 0.9);
+            let run = run_head(&cfg, &iq, &fq, &ik, &fk, &v,
+                HdpParams { rho, tau: -1.0, inv_scale: inv, ..Default::default() });
+            let d = run.out.kept_density as f64;
+            let lf = l as f64;
+            let want = lf * lf * dh as f64 // int pass
+                + 2.0 * d * lf * lf * dh as f64 // frac passes
+                + d * lf * lf * dh as f64; // AV
+            prop_assert(
+                (run.report.macs - want).abs() / want < 1e-6,
+                format!("macs {} want {}", run.report.macs, want),
+            )
+        });
+    }
+
+    #[test]
+    fn use_ff_costs_more() {
+        let cfg = SimConfig::edge();
+        let approx = cost_head(&cfg, 64, 32, None, 0.5, true, false);
+        let exact = cost_head(&cfg, 64, 32, None, 0.5, true, true);
+        assert!(exact.energy_pj > approx.energy_pj);
+        assert!(exact.macs > approx.macs);
+    }
+
+    #[test]
+    fn dense_report_fields_populated() {
+        let cfg = SimConfig::server();
+        let d = cost_head_dense(&cfg, 128, 64);
+        assert!(d.cycles > 0.0 && d.energy_pj > 0.0 && d.dram_bytes > 0.0);
+        assert_eq!(d.macs, 2.0 * 128.0 * 128.0 * 64.0);
+        assert!(d.seconds(&cfg) > 0.0);
+    }
+}

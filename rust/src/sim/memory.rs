@@ -1,0 +1,213 @@
+//! Memory system model: off-chip DRAM (bandwidth + energy per byte),
+//! on-chip SRAM buffers, and the FUM (Fetch-Upon-Mask) accounting that
+//! turns the block mask into saved DRAM traffic (paper §IV-A: "If the
+//! mask value is 0 ... the corresponding K values will not be fetched").
+
+use crate::tensor::Tensor;
+
+use super::config::SimConfig;
+
+/// Accumulated traffic of one pipeline stage / head / layer.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Traffic {
+    pub dram_bytes: f64,
+    pub sram_bytes: f64,
+}
+
+impl Traffic {
+    pub fn add(&mut self, o: Traffic) {
+        self.dram_bytes += o.dram_bytes;
+        self.sram_bytes += o.sram_bytes;
+    }
+
+    /// Cycles to stream the DRAM traffic at the configured bandwidth
+    /// (SRAM is assumed to keep pace with the PEs).
+    pub fn dram_cycles(&self, cfg: &SimConfig) -> f64 {
+        self.dram_bytes / cfg.dram_bytes_per_cycle
+    }
+
+    pub fn energy_pj(&self, cfg: &SimConfig) -> f64 {
+        self.dram_bytes * cfg.e_dram_pj_per_byte
+            + self.sram_bytes * cfg.e_sram_pj_per_byte
+    }
+}
+
+/// Traffic of fetching a full `[rows, cols]` operand from DRAM once
+/// (plus writing it through SRAM).
+pub fn fetch_full(cfg: &SimConfig, rows: usize, cols: usize) -> Traffic {
+    let bytes = rows as f64 * cols as f64 * cfg.bytes_per_elem();
+    Traffic { dram_bytes: bytes, sram_bytes: bytes }
+}
+
+/// Does a `[l, d_head]` operand with `field_bytes` per element fit in
+/// the core's SRAM (leaving half the buffer for scores/accumulators)?
+pub fn operand_resident(cfg: &SimConfig, l: usize, d_head: usize,
+                        field_bytes: f64) -> bool {
+    (l * d_head) as f64 * field_bytes <= cfg.sram_bytes / 2.0
+}
+
+/// K-operand traffic for one head's score pass, honoring SRAM capacity.
+///
+/// * Resident: K's field is fetched **once**; with a mask, only the
+///   union of block-columns that appear in any kept block.
+/// * Streamed (the long-sequence regime): K is re-streamed per Q
+///   block-row and FUM skips masked blocks at stream rate — traffic is
+///   proportional to *kept blocks*, which is where the paper's memory
+///   saving comes from.
+///
+/// `kept_blocks`/`total_blocks` describe the mask; `union_cols` is the
+/// number of block-columns touched by at least one kept block.
+pub fn k_operand_traffic(
+    cfg: &SimConfig,
+    l: usize,
+    d_head: usize,
+    field_bytes: f64,
+    kept_blocks: f64,
+    total_blocks: f64,
+    union_cols: f64,
+) -> Traffic {
+    let b = cfg.block as f64;
+    let bytes = if operand_resident(cfg, l, d_head, field_bytes) {
+        union_cols * b * d_head as f64 * field_bytes
+    } else {
+        // one stream pass per Q block-row; each kept block pulls its
+        // K tile. Normalize so the dense case equals
+        // (l/b) passes × union — i.e. kept_blocks/total × full stream.
+        let full_stream = (l as f64 / b) * (l as f64) * d_head as f64
+            * field_bytes;
+        full_stream * (kept_blocks / total_blocks.max(1.0))
+    };
+    Traffic { dram_bytes: bytes, sram_bytes: bytes }
+}
+
+/// FUM fetch for the fractional K (and Q) fields: only the block rows /
+/// columns that appear in at least one kept block are read.
+///
+/// `mask` is the `[l/b, l/b]` keep mask. Returns (q_block_rows_touched,
+/// k_block_cols_touched) and the resulting traffic for fetching the
+/// fraction fields of Q rows and K rows actually needed.
+pub fn fum_fetch(
+    cfg: &SimConfig,
+    mask: &Tensor,
+    d_head: usize,
+) -> (usize, usize, Traffic) {
+    let (nbr, nbc) = (mask.rows(), mask.cols());
+    let mut row_touched = vec![false; nbr];
+    let mut col_touched = vec![false; nbc];
+    for i in 0..nbr {
+        for j in 0..nbc {
+            if mask.at(i, j) > 0.0 {
+                row_touched[i] = true;
+                col_touched[j] = true;
+            }
+        }
+    }
+    let rt = row_touched.iter().filter(|t| **t).count();
+    let ct = col_touched.iter().filter(|t| **t).count();
+    let b = cfg.block as f64;
+    // Fraction fields are frac_field/8 bytes per element.
+    let frac_bytes = cfg.widths.frac_field as f64 / 8.0;
+    let bytes =
+        (rt as f64 + ct as f64) * b * d_head as f64 * frac_bytes;
+    (
+        rt,
+        ct,
+        Traffic { dram_bytes: bytes, sram_bytes: bytes },
+    )
+}
+
+/// Dense-equivalent fraction fetch (what FUM saves against): all of
+/// FQ and FK.
+pub fn frac_fetch_dense(cfg: &SimConfig, l: usize, d_head: usize) -> Traffic {
+    let frac_bytes = cfg.widths.frac_field as f64 / 8.0;
+    let bytes = 2.0 * l as f64 * d_head as f64 * frac_bytes;
+    Traffic { dram_bytes: bytes, sram_bytes: bytes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, prop_assert};
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn full_fetch_bytes() {
+        let cfg = SimConfig::edge(); // 2 bytes/elem
+        let t = fetch_full(&cfg, 64, 32);
+        assert_eq!(t.dram_bytes, 64.0 * 32.0 * 2.0);
+        assert!(t.energy_pj(&cfg) > 0.0);
+    }
+
+    #[test]
+    fn fum_empty_mask_fetches_nothing() {
+        let cfg = SimConfig::edge();
+        let mask = Tensor::zeros(&[8, 8]);
+        let (rt, ct, t) = fum_fetch(&cfg, &mask, 32);
+        assert_eq!((rt, ct), (0, 0));
+        assert_eq!(t.dram_bytes, 0.0);
+    }
+
+    #[test]
+    fn fum_full_mask_equals_dense() {
+        let cfg = SimConfig::edge();
+        let mask = Tensor::from_fn(&[8, 8], |_| 1.0);
+        let (_, _, t) = fum_fetch(&cfg, &mask, 32);
+        let dense = frac_fetch_dense(&cfg, 16, 32); // l = 8*2
+        assert_eq!(t.dram_bytes, dense.dram_bytes);
+    }
+
+    #[test]
+    fn fum_single_block_touches_one_row_and_col() {
+        let cfg = SimConfig::edge();
+        let mut mask = Tensor::zeros(&[4, 4]);
+        mask.set(2, 1, 1.0);
+        let (rt, ct, t) = fum_fetch(&cfg, &mask, 16);
+        assert_eq!((rt, ct), (1, 1));
+        // 2 block-rows worth: (1+1) * block(2) * dh(16) * 1.5B(12 frac bits)
+        assert_eq!(t.dram_bytes, 2.0 * 2.0 * 16.0 * 1.5);
+    }
+
+    #[test]
+    fn prop_fum_never_exceeds_dense() {
+        check("FUM bytes <= dense bytes, equal iff all rows+cols touched", 100, |g| {
+            let cfg = SimConfig::edge();
+            let nb = g.usize(1, 16);
+            let dh = g.usize(4, 64);
+            let mut r = SplitMix64::new(g.u64(0, u64::MAX / 2));
+            let p = g.f64(0.0, 1.0);
+            let mask = Tensor::from_fn(&[nb, nb], |_| {
+                f32::from(r.next_f64() < p)
+            });
+            let (_, _, fum) = fum_fetch(&cfg, &mask, dh);
+            let dense = frac_fetch_dense(&cfg, nb * cfg.block, dh);
+            prop_assert(
+                fum.dram_bytes <= dense.dram_bytes + 1e-9,
+                "fum <= dense",
+            )?;
+            let all_kept = mask.data().iter().all(|&m| m > 0.0);
+            if all_kept {
+                prop_assert(
+                    (fum.dram_bytes - dense.dram_bytes).abs() < 1e-9,
+                    "equal when everything kept",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dram_cycles_respect_bandwidth() {
+        let cfg = SimConfig::edge(); // 8 B/cycle
+        let t = Traffic { dram_bytes: 800.0, sram_bytes: 0.0 };
+        assert_eq!(t.dram_cycles(&cfg), 100.0);
+    }
+
+    #[test]
+    fn energy_dominated_by_dram() {
+        let cfg = SimConfig::edge();
+        let t = Traffic { dram_bytes: 100.0, sram_bytes: 100.0 };
+        let e = t.energy_pj(&cfg);
+        assert!(e > 100.0 * cfg.e_dram_pj_per_byte * 0.99);
+        assert!(cfg.e_dram_pj_per_byte / cfg.e_sram_pj_per_byte > 50.0);
+    }
+}

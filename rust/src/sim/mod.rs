@@ -1,0 +1,26 @@
+//! Cycle-level model of the HDP co-processor (paper §IV) and the
+//! baseline accelerators it is compared against.
+//!
+//! Structure mirrors Fig. 4: [`pe_array`] (output-stationary tiled
+//! matmul), [`sparsity_engine`] (θ tracking → Θ/mask → head decision),
+//! [`softmax_unit`] (polynomial exp + linear reciprocal),
+//! [`memory`] (DRAM/SRAM + FUM), composed per head by [`core`] and
+//! across cores/layers by [`accelerator`]. [`baselines`] re-implements
+//! A3/SpAtten/Energon/AccelTran pruning policies on the same
+//! substrates; [`config`] holds the geometry/energy tables including
+//! the HDP-Edge and HDP-Server presets.
+
+pub mod accelerator;
+pub mod baselines;
+pub mod config;
+pub mod core;
+pub mod memory;
+pub mod pe_array;
+pub mod softmax_unit;
+pub mod sparsity_engine;
+
+pub use accelerator::{estimate_layer, estimate_layer_dense, estimate_model,
+                      run_layer, ChipReport};
+pub use config::{MacKind, SimConfig, Widths, W12, W16};
+pub use core::{cost_head, cost_head_dense, run_head, HeadRun, Report};
+pub use sparsity_engine::SparsityEngine;

@@ -1,0 +1,122 @@
+//! PE-array cost model: output-stationary tiled matmul (paper §IV-B/C,
+//! Fig. 5). Each PE is a MAC with local accumulators; the array retires
+//! `pe_rows × pe_cols` MACs per cycle once the pipeline is full. The
+//! 4×4·(4×8) tile walk of Fig. 5 fixes the *order* of partial sums; for
+//! cycle counts what matters is the MAC throughput and the ramp.
+
+use super::config::{MacKind, SimConfig};
+
+/// Cost of one matmul (or a masked subset of one) on a single core.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MatmulCost {
+    pub macs: f64,
+    pub cycles: f64,
+    pub energy_pj: f64,
+}
+
+impl MatmulCost {
+    pub fn add(&mut self, o: MatmulCost) {
+        self.macs += o.macs;
+        self.cycles += o.cycles;
+        self.energy_pj += o.energy_pj;
+    }
+}
+
+/// Full `m×k · k×n` matmul.
+pub fn matmul_cost(cfg: &SimConfig, m: usize, k: usize, n: usize, kind: MacKind) -> MatmulCost {
+    masked_matmul_cost(cfg, m, k, n, 1.0, kind)
+}
+
+/// Matmul where only `density` of the m×n outputs are computed (the
+/// FUM-gated fractional passes and the pruned score·V pass). The PE
+/// array processes kept 2×2 blocks back to back; with block-granular
+/// skipping there are no pipeline bubbles (that is the point of block —
+/// rather than element — sparsity, §III-A), so cycles scale with kept
+/// work plus a fixed tile-ramp overhead.
+pub fn masked_matmul_cost(
+    cfg: &SimConfig,
+    m: usize,
+    k: usize,
+    n: usize,
+    density: f64,
+    kind: MacKind,
+) -> MatmulCost {
+    assert!((0.0..=1.0 + 1e-9).contains(&density), "density {density}");
+    let macs = (m as f64) * (k as f64) * (n as f64) * density;
+    // Ramp: filling the output-stationary accumulators costs one pass of
+    // the inner dimension per tile wave.
+    let waves = ((m as f64) / cfg.pe_rows as f64).ceil()
+        * ((n as f64) / cfg.pe_cols as f64).ceil()
+        * density;
+    let ramp = waves.max(1.0); // pipeline fill per wave ≈ 1 cycle
+    let cycles = macs / cfg.macs_per_cycle_for(kind) + ramp;
+    // Partial sums stay in PE registers (output stationary); only the
+    // finished outputs spill through SRAM.
+    let out_bytes = (m as f64) * (n as f64) * density * 2.0;
+    let energy = macs * cfg.mac_energy_pj(kind)
+        + out_bytes * cfg.e_sram_pj_per_byte;
+    MatmulCost { macs, cycles, energy_pj: energy }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, prop_assert};
+
+    #[test]
+    fn dense_cycles_match_throughput() {
+        let cfg = SimConfig::edge(); // 32 MACs/cycle
+        let c = matmul_cost(&cfg, 64, 64, 64, MacKind::Full);
+        assert_eq!(c.macs, 64.0 * 64.0 * 64.0);
+        let ideal = c.macs / 32.0;
+        assert!(c.cycles >= ideal && c.cycles < ideal * 1.2, "{}", c.cycles);
+    }
+
+    #[test]
+    fn masked_scales_with_density() {
+        let cfg = SimConfig::edge();
+        let full = masked_matmul_cost(&cfg, 64, 64, 64, 1.0, MacKind::Full);
+        let half = masked_matmul_cost(&cfg, 64, 64, 64, 0.5, MacKind::Full);
+        assert!((half.macs / full.macs - 0.5).abs() < 1e-9);
+        assert!(half.cycles < 0.6 * full.cycles);
+        assert!(half.energy_pj < 0.6 * full.energy_pj);
+    }
+
+    #[test]
+    fn integer_pass_cheaper_than_full() {
+        let cfg = SimConfig::edge();
+        let int = matmul_cost(&cfg, 64, 64, 64, MacKind::IntInt);
+        let full = matmul_cost(&cfg, 64, 64, 64, MacKind::Full);
+        // precision-scalable MACs: 4-bit pass runs ~4x faster...
+        assert!(int.cycles < 0.3 * full.cycles, "{} vs {}", int.cycles, full.cycles);
+        // ...and costs a fraction of the multiplier energy (16/256)
+        assert!(int.energy_pj < 0.25 * full.energy_pj);
+    }
+
+    #[test]
+    fn prop_cost_monotone_in_density() {
+        check("matmul cost monotone in density", 100, |g| {
+            let cfg = SimConfig::edge();
+            let m = g.usize(2, 128);
+            let k = g.usize(2, 64);
+            let n = g.usize(2, 128);
+            let d1 = g.f64(0.0, 1.0);
+            let d2 = g.f64(0.0, 1.0);
+            let (lo, hi) = if d1 < d2 { (d1, d2) } else { (d2, d1) };
+            let a = masked_matmul_cost(&cfg, m, k, n, lo, MacKind::Full);
+            let b = masked_matmul_cost(&cfg, m, k, n, hi, MacKind::Full);
+            prop_assert(a.macs <= b.macs + 1e-9, "macs monotone")?;
+            prop_assert(a.cycles <= b.cycles + 1e-9, "cycles monotone")?;
+            prop_assert(a.energy_pj <= b.energy_pj + 1e-9, "energy monotone")
+        });
+    }
+
+    #[test]
+    fn zero_density_only_ramp() {
+        let cfg = SimConfig::edge();
+        let c = masked_matmul_cost(&cfg, 64, 64, 64, 0.0, MacKind::Full);
+        assert_eq!(c.macs, 0.0);
+        assert!(c.cycles <= 1.0 + 1e-9);
+        assert_eq!(c.energy_pj, 0.0);
+    }
+}

@@ -1,0 +1,65 @@
+//! Softmax module (paper §IV-E): per-element 2nd-order-polynomial
+//! exponent, per-row linear-approximation reciprocal. The *numerics*
+//! live in `attention::hdp::{hw_exp, hw_reciprocal, hw_softmax_rows}`;
+//! this module is the cycle/energy model, aware that pruned elements
+//! never enter the unit (their exp is skipped along with everything
+//! else about them).
+
+use super::config::SimConfig;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SoftmaxCost {
+    pub cycles: f64,
+    pub energy_pj: f64,
+}
+
+/// Cost of softmaxing `rows` rows with `kept_elems` total surviving
+/// score entries (pruned entries are skipped by the unit).
+pub fn softmax_cost(cfg: &SimConfig, rows: usize, kept_elems: f64) -> SoftmaxCost {
+    // exp pass + multiply-by-reciprocal pass stream the kept elements
+    // across the unit's parallel lanes; one reciprocal (linear approx +
+    // Newton step) per row.
+    let cycles = 2.0 * kept_elems * cfg.exp_cycles_per_elem / cfg.softmax_lanes
+        + rows as f64 * cfg.recip_cycles_per_row;
+    let energy = kept_elems * cfg.e_exp_pj
+        + rows as f64 * cfg.e_exp_pj * 2.0 // reciprocal ≈ two exp-unit ops
+        + kept_elems * cfg.e_exp_pj * 0.25; // final multiplies
+    SoftmaxCost { cycles, energy_pj: energy }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, prop_assert};
+
+    #[test]
+    fn scales_with_kept_elements() {
+        let cfg = SimConfig::edge();
+        let dense = softmax_cost(&cfg, 64, 64.0 * 64.0);
+        let pruned = softmax_cost(&cfg, 64, 64.0 * 64.0 * 0.25);
+        assert!(pruned.cycles < 0.5 * dense.cycles);
+        assert!(pruned.energy_pj < 0.5 * dense.energy_pj);
+    }
+
+    #[test]
+    fn row_overhead_present() {
+        let cfg = SimConfig::edge();
+        let c = softmax_cost(&cfg, 64, 0.0);
+        assert_eq!(c.cycles, 64.0 * cfg.recip_cycles_per_row);
+    }
+
+    #[test]
+    fn prop_monotone() {
+        check("softmax cost monotone in kept elems", 50, |g| {
+            let cfg = SimConfig::edge();
+            let rows = g.usize(1, 128);
+            let a = g.f64(0.0, 1e5);
+            let b = g.f64(0.0, 1e5);
+            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            let ca = softmax_cost(&cfg, rows, lo);
+            let cb = softmax_cost(&cfg, rows, hi);
+            prop_assert(ca.cycles <= cb.cycles, "cycles")?;
+            prop_assert(ca.energy_pj <= cb.energy_pj, "energy")
+        });
+    }
+}

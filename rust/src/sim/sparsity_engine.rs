@@ -1,0 +1,209 @@
+//! Sparsity Engine (paper §IV-D, Fig. 6): a streaming unit that
+//! receives block importances θ from the PE accumulators, tracks
+//! min/max/sum per block-row, and on `END_R` emits the row threshold Θ
+//! and mask; on `END_H` it compares the accumulated θ_Head against τ_H
+//! and decides whether the rest of the head is skipped.
+//!
+//! The numerics are the streaming re-implementation of
+//! `attention::hdp::{row_threshold, block_mask}` — the unit tests prove
+//! the two agree, which is the SE's functional contract.
+
+use super::config::SimConfig;
+
+/// Cycle/energy cost of one head's SE pass.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SeCost {
+    pub cycles: f64,
+    pub energy_pj: f64,
+}
+
+/// Streaming sparsity engine for one head.
+#[derive(Debug)]
+pub struct SparsityEngine {
+    rho: f32,
+    tau: f32,
+    // per-row state (Fig. 6's internal memory + min/max/sum trackers)
+    row_thetas: Vec<f32>,
+    min: f32,
+    max: f32,
+    sum: f64,
+    theta_head: f64,
+    masks: Vec<Vec<bool>>,
+    blocks_seen: usize,
+}
+
+impl SparsityEngine {
+    pub fn new(rho: f32, tau: f32) -> Self {
+        Self {
+            rho,
+            tau,
+            row_thetas: Vec::new(),
+            min: f32::INFINITY,
+            max: f32::NEG_INFINITY,
+            sum: 0.0,
+            theta_head: 0.0,
+            masks: Vec::new(),
+            blocks_seen: 0,
+        }
+    }
+
+    /// Ingest one block importance (PE accumulator tap).
+    pub fn push_theta(&mut self, theta: f32) {
+        self.row_thetas.push(theta);
+        self.min = self.min.min(theta);
+        self.max = self.max.max(theta);
+        self.sum += theta as f64;
+        self.theta_head += theta as f64;
+        self.blocks_seen += 1;
+    }
+
+    /// END_R: a full row of blocks is complete — compute Θ, emit the
+    /// row mask, reset row trackers.
+    pub fn end_row(&mut self) {
+        let n = self.row_thetas.len() as f32;
+        assert!(n > 0.0, "END_R with no blocks");
+        let mean = (self.sum / self.row_thetas.len() as f64) as f32;
+        let threshold = if self.rho >= 0.0 {
+            self.rho * self.max + (1.0 - self.rho) * mean
+        } else {
+            -self.rho * self.min + (1.0 + self.rho) * mean
+        };
+        let mask = self.row_thetas.iter().map(|&t| t >= threshold).collect();
+        self.masks.push(mask);
+        self.row_thetas.clear();
+        self.min = f32::INFINITY;
+        self.max = f32::NEG_INFINITY;
+        self.sum = 0.0;
+    }
+
+    /// END_H: the Integer_Q × Integer_K pass is complete — the head
+    /// survives iff θ_Head exceeds τ_H.
+    pub fn end_head(&self) -> bool {
+        assert!(self.row_thetas.is_empty(), "END_H before END_R");
+        self.theta_head as f32 > self.tau
+    }
+
+    pub fn theta_head(&self) -> f32 {
+        self.theta_head as f32
+    }
+
+    /// Row masks emitted so far.
+    pub fn masks(&self) -> &[Vec<bool>] {
+        &self.masks
+    }
+
+    pub fn kept_blocks(&self) -> usize {
+        self.masks.iter().flatten().filter(|k| **k).count()
+    }
+
+    /// Cycle/energy cost: one cycle per θ ingested (comparators +
+    /// trackers run at stream rate) plus one pass per row for mask
+    /// emission.
+    pub fn cost(&self, cfg: &SimConfig) -> SeCost {
+        let per_block = self.blocks_seen as f64 * cfg.se_cycles_per_block;
+        let per_row: f64 = self
+            .masks
+            .iter()
+            .map(|m| m.len() as f64 * cfg.se_cycles_per_block)
+            .sum();
+        SeCost {
+            cycles: per_block + per_row,
+            energy_pj: (self.blocks_seen as f64 + per_row)
+                * cfg.e_se_pj_per_block,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::hdp::{block_mask, row_threshold};
+    use crate::tensor::Tensor;
+    use crate::util::prop::{check, prop_assert};
+
+    /// Run the streaming engine over a theta matrix.
+    fn run_engine(theta: &Tensor, rho: f32, tau: f32) -> SparsityEngine {
+        let mut se = SparsityEngine::new(rho, tau);
+        for i in 0..theta.rows() {
+            for j in 0..theta.cols() {
+                se.push_theta(theta.at(i, j));
+            }
+            se.end_row();
+        }
+        se
+    }
+
+    #[test]
+    fn matches_functional_mask() {
+        let theta = Tensor::new(
+            &[2, 4],
+            vec![1.0, 5.0, 2.0, 8.0, 0.0, 0.0, 3.0, 9.0],
+        );
+        for rho in [-0.9f32, -0.3, 0.0, 0.4, 0.9] {
+            let se = run_engine(&theta, rho, 0.0);
+            let want = block_mask(&theta, rho);
+            for i in 0..2 {
+                for j in 0..4 {
+                    assert_eq!(
+                        se.masks()[i][j],
+                        want.at(i, j) == 1.0,
+                        "rho={rho} ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_streaming_equals_batch() {
+        check("SE streaming mask == functional block_mask", 100, |g| {
+            let nbr = g.usize(1, 16);
+            let nbc = g.usize(1, 16);
+            let rho = g.f32(-0.95, 0.95);
+            let theta = Tensor::new(
+                &[nbr, nbc],
+                (0..nbr * nbc).map(|_| g.f32(0.0, 50.0)).collect(),
+            );
+            let se = run_engine(&theta, rho, 0.0);
+            let want = block_mask(&theta, rho);
+            for i in 0..nbr {
+                for j in 0..nbc {
+                    prop_assert(
+                        se.masks()[i][j] == (want.at(i, j) == 1.0),
+                        format!("mismatch at ({i},{j}) rho={rho}"),
+                    )?;
+                }
+            }
+            // thresholds agree too
+            let th = row_threshold(theta.row(0), rho);
+            prop_assert(th.is_finite(), "finite threshold")
+        });
+    }
+
+    #[test]
+    fn head_decision() {
+        let theta = Tensor::new(&[1, 4], vec![1.0, 2.0, 3.0, 4.0]);
+        let se = run_engine(&theta, 0.0, 5.0);
+        assert_eq!(se.theta_head(), 10.0);
+        assert!(se.end_head()); // 10 > 5
+        let se2 = run_engine(&theta, 0.0, 10.0);
+        assert!(!se2.end_head()); // 10 !> 10
+    }
+
+    #[test]
+    fn cost_scales_with_blocks() {
+        let cfg = SimConfig::edge();
+        let small = run_engine(&Tensor::zeros(&[2, 2]), 0.0, 0.0).cost(&cfg);
+        let big = run_engine(&Tensor::zeros(&[8, 8]), 0.0, 0.0).cost(&cfg);
+        assert!(big.cycles > small.cycles);
+        assert!(big.energy_pj > small.energy_pj);
+    }
+
+    #[test]
+    #[should_panic(expected = "END_H before END_R")]
+    fn end_head_requires_completed_rows() {
+        let mut se = SparsityEngine::new(0.0, 0.0);
+        se.push_theta(1.0);
+        se.end_head();
+    }
+}

@@ -1,0 +1,297 @@
+//! Small row-major f32 tensor — the substrate the functional attention
+//! models and the cycle simulator compute on. Deliberately minimal: the
+//! heavy math lives in the AOT'd XLA executables; this type exists for
+//! the rust-side mirrors (Algorithm 2 functional model, simulator
+//! numerics, cross-validation against artifacts).
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}(", self.shape)?;
+        let n = self.data.len().min(8);
+        for v in &self.data[..n] {
+            write!(f, "{v:.3},")?;
+        }
+        if self.data.len() > n {
+            write!(f, "…")?;
+        }
+        write!(f, ")")
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} != data len {}", data.len());
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: (0..n).map(&mut f).collect() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    // -- 2-D access (the simulator works on matrices) -----------------------
+
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[1]
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[r * self.shape[1] + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[r * self.shape[1] + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    /// `self [m,k] x other [k,n] -> [m,n]` (ikj loop order: streams the
+    /// rhs row-major, vectorizes well).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (k2, n) = (other.rows(), other.cols());
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[p * n..(p + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    /// `self [m,k] x other^T where other is [n,k] -> [m,n]` — the
+    /// Q·Kᵀ shape, dot-product form.
+    pub fn matmul_nt(&self, other: &Tensor) -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (n, k2) = (other.rows(), other.cols());
+        assert_eq!(k, k2, "matmul_nt inner dims {k} vs {k2}");
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &other.data[j * k..(j + 1) * k];
+                out[i * n + j] =
+                    arow.iter().zip(brow).map(|(a, b)| a * b).sum();
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(&[n, m], out)
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    pub fn abs_sum(&self) -> f32 {
+        self.data.iter().map(|x| x.abs()).sum()
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Row-wise softmax over a 2-D tensor, excluding entries <= `floor`
+    /// (the pruned-score sentinel) from the normalization.
+    pub fn softmax_rows(&self) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let row = self.row(i);
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for (j, &x) in row.iter().enumerate() {
+                // §Perf: entries 80+ below the row max underflow to 0
+                // anyway (pruned-score sentinels in the HDP path);
+                // skipping exp() made sparse softmax ~2x cheaper.
+                let d = x - mx;
+                let e = if d < -80.0 { 0.0 } else { d.exp() };
+                out[i * n + j] = e;
+                sum += e;
+            }
+            for j in 0..n {
+                out[i * n + j] /= sum;
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, prop_assert_close};
+    use crate::util::rng::SplitMix64;
+
+    fn randt(shape: &[usize], seed: u64) -> Tensor {
+        let mut r = SplitMix64::new(seed);
+        Tensor::from_fn(shape, |_| r.next_normal() as f32)
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_nt_equals_matmul_of_transpose() {
+        let a = randt(&[5, 7], 1);
+        let b = randt(&[6, 7], 2);
+        let d = a.matmul_nt(&b).max_abs_diff(&a.matmul(&b.transpose2()));
+        assert!(d < 1e-5, "{d}");
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dims")]
+    fn matmul_shape_checked() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4, 2]);
+        a.matmul(&b);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = randt(&[3, 8], 3);
+        assert_eq!(a.transpose2().transpose2(), a);
+    }
+
+    #[test]
+    fn softmax_rows_normalized() {
+        let a = randt(&[4, 9], 4).scale(3.0);
+        let s = a.softmax_rows();
+        for i in 0..4 {
+            let sum: f32 = s.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            assert!(s.row(i).iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn softmax_handles_neg_inf_sentinels() {
+        let a = Tensor::new(&[1, 4], vec![1.0, -1e9, 2.0, -1e9]);
+        let s = a.softmax_rows();
+        assert!(s.at(0, 1) < 1e-12 && s.at(0, 3) < 1e-12);
+        assert!((s.row(0).iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn prop_matmul_linear_in_scalar() {
+        check("matmul(c*a, b) == c*matmul(a,b)", 50, |g| {
+            let m = g.usize(1, 6);
+            let k = g.usize(1, 6);
+            let n = g.usize(1, 6);
+            let c = g.f32(-3.0, 3.0);
+            let mut r = SplitMix64::new(g.u64(0, u64::MAX / 2));
+            let a = Tensor::from_fn(&[m, k], |_| r.next_normal() as f32);
+            let b = Tensor::from_fn(&[k, n], |_| r.next_normal() as f32);
+            let lhs = a.scale(c).matmul(&b);
+            let rhs = a.matmul(&b).scale(c);
+            prop_assert_close(
+                lhs.max_abs_diff(&rhs) as f64, 0.0, 1e-4, "linearity")
+        });
+    }
+
+    #[test]
+    fn prop_softmax_invariant_to_shift() {
+        check("softmax(x + c) == softmax(x)", 50, |g| {
+            let n = g.usize(2, 16);
+            let c = g.f32(-5.0, 5.0);
+            let mut r = SplitMix64::new(g.u64(0, u64::MAX / 2));
+            let a = Tensor::from_fn(&[1, n], |_| r.next_normal() as f32);
+            let b = a.map(|x| x + c);
+            prop_assert_close(
+                a.softmax_rows().max_abs_diff(&b.softmax_rows()) as f64,
+                0.0,
+                1e-5,
+                "shift invariance",
+            )
+        });
+    }
+}

@@ -1,0 +1,175 @@
+//! Timing harness for `cargo bench` targets (criterion is unavailable
+//! offline). Warmup + timed iterations, mean/p50/p95, throughput
+//! reporting, and a stable one-line-per-benchmark text format that the
+//! §Perf log in EXPERIMENTS.md quotes directly.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// One benchmark's measurements (seconds per iteration).
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<f64>,
+    /// Optional work units per iteration (elements, requests, MACs...)
+    /// for throughput reporting.
+    pub units_per_iter: Option<(f64, &'static str)>,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn p50(&self) -> f64 {
+        stats::percentile(&self.samples, 50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        stats::percentile(&self.samples, 95.0)
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<44} mean {:>10} p50 {:>10} p95 {:>10} (n={})",
+            self.name,
+            fmt_time(self.mean()),
+            fmt_time(self.p50()),
+            fmt_time(self.p95()),
+            self.samples.len()
+        );
+        if let Some((units, label)) = self.units_per_iter {
+            let rate = units / self.mean();
+            s.push_str(&format!("  {:>12} {label}/s", fmt_rate(rate)));
+        }
+        s
+    }
+}
+
+pub fn fmt_time(sec: f64) -> String {
+    if sec < 1e-6 {
+        format!("{:.1}ns", sec * 1e9)
+    } else if sec < 1e-3 {
+        format!("{:.2}µs", sec * 1e6)
+    } else if sec < 1.0 {
+        format!("{:.2}ms", sec * 1e3)
+    } else {
+        format!("{sec:.3}s")
+    }
+}
+
+pub fn fmt_rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:.2}G", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2}M", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2}k", r / 1e3)
+    } else {
+        format!("{r:.1}")
+    }
+}
+
+/// Benchmark runner: prints a header once, then one line per bench.
+pub struct Bench {
+    /// Target wall time per benchmark (split across samples).
+    pub target_time: f64,
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { target_time: 2.0, min_samples: 10, max_samples: 200 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self { target_time: 0.5, min_samples: 5, max_samples: 50 }
+    }
+
+    /// Time `f` (one call = one iteration). The closure's return value
+    /// is black-boxed so the work isn't optimized away.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        self.run_units(name, None, &mut f)
+    }
+
+    pub fn run_throughput<T>(
+        &self,
+        name: &str,
+        units: f64,
+        label: &'static str,
+        mut f: impl FnMut() -> T,
+    ) -> Measurement {
+        self.run_units(name, Some((units, label)), &mut f)
+    }
+
+    fn run_units<T>(
+        &self,
+        name: &str,
+        units: Option<(f64, &'static str)>,
+        f: &mut impl FnMut() -> T,
+    ) -> Measurement {
+        // Warmup + calibration: one timed call decides the sample count.
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let want = (self.target_time / once) as usize;
+        let n = want.clamp(self.min_samples, self.max_samples);
+
+        let mut samples = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let m = Measurement { name: name.to_string(), samples, units_per_iter: units };
+        println!("{}", m.report());
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench { target_time: 0.05, min_samples: 5, max_samples: 20 };
+        let m = b.run("spin", || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(m.mean() > 0.0);
+        assert!(m.samples.len() >= 5);
+        assert!(m.report().contains("spin"));
+    }
+
+    #[test]
+    fn throughput_units_reported() {
+        let b = Bench { target_time: 0.02, min_samples: 5, max_samples: 10 };
+        let m = b.run_throughput("t", 1000.0, "ops", || 1 + 1);
+        assert!(m.report().contains("ops/s"));
+    }
+
+    #[test]
+    fn fmt_time_scales() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("µs"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn fmt_rate_scales() {
+        assert_eq!(fmt_rate(1.5e9), "1.50G");
+        assert_eq!(fmt_rate(2.5e6), "2.50M");
+        assert_eq!(fmt_rate(3.5e3), "3.50k");
+        assert_eq!(fmt_rate(42.0), "42.0");
+    }
+}

@@ -1,0 +1,217 @@
+//! Declarative command-line flag parsing (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, defaults,
+//! required flags and auto-generated `--help`. Subcommand dispatch is
+//! handled by `main.rs` (first positional argument).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_bool: bool,
+    required: bool,
+}
+
+/// Builder + parser for one (sub)command's flags.
+#[derive(Debug, Clone)]
+pub struct Args {
+    cmd: String,
+    about: &'static str,
+    specs: Vec<FlagSpec>,
+    values: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn new(cmd: &str, about: &'static str) -> Self {
+        Self { cmd: cmd.to_string(), about, specs: Vec::new(), values: BTreeMap::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_bool: false,
+            required: false,
+        });
+        self
+    }
+
+    pub fn required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec { name, help, default: None, is_bool: false, required: true });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec { name, help, default: None, is_bool: true, required: false });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nflags:\n", self.cmd, self.about);
+        for f in &self.specs {
+            let kind = if f.is_bool {
+                String::new()
+            } else if let Some(d) = &f.default {
+                format!(" <value, default {d}>")
+            } else {
+                " <value, required>".to_string()
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", f.name, kind, f.help));
+        }
+        s
+    }
+
+    /// Parse a raw token list (everything after the subcommand).
+    pub fn parse(mut self, raw: &[String]) -> anyhow::Result<Args> {
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if tok == "--help" || tok == "-h" {
+                anyhow::bail!("{}", self.usage());
+            }
+            let Some(body) = tok.strip_prefix("--") else {
+                anyhow::bail!("unexpected positional argument '{tok}'\n\n{}", self.usage());
+            };
+            let (name, inline) = match body.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (body, None),
+            };
+            let spec = self
+                .specs
+                .iter()
+                .find(|s| s.name == name)
+                .ok_or_else(|| anyhow::anyhow!("unknown flag --{name}\n\n{}", self.usage()))?
+                .clone();
+            let value = if spec.is_bool {
+                inline.unwrap_or_else(|| "true".to_string())
+            } else if let Some(v) = inline {
+                v
+            } else {
+                i += 1;
+                raw.get(i)
+                    .ok_or_else(|| anyhow::anyhow!("flag --{name} needs a value"))?
+                    .clone()
+            };
+            self.values.insert(name.to_string(), value);
+            i += 1;
+        }
+        for f in &self.specs {
+            if f.required && !self.values.contains_key(f.name) {
+                anyhow::bail!("missing required flag --{}\n\n{}", f.name, self.usage());
+            }
+        }
+        Ok(self)
+    }
+
+    fn raw(&self, name: &str) -> Option<String> {
+        if let Some(v) = self.values.get(name) {
+            return Some(v.clone());
+        }
+        self.specs.iter().find(|s| s.name == name).and_then(|s| s.default.clone())
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        self.raw(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared or no default"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<f64> {
+        let v = self.get(name);
+        v.parse().map_err(|_| anyhow::anyhow!("--{name}: '{v}' is not a number"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<usize> {
+        let v = self.get(name);
+        v.parse().map_err(|_| anyhow::anyhow!("--{name}: '{v}' is not an integer"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.raw(name).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().to_string())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args() -> Args {
+        Args::new("test", "test command")
+            .flag("model", "tiny", "model name")
+            .flag("steps", "100", "train steps")
+            .switch("verbose", "chatty")
+            .required("out", "output path")
+    }
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = args().parse(&toks(&["--out", "x.csv"])).unwrap();
+        assert_eq!(a.get("model"), "tiny");
+        assert_eq!(a.get_usize("steps").unwrap(), 100);
+        assert_eq!(a.get("out"), "x.csv");
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn explicit_values() {
+        let a = args()
+            .parse(&toks(&["--model=base", "--steps", "5", "--verbose", "--out=o"]))
+            .unwrap();
+        assert_eq!(a.get("model"), "base");
+        assert_eq!(a.get_usize("steps").unwrap(), 5);
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn missing_required_fails() {
+        assert!(args().parse(&toks(&["--model", "base"])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_fails() {
+        assert!(args().parse(&toks(&["--out", "x", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_fails() {
+        assert!(args().parse(&toks(&["--out"])).is_err());
+    }
+
+    #[test]
+    fn bad_number_fails() {
+        let a = args().parse(&toks(&["--out", "x", "--steps", "ten"])).unwrap();
+        assert!(a.get_usize("steps").is_err());
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = Args::new("t", "t")
+            .flag("models", "tiny,base", "models")
+            .parse(&[])
+            .unwrap();
+        assert_eq!(a.get_list("models"), vec!["tiny", "base"]);
+    }
+
+    #[test]
+    fn help_mentions_flags() {
+        let u = args().usage();
+        assert!(u.contains("--model"));
+        assert!(u.contains("--out"));
+    }
+}

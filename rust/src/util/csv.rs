@@ -1,0 +1,128 @@
+//! Tiny CSV writer for `results/*.csv` — the figure-reproduction
+//! harness emits one file per paper figure; plots are one `pandas` or
+//! gnuplot call away for the user.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+/// Column-typed CSV table: header fixed at construction, rows pushed as
+/// f64/str cells, written atomically at the end.
+#[derive(Debug, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(columns: &[&str]) -> Self {
+        Self { header: columns.iter().map(|c| c.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[Cell]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity != header arity");
+        self.rows.push(cells.iter().map(Cell::render).collect());
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{}", self.header.join(","));
+        for r in &self.rows {
+            let _ = writeln!(s, "{}", r.join(","));
+        }
+        s
+    }
+
+    /// Write to `path`, creating parent directories.
+    pub fn write(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(path, self.to_string())?;
+        Ok(())
+    }
+}
+
+/// One CSV cell. Strings containing separators are quoted.
+pub enum Cell {
+    F(f64),
+    I(i64),
+    S(String),
+}
+
+impl Cell {
+    pub fn s(v: impl Into<String>) -> Cell {
+        Cell::S(v.into())
+    }
+
+    fn render(&self) -> String {
+        match self {
+            Cell::F(v) => {
+                if v.fract() == 0.0 && v.abs() < 1e15 {
+                    format!("{}", *v as i64)
+                } else {
+                    format!("{v:.6}")
+                }
+            }
+            Cell::I(v) => v.to_string(),
+            Cell::S(v) => {
+                if v.contains([',', '"', '\n']) {
+                    format!("\"{}\"", v.replace('"', "\"\""))
+                } else {
+                    v.clone()
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let mut t = Table::new(&["a", "b", "c"]);
+        t.row(&[Cell::F(1.5), Cell::I(2), Cell::s("x")]);
+        t.row(&[Cell::F(3.0), Cell::I(-1), Cell::s("y,z")]);
+        let s = t.to_string();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[0], "a,b,c");
+        assert_eq!(lines[1], "1.500000,2,x");
+        assert_eq!(lines[2], "3,-1,\"y,z\"");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new(&["a"]);
+        t.row(&[Cell::I(1), Cell::I(2)]);
+    }
+
+    #[test]
+    fn quote_escaping() {
+        let mut t = Table::new(&["v"]);
+        t.row(&[Cell::s("say \"hi\"")]);
+        assert!(t.to_string().contains("\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    fn writes_file() {
+        let dir = std::env::temp_dir().join("hdp_csv_test");
+        let path = dir.join("t.csv");
+        let mut t = Table::new(&["x"]);
+        t.row(&[Cell::I(7)]);
+        t.write(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "x\n7\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,12 @@
+//! Substrate utilities, all hand-rolled: the offline sandbox has no
+//! serde/clap/tokio/criterion/proptest, so the library carries its own
+//! minimal equivalents (each unit-tested in its module).
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,173 @@
+//! Mini property-based testing harness (proptest is unavailable
+//! offline). Deterministic per test name, seed printed on failure for
+//! replay, value generators built on [`SplitMix64`].
+//!
+//! Usage:
+//! ```ignore
+//! check("mask keeps at least one block per row", 200, |g| {
+//!     let theta = g.vec_f64(4..=64, 0.0, 100.0);
+//!     let rho = g.f64(0.0, 0.99);
+//!     prop_assert(some_invariant(&theta, rho), "invariant broke")
+//! });
+//! ```
+
+use super::rng::SplitMix64;
+
+/// Value generator handed to each property case.
+pub struct Gen {
+    rng: SplitMix64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: SplitMix64::new(seed) }
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.rng.next_below(hi - lo + 1)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_below(2) == 1
+    }
+
+    pub fn normal_f32(&mut self) -> f32 {
+        self.rng.next_normal() as f32
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32(lo, hi)).collect()
+    }
+
+    pub fn vec_normal_f32(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.normal_f32()).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0, xs.len() - 1)]
+    }
+}
+
+/// Outcome of one property case.
+pub type PropResult = Result<(), String>;
+
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn prop_assert_close(a: f64, b: f64, tol: f64, what: &str) -> PropResult {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics (failing the enclosing
+/// `#[test]`) on the first violated case with the seed needed to replay.
+/// The base seed derives from the property name so runs are stable;
+/// set `HDP_PROP_SEED` to override for replay.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) -> PropResult) {
+    let base = std::env::var("HDP_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| fnv1a(name.as_bytes()));
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case}/{cases}: {msg}\n\
+                 replay with HDP_PROP_SEED={base} (case seed {seed})"
+            );
+        }
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0u64;
+        // count via closure side effect through a cell
+        let counted = std::cell::Cell::new(0u64);
+        check("add commutes", 50, |g| {
+            counted.set(counted.get() + 1);
+            let a = g.f64(-10.0, 10.0);
+            let b = g.f64(-10.0, 10.0);
+            prop_assert_close(a + b, b + a, 1e-12, "commutativity")
+        });
+        count += counted.get();
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 10, |_| prop_assert(false, "nope"));
+    }
+
+    #[test]
+    fn generator_ranges() {
+        let mut g = Gen::new(1);
+        for _ in 0..1000 {
+            let u = g.u64(3, 9);
+            assert!((3..=9).contains(&u));
+            let f = g.f64(-1.5, 2.5);
+            assert!((-1.5..=2.5).contains(&f));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_name() {
+        let collect = |tag: &str| {
+            let vals = std::cell::RefCell::new(Vec::new());
+            check(tag, 5, |g| {
+                vals.borrow_mut().push(g.u64(0, 1 << 30));
+                Ok(())
+            });
+            vals.into_inner()
+        };
+        assert_eq!(collect("same"), collect("same"));
+        assert_ne!(collect("same"), collect("different"));
+    }
+
+    #[test]
+    fn choice_covers_all() {
+        let mut g = Gen::new(2);
+        let xs = [1, 2, 3];
+        let mut seen = [false; 3];
+        for _ in 0..100 {
+            seen[*g.choice(&xs) as usize - 1] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,141 @@
+//! splitmix64 — the cross-language PRNG shared with the python compile
+//! path (`python/compile/data.py`). Both sides pin identical golden
+//! vectors so the training data the rust driver streams through PJRT is
+//! bit-for-bit the data pytest validated.
+
+/// splitmix64 (Steele et al., 2014). Tiny state, full 64-bit period per
+/// seed stream, trivially portable — exactly what a cross-language data
+/// contract wants.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Derive the per-(seed, split) stream used by the dataset
+    /// generators; mirrors `data.generate` on the python side.
+    pub fn for_split(seed: u64, split_tag: u64) -> Self {
+        Self::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(split_tag))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform integer in `[0, n)` via 128-bit multiply (Lemire; bias
+    /// < 2^-64, same as python's `next_below`).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53 random bits.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal via Box–Muller (rust-only; used for synthetic
+    /// tensors in tests/benches, not part of the data contract).
+    pub fn next_normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Exponential with rate `lambda` (Poisson inter-arrival times for
+    /// the serving workload generator).
+    pub fn next_exp(&mut self, lambda: f64) -> f64 {
+        -(1.0 - self.next_f64()).ln() / lambda
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Same golden vector as python/tests/test_data.py.
+    #[test]
+    fn golden_seed42() {
+        let mut r = SplitMix64::new(42);
+        let got: Vec<u64> = (0..5).map(|_| r.next_u64()).collect();
+        assert_eq!(
+            got,
+            vec![
+                0xBDD7_3226_2FEB_6E95,
+                0x28EF_E333_B266_F103,
+                0x4752_6757_130F_9F52,
+                0x581C_E1FF_0E4A_E394,
+                0x09BC_585A_2448_23F2,
+            ]
+        );
+    }
+
+    #[test]
+    fn determinism() {
+        let mut a = SplitMix64::new(7);
+        let mut b = SplitMix64::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = SplitMix64::new(1);
+        for n in [1u64, 2, 7, 256, 1000] {
+            for _ in 0..200 {
+                assert!(r.next_below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = SplitMix64::new(3);
+        let mut sum = 0.0;
+        for _ in 0..1000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 1000.0;
+        assert!((0.4..0.6).contains(&mean), "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = SplitMix64::new(9);
+        let xs: Vec<f64> = (0..20_000).map(|_| r.next_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / xs.len() as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn exp_mean() {
+        let mut r = SplitMix64::new(11);
+        let lambda = 4.0;
+        let xs: Vec<f64> = (0..20_000).map(|_| r.next_exp(lambda)).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((mean - 1.0 / lambda).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn split_streams_differ() {
+        let mut a = SplitMix64::for_split(42, 0x7472);
+        let mut b = SplitMix64::for_split(42, 0x6576);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

@@ -1,0 +1,287 @@
+//! Integration tests over the AOT artifacts: the full python→HLO→PJRT
+//! →rust interchange, cross-layer numerics (rust functional Algorithm 2
+//! vs the jax/Pallas kernel), training smoke, and the serving engine.
+//!
+//! These need `make artifacts` to have run; they skip (not fail) when
+//! the artifacts directory is absent so `cargo test` works on a fresh
+//! clone.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use hdp::attention::hdp::{hdp_head, HdpParams};
+use hdp::coordinator::{Batcher, Engine, Request, ServeMode};
+use hdp::data::{Dataset, Split, Stream};
+use hdp::fixed::{quant_split_tensor, QuantProfile};
+use hdp::model::evaluator::Variant;
+use hdp::model::{Evaluator, ParamStore, Trainer};
+use hdp::runtime::{lit_f32, lit_scalar_f32, to_vec_f32, Runtime};
+use hdp::sim::SimConfig;
+use hdp::tensor::Tensor;
+use hdp::util::rng::SplitMix64;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn manifest_loads_and_entries_compile() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(dir).unwrap();
+    assert!(rt.manifest.models.contains_key("tiny"));
+    // Compile one small entry end to end.
+    let exe = rt.executable("tiny", "hdp_attn_unit").unwrap();
+    drop(exe);
+}
+
+/// The central cross-layer check: rust's functional Algorithm 2 must
+/// agree with the jax/Pallas kernel running under PJRT, on the same
+/// quantized inputs — masks, head decisions, densities and outputs.
+#[test]
+fn rust_functional_matches_pallas_kernel() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(dir).unwrap();
+    let spec = rt.model("tiny").unwrap();
+    let (h, l, dh) = (spec.config.n_heads, spec.config.seq_len,
+                      spec.config.d_head);
+
+    let mut rng = SplitMix64::new(99);
+    let mut randv = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| rng.next_normal() as f32 * 2.0).collect()
+    };
+    let q = randv(h * l * dh);
+    let k = randv(h * l * dh);
+    let v = randv(h * l * dh);
+    let prof = QuantProfile::Q4_12;
+    let (iq, fq, sq) = quant_split_tensor(&q, prof);
+    let (ik, fk, sk) = quant_split_tensor(&k, prof);
+    let inv = 1.0 / (sq * sk * (dh as f32).sqrt());
+
+    for (rho, tau) in [(0.3f32, 0.0f32), (-0.5, 0.0), (0.0, 1e6), (0.8, -1.0)] {
+        let outs = rt
+            .execute(
+                "tiny",
+                "hdp_attn_unit",
+                &[
+                    lit_f32(&iq, &[h, l, dh]).unwrap(),
+                    lit_f32(&fq, &[h, l, dh]).unwrap(),
+                    lit_f32(&ik, &[h, l, dh]).unwrap(),
+                    lit_f32(&fk, &[h, l, dh]).unwrap(),
+                    lit_f32(&v, &[h, l, dh]).unwrap(),
+                    lit_scalar_f32(rho),
+                    lit_scalar_f32(tau),
+                    lit_scalar_f32(inv),
+                    lit_scalar_f32(0.0),
+                    lit_scalar_f32(0.0),
+                ],
+            )
+            .unwrap();
+        let out = to_vec_f32(&outs[0]).unwrap();
+        let dens = to_vec_f32(&outs[2]).unwrap();
+        let kept = to_vec_f32(&outs[3]).unwrap();
+
+        for head in 0..h {
+            let s = head * l * dh;
+            let t = |d: &[f32]| Tensor::new(&[l, dh], d[s..s + l * dh].to_vec());
+            let r = hdp_head(
+                &t(&iq), &t(&fq), &t(&ik), &t(&fk), &t(&v),
+                HdpParams { rho, tau, inv_scale: inv, ..Default::default() },
+            );
+            assert_eq!(r.head_kept, kept[head] > 0.5, "head decision (rho={rho})");
+            assert!((r.kept_density - dens[head]).abs() < 1e-6,
+                    "density: rust {} vs jax {}", r.kept_density, dens[head]);
+            let jax_out = Tensor::new(&[l, dh], out[s..s + l * dh].to_vec());
+            let diff = r.out.max_abs_diff(&jax_out);
+            assert!(diff < 2e-4, "output mismatch {diff} (rho={rho} tau={tau})");
+        }
+    }
+}
+
+#[test]
+fn init_is_deterministic_and_shaped() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(dir).unwrap();
+    let a = ParamStore::init(&rt, "tiny", 7).unwrap();
+    let b = ParamStore::init(&rt, "tiny", 7).unwrap();
+    let c = ParamStore::init(&rt, "tiny", 8).unwrap();
+    assert_eq!(a, b, "same seed, same params");
+    assert_ne!(a, c, "different seed, different params");
+    let spec = rt.model("tiny").unwrap();
+    a.check_against(spec).unwrap();
+    assert_eq!(a.total_weights(), spec.total_weights());
+}
+
+#[test]
+fn dense_and_hdp_forward_agree_without_pruning() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(dir).unwrap();
+    let params = ParamStore::init(&rt, "tiny", 3).unwrap();
+    let ev = Evaluator::new(&rt, &params).unwrap();
+    let dense = ev.run(Dataset::Sst2s, 42, 64, Variant::Dense).unwrap();
+    let hdp_off = ev
+        .run(Dataset::Sst2s, 42, 64, Variant::Hdp {
+            rho: -1.0, tau: -1.0, qstep: 1.0 / 4096.0,
+            use_ff: true, use_hw: false,
+        })
+        .unwrap();
+    assert!((hdp_off.mean_density() - 1.0).abs() < 1e-9);
+    assert!((hdp_off.mean_head_kept() - 1.0).abs() < 1e-9);
+    // Untrained accuracies are noise, but label agreement through the
+    // quantized path should be high.
+    assert!((dense.accuracy - hdp_off.accuracy).abs() < 0.25,
+            "dense {} vs hdp-off {}", dense.accuracy, hdp_off.accuracy);
+}
+
+#[test]
+fn training_reduces_loss_via_pjrt() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(dir).unwrap();
+    let params = ParamStore::init(&rt, "tiny", 42).unwrap();
+    let mut tr = Trainer::new(&rt, &params).unwrap();
+    let curve = tr.train(Dataset::Sst2s, 42, 30, 1e-3, None, 0).unwrap();
+    let first: f32 = curve[..5].iter().sum::<f32>() / 5.0;
+    let last: f32 = curve[curve.len() - 5..].iter().sum::<f32>() / 5.0;
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+    // trained params are retrievable and serializable
+    let trained = tr.params().unwrap();
+    let dir2 = std::env::temp_dir().join("hdp_it_weights");
+    let path = dir2.join("t.hdpw");
+    trained.save(&path).unwrap();
+    let loaded = ParamStore::load(&path).unwrap();
+    assert_eq!(trained, loaded);
+    let _ = std::fs::remove_dir_all(dir2);
+}
+
+#[test]
+fn hdp_train_step_runs() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(dir).unwrap();
+    let params = ParamStore::init(&rt, "tiny", 1).unwrap();
+    let mut tr = Trainer::new(&rt, &params).unwrap();
+    let knobs = hdp::model::trainer::HdpTrainKnobs {
+        rho: 0.3, tau: 0.0, qstep: 1.0 / 4096.0,
+    };
+    let curve = tr
+        .train(Dataset::Sst2s, 42, 3, 1e-3, Some(knobs), 0)
+        .unwrap();
+    assert_eq!(curve.len(), 3);
+    assert!(curve.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn pruning_monotone_through_artifacts() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(dir).unwrap();
+    let params = ParamStore::init(&rt, "tiny", 5).unwrap();
+    let ev = Evaluator::new(&rt, &params).unwrap();
+    let mut last = f64::INFINITY;
+    for rho in [-0.8f32, 0.0, 0.6, 0.9] {
+        let r = ev
+            .run(Dataset::Sst2s, 42, 32, Variant::Hdp {
+                rho, tau: -1.0, qstep: 1.0 / 4096.0,
+                use_ff: false, use_hw: false,
+            })
+            .unwrap();
+        assert!(r.mean_density() <= last + 1e-9);
+        last = r.mean_density();
+    }
+    assert!(last < 0.6, "rho=0.9 should prune aggressively, kept {last}");
+}
+
+#[test]
+fn spatten_and_topk_entries_run() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(dir).unwrap();
+    let params = ParamStore::init(&rt, "tiny", 9).unwrap();
+    let ev = Evaluator::new(&rt, &params).unwrap();
+    let tk = ev
+        .run(Dataset::Colas, 42, 32, Variant::Topk {
+            keep_frac: 0.5, qstep: 1.0 / 4096.0,
+        })
+        .unwrap();
+    assert!(tk.mean_density() >= 0.5 - 1e-6);
+    // tiny has 2 layers x 2 heads: the cascade schedule
+    // floor(pf * H * (j+1)/L) first prunes at layer 0 only when pf = 1,
+    // which then masks one head in layer 1 -> mean alive = 3/4.
+    let sp0 = ev
+        .run(Dataset::Colas, 42, 32, Variant::Spatten { prune_frac: 0.5 })
+        .unwrap();
+    assert!((sp0.mean_head_kept() - 1.0).abs() < 1e-9);
+    let sp = ev
+        .run(Dataset::Colas, 42, 32, Variant::Spatten { prune_frac: 1.0 })
+        .unwrap();
+    assert!((sp.mean_head_kept() - 0.75).abs() < 1e-6,
+            "kept {}", sp.mean_head_kept());
+}
+
+#[test]
+fn serving_engine_end_to_end() {
+    let dir = require_artifacts!();
+    let rt = Arc::new(Runtime::open(dir).unwrap());
+    let params = ParamStore::init(&rt, "tiny", 11).unwrap();
+    let spec = rt.model("tiny").unwrap();
+    let batcher = Arc::new(Batcher::new(spec.config.eval_batch,
+                                        Duration::from_millis(2)));
+    let engine = Engine::new(
+        Arc::clone(&rt),
+        &params,
+        ServeMode::Hdp { rho: 0.3, tau: 0.0, qstep: 1.0 / 4096.0 },
+        SimConfig::edge(),
+        Arc::clone(&batcher),
+    )
+    .unwrap();
+
+    let seq_len = spec.config.seq_len;
+    let producer = {
+        let b = Arc::clone(&batcher);
+        std::thread::spawn(move || {
+            let mut stream = Stream::new(Dataset::Sst2s, Split::Eval, seq_len, 1);
+            for id in 0..80u64 {
+                let ex = stream.next_example();
+                b.submit(Request {
+                    id,
+                    tokens: ex.tokens.iter().map(|&t| t as i32).collect(),
+                    enqueued: std::time::Instant::now(),
+                });
+            }
+            b.close();
+        })
+    };
+    let responses = engine.run_loop();
+    producer.join().unwrap();
+    assert_eq!(responses.len(), 80);
+    assert!(responses.iter().all(|r| r.label == 0 || r.label == 1));
+    assert!(responses.iter().all(|r| r.sim_seconds > 0.0));
+    assert_eq!(engine.metrics.requests(), 80);
+    assert!(engine.metrics.mean_batch_size() >= 1.0);
+}
+
+#[test]
+fn probe_returns_probability_rows() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(dir).unwrap();
+    let params = ParamStore::init(&rt, "tiny", 2).unwrap();
+    let ev = Evaluator::new(&rt, &params).unwrap();
+    let (probs, l) = ev.probe(Dataset::Sst2s, 42, 0).unwrap();
+    let spec = rt.model("tiny").unwrap();
+    assert_eq!(probs.len(),
+               spec.config.n_layers * spec.config.n_heads * l * l);
+    // every row sums to ~1
+    for row in probs.chunks(l) {
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-3, "row sum {s}");
+    }
+}

@@ -1,0 +1,125 @@
+//! Cross-validation between the cycle simulator's *functional* output
+//! and the jax/Pallas kernel through PJRT: the simulator must compute
+//! the same numbers it charges cycles for, and its cost accounting must
+//! respect conservation laws against the functional masks.
+
+use hdp::attention::hdp::HdpParams;
+use hdp::fixed::{quant_split_tensor, QuantProfile};
+use hdp::runtime::{lit_f32, lit_scalar_f32, to_vec_f32, Runtime};
+use hdp::sim::{self, SimConfig};
+use hdp::tensor::Tensor;
+use hdp::util::rng::SplitMix64;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+fn head_inputs(seed: u64, l: usize, dh: usize)
+    -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, f32) {
+    let mut rng = SplitMix64::new(seed);
+    let mut randv = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| rng.next_normal() as f32 * 2.0).collect()
+    };
+    let q = randv(l * dh);
+    let k = randv(l * dh);
+    let v = randv(l * dh);
+    let prof = QuantProfile::Q4_12;
+    let (iq, fq, sq) = quant_split_tensor(&q, prof);
+    let (ik, fk, sk) = quant_split_tensor(&k, prof);
+    let inv = 1.0 / (sq * sk * (dh as f32).sqrt());
+    (iq, fq, ik, fk, v, inv)
+}
+
+/// The simulator's functional path (attention::hdp inside sim::run_head)
+/// must match the PJRT execution of the Pallas kernel bit-for-bit on
+/// decisions and to float tolerance on outputs.
+#[test]
+fn sim_functional_output_matches_pjrt() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let rt = Runtime::open(dir).unwrap();
+    let spec = rt.model("tiny").unwrap();
+    let (h, l, dh) = (spec.config.n_heads, spec.config.seq_len,
+                      spec.config.d_head);
+    let cfg = SimConfig::edge();
+
+    // Build h heads' worth of inputs, concatenated for the PJRT call.
+    let mut all = (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    let mut per_head = Vec::new();
+    let mut inv = 0.0f32;
+    for head in 0..h {
+        let (iq, fq, ik, fk, v, i) = head_inputs(1000 + head as u64, l, dh);
+        inv = i; // same calibration statistics per head is fine here
+        all.0.extend_from_slice(&iq);
+        all.1.extend_from_slice(&fq);
+        all.2.extend_from_slice(&ik);
+        all.3.extend_from_slice(&fk);
+        all.4.extend_from_slice(&v);
+        per_head.push((iq, fq, ik, fk, v));
+    }
+    let rho = 0.4f32;
+    let tau = 0.0f32;
+    let outs = rt
+        .execute(
+            "tiny",
+            "hdp_attn_unit",
+            &[
+                lit_f32(&all.0, &[h, l, dh]).unwrap(),
+                lit_f32(&all.1, &[h, l, dh]).unwrap(),
+                lit_f32(&all.2, &[h, l, dh]).unwrap(),
+                lit_f32(&all.3, &[h, l, dh]).unwrap(),
+                lit_f32(&all.4, &[h, l, dh]).unwrap(),
+                lit_scalar_f32(rho),
+                lit_scalar_f32(tau),
+                lit_scalar_f32(inv),
+                lit_scalar_f32(0.0),
+                lit_scalar_f32(0.0),
+            ],
+        )
+        .unwrap();
+    let jax_out = to_vec_f32(&outs[0]).unwrap();
+    let jax_dens = to_vec_f32(&outs[2]).unwrap();
+
+    for (head, (iq, fq, ik, fk, v)) in per_head.iter().enumerate() {
+        let t = |d: &[f32]| Tensor::new(&[l, dh], d.to_vec());
+        let run = sim::run_head(
+            &cfg,
+            &t(iq), &t(fq), &t(ik), &t(fk), &t(v),
+            HdpParams { rho, tau, inv_scale: inv, ..Default::default() },
+        );
+        // functional agreement
+        let s = head * l * dh;
+        let jax = Tensor::new(&[l, dh], jax_out[s..s + l * dh].to_vec());
+        assert!(run.out.out.max_abs_diff(&jax) < 2e-4);
+        assert!((run.out.kept_density - jax_dens[head]).abs() < 1e-6);
+        // cost accounting consistent with the functional mask
+        let kept: f64 = run.out.mask.data().iter().map(|&m| m as f64).sum();
+        let total = run.out.mask.len() as f64;
+        let lf = l as f64;
+        let want_macs = lf * lf * dh as f64 * (1.0 + 3.0 * kept / total);
+        assert!((run.report.macs - want_macs).abs() / want_macs < 1e-6,
+                "macs {} want {want_macs}", run.report.macs);
+        assert!(run.report.cycles > 0.0 && run.report.energy_pj > 0.0);
+    }
+}
+
+/// Sweep the simulator across (rho, tau) against dense cost: speedup
+/// and energy saving must both move monotonically with pruning.
+#[test]
+fn sim_savings_track_pruning() {
+    let cfg = SimConfig::edge();
+    let dense = sim::cost_head_dense(&cfg, 128, 64);
+    let mut last_cycles = f64::INFINITY;
+    for density in [1.0f32, 0.7, 0.4, 0.2, 0.05] {
+        let r = sim::cost_head(&cfg, 128, 64, None, density, true, false);
+        assert!(r.cycles <= last_cycles + 1e-9);
+        last_cycles = r.cycles;
+    }
+    // pruned head is the floor
+    let pruned = sim::cost_head(&cfg, 128, 64, None, 0.5, false, false);
+    assert!(pruned.cycles < last_cycles);
+    assert!(pruned.energy_pj < 0.3 * dense.energy_pj);
+}
