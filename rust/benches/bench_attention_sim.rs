@@ -9,6 +9,7 @@ use hdp::sim::{self, baselines, SimConfig};
 use hdp::tensor::Tensor;
 use hdp::util::bench::Bench;
 use hdp::util::rng::SplitMix64;
+use hdp::util::threadpool::configured_threads;
 
 fn head_tensors(seed: u64, l: usize, dh: usize)
     -> (Tensor, Tensor, Tensor, Tensor, Tensor, f32) {
@@ -46,6 +47,27 @@ fn main() {
                     HdpParams { rho: 0.4, tau: 0.0, inv_scale: inv, ..Default::default() },
                 )
             },
+        );
+    }
+
+    println!("\n== full layer: parallel head fan-out (sim::run_layer) ==");
+    {
+        let heads: Vec<_> = (0..12)
+            .map(|h| head_tensors(100 + h, 128, 64))
+            .collect();
+        let refs: Vec<_> = heads
+            .iter()
+            .map(|(a, b, c, d, e, _)| (a, b, c, d, e))
+            .collect();
+        let inv = heads[0].5;
+        let p = HdpParams { rho: 0.4, tau: 0.0, inv_scale: inv, ..Default::default() };
+        let macs = 12.0 * 2.0 * (128 * 128 * 64) as f64;
+        b.run_throughput(
+            &format!("sim::run_layer 12 heads l=128 ({} threads)",
+                     configured_threads()),
+            macs,
+            "simMAC",
+            || sim::run_layer(&SimConfig::edge(), &refs, p),
         );
     }
 

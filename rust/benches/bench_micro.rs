@@ -1,13 +1,25 @@
 //! Microbenchmarks of the hot building blocks: the functional
-//! Algorithm 2 stages, the sparsity engine, fixed-point conversion and
-//! the substrate tensor ops — the profile targets of the §Perf pass.
+//! Algorithm 2 stages, the sparse-first attention kernel, the sparsity
+//! engine, fixed-point conversion and the substrate tensor ops — the
+//! profile targets of the §Perf pass.
+//!
+//! ```sh
+//! cargo bench --bench bench_micro -- --json BENCH_attention.json
+//! ```
+//!
+//! `--json <path>` additionally writes every measurement as a
+//! machine-readable record (`op`, `ns_per_iter`, `throughput_per_s`)
+//! so `scripts/bench.sh` can track the perf trajectory across PRs;
+//! `--quick` shortens the per-bench time budget.
 
 use hdp::attention::hdp::{block_importance, block_mask, hdp_head, HdpParams};
+use hdp::attention::kernel::{MhaKernel, Workspace};
 use hdp::attention::topk::topk_mask;
 use hdp::fixed::{quant_split_tensor, QuantProfile};
 use hdp::sim::SparsityEngine;
 use hdp::tensor::Tensor;
-use hdp::util::bench::Bench;
+use hdp::util::bench::{Bench, Measurement};
+use hdp::util::json::Json;
 use hdp::util::rng::SplitMix64;
 
 fn randt(shape: &[usize], seed: u64) -> Tensor {
@@ -15,38 +27,100 @@ fn randt(shape: &[usize], seed: u64) -> Tensor {
     Tensor::from_fn(shape, |_| r.next_normal() as f32)
 }
 
+fn quant_head(seed: u64, l: usize, dh: usize)
+    -> (Tensor, Tensor, Tensor, Tensor, Tensor) {
+    let prof = QuantProfile::Q4_12;
+    let mut r = SplitMix64::new(seed);
+    let mut randv = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| r.next_normal() as f32 * 2.0).collect()
+    };
+    let (iq, fq, _) = quant_split_tensor(&randv(l * dh), prof);
+    let (ik, fk, _) = quant_split_tensor(&randv(l * dh), prof);
+    let t = |d: Vec<f32>| Tensor::new(&[l, dh], d);
+    (t(iq), t(fq), t(ik), t(fk), t(randv(l * dh)))
+}
+
+fn measurements_to_json(ms: &[Measurement]) -> Json {
+    Json::obj(vec![
+        ("bench", Json::str("bench_micro")),
+        (
+            "results",
+            Json::arr(ms.iter().map(|m| {
+                let mut fields = vec![
+                    ("op", Json::str(&m.name)),
+                    ("ns_per_iter", Json::num(m.mean() * 1e9)),
+                    ("p50_ns", Json::num(m.p50() * 1e9)),
+                    ("p95_ns", Json::num(m.p95() * 1e9)),
+                    ("samples", Json::num(m.samples.len() as f64)),
+                ];
+                if let Some((units, label)) = m.units_per_iter {
+                    fields.push(("throughput_per_s", Json::num(units / m.mean())));
+                    fields.push(("unit", Json::str(label)));
+                }
+                Json::obj(fields)
+            })),
+        ),
+    ])
+}
+
 fn main() {
-    let b = Bench::default();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut json_path: Option<String> = None;
+    let mut quick = false;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--json" => {
+                i += 1;
+                match argv.get(i) {
+                    Some(p) if !p.starts_with("--") => json_path = Some(p.clone()),
+                    _ => {
+                        eprintln!("bench_micro: --json needs a file path");
+                        std::process::exit(2);
+                    }
+                }
+            }
+            "--quick" => quick = true,
+            _ => {} // tolerate harness-injected flags
+        }
+        i += 1;
+    }
+    let b = if quick { Bench::quick() } else { Bench::default() };
+    let mut ms: Vec<Measurement> = Vec::new();
 
     println!("== tensor substrate ==");
     let a = randt(&[128, 64], 1);
     let c = randt(&[128, 64], 2);
-    b.run_throughput("matmul_nt 128x64 · 128x64ᵀ",
-                     (128 * 128 * 64) as f64, "MAC",
-                     || a.matmul_nt(&c));
+    ms.push(b.run_throughput("matmul_nt 128x64 · 128x64ᵀ",
+                             (128 * 128 * 64) as f64, "MAC",
+                             || a.matmul_nt(&c)));
+    let mut nt_out = vec![0.0f32; 128 * 128];
+    ms.push(b.run_throughput("matmul_nt_into 128x64 (workspace, no alloc)",
+                             (128 * 128 * 64) as f64, "MAC",
+                             || a.matmul_nt_into(&c, &mut nt_out)));
     let s = randt(&[128, 128], 3);
-    b.run_throughput("softmax_rows 128x128", (128 * 128) as f64, "elem",
-                     || s.softmax_rows());
+    ms.push(b.run_throughput("softmax_rows 128x128", (128 * 128) as f64, "elem",
+                             || s.softmax_rows()));
 
     println!("\n== fixed point ==");
     let xs: Vec<f32> = {
         let mut r = SplitMix64::new(5);
         (0..128 * 64).map(|_| r.next_normal() as f32 * 2.0).collect()
     };
-    b.run_throughput("quant_split_tensor 128x64", xs.len() as f64, "elem",
-                     || quant_split_tensor(&xs, QuantProfile::Q4_12));
+    ms.push(b.run_throughput("quant_split_tensor 128x64", xs.len() as f64, "elem",
+                             || quant_split_tensor(&xs, QuantProfile::Q4_12)));
 
     println!("\n== Algorithm 2 stages ==");
     let int_score = randt(&[128, 128], 7).scale(8.0);
-    b.run_throughput("block_importance 128x128", (128 * 128) as f64, "elem",
-                     || block_importance(&int_score, 2));
+    ms.push(b.run_throughput("block_importance 128x128", (128 * 128) as f64, "elem",
+                             || block_importance(&int_score, 2)));
     let theta = block_importance(&int_score, 2);
-    b.run("block_mask 64x64 (threshold rule)", || block_mask(&theta, 0.4));
-    b.run("topk_mask 64x64 (sorting rule)", || topk_mask(&theta, 0.3));
+    ms.push(b.run("block_mask 64x64 (threshold rule)", || block_mask(&theta, 0.4)));
+    ms.push(b.run("topk_mask 64x64 (sorting rule)", || topk_mask(&theta, 0.3)));
 
     println!("\n== sparsity engine (streaming) ==");
-    b.run_throughput("SE stream 64x64 thetas", (64 * 64) as f64, "theta",
-                     || {
+    ms.push(b.run_throughput("SE stream 64x64 thetas", (64 * 64) as f64, "theta",
+                             || {
         let mut se = SparsityEngine::new(0.4, 0.0);
         for i in 0..64 {
             for j in 0..64 {
@@ -57,26 +131,67 @@ fn main() {
             let _ = i;
         }
         se.end_head()
-    });
+    }));
 
     println!("\n== full functional head (Algorithm 2) ==");
-    let prof = QuantProfile::Q4_12;
-    let mut r = SplitMix64::new(11);
-    let mut randv = |n: usize| -> Vec<f32> {
-        (0..n).map(|_| r.next_normal() as f32 * 2.0).collect()
-    };
-    let (iq, fq, _) = quant_split_tensor(&randv(128 * 64), prof);
-    let (ik, fk, _) = quant_split_tensor(&randv(128 * 64), prof);
-    let v = Tensor::new(&[128, 64], randv(128 * 64));
-    let t = |d: &[f32]| Tensor::new(&[128, 64], d.to_vec());
-    let (iq, fq, ik, fk) = (t(&iq), t(&fq), t(&ik), t(&fk));
+    let (iq, fq, ik, fk, v) = quant_head(11, 128, 64);
     for rho in [0.0f32, 0.5, 0.9] {
-        b.run_throughput(
+        ms.push(b.run_throughput(
             &format!("hdp_head 128x64 rho={rho}"),
             (3 * 128 * 128 * 64) as f64, "MAC",
             || hdp_head(&iq, &fq, &ik, &fk, &v,
                         HdpParams { rho, inv_scale: 0.05, tau: -1.0,
                                     ..Default::default() }),
-        );
+        ));
+    }
+
+    println!("\n== sparse-first kernel (workspace, zero-alloc steady state) ==");
+    let mut ws = Workspace::new();
+    for rho in [0.0f32, 0.5, 0.9] {
+        let p = HdpParams { rho, inv_scale: 0.05, tau: -1.0, ..Default::default() };
+        ws.run(&iq, &fq, &ik, &fk, &v, p, true); // warm: size the arena once
+        ms.push(b.run_throughput(
+            &format!("kernel.head_ws 128x64 rho={rho}"),
+            (3 * 128 * 128 * 64) as f64, "MAC",
+            || {
+                ws.run(&iq, &fq, &ik, &fk, &v, p, true);
+                ws.kept_density()
+            },
+        ));
+    }
+
+    println!("\n== multi-head fan-out (MhaKernel::forward_layer) ==");
+    let heads: Vec<_> = (0..12).map(|h| quant_head(100 + h, 128, 64)).collect();
+    let refs: Vec<_> = heads.iter().map(|(a, b, c, d, e)| (a, b, c, d, e)).collect();
+    for (threads, tag) in [(1usize, "1 thread"), (0, "all cores")] {
+        let kernel = {
+            let k = MhaKernel::new(HdpParams {
+                rho: 0.5, inv_scale: 0.05, tau: 0.0, ..Default::default()
+            });
+            if threads == 0 { k } else { k.with_threads(threads) }
+        };
+        ms.push(b.run_throughput(
+            &format!("forward_layer 12x128x64 rho=0.5 ({tag})"),
+            (12 * 3 * 128 * 128 * 64) as f64, "MAC",
+            || kernel.forward_layer(&refs),
+        ));
+    }
+
+    // Headline ratio the acceptance criterion tracks: the kernel at
+    // rho=0.9 vs rho=0.0 (sparse-first means cost scales with density).
+    let find = |needle: &str| -> Option<f64> {
+        ms.iter().find(|m| m.name.contains(needle)).map(Measurement::mean)
+    };
+    if let (Some(dense), Some(sparse)) =
+        (find("kernel.head_ws 128x64 rho=0"), find("kernel.head_ws 128x64 rho=0.9"))
+    {
+        println!("\nkernel.head_ws rho=0.9 speedup over rho=0.0: {:.2}x",
+                 dense / sparse);
+    }
+
+    if let Some(path) = json_path {
+        let doc = measurements_to_json(&ms);
+        std::fs::write(&path, format!("{doc}\n")).expect("write bench json");
+        println!("wrote {} ({} measurements)", path, ms.len());
     }
 }

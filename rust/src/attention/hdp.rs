@@ -64,21 +64,49 @@ pub struct HdpHeadOutput {
 /// theta: absolute sum over each (b x b) tile of the integer score.
 pub fn block_importance(int_score: &Tensor, block: usize) -> Tensor {
     let (l, l2) = (int_score.rows(), int_score.cols());
-    assert_eq!(l % block, 0);
-    assert_eq!(l2 % block, 0);
     let (nb, nb2) = (l / block, l2 / block);
     let mut theta = Tensor::zeros(&[nb, nb2]);
-    for i in 0..l {
-        for j in 0..l2 {
-            let v = theta.at(i / block, j / block) + int_score.at(i, j).abs();
-            theta.set(i / block, j / block, v);
-        }
-    }
+    block_importance_into(int_score.data(), l, l2, block, theta.data_mut());
     theta
 }
 
-/// Theta_i per block-row (Algorithm 2, line 15).
+/// Allocation-free [`block_importance`] over row slices — no
+/// per-element bounds-checked `at`/`set` (§Perf: the old form paid two
+/// checked 2-D accesses per score element; this streams each score row
+/// once against the matching θ row). Accumulation order per θ cell is
+/// unchanged (ascending j within ascending i), so results are
+/// bit-identical; `prop_block_importance_matches_naive` pins that.
+pub(crate) fn block_importance_into(
+    int_score: &[f32],
+    rows: usize,
+    cols: usize,
+    block: usize,
+    theta: &mut [f32],
+) {
+    assert_eq!(rows % block, 0);
+    assert_eq!(cols % block, 0);
+    let nbc = cols / block;
+    assert_eq!(theta.len(), (rows / block) * nbc, "theta len");
+    theta.fill(0.0);
+    for i in 0..rows {
+        let srow = &int_score[i * cols..(i + 1) * cols];
+        let trow = &mut theta[(i / block) * nbc..(i / block + 1) * nbc];
+        for (t, chunk) in trow.iter_mut().zip(srow.chunks_exact(block)) {
+            for &x in chunk {
+                *t += x.abs();
+            }
+        }
+    }
+}
+
+/// Theta_i per block-row (Algorithm 2, line 15). `rho` is defined on
+/// (-1, 1); values are clamped to [-1, 1] so the threshold can never
+/// exceed the row maximum — every block-row keeps at least its argmax
+/// block, the invariant the sparse kernel's row softmax relies on
+/// (rho > 1 used to prune entire rows, which the dense sentinel
+/// softmax then turned into unintended uniform probabilities).
 pub fn row_threshold(theta_row: &[f32], rho: f32) -> f32 {
+    let rho = rho.clamp(-1.0, 1.0);
     let n = theta_row.len() as f32;
     let mn = theta_row.iter().cloned().fold(f32::INFINITY, f32::min);
     let mx = theta_row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
@@ -104,18 +132,27 @@ pub fn block_mask(theta: &Tensor, rho: f32) -> Tensor {
 }
 
 /// Hardware softmax numerics (paper §IV-E): 2nd-order polynomial exp +
-/// Newton-refined linear reciprocal. Mirrors `ref.hw_softmax`.
+/// Newton-refined linear reciprocal. Mirrors `ref.hw_softmax`. Rows
+/// whose exponentials all vanish (`sum == 0`, e.g. every entry `-inf`)
+/// come back as zeros instead of the NaNs that `hw_reciprocal(0)`
+/// would inject.
 pub fn hw_softmax_rows(scores: &Tensor) -> Tensor {
     let (m, n) = (scores.rows(), scores.cols());
     let mut out = vec![0.0f32; m * n];
     for i in 0..m {
         let row = scores.row(i);
         let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        if mx == f32::NEG_INFINITY {
+            continue; // fully-masked row: stays zero
+        }
         let mut sum = 0.0f32;
         for (j, &x) in row.iter().enumerate() {
             let e = hw_exp(x - mx);
             out[i * n + j] = e;
             sum += e;
+        }
+        if sum == 0.0 {
+            continue; // all exponentials underflowed: zero row
         }
         let r = hw_reciprocal(sum);
         for j in 0..n {
@@ -145,10 +182,39 @@ pub fn hw_reciprocal(x: f32) -> f32 {
     r / (e as f32).exp2()
 }
 
+thread_local! {
+    /// Per-thread scratch arena backing [`hdp_head`]: repeated calls on
+    /// one thread (sweeps, benches, the simulator's per-head loop) do
+    /// zero steady-state allocation for intermediates.
+    static HEAD_WS: std::cell::RefCell<super::kernel::Workspace> =
+        std::cell::RefCell::new(super::kernel::Workspace::new());
+}
+
 /// One attention head through Algorithm 2. Inputs are the quantized
 /// fields `iq,fq,ik,fk` (`[l, d_h]` each, `value = int + frac`) and the
 /// float values `v`.
+///
+/// Executes on the sparse-first [`super::kernel`] (kept-block list, no
+/// dense sentinel pass) through a thread-local [`super::kernel::Workspace`];
+/// results are bit-identical to [`hdp_head_reference`], which
+/// `hdp_head_matches_reference_bitwise` pins.
 pub fn hdp_head(
+    iq: &Tensor,
+    fq: &Tensor,
+    ik: &Tensor,
+    fk: &Tensor,
+    v: &Tensor,
+    p: HdpParams,
+) -> HdpHeadOutput {
+    HEAD_WS.with(|ws| super::kernel::hdp_head_with(&mut ws.borrow_mut(), iq, fq, ik, fk, v, p))
+}
+
+/// The original dense-shaped implementation of Algorithm 2, kept as the
+/// executable specification the kernel is tested against: it fills an
+/// `l×l` score tensor with `NEG_INF` sentinels, softmaxes every entry
+/// and lets `matmul` skip the zeros — semantically exact, but its cost
+/// does not scale with `kept_density`.
+pub fn hdp_head_reference(
     iq: &Tensor,
     fq: &Tensor,
     ik: &Tensor,
@@ -385,6 +451,83 @@ mod tests {
                 "conservation",
             )
         });
+    }
+
+    #[test]
+    fn prop_hdp_head_matches_reference_bitwise() {
+        // The central kernel contract: the sparse-first path is not an
+        // approximation of the dense-shaped reference — it is the same
+        // function, bit for bit, across shapes, rho, tau and both
+        // softmax numerics.
+        check("hdp_head == hdp_head_reference (bitwise)", 25, |g| {
+            let l = *g.choice(&[8usize, 16, 32]);
+            let (iq, fq, ik, fk, v, inv) = rand_inputs(g.u64(0, 1 << 40), l, 8);
+            let p = HdpParams {
+                // beyond the (-1, 1) domain on purpose: row_threshold
+                // clamps, so out-of-range rho must also agree
+                rho: g.f32(-1.5, 1.5),
+                tau: *g.choice(&[-1.0f32, 0.0, 1e9]),
+                inv_scale: inv,
+                use_ff: g.bool(),
+                use_hw_softmax: g.bool(),
+                ..Default::default()
+            };
+            let a = hdp_head(&iq, &fq, &ik, &fk, &v, p);
+            let b = hdp_head_reference(&iq, &fq, &ik, &fk, &v, p);
+            prop_assert(a.out.data() == b.out.data(), "out")?;
+            prop_assert(a.probs.data() == b.probs.data(), "probs")?;
+            prop_assert(a.mask.data() == b.mask.data(), "mask")?;
+            prop_assert(a.theta.data() == b.theta.data(), "theta")?;
+            prop_assert(a.theta_head.to_bits() == b.theta_head.to_bits(), "theta_head")?;
+            prop_assert(a.head_kept == b.head_kept, "head_kept")?;
+            prop_assert(
+                a.kept_density.to_bits() == b.kept_density.to_bits(),
+                "kept_density",
+            )
+        });
+    }
+
+    #[test]
+    fn prop_block_importance_matches_naive() {
+        // Satellite: the row-slice rewrite must reproduce the old
+        // bounds-checked at/set implementation exactly on random
+        // (float, not just integer) inputs.
+        fn naive(int_score: &Tensor, block: usize) -> Tensor {
+            let (l, l2) = (int_score.rows(), int_score.cols());
+            let mut theta = Tensor::zeros(&[l / block, l2 / block]);
+            for i in 0..l {
+                for j in 0..l2 {
+                    let v = theta.at(i / block, j / block) + int_score.at(i, j).abs();
+                    theta.set(i / block, j / block, v);
+                }
+            }
+            theta
+        }
+        check("block_importance == naive (bitwise)", 50, |g| {
+            let block = *g.choice(&[1usize, 2, 4]);
+            let rows = block * g.usize(1, 8);
+            let cols = block * g.usize(1, 8);
+            let mut r = SplitMix64::new(g.u64(0, u64::MAX / 2));
+            let s = Tensor::from_fn(&[rows, cols], |_| r.next_normal() as f32 * 5.0);
+            let fast = block_importance(&s, block);
+            let slow = naive(&s, block);
+            prop_assert(fast.data() == slow.data(), "theta mismatch")
+        });
+    }
+
+    #[test]
+    fn hw_softmax_fully_pruned_row_is_zero_not_nan() {
+        // Regression (satellite): sum == 0 used to reach
+        // hw_reciprocal(0) and fill the row with NaN/inf garbage.
+        let s = Tensor::new(
+            &[2, 3],
+            vec![f32::NEG_INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY, //
+                 0.5, 1.5, -0.5],
+        );
+        let p = hw_softmax_rows(&s);
+        assert_eq!(p.row(0), &[0.0, 0.0, 0.0]);
+        assert!(p.data().iter().all(|x| x.is_finite()));
+        assert!((p.row(1).iter().sum::<f32>() - 1.0).abs() < 1e-2);
     }
 
     #[test]

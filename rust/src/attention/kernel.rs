@@ -1,0 +1,671 @@
+//! # Kernel architecture: sparse-first multi-head HDP attention
+//!
+//! The functional model in [`super::hdp`] is the semantic reference for
+//! Algorithm 2; this module is its performance-shaped execution engine.
+//! It exists so the software datapath *scales with `kept_density`* the
+//! way the paper's co-processor does — pruned work is skipped
+//! end-to-end instead of being computed into `NEG_INF` sentinels and
+//! softmaxed away.
+//!
+//! ## Stages (mirroring the hardware pipeline, paper §IV-A / Fig. 4)
+//!
+//! 1. **Integer pass (PE array)** — `Integer_Q × Integer_Kᵀ` through the
+//!    register-blocked [`Tensor::matmul_nt_into`] microkernel into the
+//!    workspace's score buffer. This is the only dense `l×l` stage, as
+//!    in silicon.
+//! 2. **Sparsity engine** — block importances θ are reduced from row
+//!    slices ([`super::hdp::block_importance`]'s fast path), the
+//!    per-block-row threshold Θ picks survivors, and the survivors are
+//!    recorded as a **kept-block list** (block-CSR: `row_ptr` +
+//!    ascending block-column indices) instead of a dense mask. The
+//!    head decision `theta_head > tau` falls out of the same reduction.
+//! 3. **Early head pruning** — in fast mode a pruned head stops here,
+//!    exactly like the hardware: no fraction fetch, no FUM products, no
+//!    softmax, no `P·V`.
+//! 4. **FUM stage** — the fractional products `IQ·FK + FQ·IK`
+//!    (+ `FQ·FK` when exact) are formed **only for kept blocks**, written
+//!    into a packed block-value buffer (`kept × b×b` floats), never into
+//!    an `l×l` tensor.
+//! 5. **Softmax unit** — row-wise softmax over the kept entries only
+//!    (exact or the polynomial-exp hardware numerics). A row whose
+//!    exponentials all vanish yields zeros, not NaN.
+//! 6. **`P·V` accumulate** — the output accumulates contributions from
+//!    kept block-columns only, in ascending column order.
+//!
+//! ## Workspace
+//!
+//! All intermediates live in a reusable [`Workspace`] arena. After the
+//! first call at a given shape, a head pass performs **zero heap
+//! allocation**: buffers are `resize`d within retained capacity
+//! (`ensure` reserves the worst case up front). [`MhaKernel`] keeps a
+//! pool of workspaces and fans a layer's heads out across
+//! [`crate::util::threadpool::parallel_map`] worker threads
+//! (`HDP_THREADS` overrides the count), so a full-layer forward uses
+//! every core while staying bitwise deterministic — each head is an
+//! independent pure function of its inputs.
+//!
+//! ## Numerical contract
+//!
+//! The pre-softmax scores are formed with exactly the same operation
+//! order as the reference `hdp_head`, so they are bit-identical; the
+//! sparse softmax and `P·V` reproduce the dense path's float operation
+//! order restricted to kept entries (pruned entries contributed exact
+//! zeros there), so post-softmax outputs are bit-identical too. The
+//! property tests in `hdp.rs` and the `pjrt_roundtrip` integration
+//! tolerances therefore keep guarding this module.
+
+use std::sync::Mutex;
+
+use crate::attention::hdp::{
+    block_importance_into, hw_exp, hw_reciprocal, row_threshold, HdpHeadOutput, HdpParams,
+    NEG_INF,
+};
+use crate::tensor::Tensor;
+use crate::util::threadpool::{configured_threads, parallel_map};
+
+/// Kept-block list in block-CSR form: for block-row `bi`, the surviving
+/// block-column indices are `cols[row_ptr[bi]..row_ptr[bi+1]]`,
+/// ascending.
+#[derive(Debug, Clone, Default)]
+pub struct KeptBlocks {
+    row_ptr: Vec<u32>,
+    cols: Vec<u32>,
+    nb_rows: usize,
+    nb_cols: usize,
+}
+
+impl KeptBlocks {
+    fn clear(&mut self, nb_rows: usize, nb_cols: usize) {
+        self.nb_rows = nb_rows;
+        self.nb_cols = nb_cols;
+        self.row_ptr.clear();
+        self.row_ptr.reserve(nb_rows + 1);
+        self.row_ptr.push(0);
+        self.cols.clear();
+        self.cols.reserve(nb_rows * nb_cols);
+    }
+
+    pub fn nb_rows(&self) -> usize {
+        self.nb_rows
+    }
+
+    pub fn nb_cols(&self) -> usize {
+        self.nb_cols
+    }
+
+    /// Total kept blocks.
+    pub fn kept(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Kept block-column indices of block-row `bi` (ascending).
+    pub fn row_cols(&self, bi: usize) -> &[u32] {
+        &self.cols[self.row_ptr[bi] as usize..self.row_ptr[bi + 1] as usize]
+    }
+
+    /// Range of packed block indices belonging to block-row `bi`.
+    pub fn row_range(&self, bi: usize) -> (usize, usize) {
+        (self.row_ptr[bi] as usize, self.row_ptr[bi + 1] as usize)
+    }
+
+    pub fn density(&self) -> f32 {
+        if self.nb_rows * self.nb_cols == 0 {
+            0.0
+        } else {
+            self.kept() as f32 / (self.nb_rows * self.nb_cols) as f32
+        }
+    }
+}
+
+/// Reusable per-head scratch arena. See the module docs for the stage
+/// walkthrough; the zero-steady-state-allocation guarantee is the
+/// point of this type.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    l: usize,
+    dh: usize,
+    dv: usize,
+    block: usize,
+    nb: usize,
+    /// Dense integer scores `[l, l]` (stage 1).
+    int_score: Vec<f32>,
+    /// Block importances θ `[nb, nb]` (stage 2).
+    theta: Vec<f32>,
+    /// Dense 0/1 keep mask `[nb, nb]` — kept for simulator compat.
+    mask: Vec<f32>,
+    kept: KeptBlocks,
+    /// Packed per-kept-block values (`kept × b×b`): approximated scores
+    /// after stage 4, attention probabilities after stage 5.
+    vals: Vec<f32>,
+    /// Head output `[l, dv]`.
+    out: Vec<f32>,
+    theta_head: f32,
+    head_kept: bool,
+    kept_density: f32,
+    /// Whether stages 4–6 ran (false when early head pruning fired).
+    fum_ran: bool,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resize buffers for a head shape. Allocation happens only when a
+    /// dimension grows past anything seen before; steady-state reuse is
+    /// free.
+    fn ensure(&mut self, l: usize, dh: usize, dv: usize, block: usize) {
+        assert!(block > 0 && l % block == 0, "seq len {l} not divisible by block {block}");
+        self.l = l;
+        self.dh = dh;
+        self.dv = dv;
+        self.block = block;
+        self.nb = l / block;
+        self.int_score.resize(l * l, 0.0);
+        self.theta.resize(self.nb * self.nb, 0.0);
+        self.mask.resize(self.nb * self.nb, 0.0);
+        // Worst case: every block kept. Clear first — `reserve` is
+        // relative to the current length, and the previous run's
+        // packed values would otherwise inflate the request past
+        // capacity and reallocate every call.
+        self.vals.clear();
+        self.vals.reserve(l * l);
+        self.out.resize(l * dv, 0.0);
+    }
+
+    /// One head through Algorithm 2, sparse-first. With
+    /// `early_exit = true`, a pruned head (`theta_head <= tau`) stops
+    /// after the integer pass + sparsity engine, exactly like the
+    /// hardware; with `false` the full pipeline runs so the attention
+    /// probabilities exist for diagnostics (the reference `hdp_head`
+    /// contract).
+    pub fn run(
+        &mut self,
+        iq: &Tensor,
+        fq: &Tensor,
+        ik: &Tensor,
+        fk: &Tensor,
+        v: &Tensor,
+        p: HdpParams,
+        early_exit: bool,
+    ) {
+        let (l, dh) = (iq.rows(), iq.cols());
+        assert_eq!((fq.rows(), fq.cols()), (l, dh), "fq shape");
+        assert_eq!((ik.rows(), ik.cols()), (l, dh), "ik shape");
+        assert_eq!((fk.rows(), fk.cols()), (l, dh), "fk shape");
+        assert_eq!(v.rows(), l, "v rows");
+        self.ensure(l, dh, v.cols(), p.block);
+        let (b, nb) = (self.block, self.nb);
+
+        // Stage 1: integer scores (dense, PE-array analogue).
+        iq.matmul_nt_into(ik, &mut self.int_score);
+
+        // Stage 2: block importances, head decision, kept-block list.
+        block_importance_into(&self.int_score, l, l, b, &mut self.theta);
+        self.theta_head = self.theta.iter().sum();
+        self.head_kept = self.theta_head > p.tau;
+        self.kept.clear(nb, nb);
+        for bi in 0..nb {
+            let trow = &self.theta[bi * nb..(bi + 1) * nb];
+            let th = row_threshold(trow, p.rho);
+            for (bj, &t) in trow.iter().enumerate() {
+                let keep = t >= th;
+                self.mask[bi * nb + bj] = f32::from(keep);
+                if keep {
+                    self.kept.cols.push(bj as u32);
+                }
+            }
+            self.kept.row_ptr.push(self.kept.cols.len() as u32);
+        }
+        self.kept_density = self.kept.density();
+
+        // Stage 3: early head pruning short-circuits everything below.
+        if early_exit && !self.head_kept {
+            self.fum_ran = false;
+            self.out.fill(0.0);
+            return;
+        }
+        self.fum_ran = true;
+
+        // Stage 4: FUM — fraction products for kept blocks only, into
+        // the packed block-value buffer. Same inner operation order as
+        // the reference implementation (bit-identical pre-softmax).
+        self.vals.resize(self.kept.kept() * b * b, 0.0);
+        let (iqd, fqd) = (iq.data(), fq.data());
+        let (ikd, fkd) = (ik.data(), fk.data());
+        let mut kidx = 0usize;
+        for bi in 0..nb {
+            for &bj in self.kept.row_cols(bi) {
+                let bj = bj as usize;
+                for r in 0..b {
+                    let i = bi * b + r;
+                    let iqr = &iqd[i * dh..(i + 1) * dh];
+                    let fqr = &fqd[i * dh..(i + 1) * dh];
+                    for c in 0..b {
+                        let j = bj * b + c;
+                        let ikr = &ikd[j * dh..(j + 1) * dh];
+                        let fkr = &fkd[j * dh..(j + 1) * dh];
+                        let mut acc = self.int_score[i * l + j];
+                        // IQ·FK + FQ·IK (+ FQ·FK when exact)
+                        if p.use_ff {
+                            for k in 0..dh {
+                                acc += iqr[k] * fkr[k] + fqr[k] * (ikr[k] + fkr[k]);
+                            }
+                        } else {
+                            for k in 0..dh {
+                                acc += iqr[k] * fkr[k] + fqr[k] * ikr[k];
+                            }
+                        }
+                        self.vals[(kidx * b + r) * b + c] = acc * p.inv_scale;
+                    }
+                }
+                kidx += 1;
+            }
+        }
+
+        // Stage 5: row-wise softmax over kept entries, in place.
+        self.softmax_kept(p.use_hw_softmax);
+
+        // Stage 6: P·V from kept block-columns. A pruned head's output
+        // is zero by contract (the reference zeroes it after the fact;
+        // we just skip the accumulation).
+        self.out.fill(0.0);
+        if self.head_kept {
+            let vd = v.data();
+            let dv = self.dv;
+            for bi in 0..nb {
+                let (ks, ke) = self.kept.row_range(bi);
+                for (kidx, &bj) in (ks..ke).zip(self.kept.row_cols(bi)) {
+                    let bj = bj as usize;
+                    for r in 0..b {
+                        let i = bi * b + r;
+                        for c in 0..b {
+                            let pij = self.vals[(kidx * b + r) * b + c];
+                            if pij == 0.0 {
+                                continue; // matches the dense matmul's skip
+                            }
+                            let j = bj * b + c;
+                            let vrow = &vd[j * dv..(j + 1) * dv];
+                            let orow = &mut self.out[i * dv..(i + 1) * dv];
+                            for (o, &vv) in orow.iter_mut().zip(vrow) {
+                                *o += pij * vv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Sparse row softmax over the packed kept-block values. Reproduces
+    /// the dense reference bit-for-bit: the row max additionally folds
+    /// in the `NEG_INF` sentinel whenever the row has pruned entries,
+    /// and pruned entries contribute exact zeros to the sum there, so
+    /// summing kept entries in ascending column order is identical.
+    fn softmax_kept(&mut self, use_hw: bool) {
+        let (b, nb) = (self.block, self.nb);
+        for bi in 0..nb {
+            let (ks, ke) = self.kept.row_range(bi);
+            let has_pruned = (ke - ks) < nb;
+            for r in 0..b {
+                let mut mx = if has_pruned { NEG_INF } else { f32::NEG_INFINITY };
+                for k in ks..ke {
+                    let base = (k * b + r) * b;
+                    for c in 0..b {
+                        mx = mx.max(self.vals[base + c]);
+                    }
+                }
+                if mx == f32::NEG_INFINITY {
+                    continue; // no kept entries in an empty row
+                }
+                let mut sum = 0.0f32;
+                for k in ks..ke {
+                    let base = (k * b + r) * b;
+                    for c in 0..b {
+                        let x = self.vals[base + c];
+                        let e = if use_hw {
+                            hw_exp(x - mx)
+                        } else {
+                            let d = x - mx;
+                            if d < -80.0 {
+                                0.0
+                            } else {
+                                d.exp()
+                            }
+                        };
+                        self.vals[base + c] = e;
+                        sum += e;
+                    }
+                }
+                if sum == 0.0 {
+                    continue; // fully-underflowed row: zeros, not NaN
+                }
+                if use_hw {
+                    let rec = hw_reciprocal(sum);
+                    for k in ks..ke {
+                        let base = (k * b + r) * b;
+                        for c in 0..b {
+                            self.vals[base + c] *= rec;
+                        }
+                    }
+                } else {
+                    for k in ks..ke {
+                        let base = (k * b + r) * b;
+                        for c in 0..b {
+                            self.vals[base + c] /= sum;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // -- read-only views over the last run (allocation-free) ---------------
+
+    pub fn out(&self) -> &[f32] {
+        &self.out
+    }
+
+    pub fn mask(&self) -> &[f32] {
+        &self.mask
+    }
+
+    pub fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+
+    pub fn kept_blocks(&self) -> &KeptBlocks {
+        &self.kept
+    }
+
+    pub fn theta_head(&self) -> f32 {
+        self.theta_head
+    }
+
+    pub fn head_kept(&self) -> bool {
+        self.head_kept
+    }
+
+    pub fn kept_density(&self) -> f32 {
+        self.kept_density
+    }
+
+    /// Materialize the reference [`HdpHeadOutput`] (allocates: this is
+    /// the compatibility exit, not the hot path). The dense probability
+    /// matrix is scattered from the packed kept-block values; pruned
+    /// entries are exact zeros, as the sentinel softmax produced.
+    pub fn to_head_output(&self) -> HdpHeadOutput {
+        let (l, b, nb) = (self.l, self.block, self.nb);
+        let mut probs = vec![0.0f32; l * l];
+        if self.fum_ran {
+            let mut kidx = 0usize;
+            for bi in 0..nb {
+                for &bj in self.kept.row_cols(bi) {
+                    let bj = bj as usize;
+                    for r in 0..b {
+                        let src = (kidx * b + r) * b;
+                        let dst = (bi * b + r) * l + bj * b;
+                        probs[dst..dst + b].copy_from_slice(&self.vals[src..src + b]);
+                    }
+                    kidx += 1;
+                }
+            }
+        }
+        HdpHeadOutput {
+            out: Tensor::new(&[l, self.dv], self.out.clone()),
+            probs: Tensor::new(&[l, l], probs),
+            mask: Tensor::new(&[nb, nb], self.mask.clone()),
+            theta: Tensor::new(&[nb, nb], self.theta.clone()),
+            theta_head: self.theta_head,
+            head_kept: self.head_kept,
+            kept_density: self.kept_density,
+        }
+    }
+}
+
+/// Reference-compatible single-head entry point over a caller-owned
+/// workspace: full pipeline (no early exit), materialized output.
+pub fn hdp_head_with(
+    ws: &mut Workspace,
+    iq: &Tensor,
+    fq: &Tensor,
+    ik: &Tensor,
+    fk: &Tensor,
+    v: &Tensor,
+    p: HdpParams,
+) -> HdpHeadOutput {
+    ws.run(iq, fq, ik, fk, v, p, false);
+    ws.to_head_output()
+}
+
+/// One head's result from [`MhaKernel::forward_layer`] — the lean
+/// serving-path view (no dense probability matrix).
+#[derive(Debug, Clone)]
+pub struct HeadOutput {
+    pub out: Tensor,
+    pub theta_head: f32,
+    pub head_kept: bool,
+    pub kept_density: f32,
+    pub kept_blocks: usize,
+}
+
+/// Multi-head attention kernel: a workspace pool plus a thread budget.
+/// `forward_layer` fans every head of a layer out across worker
+/// threads, short-circuiting early-pruned heads before the FUM stage
+/// (Algorithm 2's early head pruning), and returns per-head outputs in
+/// head order — bitwise identical for any thread count.
+pub struct MhaKernel {
+    params: HdpParams,
+    threads: usize,
+    pool: Mutex<Vec<Workspace>>,
+}
+
+impl MhaKernel {
+    /// Kernel with the host's configured parallelism
+    /// (`HDP_THREADS`-overridable, see `util::threadpool`).
+    pub fn new(params: HdpParams) -> Self {
+        Self { params, threads: configured_threads(), pool: Mutex::new(Vec::new()) }
+    }
+
+    /// Override the fan-out width (used by the determinism tests and
+    /// single-core baselines).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn params(&self) -> HdpParams {
+        self.params
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Forward one layer's heads (`heads[i] = (iq, fq, ik, fk, v)`).
+    pub fn forward_layer(
+        &self,
+        heads: &[(&Tensor, &Tensor, &Tensor, &Tensor, &Tensor)],
+    ) -> Vec<HeadOutput> {
+        parallel_map(heads.len(), self.threads, |h| {
+            let mut ws = self.pool.lock().unwrap().pop().unwrap_or_default();
+            let (iq, fq, ik, fk, v) = heads[h];
+            ws.run(iq, fq, ik, fk, v, self.params, true);
+            let result = HeadOutput {
+                out: Tensor::new(&[iq.rows(), v.cols()], ws.out().to_vec()),
+                theta_head: ws.theta_head(),
+                head_kept: ws.head_kept(),
+                kept_density: ws.kept_density(),
+                kept_blocks: ws.kept_blocks().kept(),
+            };
+            self.pool.lock().unwrap().push(ws);
+            result
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::hdp::hdp_head_reference;
+    use crate::fixed::{quant_split_tensor, QuantProfile};
+    use crate::util::rng::SplitMix64;
+
+    fn rand_head(seed: u64, l: usize, dh: usize)
+        -> (Tensor, Tensor, Tensor, Tensor, Tensor, f32) {
+        let mut r = SplitMix64::new(seed);
+        let mut randv =
+            |n: usize| -> Vec<f32> { (0..n).map(|_| r.next_normal() as f32 * 2.0).collect() };
+        let prof = QuantProfile::Q4_12;
+        let (iq, fq, sq) = quant_split_tensor(&randv(l * dh), prof);
+        let (ik, fk, sk) = quant_split_tensor(&randv(l * dh), prof);
+        let inv = 1.0 / (sq * sk * (dh as f32).sqrt());
+        (
+            Tensor::new(&[l, dh], iq),
+            Tensor::new(&[l, dh], fq),
+            Tensor::new(&[l, dh], ik),
+            Tensor::new(&[l, dh], fk),
+            Tensor::new(&[l, dh], randv(l * dh)),
+            inv,
+        )
+    }
+
+    fn params(rho: f32, tau: f32, inv: f32) -> HdpParams {
+        HdpParams { rho, tau, inv_scale: inv, ..Default::default() }
+    }
+
+    #[test]
+    fn workspace_matches_reference_hdp_head_bitwise() {
+        for (seed, rho) in [(1u64, 0.0f32), (2, 0.5), (3, 0.9), (4, -0.5)] {
+            let (iq, fq, ik, fk, v, inv) = rand_head(seed, 16, 8);
+            let reference =
+                hdp_head_reference(&iq, &fq, &ik, &fk, &v, params(rho, -1.0, inv));
+            let mut ws = Workspace::new();
+            let got = hdp_head_with(&mut ws, &iq, &fq, &ik, &fk, &v, params(rho, -1.0, inv));
+            assert_eq!(got.out.data(), reference.out.data(), "out rho={rho}");
+            assert_eq!(got.probs.data(), reference.probs.data(), "probs rho={rho}");
+            assert_eq!(got.mask.data(), reference.mask.data(), "mask rho={rho}");
+            assert_eq!(got.theta.data(), reference.theta.data(), "theta rho={rho}");
+            assert_eq!(got.theta_head.to_bits(), reference.theta_head.to_bits());
+            assert_eq!(got.kept_density.to_bits(), reference.kept_density.to_bits());
+        }
+    }
+
+    #[test]
+    fn hw_softmax_path_matches_reference() {
+        let (iq, fq, ik, fk, v, inv) = rand_head(9, 16, 8);
+        let p = HdpParams {
+            rho: 0.4, tau: -1.0, inv_scale: inv, use_hw_softmax: true,
+            ..Default::default()
+        };
+        let reference = hdp_head_reference(&iq, &fq, &ik, &fk, &v, p);
+        let mut ws = Workspace::new();
+        let got = hdp_head_with(&mut ws, &iq, &fq, &ik, &fk, &v, p);
+        assert_eq!(got.probs.data(), reference.probs.data());
+        assert_eq!(got.out.data(), reference.out.data());
+    }
+
+    #[test]
+    fn workspace_reuse_is_stateless() {
+        // Reusing one workspace across shapes and sparsities must give
+        // the same answers as fresh workspaces: no stale state leaks.
+        let mut ws = Workspace::new();
+        for (seed, l, rho) in [(7u64, 32usize, 0.9f32), (8, 16, 0.0), (9, 32, 0.5)] {
+            let (iq, fq, ik, fk, v, inv) = rand_head(seed, l, 8);
+            let reused = hdp_head_with(&mut ws, &iq, &fq, &ik, &fk, &v, params(rho, -1.0, inv));
+            let fresh = hdp_head_with(
+                &mut Workspace::new(), &iq, &fq, &ik, &fk, &v, params(rho, -1.0, inv),
+            );
+            assert_eq!(reused.out.data(), fresh.out.data());
+            assert_eq!(reused.probs.data(), fresh.probs.data());
+        }
+    }
+
+    #[test]
+    fn kept_blocks_agree_with_mask() {
+        let (iq, fq, ik, fk, v, inv) = rand_head(11, 32, 8);
+        let mut ws = Workspace::new();
+        ws.run(&iq, &fq, &ik, &fk, &v, params(0.4, -1.0, inv), false);
+        let kb = ws.kept_blocks();
+        let nb = kb.nb_rows();
+        let mut from_list = vec![0.0f32; nb * nb];
+        for bi in 0..nb {
+            let cols = kb.row_cols(bi);
+            assert!(cols.windows(2).all(|w| w[0] < w[1]), "ascending");
+            assert!(!cols.is_empty(), "every block-row keeps its argmax");
+            for &bj in cols {
+                from_list[bi * nb + bj as usize] = 1.0;
+            }
+        }
+        assert_eq!(from_list, ws.mask());
+        assert_eq!(kb.kept() as f32 / (nb * nb) as f32, ws.kept_density());
+    }
+
+    #[test]
+    fn forward_layer_parallel_matches_serial_bitwise() {
+        // Satellite: threads=1 and threads=N must be bitwise identical
+        // across seeds (each head is a pure function; parallel_map
+        // preserves index order).
+        for seed in [100u64, 200, 300] {
+            let heads: Vec<_> = (0..8).map(|h| rand_head(seed + h, 32, 16)).collect();
+            let refs: Vec<_> = heads
+                .iter()
+                .map(|(a, b, c, d, e, _)| (a, b, c, d, e))
+                .collect();
+            let inv = heads[0].5;
+            let p = params(0.4, 0.0, inv);
+            let serial = MhaKernel::new(p).with_threads(1).forward_layer(&refs);
+            let parallel = MhaKernel::new(p).with_threads(8).forward_layer(&refs);
+            assert_eq!(serial.len(), parallel.len());
+            for (s, q) in serial.iter().zip(&parallel) {
+                assert_eq!(s.out.data(), q.out.data(), "seed {seed}");
+                assert_eq!(s.theta_head.to_bits(), q.theta_head.to_bits());
+                assert_eq!(s.head_kept, q.head_kept);
+                assert_eq!(s.kept_density.to_bits(), q.kept_density.to_bits());
+                assert_eq!(s.kept_blocks, q.kept_blocks);
+            }
+        }
+    }
+
+    #[test]
+    fn forward_layer_matches_per_head_reference() {
+        let heads: Vec<_> = (0..4).map(|h| rand_head(40 + h, 16, 8)).collect();
+        let refs: Vec<_> = heads.iter().map(|(a, b, c, d, e, _)| (a, b, c, d, e)).collect();
+        let inv = heads[0].5;
+        let p = params(0.3, -1.0, inv);
+        let outs = MhaKernel::new(p).forward_layer(&refs);
+        for ((iq, fq, ik, fk, v, _), got) in heads.iter().zip(&outs) {
+            let want = hdp_head_reference(iq, fq, ik, fk, v, p);
+            assert_eq!(got.out.data(), want.out.data());
+            assert_eq!(got.head_kept, want.head_kept);
+            assert_eq!(got.kept_density.to_bits(), want.kept_density.to_bits());
+        }
+    }
+
+    #[test]
+    fn early_pruned_head_short_circuits_to_zero() {
+        let (iq, fq, ik, fk, v, inv) = rand_head(5, 16, 8);
+        let p = params(0.0, 1e9, inv); // tau prunes every head
+        let outs = MhaKernel::new(p).forward_layer(&[(&iq, &fq, &ik, &fk, &v)]);
+        assert!(!outs[0].head_kept);
+        assert_eq!(outs[0].out.abs_sum(), 0.0);
+        // ...and it really skipped the FUM stage:
+        let mut ws = Workspace::new();
+        ws.run(&iq, &fq, &ik, &fk, &v, p, true);
+        assert!(!ws.fum_ran);
+        // the decision trail is still available for the simulator
+        assert!(ws.kept_blocks().kept() > 0);
+        assert!(ws.theta_head() > 0.0);
+    }
+
+    #[test]
+    fn sparse_probs_rows_sum_to_one() {
+        let (iq, fq, ik, fk, v, inv) = rand_head(21, 32, 8);
+        let mut ws = Workspace::new();
+        let out = hdp_head_with(&mut ws, &iq, &fq, &ik, &fk, &v, params(0.7, -1.0, inv));
+        for i in 0..32 {
+            let s: f32 = out.probs.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {i}: {s}");
+        }
+    }
+}

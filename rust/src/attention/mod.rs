@@ -8,9 +8,11 @@
 
 pub mod hdp;
 pub mod heads;
+pub mod kernel;
 pub mod reference;
 pub mod topk;
 
 pub use hdp::{hdp_head, HdpHeadOutput, HdpParams};
+pub use kernel::{MhaKernel, Workspace};
 pub use reference::dense_head;
 pub use topk::topk_head;

@@ -64,6 +64,14 @@ impl EvalResult {
         }
     }
 
+    /// The measured operating point `(kept_density, head_kept_frac)`
+    /// in the shape the cycle-simulator sweeps and the attention-kernel
+    /// harness consume (`sim::estimate_model`, `figures::arch`,
+    /// `figures::kernel_sweep`).
+    pub fn operating_point(&self) -> (f32, f32) {
+        (self.mean_density() as f32, self.mean_head_kept() as f32)
+    }
+
     /// Net fraction of Q·K score work pruned: pruned heads drop all of
     /// their blocks, kept heads drop (1 - density) (paper Fig. 10's
     /// "net pruning ratio").

@@ -6,11 +6,16 @@
 
 use anyhow::{Context, Result};
 
+use crate::attention::{HdpParams, MhaKernel};
 use crate::data::Dataset;
+use crate::fixed::{quant_split_tensor, QuantProfile};
 use crate::model::{EvalResult, Evaluator, ParamStore};
 use crate::runtime::Runtime;
 use crate::sim::{self, baselines, SimConfig};
+use crate::tensor::Tensor;
 use crate::util::csv::{Cell, Table};
+use crate::util::rng::SplitMix64;
+use crate::util::threadpool::configured_threads;
 
 pub const QSTEP16: f32 = 1.0 / 4096.0; // Q4.12
 pub const QSTEP12: f32 = 1.0 / 256.0; // Q4.8 (SpAtten comparison)
@@ -303,6 +308,88 @@ pub fn fig11(rt: &Runtime, weights_dir: &str, out: &str, n: usize) -> Result<()>
     Ok(())
 }
 
+/// Functional-kernel sweep (artifact-free): drive every head of a
+/// BERT-shaped attention layer through [`MhaKernel::forward_layer`] —
+/// the sparse-first workspace kernel with parallel head fan-out —
+/// across the rho sweep, and record wall time, kept density and the
+/// software speedup over the rho = -1 (keep everything) arm. This is
+/// the host-side companion to `arch`: `arch` reports what the
+/// *simulated silicon* saves, this reports what the *rust datapath*
+/// actually saves on this machine, using every core (`HDP_THREADS`
+/// overrides the fan-out).
+pub fn kernel_sweep(out: &str, n_heads: usize, l: usize, dh: usize) -> Result<()> {
+    let prof = QuantProfile::Q4_12;
+    let mut rng = SplitMix64::new(4242);
+    let mut randv =
+        |n: usize| -> Vec<f32> { (0..n).map(|_| rng.next_normal() as f32 * 2.0).collect() };
+    let mut heads = Vec::with_capacity(n_heads);
+    let mut inv = 1.0f32;
+    for _ in 0..n_heads {
+        let (iq, fq, sq) = quant_split_tensor(&randv(l * dh), prof);
+        let (ik, fk, sk) = quant_split_tensor(&randv(l * dh), prof);
+        inv = 1.0 / (sq * sk * (dh as f32).sqrt());
+        heads.push((
+            Tensor::new(&[l, dh], iq),
+            Tensor::new(&[l, dh], fq),
+            Tensor::new(&[l, dh], ik),
+            Tensor::new(&[l, dh], fk),
+            Tensor::new(&[l, dh], randv(l * dh)),
+        ));
+    }
+    let refs: Vec<_> = heads.iter().map(|(a, b, c, d, e)| (a, b, c, d, e)).collect();
+    let threads = configured_threads();
+    println!("kernel_sweep: {n_heads} heads of [{l}, {dh}] across {threads} threads");
+
+    let mut t = Table::new(&[
+        "rho", "kept_density", "heads_kept", "wall_ms", "speedup_vs_dense",
+    ]);
+    let time_layer = |kernel: &MhaKernel| -> (f64, f64, usize) {
+        // One warm pass populates the workspace pool, then the timed
+        // passes run allocation-free.
+        let _ = kernel.forward_layer(&refs);
+        let reps = 3;
+        let t0 = std::time::Instant::now();
+        let mut outs = Vec::new();
+        for _ in 0..reps {
+            outs = kernel.forward_layer(&refs);
+        }
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        let dens = outs.iter().map(|o| o.kept_density as f64).sum::<f64>()
+            / outs.len().max(1) as f64;
+        let kept = outs.iter().filter(|o| o.head_kept).count();
+        (wall_ms, dens, kept)
+    };
+
+    let dense_kernel = MhaKernel::new(HdpParams {
+        rho: -1.0, tau: -1.0, inv_scale: inv, ..Default::default()
+    });
+    let (dense_ms, _, _) = time_layer(&dense_kernel);
+
+    let mut rhos = vec![-1.0f32];
+    rhos.extend(rho_sweep());
+    for rho in rhos {
+        let kernel = MhaKernel::new(HdpParams {
+            rho, tau: -1.0, inv_scale: inv, ..Default::default()
+        });
+        let (wall_ms, dens, kept) = time_layer(&kernel);
+        t.row(&[
+            Cell::F(rho as f64),
+            Cell::F(dens),
+            Cell::I(kept as i64),
+            Cell::F(wall_ms),
+            Cell::F(dense_ms / wall_ms),
+        ]);
+        println!(
+            "  rho {rho:>5.2}: density {dens:.3}  wall {wall_ms:>8.3} ms  \
+             speedup {:.2}x",
+            dense_ms / wall_ms
+        );
+    }
+    t.write(format!("{out}/kernel_sweep.csv"))?;
+    println!("kernel_sweep: csv written ({} rows)", t.len());
+    Ok(())
+}
+
 /// Table I — capability matrix, printed from what the implementations
 /// actually support.
 pub fn table1() {
@@ -412,5 +499,5 @@ fn measure_operating_point(rt: &Runtime, params: &ParamStore, n: usize)
             rho: 0.0, tau: 4096.0, qstep: QSTEP16,
             use_ff: false, use_hw: false,
         })?;
-    Ok((r.mean_density() as f32, r.mean_head_kept() as f32))
+    Ok(r.operating_point())
 }

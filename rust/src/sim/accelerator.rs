@@ -5,6 +5,7 @@
 
 use crate::attention::hdp::HdpParams;
 use crate::tensor::Tensor;
+use crate::util::threadpool::{configured_threads, parallel_map};
 
 use super::config::SimConfig;
 use super::core::{cost_head, cost_head_dense, run_head, HeadRun, Report};
@@ -79,15 +80,21 @@ fn pack(cfg: &SimConfig, reports: &[Report], densities: &[f32],
 
 /// Functional + cycle-accurate pass over one layer's heads.
 /// `heads[i] = (iq, fq, ik, fk, v)`.
+///
+/// Heads fan out across [`parallel_map`] worker threads
+/// (`HDP_THREADS`-overridable): each head is an independent pure
+/// function over its inputs, so results are bitwise identical to the
+/// serial pass, in head order — only the wall clock changes.
 pub fn run_layer(
     cfg: &SimConfig,
     heads: &[(&Tensor, &Tensor, &Tensor, &Tensor, &Tensor)],
     params: HdpParams,
 ) -> (Vec<HeadRun>, ChipReport) {
-    let runs: Vec<HeadRun> = heads
-        .iter()
-        .map(|(iq, fq, ik, fk, v)| run_head(cfg, iq, fq, ik, fk, v, params))
-        .collect();
+    let threads = configured_threads();
+    let runs: Vec<HeadRun> = parallel_map(heads.len(), threads, |i| {
+        let (iq, fq, ik, fk, v) = heads[i];
+        run_head(cfg, iq, fq, ik, fk, v, params)
+    });
     let reports: Vec<Report> = runs.iter().map(|r| r.report).collect();
     let dens: Vec<f32> = runs.iter().map(|r| r.out.kept_density).collect();
     let pruned = runs.iter().filter(|r| !r.out.head_kept).count();

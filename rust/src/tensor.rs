@@ -121,19 +121,60 @@ impl Tensor {
     /// `self [m,k] x other^T where other is [n,k] -> [m,n]` — the
     /// Q·Kᵀ shape, dot-product form.
     pub fn matmul_nt(&self, other: &Tensor) -> Tensor {
+        let m = self.rows();
+        let n = other.rows();
+        let mut out = vec![0.0f32; m * n];
+        self.matmul_nt_into(other, &mut out);
+        Tensor::new(&[m, n], out)
+    }
+
+    /// Allocation-free `matmul_nt` into a caller-owned buffer — the
+    /// form the attention kernel's [`crate::attention::kernel::Workspace`]
+    /// reuses across heads.
+    ///
+    /// Register-blocked microkernel: 4×4 output tiles accumulate in
+    /// locals while both operands stream row-major, so each k step
+    /// issues 16 independent FMAs (the naive per-element dot product
+    /// serializes on one accumulator). Each `out[i][j]` is still a
+    /// single running sum over `k` in ascending order, so results are
+    /// bit-identical to the scalar loop — the integer-score path of
+    /// Algorithm 2 depends on that.
+    pub fn matmul_nt_into(&self, other: &Tensor, out: &mut [f32]) {
         let (m, k) = (self.rows(), self.cols());
         let (n, k2) = (other.rows(), other.cols());
         assert_eq!(k, k2, "matmul_nt inner dims {k} vs {k2}");
-        let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            for j in 0..n {
-                let brow = &other.data[j * k..(j + 1) * k];
-                out[i * n + j] =
-                    arow.iter().zip(brow).map(|(a, b)| a * b).sum();
+        assert_eq!(out.len(), m * n, "matmul_nt_into: out len {} != {m}x{n}", out.len());
+        const MR: usize = 4;
+        const NR: usize = 4;
+        let a = &self.data;
+        let b = &other.data;
+        let mut i = 0;
+        while i < m {
+            let ih = MR.min(m - i);
+            let mut j = 0;
+            while j < n {
+                let jh = NR.min(n - j);
+                let mut acc = [[0.0f32; NR]; MR];
+                for p in 0..k {
+                    let mut bv = [0.0f32; NR];
+                    for (jj, v) in bv.iter_mut().enumerate().take(jh) {
+                        *v = b[(j + jj) * k + p];
+                    }
+                    for (ii, accrow) in acc.iter_mut().enumerate().take(ih) {
+                        let av = a[(i + ii) * k + p];
+                        for (jj, s) in accrow.iter_mut().enumerate().take(jh) {
+                            *s += av * bv[jj];
+                        }
+                    }
+                }
+                for ii in 0..ih {
+                    let orow = &mut out[(i + ii) * n + j..(i + ii) * n + j + jh];
+                    orow.copy_from_slice(&acc[ii][..jh]);
+                }
+                j += NR;
             }
+            i += MR;
         }
-        Tensor::new(&[m, n], out)
     }
 
     pub fn transpose2(&self) -> Tensor {
@@ -176,14 +217,19 @@ impl Tensor {
             .fold(0.0, f32::max)
     }
 
-    /// Row-wise softmax over a 2-D tensor, excluding entries <= `floor`
-    /// (the pruned-score sentinel) from the normalization.
+    /// Row-wise softmax over a 2-D tensor. A row whose exponentials
+    /// all vanish (every entry `-inf`, or everything 80+ below the row
+    /// max — `sum == 0`) comes back as a zero row instead of the
+    /// `0/0 = NaN` the naive normalization would produce.
     pub fn softmax_rows(&self) -> Tensor {
         let (m, n) = (self.rows(), self.cols());
         let mut out = vec![0.0f32; m * n];
         for i in 0..m {
             let row = self.row(i);
             let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            if mx == f32::NEG_INFINITY {
+                continue; // fully-masked row: stays zero
+            }
             let mut sum = 0.0f32;
             for (j, &x) in row.iter().enumerate() {
                 // §Perf: entries 80+ below the row max underflow to 0
@@ -193,6 +239,9 @@ impl Tensor {
                 let e = if d < -80.0 { 0.0 } else { d.exp() };
                 out[i * n + j] = e;
                 sum += e;
+            }
+            if sum == 0.0 {
+                continue; // all exponentials underflowed: zero row
             }
             for j in 0..n {
                 out[i * n + j] /= sum;
@@ -251,6 +300,46 @@ mod tests {
             assert!((sum - 1.0).abs() < 1e-5);
             assert!(s.row(i).iter().all(|&p| p >= 0.0));
         }
+    }
+
+    #[test]
+    fn softmax_fully_pruned_row_is_zero_not_nan() {
+        // Regression: a row of -inf (or any row whose exponentials all
+        // underflow) used to normalize by sum == 0 and fill with NaN.
+        let a = Tensor::new(
+            &[2, 3],
+            vec![f32::NEG_INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY, //
+                 1.0, 2.0, 3.0],
+        );
+        let s = a.softmax_rows();
+        assert_eq!(s.row(0), &[0.0, 0.0, 0.0]);
+        assert!(s.row(0).iter().all(|p| !p.is_nan()));
+        assert!((s.row(1).iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn matmul_nt_into_matches_matmul_nt_bitwise() {
+        // The blocked microkernel must agree bit-for-bit with the
+        // allocating entry point on awkward (non-multiple-of-tile)
+        // shapes.
+        for (m, n, k) in [(1usize, 1usize, 1usize), (3, 5, 7), (4, 4, 16),
+                          (9, 6, 13), (17, 33, 8)] {
+            let a = randt(&[m, k], (m * 100 + n) as u64);
+            let b = randt(&[n, k], (n * 100 + k) as u64);
+            let want = a.matmul_nt(&b);
+            let mut out = vec![9.9f32; m * n];
+            a.matmul_nt_into(&b, &mut out);
+            assert_eq!(out, want.data(), "shape {m}x{n}x{k}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out len")]
+    fn matmul_nt_into_checks_out_len() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4, 3]);
+        let mut out = vec![0.0; 7];
+        a.matmul_nt_into(&b, &mut out);
     }
 
     #[test]

@@ -62,6 +62,11 @@ impl Args {
             };
             s.push_str(&format!("  --{}{}\n      {}\n", f.name, kind, f.help));
         }
+        s.push_str(
+            "\nenvironment:\n  HDP_THREADS\n      worker threads for the multi-head \
+             attention kernel, figure\n      sweeps and the serving pool \
+             (default: host cores - 1)\n",
+        );
         s
     }
 
@@ -213,5 +218,10 @@ mod tests {
         let u = args().usage();
         assert!(u.contains("--model"));
         assert!(u.contains("--out"));
+    }
+
+    #[test]
+    fn help_documents_thread_env_var() {
+        assert!(args().usage().contains("HDP_THREADS"));
     }
 }

@@ -39,10 +39,10 @@ impl ThreadPool {
         Self { tx: Some(tx), workers }
     }
 
-    /// Pool sized to the machine (leaving one core for the coordinator).
+    /// Pool sized to [`configured_threads`] (host cores minus one for
+    /// the coordinator, overridable via `HDP_THREADS`).
     pub fn host_sized() -> Self {
-        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-        Self::new(n.saturating_sub(1).max(1))
+        Self::new(configured_threads())
     }
 
     pub fn size(&self) -> usize {
@@ -65,6 +65,23 @@ impl Drop for ThreadPool {
             let _ = w.join();
         }
     }
+}
+
+/// Worker-thread budget for parallel fan-out (the attention kernel,
+/// figure sweeps, `ThreadPool::host_sized`): the `HDP_THREADS` env var
+/// when set to a positive integer, otherwise host cores minus one (the
+/// coordinator keeps a core). Invalid or zero values fall back to the
+/// host default.
+pub fn configured_threads() -> usize {
+    if let Ok(v) = std::env::var("HDP_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    n.saturating_sub(1).max(1)
 }
 
 /// Scoped parallel map: applies `f` to `0..n` across `threads` OS
@@ -160,5 +177,11 @@ mod tests {
     #[test]
     fn host_sized_nonzero() {
         assert!(ThreadPool::host_sized().size() >= 1);
+    }
+
+    #[test]
+    fn configured_threads_positive() {
+        // Whatever the environment says, the answer is a usable count.
+        assert!(configured_threads() >= 1);
     }
 }

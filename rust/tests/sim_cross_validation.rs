@@ -60,6 +60,13 @@ fn sim_functional_output_matches_pjrt() {
         all.4.extend_from_slice(&v);
         per_head.push((iq, fq, ik, fk, v));
     }
+    let per_head_t: Vec<(Tensor, Tensor, Tensor, Tensor, Tensor)> = per_head
+        .iter()
+        .map(|(iq, fq, ik, fk, v)| {
+            let t = |d: &[f32]| Tensor::new(&[l, dh], d.to_vec());
+            (t(iq), t(fq), t(ik), t(fk), t(v))
+        })
+        .collect();
     let rho = 0.4f32;
     let tau = 0.0f32;
     let outs = rt
@@ -83,13 +90,20 @@ fn sim_functional_output_matches_pjrt() {
     let jax_out = to_vec_f32(&outs[0]).unwrap();
     let jax_dens = to_vec_f32(&outs[2]).unwrap();
 
-    for (head, (iq, fq, ik, fk, v)) in per_head.iter().enumerate() {
-        let t = |d: &[f32]| Tensor::new(&[l, dh], d.to_vec());
-        let run = sim::run_head(
-            &cfg,
-            &t(iq), &t(fq), &t(ik), &t(fk), &t(v),
-            HdpParams { rho, tau, inv_scale: inv, ..Default::default() },
-        );
+    // All heads in one layer pass through the parallel multi-head
+    // kernel path (bitwise identical to per-head serial execution).
+    let refs: Vec<_> = per_head_t
+        .iter()
+        .map(|(a, b, c, d, e)| (a, b, c, d, e))
+        .collect();
+    let (runs, chip) = sim::run_layer(
+        &cfg, &refs,
+        HdpParams { rho, tau, inv_scale: inv, ..Default::default() },
+    );
+    assert_eq!(runs.len(), h);
+    assert!(chip.cycles > 0.0);
+
+    for (head, run) in runs.iter().enumerate() {
         // functional agreement
         let s = head * l * dh;
         let jax = Tensor::new(&[l, dh], jax_out[s..s + l * dh].to_vec());

@@ -1,0 +1,285 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The sandbox cannot reach crates.io, so this vendored crate carries
+//! exactly the API subset `hdp` uses: `Error`, `Result`, the
+//! `anyhow!` / `bail!` / `ensure!` macros and the `Context` extension
+//! trait (on both `Result` and `Option`). Semantics mirror the real
+//! crate where it matters:
+//!
+//! * `Display` prints the outermost message; the alternate form
+//!   (`{:#}`) prints the whole cause chain separated by `: `.
+//! * `Debug` prints the message plus a `Caused by:` list, so
+//!   `.unwrap()` failures stay readable.
+//! * Any `std::error::Error + Send + Sync + 'static` converts into
+//!   `Error` via `?`.
+//!
+//! `Error` intentionally does *not* implement `std::error::Error`
+//! (same as real anyhow) — that is what makes the blanket `From` and
+//! the dual `Context` impls coherent.
+
+use std::fmt::{self, Debug, Display};
+
+/// Error: a message plus an optional chain of causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// `anyhow::Result<T>` — `Result` with `Error` as the default error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: Display>(m: M) -> Self {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: Display>(self, context: C) -> Self {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The cause chain, outermost first (the error itself included).
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self) }
+    }
+
+    /// The innermost cause message.
+    pub fn root_cause(&self) -> &Error {
+        let mut e = self;
+        while let Some(s) = &e.source {
+            e = s;
+        }
+        e
+    }
+}
+
+/// Iterator over an error's cause chain.
+pub struct Chain<'a> {
+    next: Option<&'a Error>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a Error;
+
+    fn next(&mut self) -> Option<&'a Error> {
+        let cur = self.next.take()?;
+        self.next = cur.source.as_deref();
+        Some(cur)
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut s = self.source.as_deref();
+            while let Some(e) = s {
+                write!(f, ": {}", e.msg)?;
+                s = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut s = self.source.as_deref();
+        if s.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = s {
+            write!(f, "\n    {}", e.msg)?;
+            s = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut msgs = vec![e.to_string()];
+        let mut s = e.source();
+        while let Some(x) = s {
+            msgs.push(x.to_string());
+            s = x.source();
+        }
+        let mut err: Option<Error> = None;
+        for m in msgs.into_iter().rev() {
+            err = Some(Error { msg: m, source: err.map(Box::new) });
+        }
+        err.expect("at least one message")
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any `Display`).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "Condition failed: `", stringify!($cond), "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+// -- Context ----------------------------------------------------------------
+
+mod private {
+    pub trait IntoError {
+        fn into_err(self) -> super::Error;
+    }
+
+    impl IntoError for super::Error {
+        fn into_err(self) -> super::Error {
+            self
+        }
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_err(self) -> super::Error {
+            super::Error::from(self)
+        }
+    }
+}
+
+/// `.context(..)` / `.with_context(|| ..)` on `Result` (with either a
+/// std error or an [`Error`] inside) and on `Option`.
+pub trait Context<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: private::IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_err().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_err().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("inner {}", 42)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "inner 42");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_format() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner 42");
+        assert_eq!(e.root_cause().to_string(), "inner 42");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn with_context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "gone",
+        ));
+        let e = r.with_context(|| format!("opening {}", "x")).unwrap_err();
+        assert_eq!(format!("{e:#}"), "opening x: gone");
+
+        let n: Option<u32> = None;
+        assert_eq!(n.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(7u32).context("missing").unwrap(), 7);
+    }
+
+    #[test]
+    fn ensure_forms() {
+        fn check(x: u32) -> Result<u32> {
+            ensure!(x > 1);
+            ensure!(x > 2, "too small: {x}");
+            Ok(x)
+        }
+        assert!(check(1).unwrap_err().to_string().contains("Condition failed"));
+        assert_eq!(check(2).unwrap_err().to_string(), "too small: 2");
+        assert_eq!(check(3).unwrap(), 3);
+    }
+
+    #[test]
+    fn std_error_converts_via_question_mark() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert!(parse("nope").is_err());
+        assert_eq!(parse("5").unwrap(), 5);
+    }
+
+    #[test]
+    fn debug_prints_cause_chain() {
+        let e = fails().context("outer").unwrap_err();
+        let d = format!("{e:?}");
+        assert!(d.contains("outer") && d.contains("Caused by") && d.contains("inner 42"));
+    }
+}

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Run the attention microbenchmarks and record a machine-readable
+# snapshot so future PRs can track the perf trajectory.
+#
+#   scripts/bench.sh [output.json] [--quick]
+#
+# Writes BENCH_attention.json (default, at the repo root) with one
+# record per op: {op, ns_per_iter, p50_ns, p95_ns, throughput_per_s,
+# unit}. The headline to watch: `kernel.head_ws 128x64 rho=0.9` must
+# stay >= 3x faster than `... rho=0.0` (sparse-first scaling).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+out="BENCH_attention.json"
+if [[ $# -gt 0 && $1 != --* ]]; then
+    out="$1"
+    shift
+fi
+
+cargo bench --bench bench_micro -- --json "$out" "$@"
+
+echo "bench results written to $out"

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 verification flow: release build, test suite, and (when the
+# component is installed) clippy with warnings denied.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+cargo test -q
+
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "warning: clippy not installed; lint gate skipped" >&2
+fi
+
+echo "verify: OK"
