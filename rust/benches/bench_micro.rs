@@ -12,15 +12,19 @@
 //! so `scripts/bench.sh` can track the perf trajectory across PRs;
 //! `--quick` shortens the per-bench time budget.
 
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
 use hdp::attention::hdp::{block_importance, block_mask, hdp_head, HdpParams};
 use hdp::attention::kernel::{MhaKernel, Workspace};
 use hdp::attention::topk::topk_mask;
+use hdp::coordinator::{Batcher, Engine, NativeModelConfig, Request, ServeMode};
 use hdp::fixed::{quant_split_tensor, QuantProfile};
-use hdp::sim::SparsityEngine;
+use hdp::sim::{SimConfig, SparsityEngine};
 use hdp::tensor::Tensor;
-use hdp::util::bench::{Bench, Measurement};
-use hdp::util::json::Json;
+use hdp::util::bench::{measurements_json, Bench, Measurement};
 use hdp::util::rng::SplitMix64;
+use hdp::util::threadpool::configured_threads;
 
 fn randt(shape: &[usize], seed: u64) -> Tensor {
     let mut r = SplitMix64::new(seed);
@@ -38,29 +42,6 @@ fn quant_head(seed: u64, l: usize, dh: usize)
     let (ik, fk, _) = quant_split_tensor(&randv(l * dh), prof);
     let t = |d: Vec<f32>| Tensor::new(&[l, dh], d);
     (t(iq), t(fq), t(ik), t(fk), t(randv(l * dh)))
-}
-
-fn measurements_to_json(ms: &[Measurement]) -> Json {
-    Json::obj(vec![
-        ("bench", Json::str("bench_micro")),
-        (
-            "results",
-            Json::arr(ms.iter().map(|m| {
-                let mut fields = vec![
-                    ("op", Json::str(&m.name)),
-                    ("ns_per_iter", Json::num(m.mean() * 1e9)),
-                    ("p50_ns", Json::num(m.p50() * 1e9)),
-                    ("p95_ns", Json::num(m.p95() * 1e9)),
-                    ("samples", Json::num(m.samples.len() as f64)),
-                ];
-                if let Some((units, label)) = m.units_per_iter {
-                    fields.push(("throughput_per_s", Json::num(units / m.mean())));
-                    fields.push(("unit", Json::str(label)));
-                }
-                Json::obj(fields)
-            })),
-        ),
-    ])
 }
 
 fn main() {
@@ -177,8 +158,64 @@ fn main() {
         ));
     }
 
-    // Headline ratio the acceptance criterion tracks: the kernel at
-    // rho=0.9 vs rho=0.0 (sparse-first means cost scales with density).
+    println!("\n== batched serving (native Engine::serve_batch) ==");
+    // 8 requests × 2 layers × 4 heads through one pool vs serving the
+    // same requests one at a time, serially — the coordinator's old
+    // request-by-request shape.
+    let geom = NativeModelConfig { n_layers: 2, n_heads: 4, d_head: 32 };
+    let mode = ServeMode::Hdp { rho: 0.5, tau: 0.0, qstep: 1.0 / 4096.0 };
+    let mk_engine = |threads: usize| -> Engine {
+        let batcher = Arc::new(Batcher::new(8, Duration::from_millis(1)));
+        Engine::new_native(geom, mode, SimConfig::edge(), batcher, threads)
+            .expect("native engine")
+    };
+    let reqs: Vec<Request> = (0..8u64)
+        .map(|id| {
+            let mut r = SplitMix64::new(900 + id);
+            Request {
+                id,
+                tokens: (0..64).map(|_| r.next_below(30_000) as i32).collect(),
+                enqueued: Instant::now(),
+            }
+        })
+        .collect();
+    // At least 4 workers even on small hosts: 64 head tasks per batch
+    // want the pool saturated, and oversubscription is harmless here.
+    // Op names match bench_serving's scheme so BENCH_attention.json and
+    // BENCH_serving.json records for the same quantity stay comparable.
+    let batched = mk_engine(configured_threads().max(4));
+    ms.push(b.run_throughput("serve_batch b=8 (batched pool)", 8.0, "req",
+                             || batched.serve_batch(&reqs).unwrap()));
+    let sequential = mk_engine(1);
+    ms.push(b.run_throughput("serve b=8 (sequential 1-at-a-time)",
+                             8.0, "req", || {
+        let mut served = 0usize;
+        for r in &reqs {
+            served += sequential.serve_batch(std::slice::from_ref(r)).unwrap().len();
+        }
+        served
+    }));
+    // Same thread budget, request-at-a-time: isolates the *batch-level*
+    // fan-out win (pool occupancy + one scope per batch) from the raw
+    // core count, so a regression in forward_batch itself shows up even
+    // on many-core hosts.
+    let same_threads = mk_engine(configured_threads().max(4));
+    ms.push(b.run_throughput(
+        "serve b=8 (request-at-a-time, same threads)",
+        8.0, "req", || {
+            let mut served = 0usize;
+            for r in &reqs {
+                served +=
+                    same_threads.serve_batch(std::slice::from_ref(r)).unwrap().len();
+            }
+            served
+        },
+    ));
+
+    // Headline ratios the acceptance criteria track: the kernel at
+    // rho=0.9 vs rho=0.0 (sparse-first means cost scales with density)
+    // and batched serving vs sequential request-at-a-time (batch-level
+    // fan-out keeps the pool saturated).
     let find = |needle: &str| -> Option<f64> {
         ms.iter().find(|m| m.name.contains(needle)).map(Measurement::mean)
     };
@@ -188,9 +225,21 @@ fn main() {
         println!("\nkernel.head_ws rho=0.9 speedup over rho=0.0: {:.2}x",
                  dense / sparse);
     }
+    if let (Some(seq), Some(bat)) =
+        (find("sequential 1-at-a-time"), find("batched pool"))
+    {
+        println!("serve_batch batched speedup over sequential (8 reqs): {:.2}x",
+                 seq / bat);
+    }
+    if let (Some(same), Some(bat)) =
+        (find("request-at-a-time, same threads"), find("batched pool"))
+    {
+        println!("serve_batch batched speedup over same-thread \
+                  request-at-a-time (8 reqs): {:.2}x", same / bat);
+    }
 
     if let Some(path) = json_path {
-        let doc = measurements_to_json(&ms);
+        let doc = measurements_json("bench_micro", &ms);
         std::fs::write(&path, format!("{doc}\n")).expect("write bench json");
         println!("wrote {} ({} measurements)", path, ms.len());
     }

@@ -1,0 +1,140 @@
+//! Serving-path benchmark: native `Engine::serve_batch` throughput as a
+//! function of batch size, batched fan-out (requests × layers × heads
+//! through one worker pool) against sequential request-at-a-time
+//! execution — the curve `scripts/bench.sh` archives as
+//! `BENCH_serving.json` so PRs can track the serving trajectory the way
+//! `BENCH_attention.json` tracks the kernel.
+//!
+//! ```sh
+//! cargo bench --bench bench_serving -- --json BENCH_serving.json
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hdp::coordinator::{Batcher, Engine, NativeModelConfig, Request, ServeMode};
+use hdp::sim::SimConfig;
+use hdp::util::bench::{measurements_json, Bench, Measurement};
+use hdp::util::rng::SplitMix64;
+use hdp::util::threadpool::configured_threads;
+
+const GEOM: NativeModelConfig =
+    NativeModelConfig { n_layers: 2, n_heads: 4, d_head: 32 };
+const SEQ_LEN: usize = 64;
+const MAX_BATCH: usize = 16;
+
+fn mk_engine(threads: usize) -> Engine {
+    let mode = ServeMode::Hdp { rho: 0.5, tau: 0.0, qstep: 1.0 / 4096.0 };
+    let batcher = Arc::new(Batcher::new(MAX_BATCH, Duration::from_millis(1)));
+    Engine::new_native(GEOM, mode, SimConfig::edge(), batcher, threads)
+        .expect("native engine")
+}
+
+fn mk_requests(n: usize) -> Vec<Request> {
+    (0..n as u64)
+        .map(|id| {
+            let mut r = SplitMix64::new(4000 + id);
+            Request {
+                id,
+                tokens: (0..SEQ_LEN).map(|_| r.next_below(30_000) as i32).collect(),
+                enqueued: Instant::now(),
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut json_path: Option<String> = None;
+    let mut quick = false;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--json" => {
+                i += 1;
+                match argv.get(i) {
+                    Some(p) if !p.starts_with("--") => json_path = Some(p.clone()),
+                    _ => {
+                        eprintln!("bench_serving: --json needs a file path");
+                        std::process::exit(2);
+                    }
+                }
+            }
+            "--quick" => quick = true,
+            _ => {} // tolerate harness-injected flags
+        }
+        i += 1;
+    }
+    let b = if quick { Bench::quick() } else { Bench::default() };
+    let mut ms: Vec<Measurement> = Vec::new();
+
+    println!("== serving throughput vs batch size \
+              ({}Lx{}Hx{} d_head {}) ==",
+             GEOM.n_layers, GEOM.n_heads, SEQ_LEN, GEOM.d_head);
+    // At least 4 workers even on small hosts: up to 128 head tasks per
+    // batch want the pool saturated; oversubscription is harmless here.
+    let threads = configured_threads().max(4);
+    let batched = mk_engine(threads);
+    let sequential = mk_engine(1);
+    // Same thread budget, request-at-a-time: isolates the batch-level
+    // fan-out win (pool occupancy) from the raw core count.
+    let same_threads = mk_engine(threads);
+    for &bs in &[1usize, 2, 4, 8, 16] {
+        let reqs = mk_requests(bs);
+        ms.push(b.run_throughput(
+            &format!("serve_batch b={bs} (batched pool)"), bs as f64, "req",
+            || batched.serve_batch(&reqs).unwrap(),
+        ));
+        ms.push(b.run_throughput(
+            &format!("serve b={bs} (sequential 1-at-a-time)"), bs as f64, "req",
+            || {
+                let mut served = 0usize;
+                for r in &reqs {
+                    served += sequential
+                        .serve_batch(std::slice::from_ref(r))
+                        .unwrap()
+                        .len();
+                }
+                served
+            },
+        ));
+        ms.push(b.run_throughput(
+            &format!("serve b={bs} (request-at-a-time, same threads)"),
+            bs as f64, "req",
+            || {
+                let mut served = 0usize;
+                for r in &reqs {
+                    served += same_threads
+                        .serve_batch(std::slice::from_ref(r))
+                        .unwrap()
+                        .len();
+                }
+                served
+            },
+        ));
+    }
+
+    // Headline the acceptance criterion tracks: batched vs sequential
+    // at the 8-request batch.
+    let find = |needle: &str| -> Option<f64> {
+        ms.iter().find(|m| m.name.contains(needle)).map(Measurement::mean)
+    };
+    if let (Some(seq), Some(bat)) =
+        (find("serve b=8 (sequential"), find("serve_batch b=8"))
+    {
+        println!("\nbatched speedup over sequential request-at-a-time \
+                  (8-request batch): {:.2}x", seq / bat);
+    }
+    if let (Some(same), Some(bat)) =
+        (find("serve b=8 (request-at-a-time"), find("serve_batch b=8"))
+    {
+        println!("batched speedup over same-thread request-at-a-time \
+                  (8-request batch): {:.2}x", same / bat);
+    }
+
+    if let Some(path) = json_path {
+        let doc = measurements_json("bench_serving", &ms);
+        std::fs::write(&path, format!("{doc}\n")).expect("write bench json");
+        println!("wrote {} ({} measurements)", path, ms.len());
+    }
+}

@@ -516,6 +516,68 @@ mod tests {
     }
 
     #[test]
+    fn row_threshold_rho_boundary_values_exact() {
+        // Regression for the PR 1 clamp: pin the exact semantics at the
+        // domain boundaries. rho = 1.0 → the row max (only argmax-tied
+        // blocks survive, never an empty row); rho = 0.0 → the mean;
+        // rho = -1.0 → the row min (everything survives). All bitwise.
+        let rows: [&[f32]; 4] = [
+            &[5.0],
+            &[1.0, 2.0, 3.0, 10.0],
+            &[0.25, 0.25, 0.25, 0.25],
+            &[3.0, 0.0, 7.5, 7.5, 2.25],
+        ];
+        for row in rows {
+            let n = row.len() as f32;
+            let mn = row.iter().cloned().fold(f32::INFINITY, f32::min);
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mean = row.iter().sum::<f32>() / n;
+            assert_eq!(row_threshold(row, 1.0).to_bits(), mx.to_bits(),
+                       "rho=1 is the row max for {row:?}");
+            assert_eq!(row_threshold(row, 0.0).to_bits(), mean.to_bits(),
+                       "rho=0 is the row mean for {row:?}");
+            assert_eq!(row_threshold(row, -1.0).to_bits(), mn.to_bits(),
+                       "rho=-1 is the row min for {row:?}");
+        }
+    }
+
+    #[test]
+    fn row_threshold_clamps_out_of_domain_rho_to_boundaries() {
+        // Values beyond (-1, 1) must behave exactly like the boundary
+        // they clamp to — rho > 1 used to prune entire block-rows.
+        let row = [1.0f32, 2.0, 3.0, 10.0];
+        for rho in [1.0f32, 1.0 + f32::EPSILON, 1.5, 100.0, f32::INFINITY] {
+            assert_eq!(row_threshold(&row, rho).to_bits(),
+                       row_threshold(&row, 1.0).to_bits(), "rho={rho}");
+        }
+        for rho in [-1.0f32, -1.0 - f32::EPSILON, -1.5, -100.0,
+                    f32::NEG_INFINITY] {
+            assert_eq!(row_threshold(&row, rho).to_bits(),
+                       row_threshold(&row, -1.0).to_bits(), "rho={rho}");
+        }
+    }
+
+    #[test]
+    fn block_mask_at_rho_boundaries() {
+        let theta = Tensor::new(&[2, 3], vec![
+            1.0, 5.0, 5.0, //
+            2.0, 0.5, 1.0,
+        ]);
+        // rho = 1.0: exactly the argmax-tied blocks survive per row.
+        let top = block_mask(&theta, 1.0);
+        assert_eq!(top.data(), &[0.0, 1.0, 1.0, 1.0, 0.0, 0.0]);
+        // rho = -1.0: the threshold is the row min — everything survives.
+        let all = block_mask(&theta, -1.0);
+        assert!(all.data().iter().all(|&m| m == 1.0));
+        // rho = 0.0: mean-thresholded.
+        let mean = block_mask(&theta, 0.0);
+        assert_eq!(mean.data(), &[0.0, 1.0, 1.0, 1.0, 0.0, 0.0]);
+        // clamped extremes match the boundary masks exactly
+        assert_eq!(block_mask(&theta, 2.0).data(), top.data());
+        assert_eq!(block_mask(&theta, -3.0).data(), all.data());
+    }
+
+    #[test]
     fn hw_softmax_fully_pruned_row_is_zero_not_nan() {
         // Regression (satellite): sum == 0 used to reach
         // hw_reciprocal(0) and fill the row with NaN/inf garbage.

@@ -144,6 +144,67 @@ mod tests {
     }
 
     #[test]
+    fn prop_cascade_permutation_stable() {
+        // Head-importance ordering must be a function of the observed
+        // values alone: relabeling the heads (any permutation) and
+        // permuting every layer's observations the same way must prune
+        // exactly the corresponding heads. Distinct importances keep
+        // the ranking unambiguous (ties fall back to index order by
+        // construction of the stable sort, which a permutation would
+        // legitimately reorder).
+        check("cascade pruning commutes with head permutation", 50, |g| {
+            let h = g.usize(2, 12);
+            let layers = g.usize(1, 5);
+            let frac = g.f32(0.0, 1.0);
+            let obs: Vec<Vec<f64>> = (0..layers)
+                .map(|_| {
+                    (0..h).map(|j| g.f64(0.0, 10.0) + j as f64 * 1e-9).collect()
+                })
+                .collect();
+            // Fisher–Yates permutation: perm[i] is the original index
+            // that relabeled head i observes.
+            let mut perm: Vec<usize> = (0..h).collect();
+            for i in (1..h).rev() {
+                let j = g.usize(0, i);
+                perm.swap(i, j);
+            }
+            let mut original = SpattenCascade::new(h, layers, frac);
+            let mut relabeled = SpattenCascade::new(h, layers, frac);
+            for o in &obs {
+                original.observe_layer(o);
+                let po: Vec<f64> = (0..h).map(|i| o[perm[i]]).collect();
+                relabeled.observe_layer(&po);
+            }
+            for i in 0..h {
+                prop_assert(
+                    relabeled.alive()[i] == original.alive()[perm[i]],
+                    format!("head {i} (orig {}) diverged", perm[i]),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_early_decisions_permutation_equivariant() {
+        // HDP's per-layer decision is pointwise, so it trivially
+        // commutes with any reordering — pinned so a future stateful
+        // implementation can't silently break it.
+        check("hdp_early_decisions commutes with permutation", 50, |g| {
+            let h = g.usize(1, 16);
+            let tau = g.f32(-5.0, 5.0);
+            let thetas: Vec<f32> = (0..h).map(|_| g.f32(-10.0, 10.0)).collect();
+            let dec = hdp_early_decisions(&thetas, tau);
+            let rev: Vec<f32> = thetas.iter().rev().cloned().collect();
+            let dec_rev = hdp_early_decisions(&rev, tau);
+            for i in 0..h {
+                prop_assert(dec[i] == dec_rev[h - 1 - i], "reversal mismatch")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn prop_cascade_alive_monotone() {
         check("cascade alive count nonincreasing", 50, |g| {
             let h = g.usize(2, 16);

@@ -38,11 +38,17 @@
 //! first call at a given shape, a head pass performs **zero heap
 //! allocation**: buffers are `resize`d within retained capacity
 //! (`ensure` reserves the worst case up front). [`MhaKernel`] keeps a
-//! pool of workspaces and fans a layer's heads out across
-//! [`crate::util::threadpool::parallel_map`] worker threads
-//! (`HDP_THREADS` overrides the count), so a full-layer forward uses
-//! every core while staying bitwise deterministic — each head is an
-//! independent pure function of its inputs.
+//! pool of workspaces and fans heads out across
+//! [`crate::util::threadpool::parallel_map_with`] worker threads
+//! (`HDP_THREADS` overrides the count): each worker checks one arena
+//! out of the pool for its whole task loop, so neither a layer forward
+//! nor a batched forward pays lock traffic or allocation per head.
+//! [`MhaKernel::forward_batch`] extends the fan-out to a whole serving
+//! batch — requests × layers × heads through one pool — which is what
+//! keeps the pruned pipeline saturated when single layers have fewer
+//! heads than the host has cores. Everything stays bitwise
+//! deterministic — each head is an independent pure function of its
+//! inputs.
 //!
 //! ## Numerical contract
 //!
@@ -61,7 +67,7 @@ use crate::attention::hdp::{
     NEG_INF,
 };
 use crate::tensor::Tensor;
-use crate::util::threadpool::{configured_threads, parallel_map};
+use crate::util::threadpool::{configured_threads, parallel_map_with};
 
 /// Kept-block list in block-CSR form: for block-row `bi`, the surviving
 /// block-column indices are `cols[row_ptr[bi]..row_ptr[bi+1]]`,
@@ -449,11 +455,95 @@ pub struct HeadOutput {
     pub kept_blocks: usize,
 }
 
+/// Borrowed references to one head's inputs: `(iq, fq, ik, fk, v)`.
+pub type HeadRefs<'a> = (&'a Tensor, &'a Tensor, &'a Tensor, &'a Tensor, &'a Tensor);
+
+/// One request's attention workload for [`MhaKernel::forward_batch`]:
+/// `layers[layer][head]` are the quantized head inputs. Requests in a
+/// batch may have different sequence lengths (the workspace arenas
+/// resize within retained capacity), but every head of one request
+/// shares its request's length.
+#[derive(Debug, Default)]
+pub struct BatchRequest<'a> {
+    pub layers: Vec<Vec<HeadRefs<'a>>>,
+}
+
+/// Measured pruning totals of one request across all its layers × heads
+/// — what the serving engine feeds the metrics and the co-processor
+/// timing model.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RequestStats {
+    pub heads_total: usize,
+    pub heads_pruned: usize,
+    pub kept_blocks: usize,
+    pub blocks_total: usize,
+}
+
+impl RequestStats {
+    /// Fraction of blocks kept across all heads (1.0 when nothing ran).
+    pub fn kept_density(&self) -> f32 {
+        if self.blocks_total == 0 {
+            1.0
+        } else {
+            self.kept_blocks as f32 / self.blocks_total as f32
+        }
+    }
+
+    /// Fraction of heads that survived the early decision.
+    pub fn head_kept_frac(&self) -> f32 {
+        if self.heads_total == 0 {
+            1.0
+        } else {
+            (self.heads_total - self.heads_pruned) as f32 / self.heads_total as f32
+        }
+    }
+}
+
+/// One request's result from [`MhaKernel::forward_batch`]:
+/// `layers[layer][head]` mirrors the input structure.
+#[derive(Debug)]
+pub struct RequestOutput {
+    pub layers: Vec<Vec<HeadOutput>>,
+    pub stats: RequestStats,
+}
+
+/// Hands a pooled [`Workspace`] to one worker thread for the duration
+/// of its task loop and returns it to the kernel's pool on drop — the
+/// steady-state arena reuse survives across `forward_*` calls without
+/// any lock traffic per task.
+struct PooledWorkspace<'a> {
+    ws: Option<Workspace>,
+    pool: &'a Mutex<Vec<Workspace>>,
+}
+
+impl<'a> PooledWorkspace<'a> {
+    fn take(pool: &'a Mutex<Vec<Workspace>>) -> Self {
+        let ws = pool.lock().unwrap().pop().unwrap_or_default();
+        Self { ws: Some(ws), pool }
+    }
+
+    fn get(&mut self) -> &mut Workspace {
+        self.ws.as_mut().expect("workspace present until drop")
+    }
+}
+
+impl Drop for PooledWorkspace<'_> {
+    fn drop(&mut self) {
+        if let Some(ws) = self.ws.take() {
+            self.pool.lock().unwrap().push(ws);
+        }
+    }
+}
+
 /// Multi-head attention kernel: a workspace pool plus a thread budget.
 /// `forward_layer` fans every head of a layer out across worker
-/// threads, short-circuiting early-pruned heads before the FUM stage
-/// (Algorithm 2's early head pruning), and returns per-head outputs in
-/// head order — bitwise identical for any thread count.
+/// threads; `forward_batch` fans a whole serving batch — requests ×
+/// layers × heads — through the same pool, so batch-level parallelism
+/// saturates every core even when a single layer has fewer heads than
+/// the host has cores. Both short-circuit early-pruned heads before the
+/// FUM stage (Algorithm 2's early head pruning) and return outputs in
+/// input order — bitwise identical for any thread count, because each
+/// head is an independent pure function of its inputs.
 pub struct MhaKernel {
     params: HdpParams,
     threads: usize,
@@ -482,25 +572,72 @@ impl MhaKernel {
         self.threads
     }
 
+    /// Run `tasks` across the worker budget. Each worker checks a
+    /// workspace out of the pool once, reuses it for every task it
+    /// steals, and returns it when the fan-out completes.
+    fn map_heads(&self, tasks: &[HeadRefs<'_>]) -> Vec<HeadOutput> {
+        parallel_map_with(
+            tasks.len(),
+            self.threads,
+            || PooledWorkspace::take(&self.pool),
+            |pooled, i| {
+                let ws = pooled.get();
+                let (iq, fq, ik, fk, v) = tasks[i];
+                ws.run(iq, fq, ik, fk, v, self.params, true);
+                HeadOutput {
+                    out: Tensor::new(&[iq.rows(), v.cols()], ws.out().to_vec()),
+                    theta_head: ws.theta_head(),
+                    head_kept: ws.head_kept(),
+                    kept_density: ws.kept_density(),
+                    kept_blocks: ws.kept_blocks().kept(),
+                }
+            },
+        )
+    }
+
     /// Forward one layer's heads (`heads[i] = (iq, fq, ik, fk, v)`).
-    pub fn forward_layer(
-        &self,
-        heads: &[(&Tensor, &Tensor, &Tensor, &Tensor, &Tensor)],
-    ) -> Vec<HeadOutput> {
-        parallel_map(heads.len(), self.threads, |h| {
-            let mut ws = self.pool.lock().unwrap().pop().unwrap_or_default();
-            let (iq, fq, ik, fk, v) = heads[h];
-            ws.run(iq, fq, ik, fk, v, self.params, true);
-            let result = HeadOutput {
-                out: Tensor::new(&[iq.rows(), v.cols()], ws.out().to_vec()),
-                theta_head: ws.theta_head(),
-                head_kept: ws.head_kept(),
-                kept_density: ws.kept_density(),
-                kept_blocks: ws.kept_blocks().kept(),
-            };
-            self.pool.lock().unwrap().push(ws);
-            result
-        })
+    pub fn forward_layer(&self, heads: &[HeadRefs<'_>]) -> Vec<HeadOutput> {
+        self.map_heads(heads)
+    }
+
+    /// Forward a whole serving batch: every (request, layer, head) task
+    /// goes through one shared fan-out, and the flat results are
+    /// regrouped per request with the measured pruning totals attached.
+    /// Output `[r].layers[l][h]` is bitwise identical to calling
+    /// [`Self::forward_layer`] on `requests[r].layers[l]` alone — batch
+    /// composition never changes results, only wall-clock.
+    pub fn forward_batch(&self, requests: &[BatchRequest<'_>]) -> Vec<RequestOutput> {
+        let flat: Vec<HeadRefs<'_>> = requests
+            .iter()
+            .flat_map(|r| r.layers.iter().flat_map(|heads| heads.iter().copied()))
+            .collect();
+        let mut outs = self.map_heads(&flat).into_iter();
+        let block = self.params.block;
+        requests
+            .iter()
+            .map(|req| {
+                let mut stats = RequestStats::default();
+                let layers: Vec<Vec<HeadOutput>> = req
+                    .layers
+                    .iter()
+                    .map(|heads| {
+                        heads
+                            .iter()
+                            .map(|&(iq, _, _, _, _)| {
+                                let nb = iq.rows() / block;
+                                let h = outs.next().expect("flat results aligned");
+                                stats.heads_total += 1;
+                                stats.heads_pruned += usize::from(!h.head_kept);
+                                stats.kept_blocks += h.kept_blocks;
+                                stats.blocks_total += nb * nb;
+                                h
+                            })
+                            .collect()
+                    })
+                    .collect();
+                RequestOutput { layers, stats }
+            })
+            .collect()
     }
 }
 
@@ -640,6 +777,121 @@ mod tests {
             assert_eq!(got.head_kept, want.head_kept);
             assert_eq!(got.kept_density.to_bits(), want.kept_density.to_bits());
         }
+    }
+
+    #[test]
+    fn forward_batch_matches_forward_layer_per_request() {
+        // Batch composition must never change results: each request's
+        // layers through forward_batch are bitwise identical to running
+        // that layer alone through forward_layer. Mixed sequence
+        // lengths exercise the workspace resize path.
+        let p = params(0.4, 0.0, 0.05);
+        let kernel = MhaKernel::new(p).with_threads(4);
+        let lens = [16usize, 32, 8];
+        let reqs: Vec<Vec<Vec<_>>> = lens
+            .iter()
+            .enumerate()
+            .map(|(r, &l)| {
+                (0..2)
+                    .map(|layer| {
+                        (0..3)
+                            .map(|h| rand_head((r * 100 + layer * 10 + h) as u64, l, 8))
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let batch: Vec<BatchRequest> = reqs
+            .iter()
+            .map(|layers| BatchRequest {
+                layers: layers
+                    .iter()
+                    .map(|hs| {
+                        hs.iter().map(|(a, b, c, d, e, _)| (a, b, c, d, e)).collect()
+                    })
+                    .collect(),
+            })
+            .collect();
+        let outs = kernel.forward_batch(&batch);
+        assert_eq!(outs.len(), 3);
+        for (r, req) in batch.iter().enumerate() {
+            for (l, heads) in req.layers.iter().enumerate() {
+                let alone = kernel.forward_layer(heads);
+                for (h, (batched, solo)) in
+                    outs[r].layers[l].iter().zip(&alone).enumerate()
+                {
+                    assert_eq!(batched.out.data(), solo.out.data(), "r{r} l{l} h{h}");
+                    assert_eq!(batched.theta_head.to_bits(), solo.theta_head.to_bits());
+                    assert_eq!(batched.head_kept, solo.head_kept);
+                    assert_eq!(batched.kept_blocks, solo.kept_blocks);
+                }
+            }
+            // stats roll up the per-head trail exactly
+            let stats = outs[r].stats;
+            assert_eq!(stats.heads_total, 6);
+            let pruned: usize = outs[r]
+                .layers
+                .iter()
+                .flatten()
+                .filter(|h| !h.head_kept)
+                .count();
+            assert_eq!(stats.heads_pruned, pruned);
+            let kept: usize =
+                outs[r].layers.iter().flatten().map(|h| h.kept_blocks).sum();
+            assert_eq!(stats.kept_blocks, kept);
+            let nb = lens[r] / p.block;
+            assert_eq!(stats.blocks_total, 6 * nb * nb);
+            assert!(stats.kept_density() > 0.0 && stats.kept_density() <= 1.0);
+        }
+    }
+
+    #[test]
+    fn forward_batch_thread_counts_agree_bitwise() {
+        let p = params(0.5, 0.0, 0.05);
+        let heads: Vec<_> = (0..12).map(|h| rand_head(500 + h, 16, 8)).collect();
+        let refs: Vec<Vec<Vec<_>>> = (0..4)
+            .map(|r| {
+                (0..3)
+                    .map(|l| {
+                        let i = r * 3 + l;
+                        vec![
+                            (&heads[i].0, &heads[i].1, &heads[i].2, &heads[i].3,
+                             &heads[i].4),
+                        ]
+                    })
+                    .collect()
+            })
+            .collect();
+        let mk = || -> Vec<BatchRequest> {
+            refs.iter()
+                .map(|layers| BatchRequest { layers: layers.clone() })
+                .collect()
+        };
+        let serial = MhaKernel::new(p).with_threads(1).forward_batch(&mk());
+        let wide = MhaKernel::new(p).with_threads(8).forward_batch(&mk());
+        assert_eq!(serial.len(), wide.len());
+        for (s, w) in serial.iter().zip(&wide) {
+            assert_eq!(s.stats, w.stats);
+            for (sl, wl) in s.layers.iter().zip(&w.layers) {
+                for (sh, wh) in sl.iter().zip(wl) {
+                    assert_eq!(sh.out.data(), wh.out.data());
+                    assert_eq!(sh.kept_density.to_bits(), wh.kept_density.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_batch_empty_is_empty() {
+        let kernel = MhaKernel::new(params(0.4, 0.0, 0.05));
+        assert!(kernel.forward_batch(&[]).is_empty());
+        // a request with no layers contributes empty output + idle stats
+        let outs = kernel.forward_batch(&[BatchRequest::default()]);
+        assert_eq!(outs.len(), 1);
+        assert!(outs[0].layers.is_empty());
+        assert_eq!(outs[0].stats.heads_total, 0);
+        assert_eq!(outs[0].stats.kept_density(), 1.0);
+        assert_eq!(outs[0].stats.head_kept_frac(), 1.0);
     }
 
     #[test]

@@ -123,6 +123,82 @@ mod tests {
     }
 
     #[test]
+    fn prop_topk_matches_sort_oracle() {
+        // The comparator-rule mask must agree entry-for-entry with an
+        // independent sort-based oracle: keep exactly the entries >=
+        // the k-th order statistic of the row (ties keep extra). Runs
+        // on tie-heavy integer rows and on generic float rows.
+        check("topk_mask == sort oracle per entry", 100, |g| {
+            let nbr = g.usize(1, 4);
+            let nbc = g.usize(1, 24);
+            let keep = g.f32(0.01, 1.0);
+            let tie_heavy = g.bool();
+            let data: Vec<f32> = (0..nbr * nbc)
+                .map(|_| {
+                    if tie_heavy {
+                        g.usize(0, 4) as f32
+                    } else {
+                        g.f32(0.0, 100.0)
+                    }
+                })
+                .collect();
+            let theta = Tensor::new(&[nbr, nbc], data.clone());
+            let mask = topk_mask(&theta, keep);
+            let k = ((keep * nbc as f32).ceil() as usize).clamp(1, nbc);
+            for i in 0..nbr {
+                let row = &data[i * nbc..(i + 1) * nbc];
+                // oracle: k-th largest through an index sort
+                let mut idx: Vec<usize> = (0..nbc).collect();
+                idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+                let kth = row[idx[k - 1]];
+                for j in 0..nbc {
+                    prop_assert(
+                        (mask.at(i, j) == 1.0) == (row[j] >= kth),
+                        format!("row {i} col {j}: val {} kth {kth}", row[j]),
+                    )?;
+                }
+                // selection invariant: every kept value dominates every
+                // dropped value
+                let min_kept = (0..nbc)
+                    .filter(|&j| mask.at(i, j) == 1.0)
+                    .map(|j| row[j])
+                    .fold(f32::INFINITY, f32::min);
+                let max_dropped = (0..nbc)
+                    .filter(|&j| mask.at(i, j) == 0.0)
+                    .map(|j| row[j])
+                    .fold(f32::NEG_INFINITY, f32::max);
+                prop_assert(min_kept >= max_dropped, "kept dominate dropped")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_topk_mask_permutation_equivariant() {
+        // Reordering a row's blocks reorders the mask the same way:
+        // selection depends on values only, not positions.
+        check("topk mask commutes with column permutation", 60, |g| {
+            let nbc = g.usize(2, 16);
+            let keep = g.f32(0.05, 1.0);
+            // distinct values so ties cannot make two valid answers
+            let mut vals: Vec<f32> =
+                (0..nbc).map(|j| g.f32(0.0, 50.0) + j as f32 * 1e-3).collect();
+            let mask = topk_mask(&Tensor::new(&[1, nbc], vals.clone()), keep);
+            // rotate as a simple permutation
+            let r = g.usize(1, nbc - 1);
+            vals.rotate_left(r);
+            let rotated = topk_mask(&Tensor::new(&[1, nbc], vals), keep);
+            for j in 0..nbc {
+                prop_assert(
+                    mask.at(0, (j + r) % nbc) == rotated.at(0, j),
+                    "rotation mismatch",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn head_end_to_end_shapes() {
         let iq = randt(&[8, 4], 1);
         let fq = randt(&[8, 4], 2).scale(0.1);

@@ -141,6 +141,84 @@ mod tests {
     }
 
     #[test]
+    fn close_flushes_partial_batch_without_waiting_for_linger() {
+        // Close semantics: a consumer blocked mid-linger must be woken
+        // by close() and handed the pending partial batch immediately —
+        // closing must never drop queued requests or sit out the full
+        // linger deadline.
+        let b = Arc::new(Batcher::new(64, Duration::from_secs(60)));
+        let c = Arc::clone(&b);
+        let consumer = std::thread::spawn(move || {
+            let first = c.next_batch();
+            let second = c.next_batch();
+            (first, second)
+        });
+        // Let the consumer reach the empty-queue wait, then enqueue two
+        // requests (it re-blocks on the 60s linger) and close.
+        std::thread::sleep(Duration::from_millis(20));
+        b.submit(req(7));
+        b.submit(req(8));
+        std::thread::sleep(Duration::from_millis(20));
+        let t0 = Instant::now();
+        b.close();
+        let (first, second) = consumer.join().unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(30), "close must not linger");
+        let first = first.expect("pending requests flush as a final batch");
+        assert_eq!(
+            first.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![7, 8],
+            "close flushes every pending request in FIFO order"
+        );
+        assert!(second.is_none(), "drained queue reports closed");
+    }
+
+    #[test]
+    fn close_with_empty_queue_wakes_blocked_consumer() {
+        let b = Arc::new(Batcher::new(8, Duration::from_secs(60)));
+        let c = Arc::clone(&b);
+        let consumer = std::thread::spawn(move || c.next_batch());
+        std::thread::sleep(Duration::from_millis(20));
+        let t0 = Instant::now();
+        b.close();
+        assert!(consumer.join().unwrap().is_none());
+        assert!(t0.elapsed() < Duration::from_secs(30));
+    }
+
+    #[test]
+    fn close_with_oversized_backlog_drains_everything() {
+        // Nothing queued before close may be lost, even across several
+        // max-batch releases.
+        let b = Batcher::new(4, Duration::from_secs(60));
+        for i in 0..11 {
+            b.submit(req(i));
+        }
+        b.close();
+        let mut ids = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            assert!(batch.len() <= 4);
+            ids.extend(batch.iter().map(|r| r.id));
+        }
+        assert_eq!(ids, (0..11).collect::<Vec<_>>(), "no request dropped");
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn linger_measured_from_oldest_request() {
+        // The deadline belongs to the *oldest* waiting request: a
+        // late-arriving second request must not restart the clock.
+        let b = Batcher::new(64, Duration::from_millis(60));
+        let t0 = Instant::now();
+        b.submit(req(1));
+        std::thread::sleep(Duration::from_millis(30));
+        b.submit(req(2));
+        let batch = b.next_batch().unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(batch.len(), 2);
+        assert!(waited >= Duration::from_millis(45), "released early: {waited:?}");
+        assert!(waited < Duration::from_millis(500), "clock restarted: {waited:?}");
+    }
+
+    #[test]
     fn concurrent_producer_consumer() {
         let b = Arc::new(Batcher::new(8, Duration::from_millis(5)));
         let p = Arc::clone(&b);

@@ -1,9 +1,21 @@
-//! Serving engine: worker threads pull batches from the [`Batcher`],
-//! pad them to the executable's static batch shape, run `hdp_fwd` (or
-//! `dense_fwd`) through PJRT, and attach per-request co-processor
-//! timing/energy from the cycle simulator driven by the *measured*
-//! pruning diagnostics of that very batch — the integration a host DNN
-//! accelerator embedding the HDP co-processor would expose.
+//! Serving engine: worker threads pull batches from the [`Batcher`] and
+//! execute them on one of two backends.
+//!
+//! * **PJRT** — pad the batch to the executable's static shape, run
+//!   `hdp_fwd` (or `dense_fwd`) through the AOT artifacts, and attach
+//!   per-request co-processor timing/energy from the cycle simulator
+//!   driven by the batch's *measured* pruning diagnostics — the
+//!   integration a host DNN accelerator embedding the HDP co-processor
+//!   would expose.
+//! * **Native** — no artifacts, no weights: each request's layers ×
+//!   heads attention workload is derived deterministically from its
+//!   tokens ([`derive_head_inputs`]) and executed in-process by the
+//!   sparse-first [`MhaKernel::forward_batch`], which fans the whole
+//!   batch through one worker pool with per-worker workspace arenas.
+//!   Outputs are bitwise identical to sequential single-request
+//!   reference execution for any thread count or batch composition
+//!   (pinned by `rust/tests/serve_conformance.rs`), and the measured
+//!   per-request head/block pruning lands in [`Metrics`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -11,9 +23,15 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::attention::hdp::HdpParams;
+use crate::attention::kernel::{BatchRequest, MhaKernel};
+use crate::fixed::{self, QuantProfile};
 use crate::model::ParamStore;
 use crate::runtime::{lit_i32, lit_scalar_f32, to_vec_f32, Runtime};
 use crate::sim::{self, SimConfig};
+use crate::tensor::Tensor;
+use crate::util::rng::SplitMix64;
+use crate::util::threadpool::parallel_map;
 
 use super::batcher::{Batcher, Request};
 use super::metrics::Metrics;
@@ -25,6 +43,17 @@ pub enum ServeMode {
     Hdp { rho: f32, tau: f32, qstep: f32 },
 }
 
+/// Geometry of the native in-process model: the layers × heads
+/// attention workload the batched kernel executes per request. Sequence
+/// length is per request (its token count), unlike the PJRT path's
+/// static shapes.
+#[derive(Debug, Clone, Copy)]
+pub struct NativeModelConfig {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+}
+
 /// One served response.
 #[derive(Debug, Clone)]
 pub struct Response {
@@ -33,22 +62,145 @@ pub struct Response {
     pub e2e_seconds: f64,
     /// Simulated co-processor latency for this request's attention work.
     pub sim_seconds: f64,
+    /// Heads the early decision pruned (native: this request exactly;
+    /// PJRT: the whole batch's estimate).
+    pub heads_pruned: usize,
+    pub heads_total: usize,
+    /// Fraction of 2×2 blocks kept (native: measured; PJRT: batch mean).
+    pub kept_density: f32,
+    /// Native path: raw per-head attention outputs, flattened in
+    /// (layer, head, row, column) order — the surface the conformance
+    /// tests compare bitwise against sequential reference execution.
+    /// Empty on the PJRT path (its surface is the logits).
+    pub outputs: Vec<f32>,
+}
+
+/// One head's owned input tensors: `(iq, fq, ik, fk, v)`.
+pub type HeadTensors = (Tensor, Tensor, Tensor, Tensor, Tensor);
+
+/// Deterministically derive one (layer, head) attention workload from a
+/// request's tokens: a seeded expansion of the token content into
+/// quantized Q/K fields (already on `profile`'s grid at unit
+/// calibration scale) plus float values V. This is the native backend's
+/// stand-in for the host model's QKV projections — a pure function of
+/// `(tokens, layer, head, d_head, profile)`, so the conformance tests
+/// and benches can reproduce any request's workload independently.
+pub fn derive_head_inputs(
+    tokens: &[i32],
+    layer: usize,
+    head: usize,
+    d_head: usize,
+    profile: QuantProfile,
+) -> HeadTensors {
+    let l = tokens.len();
+    // Fold the token content with the (layer, head) coordinate so every
+    // workload is a distinct function of the whole request.
+    let mut seed = 0x9E37_79B9_7F4A_7C15u64
+        ^ ((layer as u64) << 32)
+        ^ ((head as u64) << 16);
+    for &t in tokens {
+        seed = seed.wrapping_mul(0x0100_0000_01B3).wrapping_add(t as u32 as u64);
+    }
+    let mut rng = SplitMix64::new(seed);
+    let mut quant_field = |n: usize| {
+        let mut ints = Vec::with_capacity(n);
+        let mut fracs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let x = rng.next_normal() as f32 * 1.5;
+            let f = fixed::split(fixed::quantize(x, 1.0, profile));
+            ints.push(f.int_part);
+            fracs.push(f.frac_part);
+        }
+        (ints, fracs)
+    };
+    let (iq, fq) = quant_field(l * d_head);
+    let (ik, fk) = quant_field(l * d_head);
+    let v: Vec<f32> = (0..l * d_head).map(|_| rng.next_normal() as f32).collect();
+    let t = |d: Vec<f32>| Tensor::new(&[l, d_head], d);
+    (t(iq), t(fq), t(ik), t(fk), t(v))
+}
+
+/// Two-way readout of the native path: even/odd positions of the
+/// flattened attention outputs pool into the two logits. Pure and
+/// order-deterministic so the conformance tests can recompute it from
+/// reference outputs.
+pub fn pooled_label(outputs: &[f32]) -> i32 {
+    pooled_label_from(outputs.iter().copied())
+}
+
+/// Streaming form of [`pooled_label`] — same accumulation order, so the
+/// lean (outputs-dropped) serving path labels identically without ever
+/// materializing the flattened vector.
+fn pooled_label_from(outputs: impl Iterator<Item = f32>) -> i32 {
+    let mut logits = [0.0f32; 2];
+    for (j, x) in outputs.enumerate() {
+        logits[j % 2] += x;
+    }
+    i32::from(logits[1] > logits[0])
+}
+
+/// Map a [`ServeMode`] onto the native kernel's parameters. Inputs are
+/// derived pre-scaled on the quant grid (unit calibration scale), so
+/// `inv_scale` is just the attention temperature. `Dense` keeps every
+/// block (`rho = -1`), every head (`tau = -inf`) and adds the exact
+/// FQ·FK term — full attention on the quantized values. `Hdp`'s `qstep`
+/// picks the quantization profile the host front end ran at.
+fn native_params(mode: ServeMode, d_head: usize) -> (HdpParams, QuantProfile) {
+    let inv_scale = 1.0 / (d_head as f32).sqrt();
+    match mode {
+        ServeMode::Dense => (
+            HdpParams {
+                rho: -1.0,
+                tau: f32::NEG_INFINITY,
+                inv_scale,
+                use_ff: true,
+                ..Default::default()
+            },
+            QuantProfile::Q4_12,
+        ),
+        ServeMode::Hdp { rho, tau, qstep } => {
+            let profile = if (qstep - QuantProfile::Q4_8.step()).abs()
+                < (qstep - QuantProfile::Q4_12.step()).abs()
+            {
+                QuantProfile::Q4_8
+            } else {
+                QuantProfile::Q4_12
+            };
+            (HdpParams { rho, tau, inv_scale, ..Default::default() }, profile)
+        }
+    }
+}
+
+enum Backend {
+    Pjrt {
+        rt: Arc<Runtime>,
+        params: Vec<Vec<f32>>,
+        param_shapes: Vec<Vec<usize>>,
+        seq_len: usize,
+    },
+    Native {
+        kernel: MhaKernel,
+        profile: QuantProfile,
+    },
 }
 
 pub struct Engine {
-    rt: Arc<Runtime>,
     pub model: String,
-    params: Vec<Vec<f32>>,
-    param_shapes: Vec<Vec<usize>>,
     pub batcher: Arc<Batcher>,
     pub metrics: Arc<Metrics>,
     mode: ServeMode,
     sim_cfg: SimConfig,
+    /// Largest batch `serve_batch` accepts (PJRT: the executable's
+    /// static batch; native: the batcher's release size).
     batch: usize,
-    seq_len: usize,
     n_layers: usize,
     n_heads: usize,
     d_head: usize,
+    /// Whether native responses retain the raw per-head outputs. On by
+    /// default (the conformance surface); long-running loops turn it
+    /// off so `run_loop`'s accumulated responses stay small.
+    keep_outputs: bool,
+    backend: Backend,
     responses: Arc<Mutex<Vec<Response>>>,
     inflight: Arc<AtomicU64>,
 }
@@ -65,22 +217,74 @@ impl Engine {
         params.check_against(spec)?;
         let cfg = spec.config;
         Ok(Self {
-            rt,
             model: params.model.clone(),
-            params: params.data.clone(),
-            param_shapes: params.shapes.clone(),
             batcher,
             metrics: Arc::new(Metrics::new()),
             mode,
             sim_cfg,
             batch: cfg.eval_batch,
-            seq_len: cfg.seq_len,
             n_layers: cfg.n_layers,
             n_heads: cfg.n_heads,
             d_head: cfg.d_head,
+            keep_outputs: true,
+            backend: Backend::Pjrt {
+                rt,
+                params: params.data.clone(),
+                param_shapes: params.shapes.clone(),
+                seq_len: cfg.seq_len,
+            },
             responses: Arc::new(Mutex::new(Vec::new())),
             inflight: Arc::new(AtomicU64::new(0)),
         })
+    }
+
+    /// Engine over the in-process sparse-first kernel: no PJRT
+    /// artifacts, no trained weights — request workloads come from
+    /// [`derive_head_inputs`] and execute on
+    /// [`MhaKernel::forward_batch`]. `threads = 0` uses the host's
+    /// configured parallelism (`HDP_THREADS`-overridable).
+    pub fn new_native(
+        cfg: NativeModelConfig,
+        mode: ServeMode,
+        sim_cfg: SimConfig,
+        batcher: Arc<Batcher>,
+        threads: usize,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            cfg.n_layers > 0 && cfg.n_heads > 0 && cfg.d_head > 0,
+            "native model geometry must be nonzero"
+        );
+        let (params, profile) = native_params(mode, cfg.d_head);
+        let kernel = if threads == 0 {
+            MhaKernel::new(params)
+        } else {
+            MhaKernel::new(params).with_threads(threads)
+        };
+        Ok(Self {
+            model: "native".to_string(),
+            batch: batcher.max_batch,
+            batcher,
+            metrics: Arc::new(Metrics::new()),
+            mode,
+            sim_cfg,
+            n_layers: cfg.n_layers,
+            n_heads: cfg.n_heads,
+            d_head: cfg.d_head,
+            keep_outputs: true,
+            backend: Backend::Native { kernel, profile },
+            responses: Arc::new(Mutex::new(Vec::new())),
+            inflight: Arc::new(AtomicU64::new(0)),
+        })
+    }
+
+    /// Keep or drop the raw per-head outputs on native responses
+    /// (default: keep). Long-running serving loops drop them — labels,
+    /// stats and timing are unaffected; only the conformance surface
+    /// goes away, and `run_loop`'s response accumulation stays O(1)
+    /// per request.
+    pub fn with_raw_outputs(mut self, keep: bool) -> Self {
+        self.keep_outputs = keep;
+        self
     }
 
     fn entry(&self) -> &'static str {
@@ -90,23 +294,47 @@ impl Engine {
         }
     }
 
-    fn param_literals(&self) -> Result<Vec<xla::Literal>> {
-        self.params
-            .iter()
-            .zip(&self.param_shapes)
-            .map(|(d, s)| crate::runtime::lit_f32(d, s))
-            .collect()
+    /// The kernel parameters the native backend runs with (`None` on
+    /// the PJRT path) — the conformance tests drive the reference
+    /// implementation from exactly these.
+    pub fn native_kernel_params(&self) -> Option<HdpParams> {
+        match &self.backend {
+            Backend::Native { kernel, .. } => Some(kernel.params()),
+            Backend::Pjrt { .. } => None,
+        }
+    }
+
+    /// The quantization profile the native workload derivation uses
+    /// (`None` on the PJRT path).
+    pub fn native_profile(&self) -> Option<QuantProfile> {
+        match &self.backend {
+            Backend::Native { profile, .. } => Some(*profile),
+            Backend::Pjrt { .. } => None,
+        }
     }
 
     /// Serve one batch synchronously; used by the worker loop and the
     /// benches (which drive it without threads).
     pub fn serve_batch(&self, reqs: &[Request]) -> Result<Vec<Response>> {
+        match &self.backend {
+            Backend::Pjrt { .. } => self.serve_batch_pjrt(reqs),
+            Backend::Native { .. } => self.serve_batch_native(reqs),
+        }
+    }
+
+    fn serve_batch_pjrt(&self, reqs: &[Request]) -> Result<Vec<Response>> {
         let t0 = Instant::now();
+        let (rt, params, param_shapes, seq_len) = match &self.backend {
+            Backend::Pjrt { rt, params, param_shapes, seq_len } => {
+                (rt, params, param_shapes, *seq_len)
+            }
+            Backend::Native { .. } => unreachable!("dispatched by backend"),
+        };
         anyhow::ensure!(!reqs.is_empty() && reqs.len() <= self.batch);
         // Pad to the executable's static batch with the last request.
-        let mut toks: Vec<i32> = Vec::with_capacity(self.batch * self.seq_len);
+        let mut toks: Vec<i32> = Vec::with_capacity(self.batch * seq_len);
         for r in reqs {
-            anyhow::ensure!(r.tokens.len() == self.seq_len,
+            anyhow::ensure!(r.tokens.len() == seq_len,
                             "request {}: wrong seq len", r.id);
             toks.extend_from_slice(&r.tokens);
         }
@@ -115,8 +343,12 @@ impl Engine {
             toks.extend_from_slice(last);
         }
 
-        let mut inputs = self.param_literals()?;
-        inputs.push(lit_i32(&toks, &[self.batch, self.seq_len])?);
+        let mut inputs: Vec<xla::Literal> = params
+            .iter()
+            .zip(param_shapes)
+            .map(|(d, s)| crate::runtime::lit_f32(d, s))
+            .collect::<Result<_>>()?;
+        inputs.push(lit_i32(&toks, &[self.batch, seq_len])?);
         if let ServeMode::Hdp { rho, tau, qstep } = self.mode {
             inputs.push(lit_scalar_f32(rho));
             inputs.push(lit_scalar_f32(tau));
@@ -124,14 +356,14 @@ impl Engine {
             inputs.push(lit_scalar_f32(0.0)); // use_ff
             inputs.push(lit_scalar_f32(0.0)); // use_hw_softmax
         }
-        let exe = self.rt.executable(&self.model, self.entry())?;
-        let outs = self.rt.execute_prepared(&exe, &inputs)?;
+        let exe = rt.executable(&self.model, self.entry())?;
+        let outs = rt.execute_prepared(&exe, &inputs)?;
         let compute_s = t0.elapsed().as_secs_f64();
         let logits = to_vec_f32(&outs[0])?;
 
         // Co-processor model: feed the batch's measured diagnostics to
         // the cycle simulator.
-        let (sim_cycles, sim_energy, sim_dram, pruned, total) =
+        let (sim_cycles, sim_energy, sim_dram, pruned, total, mean_density) =
             if outs.len() >= 3 {
                 let dens = to_vec_f32(&outs[1])?;
                 let kept = to_vec_f32(&outs[2])?;
@@ -140,22 +372,22 @@ impl Engine {
                 let mean_k =
                     kept.iter().sum::<f32>() / kept.len().max(1) as f32;
                 let rep = sim::estimate_model(
-                    &self.sim_cfg, self.n_layers, self.seq_len, self.d_head,
+                    &self.sim_cfg, self.n_layers, seq_len, self.d_head,
                     self.n_heads, mean_d, mean_k, false);
                 (rep.cycles, rep.energy_pj, rep.dram_bytes,
-                 rep.heads_pruned as u64, rep.heads_total as u64)
+                 rep.heads_pruned as u64, rep.heads_total as u64, mean_d)
             } else {
                 let rep = {
                     let mut t = sim::ChipReport::default();
                     for _ in 0..self.n_layers {
                         t.add_serial(&sim::estimate_layer_dense(
-                            &self.sim_cfg, self.seq_len, self.d_head,
+                            &self.sim_cfg, seq_len, self.d_head,
                             self.n_heads));
                     }
                     t
                 };
                 (rep.cycles, rep.energy_pj, rep.dram_bytes, 0,
-                 rep.heads_total as u64)
+                 rep.heads_total as u64, 1.0)
             };
         self.metrics.record_sim(sim_cycles, sim_energy, sim_dram,
                                 pruned, total);
@@ -179,6 +411,132 @@ impl Engine {
                 label: i32::from(logits[2 * i + 1] > logits[2 * i]),
                 e2e_seconds: e2e[i],
                 sim_seconds,
+                heads_pruned: pruned as usize,
+                heads_total: total as usize,
+                kept_density: mean_density,
+                outputs: Vec::new(),
+            })
+            .collect())
+    }
+
+    fn serve_batch_native(&self, reqs: &[Request]) -> Result<Vec<Response>> {
+        let t0 = Instant::now();
+        let (kernel, profile) = match &self.backend {
+            Backend::Native { kernel, profile } => (kernel, *profile),
+            Backend::Pjrt { .. } => unreachable!("dispatched by backend"),
+        };
+        anyhow::ensure!(!reqs.is_empty() && reqs.len() <= self.batch,
+                        "batch size {} not in 1..={}", reqs.len(), self.batch);
+        let block = kernel.params().block;
+        for r in reqs {
+            anyhow::ensure!(
+                !r.tokens.is_empty() && r.tokens.len() % block == 0,
+                "request {}: seq len {} not a positive multiple of block {}",
+                r.id, r.tokens.len(), block
+            );
+        }
+
+        // Host-model stand-in: derive each request's layers × heads
+        // workload. Each (request, layer, head) derivation is an
+        // independent pure function, so it fans out across the same
+        // thread budget as the kernel — no serial stage ahead of the
+        // batch (results are in index order: bitwise identical for any
+        // thread count). This is the only allocating stage — the
+        // kernel below reuses its per-worker arenas.
+        let per_layer = self.n_heads;
+        let per_req = self.n_layers * per_layer;
+        // Locals only in the fan-out closure: `&self` must stay out of
+        // it (the PJRT backend variant is not Sync).
+        let d_head = self.d_head;
+        let flat_inputs: Vec<HeadTensors> = parallel_map(
+            reqs.len() * per_req,
+            kernel.threads(),
+            |t| {
+                let r = t / per_req;
+                let layer = (t % per_req) / per_layer;
+                let head = t % per_layer;
+                derive_head_inputs(&reqs[r].tokens, layer, head, d_head,
+                                   profile)
+            },
+        );
+        let batch: Vec<BatchRequest> = (0..reqs.len())
+            .map(|r| BatchRequest {
+                layers: (0..self.n_layers)
+                    .map(|layer| {
+                        let base = r * per_req + layer * per_layer;
+                        flat_inputs[base..base + per_layer]
+                            .iter()
+                            .map(|(a, b, c, d, e)| (a, b, c, d, e))
+                            .collect()
+                    })
+                    .collect(),
+            })
+            .collect();
+
+        // The whole batch — requests × layers × heads — through one pool.
+        let results = kernel.forward_batch(&batch);
+        let compute_s = t0.elapsed().as_secs_f64();
+
+        // Per-request co-processor timing from the measured diagnostics.
+        let profiles: Vec<sim::RequestProfile> = reqs
+            .iter()
+            .zip(&results)
+            .map(|(r, res)| sim::RequestProfile {
+                seq_len: r.tokens.len(),
+                kept_density: res.stats.kept_density(),
+                head_kept_frac: res.stats.head_kept_frac(),
+            })
+            .collect();
+        let (per_req, total) = sim::estimate_batch(
+            &self.sim_cfg, self.n_layers, self.d_head, self.n_heads,
+            &profiles, kernel.params().use_ff);
+        self.metrics.record_sim(total.cycles, total.energy_pj,
+                                total.dram_bytes, total.heads_pruned as u64,
+                                total.heads_total as u64);
+
+        let now = Instant::now();
+        let queue_s: Vec<f64> = reqs
+            .iter()
+            .map(|r| ((now - r.enqueued).as_secs_f64() - compute_s).max(0.0))
+            .collect();
+        let e2e: Vec<f64> =
+            reqs.iter().map(|r| (now - r.enqueued).as_secs_f64()).collect();
+        self.metrics.record_batch(reqs.len(), &queue_s, compute_s, &e2e);
+
+        Ok(reqs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let stats = results[i].stats;
+                self.metrics.record_pruning(
+                    stats.heads_pruned as u64, stats.heads_total as u64,
+                    stats.kept_blocks as u64, stats.blocks_total as u64);
+                let head_outs = || {
+                    results[i].layers.iter().flatten().map(|h| h.out.data())
+                };
+                let (outputs, label) = if self.keep_outputs {
+                    let mut outputs = Vec::new();
+                    for data in head_outs() {
+                        outputs.extend_from_slice(data);
+                    }
+                    let label = pooled_label(&outputs);
+                    (outputs, label)
+                } else {
+                    // Lean path: never materialize the flattened vector.
+                    let label = pooled_label_from(
+                        head_outs().flat_map(|data| data.iter().copied()));
+                    (Vec::new(), label)
+                };
+                Response {
+                    id: r.id,
+                    label,
+                    e2e_seconds: e2e[i],
+                    sim_seconds: self.sim_cfg.cycles_to_seconds(per_req[i].cycles),
+                    heads_pruned: stats.heads_pruned,
+                    heads_total: stats.heads_total,
+                    kept_density: stats.kept_density(),
+                    outputs,
+                }
             })
             .collect())
     }
@@ -189,6 +547,8 @@ impl Engine {
     /// runtime; XLA parallelizes *inside* each executable run, and
     /// request producers live on other threads feeding the batcher —
     /// the standard single-executor / many-producer coordinator shape.
+    /// The native backend keeps the same shape: its parallelism lives
+    /// inside `forward_batch`'s worker pool.
     pub fn run_loop(&self) -> Vec<Response> {
         while let Some(batch) = self.batcher.next_batch() {
             self.inflight.fetch_add(1, Ordering::SeqCst);

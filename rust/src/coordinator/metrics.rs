@@ -22,6 +22,12 @@ struct Inner {
     sim_dram_bytes: f64,
     heads_pruned: u64,
     heads_total: u64,
+    // measured pruning diagnostics (native kernel path): what the
+    // sparsity engine actually decided, request by request
+    meas_heads_pruned: u64,
+    meas_heads_total: u64,
+    meas_kept_blocks: u64,
+    meas_blocks_total: u64,
 }
 
 #[derive(Debug)]
@@ -64,6 +70,39 @@ impl Metrics {
         m.sim_dram_bytes += dram_bytes;
         m.heads_pruned += heads_pruned;
         m.heads_total += heads_total;
+    }
+
+    /// Record one request's measured pruning decisions (the batched
+    /// kernel's per-request head/block trail, not the sim estimate).
+    pub fn record_pruning(&self, heads_pruned: u64, heads_total: u64,
+                          kept_blocks: u64, blocks_total: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.meas_heads_pruned += heads_pruned;
+        m.meas_heads_total += heads_total;
+        m.meas_kept_blocks += kept_blocks;
+        m.meas_blocks_total += blocks_total;
+    }
+
+    /// Fraction of heads the early decision pruned, over everything
+    /// served so far (0.0 before any native request).
+    pub fn heads_pruned_frac(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        if m.meas_heads_total == 0 {
+            0.0
+        } else {
+            m.meas_heads_pruned as f64 / m.meas_heads_total as f64
+        }
+    }
+
+    /// Fraction of 2×2 blocks the sparsity engine kept (1.0 before any
+    /// native request — nothing was pruned).
+    pub fn block_kept_frac(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        if m.meas_blocks_total == 0 {
+            1.0
+        } else {
+            m.meas_kept_blocks as f64 / m.meas_blocks_total as f64
+        }
     }
 
     pub fn requests(&self) -> u64 {
@@ -110,6 +149,17 @@ impl Metrics {
                 m.heads_total,
             ));
         }
+        if m.meas_heads_total > 0 {
+            s.push_str(&format!(
+                "pruning (meas) {}/{} heads pruned ({:.1}%), {}/{} blocks kept ({:.1}%)\n",
+                m.meas_heads_pruned,
+                m.meas_heads_total,
+                100.0 * m.meas_heads_pruned as f64 / m.meas_heads_total as f64,
+                m.meas_kept_blocks,
+                m.meas_blocks_total,
+                100.0 * m.meas_kept_blocks as f64 / m.meas_blocks_total.max(1) as f64,
+            ));
+        }
         s
     }
 }
@@ -146,5 +196,21 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.mean_batch_size(), 0.0);
         assert!(m.report().contains("requests      0"));
+        // neutral pruning fractions before any native request
+        assert_eq!(m.heads_pruned_frac(), 0.0);
+        assert_eq!(m.block_kept_frac(), 1.0);
+        assert!(!m.report().contains("pruning (meas)"));
+    }
+
+    #[test]
+    fn measured_pruning_aggregates() {
+        let m = Metrics::new();
+        m.record_pruning(2, 8, 48, 64); // request 1
+        m.record_pruning(0, 8, 64, 64); // request 2: nothing pruned
+        assert!((m.heads_pruned_frac() - 2.0 / 16.0).abs() < 1e-12);
+        assert!((m.block_kept_frac() - 112.0 / 128.0).abs() < 1e-12);
+        let r = m.report();
+        assert!(r.contains("2/16 heads pruned"), "{r}");
+        assert!(r.contains("112/128 blocks kept"), "{r}");
     }
 }

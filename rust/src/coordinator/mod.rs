@@ -1,7 +1,8 @@
-//! Layer-3 serving coordinator: dynamic batcher, PJRT worker engine
-//! with the co-processor timing model attached, and serving metrics.
+//! Layer-3 serving coordinator: dynamic batcher, worker engine (PJRT
+//! artifacts or the native in-process sparse kernel) with the
+//! co-processor timing model attached, and serving metrics.
 //! (Thread-based: the offline sandbox has no tokio; a fixed worker pool
-//! over a condvar queue covers the same ground for a CPU-bound PJRT
+//! over a condvar queue covers the same ground for a CPU-bound
 //! backend.)
 
 pub mod batcher;
@@ -9,5 +10,6 @@ pub mod engine;
 pub mod metrics;
 
 pub use batcher::{Batcher, Request};
-pub use engine::{Engine, Response, ServeMode};
+pub use engine::{derive_head_inputs, pooled_label, Engine, NativeModelConfig,
+                 Response, ServeMode};
 pub use metrics::Metrics;

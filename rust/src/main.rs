@@ -15,7 +15,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
-use hdp::coordinator::{Batcher, Engine, Request, ServeMode};
+use hdp::coordinator::{Batcher, Engine, NativeModelConfig, Request, ServeMode};
 use hdp::data::{Dataset, Split, Stream};
 use hdp::model::{Evaluator, ParamStore, Trainer};
 use hdp::model::evaluator::Variant;
@@ -62,6 +62,8 @@ fn print_help() {
          \x20 train   train a checkpoint through the AOT train_step (PJRT)\n\
          \x20 eval    accuracy + pruning diagnostics for one config\n\
          \x20 serve   dynamic-batched serving with co-processor timing\n\
+         \x20         (`--demo` runs the native in-process kernel path:\n\
+         \x20         no artifacts or weights needed)\n\
          \x20 repro   regenerate the paper's figures (CSV into results/;\n\
          \x20         `--figs kernel,table1,arch` needs no artifacts)\n\
          \x20 arch    accelerator comparison (cycle simulator)\n\
@@ -204,7 +206,21 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .flag("rho", "0.4", "HDP block pruning ratio")
         .flag("tau", "4096", "HDP head pruning threshold")
         .flag("chip", "edge", "co-processor model: edge|server")
+        .switch("demo", "serve on the in-process sparse kernel \
+                 (no artifacts or weights needed)")
+        .flag("layers", "2", "demo: attention layers per request")
+        .flag("heads", "4", "demo: heads per layer")
+        .flag("d-head", "16", "demo: head dimension")
+        .flag("seq", "32", "demo: base sequence length (requests mix \
+               seq and seq/2)")
+        .flag("batch", "8", "demo: max batch size")
+        .flag("threads", "0", "demo: kernel worker threads \
+               (0 = host default)")
         .parse(rest)?;
+
+    if args.get_bool("demo") {
+        return serve_demo(&args);
+    }
 
     let rt = Arc::new(open_runtime(&args)?);
     let model = args.get("model");
@@ -258,6 +274,83 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     println!("{}", engine.metrics.report());
     if let Some(r) = responses.first() {
         println!("co-processor latency per request (simulated): {:.3} ms",
+                 r.sim_seconds * 1e3);
+    }
+    Ok(())
+}
+
+/// `hdp serve --demo`: the native serving path end to end — Poisson
+/// arrivals into the dynamic batcher, whole batches (requests × layers
+/// × heads) through the sparse-first kernel's shared worker pool, and
+/// the measured per-request pruning into the metrics. Needs no
+/// artifacts and no weights, so it runs on a fresh clone.
+fn serve_demo(args: &Args) -> Result<()> {
+    let cfg = NativeModelConfig {
+        n_layers: args.get_usize("layers")?,
+        n_heads: args.get_usize("heads")?,
+        d_head: args.get_usize("d-head")?,
+    };
+    let seq = args.get_usize("seq")?;
+    anyhow::ensure!(seq >= 2 && seq % 2 == 0,
+                    "--seq must be an even length >= 2");
+    let mode = match args.get("mode").as_str() {
+        "dense" => ServeMode::Dense,
+        _ => ServeMode::Hdp {
+            rho: args.get_f64("rho")? as f32,
+            tau: args.get_f64("tau")? as f32,
+            qstep: figures::QSTEP16,
+        },
+    };
+    let chip = if args.get("chip") == "server" {
+        SimConfig::server()
+    } else {
+        SimConfig::edge()
+    };
+    let batcher = Arc::new(Batcher::new(
+        args.get_usize("batch")?,
+        Duration::from_millis(args.get_usize("linger-ms")? as u64),
+    ));
+    // Drop raw outputs: the demo loop accumulates every response, and
+    // labels/stats/timing don't need the conformance surface.
+    let engine = Engine::new_native(cfg, mode, chip, Arc::clone(&batcher),
+                                    args.get_usize("threads")?)?
+        .with_raw_outputs(false);
+
+    let n = args.get_usize("requests")?;
+    let rate = args.get_f64("rate")?;
+    println!("serving {n} requests at ~{rate:.0} req/s (Poisson) on the \
+              native kernel: {} layers x {} heads x d_head {}, seq {seq}",
+             cfg.n_layers, cfg.n_heads, cfg.d_head);
+    let producer_batcher = Arc::clone(&batcher);
+    let producer = std::thread::spawn(move || {
+        let mut rng = SplitMix64::new(7);
+        for id in 0..n as u64 {
+            // Mixed batch compositions: every third request is a short
+            // one (when seq/2 still aligns to the 2x2 block grid).
+            let l = if id % 3 == 2 && seq % 4 == 0 { seq / 2 } else { seq };
+            let tokens: Vec<i32> =
+                (0..l).map(|_| rng.next_below(30_000) as i32).collect();
+            producer_batcher.submit(Request {
+                id,
+                tokens,
+                enqueued: Instant::now(),
+            });
+            std::thread::sleep(Duration::from_secs_f64(rng.next_exp(rate)));
+        }
+        producer_batcher.close();
+    });
+
+    let t0 = Instant::now();
+    let responses = engine.run_loop();
+    producer.join().unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    println!("served {} responses in {wall:.2}s ({:.1} req/s)",
+             responses.len(), responses.len() as f64 / wall);
+    println!("{}", engine.metrics.report());
+    if let Some(r) = responses.first() {
+        println!("first request: label {}, {}/{} heads pruned, kept \
+                  density {:.3}, simulated co-processor latency {:.3} ms",
+                 r.label, r.heads_pruned, r.heads_total, r.kept_density,
                  r.sim_seconds * 1e3);
     }
     Ok(())

@@ -157,6 +157,43 @@ pub fn estimate_model(
     total
 }
 
+/// Pruning diagnostics of one served request, as measured by the
+/// batched kernel: its sequence length, mean kept-block density and
+/// kept-head fraction.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestProfile {
+    pub seq_len: usize,
+    pub kept_density: f32,
+    pub head_kept_frac: f32,
+}
+
+/// Co-processor view of one served batch: each request's `n_layers`
+/// attention layers run back to back on one chip, driven by that
+/// request's *measured* pruning diagnostics (the serving engine's
+/// timing model). Returns the per-request reports in order plus the
+/// serial total for the batch.
+pub fn estimate_batch(
+    cfg: &SimConfig,
+    n_layers: usize,
+    d_head: usize,
+    n_heads: usize,
+    requests: &[RequestProfile],
+    use_ff: bool,
+) -> (Vec<ChipReport>, ChipReport) {
+    let per: Vec<ChipReport> = requests
+        .iter()
+        .map(|r| {
+            estimate_model(cfg, n_layers, r.seq_len, d_head, n_heads,
+                           r.kept_density, r.head_kept_frac, use_ff)
+        })
+        .collect();
+    let mut total = ChipReport::default();
+    for r in &per {
+        total.add_serial(r);
+    }
+    (per, total)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -237,6 +274,31 @@ mod tests {
         assert!(speedup > 1.5, "speedup {speedup}");
         assert!(esave > 1.4, "energy ratio {esave}");
         assert!(hdp.dram_bytes < dense.dram_bytes);
+    }
+
+    #[test]
+    fn batch_estimate_sums_requests_serially() {
+        let cfg = SimConfig::edge();
+        let reqs = [
+            RequestProfile { seq_len: 64, kept_density: 0.3, head_kept_frac: 0.75 },
+            RequestProfile { seq_len: 128, kept_density: 0.3, head_kept_frac: 0.75 },
+            RequestProfile { seq_len: 64, kept_density: 0.9, head_kept_frac: 1.0 },
+        ];
+        let (per, total) = estimate_batch(&cfg, 2, 32, 8, &reqs, false);
+        assert_eq!(per.len(), 3);
+        // one chip serves requests back to back
+        let sum: f64 = per.iter().map(|r| r.cycles).sum();
+        assert!((total.cycles - sum).abs() < 1e-6 * sum.max(1.0));
+        assert_eq!(total.heads_total, 3 * 2 * 8);
+        // longer sequence costs more at equal sparsity ...
+        assert!(per[1].cycles > per[0].cycles);
+        // ... and so does lower sparsity at equal length
+        assert!(per[2].cycles > per[0].cycles);
+        // empty batch is a zero report
+        let (per0, total0) = estimate_batch(&cfg, 2, 32, 8, &[], false);
+        assert!(per0.is_empty());
+        assert_eq!(total0.heads_total, 0);
+        assert_eq!(total0.cycles, 0.0);
     }
 
     #[test]

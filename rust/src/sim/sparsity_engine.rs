@@ -35,7 +35,11 @@ pub struct SparsityEngine {
 impl SparsityEngine {
     pub fn new(rho: f32, tau: f32) -> Self {
         Self {
-            rho,
+            // Same domain clamp as `attention::hdp::row_threshold`: the
+            // threshold must never exceed the row max (or undercut the
+            // row min), so out-of-domain rho behaves like the boundary
+            // instead of pruning entire rows the functional path keeps.
+            rho: rho.clamp(-1.0, 1.0),
             tau,
             row_thetas: Vec::new(),
             min: f32::INFINITY,
@@ -178,6 +182,28 @@ mod tests {
             let th = row_threshold(theta.row(0), rho);
             prop_assert(th.is_finite(), "finite threshold")
         });
+    }
+
+    #[test]
+    fn out_of_domain_rho_clamps_like_functional_path() {
+        // Regression: the PR 1 clamp in row_threshold must hold here
+        // too — rho > 1 used to push the streaming threshold above the
+        // row max and prune rows the functional path keeps.
+        let theta = Tensor::new(&[2, 3], vec![1.0, 5.0, 5.0, 2.0, 0.5, 1.0]);
+        for (rho, boundary) in [(1.5f32, 1.0f32), (100.0, 1.0),
+                                (-2.0, -1.0), (-100.0, -1.0)] {
+            let se = run_engine(&theta, rho, 0.0);
+            let want = block_mask(&theta, boundary);
+            for i in 0..2 {
+                for j in 0..3 {
+                    assert_eq!(se.masks()[i][j], want.at(i, j) == 1.0,
+                               "rho={rho} ({i},{j})");
+                }
+            }
+            // every block-row still keeps at least its argmax block
+            assert!(se.masks().iter().all(|row| row.iter().any(|&k| k)),
+                    "rho={rho} pruned an entire row");
+        }
     }
 
     #[test]

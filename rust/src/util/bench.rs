@@ -1,10 +1,13 @@
 //! Timing harness for `cargo bench` targets (criterion is unavailable
 //! offline). Warmup + timed iterations, mean/p50/p95, throughput
-//! reporting, and a stable one-line-per-benchmark text format that the
-//! §Perf log in EXPERIMENTS.md quotes directly.
+//! reporting, a stable one-line-per-benchmark text format that the
+//! §Perf log in EXPERIMENTS.md quotes directly, and the shared
+//! machine-readable JSON snapshot format `scripts/bench.sh` archives
+//! (`BENCH_attention.json`, `BENCH_serving.json`).
 
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats;
 
 /// One benchmark's measurements (seconds per iteration).
@@ -45,6 +48,34 @@ impl Measurement {
         }
         s
     }
+}
+
+/// The machine-readable snapshot every bench target emits under
+/// `--json`: one record per measurement with `op`, `ns_per_iter`,
+/// percentiles and (when the bench declared work units) throughput.
+/// Shared so `BENCH_attention.json` and `BENCH_serving.json` stay
+/// field-compatible for cross-PR tracking.
+pub fn measurements_json(bench: &str, ms: &[Measurement]) -> Json {
+    Json::obj(vec![
+        ("bench", Json::str(bench)),
+        (
+            "results",
+            Json::arr(ms.iter().map(|m| {
+                let mut fields = vec![
+                    ("op", Json::str(&m.name)),
+                    ("ns_per_iter", Json::num(m.mean() * 1e9)),
+                    ("p50_ns", Json::num(m.p50() * 1e9)),
+                    ("p95_ns", Json::num(m.p95() * 1e9)),
+                    ("samples", Json::num(m.samples.len() as f64)),
+                ];
+                if let Some((units, label)) = m.units_per_iter {
+                    fields.push(("throughput_per_s", Json::num(units / m.mean())));
+                    fields.push(("unit", Json::str(label)));
+                }
+                Json::obj(fields)
+            })),
+        ),
+    ])
 }
 
 pub fn fmt_time(sec: f64) -> String {
@@ -171,5 +202,30 @@ mod tests {
         assert_eq!(fmt_rate(2.5e6), "2.50M");
         assert_eq!(fmt_rate(3.5e3), "3.50k");
         assert_eq!(fmt_rate(42.0), "42.0");
+    }
+
+    #[test]
+    fn measurements_json_roundtrips() {
+        let ms = vec![
+            Measurement {
+                name: "with_units".into(),
+                samples: vec![1e-3, 2e-3],
+                units_per_iter: Some((100.0, "req")),
+            },
+            Measurement {
+                name: "bare".into(),
+                samples: vec![5e-6],
+                units_per_iter: None,
+            },
+        ];
+        let doc = measurements_json("bench_serving", &ms).to_string();
+        let parsed = Json::parse(&doc).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("bench_serving"));
+        let results = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].get("op").unwrap().as_str(), Some("with_units"));
+        assert!(results[0].get("throughput_per_s").unwrap().as_f64().unwrap()
+                > 0.0);
+        assert!(results[1].get("throughput_per_s").is_none());
     }
 }

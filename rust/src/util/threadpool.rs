@@ -92,6 +92,23 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    parallel_map_with(n, threads, || (), |_, i| f(i))
+}
+
+/// [`parallel_map`] with per-worker state: each worker thread calls
+/// `init` exactly once and threads the resulting value (mutably)
+/// through every task it steals. This is how the batched attention
+/// kernel gives every worker its own reusable `Workspace` arena — no
+/// lock traffic and no allocation per task, only per worker. `init`
+/// runs on the worker thread, so the state never crosses threads and
+/// needs no `Send` bound; results come back in index order regardless
+/// of which worker computed them.
+pub fn parallel_map_with<S, T, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
     let threads = threads.clamp(1, n.max(1));
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     if n == 0 {
@@ -102,13 +119,16 @@ where
         out.iter_mut().map(Mutex::new).collect();
     thread::scope(|s| {
         for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            s.spawn(|| {
+                let mut state = init();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(&mut state, i);
+                    **slots[i].lock().unwrap() = Some(v);
                 }
-                let v = f(i);
-                **slots[i].lock().unwrap() = Some(v);
             });
         }
     });
@@ -172,6 +192,46 @@ mod tests {
     #[test]
     fn parallel_map_more_threads_than_items() {
         assert_eq!(parallel_map(3, 64, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn parallel_map_with_ordered_and_state_reused() {
+        // Each worker builds its state once; tasks see (and mutate) the
+        // same per-worker value. With `threads` workers, at most
+        // `threads` init calls happen no matter how many tasks run.
+        let inits = AtomicU64::new(0);
+        let out = parallel_map_with(
+            200,
+            4,
+            || {
+                inits.fetch_add(1, Ordering::Relaxed);
+                0usize // per-worker task counter
+            },
+            |count, i| {
+                *count += 1;
+                (i * 3, *count)
+            },
+        );
+        assert_eq!(out.len(), 200);
+        for (i, (v, _)) in out.iter().enumerate() {
+            assert_eq!(*v, i * 3);
+        }
+        let n_inits = inits.load(Ordering::Relaxed);
+        assert!((1u64..=4).contains(&n_inits), "{n_inits} inits");
+        // 200 tasks over <= 4 workers: some worker's counter reached 50+
+        let max_count = out.iter().map(|&(_, c)| c).max().unwrap();
+        assert!(max_count >= 200 / 4, "state threaded through tasks");
+    }
+
+    #[test]
+    fn parallel_map_with_empty_and_single_thread() {
+        assert!(parallel_map_with(0, 4, || 0u8, |_, i| i).is_empty());
+        let out = parallel_map_with(5, 1, || 10usize, |s, i| {
+            *s += 1;
+            *s + i
+        });
+        // one worker: state counts 1..=5 in index order
+        assert_eq!(out, vec![11, 13, 15, 17, 19]);
     }
 
     #[test]

@@ -1,0 +1,292 @@
+//! End-to-end conformance of the batched native serving path: for every
+//! (rho, tau, threads, batch-shape) combination in the sweep,
+//! `Engine::serve_batch` — which fans requests × layers × heads through
+//! the sparse-first kernel's shared worker pool — must produce outputs
+//! **bitwise identical** to sequential single-request execution of the
+//! retained reference implementation `hdp_head_reference`, one head at
+//! a time. Batch composition, fan-out width and co-scheduled requests
+//! may change wall-clock, never results.
+//!
+//! Needs no artifacts: the native backend derives each request's
+//! workload deterministically from its tokens (`derive_head_inputs`).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hdp::attention::hdp::hdp_head_reference;
+use hdp::coordinator::{derive_head_inputs, pooled_label, Batcher, Engine,
+                       NativeModelConfig, Request, ServeMode};
+use hdp::sim::SimConfig;
+use hdp::util::rng::SplitMix64;
+
+const GEOM: NativeModelConfig =
+    NativeModelConfig { n_layers: 2, n_heads: 3, d_head: 8 };
+
+fn engine(mode: ServeMode, threads: usize, max_batch: usize) -> Engine {
+    let batcher = Arc::new(Batcher::new(max_batch, Duration::from_millis(1)));
+    Engine::new_native(GEOM, mode, SimConfig::edge(), batcher, threads).unwrap()
+}
+
+fn request(id: u64, seq_len: usize) -> Request {
+    let mut rng = SplitMix64::new(0xBEEF ^ id);
+    Request {
+        id,
+        tokens: (0..seq_len).map(|_| rng.next_below(30_000) as i32).collect(),
+        enqueued: Instant::now(),
+    }
+}
+
+/// What sequential single-request reference execution says one request's
+/// response must contain: the flattened per-head outputs in (layer,
+/// head) order plus the pruning trail.
+struct ReferenceRun {
+    outputs: Vec<f32>,
+    label: i32,
+    heads_pruned: usize,
+    heads_total: usize,
+    kept_blocks: usize,
+    blocks_total: usize,
+}
+
+fn reference_run(engine: &Engine, req: &Request) -> ReferenceRun {
+    let p = engine.native_kernel_params().expect("native engine");
+    let profile = engine.native_profile().expect("native engine");
+    let mut outputs = Vec::new();
+    let (mut pruned, mut total, mut kept, mut blocks) = (0usize, 0usize, 0usize, 0usize);
+    for layer in 0..GEOM.n_layers {
+        for head in 0..GEOM.n_heads {
+            let (iq, fq, ik, fk, v) =
+                derive_head_inputs(&req.tokens, layer, head, GEOM.d_head, profile);
+            let out = hdp_head_reference(&iq, &fq, &ik, &fk, &v, p);
+            outputs.extend_from_slice(out.out.data());
+            total += 1;
+            pruned += usize::from(!out.head_kept);
+            kept += out.mask.data().iter().filter(|&&m| m == 1.0).count();
+            blocks += out.mask.len();
+        }
+    }
+    let label = pooled_label(&outputs);
+    ReferenceRun {
+        outputs,
+        label,
+        heads_pruned: pruned,
+        heads_total: total,
+        kept_blocks: kept,
+        blocks_total: blocks,
+    }
+}
+
+fn assert_conforms(engine: &Engine, reqs: &[Request], ctx: &str) {
+    let responses = engine.serve_batch(reqs).unwrap();
+    assert_eq!(responses.len(), reqs.len(), "{ctx}: one response per request");
+    for (req, resp) in reqs.iter().zip(&responses) {
+        assert_eq!(resp.id, req.id, "{ctx}: id order");
+        let want = reference_run(engine, req);
+        assert_eq!(resp.outputs.len(), want.outputs.len(), "{ctx}: req {}", req.id);
+        for (i, (got, exp)) in
+            resp.outputs.iter().zip(&want.outputs).enumerate()
+        {
+            assert_eq!(got.to_bits(), exp.to_bits(),
+                       "{ctx}: req {} output[{i}] {got} != {exp}", req.id);
+        }
+        assert_eq!(resp.label, want.label, "{ctx}: req {}", req.id);
+        assert_eq!(resp.heads_pruned, want.heads_pruned, "{ctx}: req {}", req.id);
+        assert_eq!(resp.heads_total, want.heads_total, "{ctx}: req {}", req.id);
+        let want_density = if want.blocks_total == 0 {
+            1.0
+        } else {
+            want.kept_blocks as f32 / want.blocks_total as f32
+        };
+        assert_eq!(resp.kept_density.to_bits(), want_density.to_bits(),
+                   "{ctx}: req {}", req.id);
+        assert!(resp.sim_seconds > 0.0, "{ctx}: co-processor timing attached");
+    }
+}
+
+#[test]
+fn batched_equals_sequential_reference_across_rho_tau_threads() {
+    // The central sweep: pruning knobs × fan-out widths × a mixed-length
+    // batch. tau = -inf keeps every head, 0.0 is data-dependent, 1e9
+    // prunes every head (the early-exit path must still produce the
+    // reference's zero outputs).
+    let reqs: Vec<Request> =
+        [8usize, 16, 32, 16].iter().enumerate()
+            .map(|(i, &l)| request(i as u64, l)).collect();
+    for rho in [-1.0f32, -0.5, 0.0, 0.4, 0.9, 1.0] {
+        for tau in [f32::NEG_INFINITY, 0.0, 1e9] {
+            for threads in [1usize, 2, 8] {
+                let mode = ServeMode::Hdp { rho, tau, qstep: 1.0 / 4096.0 };
+                let eng = engine(mode, threads, reqs.len());
+                assert_conforms(&eng, &reqs,
+                                &format!("rho={rho} tau={tau} threads={threads}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn thread_counts_and_batch_composition_never_change_responses() {
+    // Serve the same requests (a) one at a time, (b) in pairs, (c) as
+    // one full batch, across 1 and 8 threads: six ways, one answer.
+    let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
+    let reqs: Vec<Request> =
+        [16usize, 8, 16, 32].iter().enumerate()
+            .map(|(i, &l)| request(100 + i as u64, l)).collect();
+    let mut runs: Vec<Vec<Vec<u32>>> = Vec::new();
+    for threads in [1usize, 8] {
+        let eng = engine(mode, threads, reqs.len());
+        let singles: Vec<Vec<u32>> = reqs
+            .iter()
+            .map(|r| {
+                let resp = eng.serve_batch(std::slice::from_ref(r)).unwrap();
+                resp[0].outputs.iter().map(|x| x.to_bits()).collect()
+            })
+            .collect();
+        let pairs: Vec<Vec<u32>> = reqs
+            .chunks(2)
+            .flat_map(|c| {
+                eng.serve_batch(c)
+                    .unwrap()
+                    .into_iter()
+                    .map(|resp| resp.outputs.iter().map(|x| x.to_bits()).collect())
+            })
+            .collect();
+        let full: Vec<Vec<u32>> = eng
+            .serve_batch(&reqs)
+            .unwrap()
+            .into_iter()
+            .map(|resp| resp.outputs.iter().map(|x| x.to_bits()).collect())
+            .collect();
+        assert_eq!(singles, pairs, "threads={threads}");
+        assert_eq!(singles, full, "threads={threads}");
+        runs.push(singles);
+    }
+    for r in &runs[1..] {
+        assert_eq!(&runs[0], r, "thread counts diverged");
+    }
+}
+
+#[test]
+fn dense_mode_serves_full_attention() {
+    // ServeMode::Dense on the native backend is the no-pruning arm:
+    // every block and head kept, exact quantized product — and still
+    // bitwise against the reference driven by the engine's own params.
+    let eng = engine(ServeMode::Dense, 4, 4);
+    let p = eng.native_kernel_params().unwrap();
+    assert_eq!(p.rho, -1.0);
+    assert!(p.use_ff);
+    let reqs = vec![request(40, 16), request(41, 8)];
+    assert_conforms(&eng, &reqs, "dense");
+    let resp = eng.serve_batch(&reqs).unwrap();
+    for r in &resp {
+        assert_eq!(r.heads_pruned, 0, "dense prunes nothing");
+        assert_eq!(r.kept_density, 1.0, "dense keeps every block");
+    }
+}
+
+#[test]
+fn early_pruned_batch_short_circuits_to_zero_outputs() {
+    let mode = ServeMode::Hdp { rho: 0.5, tau: 1e9, qstep: 1.0 / 4096.0 };
+    let eng = engine(mode, 4, 4);
+    let reqs = vec![request(50, 16), request(51, 32)];
+    let resp = eng.serve_batch(&reqs).unwrap();
+    for r in &resp {
+        assert_eq!(r.heads_pruned, GEOM.n_layers * GEOM.n_heads);
+        assert!(r.outputs.iter().all(|&x| x == 0.0), "pruned heads emit zeros");
+        assert_eq!(r.label, 0, "tie breaks to label 0");
+    }
+    // and the zero outputs are exactly what the reference produces
+    assert_conforms(&eng, &reqs, "all-pruned");
+}
+
+#[test]
+fn empty_oversized_and_malformed_batches_are_rejected() {
+    let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
+    let eng = engine(mode, 2, 2);
+    assert!(eng.serve_batch(&[]).is_err(), "empty batch");
+    let reqs = vec![request(60, 16), request(61, 16), request(62, 16)];
+    assert!(eng.serve_batch(&reqs).is_err(), "oversized batch");
+    // zero-length and block-misaligned requests
+    assert!(eng.serve_batch(&[request(63, 0)]).is_err(), "empty request");
+    assert!(eng.serve_batch(&[request(64, 7)]).is_err(), "odd seq len");
+    // a valid batch still works on the same engine afterwards
+    assert_conforms(&eng, &reqs[..2], "recovery after rejects");
+}
+
+#[test]
+fn max_size_batch_through_batcher_run_loop() {
+    // The full coordinator path: producer → dynamic batcher → run_loop
+    // → batched kernel. Whatever batch compositions the linger clock
+    // produces, every response must match its sequential reference.
+    let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
+    let max_batch = 4;
+    let batcher = Arc::new(Batcher::new(max_batch, Duration::from_millis(2)));
+    let eng = Engine::new_native(GEOM, mode, SimConfig::edge(),
+                                 Arc::clone(&batcher), 0).unwrap();
+    let n = 13u64; // not a multiple of max_batch: final partial batch
+    let reqs: Vec<Request> = (0..n)
+        .map(|i| request(i, [8usize, 16, 32][i as usize % 3]))
+        .collect();
+    let producer = {
+        let b = Arc::clone(&batcher);
+        let reqs = reqs.clone();
+        std::thread::spawn(move || {
+            for r in reqs {
+                b.submit(r);
+            }
+            b.close();
+        })
+    };
+    let responses = eng.run_loop();
+    producer.join().unwrap();
+    assert_eq!(responses.len(), n as usize, "nothing dropped");
+    let mut seen: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    seen.sort_unstable();
+    assert_eq!(seen, (0..n).collect::<Vec<_>>());
+    for resp in &responses {
+        let req = &reqs[resp.id as usize];
+        let want = reference_run(&eng, req);
+        let got: Vec<u32> = resp.outputs.iter().map(|x| x.to_bits()).collect();
+        let exp: Vec<u32> = want.outputs.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, exp, "req {}", resp.id);
+        assert_eq!(resp.label, want.label);
+    }
+    // metrics saw every request and the measured pruning trail
+    assert_eq!(eng.metrics.requests(), n);
+    let report = eng.metrics.report();
+    assert!(report.contains("pruning (meas)"), "{report}");
+    // run_loop on a closed, drained batcher returns nothing
+    assert!(eng.run_loop().is_empty());
+}
+
+#[test]
+fn dropping_raw_outputs_changes_nothing_but_outputs() {
+    // with_raw_outputs(false) is the long-running-loop mode: labels,
+    // pruning stats and timing must be identical, only the bulk
+    // conformance surface goes away.
+    let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
+    let reqs = vec![request(80, 16), request(81, 32)];
+    let keep = engine(mode, 2, 2);
+    let lean = engine(mode, 2, 2).with_raw_outputs(false);
+    let kept = keep.serve_batch(&reqs).unwrap();
+    let dropped = lean.serve_batch(&reqs).unwrap();
+    for (k, d) in kept.iter().zip(&dropped) {
+        assert!(!k.outputs.is_empty());
+        assert!(d.outputs.is_empty(), "raw outputs dropped");
+        assert_eq!(k.label, d.label);
+        assert_eq!(k.heads_pruned, d.heads_pruned);
+        assert_eq!(k.kept_density.to_bits(), d.kept_density.to_bits());
+    }
+}
+
+#[test]
+fn q12_profile_also_conforms() {
+    // The 12-bit front end profile (qstep 1/256) routes the derivation
+    // through Q4_8; conformance must hold there too.
+    let mode = ServeMode::Hdp { rho: 0.3, tau: 0.0, qstep: 1.0 / 256.0 };
+    let eng = engine(mode, 3, 3);
+    assert_eq!(eng.native_profile().unwrap(),
+               hdp::fixed::QuantProfile::Q4_8);
+    let reqs = vec![request(70, 16), request(71, 16), request(72, 8)];
+    assert_conforms(&eng, &reqs, "q12 profile");
+}

@@ -1,13 +1,17 @@
 #!/usr/bin/env bash
-# Run the attention microbenchmarks and record a machine-readable
-# snapshot so future PRs can track the perf trajectory.
+# Run the attention + serving benchmarks and record machine-readable
+# snapshots so future PRs can track the perf trajectory.
 #
-#   scripts/bench.sh [output.json] [--quick]
+#   scripts/bench.sh [attention_out.json] [--quick]
 #
-# Writes BENCH_attention.json (default, at the repo root) with one
-# record per op: {op, ns_per_iter, p50_ns, p95_ns, throughput_per_s,
-# unit}. The headline to watch: `kernel.head_ws 128x64 rho=0.9` must
-# stay >= 3x faster than `... rho=0.0` (sparse-first scaling).
+# Writes BENCH_attention.json (bench_micro: kernel + substrate ops) and
+# BENCH_serving.json (bench_serving: native serve_batch throughput vs
+# batch size), each with one record per op: {op, ns_per_iter, p50_ns,
+# p95_ns, throughput_per_s, unit}. Headlines to watch:
+#   * `kernel.head_ws 128x64 rho=0.9` must stay >= 3x faster than
+#     `... rho=0.0` (sparse-first scaling);
+#   * `serve_batch b=8 (batched pool)` must stay >= 2x the throughput
+#     of `serve b=8 (sequential 1-at-a-time)` (batch-level fan-out).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -18,5 +22,7 @@ if [[ $# -gt 0 && $1 != --* ]]; then
 fi
 
 cargo bench --bench bench_micro -- --json "$out" "$@"
-
 echo "bench results written to $out"
+
+cargo bench --bench bench_serving -- --json BENCH_serving.json "$@"
+echo "serving bench results written to BENCH_serving.json"

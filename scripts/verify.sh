@@ -1,11 +1,22 @@
 #!/usr/bin/env bash
-# Tier-1 verification flow: release build, test suite, and (when the
-# component is installed) clippy with warnings denied.
+# Tier-1 verification flow: release build of every target, the test
+# suite (unit gate first, then each integration harness exactly once,
+# named so a failure identifies it), and — when the component is
+# installed — clippy with warnings denied.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-cargo build --release
-cargo test -q
+# --all-targets also compiles benches/examples/tests that plain
+# `cargo build` and the split test invocations below would skip.
+cargo build --release --all-targets
+
+cargo test -q --lib --bins
+# Integration harnesses as an explicit second gate (auto-discovers any
+# future file under rust/tests/): serve_conformance proves the batched
+# native serving path is bitwise identical to sequential reference
+# execution; sim_cross_validation and pjrt_roundtrip cover the PJRT
+# artifacts (they self-skip when artifacts/ is absent).
+cargo test -q --test '*'
 
 if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings
