@@ -55,7 +55,8 @@ fn main() -> Result<()> {
                     id,
                     tokens: ex.tokens.iter().map(|&t| t as i32).collect(),
                     enqueued: Instant::now(),
-                });
+                })
+                .unwrap();
                 std::thread::sleep(Duration::from_secs_f64(rng.next_exp(rate)));
             }
             b.close();

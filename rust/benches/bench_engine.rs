@@ -51,7 +51,7 @@ fn main() {
     let m2 = b.run("batcher submit+drain one full batch", || {
         let bt = Batcher::new(batch, Duration::from_millis(100));
         for r in &reqs {
-            bt.submit(r.clone());
+            bt.submit(r.clone()).unwrap();
         }
         bt.next_batch().unwrap()
     });

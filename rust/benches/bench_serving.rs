@@ -1,7 +1,8 @@
 //! Serving-path benchmark: native `Engine::serve_batch` throughput as a
 //! function of batch size, batched fan-out (requests × layers × heads
 //! through one worker pool) against sequential request-at-a-time
-//! execution — the curve `scripts/bench.sh` archives as
+//! execution, plus end-to-end sharded-coordinator throughput as a
+//! function of shard count — the curves `scripts/bench.sh` archives as
 //! `BENCH_serving.json` so PRs can track the serving trajectory the way
 //! `BENCH_attention.json` tracks the kernel.
 //!
@@ -12,7 +13,8 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use hdp::coordinator::{Batcher, Engine, NativeModelConfig, Request, ServeMode};
+use hdp::coordinator::{Batcher, Engine, NativeModelConfig, Request,
+                       ServeMode, ShardedCoordinator};
 use hdp::sim::SimConfig;
 use hdp::util::bench::{measurements_json, Bench, Measurement};
 use hdp::util::rng::SplitMix64;
@@ -114,6 +116,48 @@ fn main() {
         ));
     }
 
+    // Sharded-coordinator series: drain a fixed backlog of 8-request
+    // batches with N single-worker lanes over one batcher. Each lane's
+    // kernel runs 1 thread, so the curve isolates lane-level scaling
+    // (idle shards stealing closed batches) from kernel fan-out — on a
+    // multi-core host throughput should grow near-linearly in N. The
+    // timed region deliberately spans submit → full drain, including
+    // lane spin-up (run() spawns N threads and builds N engines, each
+    // a parameter struct + empty workspace pool): that *is* the
+    // sharded serving path, and its cost — tens of µs per lane — is
+    // noise against the multi-millisecond backlog drain.
+    const SHARD_BACKLOG: usize = 64;
+    const SHARD_BATCH: usize = 8;
+    println!("\n== sharded coordinator throughput vs shard count \
+              (b={SHARD_BATCH}, {SHARD_BACKLOG}-request backlog, 1 kernel \
+              thread per lane) ==");
+    let mode = ServeMode::Hdp { rho: 0.5, tau: 0.0, qstep: 1.0 / 4096.0 };
+    for &shards in &[1usize, 2, 4] {
+        let reqs = mk_requests(SHARD_BACKLOG);
+        ms.push(b.run_throughput(
+            &format!("serve_sharded shards={shards} b={SHARD_BATCH} \
+                      (drain backlog)"),
+            SHARD_BACKLOG as f64, "req",
+            || {
+                let batcher = Arc::new(
+                    Batcher::new(SHARD_BATCH, Duration::from_millis(1)));
+                let coord = ShardedCoordinator::new_native(
+                    shards, GEOM, mode, SimConfig::edge(),
+                    Arc::clone(&batcher), 1,
+                )
+                .expect("sharded coordinator")
+                .with_raw_outputs(false);
+                for r in &reqs {
+                    batcher.submit(r.clone()).unwrap();
+                }
+                batcher.close();
+                let report = coord.run().expect("sharded run");
+                assert_eq!(report.responses.len(), SHARD_BACKLOG);
+                report.responses.len()
+            },
+        ));
+    }
+
     // Headline the acceptance criterion tracks: batched vs sequential
     // at the 8-request batch.
     let find = |needle: &str| -> Option<f64> {
@@ -130,6 +174,14 @@ fn main() {
     {
         println!("batched speedup over same-thread request-at-a-time \
                   (8-request batch): {:.2}x", same / bat);
+    }
+    // ... and the sharding criterion: 4 lanes vs 1 lane on the same
+    // backlog (target >= 1.5x on a multi-core runner).
+    if let (Some(one), Some(four)) =
+        (find("serve_sharded shards=1"), find("serve_sharded shards=4"))
+    {
+        println!("sharded speedup, 4 lanes over 1 (b=8 backlog drain): \
+                  {:.2}x", one / four);
     }
 
     if let Some(path) = json_path {

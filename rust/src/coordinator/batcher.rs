@@ -2,6 +2,31 @@
 //! either the executable's batch capacity fills or the oldest request
 //! has lingered past the deadline — the standard serving trade between
 //! throughput (big batches) and tail latency (short linger).
+//!
+//! # Admission control
+//!
+//! A batcher built with [`Batcher::with_max_queue`] bounds its queue
+//! depth: once `max_queue` requests are waiting, [`Batcher::submit`]
+//! *rejects* at the door — it hands the request back as
+//! `Err(Request)` instead of enqueueing it, so the queue can never
+//! outrun the linger clock (unbounded batchers always admit). The
+//! contract callers rely on:
+//!
+//! * **Rejection is immediate and loss-free for admitted work** — a
+//!   rejected request was never queued; every *accepted* request is
+//!   still released to an engine exactly once, including across
+//!   [`Batcher::close`] (close drains accepted requests, it does not
+//!   resurrect rejected ones), and answered exactly once — served, or
+//!   shed with a not-served marker if its batch fails to execute (the
+//!   engine's `run_loop` upholds that half of the contract).
+//! * **Backpressure releases as batches drain** — as soon as
+//!   [`Batcher::next_batch`] removes requests from the queue, `submit`
+//!   admits again.
+//! * **The caller owns the rejection response** — the serving front
+//!   door turns the handed-back request into a
+//!   [`super::engine::Response`] with `rejected = true` (see
+//!   [`super::engine::Response::reject`]), so clients always get an
+//!   answer; the batcher itself never fabricates responses.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -28,6 +53,9 @@ pub struct Batcher {
     cv: Condvar,
     pub max_batch: usize,
     pub linger: Duration,
+    /// Admission bound: `submit` rejects once this many requests wait
+    /// in the queue (`usize::MAX` = unbounded, the default).
+    pub max_queue: usize,
 }
 
 impl Batcher {
@@ -38,14 +66,32 @@ impl Batcher {
             cv: Condvar::new(),
             max_batch,
             linger,
+            max_queue: usize::MAX,
         }
     }
 
-    pub fn submit(&self, req: Request) {
+    /// Bound the queue depth (admission control): `submit` rejects
+    /// whenever `max_queue` requests are already waiting. The bound is
+    /// on *queued* requests only — batches already handed to an engine
+    /// don't count against it.
+    pub fn with_max_queue(mut self, max_queue: usize) -> Self {
+        assert!(max_queue > 0, "max_queue must admit at least one request");
+        self.max_queue = max_queue;
+        self
+    }
+
+    /// Enqueue a request, or — when the queue is at `max_queue` — hand
+    /// it straight back as `Err` (the admission-control reject; see the
+    /// module docs for the contract). Unbounded batchers always `Ok`.
+    pub fn submit(&self, req: Request) -> Result<(), Request> {
         let mut q = self.q.lock().unwrap();
         assert!(!q.closed, "submit after close");
+        if q.items.len() >= self.max_queue {
+            return Err(req);
+        }
         q.items.push_back(req);
         self.cv.notify_all();
+        Ok(())
     }
 
     /// Signal that no more requests will arrive; pending ones still drain.
@@ -101,7 +147,7 @@ mod tests {
     fn full_batch_released_immediately() {
         let b = Batcher::new(4, Duration::from_secs(10));
         for i in 0..4 {
-            b.submit(req(i));
+            b.submit(req(i)).unwrap();
         }
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 4);
@@ -111,7 +157,7 @@ mod tests {
     #[test]
     fn linger_releases_partial_batch() {
         let b = Batcher::new(64, Duration::from_millis(20));
-        b.submit(req(1));
+        b.submit(req(1)).unwrap();
         let t0 = Instant::now();
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 1);
@@ -121,8 +167,8 @@ mod tests {
     #[test]
     fn close_drains_then_none() {
         let b = Batcher::new(8, Duration::from_secs(10));
-        b.submit(req(1));
-        b.submit(req(2));
+        b.submit(req(1)).unwrap();
+        b.submit(req(2)).unwrap();
         b.close();
         assert_eq!(b.next_batch().unwrap().len(), 2);
         assert!(b.next_batch().is_none());
@@ -132,7 +178,7 @@ mod tests {
     fn oversized_queue_splits_into_batches() {
         let b = Batcher::new(3, Duration::from_millis(1));
         for i in 0..7 {
-            b.submit(req(i));
+            b.submit(req(i)).unwrap();
         }
         b.close();
         let sizes: Vec<usize> =
@@ -156,8 +202,8 @@ mod tests {
         // Let the consumer reach the empty-queue wait, then enqueue two
         // requests (it re-blocks on the 60s linger) and close.
         std::thread::sleep(Duration::from_millis(20));
-        b.submit(req(7));
-        b.submit(req(8));
+        b.submit(req(7)).unwrap();
+        b.submit(req(8)).unwrap();
         std::thread::sleep(Duration::from_millis(20));
         let t0 = Instant::now();
         b.close();
@@ -190,7 +236,7 @@ mod tests {
         // max-batch releases.
         let b = Batcher::new(4, Duration::from_secs(60));
         for i in 0..11 {
-            b.submit(req(i));
+            b.submit(req(i)).unwrap();
         }
         b.close();
         let mut ids = Vec::new();
@@ -208,9 +254,9 @@ mod tests {
         // late-arriving second request must not restart the clock.
         let b = Batcher::new(64, Duration::from_millis(60));
         let t0 = Instant::now();
-        b.submit(req(1));
+        b.submit(req(1)).unwrap();
         std::thread::sleep(Duration::from_millis(30));
-        b.submit(req(2));
+        b.submit(req(2)).unwrap();
         let batch = b.next_batch().unwrap();
         let waited = t0.elapsed();
         assert_eq!(batch.len(), 2);
@@ -219,12 +265,68 @@ mod tests {
     }
 
     #[test]
+    fn full_queue_rejects_and_hands_request_back() {
+        let b = Batcher::new(4, Duration::from_secs(10)).with_max_queue(3);
+        for i in 0..3 {
+            b.submit(req(i)).unwrap();
+        }
+        // Depth 3 reached: the 4th submit is rejected, and the caller
+        // gets the exact request back (id intact) to answer with.
+        let back = b.submit(req(99)).unwrap_err();
+        assert_eq!(back.id, 99, "rejected request handed back untouched");
+        assert_eq!(b.pending(), 3, "rejected request never enqueued");
+        // FIFO order of the admitted prefix is untouched.
+        b.close();
+        let ids: Vec<u64> =
+            b.next_batch().unwrap().iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn backpressure_releases_after_flush() {
+        let b = Batcher::new(2, Duration::from_secs(10)).with_max_queue(2);
+        b.submit(req(0)).unwrap();
+        b.submit(req(1)).unwrap();
+        assert!(b.submit(req(2)).is_err(), "full queue rejects");
+        // Draining a batch frees capacity: admission resumes at once.
+        assert_eq!(b.next_batch().unwrap().len(), 2);
+        b.submit(req(3)).unwrap();
+        b.submit(req(4)).unwrap();
+        assert!(b.submit(req(5)).is_err(), "bound re-applies when full again");
+        assert_eq!(b.pending(), 2);
+    }
+
+    #[test]
+    fn close_with_pending_rejections_drains_only_admitted() {
+        // Close after rejections: every admitted request drains exactly
+        // once, rejected ones never reappear, and the drained queue
+        // reports closed.
+        let b = Batcher::new(2, Duration::from_secs(10)).with_max_queue(5);
+        let mut rejected = Vec::new();
+        for i in 0..9 {
+            if let Err(back) = b.submit(req(i)) {
+                rejected.push(back.id);
+            }
+        }
+        assert_eq!(rejected, vec![5, 6, 7, 8], "overflow rejected in order");
+        b.close();
+        let mut served = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            assert!(batch.len() <= 2);
+            served.extend(batch.iter().map(|r| r.id));
+        }
+        assert_eq!(served, vec![0, 1, 2, 3, 4], "admitted prefix, FIFO, once");
+        assert_eq!(b.pending(), 0);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
     fn concurrent_producer_consumer() {
         let b = Arc::new(Batcher::new(8, Duration::from_millis(5)));
         let p = Arc::clone(&b);
         let producer = std::thread::spawn(move || {
             for i in 0..100 {
-                p.submit(req(i));
+                p.submit(req(i)).unwrap();
                 if i % 10 == 0 {
                     std::thread::sleep(Duration::from_millis(1));
                 }

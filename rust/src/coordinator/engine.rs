@@ -16,6 +16,26 @@
 //!   reference execution for any thread count or batch composition
 //!   (pinned by `rust/tests/serve_conformance.rs`), and the measured
 //!   per-request head/block pruning lands in [`Metrics`].
+//!
+//! One engine is one execution lane. Multiple lanes over the same
+//! [`Batcher`] — the sharded scale-out — live in
+//! [`super::shard::ShardedCoordinator`]; because every [`Response`] is
+//! a pure function of its request's tokens and the engine config,
+//! identical engines are interchangeable and sharding cannot change
+//! results (the bitwise-determinism guarantee, pinned by
+//! `serve_conformance`).
+//!
+//! # Admission-control contract
+//!
+//! Engines never see admission-rejected requests: a bounded
+//! [`Batcher`] refuses them at `submit` (see the admission-control
+//! section in [`super::batcher`]), handing the request back to the
+//! producer, who answers with [`Response::reject`]. Such a response
+//! carries `rejected = true`, the request id, `label = -1` and the
+//! time-to-rejection in `e2e_seconds`; every other field is zero /
+//! empty. `run_loop` reuses the same carrier to shed a batch whose
+//! execution failed, so every admitted request still gets exactly one
+//! response. Served responses always carry `rejected = false`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -73,6 +93,34 @@ pub struct Response {
     /// tests compare bitwise against sequential reference execution.
     /// Empty on the PJRT path (its surface is the logits).
     pub outputs: Vec<f32>,
+    /// `true` when the request was *not served*: refused at the
+    /// batcher door (admission control) or shed because its batch
+    /// failed to execute (see [`Response::reject`]). The
+    /// backpressure signal a client retries or sheds on. Always
+    /// `false` on a served response.
+    pub rejected: bool,
+}
+
+impl Response {
+    /// The response an unserved request gets — an admission-control
+    /// refusal, or a request shed by `run_loop` when its batch failed
+    /// — carried on the same type as a served answer, so clients have
+    /// one response stream. `label` is `-1` (no classification
+    /// happened), `e2e_seconds` measures submit-to-refusal, and the
+    /// compute/sim/pruning fields are zero — nothing executed.
+    pub fn reject(id: u64, enqueued: Instant) -> Self {
+        Response {
+            id,
+            label: -1,
+            e2e_seconds: enqueued.elapsed().as_secs_f64(),
+            sim_seconds: 0.0,
+            heads_pruned: 0,
+            heads_total: 0,
+            kept_density: 0.0,
+            outputs: Vec::new(),
+            rejected: true,
+        }
+    }
 }
 
 /// One head's owned input tensors: `(iq, fq, ik, fk, v)`.
@@ -415,6 +463,7 @@ impl Engine {
                 heads_total: total as usize,
                 kept_density: mean_density,
                 outputs: Vec::new(),
+                rejected: false,
             })
             .collect())
     }
@@ -536,6 +585,7 @@ impl Engine {
                     heads_total: stats.heads_total,
                     kept_density: stats.kept_density(),
                     outputs,
+                    rejected: false,
                 }
             })
             .collect())
@@ -554,7 +604,16 @@ impl Engine {
             self.inflight.fetch_add(1, Ordering::SeqCst);
             match self.serve_batch(&batch) {
                 Ok(resps) => self.responses.lock().unwrap().extend(resps),
-                Err(e) => eprintln!("batch failed: {e:#}"),
+                Err(e) => {
+                    // A failed batch must not make its requests vanish:
+                    // every admitted request gets exactly one response,
+                    // so shed the batch with not-served markers (same
+                    // carrier as an admission rejection).
+                    eprintln!("batch failed: {e:#}");
+                    self.responses.lock().unwrap().extend(
+                        batch.iter().map(|r| Response::reject(r.id, r.enqueued)),
+                    );
+                }
             }
             self.inflight.fetch_sub(1, Ordering::SeqCst);
         }

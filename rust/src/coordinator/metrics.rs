@@ -2,13 +2,19 @@
 //! throughput counters and pruning statistics, shared across worker
 //! threads behind a mutex (recording is a few adds — contention-free at
 //! our request rates).
+//!
+//! Every [`Metrics`] is one lane's view. The sharded coordinator
+//! ([`super::shard`]) gives each engine its own instance and merges
+//! them with [`Metrics::absorb`] — histograms merge bucket-wise,
+//! counters add — so a multi-shard run still ends in one report with
+//! fleet-wide quantiles.
 
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::util::stats::Histogram;
 
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone)]
 struct Inner {
     queue: Histogram,
     compute: Histogram,
@@ -109,6 +115,36 @@ impl Metrics {
         self.inner.lock().unwrap().requests
     }
 
+    pub fn batches(&self) -> u64 {
+        self.inner.lock().unwrap().batches
+    }
+
+    /// Merge another lane's metrics into this one: histograms merge
+    /// bucket-wise, every counter adds. The other instance is read
+    /// under its own lock first (a cheap snapshot), then released
+    /// before this one locks — safe whichever order callers merge in.
+    /// Quantiles of the merged histograms are exactly what one shared
+    /// histogram would have recorded.
+    pub fn absorb(&self, other: &Metrics) {
+        let snap = other.inner.lock().unwrap().clone();
+        let mut m = self.inner.lock().unwrap();
+        m.queue.merge(&snap.queue);
+        m.compute.merge(&snap.compute);
+        m.e2e.merge(&snap.e2e);
+        m.requests += snap.requests;
+        m.batches += snap.batches;
+        m.batched_requests += snap.batched_requests;
+        m.sim_cycles += snap.sim_cycles;
+        m.sim_energy_pj += snap.sim_energy_pj;
+        m.sim_dram_bytes += snap.sim_dram_bytes;
+        m.heads_pruned += snap.heads_pruned;
+        m.heads_total += snap.heads_total;
+        m.meas_heads_pruned += snap.meas_heads_pruned;
+        m.meas_heads_total += snap.meas_heads_total;
+        m.meas_kept_blocks += snap.meas_kept_blocks;
+        m.meas_blocks_total += snap.meas_blocks_total;
+    }
+
     pub fn throughput_rps(&self) -> f64 {
         let m = self.inner.lock().unwrap();
         m.requests as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
@@ -200,6 +236,31 @@ mod tests {
         assert_eq!(m.heads_pruned_frac(), 0.0);
         assert_eq!(m.block_kept_frac(), 1.0);
         assert!(!m.report().contains("pruning (meas)"));
+    }
+
+    #[test]
+    fn absorb_merges_counters_and_histograms() {
+        let a = Metrics::new();
+        let b = Metrics::new();
+        a.record_batch(2, &[0.001, 0.002], 0.010, &[0.011, 0.012]);
+        b.record_batch(3, &[0.004, 0.004, 0.005], 0.020,
+                       &[0.024, 0.024, 0.025]);
+        a.record_sim(1000.0, 10.0, 64.0, 1, 8);
+        b.record_sim(500.0, 5.0, 32.0, 2, 8);
+        a.record_pruning(1, 4, 10, 16);
+        b.record_pruning(3, 4, 4, 16);
+        a.absorb(&b);
+        assert_eq!(a.requests(), 5);
+        assert_eq!(a.batches(), 2);
+        assert_eq!(a.mean_batch_size(), 2.5);
+        // merged e2e histogram spans both lanes' samples
+        assert!(a.e2e_quantile(0.99) >= 0.02, "{}", a.e2e_quantile(0.99));
+        assert!((a.heads_pruned_frac() - 4.0 / 8.0).abs() < 1e-12);
+        assert!((a.block_kept_frac() - 14.0 / 32.0).abs() < 1e-12);
+        let r = a.report();
+        assert!(r.contains("3/16 heads pruned"), "{r}");
+        // the absorbed lane is untouched
+        assert_eq!(b.requests(), 3);
     }
 
     #[test]

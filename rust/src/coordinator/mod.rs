@@ -1,15 +1,29 @@
-//! Layer-3 serving coordinator: dynamic batcher, worker engine (PJRT
-//! artifacts or the native in-process sparse kernel) with the
-//! co-processor timing model attached, and serving metrics.
-//! (Thread-based: the offline sandbox has no tokio; a fixed worker pool
-//! over a condvar queue covers the same ground for a CPU-bound
-//! backend.)
+//! Layer-3 serving coordinator: dynamic batcher with admission control,
+//! worker engines (PJRT artifacts or the native in-process sparse
+//! kernel) with the co-processor timing model attached, a sharded
+//! multi-engine scale-out over one batcher, and serving metrics with
+//! cross-shard merging. (Thread-based: the offline sandbox has no
+//! tokio; a fixed worker pool over a condvar queue covers the same
+//! ground for a CPU-bound backend.)
+//!
+//! The serving flow (see ARCHITECTURE.md for the full map):
+//!
+//! ```text
+//! producers → Batcher (bounded queue, linger clock)
+//!               ├─ admit → closed batches → idle shard pulls
+//!               │            ShardedCoordinator: Engine lanes 0..N
+//!               │            (each: forward_batch → Metrics)
+//!               └─ reject → Response::reject (rejected = true)
+//! ```
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod shard;
 
 pub use batcher::{Batcher, Request};
 pub use engine::{derive_head_inputs, pooled_label, Engine, NativeModelConfig,
                  Response, ServeMode};
 pub use metrics::Metrics;
+pub use shard::{EngineFactory, Readiness, ShardReport, ShardStats,
+                ShardedCoordinator};

@@ -1,0 +1,505 @@
+//! Sharded multi-engine coordinator: N identical [`Engine`] lanes
+//! pulling from one [`Batcher`], so one slow batch stalls a single lane
+//! instead of the whole queue — the software analogue of keeping every
+//! co-processor lane busy while pruning drops work at run time.
+//!
+//! # Dispatch policy
+//!
+//! Dispatch is *pull-based work stealing*: every shard blocks in
+//! [`Batcher::next_batch`], and whichever shard is idle when a batch
+//! closes takes it. That is least-loaded dispatch by construction — a
+//! shard stuck on a long batch simply doesn't contend for the next one
+//! — with no dispatcher thread, no per-shard queue to balance, and no
+//! head-of-line blocking behind a busy lane. The batcher's condvar
+//! queue *is* the dispatch point.
+//!
+//! # Bitwise-determinism guarantee
+//!
+//! Which shard serves which batch is timing-dependent; responses are
+//! not. Every per-request [`Response`] is a pure function of the
+//! request's tokens and the engine configuration (PR 2's conformance
+//! surface), and all shards are built by the same factory, so `--shards
+//! N` produces bitwise-identical per-request outputs for every `N` —
+//! including `N = 1`, the sequential reference. `serve_conformance`
+//! pins this across shard counts and rejection paths.
+//!
+//! # Admission control
+//!
+//! The shared batcher is the single front door: bound it with
+//! [`Batcher::with_max_queue`] and overload is refused *before* it can
+//! outrun the linger clock, independent of how many lanes drain the
+//! queue. Rejected requests never reach a shard; the producer answers
+//! them with [`Response::reject`] (see the contract in
+//! [`super::batcher`] and [`super::engine`]).
+//!
+//! # Metrics and degraded runs
+//!
+//! Each shard's engine records into its own [`Metrics`]; [`run`]
+//! merges them with [`Metrics::absorb`] into the coordinator's
+//! instance, so a multi-shard run still ends in one report (fleet-wide
+//! histograms, summed counters) plus per-shard [`ShardStats`] for
+//! load-balance visibility. A lane whose factory fails *degrades* the
+//! run — survivors pick up its batches and the failure is carried in
+//! [`ShardReport::lane_errors`]; `run` errors only when every lane
+//! fails. Producers can gate traffic on [`Readiness::wait_any`] so a
+//! bounded queue doesn't mistake cold start for overload.
+//!
+//! [`run`]: ShardedCoordinator::run
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+use anyhow::Result;
+
+use crate::sim::SimConfig;
+
+use super::batcher::Batcher;
+use super::engine::{Engine, NativeModelConfig, Response, ServeMode};
+use super::metrics::Metrics;
+
+/// Builds one shard's engine over the shared batcher. Called once per
+/// shard, *on that shard's own thread* — so backends whose state must
+/// not cross threads (the PJRT client is `Rc`-based) work unchanged:
+/// each lane constructs and owns its runtime locally.
+pub type EngineFactory =
+    Box<dyn Fn(usize, Arc<Batcher>) -> Result<Engine> + Send + Sync>;
+
+/// What one shard thread hands back: its index, the responses it
+/// served, and its engine's metrics.
+type ShardRun = (usize, Vec<Response>, Arc<Metrics>);
+
+#[derive(Debug, Default)]
+struct LaneCounts {
+    shards: usize,
+    up: usize,
+    failed: usize,
+}
+
+/// Cross-thread readiness latch for a sharded run: producers hold
+/// their submissions until a lane is actually pulling batches, so a
+/// bounded batcher's admission control doesn't reject healthy traffic
+/// during cold start (PJRT lanes open a runtime and warm an executable
+/// before their first `next_batch`). Cloneable — hand one to each
+/// producer thread via [`ShardedCoordinator::readiness`]; counts apply
+/// to the coordinator's first [`ShardedCoordinator::run`].
+#[derive(Clone)]
+pub struct Readiness {
+    state: Arc<(Mutex<LaneCounts>, Condvar)>,
+}
+
+impl Readiness {
+    fn new(shards: usize) -> Self {
+        Self {
+            state: Arc::new((
+                Mutex::new(LaneCounts { shards, up: 0, failed: 0 }),
+                Condvar::new(),
+            )),
+        }
+    }
+
+    fn lane_up(&self) {
+        let (m, cv) = &*self.state;
+        m.lock().unwrap().up += 1;
+        cv.notify_all();
+    }
+
+    fn lane_failed(&self) {
+        let (m, cv) = &*self.state;
+        m.lock().unwrap().failed += 1;
+        cv.notify_all();
+    }
+
+    /// Block until at least one lane is serving (`true`), or until
+    /// every lane failed to construct (`false` — nothing will drain
+    /// the queue, so the producer should stop submitting).
+    pub fn wait_any(&self) -> bool {
+        let (m, cv) = &*self.state;
+        let mut g = m.lock().unwrap();
+        while g.up == 0 && g.up + g.failed < g.shards {
+            g = cv.wait(g).unwrap();
+        }
+        g.up > 0
+    }
+}
+
+/// One shard's share of a finished run.
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    pub shard: usize,
+    /// Requests this shard served.
+    pub requests: usize,
+    /// Batches this shard pulled from the shared batcher.
+    pub batches: u64,
+}
+
+/// Everything a sharded run produced: the responses from all lanes
+/// (shard-concatenated — sort by `id` for request order), the merged
+/// metrics, and the per-shard load split.
+pub struct ShardReport {
+    pub responses: Vec<Response>,
+    pub metrics: Arc<Metrics>,
+    pub per_shard: Vec<ShardStats>,
+    /// Lanes whose engine factory failed, with their errors. Their
+    /// batches were picked up by the surviving lanes, so `responses`
+    /// is still complete — a degraded run, not a failed one. (When
+    /// *every* lane fails, [`ShardedCoordinator::run`] returns `Err`
+    /// instead.)
+    pub lane_errors: Vec<(usize, anyhow::Error)>,
+}
+
+impl ShardReport {
+    /// Human-readable roll-up: the merged metrics report plus one
+    /// load-balance line per shard.
+    pub fn summary(&self) -> String {
+        let mut s = self.metrics.report();
+        for st in &self.per_shard {
+            s.push_str(&format!(
+                "shard {}       {} requests in {} batches\n",
+                st.shard, st.requests, st.batches
+            ));
+        }
+        for (shard, e) in &self.lane_errors {
+            s.push_str(&format!("shard {shard}       FAILED: {e:#}\n"));
+        }
+        s
+    }
+}
+
+/// N engine lanes behind one batcher. See the module docs for the
+/// dispatch, determinism and admission-control contracts.
+pub struct ShardedCoordinator {
+    batcher: Arc<Batcher>,
+    metrics: Arc<Metrics>,
+    readiness: Readiness,
+    shards: usize,
+    keep_outputs: bool,
+    factory: EngineFactory,
+}
+
+impl ShardedCoordinator {
+    /// Generic constructor: `factory` builds shard `i`'s engine over
+    /// the shared batcher, on shard `i`'s thread.
+    pub fn from_factory<F>(
+        shards: usize,
+        batcher: Arc<Batcher>,
+        factory: F,
+    ) -> Result<Self>
+    where
+        F: Fn(usize, Arc<Batcher>) -> Result<Engine> + Send + Sync + 'static,
+    {
+        anyhow::ensure!(shards >= 1, "need at least one shard");
+        Ok(Self {
+            batcher,
+            metrics: Arc::new(Metrics::new()),
+            readiness: Readiness::new(shards),
+            shards,
+            keep_outputs: true,
+            factory: Box::new(factory),
+        })
+    }
+
+    /// N native in-process lanes with identical geometry and mode —
+    /// the no-artifacts scale-out `hdp serve --demo --shards N` runs.
+    /// `threads` is each lane's kernel fan-out width (0 = host
+    /// default); lanes multiply it, so oversubscribed hosts should
+    /// pass an explicit per-lane budget.
+    pub fn new_native(
+        shards: usize,
+        cfg: NativeModelConfig,
+        mode: ServeMode,
+        sim_cfg: SimConfig,
+        batcher: Arc<Batcher>,
+        threads: usize,
+    ) -> Result<Self> {
+        Self::from_factory(shards, batcher, move |_, b| {
+            Engine::new_native(cfg, mode, sim_cfg.clone(), b, threads)
+        })
+    }
+
+    /// Keep or drop raw per-head outputs on every lane's responses
+    /// (default: keep — the conformance surface). Long-running loops
+    /// drop them, exactly like [`Engine::with_raw_outputs`].
+    pub fn with_raw_outputs(mut self, keep: bool) -> Self {
+        self.keep_outputs = keep;
+        self
+    }
+
+    pub fn batcher(&self) -> &Arc<Batcher> {
+        &self.batcher
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The merged metrics (valid after [`ShardedCoordinator::run`];
+    /// empty before).
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// A cloneable latch producers use to hold traffic until a lane is
+    /// actually up — see [`Readiness::wait_any`]. Without it, a
+    /// bounded batcher can reject healthy requests while every lane is
+    /// still constructing its engine (cold start ≠ overload).
+    pub fn readiness(&self) -> Readiness {
+        self.readiness.clone()
+    }
+
+    /// Spawn one thread per shard, each building its engine via the
+    /// factory and consuming the shared batcher until it closes and
+    /// drains, then merge every lane's metrics. Blocks until all lanes
+    /// finish; producers feed (and close) the batcher from other
+    /// threads. A lane whose factory fails degrades the run, it does
+    /// not fail it: surviving lanes pick up its batches, every served
+    /// response is returned, and the failure lands in
+    /// [`ShardReport::lane_errors`]. Only when *every* lane fails —
+    /// nothing drained, nothing served — does `run` return `Err`.
+    pub fn run(&self) -> Result<ShardReport> {
+        let runs: Vec<Result<ShardRun, (usize, anyhow::Error)>> =
+            thread::scope(|s| {
+                let handles: Vec<_> = (0..self.shards)
+                    .map(|shard| {
+                        s.spawn(move || -> Result<ShardRun, (usize, anyhow::Error)> {
+                            let built = (self.factory)(
+                                shard,
+                                Arc::clone(&self.batcher),
+                            );
+                            let engine = match built {
+                                Ok(e) => {
+                                    self.readiness.lane_up();
+                                    e.with_raw_outputs(self.keep_outputs)
+                                }
+                                Err(e) => {
+                                    self.readiness.lane_failed();
+                                    return Err((shard, e));
+                                }
+                            };
+                            let responses = engine.run_loop();
+                            let metrics = Arc::clone(&engine.metrics);
+                            Ok((shard, responses, metrics))
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("shard thread panicked"))
+                    .collect()
+            });
+        let mut responses = Vec::new();
+        let mut per_shard = Vec::new();
+        let mut lane_errors = Vec::new();
+        for run in runs {
+            match run {
+                Ok((shard, resps, metrics)) => {
+                    self.metrics.absorb(&metrics);
+                    per_shard.push(ShardStats {
+                        shard,
+                        requests: resps.len(),
+                        batches: metrics.batches(),
+                    });
+                    responses.extend(resps);
+                }
+                Err(lane_err) => lane_errors.push(lane_err),
+            }
+        }
+        if per_shard.is_empty() {
+            let (shard, e) = lane_errors
+                .into_iter()
+                .next()
+                .expect("shards >= 1, so an empty run has an error");
+            return Err(e.context(format!(
+                "every lane failed; first failure on shard {shard}"
+            )));
+        }
+        Ok(ShardReport {
+            responses,
+            metrics: Arc::clone(&self.metrics),
+            per_shard,
+            lane_errors,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    use crate::util::rng::SplitMix64;
+
+    use crate::coordinator::batcher::Request;
+
+    const GEOM: NativeModelConfig =
+        NativeModelConfig { n_layers: 1, n_heads: 2, d_head: 8 };
+
+    fn mode() -> ServeMode {
+        ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 }
+    }
+
+    fn request(id: u64) -> Request {
+        let mut rng = SplitMix64::new(0xC0FFEE ^ id);
+        Request {
+            id,
+            tokens: (0..16).map(|_| rng.next_below(30_000) as i32).collect(),
+            enqueued: Instant::now(),
+        }
+    }
+
+    fn coordinator(shards: usize, max_batch: usize) -> ShardedCoordinator {
+        let batcher =
+            Arc::new(Batcher::new(max_batch, Duration::from_millis(1)));
+        ShardedCoordinator::new_native(
+            shards, GEOM, mode(), SimConfig::edge(), batcher, 1,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn zero_shards_is_an_error() {
+        let batcher = Arc::new(Batcher::new(2, Duration::from_millis(1)));
+        assert!(ShardedCoordinator::new_native(
+            0, GEOM, mode(), SimConfig::edge(), batcher, 1,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn drains_prefilled_queue_and_merges_metrics() {
+        let n = 11u64;
+        for shards in [1usize, 3] {
+            let coord = coordinator(shards, 4);
+            for id in 0..n {
+                coord.batcher().submit(request(id)).unwrap();
+            }
+            coord.batcher().close();
+            let report = coord.run().unwrap();
+            assert_eq!(report.responses.len(), n as usize, "shards={shards}");
+            let mut ids: Vec<u64> =
+                report.responses.iter().map(|r| r.id).collect();
+            ids.sort_unstable();
+            assert_eq!(ids, (0..n).collect::<Vec<_>>(), "nothing dropped");
+            assert!(report.responses.iter().all(|r| !r.rejected));
+            // merged metrics cover every request, and the per-shard
+            // split accounts for all of them
+            assert_eq!(report.metrics.requests(), n);
+            let split: usize =
+                report.per_shard.iter().map(|s| s.requests).sum();
+            assert_eq!(split, n as usize);
+            assert_eq!(report.per_shard.len(), shards);
+            assert!(report.summary().contains("shard 0"));
+        }
+    }
+
+    #[test]
+    fn live_producer_with_admission_control() {
+        // Bounded queue + live lanes: accepted requests all serve,
+        // rejected ones all answer with a rejection response, and the
+        // two sets partition the id space.
+        let n = 40u64;
+        let batcher = Arc::new(
+            Batcher::new(4, Duration::from_millis(1)).with_max_queue(8),
+        );
+        let coord = ShardedCoordinator::new_native(
+            2, GEOM, mode(), SimConfig::edge(), Arc::clone(&batcher), 1,
+        )
+        .unwrap();
+        let producer = std::thread::spawn(move || {
+            let mut rejections = Vec::new();
+            for id in 0..n {
+                if let Err(back) = batcher.submit(request(id)) {
+                    rejections.push(Response::reject(back.id, back.enqueued));
+                }
+            }
+            batcher.close();
+            rejections
+        });
+        let report = coord.run().unwrap();
+        let rejections = producer.join().unwrap();
+        assert_eq!(report.responses.len() + rejections.len(), n as usize);
+        assert!(rejections.iter().all(|r| r.rejected && r.label == -1));
+        let mut ids: Vec<u64> = report
+            .responses
+            .iter()
+            .chain(&rejections)
+            .map(|r| r.id)
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n).collect::<Vec<_>>(), "served + rejected = all");
+        assert_eq!(report.metrics.requests() as usize, report.responses.len());
+    }
+
+    #[test]
+    fn lane_failure_degrades_without_losing_responses() {
+        // One lane refuses to boot: the survivor picks up its batches,
+        // every admitted request still gets a response, and the
+        // failure is reported on the side — degraded, not failed.
+        let batcher = Arc::new(Batcher::new(2, Duration::from_millis(1)));
+        let coord = ShardedCoordinator::from_factory(
+            2,
+            Arc::clone(&batcher),
+            |shard, b| {
+                anyhow::ensure!(shard != 1, "shard 1 refuses to boot");
+                Engine::new_native(GEOM, mode(), SimConfig::edge(), b, 1)
+            },
+        )
+        .unwrap();
+        for id in 0..5 {
+            batcher.submit(request(id)).unwrap();
+        }
+        batcher.close();
+        let report = coord.run().unwrap();
+        assert_eq!(report.responses.len(), 5, "no served response lost");
+        assert_eq!(report.lane_errors.len(), 1);
+        assert_eq!(report.lane_errors[0].0, 1, "failing shard identified");
+        assert!(format!("{:#}", report.lane_errors[0].1)
+            .contains("refuses to boot"));
+        assert_eq!(report.per_shard.len(), 1, "only the healthy lane ran");
+        assert_eq!(coord.metrics().requests(), 5);
+        assert_eq!(coord.batcher().pending(), 0, "queue drained");
+        assert!(report.summary().contains("FAILED"), "{}", report.summary());
+    }
+
+    #[test]
+    fn all_lanes_failing_is_an_error_and_readiness_reports_it() {
+        let batcher = Arc::new(Batcher::new(2, Duration::from_millis(1)));
+        let coord = ShardedCoordinator::from_factory(
+            2,
+            Arc::clone(&batcher),
+            |_, _| anyhow::bail!("no lane boots"),
+        )
+        .unwrap();
+        batcher.close();
+        let ready = coord.readiness();
+        let err = coord.run().unwrap_err();
+        assert!(format!("{err:#}").contains("no lane boots"));
+        assert!(format!("{err:#}").contains("every lane failed"));
+        // wait_any must not hang: every lane resolved (as failed)
+        assert!(!ready.wait_any(), "no lane ever came up");
+    }
+
+    #[test]
+    fn readiness_signals_before_traffic() {
+        // A producer holding on wait_any() proceeds once a lane is up.
+        let batcher = Arc::new(Batcher::new(2, Duration::from_millis(1)));
+        let coord = ShardedCoordinator::new_native(
+            2, GEOM, mode(), SimConfig::edge(), Arc::clone(&batcher), 1,
+        )
+        .unwrap();
+        let ready = coord.readiness();
+        let producer = std::thread::spawn(move || {
+            let ok = ready.wait_any();
+            if ok {
+                for id in 0..4 {
+                    batcher.submit(request(id)).unwrap();
+                }
+            }
+            batcher.close();
+            ok
+        });
+        let report = coord.run().unwrap();
+        assert!(producer.join().unwrap(), "lanes came up");
+        assert_eq!(report.responses.len(), 4);
+        assert!(report.lane_errors.is_empty());
+    }
+}

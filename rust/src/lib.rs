@@ -7,14 +7,16 @@
 //! and an integer/fraction approximation, executed by a multi-core
 //! co-processor.
 //!
-//! Three layers (see DESIGN.md):
+//! Three layers (stage-by-stage map in the repo-root ARCHITECTURE.md;
+//! README.md is the front door):
 //! * **L1/L2 (build time)** — JAX + Pallas kernels AOT-lowered to HLO
 //!   text artifacts (`python/compile/`, `make artifacts`).
 //! * **L3 (this crate)** — the runtime: PJRT execution of the
 //!   artifacts, the functional Algorithm-2 model, the cycle-level HDP
 //!   co-processor simulator with baseline accelerator cost models, and
-//!   a serving coordinator (dynamic batcher + metrics) with the
-//!   figure-reproduction harness behind the `hdp` CLI.
+//!   a serving [`coordinator`] — dynamic batcher with admission
+//!   control, sharded multi-engine scale-out, merged metrics — with
+//!   the figure-reproduction harness behind the `hdp` CLI.
 
 pub mod attention;
 pub mod coordinator;

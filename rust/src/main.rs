@@ -15,7 +15,9 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
-use hdp::coordinator::{Batcher, Engine, NativeModelConfig, Request, ServeMode};
+use hdp::coordinator::{Batcher, Engine, NativeModelConfig, Readiness,
+                       Request, Response, ServeMode, ShardReport,
+                       ShardedCoordinator};
 use hdp::data::{Dataset, Split, Stream};
 use hdp::model::{Evaluator, ParamStore, Trainer};
 use hdp::model::evaluator::Variant;
@@ -25,6 +27,7 @@ use hdp::runtime::Runtime;
 use hdp::sim::SimConfig;
 use hdp::util::cli::Args;
 use hdp::util::rng::SplitMix64;
+use hdp::util::threadpool::configured_threads;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -63,7 +66,9 @@ fn print_help() {
          \x20 eval    accuracy + pruning diagnostics for one config\n\
          \x20 serve   dynamic-batched serving with co-processor timing\n\
          \x20         (`--demo` runs the native in-process kernel path:\n\
-         \x20         no artifacts or weights needed)\n\
+         \x20         no artifacts or weights needed; `--shards N` fans\n\
+         \x20         batches across N engine lanes, `--max-queue M`\n\
+         \x20         bounds the queue and rejects overload)\n\
          \x20 repro   regenerate the paper's figures (CSV into results/;\n\
          \x20         `--figs kernel,table1,arch` needs no artifacts)\n\
          \x20 arch    accelerator comparison (cycle simulator)\n\
@@ -206,6 +211,9 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .flag("rho", "0.4", "HDP block pruning ratio")
         .flag("tau", "4096", "HDP head pruning threshold")
         .flag("chip", "edge", "co-processor model: edge|server")
+        .flag("shards", "1", "engine lanes pulling from the one batcher")
+        .flag("max-queue", "0", "admission control: reject submits once \
+               this many requests wait (0 = unbounded)")
         .switch("demo", "serve on the in-process sparse kernel \
                  (no artifacts or weights needed)")
         .flag("layers", "2", "demo: attention layers per request")
@@ -214,24 +222,27 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .flag("seq", "32", "demo: base sequence length (requests mix \
                seq and seq/2)")
         .flag("batch", "8", "demo: max batch size")
-        .flag("threads", "0", "demo: kernel worker threads \
-               (0 = host default)")
+        .flag("threads", "0", "demo: kernel worker threads per lane \
+               (0 = host default split across --shards lanes)")
         .parse(rest)?;
 
     if args.get_bool("demo") {
         return serve_demo(&args);
     }
 
-    let rt = Arc::new(open_runtime(&args)?);
     let model = args.get("model");
     let dataset = Dataset::parse(&args.get("dataset"))?;
     let params = figures::load_weights(&args.get("weights-dir"), &model,
                                        dataset.name())?;
-    let spec = rt.model(&model)?;
-    let batcher = Arc::new(Batcher::new(
-        spec.config.eval_batch,
-        Duration::from_millis(args.get_usize("linger-ms")? as u64),
-    ));
+    // Open the runtime only long enough to read the model geometry —
+    // each lane opens (and keeps) its own; holding this one for the
+    // whole serve would just double the resident artifacts.
+    let (eval_batch, seq_len) = {
+        let rt = open_runtime(&args)?;
+        let spec = rt.model(&model)?;
+        (spec.config.eval_batch, spec.config.seq_len)
+    };
+    let batcher = Arc::new(bounded_batcher(&args, eval_batch)?);
     let mode = match args.get("mode").as_str() {
         "dense" => ServeMode::Dense,
         _ => ServeMode::Hdp {
@@ -241,49 +252,122 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         },
     };
     let chip = if args.get("chip") == "server" { SimConfig::server() } else { SimConfig::edge() };
-    let engine = Engine::new(Arc::clone(&rt), &params, mode, chip,
-                             Arc::clone(&batcher))?;
-    // Warm the executable before requests arrive.
-    let _ = rt.executable(&model, match mode {
+
+    // Each shard opens its own runtime and warms its own executable on
+    // its own thread — the PJRT client is thread-pinned, so lanes must
+    // not share one.
+    let artifacts = args.get("artifacts");
+    let entry = match mode {
         ServeMode::Dense => "dense_fwd",
         ServeMode::Hdp { .. } => "hdp_fwd",
-    })?;
+    };
+    let factory_model = model.clone();
+    let coordinator = ShardedCoordinator::from_factory(
+        args.get_usize("shards")?,
+        Arc::clone(&batcher),
+        move |_, b| {
+            let rt = Arc::new(Runtime::open(&artifacts)?);
+            let _ = rt.executable(&factory_model, entry)?;
+            Engine::new(Arc::clone(&rt), &params, mode, chip.clone(), b)
+        },
+    )?;
 
     let n = args.get_usize("requests")?;
     let rate = args.get_f64("rate")?;
-    let seq_len = spec.config.seq_len;
-    let producer_batcher = Arc::clone(&batcher);
-    let producer = std::thread::spawn(move || {
-        let mut rng = SplitMix64::new(7);
-        let mut stream = Stream::new(dataset, Split::Eval, seq_len, 42);
-        for id in 0..n as u64 {
-            let ex = stream.next_example();
-            producer_batcher.submit(Request {
-                id,
-                tokens: ex.tokens.iter().map(|&t| t as i32).collect(),
-                enqueued: Instant::now(),
-            });
-            std::thread::sleep(Duration::from_secs_f64(rng.next_exp(rate)));
-        }
-        producer_batcher.close();
-    });
+    let mut stream = Stream::new(dataset, Split::Eval, seq_len, 42);
+    let producer = spawn_producer(
+        Arc::clone(&batcher), coordinator.readiness(), n, rate,
+        move |_| {
+            stream.next_example().tokens.iter().map(|&t| t as i32).collect()
+        },
+    );
 
-    let responses = engine.run_loop();
-    producer.join().unwrap();
-    println!("served {} responses", responses.len());
-    println!("{}", engine.metrics.report());
-    if let Some(r) = responses.first() {
+    let report = coordinator.run()?;
+    let rejections = producer.join().unwrap();
+    print_serve_report(&report, &rejections, None);
+    if let Some(r) = report.responses.first() {
         println!("co-processor latency per request (simulated): {:.3} ms",
                  r.sim_seconds * 1e3);
     }
     Ok(())
 }
 
+/// Batcher for `hdp serve`: release size from the model/CLI, linger
+/// from `--linger-ms`, and — when `--max-queue` is nonzero — the
+/// admission bound that turns overload into immediate rejections.
+fn bounded_batcher(args: &Args, max_batch: usize) -> Result<Batcher> {
+    let b = Batcher::new(
+        max_batch,
+        Duration::from_millis(args.get_usize("linger-ms")? as u64),
+    );
+    Ok(match args.get_usize("max-queue")? {
+        0 => b,
+        n => b.with_max_queue(n),
+    })
+}
+
+/// The serving producer both serve paths share: hold traffic until a
+/// lane is pulling (cold start must not eat the admission budget),
+/// submit `n` requests at a Poisson `rate` with tokens from
+/// `make_tokens`, close the batcher, and hand back the admission
+/// rejections.
+fn spawn_producer(
+    batcher: Arc<Batcher>,
+    ready: Readiness,
+    n: usize,
+    rate: f64,
+    mut make_tokens: impl FnMut(u64) -> Vec<i32> + Send + 'static,
+) -> std::thread::JoinHandle<Vec<Response>> {
+    std::thread::spawn(move || {
+        let mut rng = SplitMix64::new(7);
+        let mut rejections = Vec::new();
+        if ready.wait_any() {
+            for id in 0..n as u64 {
+                let req = Request {
+                    id,
+                    tokens: make_tokens(id),
+                    enqueued: Instant::now(),
+                };
+                if let Err(back) = batcher.submit(req) {
+                    rejections.push(Response::reject(back.id, back.enqueued));
+                }
+                std::thread::sleep(
+                    Duration::from_secs_f64(rng.next_exp(rate)));
+            }
+        }
+        batcher.close();
+        rejections
+    })
+}
+
+/// Post-run report both serve paths share: lane failures to stderr,
+/// the served/rejected headline (with wall-clock throughput when the
+/// caller timed the run), then the merged metrics + per-shard summary.
+fn print_serve_report(report: &ShardReport, rejections: &[Response],
+                      wall: Option<f64>) {
+    for (shard, e) in &report.lane_errors {
+        eprintln!("warning: shard {shard} failed and served nothing: {e:#}");
+    }
+    match wall {
+        Some(w) => println!(
+            "served {} responses in {w:.2}s ({:.1} req/s), {} rejected at \
+             admission",
+            report.responses.len(),
+            report.responses.len() as f64 / w,
+            rejections.len()),
+        None => println!("served {} responses ({} rejected at admission)",
+                         report.responses.len(), rejections.len()),
+    }
+    println!("{}", report.summary());
+}
+
 /// `hdp serve --demo`: the native serving path end to end — Poisson
-/// arrivals into the dynamic batcher, whole batches (requests × layers
-/// × heads) through the sparse-first kernel's shared worker pool, and
-/// the measured per-request pruning into the metrics. Needs no
-/// artifacts and no weights, so it runs on a fresh clone.
+/// arrivals into the dynamic batcher (bounded when `--max-queue` is
+/// set), whole batches (requests × layers × heads) pulled by `--shards`
+/// engine lanes, each fanning through the sparse-first kernel's worker
+/// pool, and the measured per-request pruning merged into one metrics
+/// report. Needs no artifacts and no weights, so it runs on a fresh
+/// clone.
 fn serve_demo(args: &Args) -> Result<()> {
     let cfg = NativeModelConfig {
         n_layers: args.get_usize("layers")?,
@@ -306,48 +390,45 @@ fn serve_demo(args: &Args) -> Result<()> {
     } else {
         SimConfig::edge()
     };
-    let batcher = Arc::new(Batcher::new(
-        args.get_usize("batch")?,
-        Duration::from_millis(args.get_usize("linger-ms")? as u64),
-    ));
+    let batcher = Arc::new(bounded_batcher(args, args.get_usize("batch")?)?);
+    let shards = args.get_usize("shards")?;
+    // An explicit --threads is a per-lane width; the 0 default splits
+    // the host width across lanes so --shards N doesn't oversubscribe
+    // the host N-fold.
+    let threads = match args.get_usize("threads")? {
+        0 => (configured_threads() / shards.max(1)).max(1),
+        t => t,
+    };
     // Drop raw outputs: the demo loop accumulates every response, and
     // labels/stats/timing don't need the conformance surface.
-    let engine = Engine::new_native(cfg, mode, chip, Arc::clone(&batcher),
-                                    args.get_usize("threads")?)?
-        .with_raw_outputs(false);
+    let coordinator = ShardedCoordinator::new_native(
+        shards, cfg, mode, chip, Arc::clone(&batcher), threads,
+    )?
+    .with_raw_outputs(false);
 
     let n = args.get_usize("requests")?;
     let rate = args.get_f64("rate")?;
-    println!("serving {n} requests at ~{rate:.0} req/s (Poisson) on the \
-              native kernel: {} layers x {} heads x d_head {}, seq {seq}",
+    println!("serving {n} requests at ~{rate:.0} req/s (Poisson) on \
+              {shards} native lane(s): {} layers x {} heads x d_head {}, \
+              seq {seq}",
              cfg.n_layers, cfg.n_heads, cfg.d_head);
-    let producer_batcher = Arc::clone(&batcher);
-    let producer = std::thread::spawn(move || {
-        let mut rng = SplitMix64::new(7);
-        for id in 0..n as u64 {
+    let mut token_rng = SplitMix64::new(11);
+    let producer = spawn_producer(
+        Arc::clone(&batcher), coordinator.readiness(), n, rate,
+        move |id| {
             // Mixed batch compositions: every third request is a short
             // one (when seq/2 still aligns to the 2x2 block grid).
             let l = if id % 3 == 2 && seq % 4 == 0 { seq / 2 } else { seq };
-            let tokens: Vec<i32> =
-                (0..l).map(|_| rng.next_below(30_000) as i32).collect();
-            producer_batcher.submit(Request {
-                id,
-                tokens,
-                enqueued: Instant::now(),
-            });
-            std::thread::sleep(Duration::from_secs_f64(rng.next_exp(rate)));
-        }
-        producer_batcher.close();
-    });
+            (0..l).map(|_| token_rng.next_below(30_000) as i32).collect()
+        },
+    );
 
     let t0 = Instant::now();
-    let responses = engine.run_loop();
-    producer.join().unwrap();
+    let report = coordinator.run()?;
+    let rejections = producer.join().unwrap();
     let wall = t0.elapsed().as_secs_f64();
-    println!("served {} responses in {wall:.2}s ({:.1} req/s)",
-             responses.len(), responses.len() as f64 / wall);
-    println!("{}", engine.metrics.report());
-    if let Some(r) = responses.first() {
+    print_serve_report(&report, &rejections, Some(wall));
+    if let Some(r) = report.responses.first() {
         println!("first request: label {}, {}/{} heads pruned, kept \
                   density {:.3}, simulated co-processor latency {:.3} ms",
                  r.label, r.heads_pruned, r.heads_total, r.kept_density,

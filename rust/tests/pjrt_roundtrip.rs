@@ -255,7 +255,8 @@ fn serving_engine_end_to_end() {
                     id,
                     tokens: ex.tokens.iter().map(|&t| t as i32).collect(),
                     enqueued: std::time::Instant::now(),
-                });
+                })
+                .unwrap();
             }
             b.close();
         })

@@ -15,7 +15,8 @@ use std::time::{Duration, Instant};
 
 use hdp::attention::hdp::hdp_head_reference;
 use hdp::coordinator::{derive_head_inputs, pooled_label, Batcher, Engine,
-                       NativeModelConfig, Request, ServeMode};
+                       NativeModelConfig, Request, Response, ServeMode,
+                       ShardedCoordinator};
 use hdp::sim::SimConfig;
 use hdp::util::rng::SplitMix64;
 
@@ -232,7 +233,7 @@ fn max_size_batch_through_batcher_run_loop() {
         let reqs = reqs.clone();
         std::thread::spawn(move || {
             for r in reqs {
-                b.submit(r);
+                b.submit(r).unwrap();
             }
             b.close();
         })
@@ -257,6 +258,153 @@ fn max_size_batch_through_batcher_run_loop() {
     assert!(report.contains("pruning (meas)"), "{report}");
     // run_loop on a closed, drained batcher returns nothing
     assert!(eng.run_loop().is_empty());
+}
+
+#[test]
+fn sharded_coordinator_bitwise_equal_across_shard_counts() {
+    // The sharded scale-out must be invisible in the results: for N in
+    // {1, 2, 4} engine lanes over one batcher, every response is
+    // bitwise identical to sequential single-request reference
+    // execution — and therefore to every other shard count. Which lane
+    // served which batch may vary run to run; outputs may not.
+    let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
+    let n = 13u64; // not a multiple of max_batch: final partial batch
+    let reqs: Vec<Request> = (0..n)
+        .map(|i| request(300 + i, [8usize, 16, 32][i as usize % 3]))
+        .collect();
+    // Sequential reference driven by an identically-configured engine,
+    // computed once per request (each shard count checks against the
+    // same runs).
+    let ref_eng = engine(mode, 1, 4);
+    let refs: Vec<ReferenceRun> =
+        reqs.iter().map(|r| reference_run(&ref_eng, r)).collect();
+    let mut baseline: Option<Vec<(u64, Vec<u32>, i32)>> = None;
+    for shards in [1usize, 2, 4] {
+        let batcher = Arc::new(Batcher::new(4, Duration::from_millis(2)));
+        let coord = ShardedCoordinator::new_native(
+            shards, GEOM, mode, SimConfig::edge(), Arc::clone(&batcher), 2,
+        )
+        .unwrap();
+        let producer = {
+            let b = Arc::clone(&batcher);
+            let reqs = reqs.clone();
+            std::thread::spawn(move || {
+                for r in reqs {
+                    b.submit(r).unwrap();
+                }
+                b.close();
+            })
+        };
+        let report = coord.run().unwrap();
+        producer.join().unwrap();
+        assert_eq!(report.responses.len(), n as usize,
+                   "shards={shards}: nothing dropped");
+        assert!(report.lane_errors.is_empty(), "shards={shards}: all lanes up");
+        assert_eq!(report.per_shard.len(), shards);
+        assert_eq!(
+            report.per_shard.iter().map(|s| s.requests).sum::<usize>(),
+            n as usize,
+            "shards={shards}: per-shard split accounts for every request"
+        );
+        assert_eq!(report.metrics.requests(), n, "shards={shards}: merged");
+        let mut got: Vec<(u64, Vec<u32>, i32)> = report
+            .responses
+            .iter()
+            .map(|r| {
+                assert!(!r.rejected, "shards={shards}: nothing rejected");
+                (r.id, r.outputs.iter().map(|x| x.to_bits()).collect(),
+                 r.label)
+            })
+            .collect();
+        got.sort_by_key(|(id, _, _)| *id);
+        // bitwise against the sequential reference, request by request
+        for (id, bits, label) in &got {
+            let want = &refs[(id - 300) as usize];
+            let exp: Vec<u32> =
+                want.outputs.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(bits, &exp, "shards={shards} req {id}");
+            assert_eq!(label, &want.label, "shards={shards} req {id}");
+        }
+        // and identical across shard counts
+        match &baseline {
+            None => baseline = Some(got),
+            Some(b) => assert_eq!(b, &got, "shards={shards} diverged"),
+        }
+    }
+}
+
+#[test]
+fn sharded_rejection_path_bitwise_equal_across_shard_counts() {
+    // Admission control under sharding: pre-fill a bounded queue past
+    // its limit so the overflow set is deterministic, then drain with
+    // N lanes. For every N the same requests are rejected, the same
+    // requests are served, and the served outputs stay bitwise equal
+    // to the sequential reference.
+    let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
+    let max_queue = 9usize;
+    let total = 13u64;
+    let reqs: Vec<Request> = (0..total)
+        .map(|i| request(400 + i, [8usize, 16, 32][i as usize % 3]))
+        .collect();
+    let ref_eng = engine(mode, 1, 4);
+    let refs: Vec<ReferenceRun> =
+        reqs.iter().map(|r| reference_run(&ref_eng, r)).collect();
+    let mut baseline: Option<Vec<(u64, Vec<u32>)>> = None;
+    for shards in [1usize, 2, 4] {
+        let batcher = Arc::new(
+            Batcher::new(4, Duration::from_millis(1))
+                .with_max_queue(max_queue),
+        );
+        let coord = ShardedCoordinator::new_native(
+            shards, GEOM, mode, SimConfig::edge(), Arc::clone(&batcher), 1,
+        )
+        .unwrap();
+        // Submit everything before any lane starts pulling: the first
+        // `max_queue` requests are admitted, the rest rejected — the
+        // same split for every shard count.
+        let mut rejections: Vec<Response> = Vec::new();
+        for r in &reqs {
+            if let Err(back) = batcher.submit(r.clone()) {
+                rejections.push(Response::reject(back.id, back.enqueued));
+            }
+        }
+        batcher.close();
+        let rejected_ids: Vec<u64> =
+            rejections.iter().map(|r| r.id).collect();
+        assert_eq!(
+            rejected_ids,
+            (max_queue as u64..total).map(|i| 400 + i).collect::<Vec<_>>(),
+            "shards={shards}: deterministic overflow rejection"
+        );
+        for r in &rejections {
+            assert!(r.rejected && r.label == -1 && r.outputs.is_empty(),
+                    "shards={shards}: rejection response shape");
+        }
+        let report = coord.run().unwrap();
+        assert!(report.lane_errors.is_empty(), "shards={shards}: all lanes up");
+        assert_eq!(report.responses.len(), max_queue,
+                   "shards={shards}: every admitted request served");
+        assert_eq!(report.metrics.requests(), max_queue as u64);
+        let mut got: Vec<(u64, Vec<u32>)> = report
+            .responses
+            .iter()
+            .map(|r| {
+                assert!(!r.rejected);
+                (r.id, r.outputs.iter().map(|x| x.to_bits()).collect())
+            })
+            .collect();
+        got.sort_by_key(|(id, _)| *id);
+        for (id, bits) in &got {
+            let want = &refs[(id - 400) as usize];
+            let exp: Vec<u32> =
+                want.outputs.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(bits, &exp, "shards={shards} req {id}");
+        }
+        match &baseline {
+            None => baseline = Some(got),
+            Some(b) => assert_eq!(b, &got, "shards={shards} diverged"),
+        }
+    }
 }
 
 #[test]

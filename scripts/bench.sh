@@ -6,12 +6,15 @@
 #
 # Writes BENCH_attention.json (bench_micro: kernel + substrate ops) and
 # BENCH_serving.json (bench_serving: native serve_batch throughput vs
-# batch size), each with one record per op: {op, ns_per_iter, p50_ns,
-# p95_ns, throughput_per_s, unit}. Headlines to watch:
+# batch size, plus sharded-coordinator throughput vs shard count), each
+# with one record per op: {op, ns_per_iter, p50_ns, p95_ns,
+# throughput_per_s, unit}. Headlines to watch:
 #   * `kernel.head_ws 128x64 rho=0.9` must stay >= 3x faster than
 #     `... rho=0.0` (sparse-first scaling);
 #   * `serve_batch b=8 (batched pool)` must stay >= 2x the throughput
-#     of `serve b=8 (sequential 1-at-a-time)` (batch-level fan-out).
+#     of `serve b=8 (sequential 1-at-a-time)` (batch-level fan-out);
+#   * `serve_sharded shards=4 b=8` must stay >= 1.5x the throughput of
+#     `serve_sharded shards=1 b=8` on a multi-core runner (lane scaling).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

@@ -24,4 +24,9 @@ else
     echo "warning: clippy not installed; lint gate skipped" >&2
 fi
 
+# Docs gate: the module docs are the architecture reference (README.md
+# and ARCHITECTURE.md link into them), so broken intra-doc links or
+# malformed rustdoc are build failures, not drift.
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 echo "verify: OK"
