@@ -51,11 +51,10 @@ fn main() -> Result<()> {
             let mut stream = Stream::new(Dataset::Sst2s, Split::Eval, seq_len, 42);
             for id in 0..n as u64 {
                 let ex = stream.next_example();
-                b.submit(Request {
+                b.submit(Request::oneshot(
                     id,
-                    tokens: ex.tokens.iter().map(|&t| t as i32).collect(),
-                    enqueued: Instant::now(),
-                })
+                    ex.tokens.iter().map(|&t| t as i32).collect(),
+                ))
                 .unwrap();
                 std::thread::sleep(Duration::from_secs_f64(rng.next_exp(rate)));
             }

@@ -1,0 +1,111 @@
+//! Decode-path benchmark: cached `MhaKernel::decode_step` tokens/sec
+//! as a function of context length, against recomputing the full
+//! context from scratch for every generated token (what serving had to
+//! do before the session KV cache). `scripts/bench.sh` archives the
+//! curves as `BENCH_decode.json`; the headline to watch is the cached
+//! step beating full recompute by **≥ 3× at 1k context** (the
+//! quadratic→linear collapse leaves far more in practice).
+//!
+//! ```sh
+//! cargo bench --bench bench_decode -- --json BENCH_decode.json
+//! ```
+
+use hdp::attention::hdp::HdpParams;
+use hdp::attention::kernel::MhaKernel;
+use hdp::coordinator::{derive_session_head_inputs, derive_token_row};
+use hdp::fixed::QuantProfile;
+use hdp::session::HeadKv;
+use hdp::util::bench::{measurements_json, Bench, Measurement};
+
+const DH: usize = 32;
+const PROFILE: QuantProfile = QuantProfile::Q4_12;
+
+fn params() -> HdpParams {
+    HdpParams { rho: 0.5, tau: -1.0, inv_scale: 0.05, ..Default::default() }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut json_path: Option<String> = None;
+    let mut quick = false;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--json" => {
+                i += 1;
+                match argv.get(i) {
+                    Some(p) if !p.starts_with("--") => json_path = Some(p.clone()),
+                    _ => {
+                        eprintln!("bench_decode: --json needs a file path");
+                        std::process::exit(2);
+                    }
+                }
+            }
+            "--quick" => quick = true,
+            _ => {} // tolerate harness-injected flags
+        }
+        i += 1;
+    }
+    let b = if quick { Bench::quick() } else { Bench::default() };
+    let mut ms: Vec<Measurement> = Vec::new();
+
+    let p = params();
+    let kernel = MhaKernel::new(p).with_threads(1);
+    println!("== decode tokens/sec vs context length (1 head, d_head {DH}, \
+              rho={}, 1 thread) ==", p.rho);
+    for &ctx in &[128usize, 256, 1024] {
+        // Prefill a head cache to `ctx` tokens (state-only appends) and
+        // time it as the prefill rate.
+        let mut kv = HeadKv::new(DH, DH, p.block, p.block * 8);
+        let t0 = std::time::Instant::now();
+        for pos in 0..ctx {
+            let row = derive_token_row((pos % 30_000) as i32, pos, 0, 0, DH,
+                                       PROFILE, 1.0);
+            kernel.decode_append(&mut kv, &row);
+        }
+        let prefill_s = t0.elapsed().as_secs_f64();
+        println!("prefill to ctx={ctx}: {:.1} tok/s",
+                 ctx as f64 / prefill_s.max(1e-9));
+
+        // Cached decode step. The context keeps growing across samples
+        // (that's what decode does) — the drift is a few percent and
+        // only makes the cached number *more* conservative.
+        ms.push(b.run_throughput(
+            &format!("decode_step ctx={ctx} (cached)"), 1.0, "tok",
+            || {
+                let pos = kv.len();
+                let row = derive_token_row((pos % 30_000) as i32, pos, 0, 0,
+                                           DH, PROFILE, 1.0);
+                kernel.decode_step(&mut kv, &row, None)
+            },
+        ));
+
+        // Full recompute of the same context for one new token — the
+        // pre-cache serving alternative, on the *fast* batched kernel
+        // (not the dense-shaped reference), so the comparison is fair.
+        let tokens: Vec<i32> = (0..ctx).map(|i| (i % 30_000) as i32).collect();
+        let (iq, fq, ik, fk, v) =
+            derive_session_head_inputs(&tokens, 0, 0, DH, PROFILE, 1.0);
+        ms.push(b.run_throughput(
+            &format!("full_recompute ctx={ctx} (one token)"), 1.0, "tok",
+            || kernel.forward_layer(&[(&iq, &fq, &ik, &fk, &v)]),
+        ));
+    }
+
+    // Headline: cached vs full recompute at the 1k context.
+    let find = |needle: &str| -> Option<f64> {
+        ms.iter().find(|m| m.name.contains(needle)).map(Measurement::mean)
+    };
+    if let (Some(cached), Some(full)) =
+        (find("decode_step ctx=1024"), find("full_recompute ctx=1024"))
+    {
+        println!("\ncached decode_step speedup over full recompute at 1k \
+                  context: {:.1}x (target >= 3x)", full / cached);
+    }
+
+    if let Some(path) = json_path {
+        let doc = measurements_json("bench_decode", &ms);
+        std::fs::write(&path, format!("{doc}\n")).expect("write bench json");
+        println!("wrote {} ({} measurements)", path, ms.len());
+    }
+}

@@ -3,7 +3,7 @@
 //! coordinator (L3) is not the bottleneck (the §Perf target).
 
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use hdp::coordinator::{Batcher, Engine, Request, ServeMode};
 use hdp::data::{Dataset, Split, Stream};
@@ -34,11 +34,10 @@ fn main() {
     let mut stream = Stream::new(Dataset::Sst2s, Split::Eval,
                                  spec.config.seq_len, 42);
     let reqs: Vec<Request> = (0..batch as u64)
-        .map(|id| Request {
+        .map(|id| Request::oneshot(
             id,
-            tokens: stream.next_example().tokens.iter().map(|&t| t as i32).collect(),
-            enqueued: Instant::now(),
-        })
+            stream.next_example().tokens.iter().map(|&t| t as i32).collect(),
+        ))
         .collect();
 
     let b = Bench { target_time: 3.0, min_samples: 5, max_samples: 60 };

@@ -13,7 +13,7 @@
 //! `--quick` shortens the per-bench time budget.
 
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use hdp::attention::hdp::{block_importance, block_mask, hdp_head, HdpParams};
 use hdp::attention::kernel::{MhaKernel, Workspace};
@@ -172,11 +172,10 @@ fn main() {
     let reqs: Vec<Request> = (0..8u64)
         .map(|id| {
             let mut r = SplitMix64::new(900 + id);
-            Request {
+            Request::oneshot(
                 id,
-                tokens: (0..64).map(|_| r.next_below(30_000) as i32).collect(),
-                enqueued: Instant::now(),
-            }
+                (0..64).map(|_| r.next_below(30_000) as i32).collect(),
+            )
         })
         .collect();
     // At least 4 workers even on small hosts: 64 head tasks per batch

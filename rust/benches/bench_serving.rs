@@ -11,7 +11,7 @@
 //! ```
 
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use hdp::coordinator::{Batcher, Engine, NativeModelConfig, Request,
                        ServeMode, ShardedCoordinator};
@@ -36,11 +36,10 @@ fn mk_requests(n: usize) -> Vec<Request> {
     (0..n as u64)
         .map(|id| {
             let mut r = SplitMix64::new(4000 + id);
-            Request {
+            Request::oneshot(
                 id,
-                tokens: (0..SEQ_LEN).map(|_| r.next_below(30_000) as i32).collect(),
-                enqueued: Instant::now(),
-            }
+                (0..SEQ_LEN).map(|_| r.next_below(30_000) as i32).collect(),
+            )
         })
         .collect()
 }

@@ -61,10 +61,20 @@ pub struct HdpHeadOutput {
     pub kept_density: f32,
 }
 
+/// Number of `block`-edge tiles covering `n` rows or columns. Lengths
+/// need not be block-aligned: incremental decode grows a context one
+/// token at a time, so mid-block ("ragged") lengths are first-class —
+/// the final tile is simply partial.
+pub fn n_blocks(n: usize, block: usize) -> usize {
+    n / block + usize::from(n % block != 0)
+}
+
 /// theta: absolute sum over each (b x b) tile of the integer score.
+/// Ragged lengths are allowed; a partial tail tile sums the entries it
+/// has.
 pub fn block_importance(int_score: &Tensor, block: usize) -> Tensor {
     let (l, l2) = (int_score.rows(), int_score.cols());
-    let (nb, nb2) = (l / block, l2 / block);
+    let (nb, nb2) = (n_blocks(l, block), n_blocks(l2, block));
     let mut theta = Tensor::zeros(&[nb, nb2]);
     block_importance_into(int_score.data(), l, l2, block, theta.data_mut());
     theta
@@ -76,6 +86,9 @@ pub fn block_importance(int_score: &Tensor, block: usize) -> Tensor {
 /// once against the matching θ row). Accumulation order per θ cell is
 /// unchanged (ascending j within ascending i), so results are
 /// bit-identical; `prop_block_importance_matches_naive` pins that.
+/// Ragged `rows`/`cols` are allowed (ceil-division tiling): the tail
+/// chunk of each row simply carries fewer entries, and the
+/// block-aligned case is byte-for-byte the old behaviour.
 pub(crate) fn block_importance_into(
     int_score: &[f32],
     rows: usize,
@@ -83,15 +96,13 @@ pub(crate) fn block_importance_into(
     block: usize,
     theta: &mut [f32],
 ) {
-    assert_eq!(rows % block, 0);
-    assert_eq!(cols % block, 0);
-    let nbc = cols / block;
-    assert_eq!(theta.len(), (rows / block) * nbc, "theta len");
+    let nbc = n_blocks(cols, block);
+    assert_eq!(theta.len(), n_blocks(rows, block) * nbc, "theta len");
     theta.fill(0.0);
     for i in 0..rows {
         let srow = &int_score[i * cols..(i + 1) * cols];
         let trow = &mut theta[(i / block) * nbc..(i / block + 1) * nbc];
-        for (t, chunk) in trow.iter_mut().zip(srow.chunks_exact(block)) {
+        for (t, chunk) in trow.iter_mut().zip(srow.chunks(block)) {
             for &x in chunk {
                 *t += x.abs();
             }
@@ -214,6 +225,13 @@ pub fn hdp_head(
 /// `l×l` score tensor with `NEG_INF` sentinels, softmaxes every entry
 /// and lets `matmul` skip the zeros — semantically exact, but its cost
 /// does not scale with `kept_density`.
+///
+/// The sequence length need not be block-aligned: mid-block lengths
+/// tile with a partial tail block ([`n_blocks`]), which is what makes
+/// this the full-recompute reference for the incremental decode path
+/// ([`crate::attention::kernel::MhaKernel::decode_step`]) at *every*
+/// context length, not just aligned ones. Block-aligned inputs are
+/// bitwise unchanged.
 pub fn hdp_head_reference(
     iq: &Tensor,
     fq: &Tensor,
@@ -236,19 +254,20 @@ pub fn hdp_head_reference(
     // blocks (§Perf: this made high-sparsity simulation *faster* rather
     // than slower, and matches the PE-array behaviour exactly).
     let b = p.block;
+    let nb = n_blocks(l, b);
     let dh = iq.cols();
     let mut score = Tensor::zeros(&[l, l]);
     score.data_mut().fill(NEG_INF);
     let (iqd, fqd, ikd, fkd) = (iq.data(), fq.data(), ik.data(), fk.data());
-    for bi in 0..l / b {
-        for bj in 0..l / b {
+    for bi in 0..nb {
+        for bj in 0..nb {
             if mask.at(bi, bj) == 0.0 {
                 continue;
             }
-            for i in bi * b..(bi + 1) * b {
+            for i in bi * b..((bi + 1) * b).min(l) {
                 let iqr = &iqd[i * dh..(i + 1) * dh];
                 let fqr = &fqd[i * dh..(i + 1) * dh];
-                for j in bj * b..(bj + 1) * b {
+                for j in bj * b..((bj + 1) * b).min(l) {
                     let ikr = &ikd[j * dh..(j + 1) * dh];
                     let fkr = &fkd[j * dh..(j + 1) * dh];
                     let mut acc = int_score.at(i, j);
@@ -327,6 +346,51 @@ mod tests {
         );
         let theta = block_importance(&s, 2);
         assert_eq!(theta.data(), &[10.0, 1.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn block_importance_ragged_tail() {
+        // 3x5 scores, block 2: ceil tiling gives 2x3 theta; tail tiles
+        // sum only the entries they have.
+        let s = Tensor::new(
+            &[3, 5],
+            vec![
+                1.0, -2.0, 0.5, 0.0, 2.0, //
+                3.0, 4.0, 0.0, 1.0, -1.0, //
+                0.0, 0.5, -1.0, -1.0, 0.25,
+            ],
+        );
+        let theta = block_importance(&s, 2);
+        assert_eq!(theta.shape(), &[2, 3]);
+        assert_eq!(theta.data(), &[10.0, 1.5, 3.0, 0.5, 2.0, 0.25]);
+        assert_eq!(n_blocks(3, 2), 2);
+        assert_eq!(n_blocks(4, 2), 2);
+        assert_eq!(n_blocks(5, 2), 3);
+        assert_eq!(n_blocks(1, 2), 1);
+    }
+
+    #[test]
+    fn ragged_reference_no_pruning_matches_quantized_dense() {
+        // Mid-block lengths are first-class in the reference: with
+        // pruning disabled the ragged path is plain quantized attention.
+        for l in [1usize, 5, 7, 9] {
+            let (iq, fq, ik, fk, v, inv) = rand_inputs(31 + l as u64, l, 8);
+            let out = hdp_head_reference(
+                &iq, &fq, &ik, &fk, &v,
+                HdpParams {
+                    rho: -1.0,
+                    tau: -1.0,
+                    inv_scale: inv,
+                    use_ff: true,
+                    ..Default::default()
+                },
+            );
+            assert!((out.kept_density - 1.0).abs() < 1e-6, "l={l}");
+            let q = iq.add(&fq);
+            let k = ik.add(&fk);
+            let dense = q.matmul_nt(&k).scale(inv).softmax_rows().matmul(&v);
+            assert!(out.out.max_abs_diff(&dense) < 1e-4, "l={l}");
+        }
     }
 
     #[test]

@@ -63,11 +63,25 @@
 use std::sync::Mutex;
 
 use crate::attention::hdp::{
-    block_importance_into, hw_exp, hw_reciprocal, row_threshold, HdpHeadOutput, HdpParams,
-    NEG_INF,
+    block_importance_into, hw_exp, hw_reciprocal, n_blocks, row_threshold, HdpHeadOutput,
+    HdpParams, NEG_INF,
 };
+use crate::session::{HeadKv, TokenRow};
 use crate::tensor::Tensor;
 use crate::util::threadpool::{configured_threads, parallel_map_with};
+
+/// Plain dot product over `k` ascending with a single accumulator —
+/// bitwise the per-element order of [`Tensor::matmul_nt`], which is
+/// what lets the incremental decode scores match the full-recompute
+/// reference exactly.
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
 
 /// Kept-block list in block-CSR form: for block-row `bi`, the surviving
 /// block-column indices are `cols[row_ptr[bi]..row_ptr[bi+1]]`,
@@ -150,6 +164,12 @@ pub struct Workspace {
     kept_density: f32,
     /// Whether stages 4–6 ran (false when early head pruning fired).
     fum_ran: bool,
+    /// Decode-path scratch: the new query row's integer scores against
+    /// every cached key (`decode_step` / `decode_append`).
+    dec_row: Vec<f32>,
+    /// Decode-path scratch: `|s|` of the new row / new key column.
+    dec_row_abs: Vec<f32>,
+    dec_col_abs: Vec<f32>,
 }
 
 impl Workspace {
@@ -366,6 +386,180 @@ impl Workspace {
         }
     }
 
+    // -- incremental decode over a cached context ---------------------------
+
+    /// Stages 1–2 of a decode step, incrementally: append the token to
+    /// the cache, score the new query row against every cached key and
+    /// every cached query against the new key column (`O(l·d)` instead
+    /// of the full `O(l²·d)` recompute), and fold the absolutes into
+    /// the cache's θ state in reference order
+    /// ([`HeadKv::update_theta`]). Returns the new context length.
+    fn decode_update(&mut self, kv: &mut HeadKv, row: &TokenRow) -> usize {
+        let dh = kv.d_head();
+        assert_eq!(row.iq.len(), dh, "iq row width");
+        assert_eq!(row.fq.len(), dh, "fq row width");
+        kv.append(row);
+        let l = kv.len();
+        let r = l - 1;
+        self.dec_row.resize(l, 0.0);
+        for j in 0..l {
+            self.dec_row[j] = dot(&row.iq, kv.ik_row(j));
+        }
+        self.dec_row_abs.clear();
+        self.dec_row_abs.extend(self.dec_row[..l].iter().map(|s| s.abs()));
+        self.dec_col_abs.clear();
+        self.dec_col_abs.reserve(r);
+        for i in 0..r {
+            self.dec_col_abs.push(dot(kv.iq_row(i), kv.ik_row(r)).abs());
+        }
+        kv.update_theta(&self.dec_row_abs, &self.dec_col_abs);
+        l
+    }
+
+    /// Append one token to the cached context, updating the pruning
+    /// state but producing no output row — the prefill / eviction-replay
+    /// path, where only the final token's attention is served.
+    pub fn decode_append(&mut self, kv: &mut HeadKv, row: &TokenRow, p: HdpParams) {
+        assert_eq!(p.block, kv.block(), "kernel/cache block mismatch");
+        self.decode_update(kv, row);
+    }
+
+    /// One full decode step: append the token, then run the sparsity
+    /// engine → early head decision → FUM → sparse softmax → `P·V` for
+    /// the **single new query row** over the cached context. Pruned
+    /// work is skipped exactly as in the batch path, and the output row
+    /// is bitwise identical to the last row of
+    /// [`crate::attention::hdp::hdp_head_reference`] recomputed over
+    /// the whole context (ragged mid-block lengths included) — the
+    /// contract `rust/tests/decode_conformance.rs` pins.
+    pub fn decode_step(&mut self, kv: &mut HeadKv, row: &TokenRow, p: HdpParams) -> DecodeRow {
+        assert_eq!(p.block, kv.block(), "kernel/cache block mismatch");
+        let (dh, dv, b) = (kv.d_head(), kv.d_v(), p.block);
+        let l = self.decode_update(kv, row);
+        let r = l - 1;
+        let nb = n_blocks(l, b);
+        let br = r / b;
+
+        // Head decision + the new row's block threshold (sparsity
+        // engine over the incrementally exact θ).
+        let theta_head = kv.theta_head();
+        let head_kept = theta_head > p.tau;
+        self.kept.clear(1, nb);
+        {
+            let trow = kv.theta_row(br);
+            let th = row_threshold(trow, p.rho);
+            for (bj, &t) in trow.iter().enumerate() {
+                if t >= th {
+                    self.kept.cols.push(bj as u32);
+                }
+            }
+        }
+        self.kept.row_ptr.push(self.kept.cols.len() as u32);
+        let kept_blocks = self.kept.kept();
+
+        self.out.clear();
+        self.out.resize(dv, 0.0);
+        if !head_kept {
+            // Early head pruning: stop after the decision, exactly like
+            // the batch path; the reference's output row is zero.
+            return DecodeRow {
+                out: self.out.clone(),
+                theta_head,
+                head_kept,
+                kept_blocks,
+                blocks_total: nb,
+            };
+        }
+
+        // FUM: fraction products for the kept blocks of this one row,
+        // packed in ascending column order (same inner operation order
+        // as the reference — bit-identical pre-softmax).
+        self.vals.clear();
+        self.vals.reserve(l);
+        let (ks, ke) = self.kept.row_range(0);
+        for kidx in ks..ke {
+            let bj = self.kept.cols[kidx] as usize;
+            for j in bj * b..((bj + 1) * b).min(l) {
+                let ikr = kv.ik_row(j);
+                let fkr = kv.fk_row(j);
+                let mut acc = self.dec_row[j];
+                if p.use_ff {
+                    for k in 0..dh {
+                        acc += row.iq[k] * fkr[k] + row.fq[k] * (ikr[k] + fkr[k]);
+                    }
+                } else {
+                    for k in 0..dh {
+                        acc += row.iq[k] * fkr[k] + row.fq[k] * ikr[k];
+                    }
+                }
+                self.vals.push(acc * p.inv_scale);
+            }
+        }
+
+        // Row softmax over the kept entries: the row max folds in the
+        // `NEG_INF` sentinel whenever blocks were pruned, and pruned
+        // entries contribute exact zeros to the dense reference's sum,
+        // so this reproduces it bit for bit (same argument as
+        // `softmax_kept`).
+        let mut mx = if kept_blocks < nb { NEG_INF } else { f32::NEG_INFINITY };
+        for &x in &self.vals {
+            mx = mx.max(x);
+        }
+        let mut sum = 0.0f32;
+        for x in &mut self.vals {
+            let e = if p.use_hw_softmax {
+                hw_exp(*x - mx)
+            } else {
+                let d = *x - mx;
+                if d < -80.0 {
+                    0.0
+                } else {
+                    d.exp()
+                }
+            };
+            *x = e;
+            sum += e;
+        }
+        if sum != 0.0 {
+            if p.use_hw_softmax {
+                let rec = hw_reciprocal(sum);
+                for x in &mut self.vals {
+                    *x *= rec;
+                }
+            } else {
+                for x in &mut self.vals {
+                    *x /= sum;
+                }
+            }
+        }
+
+        // P·V over kept columns in ascending order, skipping exact
+        // zeros just as the dense matmul does.
+        let mut vi = 0usize;
+        for kidx in ks..ke {
+            let bj = self.kept.cols[kidx] as usize;
+            for j in bj * b..((bj + 1) * b).min(l) {
+                let pij = self.vals[vi];
+                vi += 1;
+                if pij == 0.0 {
+                    continue;
+                }
+                let vrow = kv.v_row(j);
+                for (o, &vv) in self.out.iter_mut().zip(vrow) {
+                    *o += pij * vv;
+                }
+            }
+        }
+
+        DecodeRow {
+            out: self.out.clone(),
+            theta_head,
+            head_kept,
+            kept_blocks,
+            blocks_total: nb,
+        }
+    }
+
     // -- read-only views over the last run (allocation-free) ---------------
 
     pub fn out(&self) -> &[f32] {
@@ -455,6 +649,21 @@ pub struct HeadOutput {
     pub kept_blocks: usize,
 }
 
+/// One head's incremental decode result: the newest token's attention
+/// output row plus the pruning trail for that query row.
+#[derive(Debug, Clone)]
+pub struct DecodeRow {
+    /// Attention output of the new token (`d_v` floats) — bitwise the
+    /// last row of the full-recompute reference over the same context.
+    pub out: Vec<f32>,
+    pub theta_head: f32,
+    pub head_kept: bool,
+    /// Kept key blocks in the query's block-row.
+    pub kept_blocks: usize,
+    /// Key blocks covering the cached context (ceil).
+    pub blocks_total: usize,
+}
+
 /// Borrowed references to one head's inputs: `(iq, fq, ik, fk, v)`.
 pub type HeadRefs<'a> = (&'a Tensor, &'a Tensor, &'a Tensor, &'a Tensor, &'a Tensor);
 
@@ -466,6 +675,11 @@ pub type HeadRefs<'a> = (&'a Tensor, &'a Tensor, &'a Tensor, &'a Tensor, &'a Ten
 #[derive(Debug, Default)]
 pub struct BatchRequest<'a> {
     pub layers: Vec<Vec<HeadRefs<'a>>>,
+    /// Per-request calibration override of `HdpParams::inv_scale`, so
+    /// workloads quantized at different (non-unit) calibration scales
+    /// can share one batch. `None` uses the kernel's configured value —
+    /// bitwise identical to passing `Some(params.inv_scale)`.
+    pub inv_scale: Option<f32>,
 }
 
 /// Measured pruning totals of one request across all its layers × heads
@@ -576,6 +790,17 @@ impl MhaKernel {
     /// workspace out of the pool once, reuses it for every task it
     /// steals, and returns it when the fan-out completes.
     fn map_heads(&self, tasks: &[HeadRefs<'_>]) -> Vec<HeadOutput> {
+        self.map_heads_scaled(tasks, |_| self.params.inv_scale)
+    }
+
+    /// [`Self::map_heads`] with a per-task `inv_scale` (the batched
+    /// calibration path): task `i` runs with `inv_scale_of(i)` folded
+    /// into the kernel parameters, everything else shared.
+    fn map_heads_scaled(
+        &self,
+        tasks: &[HeadRefs<'_>],
+        inv_scale_of: impl Fn(usize) -> f32 + Sync,
+    ) -> Vec<HeadOutput> {
         parallel_map_with(
             tasks.len(),
             self.threads,
@@ -583,7 +808,8 @@ impl MhaKernel {
             |pooled, i| {
                 let ws = pooled.get();
                 let (iq, fq, ik, fk, v) = tasks[i];
-                ws.run(iq, fq, ik, fk, v, self.params, true);
+                let p = HdpParams { inv_scale: inv_scale_of(i), ..self.params };
+                ws.run(iq, fq, ik, fk, v, p, true);
                 HeadOutput {
                     out: Tensor::new(&[iq.rows(), v.cols()], ws.out().to_vec()),
                     theta_head: ws.theta_head(),
@@ -607,11 +833,18 @@ impl MhaKernel {
     /// [`Self::forward_layer`] on `requests[r].layers[l]` alone — batch
     /// composition never changes results, only wall-clock.
     pub fn forward_batch(&self, requests: &[BatchRequest<'_>]) -> Vec<RequestOutput> {
-        let flat: Vec<HeadRefs<'_>> = requests
-            .iter()
-            .flat_map(|r| r.layers.iter().flat_map(|heads| heads.iter().copied()))
-            .collect();
-        let mut outs = self.map_heads(&flat).into_iter();
+        let mut flat: Vec<HeadRefs<'_>> = Vec::new();
+        let mut scales: Vec<f32> = Vec::new();
+        for r in requests {
+            let s = r.inv_scale.unwrap_or(self.params.inv_scale);
+            for heads in &r.layers {
+                for &h in heads {
+                    flat.push(h);
+                    scales.push(s);
+                }
+            }
+        }
+        let mut outs = self.map_heads_scaled(&flat, |i| scales[i]).into_iter();
         let block = self.params.block;
         requests
             .iter()
@@ -638,6 +871,37 @@ impl MhaKernel {
                 RequestOutput { layers, stats }
             })
             .collect()
+    }
+
+    /// One incremental decode step for one head: append `row` to the
+    /// cached context and produce the new token's attention output row,
+    /// scoring only the cached blocks (integer row/column scores → θ
+    /// threshold → kept-block list → sparse softmax → `P·V`). Runs on a
+    /// pooled [`Workspace`] arena; `inv_scale` overrides the kernel's
+    /// calibration for this session (`None` = configured value). The
+    /// output is bitwise identical to the last row of the
+    /// full-recompute reference over the same context — see
+    /// [`Workspace::decode_step`].
+    pub fn decode_step(
+        &self,
+        kv: &mut HeadKv,
+        row: &TokenRow,
+        inv_scale: Option<f32>,
+    ) -> DecodeRow {
+        let p = HdpParams {
+            inv_scale: inv_scale.unwrap_or(self.params.inv_scale),
+            ..self.params
+        };
+        let mut pooled = PooledWorkspace::take(&self.pool);
+        pooled.get().decode_step(kv, row, p)
+    }
+
+    /// Append one token to a head's cached context without producing an
+    /// output row — the prefill / eviction-replay path (only the final
+    /// token of a decode request is answered).
+    pub fn decode_append(&self, kv: &mut HeadKv, row: &TokenRow) {
+        let mut pooled = PooledWorkspace::take(&self.pool);
+        pooled.get().decode_append(kv, row, self.params);
     }
 }
 
@@ -810,6 +1074,7 @@ mod tests {
                         hs.iter().map(|(a, b, c, d, e, _)| (a, b, c, d, e)).collect()
                     })
                     .collect(),
+                inv_scale: None,
             })
             .collect();
         let outs = kernel.forward_batch(&batch);
@@ -864,7 +1129,7 @@ mod tests {
             .collect();
         let mk = || -> Vec<BatchRequest> {
             refs.iter()
-                .map(|layers| BatchRequest { layers: layers.clone() })
+                .map(|layers| BatchRequest { layers: layers.clone(), inv_scale: None })
                 .collect()
         };
         let serial = MhaKernel::new(p).with_threads(1).forward_batch(&mk());
@@ -908,6 +1173,194 @@ mod tests {
         // the decision trail is still available for the simulator
         assert!(ws.kept_blocks().kept() > 0);
         assert!(ws.theta_head() > 0.0);
+    }
+
+    fn rand_token_rows(seed: u64, n: usize, dh: usize, dv: usize) -> Vec<TokenRow> {
+        let mut r = SplitMix64::new(seed);
+        let prof = QuantProfile::Q4_12;
+        (0..n)
+            .map(|_| {
+                let mut field = |w: usize| {
+                    let mut ints = Vec::with_capacity(w);
+                    let mut fracs = Vec::with_capacity(w);
+                    for _ in 0..w {
+                        let f = crate::fixed::split(crate::fixed::quantize(
+                            r.next_normal() as f32 * 1.5,
+                            1.0,
+                            prof,
+                        ));
+                        ints.push(f.int_part);
+                        fracs.push(f.frac_part);
+                    }
+                    (ints, fracs)
+                };
+                let (iq, fq) = field(dh);
+                let (ik, fk) = field(dh);
+                let v = (0..dv).map(|_| r.next_normal() as f32).collect();
+                TokenRow { iq, fq, ik, fk, v }
+            })
+            .collect()
+    }
+
+    fn stack_rows(
+        rows: &[TokenRow],
+        dh: usize,
+        dv: usize,
+    ) -> (Tensor, Tensor, Tensor, Tensor, Tensor) {
+        let l = rows.len();
+        let mut iq = Vec::with_capacity(l * dh);
+        let mut fq = Vec::with_capacity(l * dh);
+        let mut ik = Vec::with_capacity(l * dh);
+        let mut fk = Vec::with_capacity(l * dh);
+        let mut v = Vec::with_capacity(l * dv);
+        for r in rows {
+            iq.extend_from_slice(&r.iq);
+            fq.extend_from_slice(&r.fq);
+            ik.extend_from_slice(&r.ik);
+            fk.extend_from_slice(&r.fk);
+            v.extend_from_slice(&r.v);
+        }
+        (
+            Tensor::new(&[l, dh], iq),
+            Tensor::new(&[l, dh], fq),
+            Tensor::new(&[l, dh], ik),
+            Tensor::new(&[l, dh], fk),
+            Tensor::new(&[l, dv], v),
+        )
+    }
+
+    #[test]
+    fn decode_step_matches_full_recompute_reference_bitwise() {
+        // The decode contract at kernel level: every step — aligned or
+        // mid-block — must reproduce the last output row of the
+        // dense-shaped reference recomputed over the whole context,
+        // bit for bit, along with the pruning trail.
+        let (dh, dv) = (8usize, 8);
+        for (seed, rho, tau) in
+            [(70u64, 0.0f32, -1.0f32), (71, 0.5, 0.0), (72, 0.9, -1.0), (73, -0.5, 1e9)]
+        {
+            let rows = rand_token_rows(seed, 9, dh, dv);
+            let p = params(rho, tau, 0.05);
+            let kernel = MhaKernel::new(p);
+            let mut kv = HeadKv::new(dh, dv, p.block, 4);
+            for t in 0..rows.len() {
+                let got = kernel.decode_step(&mut kv, &rows[t], None);
+                let (iq, fq, ik, fk, v) = stack_rows(&rows[..=t], dh, dv);
+                let want = hdp_head_reference(&iq, &fq, &ik, &fk, &v, p);
+                let l = t + 1;
+                let want_row = &want.out.data()[(l - 1) * dv..l * dv];
+                let got_bits: Vec<u32> = got.out.iter().map(|x| x.to_bits()).collect();
+                let want_bits: Vec<u32> = want_row.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got_bits, want_bits, "seed {seed} step {t}");
+                assert_eq!(got.theta_head.to_bits(), want.theta_head.to_bits(),
+                           "seed {seed} step {t}");
+                assert_eq!(got.head_kept, want.head_kept, "seed {seed} step {t}");
+                let br = (l - 1) / p.block;
+                let kept_want =
+                    want.mask.row(br).iter().filter(|&&m| m == 1.0).count();
+                assert_eq!(got.kept_blocks, kept_want, "seed {seed} step {t}");
+                assert_eq!(got.blocks_total, want.mask.cols(), "seed {seed} step {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_step_hw_softmax_and_exact_ff_match_reference() {
+        let (dh, dv) = (8usize, 8);
+        let rows = rand_token_rows(55, 6, dh, dv);
+        let p = HdpParams {
+            rho: 0.4,
+            tau: -1.0,
+            inv_scale: 0.05,
+            use_ff: true,
+            use_hw_softmax: true,
+            ..Default::default()
+        };
+        let kernel = MhaKernel::new(p);
+        let mut kv = HeadKv::new(dh, dv, p.block, 4);
+        for t in 0..rows.len() {
+            let got = kernel.decode_step(&mut kv, &rows[t], None);
+            let (iq, fq, ik, fk, v) = stack_rows(&rows[..=t], dh, dv);
+            let want = hdp_head_reference(&iq, &fq, &ik, &fk, &v, p);
+            let want_row = &want.out.data()[t * dv..(t + 1) * dv];
+            assert_eq!(
+                got.out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                want_row.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "step {t}"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_append_prefill_matches_stepped_state() {
+        // Prefill (state-only appends) then one step must be bitwise
+        // the same as stepping every token — the eviction-replay
+        // guarantee at kernel level.
+        let rows = rand_token_rows(99, 7, 8, 8);
+        let p = params(0.4, 0.0, 0.05);
+        let kernel = MhaKernel::new(p);
+        let mut kv_a = HeadKv::new(8, 8, p.block, 4);
+        let mut last_a = None;
+        for row in &rows {
+            last_a = Some(kernel.decode_step(&mut kv_a, row, None));
+        }
+        let mut kv_b = HeadKv::new(8, 8, p.block, 4);
+        for row in &rows[..rows.len() - 1] {
+            kernel.decode_append(&mut kv_b, row);
+        }
+        let last_b = kernel.decode_step(&mut kv_b, rows.last().unwrap(), None);
+        let a = last_a.unwrap();
+        assert_eq!(
+            a.out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            last_b.out.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(a.theta_head.to_bits(), last_b.theta_head.to_bits());
+        assert_eq!(a.kept_blocks, last_b.kept_blocks);
+        assert_eq!(kv_a.len(), kv_b.len());
+    }
+
+    #[test]
+    fn per_request_inv_scale_overrides_and_default_is_unchanged() {
+        // Satellite: unit-scale behaviour is pinned (None ==
+        // Some(default) == forward_layer, bitwise), and a calibrated
+        // (non-unit) inv_scale rides the same batch, matching a kernel
+        // configured with that scale outright.
+        let p = params(0.4, 0.0, 0.05);
+        let kernel = MhaKernel::new(p).with_threads(4);
+        let heads: Vec<_> = (0..3).map(|h| rand_head(900 + h, 16, 8)).collect();
+        let refs: Vec<HeadRefs> =
+            heads.iter().map(|(a, b, c, d, e, _)| (a, b, c, d, e)).collect();
+        let mk = |scale: Option<f32>| {
+            vec![BatchRequest { layers: vec![refs.clone()], inv_scale: scale }]
+        };
+        let none = kernel.forward_batch(&mk(None));
+        let some = kernel.forward_batch(&mk(Some(0.05)));
+        let alone = kernel.forward_layer(&refs);
+        for ((a, b), c) in
+            none[0].layers[0].iter().zip(&some[0].layers[0]).zip(&alone)
+        {
+            assert_eq!(a.out.data(), b.out.data(), "None == Some(default)");
+            assert_eq!(a.out.data(), c.out.data(), "None == forward_layer");
+        }
+        let scaled = kernel.forward_batch(&mk(Some(0.11)));
+        let want = MhaKernel::new(params(0.4, 0.0, 0.11)).forward_layer(&refs);
+        for (a, b) in scaled[0].layers[0].iter().zip(&want) {
+            assert_eq!(a.out.data(), b.out.data(), "calibrated batch");
+            assert_eq!(a.head_kept, b.head_kept);
+        }
+        // Mixed calibrations in one batch: each request matches its own
+        // solo run — batch composition still never changes results.
+        let mixed = vec![
+            BatchRequest { layers: vec![refs.clone()], inv_scale: None },
+            BatchRequest { layers: vec![refs.clone()], inv_scale: Some(0.11) },
+        ];
+        let outs = kernel.forward_batch(&mixed);
+        for (a, b) in outs[0].layers[0].iter().zip(&none[0].layers[0]) {
+            assert_eq!(a.out.data(), b.out.data());
+        }
+        for (a, b) in outs[1].layers[0].iter().zip(&want) {
+            assert_eq!(a.out.data(), b.out.data());
+        }
     }
 
     #[test]

@@ -32,12 +32,39 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// One classification request.
+/// One serving request. Two kinds share the carrier:
+///
+/// * **one-shot** (`session == None`) — the whole workload derives
+///   from `tokens` and is recomputed from scratch (the original
+///   classification path);
+/// * **decode step** (`session == Some(id)`) — `tokens` are appended
+///   to that session's cached context (the session's *first* request
+///   carries its prefill context; steady-state steps carry one token)
+///   and the response answers the last appended token's attention.
+///   Same-session steps must be submitted in order; the sticky
+///   session→lane routing ([`super::shard::SessionRouter`]) plus the
+///   FIFO queue preserve that order end to end.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
     pub tokens: Vec<i32>,
     pub enqueued: Instant,
+    /// `Some(session)` marks a decode step into that session's KV
+    /// cache; `None` is the one-shot path.
+    pub session: Option<u64>,
+}
+
+impl Request {
+    /// One-shot request: the whole workload derives from `tokens`.
+    pub fn oneshot(id: u64, tokens: Vec<i32>) -> Self {
+        Self { id, tokens, enqueued: Instant::now(), session: None }
+    }
+
+    /// Decode-step request: append `tokens` to `session`'s cached
+    /// context (a session's first request is its prefill).
+    pub fn decode(id: u64, session: u64, tokens: Vec<i32>) -> Self {
+        Self { id, tokens, enqueued: Instant::now(), session: Some(session) }
+    }
 }
 
 #[derive(Debug)]
@@ -140,7 +167,7 @@ mod tests {
     use std::sync::Arc;
 
     fn req(id: u64) -> Request {
-        Request { id, tokens: vec![0; 8], enqueued: Instant::now() }
+        Request::oneshot(id, vec![0; 8])
     }
 
     #[test]

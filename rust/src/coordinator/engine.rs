@@ -44,10 +44,11 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::attention::hdp::HdpParams;
-use crate::attention::kernel::{BatchRequest, MhaKernel};
+use crate::attention::kernel::{BatchRequest, DecodeRow, MhaKernel, RequestStats};
 use crate::fixed::{self, QuantProfile};
 use crate::model::ParamStore;
 use crate::runtime::{lit_i32, lit_scalar_f32, to_vec_f32, Runtime};
+use crate::session::{KvCacheConfig, SessionStore, TokenRow};
 use crate::sim::{self, SimConfig};
 use crate::tensor::Tensor;
 use crate::util::rng::SplitMix64;
@@ -99,6 +100,11 @@ pub struct Response {
     /// backpressure signal a client retries or sheds on. Always
     /// `false` on a served response.
     pub rejected: bool,
+    /// Decode responses echo their session id (`None` on one-shot and
+    /// rejection responses).
+    pub session: Option<u64>,
+    /// Cached context length after this decode step (0 for one-shot).
+    pub context_len: usize,
 }
 
 impl Response {
@@ -108,17 +114,25 @@ impl Response {
     /// one response stream. `label` is `-1` (no classification
     /// happened), `e2e_seconds` measures submit-to-refusal, and the
     /// compute/sim/pruning fields are zero — nothing executed.
-    pub fn reject(id: u64, enqueued: Instant) -> Self {
+    ///
+    /// A rejected **decode step** echoes its session id so the client
+    /// can tell which stream broke: its tokens were *not* appended, so
+    /// the client must resubmit that step (and hold the session's later
+    /// steps) before continuing, or the session's cached context would
+    /// silently diverge from the intended prefix.
+    pub fn reject(req: &Request) -> Self {
         Response {
-            id,
+            id: req.id,
             label: -1,
-            e2e_seconds: enqueued.elapsed().as_secs_f64(),
+            e2e_seconds: req.enqueued.elapsed().as_secs_f64(),
             sim_seconds: 0.0,
             heads_pruned: 0,
             heads_total: 0,
             kept_density: 0.0,
             outputs: Vec::new(),
             rejected: true,
+            session: req.session,
+            context_len: 0,
         }
     }
 }
@@ -140,6 +154,45 @@ pub fn derive_head_inputs(
     d_head: usize,
     profile: QuantProfile,
 ) -> HeadTensors {
+    derive_head_inputs_scaled(tokens, layer, head, d_head, profile, 1.0)
+}
+
+/// Draw `n` normals, quantize them at `scale` onto `profile`'s grid
+/// and split into integer/fraction field vectors — the one shared
+/// primitive of both workload derivations (whole-request and
+/// per-token), so the quantization recipe can never silently diverge
+/// between the batched and decode paths.
+fn quant_field(
+    rng: &mut SplitMix64,
+    n: usize,
+    scale: f32,
+    profile: QuantProfile,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut ints = Vec::with_capacity(n);
+    let mut fracs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let x = rng.next_normal() as f32 * 1.5;
+        let f = fixed::split(fixed::quantize(x, scale, profile));
+        ints.push(f.int_part);
+        fracs.push(f.frac_part);
+    }
+    (ints, fracs)
+}
+
+/// [`derive_head_inputs`] at an explicit calibration scale: Q/K are
+/// quantized onto `profile`'s grid *after* multiplying by `scale` (the
+/// host quantizer's per-tensor calibration), so non-unit-scale
+/// workloads can ride the batched path with a matching per-request
+/// `inv_scale = 1 / (scale² · √d_head)`. `scale = 1.0` is bitwise the
+/// original derivation.
+pub fn derive_head_inputs_scaled(
+    tokens: &[i32],
+    layer: usize,
+    head: usize,
+    d_head: usize,
+    profile: QuantProfile,
+    scale: f32,
+) -> HeadTensors {
     let l = tokens.len();
     // Fold the token content with the (layer, head) coordinate so every
     // workload is a distinct function of the whole request.
@@ -150,20 +203,68 @@ pub fn derive_head_inputs(
         seed = seed.wrapping_mul(0x0100_0000_01B3).wrapping_add(t as u32 as u64);
     }
     let mut rng = SplitMix64::new(seed);
-    let mut quant_field = |n: usize| {
-        let mut ints = Vec::with_capacity(n);
-        let mut fracs = Vec::with_capacity(n);
-        for _ in 0..n {
-            let x = rng.next_normal() as f32 * 1.5;
-            let f = fixed::split(fixed::quantize(x, 1.0, profile));
-            ints.push(f.int_part);
-            fracs.push(f.frac_part);
-        }
-        (ints, fracs)
-    };
-    let (iq, fq) = quant_field(l * d_head);
-    let (ik, fk) = quant_field(l * d_head);
+    let (iq, fq) = quant_field(&mut rng, l * d_head, scale, profile);
+    let (ik, fk) = quant_field(&mut rng, l * d_head, scale, profile);
     let v: Vec<f32> = (0..l * d_head).map(|_| rng.next_normal() as f32).collect();
+    let t = |d: Vec<f32>| Tensor::new(&[l, d_head], d);
+    (t(iq), t(fq), t(ik), t(fk), t(v))
+}
+
+/// Deterministically derive one *cached token's* (layer, head) row
+/// fields — the session workload derivation. Unlike
+/// [`derive_head_inputs`], whose seed folds the whole request, this is
+/// a pure function of `(token, pos, layer, head, d_head, profile,
+/// scale)` alone, so a cached K/V row never changes as the context
+/// grows — the property a KV cache exists to exploit. The conformance
+/// tests recompute any session's full-context workload from it via
+/// [`derive_session_head_inputs`].
+pub fn derive_token_row(
+    token: i32,
+    pos: usize,
+    layer: usize,
+    head: usize,
+    d_head: usize,
+    profile: QuantProfile,
+    scale: f32,
+) -> TokenRow {
+    let mut seed = 0xD6E8_FEB8_6659_FD93u64
+        ^ ((layer as u64) << 40)
+        ^ ((head as u64) << 24)
+        ^ (pos as u64);
+    seed = seed.wrapping_mul(0x0100_0000_01B3).wrapping_add(token as u32 as u64);
+    let mut rng = SplitMix64::new(seed);
+    let (iq, fq) = quant_field(&mut rng, d_head, scale, profile);
+    let (ik, fk) = quant_field(&mut rng, d_head, scale, profile);
+    let v: Vec<f32> = (0..d_head).map(|_| rng.next_normal() as f32).collect();
+    TokenRow { iq, fq, ik, fk, v }
+}
+
+/// Stack [`derive_token_row`] over a whole context into the
+/// full-context head tensors — the full-recompute reference's view of
+/// a session's workload (what `rust/tests/decode_conformance.rs`
+/// drives `hdp_head_reference` with).
+pub fn derive_session_head_inputs(
+    tokens: &[i32],
+    layer: usize,
+    head: usize,
+    d_head: usize,
+    profile: QuantProfile,
+    scale: f32,
+) -> HeadTensors {
+    let l = tokens.len();
+    let mut iq = Vec::with_capacity(l * d_head);
+    let mut fq = Vec::with_capacity(l * d_head);
+    let mut ik = Vec::with_capacity(l * d_head);
+    let mut fk = Vec::with_capacity(l * d_head);
+    let mut v = Vec::with_capacity(l * d_head);
+    for (pos, &tok) in tokens.iter().enumerate() {
+        let row = derive_token_row(tok, pos, layer, head, d_head, profile, scale);
+        iq.extend_from_slice(&row.iq);
+        fq.extend_from_slice(&row.fq);
+        ik.extend_from_slice(&row.ik);
+        fk.extend_from_slice(&row.fk);
+        v.extend_from_slice(&row.v);
+    }
     let t = |d: Vec<f32>| Tensor::new(&[l, d_head], d);
     (t(iq), t(fq), t(ik), t(fk), t(v))
 }
@@ -248,6 +349,11 @@ pub struct Engine {
     /// default (the conformance surface); long-running loops turn it
     /// off so `run_loop`'s accumulated responses stay small.
     keep_outputs: bool,
+    /// Host-quantizer calibration scale the native workload derivation
+    /// runs at (1.0 = the unit-scale grid, the original behaviour).
+    cal_scale: f32,
+    /// Per-session KV caches for the decode path (native backend only).
+    sessions: Option<Mutex<SessionStore>>,
     backend: Backend,
     responses: Arc<Mutex<Vec<Response>>>,
     inflight: Arc<AtomicU64>,
@@ -275,6 +381,8 @@ impl Engine {
             n_heads: cfg.n_heads,
             d_head: cfg.d_head,
             keep_outputs: true,
+            cal_scale: 1.0,
+            sessions: None,
             backend: Backend::Pjrt {
                 rt,
                 params: params.data.clone(),
@@ -308,6 +416,15 @@ impl Engine {
         } else {
             MhaKernel::new(params).with_threads(threads)
         };
+        let kv_cfg = KvCacheConfig {
+            n_layers: cfg.n_layers,
+            n_heads: cfg.n_heads,
+            d_head: cfg.d_head,
+            d_v: cfg.d_head,
+            block: params.block,
+            page_tokens: params.block * 8,
+            capacity_pages: usize::MAX,
+        };
         Ok(Self {
             model: "native".to_string(),
             batch: batcher.max_batch,
@@ -319,6 +436,8 @@ impl Engine {
             n_heads: cfg.n_heads,
             d_head: cfg.d_head,
             keep_outputs: true,
+            cal_scale: 1.0,
+            sessions: Some(Mutex::new(SessionStore::new(kv_cfg))),
             backend: Backend::Native { kernel, profile },
             responses: Arc::new(Mutex::new(Vec::new())),
             inflight: Arc::new(AtomicU64::new(0)),
@@ -335,6 +454,60 @@ impl Engine {
         self
     }
 
+    /// Run the native workload derivation at a non-unit host-quantizer
+    /// calibration scale: Q/K derive onto the quant grid pre-multiplied
+    /// by `scale`, and every request (batched and decode) carries the
+    /// matching per-task `inv_scale = 1 / (scale² · √d_head)`. The
+    /// default (1.0) is bitwise the original unit-scale behaviour.
+    pub fn with_calibration(mut self, scale: f32) -> Self {
+        assert!(scale.is_finite() && scale > 0.0, "calibration scale must be positive");
+        self.cal_scale = scale;
+        self
+    }
+
+    /// Bound the session store's page budget (native backend). Replaces
+    /// the store, so call before serving traffic. No-op on PJRT.
+    pub fn with_kv_capacity(mut self, pages: usize) -> Self {
+        if let Some(store) = &mut self.sessions {
+            let mut cfg = store.get_mut().unwrap().config();
+            cfg.capacity_pages = pages;
+            *store = Mutex::new(SessionStore::new(cfg));
+        }
+        self
+    }
+
+    /// Enable or disable the session store (native backend; enabled by
+    /// default). A session's cache lives inside *one* engine, so a
+    /// topology where interchangeable lanes steal work from a shared
+    /// queue must disable sessions — otherwise one session's steps
+    /// would scatter across lanes and build disjoint partial contexts.
+    /// With sessions disabled, a decode request fails batch validation
+    /// and is answered with a rejection instead of silently-wrong
+    /// output (see [`super::shard::ShardedCoordinator::new_native`]).
+    pub fn with_sessions(mut self, enabled: bool) -> Self {
+        if !enabled {
+            self.sessions = None;
+        }
+        self
+    }
+
+    /// The per-request `inv_scale` override the calibrated derivation
+    /// needs (`None` at unit scale — the kernel's configured value is
+    /// already correct there).
+    fn request_inv_scale(&self) -> Option<f32> {
+        if self.cal_scale == 1.0 {
+            None
+        } else {
+            Some(1.0 / (self.cal_scale * self.cal_scale * (self.d_head as f32).sqrt()))
+        }
+    }
+
+    /// Snapshot of the session store's cache statistics (`None` on the
+    /// PJRT path).
+    pub fn session_stats(&self) -> Option<crate::session::StoreStats> {
+        self.sessions.as_ref().map(|s| s.lock().unwrap().stats())
+    }
+
     fn entry(&self) -> &'static str {
         match self.mode {
             ServeMode::Dense => "dense_fwd",
@@ -342,14 +515,27 @@ impl Engine {
         }
     }
 
-    /// The kernel parameters the native backend runs with (`None` on
-    /// the PJRT path) — the conformance tests drive the reference
-    /// implementation from exactly these.
+    /// The *effective* kernel parameters the native backend runs with
+    /// (`None` on the PJRT path) — the conformance tests drive the
+    /// reference implementation from exactly these. At a non-unit
+    /// calibration scale the per-request `inv_scale` override is
+    /// folded in.
     pub fn native_kernel_params(&self) -> Option<HdpParams> {
         match &self.backend {
-            Backend::Native { kernel, .. } => Some(kernel.params()),
+            Backend::Native { kernel, .. } => {
+                let mut p = kernel.params();
+                if let Some(inv) = self.request_inv_scale() {
+                    p.inv_scale = inv;
+                }
+                Some(p)
+            }
             Backend::Pjrt { .. } => None,
         }
+    }
+
+    /// The calibration scale the native derivation runs at.
+    pub fn calibration_scale(&self) -> f32 {
+        self.cal_scale
     }
 
     /// The quantization profile the native workload derivation uses
@@ -379,6 +565,11 @@ impl Engine {
             Backend::Native { .. } => unreachable!("dispatched by backend"),
         };
         anyhow::ensure!(!reqs.is_empty() && reqs.len() <= self.batch);
+        anyhow::ensure!(
+            reqs.iter().all(|r| r.session.is_none()),
+            "PJRT backend serves one-shot requests only (decode sessions \
+             need the native engine)"
+        );
         // Pad to the executable's static batch with the last request.
         let mut toks: Vec<i32> = Vec::with_capacity(self.batch * seq_len);
         for r in reqs {
@@ -464,6 +655,8 @@ impl Engine {
                 kept_density: mean_density,
                 outputs: Vec::new(),
                 rejected: false,
+                session: None,
+                context_len: 0,
             })
             .collect())
     }
@@ -477,14 +670,91 @@ impl Engine {
         anyhow::ensure!(!reqs.is_empty() && reqs.len() <= self.batch,
                         "batch size {} not in 1..={}", reqs.len(), self.batch);
         let block = kernel.params().block;
+        // Validate the whole batch before touching any session state:
+        // a batch that fails admission here mutated nothing, so the
+        // run_loop shed path never leaves a cache half-advanced.
         for r in reqs {
-            anyhow::ensure!(
-                !r.tokens.is_empty() && r.tokens.len() % block == 0,
-                "request {}: seq len {} not a positive multiple of block {}",
-                r.id, r.tokens.len(), block
-            );
+            if r.session.is_some() {
+                // Decode appends token-by-token: any positive length is
+                // valid (mid-block contexts are first-class there).
+                anyhow::ensure!(!r.tokens.is_empty(),
+                                "decode request {}: no tokens to append", r.id);
+                // A sessionless lane (work-stealing member of a multi-
+                // lane fleet) must refuse decode outright: serving it
+                // against a lane-local store would scatter the session
+                // across lanes and silently diverge. Use the sticky
+                // coordinator for decode traffic.
+                anyhow::ensure!(
+                    self.sessions.is_some(),
+                    "decode request {}: this engine has no session store \
+                     (decode needs a session-owning lane — route through \
+                     ShardedCoordinator::new_native_sticky)",
+                    r.id
+                );
+            } else {
+                anyhow::ensure!(
+                    !r.tokens.is_empty() && r.tokens.len() % block == 0,
+                    "request {}: seq len {} not a positive multiple of block {}",
+                    r.id, r.tokens.len(), block
+                );
+            }
         }
 
+        let mut responses: Vec<Option<Response>> =
+            (0..reqs.len()).map(|_| None).collect();
+
+        // One-shot sub-batch through the batched kernel.
+        let ones: Vec<&Request> =
+            reqs.iter().filter(|r| r.session.is_none()).collect();
+        if !ones.is_empty() {
+            let served = self.serve_oneshots(kernel, profile, &ones);
+            let mut it = served.into_iter();
+            for (slot, r) in responses.iter_mut().zip(reqs) {
+                if r.session.is_none() {
+                    *slot = Some(it.next().expect("one response per one-shot"));
+                }
+            }
+        }
+
+        // Decode steps, in arrival order — same-session steps must stay
+        // sequential (the sticky router guarantees they share a lane).
+        for (i, r) in reqs.iter().enumerate() {
+            if r.session.is_some() {
+                responses[i] = Some(self.decode_one(kernel, profile, r));
+            }
+        }
+
+        let compute_s = t0.elapsed().as_secs_f64();
+        let now = Instant::now();
+        let queue_s: Vec<f64> = reqs
+            .iter()
+            .map(|r| ((now - r.enqueued).as_secs_f64() - compute_s).max(0.0))
+            .collect();
+        let e2e: Vec<f64> =
+            reqs.iter().map(|r| (now - r.enqueued).as_secs_f64()).collect();
+        self.metrics.record_batch(reqs.len(), &queue_s, compute_s, &e2e);
+
+        Ok(responses
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let mut resp = r.expect("every request answered");
+                resp.e2e_seconds = e2e[i];
+                resp
+            })
+            .collect())
+    }
+
+    /// The batched one-shot path: derive each request's layers × heads
+    /// workload and execute the whole sub-batch on
+    /// [`MhaKernel::forward_batch`]. `e2e_seconds` is stamped by the
+    /// caller once the full (mixed) batch finishes.
+    fn serve_oneshots(
+        &self,
+        kernel: &MhaKernel,
+        profile: QuantProfile,
+        reqs: &[&Request],
+    ) -> Vec<Response> {
         // Host-model stand-in: derive each request's layers × heads
         // workload. Each (request, layer, head) derivation is an
         // independent pure function, so it fans out across the same
@@ -497,6 +767,7 @@ impl Engine {
         // Locals only in the fan-out closure: `&self` must stay out of
         // it (the PJRT backend variant is not Sync).
         let d_head = self.d_head;
+        let scale = self.cal_scale;
         let flat_inputs: Vec<HeadTensors> = parallel_map(
             reqs.len() * per_req,
             kernel.threads(),
@@ -504,10 +775,11 @@ impl Engine {
                 let r = t / per_req;
                 let layer = (t % per_req) / per_layer;
                 let head = t % per_layer;
-                derive_head_inputs(&reqs[r].tokens, layer, head, d_head,
-                                   profile)
+                derive_head_inputs_scaled(&reqs[r].tokens, layer, head,
+                                          d_head, profile, scale)
             },
         );
+        let inv = self.request_inv_scale();
         let batch: Vec<BatchRequest> = (0..reqs.len())
             .map(|r| BatchRequest {
                 layers: (0..self.n_layers)
@@ -519,12 +791,12 @@ impl Engine {
                             .collect()
                     })
                     .collect(),
+                inv_scale: inv,
             })
             .collect();
 
-        // The whole batch — requests × layers × heads — through one pool.
+        // The whole sub-batch — requests × layers × heads — in one pool.
         let results = kernel.forward_batch(&batch);
-        let compute_s = t0.elapsed().as_secs_f64();
 
         // Per-request co-processor timing from the measured diagnostics.
         let profiles: Vec<sim::RequestProfile> = reqs
@@ -536,24 +808,14 @@ impl Engine {
                 head_kept_frac: res.stats.head_kept_frac(),
             })
             .collect();
-        let (per_req, total) = sim::estimate_batch(
+        let (per_req_sim, total) = sim::estimate_batch(
             &self.sim_cfg, self.n_layers, self.d_head, self.n_heads,
             &profiles, kernel.params().use_ff);
         self.metrics.record_sim(total.cycles, total.energy_pj,
                                 total.dram_bytes, total.heads_pruned as u64,
                                 total.heads_total as u64);
 
-        let now = Instant::now();
-        let queue_s: Vec<f64> = reqs
-            .iter()
-            .map(|r| ((now - r.enqueued).as_secs_f64() - compute_s).max(0.0))
-            .collect();
-        let e2e: Vec<f64> =
-            reqs.iter().map(|r| (now - r.enqueued).as_secs_f64()).collect();
-        self.metrics.record_batch(reqs.len(), &queue_s, compute_s, &e2e);
-
-        Ok(reqs
-            .iter()
+        reqs.iter()
             .enumerate()
             .map(|(i, r)| {
                 let stats = results[i].stats;
@@ -579,16 +841,129 @@ impl Engine {
                 Response {
                     id: r.id,
                     label,
-                    e2e_seconds: e2e[i],
-                    sim_seconds: self.sim_cfg.cycles_to_seconds(per_req[i].cycles),
+                    e2e_seconds: 0.0, // caller stamps the batch e2e
+                    sim_seconds: self.sim_cfg.cycles_to_seconds(per_req_sim[i].cycles),
                     heads_pruned: stats.heads_pruned,
                     heads_total: stats.heads_total,
                     kept_density: stats.kept_density(),
                     outputs,
                     rejected: false,
+                    session: None,
+                    context_len: 0,
                 }
             })
-            .collect())
+            .collect()
+    }
+
+    /// Serve one decode step against the session store: check the
+    /// session out (replaying its history state-only if it was evicted
+    /// — decode-from-scratch), append the request's tokens through the
+    /// incremental kernel, and answer the *last* token's attention row
+    /// across all layers × heads. Infallible past batch validation, so
+    /// a served batch never leaves a cache half-advanced.
+    fn decode_one(
+        &self,
+        kernel: &MhaKernel,
+        profile: QuantProfile,
+        req: &Request,
+    ) -> Response {
+        let session = req.session.expect("decode request");
+        let store_mutex =
+            self.sessions.as_ref().expect("native engine has a session store");
+        let mut store = store_mutex.lock().unwrap();
+        let stats0 = store.stats();
+        let (cache, replay) = store.checkout(session);
+
+        let n_heads = self.n_heads;
+        let d_head = self.d_head;
+        let scale = self.cal_scale;
+        let inv = self.request_inv_scale();
+        // Fan the layers × heads grid across the kernel's thread
+        // budget: each task owns its head's cache exclusively (disjoint
+        // per-head locks — no contention), replays evicted history
+        // state-only, then steps the new tokens; only the last one
+        // produces an output row. Results return in index order, so
+        // the fan-out width never changes the response.
+        let rows: Vec<DecodeRow> = parallel_map(
+            self.n_layers * n_heads,
+            kernel.threads(),
+            |t| {
+                let (layer, head) = (t / n_heads, t % n_heads);
+                let mut kv = cache.head(layer, head).lock().unwrap();
+                for (pos, &tok) in replay.iter().enumerate() {
+                    let row = derive_token_row(tok, pos, layer, head, d_head,
+                                               profile, scale);
+                    kernel.decode_append(&mut kv, &row);
+                }
+                let mut last = None;
+                for (off, &tok) in req.tokens.iter().enumerate() {
+                    let pos = kv.len();
+                    let row = derive_token_row(tok, pos, layer, head, d_head,
+                                               profile, scale);
+                    if off + 1 == req.tokens.len() {
+                        last = Some(kernel.decode_step(&mut kv, &row, inv));
+                    } else {
+                        kernel.decode_append(&mut kv, &row);
+                    }
+                }
+                last.expect("decode request carries at least one token")
+            },
+        );
+        let context_len = cache.len();
+
+        let mut stats = RequestStats::default();
+        for d in &rows {
+            stats.heads_total += 1;
+            stats.heads_pruned += usize::from(!d.head_kept);
+            stats.kept_blocks += d.kept_blocks;
+            stats.blocks_total += d.blocks_total;
+        }
+        let (outputs, label) = if self.keep_outputs {
+            let mut outputs = Vec::with_capacity(rows.len() * self.d_head);
+            for d in &rows {
+                outputs.extend_from_slice(&d.out);
+            }
+            let label = pooled_label(&outputs);
+            (outputs, label)
+        } else {
+            let label =
+                pooled_label_from(rows.iter().flat_map(|d| d.out.iter().copied()));
+            (Vec::new(), label)
+        };
+
+        store.commit(session, &req.tokens);
+        let stats1 = store.stats();
+        drop(store);
+
+        // Co-processor model of the cached step + serving bookkeeping.
+        let rep = sim::estimate_decode_step(
+            &self.sim_cfg, self.n_layers, self.d_head, self.n_heads,
+            context_len, stats.kept_density(), stats.head_kept_frac(),
+            kernel.params().use_ff);
+        self.metrics.record_sim(rep.cycles, rep.energy_pj, rep.dram_bytes,
+                                rep.heads_pruned as u64,
+                                rep.heads_total as u64);
+        self.metrics.record_pruning(
+            stats.heads_pruned as u64, stats.heads_total as u64,
+            stats.kept_blocks as u64, stats.blocks_total as u64);
+        self.metrics.record_decode(
+            req.tokens.len() as u64,
+            stats1.rebuilds - stats0.rebuilds,
+            stats1.evictions - stats0.evictions);
+
+        Response {
+            id: req.id,
+            label,
+            e2e_seconds: 0.0, // caller stamps the batch e2e
+            sim_seconds: self.sim_cfg.cycles_to_seconds(rep.cycles),
+            heads_pruned: stats.heads_pruned,
+            heads_total: stats.heads_total,
+            kept_density: stats.kept_density(),
+            outputs,
+            rejected: false,
+            session: Some(session),
+            context_len,
+        }
     }
 
     /// Consume the batcher until it closes and drains, executing on the
@@ -601,6 +976,14 @@ impl Engine {
     /// inside `forward_batch`'s worker pool.
     pub fn run_loop(&self) -> Vec<Response> {
         while let Some(batch) = self.batcher.next_batch() {
+            // Queue wait measured at the pop itself — the pure
+            // scheduling delay each request saw, before any compute
+            // (the `queue wait@pop` report line; per-shard in the
+            // fleet report).
+            let now = Instant::now();
+            let waits: Vec<f64> =
+                batch.iter().map(|r| (now - r.enqueued).as_secs_f64()).collect();
+            self.metrics.record_queue_wait(&waits);
             self.inflight.fetch_add(1, Ordering::SeqCst);
             match self.serve_batch(&batch) {
                 Ok(resps) => self.responses.lock().unwrap().extend(resps),
@@ -611,7 +994,7 @@ impl Engine {
                     // carrier as an admission rejection).
                     eprintln!("batch failed: {e:#}");
                     self.responses.lock().unwrap().extend(
-                        batch.iter().map(|r| Response::reject(r.id, r.enqueued)),
+                        batch.iter().map(Response::reject),
                     );
                 }
             }

@@ -17,11 +17,21 @@ use crate::util::stats::Histogram;
 #[derive(Debug, Default, Clone)]
 struct Inner {
     queue: Histogram,
+    /// Queue-wait measured *at batch pop* (submit → an engine pulled
+    /// the batch): the pure scheduling delay, recorded before any
+    /// compute happens — unlike `queue`, which is derived after the
+    /// fact as `e2e - compute`.
+    queue_wait: Histogram,
     compute: Histogram,
     e2e: Histogram,
     requests: u64,
     batches: u64,
     batched_requests: u64,
+    // decode / session-cache counters (native decode path)
+    decode_requests: u64,
+    decode_tokens: u64,
+    session_rebuilds: u64,
+    session_evictions: u64,
     // co-processor model aggregates
     sim_cycles: f64,
     sim_energy_pj: f64,
@@ -66,6 +76,48 @@ impl Metrics {
         for &e in e2e_s {
             m.e2e.record(e);
         }
+    }
+
+    /// Record per-request queue waits measured the moment a batch was
+    /// popped from the batcher (see `Inner::queue_wait`). Called by the
+    /// engine's `run_loop`; direct `serve_batch` callers (benches)
+    /// bypass the queue and record nothing here.
+    pub fn record_queue_wait(&self, waits_s: &[f64]) {
+        let mut m = self.inner.lock().unwrap();
+        for &w in waits_s {
+            m.queue_wait.record(w);
+        }
+    }
+
+    /// Mean queue wait at pop, seconds (0.0 before any pop).
+    pub fn queue_wait_mean(&self) -> f64 {
+        self.inner.lock().unwrap().queue_wait.mean()
+    }
+
+    pub fn queue_wait_quantile(&self, q: f64) -> f64 {
+        self.inner.lock().unwrap().queue_wait.quantile(q)
+    }
+
+    pub fn queue_wait_count(&self) -> u64 {
+        self.inner.lock().unwrap().queue_wait.count()
+    }
+
+    /// Record one served decode request: how many tokens it appended,
+    /// and how many session rebuilds / evictions it triggered.
+    pub fn record_decode(&self, tokens: u64, rebuilds: u64, evictions: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.decode_requests += 1;
+        m.decode_tokens += tokens;
+        m.session_rebuilds += rebuilds;
+        m.session_evictions += evictions;
+    }
+
+    pub fn decode_requests(&self) -> u64 {
+        self.inner.lock().unwrap().decode_requests
+    }
+
+    pub fn decode_tokens(&self) -> u64 {
+        self.inner.lock().unwrap().decode_tokens
     }
 
     pub fn record_sim(&self, cycles: f64, energy_pj: f64, dram_bytes: f64,
@@ -129,11 +181,16 @@ impl Metrics {
         let snap = other.inner.lock().unwrap().clone();
         let mut m = self.inner.lock().unwrap();
         m.queue.merge(&snap.queue);
+        m.queue_wait.merge(&snap.queue_wait);
         m.compute.merge(&snap.compute);
         m.e2e.merge(&snap.e2e);
         m.requests += snap.requests;
         m.batches += snap.batches;
         m.batched_requests += snap.batched_requests;
+        m.decode_requests += snap.decode_requests;
+        m.decode_tokens += snap.decode_tokens;
+        m.session_rebuilds += snap.session_rebuilds;
+        m.session_evictions += snap.session_evictions;
         m.sim_cycles += snap.sim_cycles;
         m.sim_energy_pj += snap.sim_energy_pj;
         m.sim_dram_bytes += snap.sim_dram_bytes;
@@ -173,8 +230,19 @@ impl Metrics {
             if m.batches == 0 { 0.0 } else { m.batched_requests as f64 / m.batches as f64 },
         ));
         s.push_str(&format!("queue latency  {}\n", m.queue.summary("s")));
+        if m.queue_wait.count() > 0 {
+            s.push_str(&format!("queue wait@pop {}\n", m.queue_wait.summary("s")));
+        }
         s.push_str(&format!("batch compute  {}\n", m.compute.summary("s")));
         s.push_str(&format!("e2e latency    {}\n", m.e2e.summary("s")));
+        if m.decode_requests > 0 {
+            s.push_str(&format!(
+                "decode         {} steps, {} tokens appended, {} rebuilds, \
+                 {} evictions\n",
+                m.decode_requests, m.decode_tokens, m.session_rebuilds,
+                m.session_evictions,
+            ));
+        }
         if m.heads_total > 0 {
             s.push_str(&format!(
                 "co-processor   {:.2}M cycles, {:.2} µJ, {:.2} MB DRAM, {}/{} heads pruned\n",
@@ -236,6 +304,38 @@ mod tests {
         assert_eq!(m.heads_pruned_frac(), 0.0);
         assert_eq!(m.block_kept_frac(), 1.0);
         assert!(!m.report().contains("pruning (meas)"));
+        // idle lanes don't print queue-wait or decode lines
+        assert_eq!(m.queue_wait_count(), 0);
+        assert_eq!(m.queue_wait_mean(), 0.0);
+        assert!(!m.report().contains("queue wait@pop"));
+        assert!(!m.report().contains("decode "));
+    }
+
+    #[test]
+    fn queue_wait_and_decode_counters_record_and_merge() {
+        let a = Metrics::new();
+        let b = Metrics::new();
+        a.record_queue_wait(&[0.001, 0.002]);
+        b.record_queue_wait(&[0.004]);
+        a.record_decode(3, 0, 0);
+        b.record_decode(1, 1, 2);
+        assert_eq!(a.queue_wait_count(), 2);
+        assert!(a.queue_wait_mean() > 0.0);
+        assert!(a.queue_wait_quantile(0.95) >= a.queue_wait_quantile(0.5));
+        a.absorb(&b);
+        assert_eq!(a.queue_wait_count(), 3, "histograms merge");
+        assert_eq!(a.decode_requests(), 2);
+        assert_eq!(a.decode_tokens(), 4);
+        let r = a.report();
+        assert!(r.contains("queue wait@pop"), "{r}");
+        assert!(
+            r.contains("decode         2 steps, 4 tokens appended, \
+                        1 rebuilds, 2 evictions"),
+            "{r}"
+        );
+        // the absorbed lane is untouched
+        assert_eq!(b.queue_wait_count(), 1);
+        assert_eq!(b.decode_requests(), 1);
     }
 
     #[test]

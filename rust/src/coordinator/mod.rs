@@ -14,6 +14,10 @@
 //!               │            ShardedCoordinator: Engine lanes 0..N
 //!               │            (each: forward_batch → Metrics)
 //!               └─ reject → Response::reject (rejected = true)
+//!
+//! decode producers → SessionRouter (sticky: session % shards)
+//!               → that lane's own Batcher → Engine decode path
+//!                 (SessionStore → KvCache pages → MhaKernel::decode_step)
 //! ```
 
 pub mod batcher;
@@ -22,8 +26,9 @@ pub mod metrics;
 pub mod shard;
 
 pub use batcher::{Batcher, Request};
-pub use engine::{derive_head_inputs, pooled_label, Engine, NativeModelConfig,
-                 Response, ServeMode};
+pub use engine::{derive_head_inputs, derive_head_inputs_scaled,
+                 derive_session_head_inputs, derive_token_row, pooled_label,
+                 Engine, NativeModelConfig, Response, ServeMode};
 pub use metrics::Metrics;
-pub use shard::{EngineFactory, Readiness, ShardReport, ShardStats,
-                ShardedCoordinator};
+pub use shard::{EngineFactory, Readiness, SessionRouter, ShardReport,
+                ShardStats, ShardedCoordinator};

@@ -32,6 +32,22 @@
 //! them with [`Response::reject`] (see the contract in
 //! [`super::batcher`] and [`super::engine`]).
 //!
+//! # Sticky session affinity (decode)
+//!
+//! A decode session's KV cache lives inside one engine's
+//! [`SessionStore`](crate::session::SessionStore), so its steps must
+//! keep landing on that engine. [`ShardedCoordinator::new_native_sticky`]
+//! builds the coordinator with **one batcher per lane** instead of the
+//! shared queue, and hands producers a [`SessionRouter`]:
+//! decode requests route by `session % shards` (the cache-owning
+//! lane, every time), one-shots to the least-loaded lane. Per-lane
+//! FIFO order then guarantees same-session steps execute in submit
+//! order. Work stealing is deliberately traded away on this path —
+//! stickiness is what makes the cache hit; the determinism guarantee
+//! is unchanged because every response is still a pure per-request
+//! (per-session-stream) function, pinned across shard counts by
+//! `rust/tests/decode_conformance.rs`.
+//!
 //! # Metrics and degraded runs
 //!
 //! Each shard's engine records into its own [`Metrics`]; [`run`]
@@ -48,12 +64,13 @@
 
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
+use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::sim::SimConfig;
 
-use super::batcher::Batcher;
+use super::batcher::{Batcher, Request};
 use super::engine::{Engine, NativeModelConfig, Response, ServeMode};
 use super::metrics::Metrics;
 
@@ -122,6 +139,52 @@ impl Readiness {
     }
 }
 
+/// Routes requests to lane batchers when the coordinator runs sticky
+/// (per-lane queues): decode steps go to their session's home lane —
+/// `session % lanes`, the same lane every time, where the KV cache
+/// lives — and one-shots to the least-loaded lane. Cloneable; hand one
+/// to each producer thread.
+#[derive(Clone)]
+pub struct SessionRouter {
+    lanes: Vec<Arc<Batcher>>,
+}
+
+impl SessionRouter {
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// The lane a request routes to (sticky for decode sessions).
+    pub fn lane_of(&self, req: &Request) -> usize {
+        match req.session {
+            Some(s) => (s % self.lanes.len() as u64) as usize,
+            None => (0..self.lanes.len())
+                .min_by_key(|&i| self.lanes[i].pending())
+                .unwrap_or(0),
+        }
+    }
+
+    /// Submit through the sticky routing; the admission contract is
+    /// the lane batcher's (`Err(Request)` hands a rejected request
+    /// back, see [`Batcher::submit`]).
+    pub fn submit(&self, req: Request) -> Result<(), Request> {
+        let lane = self.lane_of(&req);
+        self.lanes[lane].submit(req)
+    }
+
+    /// Close every lane queue (pending requests still drain).
+    pub fn close(&self) {
+        for lane in &self.lanes {
+            lane.close();
+        }
+    }
+
+    /// Requests waiting across all lanes.
+    pub fn pending(&self) -> usize {
+        self.lanes.iter().map(|b| b.pending()).sum()
+    }
+}
+
 /// One shard's share of a finished run.
 #[derive(Debug, Clone)]
 pub struct ShardStats {
@@ -130,6 +193,10 @@ pub struct ShardStats {
     pub requests: usize,
     /// Batches this shard pulled from the shared batcher.
     pub batches: u64,
+    /// Mean queue wait its requests saw, measured at batch pop.
+    pub queue_wait_mean_s: f64,
+    /// p95 queue wait at batch pop.
+    pub queue_wait_p95_s: f64,
 }
 
 /// Everything a sharded run produced: the responses from all lanes
@@ -154,8 +221,13 @@ impl ShardReport {
         let mut s = self.metrics.report();
         for st in &self.per_shard {
             s.push_str(&format!(
-                "shard {}       {} requests in {} batches\n",
-                st.shard, st.requests, st.batches
+                "shard {}       {} requests in {} batches, queue-wait \
+                 mean {:.1}µs p95 {:.1}µs\n",
+                st.shard,
+                st.requests,
+                st.batches,
+                st.queue_wait_mean_s * 1e6,
+                st.queue_wait_p95_s * 1e6,
             ));
         }
         for (shard, e) in &self.lane_errors {
@@ -165,10 +237,15 @@ impl ShardReport {
     }
 }
 
-/// N engine lanes behind one batcher. See the module docs for the
-/// dispatch, determinism and admission-control contracts.
+/// N engine lanes behind one batcher (work stealing), or behind one
+/// batcher *each* with sticky session routing (the decode path). See
+/// the module docs for the dispatch, determinism and admission-control
+/// contracts.
 pub struct ShardedCoordinator {
     batcher: Arc<Batcher>,
+    /// Per-lane queues when running sticky (`None` = the shared-queue
+    /// work-stealing mode; `batcher` then serves every lane).
+    lane_batchers: Option<Vec<Arc<Batcher>>>,
     metrics: Arc<Metrics>,
     readiness: Readiness,
     shards: usize,
@@ -190,6 +267,7 @@ impl ShardedCoordinator {
         anyhow::ensure!(shards >= 1, "need at least one shard");
         Ok(Self {
             batcher,
+            lane_batchers: None,
             metrics: Arc::new(Metrics::new()),
             readiness: Readiness::new(shards),
             shards,
@@ -198,11 +276,69 @@ impl ShardedCoordinator {
         })
     }
 
+    /// N native lanes with **per-lane batchers and sticky session
+    /// routing** — the decode serving shape, where a session's KV cache
+    /// must keep meeting the same engine. Producers submit through
+    /// [`ShardedCoordinator::router`] (and close through it);
+    /// `max_queue = 0` leaves lane queues unbounded.
+    /// `kv_capacity_pages` bounds each lane's session store
+    /// (`usize::MAX` = unbounded); `cal_scale` is the native
+    /// derivation's calibration (1.0 = unit grid).
+    pub fn new_native_sticky(
+        shards: usize,
+        cfg: NativeModelConfig,
+        mode: ServeMode,
+        sim_cfg: SimConfig,
+        max_batch: usize,
+        linger: Duration,
+        max_queue: usize,
+        threads: usize,
+        kv_capacity_pages: usize,
+        cal_scale: f32,
+    ) -> Result<Self> {
+        anyhow::ensure!(shards >= 1, "need at least one shard");
+        let lanes: Vec<Arc<Batcher>> = (0..shards)
+            .map(|_| {
+                let b = Batcher::new(max_batch, linger);
+                Arc::new(if max_queue == 0 { b } else { b.with_max_queue(max_queue) })
+            })
+            .collect();
+        let mut coord = Self::from_factory(
+            shards,
+            Arc::clone(&lanes[0]),
+            move |_, b| {
+                Engine::new_native(cfg, mode, sim_cfg.clone(), b, threads).map(|e| {
+                    e.with_kv_capacity(kv_capacity_pages)
+                        .with_calibration(cal_scale)
+                })
+            },
+        )?;
+        coord.lane_batchers = Some(lanes);
+        Ok(coord)
+    }
+
+    /// The sticky-session router (`None` when the coordinator runs the
+    /// shared-queue work-stealing mode — submit to
+    /// [`ShardedCoordinator::batcher`] there instead).
+    pub fn router(&self) -> Option<SessionRouter> {
+        self.lane_batchers
+            .as_ref()
+            .map(|lanes| SessionRouter { lanes: lanes.clone() })
+    }
+
     /// N native in-process lanes with identical geometry and mode —
     /// the no-artifacts scale-out `hdp serve --demo --shards N` runs.
     /// `threads` is each lane's kernel fan-out width (0 = host
     /// default); lanes multiply it, so oversubscribed hosts should
     /// pass an explicit per-lane budget.
+    ///
+    /// Work-stealing lanes are interchangeable, so with more than one
+    /// lane the engines run **sessionless**: a decode request would
+    /// land on whichever lane is idle and scatter its session's cache
+    /// across stores, so it is *rejected* at batch validation instead
+    /// (answered with `rejected = true` by the shed path). Decode
+    /// traffic belongs on [`ShardedCoordinator::new_native_sticky`]; a
+    /// single shared-queue lane keeps its store (one lane = one owner).
     pub fn new_native(
         shards: usize,
         cfg: NativeModelConfig,
@@ -211,8 +347,10 @@ impl ShardedCoordinator {
         batcher: Arc<Batcher>,
         threads: usize,
     ) -> Result<Self> {
+        let sessions_ok = shards == 1;
         Self::from_factory(shards, batcher, move |_, b| {
             Engine::new_native(cfg, mode, sim_cfg.clone(), b, threads)
+                .map(|e| e.with_sessions(sessions_ok))
         })
     }
 
@@ -261,9 +399,16 @@ impl ShardedCoordinator {
                 let handles: Vec<_> = (0..self.shards)
                     .map(|shard| {
                         s.spawn(move || -> Result<ShardRun, (usize, anyhow::Error)> {
+                            // Sticky mode: each lane consumes its own
+                            // queue; shared mode: every lane steals
+                            // from the one batcher.
+                            let lane_batcher = self
+                                .lane_batchers
+                                .as_ref()
+                                .map_or(&self.batcher, |lanes| &lanes[shard]);
                             let built = (self.factory)(
                                 shard,
-                                Arc::clone(&self.batcher),
+                                Arc::clone(lane_batcher),
                             );
                             let engine = match built {
                                 Ok(e) => {
@@ -297,6 +442,8 @@ impl ShardedCoordinator {
                         shard,
                         requests: resps.len(),
                         batches: metrics.batches(),
+                        queue_wait_mean_s: metrics.queue_wait_mean(),
+                        queue_wait_p95_s: metrics.queue_wait_quantile(0.95),
                     });
                     responses.extend(resps);
                 }
@@ -324,11 +471,9 @@ impl ShardedCoordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::{Duration, Instant};
+    use std::time::Duration;
 
     use crate::util::rng::SplitMix64;
-
-    use crate::coordinator::batcher::Request;
 
     const GEOM: NativeModelConfig =
         NativeModelConfig { n_layers: 1, n_heads: 2, d_head: 8 };
@@ -339,11 +484,10 @@ mod tests {
 
     fn request(id: u64) -> Request {
         let mut rng = SplitMix64::new(0xC0FFEE ^ id);
-        Request {
+        Request::oneshot(
             id,
-            tokens: (0..16).map(|_| rng.next_below(30_000) as i32).collect(),
-            enqueued: Instant::now(),
-        }
+            (0..16).map(|_| rng.next_below(30_000) as i32).collect(),
+        )
     }
 
     fn coordinator(shards: usize, max_batch: usize) -> ShardedCoordinator {
@@ -408,7 +552,7 @@ mod tests {
             let mut rejections = Vec::new();
             for id in 0..n {
                 if let Err(back) = batcher.submit(request(id)) {
-                    rejections.push(Response::reject(back.id, back.enqueued));
+                    rejections.push(Response::reject(&back));
                 }
             }
             batcher.close();
@@ -476,6 +620,98 @@ mod tests {
         assert!(format!("{err:#}").contains("every lane failed"));
         // wait_any must not hang: every lane resolved (as failed)
         assert!(!ready.wait_any(), "no lane ever came up");
+    }
+
+    #[test]
+    fn shared_mode_has_no_router_and_reports_queue_wait() {
+        let coord = coordinator(2, 4);
+        assert!(coord.router().is_none(), "work-stealing mode: no router");
+        for id in 0..6 {
+            coord.batcher().submit(request(id)).unwrap();
+        }
+        coord.batcher().close();
+        let report = coord.run().unwrap();
+        assert_eq!(report.responses.len(), 6);
+        // queue wait was recorded at pop and lands in the per-shard line
+        assert!(report.metrics.queue_wait_count() >= 6);
+        assert!(report.summary().contains("queue-wait"), "{}", report.summary());
+    }
+
+    #[test]
+    fn work_stealing_multi_lane_rejects_decode_instead_of_scattering() {
+        // Interchangeable lanes have no session affinity, so a decode
+        // step on a multi-lane work-stealing coordinator must be
+        // refused (shed, rejected = true, session echoed) — never
+        // served against whichever lane's local store happened to
+        // steal it.
+        let coord = coordinator(2, 2);
+        coord.batcher().submit(Request::decode(0, 9, vec![1, 2])).unwrap();
+        coord.batcher().close();
+        let report = coord.run().unwrap();
+        assert_eq!(report.responses.len(), 1);
+        let r = &report.responses[0];
+        assert!(r.rejected && r.label == -1, "refused, not silently served");
+        assert_eq!(r.session, Some(9), "rejection names the broken stream");
+        // A single shared-queue lane is its own session owner: decode
+        // serves normally there.
+        let coord1 = coordinator(1, 2);
+        coord1.batcher().submit(Request::decode(5, 9, vec![1, 2])).unwrap();
+        coord1.batcher().close();
+        let report1 = coord1.run().unwrap();
+        assert_eq!(report1.responses.len(), 1);
+        assert!(!report1.responses[0].rejected);
+        assert_eq!(report1.responses[0].context_len, 2);
+    }
+
+    #[test]
+    fn sticky_router_pins_sessions_and_serves_decode() {
+        let coord = ShardedCoordinator::new_native_sticky(
+            2,
+            GEOM,
+            mode(),
+            SimConfig::edge(),
+            4,
+            Duration::from_millis(1),
+            0,
+            1,
+            usize::MAX,
+            1.0,
+        )
+        .unwrap();
+        let router = coord.router().expect("sticky mode has a router");
+        assert_eq!(router.lanes(), 2);
+        // Decode requests route by session id — stable, cache-owning lane.
+        let a = Request::decode(1, 42, vec![1, 2]);
+        let b = Request::decode(2, 42, vec![3]);
+        assert_eq!(router.lane_of(&a), router.lane_of(&b), "same session, same lane");
+        assert_eq!(router.lane_of(&a), 0, "42 % 2 lanes");
+        assert_eq!(router.lane_of(&Request::decode(3, 7, vec![1])), 1);
+        // A small multi-session decode run end to end.
+        let producer = {
+            let r = router.clone();
+            std::thread::spawn(move || {
+                for id in 0..9u64 {
+                    let session = id % 3;
+                    r.submit(Request::decode(id, session, vec![id as i32 + 1]))
+                        .unwrap();
+                }
+                r.close();
+            })
+        };
+        let report = coord.run().unwrap();
+        producer.join().unwrap();
+        assert_eq!(report.responses.len(), 9);
+        assert!(report
+            .responses
+            .iter()
+            .all(|r| !r.rejected && r.session.is_some()));
+        // Each session appended 3 tokens; its last response saw the
+        // full context.
+        let max_ctx = report.responses.iter().map(|r| r.context_len).max();
+        assert_eq!(max_ctx, Some(3));
+        assert_eq!(report.metrics.decode_requests(), 9);
+        assert_eq!(report.metrics.decode_tokens(), 9);
+        assert!(report.summary().contains("decode"), "{}", report.summary());
     }
 
     #[test]

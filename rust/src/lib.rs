@@ -13,10 +13,12 @@
 //!   text artifacts (`python/compile/`, `make artifacts`).
 //! * **L3 (this crate)** — the runtime: PJRT execution of the
 //!   artifacts, the functional Algorithm-2 model, the cycle-level HDP
-//!   co-processor simulator with baseline accelerator cost models, and
-//!   a serving [`coordinator`] — dynamic batcher with admission
-//!   control, sharded multi-engine scale-out, merged metrics — with
-//!   the figure-reproduction harness behind the `hdp` CLI.
+//!   co-processor simulator with baseline accelerator cost models, a
+//!   [`session`] subsystem (block-sparse paged KV cache + incremental
+//!   decode state), and a serving [`coordinator`] — dynamic batcher
+//!   with admission control, sharded multi-engine scale-out with
+//!   sticky session affinity, merged metrics — with the
+//!   figure-reproduction harness behind the `hdp` CLI.
 
 pub mod attention;
 pub mod coordinator;
@@ -25,6 +27,7 @@ pub mod fixed;
 pub mod model;
 pub mod repro;
 pub mod runtime;
+pub mod session;
 pub mod sim;
 pub mod tensor;
 pub mod util;

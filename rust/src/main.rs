@@ -68,7 +68,9 @@ fn print_help() {
          \x20         (`--demo` runs the native in-process kernel path:\n\
          \x20         no artifacts or weights needed; `--shards N` fans\n\
          \x20         batches across N engine lanes, `--max-queue M`\n\
-         \x20         bounds the queue and rejects overload)\n\
+         \x20         bounds the queue and rejects overload;\n\
+         \x20         `--demo --decode` drives a multi-session KV-cache\n\
+         \x20         decode loop with sticky session->lane affinity)\n\
          \x20 repro   regenerate the paper's figures (CSV into results/;\n\
          \x20         `--figs kernel,table1,arch` needs no artifacts)\n\
          \x20 arch    accelerator comparison (cycle simulator)\n\
@@ -216,6 +218,17 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
                this many requests wait (0 = unbounded)")
         .switch("demo", "serve on the in-process sparse kernel \
                  (no artifacts or weights needed)")
+        .switch("decode", "demo: multi-session incremental decode loop \
+                 over the session KV cache (sticky session->lane \
+                 affinity; implies --demo)")
+        .flag("sessions", "4", "decode demo: concurrent sessions")
+        .flag("decode-steps", "32", "decode demo: single-token steps per \
+               session after prefill")
+        .flag("context", "16", "decode demo: prefill context length per \
+               session")
+        .flag("kv-pages", "0", "decode demo: session-store page budget \
+               per lane (0 = unbounded; LRU eviction, evicted sessions \
+               decode from scratch)")
         .flag("layers", "2", "demo: attention layers per request")
         .flag("heads", "4", "demo: heads per layer")
         .flag("d-head", "16", "demo: head dimension")
@@ -226,7 +239,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
                (0 = host default split across --shards lanes)")
         .parse(rest)?;
 
-    if args.get_bool("demo") {
+    if args.get_bool("demo") || args.get_bool("decode") {
         return serve_demo(&args);
     }
 
@@ -323,13 +336,9 @@ fn spawn_producer(
         let mut rejections = Vec::new();
         if ready.wait_any() {
             for id in 0..n as u64 {
-                let req = Request {
-                    id,
-                    tokens: make_tokens(id),
-                    enqueued: Instant::now(),
-                };
+                let req = Request::oneshot(id, make_tokens(id));
                 if let Err(back) = batcher.submit(req) {
-                    rejections.push(Response::reject(back.id, back.enqueued));
+                    rejections.push(Response::reject(&back));
                 }
                 std::thread::sleep(
                     Duration::from_secs_f64(rng.next_exp(rate)));
@@ -374,9 +383,6 @@ fn serve_demo(args: &Args) -> Result<()> {
         n_heads: args.get_usize("heads")?,
         d_head: args.get_usize("d-head")?,
     };
-    let seq = args.get_usize("seq")?;
-    anyhow::ensure!(seq >= 2 && seq % 2 == 0,
-                    "--seq must be an even length >= 2");
     let mode = match args.get("mode").as_str() {
         "dense" => ServeMode::Dense,
         _ => ServeMode::Hdp {
@@ -390,6 +396,12 @@ fn serve_demo(args: &Args) -> Result<()> {
     } else {
         SimConfig::edge()
     };
+    if args.get_bool("decode") {
+        return serve_demo_decode(args, cfg, mode, chip);
+    }
+    let seq = args.get_usize("seq")?;
+    anyhow::ensure!(seq >= 2 && seq % 2 == 0,
+                    "--seq must be an even length >= 2");
     let batcher = Arc::new(bounded_batcher(args, args.get_usize("batch")?)?);
     let shards = args.get_usize("shards")?;
     // An explicit --threads is a per-lane width; the 0 default splits
@@ -432,6 +444,100 @@ fn serve_demo(args: &Args) -> Result<()> {
         println!("first request: label {}, {}/{} heads pruned, kept \
                   density {:.3}, simulated co-processor latency {:.3} ms",
                  r.label, r.heads_pruned, r.heads_total, r.kept_density,
+                 r.sim_seconds * 1e3);
+    }
+    Ok(())
+}
+
+/// `hdp serve --demo --decode`: the stateful multi-turn serving path —
+/// S sessions prefill a context, then decode single tokens round-robin
+/// through the sticky coordinator (one batcher per lane; a session's
+/// KV cache lives on its `session % shards` lane for the whole run).
+/// Each step scores only the cached blocks for the one new query row;
+/// `--kv-pages` bounds the per-lane session store so LRU eviction and
+/// decode-from-scratch rebuilds can be watched live.
+fn serve_demo_decode(args: &Args, cfg: NativeModelConfig, mode: ServeMode,
+                     chip: SimConfig) -> Result<()> {
+    let shards = args.get_usize("shards")?;
+    let sessions = args.get_usize("sessions")?;
+    let steps = args.get_usize("decode-steps")?;
+    let context = args.get_usize("context")?;
+    anyhow::ensure!(sessions >= 1 && steps >= 1 && context >= 1,
+                    "--sessions, --decode-steps and --context must be >= 1");
+    let threads = match args.get_usize("threads")? {
+        0 => (configured_threads() / shards.max(1)).max(1),
+        t => t,
+    };
+    let kv_pages = match args.get_usize("kv-pages")? {
+        0 => usize::MAX,
+        n => n,
+    };
+    let coordinator = ShardedCoordinator::new_native_sticky(
+        shards,
+        cfg,
+        mode,
+        chip,
+        args.get_usize("batch")?,
+        Duration::from_millis(args.get_usize("linger-ms")? as u64),
+        args.get_usize("max-queue")?,
+        threads,
+        kv_pages,
+        1.0,
+    )?
+    .with_raw_outputs(false);
+    let router = coordinator.router().expect("sticky coordinator has a router");
+    let ready = coordinator.readiness();
+    println!("decoding {steps} step(s) x {sessions} session(s) on {shards} \
+              sticky lane(s): {} layers x {} heads x d_head {}, prefill \
+              context {context}",
+             cfg.n_layers, cfg.n_heads, cfg.d_head);
+
+    let producer = std::thread::spawn(move || {
+        let mut rng = SplitMix64::new(23);
+        let mut rejections = Vec::new();
+        let mut id = 0u64;
+        let mut submit = |req: Request, rejections: &mut Vec<Response>| {
+            if let Err(back) = router.submit(req) {
+                rejections.push(Response::reject(&back));
+            }
+        };
+        if ready.wait_any() {
+            // Prefill every session's context, then interleave
+            // single-token steps round-robin — the multi-turn traffic
+            // shape the KV cache exists for.
+            for s in 0..sessions as u64 {
+                let tokens: Vec<i32> = (0..context)
+                    .map(|_| rng.next_below(30_000) as i32)
+                    .collect();
+                submit(Request::decode(id, s, tokens), &mut rejections);
+                id += 1;
+            }
+            for _ in 0..steps {
+                for s in 0..sessions as u64 {
+                    let tok = rng.next_below(30_000) as i32;
+                    submit(Request::decode(id, s, vec![tok]), &mut rejections);
+                    id += 1;
+                }
+            }
+        }
+        router.close();
+        rejections
+    });
+
+    let t0 = Instant::now();
+    let report = coordinator.run()?;
+    let rejections = producer.join().unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    print_serve_report(&report, &rejections, Some(wall));
+    let tokens = report.metrics.decode_tokens();
+    println!("decode throughput: {:.1} tokens/s ({tokens} tokens appended \
+              across {} decode steps)",
+             tokens as f64 / wall.max(1e-9),
+             report.metrics.decode_requests());
+    if let Some(r) = report.responses.iter().max_by_key(|r| r.context_len) {
+        println!("deepest context: session {} at {} tokens; last cached \
+                  step's simulated co-processor latency {:.3} ms",
+                 r.session.unwrap_or(0), r.context_len,
                  r.sim_seconds * 1e3);
     }
     Ok(())

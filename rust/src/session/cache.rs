@@ -1,0 +1,516 @@
+//! Block-granular KV cache state for one attention head of one
+//! session.
+//!
+//! [`HeadKv`] holds everything an incremental decode step needs so the
+//! per-token cost stays `O(l·d)` instead of the full-recompute
+//! `O(l²·d)`:
+//!
+//! * **Pages** — the quantized key fields `IK`/`FK`, the float values
+//!   `V`, and the integer query field `IQ` of every cached token, in
+//!   fixed-capacity pages (`page_tokens` rows each, a multiple of
+//!   the pruning block edge — block-aligned growth). Appending a token
+//!   touches at most one page; a new page is allocated only when the
+//!   last one fills. `IQ` is cached because a *new key column* scores
+//!   against every *old query row* (the attention here is
+//!   bidirectional, as in the reference); `FQ` is not cached — the
+//!   fraction field of a query is only ever used by its own decode
+//!   step's FUM stage.
+//! * **θ matrix** — the block importances over the whole cached
+//!   context, maintained incrementally in **exactly the accumulation
+//!   order of [`crate::attention::hdp::block_importance`]** so the
+//!   decode path's pruning decisions (row threshold Θ, head statistic
+//!   `theta_head`) are bitwise identical to a full recompute. See
+//!   [`HeadKv::update_theta`] for the order argument.
+//! * **Tail columns** — `|integer score|` columns of the partial
+//!   (growing) tail block-column. A θ cell crossed by a growing block
+//!   *column* cannot be appended to in reference order (the reference
+//!   interleaves old and new entries), so those `≤ block` cells per
+//!   block-row are recomputed from these retained columns each step
+//!   and the buffer is dropped the moment the block-column completes.
+//!
+//! The decode math itself (scoring, threshold, FUM, softmax, P·V)
+//! lives in [`crate::attention::kernel`] (`MhaKernel::decode_step`);
+//! this type owns the state and its growth/bookkeeping invariants.
+//! [`KvCache`] aggregates the `layers × heads` grid of [`HeadKv`]s
+//! that one session owns, each behind its own `Mutex` so independent
+//! heads decode in parallel without contention.
+
+use std::sync::Mutex;
+
+use crate::attention::hdp::n_blocks;
+
+/// One token's derived attention-row fields on the quant grid:
+/// quantized query/key integer+fraction fields (`d_head` each) plus
+/// the float value row (`d_v`). This is the unit a decode step appends
+/// to the cache.
+#[derive(Debug, Clone, Default)]
+pub struct TokenRow {
+    pub iq: Vec<f32>,
+    pub fq: Vec<f32>,
+    pub ik: Vec<f32>,
+    pub fk: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// One fixed-capacity page of cached token rows (`page_tokens` rows of
+/// `iq`/`ik`/`fk` at `d_head` and `v` at `d_v`). Buffers are allocated
+/// once at page creation; rows fill in append order.
+#[derive(Debug)]
+struct Page {
+    used: usize,
+    iq: Vec<f32>,
+    ik: Vec<f32>,
+    fk: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Page {
+    fn new(page_tokens: usize, d_head: usize, d_v: usize) -> Self {
+        Self {
+            used: 0,
+            iq: vec![0.0; page_tokens * d_head],
+            ik: vec![0.0; page_tokens * d_head],
+            fk: vec![0.0; page_tokens * d_head],
+            v: vec![0.0; page_tokens * d_v],
+        }
+    }
+}
+
+/// Per-(session, layer, head) cached decode state. See the module docs
+/// for the layout and the bitwise-exactness argument.
+#[derive(Debug)]
+pub struct HeadKv {
+    d_head: usize,
+    d_v: usize,
+    block: usize,
+    page_tokens: usize,
+    len: usize,
+    pages: Vec<Page>,
+    /// θ rows, one `Vec` per block-row, every row `n_blocks(len)` long.
+    /// Row-major iteration reproduces the reference's flat layout.
+    theta: Vec<Vec<f32>>,
+    /// `|integer score|` columns of the partial tail block-column
+    /// (column-major, ascending column index; each column holds `len`
+    /// entries). Empty whenever `len` is block-aligned.
+    tail_abs: Vec<Vec<f32>>,
+}
+
+impl HeadKv {
+    pub fn new(d_head: usize, d_v: usize, block: usize, page_tokens: usize) -> Self {
+        assert!(d_head > 0 && d_v > 0 && block > 0, "degenerate head geometry");
+        assert!(
+            page_tokens > 0 && page_tokens % block == 0,
+            "page_tokens {page_tokens} must be a positive multiple of block {block}"
+        );
+        Self {
+            d_head,
+            d_v,
+            block,
+            page_tokens,
+            len: 0,
+            pages: Vec::new(),
+            theta: Vec::new(),
+            tail_abs: Vec::new(),
+        }
+    }
+
+    /// Cached context length in tokens.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_head
+    }
+
+    pub fn d_v(&self) -> usize {
+        self.d_v
+    }
+
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Pages currently allocated (the unit capacity accounting and
+    /// eviction work in).
+    pub fn pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Blocks covering the cached context (ceil — the tail may be
+    /// partial).
+    pub fn n_blocks_ctx(&self) -> usize {
+        n_blocks(self.len, self.block)
+    }
+
+    /// Append one token's fields to the pages (block-aligned growth: a
+    /// new page only when the last one filled). The θ state is *not*
+    /// updated here — the kernel scores the new row first and then
+    /// calls [`HeadKv::update_theta`] with those scores.
+    pub fn append(&mut self, row: &TokenRow) {
+        assert_eq!(row.iq.len(), self.d_head, "iq row width");
+        assert_eq!(row.ik.len(), self.d_head, "ik row width");
+        assert_eq!(row.fk.len(), self.d_head, "fk row width");
+        assert_eq!(row.v.len(), self.d_v, "v row width");
+        if self.len == self.pages.len() * self.page_tokens {
+            self.pages.push(Page::new(self.page_tokens, self.d_head, self.d_v));
+        }
+        let page = self.pages.last_mut().expect("page just ensured");
+        let (r, dh, dv) = (page.used, self.d_head, self.d_v);
+        page.iq[r * dh..(r + 1) * dh].copy_from_slice(&row.iq);
+        page.ik[r * dh..(r + 1) * dh].copy_from_slice(&row.ik);
+        page.fk[r * dh..(r + 1) * dh].copy_from_slice(&row.fk);
+        page.v[r * dv..(r + 1) * dv].copy_from_slice(&row.v);
+        page.used += 1;
+        self.len += 1;
+    }
+
+    #[inline]
+    fn page_row(&self, i: usize) -> (&Page, usize) {
+        debug_assert!(i < self.len, "row {i} past cached length {}", self.len);
+        (&self.pages[i / self.page_tokens], i % self.page_tokens)
+    }
+
+    /// Cached integer query row `i`.
+    #[inline]
+    pub fn iq_row(&self, i: usize) -> &[f32] {
+        let (p, r) = self.page_row(i);
+        &p.iq[r * self.d_head..(r + 1) * self.d_head]
+    }
+
+    /// Cached integer key row `j`.
+    #[inline]
+    pub fn ik_row(&self, j: usize) -> &[f32] {
+        let (p, r) = self.page_row(j);
+        &p.ik[r * self.d_head..(r + 1) * self.d_head]
+    }
+
+    /// Cached fraction key row `j`.
+    #[inline]
+    pub fn fk_row(&self, j: usize) -> &[f32] {
+        let (p, r) = self.page_row(j);
+        &p.fk[r * self.d_head..(r + 1) * self.d_head]
+    }
+
+    /// Cached value row `j`.
+    #[inline]
+    pub fn v_row(&self, j: usize) -> &[f32] {
+        let (p, r) = self.page_row(j);
+        &p.v[r * self.d_v..(r + 1) * self.d_v]
+    }
+
+    /// Fold the newest token's integer scores into θ, preserving the
+    /// reference accumulation order exactly. Call once per appended
+    /// token, *after* [`HeadKv::append`], with
+    ///
+    /// * `s_row_abs[j] = |IQ_r · IK_j|` for `j in 0..len` (the new
+    ///   query row against every cached key, diagonal included), and
+    /// * `col_abs[i] = |IQ_i · IK_r|` for `i in 0..len-1` (every older
+    ///   query row against the new key column),
+    ///
+    /// where `r = len - 1` is the newest row.
+    ///
+    /// Why this is bitwise exact: the reference
+    /// (`block_importance_into`) fills a θ cell by scanning score rows
+    /// `i` ascending and, within a row, columns `j` ascending. A cell
+    /// in the growing block-*row* only ever gains entries from the new
+    /// row `r`, which is the largest `i` in its block — appending its
+    /// `|s|` terms (ascending `j`) to the running cell extends the
+    /// reference fold at its end, so the float result is identical. A
+    /// cell crossed by the growing block-*column* would need new terms
+    /// interleaved into the middle of the fold, which no incremental
+    /// update can do — so every cell of the partial tail block-column
+    /// is recomputed from scratch, in reference order, from the
+    /// retained `tail_abs` columns (at most `block` columns, dropped
+    /// once the block-column completes).
+    pub fn update_theta(&mut self, s_row_abs: &[f32], col_abs: &[f32]) {
+        let l = self.len;
+        assert!(l > 0, "update_theta before first append");
+        let r = l - 1;
+        let b = self.block;
+        assert_eq!(s_row_abs.len(), l, "score row length");
+        assert_eq!(col_abs.len(), r, "score column length");
+        let (br, nb) = (r / b, n_blocks(l, b));
+
+        // Grow the θ matrix: a new block-row and block-column appear
+        // together (the score matrix is square) when `r` opens a block.
+        if self.theta.len() < nb {
+            self.theta.push(vec![0.0; nb]);
+        }
+        for row in &mut self.theta {
+            row.resize(nb, 0.0);
+        }
+
+        // Completed block-columns of the growing block-row: append the
+        // new row's terms at the end of each cell's fold (ascending j).
+        for bj in 0..br {
+            let cell = &mut self.theta[br][bj];
+            for &s in &s_row_abs[bj * b..(bj + 1) * b] {
+                *cell += s;
+            }
+        }
+
+        // Tail block-column bookkeeping: extend the retained columns
+        // with the new row's entries, then add the new column itself.
+        if r % b == 0 {
+            self.tail_abs.clear(); // `r` opened a fresh block-column
+        } else {
+            for (t, col) in self.tail_abs.iter_mut().enumerate() {
+                col.push(s_row_abs[br * b + t]);
+            }
+        }
+        let mut col = Vec::with_capacity(l);
+        col.extend_from_slice(col_abs);
+        col.push(s_row_abs[r]); // the diagonal entry
+        self.tail_abs.push(col);
+
+        // Recompute every cell of the tail block-column in reference
+        // order (i ascending, then j ascending across the columns).
+        for bi in 0..nb {
+            let (i0, i1) = (bi * b, ((bi + 1) * b).min(l));
+            let mut acc = 0.0f32;
+            for i in i0..i1 {
+                for tail_col in &self.tail_abs {
+                    acc += tail_col[i];
+                }
+            }
+            self.theta[bi][br] = acc;
+        }
+
+        // Block-column complete: its cells are final, drop the scores.
+        if l % b == 0 {
+            self.tail_abs.clear();
+        }
+    }
+
+    /// θ row of block-row `bi` (what the decode step thresholds for
+    /// the newest query).
+    pub fn theta_row(&self, bi: usize) -> &[f32] {
+        &self.theta[bi]
+    }
+
+    /// The head statistic: θ summed in the reference's flat row-major
+    /// order (single `f32` accumulator, bitwise identical to
+    /// `theta.data().iter().sum()` over the recomputed matrix).
+    pub fn theta_head(&self) -> f32 {
+        let mut acc = 0.0f32;
+        for row in &self.theta {
+            for &t in row {
+                acc += t;
+            }
+        }
+        acc
+    }
+}
+
+/// One session's cache: the `layers × heads` grid of [`HeadKv`]s, each
+/// behind its own `Mutex` so a decode step can fan independent heads
+/// across worker threads (disjoint locks — no contention, and
+/// determinism is untouched because heads never read each other).
+#[derive(Debug)]
+pub struct KvCache {
+    n_layers: usize,
+    n_heads: usize,
+    heads: Vec<Mutex<HeadKv>>,
+}
+
+impl KvCache {
+    pub fn new(
+        n_layers: usize,
+        n_heads: usize,
+        d_head: usize,
+        d_v: usize,
+        block: usize,
+        page_tokens: usize,
+    ) -> Self {
+        assert!(n_layers > 0 && n_heads > 0, "degenerate cache geometry");
+        let heads = (0..n_layers * n_heads)
+            .map(|_| Mutex::new(HeadKv::new(d_head, d_v, block, page_tokens)))
+            .collect();
+        Self { n_layers, n_heads, heads }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.n_heads
+    }
+
+    /// The (layer, head) cell. Lock order never matters: a decode step
+    /// locks each head exactly once, disjointly.
+    pub fn head(&self, layer: usize, head: usize) -> &Mutex<HeadKv> {
+        &self.heads[layer * self.n_heads + head]
+    }
+
+    /// Cached context length (every head advances in lockstep).
+    pub fn len(&self) -> usize {
+        self.heads[0].lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total pages allocated across the grid — the store's capacity
+    /// accounting unit.
+    pub fn pages(&self) -> usize {
+        self.heads.iter().map(|h| h.lock().unwrap().pages()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::hdp::block_importance;
+    use crate::tensor::Tensor;
+    use crate::util::prop::{check, prop_assert};
+    use crate::util::rng::SplitMix64;
+
+    fn rand_row(rng: &mut SplitMix64, dh: usize, dv: usize) -> TokenRow {
+        // Integer-ish quantized fields so scores are exact; θ order
+        // still matters because |s| folds in f32.
+        fn quant(rng: &mut SplitMix64, n: usize) -> Vec<f32> {
+            (0..n).map(|_| (rng.next_normal() as f32 * 2.0).round()).collect()
+        }
+        fn frac(rng: &mut SplitMix64, n: usize) -> Vec<f32> {
+            (0..n).map(|_| rng.next_normal() as f32 * 0.25).collect()
+        }
+        let iq = quant(rng, dh);
+        let fq = frac(rng, dh);
+        let ik = quant(rng, dh);
+        let fk = frac(rng, dh);
+        let v = frac(rng, dv);
+        TokenRow { iq, fq, ik, fk, v }
+    }
+
+    fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let mut acc = 0.0f32;
+        for (x, y) in a.iter().zip(b) {
+            acc += x * y;
+        }
+        acc
+    }
+
+    /// Drive the per-step θ update the way the kernel does.
+    fn append_and_update(kv: &mut HeadKv, row: &TokenRow) {
+        kv.append(row);
+        let l = kv.len();
+        let r = l - 1;
+        let s_row_abs: Vec<f32> =
+            (0..l).map(|j| dot(&row.iq, kv.ik_row(j)).abs()).collect();
+        let col_abs: Vec<f32> =
+            (0..r).map(|i| dot(kv.iq_row(i), kv.ik_row(r)).abs()).collect();
+        kv.update_theta(&s_row_abs, &col_abs);
+    }
+
+    #[test]
+    fn pages_grow_block_aligned() {
+        let mut rng = SplitMix64::new(7);
+        let mut kv = HeadKv::new(4, 4, 2, 8);
+        assert_eq!(kv.pages(), 0);
+        for t in 1..=25 {
+            append_and_update(&mut kv, &rand_row(&mut rng, 4, 4));
+            assert_eq!(kv.len(), t);
+            assert_eq!(kv.pages(), t.div_euclid(8) + usize::from(t % 8 != 0));
+            assert_eq!(kv.n_blocks_ctx(), t / 2 + t % 2);
+        }
+        assert_eq!(kv.pages(), 4); // 25 tokens over 8-token pages
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of block")]
+    fn page_size_must_align_to_block() {
+        HeadKv::new(4, 4, 2, 7);
+    }
+
+    #[test]
+    fn rows_read_back_across_page_boundaries() {
+        let mut rng = SplitMix64::new(9);
+        let rows: Vec<TokenRow> =
+            (0..10).map(|_| rand_row(&mut rng, 3, 5)).collect();
+        let mut kv = HeadKv::new(3, 5, 2, 4);
+        for row in &rows {
+            append_and_update(&mut kv, row);
+        }
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(kv.iq_row(i), &row.iq[..], "iq row {i}");
+            assert_eq!(kv.ik_row(i), &row.ik[..], "ik row {i}");
+            assert_eq!(kv.fk_row(i), &row.fk[..], "fk row {i}");
+            assert_eq!(kv.v_row(i), &row.v[..], "v row {i}");
+        }
+    }
+
+    #[test]
+    fn prop_incremental_theta_matches_reference_bitwise() {
+        // The load-bearing invariant of the whole decode path: after
+        // every single append, the incrementally maintained θ matrix —
+        // and the flat-summed head statistic — are bitwise identical
+        // to `block_importance` recomputed from scratch over the full
+        // stacked context.
+        check("incremental theta == block_importance (bitwise)", 20, |g| {
+            let dh = *g.choice(&[3usize, 8]);
+            let block = *g.choice(&[1usize, 2, 4]);
+            let steps = g.usize(1, 17);
+            let mut rng = SplitMix64::new(g.u64(0, u64::MAX / 2));
+            let mut kv = HeadKv::new(dh, 4, block, 4 * block);
+            let mut rows: Vec<TokenRow> = Vec::new();
+            for _ in 0..steps {
+                let row = rand_row(&mut rng, dh, 4);
+                append_and_update(&mut kv, &row);
+                rows.push(row);
+                let l = rows.len();
+                let mut iq_data = Vec::with_capacity(l * dh);
+                let mut ik_data = Vec::with_capacity(l * dh);
+                for r in &rows {
+                    iq_data.extend_from_slice(&r.iq);
+                    ik_data.extend_from_slice(&r.ik);
+                }
+                let iq = Tensor::new(&[l, dh], iq_data);
+                let ik = Tensor::new(&[l, dh], ik_data);
+                let want = block_importance(&iq.matmul_nt(&ik), block);
+                let nb = kv.n_blocks_ctx();
+                prop_assert(want.rows() == nb, "theta rows")?;
+                for bi in 0..nb {
+                    let got = kv.theta_row(bi);
+                    let exp = want.row(bi);
+                    for (bj, (a, b)) in got.iter().zip(exp).enumerate() {
+                        prop_assert(
+                            a.to_bits() == b.to_bits(),
+                            format!("theta[{bi}][{bj}] {a} != {b} at l={l}"),
+                        )?;
+                    }
+                }
+                let mut flat = 0.0f32;
+                for &t in want.data() {
+                    flat += t;
+                }
+                prop_assert(
+                    kv.theta_head().to_bits() == flat.to_bits(),
+                    format!("theta_head at l={l}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn kv_cache_grid_and_page_accounting() {
+        let cache = KvCache::new(2, 3, 4, 4, 2, 4);
+        assert!(cache.is_empty());
+        let mut rng = SplitMix64::new(3);
+        let row = rand_row(&mut rng, 4, 4);
+        for layer in 0..2 {
+            for head in 0..3 {
+                cache.head(layer, head).lock().unwrap().append(&row);
+            }
+        }
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.pages(), 6, "one page per head after first token");
+    }
+}

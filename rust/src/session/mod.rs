@@ -1,0 +1,33 @@
+//! Session subsystem: block-sparse KV caching for incremental decode.
+//!
+//! One-shot serving recomputes every K/V from scratch per request; the
+//! autoregressive decode workload — where HDP's *runtime* block
+//! pruning pays off most — instead attends over a growing cached
+//! context, pruned block-by-block each step. This module is that
+//! state:
+//!
+//! * [`cache::HeadKv`] — per-(session, layer, head) paged K/V on the
+//!   quant grid plus the incrementally maintained θ state, kept in
+//!   exactly the reference accumulation order so every decode step is
+//!   bitwise identical to a full recompute
+//!   ([`crate::attention::hdp::hdp_head_reference`] over the whole
+//!   context).
+//! * [`cache::KvCache`] — one session's `layers × heads` grid of
+//!   `HeadKv`s (per-head `Mutex`es: disjoint parallel decode).
+//! * [`store::SessionStore`] — session id → cache, page-denominated
+//!   capacity accounting, and the pluggable [`store::EvictionPolicy`]
+//!   (LRU by default). Eviction drops pages, never history: an evicted
+//!   session decodes from scratch on its next step, bitwise unchanged.
+//!
+//! The decode math lives in [`crate::attention::kernel`]
+//! (`MhaKernel::decode_step`); the serving integration — session
+//! requests, sticky session→lane affinity, the `hdp serve --demo
+//! --decode` loop — lives in [`crate::coordinator`]. The end-to-end
+//! flow is mapped in ARCHITECTURE.md (§ Session / KV-cache flow) and
+//! pinned by `rust/tests/decode_conformance.rs`.
+
+pub mod cache;
+pub mod store;
+
+pub use cache::{HeadKv, KvCache, TokenRow};
+pub use store::{EvictionPolicy, KvCacheConfig, LruPolicy, SessionStore, StoreStats};

@@ -1,0 +1,387 @@
+//! Session-keyed store over the per-session [`KvCache`]s, with
+//! explicit capacity accounting and a pluggable eviction policy.
+//!
+//! The store is the serving engine's view of decode state: `checkout`
+//! a session before a decode step (creating or rebuilding its cache as
+//! needed), run the step against the returned cache, then `commit` the
+//! appended tokens — which is also where the capacity bound is
+//! enforced. Eviction is *session-granular* and drops only the heavy
+//! page state: the token history survives, so an evicted session's
+//! next decode step transparently **decodes from scratch** (the store
+//! hands back the history to replay) and produces bitwise-identical
+//! results — eviction is a performance event, never a correctness one
+//! (`rust/tests/decode_conformance.rs` pins this).
+//!
+//! Capacity is counted in **pages** (the [`KvCache`] allocation unit)
+//! across every cached session; the unit is what a real paged-KV
+//! serving system budgets, and it makes the eviction trigger exact
+//! rather than token-approximate. The policy decides *who* goes —
+//! [`LruPolicy`] (least recently `checkout`ed) is the default; the
+//! [`EvictionPolicy`] trait keeps the decision separable from the
+//! bookkeeping so cost-aware policies (largest-first, TTL) can slot in
+//! without touching the store.
+
+use std::collections::HashMap;
+
+use super::cache::KvCache;
+
+/// Geometry + budget of a session store: the per-head cache shape
+/// (mirroring the engine's native model geometry, `d_v == d_head`
+/// there), the pruning block edge, the page size in tokens (a multiple
+/// of `block` — block-aligned growth), and the total page budget
+/// across sessions (`usize::MAX` = unbounded).
+#[derive(Debug, Clone, Copy)]
+pub struct KvCacheConfig {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_v: usize,
+    pub block: usize,
+    pub page_tokens: usize,
+    pub capacity_pages: usize,
+}
+
+/// Who to evict when the page budget is exceeded. The store calls
+/// `touch` on every checkout, `forget` when a session's pages are
+/// dropped, and `victim` (excluding the session being served) until
+/// the budget holds. Implementations only rank sessions; the store
+/// owns all state mutation.
+pub trait EvictionPolicy: Send + std::fmt::Debug {
+    /// `session` was just used — most recently used from now on.
+    fn touch(&mut self, session: u64);
+    /// `session`'s pages were dropped; stop tracking it.
+    fn forget(&mut self, session: u64);
+    /// Next victim among tracked sessions, never `keep`. `None` means
+    /// nothing (else) is evictable.
+    fn victim(&mut self, keep: u64) -> Option<u64>;
+}
+
+/// Least-recently-used: a logical clock stamped per touch; the victim
+/// is the smallest stamp.
+#[derive(Debug, Default)]
+pub struct LruPolicy {
+    clock: u64,
+    stamp: HashMap<u64, u64>,
+}
+
+impl LruPolicy {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl EvictionPolicy for LruPolicy {
+    fn touch(&mut self, session: u64) {
+        self.clock += 1;
+        self.stamp.insert(session, self.clock);
+    }
+
+    fn forget(&mut self, session: u64) {
+        self.stamp.remove(&session);
+    }
+
+    fn victim(&mut self, keep: u64) -> Option<u64> {
+        self.stamp
+            .iter()
+            .filter(|(s, _)| **s != keep)
+            .min_by_key(|(_, stamp)| **stamp)
+            .map(|(s, _)| *s)
+    }
+}
+
+#[derive(Debug)]
+struct SessionEntry {
+    /// Full token history since session creation — cheap, survives
+    /// eviction, and is exactly what a decode-from-scratch rebuild
+    /// replays.
+    history: Vec<i32>,
+    /// The heavy paged state; `None` after eviction.
+    cache: Option<KvCache>,
+    /// Page count as of this session's last commit. Kept so the budget
+    /// check and the eviction loop are O(1) bookkeeping instead of
+    /// walking every cached session's per-head locks on the per-token
+    /// hot path.
+    pages: usize,
+}
+
+/// Store-lifetime counters the serving metrics surface.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    pub sessions_created: u64,
+    pub evictions: u64,
+    pub rebuilds: u64,
+}
+
+/// Session id → cache, plus the eviction machinery. See the module
+/// docs for the checkout/commit protocol.
+#[derive(Debug)]
+pub struct SessionStore {
+    cfg: KvCacheConfig,
+    sessions: HashMap<u64, SessionEntry>,
+    policy: Box<dyn EvictionPolicy>,
+    stats: StoreStats,
+    /// Σ of every entry's committed `pages` — the O(1) budget check.
+    charged_pages: usize,
+}
+
+impl SessionStore {
+    /// Store with the default [`LruPolicy`].
+    pub fn new(cfg: KvCacheConfig) -> Self {
+        Self::with_policy(cfg, Box::new(LruPolicy::new()))
+    }
+
+    pub fn with_policy(cfg: KvCacheConfig, policy: Box<dyn EvictionPolicy>) -> Self {
+        assert!(cfg.capacity_pages > 0, "page budget must admit something");
+        Self {
+            cfg,
+            sessions: HashMap::new(),
+            policy,
+            stats: StoreStats::default(),
+            charged_pages: 0,
+        }
+    }
+
+    pub fn config(&self) -> KvCacheConfig {
+        self.cfg
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        self.stats
+    }
+
+    /// Sessions known to the store (cached or evicted).
+    pub fn sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Sessions currently holding pages.
+    pub fn cached_sessions(&self) -> usize {
+        self.sessions.values().filter(|e| e.cache.is_some()).count()
+    }
+
+    /// Pages charged across every cached session, as of each session's
+    /// last commit. The engine commits immediately after appending, so
+    /// this tracks live allocation exactly at every budget-check point
+    /// — in O(1), without touching other sessions' head locks.
+    pub fn total_pages(&self) -> usize {
+        self.charged_pages
+    }
+
+    /// Committed token history of a session (empty if unknown).
+    pub fn history_len(&self, session: u64) -> usize {
+        self.sessions.get(&session).map_or(0, |e| e.history.len())
+    }
+
+    /// Check a session out for a decode step: touches the eviction
+    /// policy, creates the session on first sight, and — when the
+    /// session was evicted — allocates a fresh cache and returns the
+    /// committed history the caller must replay through the decode
+    /// path before appending new tokens (decode-from-scratch). The
+    /// returned cache reference is valid until the next `&mut`
+    /// use of the store (the caller commits afterwards).
+    pub fn checkout(&mut self, session: u64) -> (&KvCache, Vec<i32>) {
+        if !self.sessions.contains_key(&session) {
+            self.sessions.insert(
+                session,
+                SessionEntry { history: Vec::new(), cache: None, pages: 0 },
+            );
+            self.stats.sessions_created += 1;
+        }
+        self.policy.touch(session);
+        let cfg = self.cfg;
+        let entry = self.sessions.get_mut(&session).expect("just ensured");
+        let mut replay = Vec::new();
+        if entry.cache.is_none() {
+            entry.cache = Some(KvCache::new(
+                cfg.n_layers,
+                cfg.n_heads,
+                cfg.d_head,
+                cfg.d_v,
+                cfg.block,
+                cfg.page_tokens,
+            ));
+            if !entry.history.is_empty() {
+                replay = entry.history.clone();
+                self.stats.rebuilds += 1;
+            }
+        }
+        let cache = self.sessions[&session].cache.as_ref().expect("just ensured");
+        (cache, replay)
+    }
+
+    /// Record tokens appended to a checked-out session and enforce the
+    /// page budget, evicting least-recently-used *other* sessions until
+    /// it holds (the active session is never evicted under itself —
+    /// a single oversized session may exceed the budget alone).
+    pub fn commit(&mut self, session: u64, appended: &[i32]) {
+        if let Some(e) = self.sessions.get_mut(&session) {
+            e.history.extend_from_slice(appended);
+            // Re-charge only this session's pages (its heads are idle
+            // now); every other session keeps its committed count.
+            let now = e.cache.as_ref().map_or(0, KvCache::pages);
+            self.charged_pages = self.charged_pages - e.pages + now;
+            e.pages = now;
+        }
+        while self.charged_pages > self.cfg.capacity_pages {
+            let victim = match self.policy.victim(session) {
+                Some(v) => v,
+                None => break, // nothing (else) evictable: let it run
+            };
+            self.policy.forget(victim);
+            if let Some(e) = self.sessions.get_mut(&victim) {
+                if e.cache.take().is_some() {
+                    self.charged_pages -= e.pages;
+                    e.pages = 0;
+                    self.stats.evictions += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::cache::TokenRow;
+
+    fn cfg(capacity_pages: usize) -> KvCacheConfig {
+        KvCacheConfig {
+            n_layers: 1,
+            n_heads: 1,
+            d_head: 4,
+            d_v: 4,
+            block: 2,
+            page_tokens: 2,
+            capacity_pages,
+        }
+    }
+
+    fn row() -> TokenRow {
+        TokenRow {
+            iq: vec![1.0; 4],
+            fq: vec![0.0; 4],
+            ik: vec![1.0; 4],
+            fk: vec![0.0; 4],
+            v: vec![1.0; 4],
+        }
+    }
+
+    /// Append `n` tokens to every head of `session` and commit them.
+    fn grow(store: &mut SessionStore, session: u64, n: usize) {
+        let (cache, replay) = store.checkout(session);
+        assert!(replay.is_empty(), "warm session needs no replay");
+        for _ in 0..n {
+            cache.head(0, 0).lock().unwrap().append(&row());
+        }
+        store.commit(session, &vec![7i32; n]);
+    }
+
+    #[test]
+    fn lru_policy_orders_by_recency() {
+        let mut p = LruPolicy::new();
+        p.touch(1);
+        p.touch(2);
+        p.touch(3);
+        p.touch(1); // 2 is now the oldest
+        assert_eq!(p.victim(99), Some(2));
+        assert_eq!(p.victim(2), Some(3), "excluded session skipped");
+        p.forget(2);
+        assert_eq!(p.victim(99), Some(3));
+        p.forget(3);
+        p.forget(1);
+        assert_eq!(p.victim(99), None, "nothing tracked");
+    }
+
+    #[test]
+    fn capacity_evicts_lru_session_and_keeps_history() {
+        // 2-token pages, budget 4 pages: two 4-token sessions fill it;
+        // a third session evicts the least recently used (session 1).
+        let mut store = SessionStore::new(cfg(4));
+        grow(&mut store, 1, 4);
+        grow(&mut store, 2, 4);
+        assert_eq!(store.total_pages(), 4);
+        assert_eq!(store.cached_sessions(), 2);
+        grow(&mut store, 3, 2);
+        assert_eq!(store.stats().evictions, 1);
+        assert_eq!(store.cached_sessions(), 2, "one session dropped pages");
+        assert!(store.total_pages() <= 4);
+        // Session 1 lost its pages but not its history...
+        assert_eq!(store.history_len(1), 4);
+        // ...and checking it out again rebuilds: fresh cache + replay.
+        let (cache, replay) = store.checkout(1);
+        assert_eq!(replay, vec![7i32; 4], "full history handed back");
+        assert_eq!(cache.len(), 0, "fresh cache, caller replays");
+        assert_eq!(store.stats().rebuilds, 1);
+    }
+
+    #[test]
+    fn active_session_never_self_evicts() {
+        // One session alone may exceed the budget: nothing else to
+        // evict, so the store lets it run rather than thrash.
+        let mut store = SessionStore::new(cfg(2));
+        grow(&mut store, 5, 10); // 5 pages > budget 2
+        assert_eq!(store.stats().evictions, 0);
+        assert_eq!(store.total_pages(), 5);
+        // A second session now triggers eviction of the first.
+        grow(&mut store, 6, 2);
+        assert_eq!(store.stats().evictions, 1);
+        assert_eq!(store.total_pages(), 1);
+    }
+
+    #[test]
+    fn touch_order_protects_hot_sessions() {
+        let mut store = SessionStore::new(cfg(4));
+        grow(&mut store, 1, 4);
+        grow(&mut store, 2, 4);
+        // Re-touch session 1: session 2 becomes the LRU victim.
+        let _ = store.checkout(1);
+        grow(&mut store, 3, 2);
+        assert_eq!(store.history_len(2), 4);
+        let (_, replay) = store.checkout(2);
+        assert_eq!(replay.len(), 4, "evicted session 2 must replay");
+        let (_, no_replay) = store.checkout(1);
+        assert!(no_replay.is_empty(), "session 1 stayed cached");
+    }
+
+    #[test]
+    fn charged_pages_track_live_allocation() {
+        // The O(1) accounting must agree with a live walk of every
+        // cached session after each commit, across growth, eviction
+        // and rebuild.
+        let mut store = SessionStore::new(cfg(6));
+        for (s, n) in [(1u64, 3usize), (2, 5), (1, 2), (3, 4), (1, 1)] {
+            grow_any(&mut store, s, n);
+            let live: usize = store
+                .sessions
+                .values()
+                .filter_map(|e| e.cache.as_ref())
+                .map(KvCache::pages)
+                .sum();
+            assert_eq!(store.total_pages(), live, "after session {s} += {n}");
+        }
+    }
+
+    /// Like `grow`, but tolerates the session having been evicted
+    /// (replays its history first, as the engine would).
+    fn grow_any(store: &mut SessionStore, session: u64, n: usize) {
+        let (cache, replay) = store.checkout(session);
+        for _ in 0..replay.len() + n {
+            cache.head(0, 0).lock().unwrap().append(&row());
+        }
+        store.commit(session, &vec![7i32; n]);
+    }
+
+    #[test]
+    fn stats_track_creation() {
+        let mut store = SessionStore::new(cfg(usize::MAX));
+        grow(&mut store, 1, 1);
+        grow(&mut store, 1, 1);
+        grow(&mut store, 2, 1);
+        let s = store.stats();
+        assert_eq!(s.sessions_created, 2);
+        assert_eq!(s.evictions, 0);
+        assert_eq!(s.rebuilds, 0);
+        assert_eq!(store.sessions(), 2);
+        assert_eq!(store.history_len(1), 2);
+    }
+}

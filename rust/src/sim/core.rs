@@ -211,6 +211,84 @@ pub fn cost_head(
     r
 }
 
+/// Pure cost model of one *incremental decode step* for one head over
+/// a cached context of `l` tokens: the integer row+column pass against
+/// the cached integer fields (the quadratic→linear collapse a KV cache
+/// buys), the sparsity-engine θ update, and — for kept heads —
+/// FUM-gated fraction products, softmax and `P·V` for the **single
+/// query row's** kept columns. Cached pages stream from DRAM (that is
+/// what a KV cache is: state too large to pin on chip); pruned heads
+/// stop after the decision exactly as in [`cost_head`].
+pub fn cost_decode_head(
+    cfg: &SimConfig,
+    l: usize,
+    dh: usize,
+    kept_density: f32,
+    head_kept: bool,
+    use_ff: bool,
+) -> Report {
+    let mut r = Report::default();
+    let d = kept_density as f64;
+    let lf = l as f64;
+    let dhf = dh as f64;
+    let nb = (lf / cfg.block as f64).ceil();
+    let int_bytes = cfg.widths.int_field as f64 / 8.0;
+    let frac_bytes = cfg.widths.frac_field as f64 / 8.0;
+
+    // Phase 1: new-row × cached-K and cached-Q × new-column integer
+    // scores (2·l·d_h MACs — linear in context, unlike the full l²·d_h
+    // pass), with the SE folding θ for the touched block-row and
+    // block-column at stream rate.
+    let int_traffic = Traffic {
+        dram_bytes: 2.0 * (lf + 1.0) * dhf * int_bytes,
+        sram_bytes: 2.0 * (lf + 1.0) * dhf * int_bytes,
+    };
+    let row_mm = matmul_cost(cfg, 1, dh, l, MacKind::IntInt);
+    let col_mm = matmul_cost(cfg, l, dh, 1, MacKind::IntInt);
+    let se_cycles = 2.0 * nb * cfg.se_cycles_per_block;
+    let se_energy = 2.0 * nb * 2.0 * cfg.e_se_pj_per_block;
+    phase(&mut r, cfg, (row_mm.cycles + col_mm.cycles).max(se_cycles),
+          row_mm.energy_pj + col_mm.energy_pj + se_energy, int_traffic);
+    r.macs += row_mm.macs + col_mm.macs;
+
+    if !head_kept {
+        return r; // early head pruning: everything below is skipped
+    }
+
+    // Phase 2: FUM — fraction fields fetched for the kept columns of
+    // the one query row only, plus the query row's own fraction field.
+    let kept_cols = d * lf;
+    let fum = Traffic {
+        dram_bytes: (kept_cols + 1.0) * dhf * frac_bytes,
+        sram_bytes: (kept_cols + 1.0) * dhf * frac_bytes,
+    };
+    let mut frac_mm = masked_matmul_cost(cfg, 1, dh, l, d, MacKind::IntFrac);
+    frac_mm.add(masked_matmul_cost(cfg, 1, dh, l, d, MacKind::IntFrac));
+    if use_ff {
+        frac_mm.add(masked_matmul_cost(cfg, 1, dh, l, d, MacKind::FracFrac));
+    }
+    let adder_cycles = kept_cols / cfg.macs_per_cycle();
+    let adder_energy = kept_cols * 2.0 * 0.01;
+    phase(&mut r, cfg, frac_mm.cycles + adder_cycles,
+          frac_mm.energy_pj + adder_energy, fum);
+    r.macs += frac_mm.macs;
+
+    // Phase 3: softmax over the kept entries of one row.
+    let sm = softmax_cost(cfg, 1, kept_cols);
+    phase(&mut r, cfg, sm.cycles, sm.energy_pj, Traffic::default());
+
+    // Phase 4: fetch kept V rows, accumulate the one output row, write
+    // it back.
+    let v_traffic = Traffic {
+        dram_bytes: (kept_cols + 1.0) * dhf * cfg.bytes_per_elem(),
+        sram_bytes: (kept_cols + 1.0) * dhf * cfg.bytes_per_elem(),
+    };
+    let av = masked_matmul_cost(cfg, 1, l, dh, d, MacKind::Full);
+    phase(&mut r, cfg, av.cycles, av.energy_pj, v_traffic);
+    r.macs += av.macs;
+    r
+}
+
 /// Dense-attention cost of the same head on the same substrate
 /// (no SE, no masks, full-width everything) — the speedup denominator.
 pub fn cost_head_dense(cfg: &SimConfig, l: usize, dh: usize) -> Report {
@@ -343,6 +421,24 @@ mod tests {
                 format!("macs {} want {}", run.report.macs, want),
             )
         });
+    }
+
+    #[test]
+    fn decode_head_scales_linearly_not_quadratically() {
+        let cfg = SimConfig::edge();
+        let a = cost_decode_head(&cfg, 256, 32, 0.5, true, false);
+        let b = cost_decode_head(&cfg, 1024, 32, 0.5, true, false);
+        // 4x the context → ~4x the MACs (linear), nowhere near the
+        // full-recompute 16x.
+        assert!(b.macs / a.macs > 3.0 && b.macs / a.macs < 6.0,
+                "{} vs {}", a.macs, b.macs);
+        // pruned head stops after the integer/SE phase
+        let pruned = cost_decode_head(&cfg, 1024, 32, 0.5, false, false);
+        assert!(pruned.cycles < 0.7 * b.cycles);
+        assert!(pruned.dram_bytes < b.dram_bytes);
+        // exact arm costs more
+        let ff = cost_decode_head(&cfg, 1024, 32, 0.5, true, true);
+        assert!(ff.macs > b.macs && ff.energy_pj > b.energy_pj);
     }
 
     #[test]

@@ -1,0 +1,338 @@
+//! End-to-end conformance of the incremental decode path: at **every
+//! step** of a multi-step decode — prefill, single-token steps,
+//! mid-block (odd) context lengths, eviction-forced rebuilds, sticky
+//! sharding — the served outputs must be **bitwise identical** to the
+//! full-recompute reference: `hdp_head_reference` over the session's
+//! whole context (per layer × head, last query row), driven by the
+//! same per-token workload derivation (`derive_session_head_inputs`).
+//!
+//! Needs no artifacts: the native backend derives every cached token's
+//! row deterministically from `(token, position, layer, head)`.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use hdp::attention::hdp::hdp_head_reference;
+use hdp::coordinator::{derive_head_inputs, derive_session_head_inputs,
+                       pooled_label, Batcher, Engine, NativeModelConfig,
+                       Request, ServeMode, ShardedCoordinator};
+use hdp::sim::SimConfig;
+use hdp::util::rng::SplitMix64;
+
+const GEOM: NativeModelConfig =
+    NativeModelConfig { n_layers: 2, n_heads: 3, d_head: 8 };
+
+fn engine(mode: ServeMode, threads: usize, max_batch: usize) -> Engine {
+    let batcher = Arc::new(Batcher::new(max_batch, Duration::from_millis(1)));
+    Engine::new_native(GEOM, mode, SimConfig::edge(), batcher, threads).unwrap()
+}
+
+/// What the full-recompute reference says a decode response must
+/// contain after `context` has been appended: the last query row of
+/// every (layer, head), flattened, plus the pruning trail of that row.
+struct DecodeReference {
+    outputs: Vec<f32>,
+    label: i32,
+    heads_pruned: usize,
+    heads_total: usize,
+    kept_blocks: usize,
+    blocks_total: usize,
+}
+
+fn decode_reference(engine: &Engine, context: &[i32]) -> DecodeReference {
+    let p = engine.native_kernel_params().expect("native engine");
+    let profile = engine.native_profile().expect("native engine");
+    let scale = engine.calibration_scale();
+    let l = context.len();
+    let mut outputs = Vec::new();
+    let (mut pruned, mut total, mut kept, mut blocks) = (0usize, 0usize, 0usize, 0usize);
+    for layer in 0..GEOM.n_layers {
+        for head in 0..GEOM.n_heads {
+            let (iq, fq, ik, fk, v) = derive_session_head_inputs(
+                context, layer, head, GEOM.d_head, profile, scale);
+            let out = hdp_head_reference(&iq, &fq, &ik, &fk, &v, p);
+            outputs.extend_from_slice(
+                &out.out.data()[(l - 1) * GEOM.d_head..l * GEOM.d_head]);
+            total += 1;
+            pruned += usize::from(!out.head_kept);
+            let br = (l - 1) / p.block;
+            kept += out.mask.row(br).iter().filter(|&&m| m == 1.0).count();
+            blocks += out.mask.cols();
+        }
+    }
+    let label = pooled_label(&outputs);
+    DecodeReference {
+        outputs,
+        label,
+        heads_pruned: pruned,
+        heads_total: total,
+        kept_blocks: kept,
+        blocks_total: blocks,
+    }
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Drive one session through `requests` (each a token batch to append)
+/// one decode step at a time, checking the response against the
+/// full-recompute reference after every step.
+fn run_session_and_check(
+    eng: &Engine,
+    session: u64,
+    requests: Vec<Vec<i32>>,
+    ctx_label: &str,
+) {
+    let mut context: Vec<i32> = Vec::new();
+    for (i, tokens) in requests.into_iter().enumerate() {
+        context.extend_from_slice(&tokens);
+        let resp = eng
+            .serve_batch(&[Request::decode(i as u64, session, tokens)])
+            .unwrap()
+            .remove(0);
+        let want = decode_reference(eng, &context);
+        assert_eq!(resp.outputs.len(), want.outputs.len(), "{ctx_label} step {i}");
+        assert_eq!(bits(&resp.outputs), bits(&want.outputs), "{ctx_label} step {i}");
+        assert_eq!(resp.label, want.label, "{ctx_label} step {i}");
+        assert_eq!(resp.heads_pruned, want.heads_pruned, "{ctx_label} step {i}");
+        assert_eq!(resp.heads_total, want.heads_total, "{ctx_label} step {i}");
+        let want_density = want.kept_blocks as f32 / want.blocks_total as f32;
+        assert_eq!(resp.kept_density.to_bits(), want_density.to_bits(),
+                   "{ctx_label} step {i}");
+        assert_eq!(resp.context_len, context.len(), "{ctx_label} step {i}");
+        assert_eq!(resp.session, Some(session), "{ctx_label} step {i}");
+        assert!(!resp.rejected, "{ctx_label} step {i}");
+        assert!(resp.sim_seconds > 0.0, "{ctx_label} step {i}: sim timing");
+    }
+}
+
+#[test]
+fn decode_steps_match_reference_across_rho_tau_threads() {
+    // The central sweep: pruning knobs × fan-out widths, with an odd
+    // (mid-block) prefill so every second step sits on a ragged
+    // context. tau = 1e9 prunes every head: the early-exit decode path
+    // must still produce the reference's zero rows.
+    let mut rng = SplitMix64::new(0xDEC0DE);
+    for rho in [-1.0f32, 0.0, 0.4, 1.0] {
+        for tau in [f32::NEG_INFINITY, 0.0, 1e9] {
+            for threads in [1usize, 4] {
+                let mode = ServeMode::Hdp { rho, tau, qstep: 1.0 / 4096.0 };
+                let eng = engine(mode, threads, 4);
+                let mut reqs: Vec<Vec<i32>> = vec![(0..5)
+                    .map(|_| rng.next_below(30_000) as i32)
+                    .collect()];
+                for _ in 0..6 {
+                    reqs.push(vec![rng.next_below(30_000) as i32]);
+                }
+                run_session_and_check(
+                    &eng, 3, reqs,
+                    &format!("rho={rho} tau={tau} threads={threads}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dense_q12_and_calibrated_sessions_conform() {
+    let mut rng = SplitMix64::new(0xCAFE);
+    let mut mk_reqs = || {
+        let mut reqs: Vec<Vec<i32>> =
+            vec![(0..4).map(|_| rng.next_below(30_000) as i32).collect()];
+        for _ in 0..5 {
+            reqs.push(vec![rng.next_below(30_000) as i32]);
+        }
+        reqs
+    };
+    // Dense mode: every block and head kept, exact FQ·FK term.
+    run_session_and_check(&engine(ServeMode::Dense, 2, 2), 1, mk_reqs(), "dense");
+    // 12-bit front-end profile routes through Q4_8.
+    let q12 = ServeMode::Hdp { rho: 0.3, tau: 0.0, qstep: 1.0 / 256.0 };
+    run_session_and_check(&engine(q12, 2, 2), 2, mk_reqs(), "q12");
+    // Satellite: a calibrated (non-unit-scale) workload rides the
+    // decode path — the per-task inv_scale plumbing end to end.
+    let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
+    let cal = engine(mode, 2, 2).with_calibration(1.7);
+    assert_ne!(cal.native_kernel_params().unwrap().inv_scale,
+               engine(mode, 2, 2).native_kernel_params().unwrap().inv_scale,
+               "calibration changes the effective inv_scale");
+    run_session_and_check(&cal, 3, mk_reqs(), "calibrated");
+}
+
+#[test]
+fn mixed_oneshot_and_decode_batch_conforms() {
+    // One-shots and decode steps co-batched: each answers exactly its
+    // own reference, and batch composition changes nothing.
+    let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
+    let eng = engine(mode, 4, 4);
+    let mut rng = SplitMix64::new(0x717);
+    let oneshot = Request::oneshot(
+        0, (0..16).map(|_| rng.next_below(30_000) as i32).collect());
+    let oneshot_tokens = oneshot.tokens.clone();
+    let resps = eng
+        .serve_batch(&[
+            oneshot,
+            Request::decode(1, 10, vec![5, 6, 7]),
+            Request::decode(2, 11, vec![9]),
+        ])
+        .unwrap();
+    assert_eq!(resps.len(), 3);
+    // the one-shot matches the batched-path reference
+    let p = eng.native_kernel_params().unwrap();
+    let profile = eng.native_profile().unwrap();
+    let mut want_oneshot = Vec::new();
+    for layer in 0..GEOM.n_layers {
+        for head in 0..GEOM.n_heads {
+            let (iq, fq, ik, fk, v) = derive_head_inputs(
+                &oneshot_tokens, layer, head, GEOM.d_head, profile);
+            let o = hdp_head_reference(&iq, &fq, &ik, &fk, &v, p);
+            want_oneshot.extend_from_slice(o.out.data());
+        }
+    }
+    assert_eq!(bits(&resps[0].outputs), bits(&want_oneshot));
+    assert_eq!(resps[0].session, None);
+    assert_eq!(resps[0].context_len, 0);
+    // each decode step matches its session's reference
+    let w1 = decode_reference(&eng, &[5, 6, 7]);
+    assert_eq!(bits(&resps[1].outputs), bits(&w1.outputs));
+    assert_eq!(resps[1].context_len, 3);
+    let w2 = decode_reference(&eng, &[9]);
+    assert_eq!(bits(&resps[2].outputs), bits(&w2.outputs));
+    assert_eq!(resps[2].context_len, 1);
+}
+
+#[test]
+fn sticky_sharded_decode_bitwise_across_shard_counts() {
+    // Shards ∈ {1, 2, 4} with sticky session→lane affinity: every
+    // response is bitwise the full-recompute reference of its session
+    // prefix, and therefore identical across shard counts. Which lane
+    // owns which session varies with N; outputs may not.
+    let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
+    let n_sessions = 3u64;
+    let mut rng = SplitMix64::new(0x5EED);
+    // Deterministic schedule: per-session prefill (3..5 tokens — two of
+    // them mid-block), then 5 interleaved single-token rounds.
+    let mut schedule: Vec<(u64, Vec<i32>)> = Vec::new();
+    for s in 0..n_sessions {
+        let n = 3 + (s as usize % 3);
+        schedule.push((s, (0..n).map(|_| rng.next_below(30_000) as i32).collect()));
+    }
+    for _ in 0..5 {
+        for s in 0..n_sessions {
+            schedule.push((s, vec![rng.next_below(30_000) as i32]));
+        }
+    }
+    let total = schedule.len();
+    // Request id → the session context prefix it must answer for.
+    let mut ctx: HashMap<u64, Vec<i32>> = HashMap::new();
+    let prefixes: Vec<Vec<i32>> = schedule
+        .iter()
+        .map(|(s, toks)| {
+            let c = ctx.entry(*s).or_default();
+            c.extend_from_slice(toks);
+            c.clone()
+        })
+        .collect();
+    let ref_eng = engine(mode, 1, 4);
+    let refs: Vec<DecodeReference> =
+        prefixes.iter().map(|c| decode_reference(&ref_eng, c)).collect();
+    let mut baseline: Option<Vec<(u64, Vec<u32>)>> = None;
+    for shards in [1usize, 2, 4] {
+        let coord = ShardedCoordinator::new_native_sticky(
+            shards, GEOM, mode, SimConfig::edge(),
+            4, Duration::from_millis(1), 0, 2, usize::MAX, 1.0,
+        )
+        .unwrap();
+        let router = coord.router().expect("sticky router");
+        let producer = {
+            let schedule = schedule.clone();
+            let router = router.clone();
+            std::thread::spawn(move || {
+                for (id, (s, toks)) in schedule.into_iter().enumerate() {
+                    router.submit(Request::decode(id as u64, s, toks)).unwrap();
+                }
+                router.close();
+            })
+        };
+        let report = coord.run().unwrap();
+        producer.join().unwrap();
+        assert_eq!(report.responses.len(), total, "shards={shards}");
+        assert!(report.lane_errors.is_empty(), "shards={shards}");
+        let mut got: Vec<(u64, Vec<u32>)> = report
+            .responses
+            .iter()
+            .map(|r| {
+                assert!(!r.rejected, "shards={shards}");
+                (r.id, bits(&r.outputs))
+            })
+            .collect();
+        got.sort_by_key(|(id, _)| *id);
+        for (id, got_bits) in &got {
+            let want = &refs[*id as usize];
+            assert_eq!(got_bits, &bits(&want.outputs), "shards={shards} req {id}");
+        }
+        assert_eq!(report.metrics.decode_requests() as usize, total,
+                   "shards={shards}");
+        match &baseline {
+            None => baseline = Some(got),
+            Some(b) => assert_eq!(b, &got, "shards={shards} diverged"),
+        }
+    }
+}
+
+#[test]
+fn evicted_sessions_decode_from_scratch_bitwise() {
+    // A page budget that fits exactly one session: alternating between
+    // two sessions forces an eviction + decode-from-scratch rebuild on
+    // nearly every step — and every output must stay bitwise identical
+    // to the reference (eviction is a performance event, never a
+    // correctness one).
+    let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
+    // GEOM = 2 layers × 3 heads = 6 HeadKvs per session ⇒ ≥ 6 pages.
+    let eng = engine(mode, 2, 4).with_kv_capacity(6);
+    let mut rng = SplitMix64::new(77);
+    let next = |n: usize, rng: &mut SplitMix64| -> Vec<i32> {
+        (0..n).map(|_| rng.next_below(30_000) as i32).collect()
+    };
+    let mut ctx_a: Vec<i32> = Vec::new();
+    let mut ctx_b: Vec<i32> = Vec::new();
+    let mut id = 0u64;
+    for round in 0..4 {
+        for (sess, ctx) in [(100u64, &mut ctx_a), (200u64, &mut ctx_b)] {
+            let toks = next(if round == 0 { 4 } else { 1 }, &mut rng);
+            ctx.extend_from_slice(&toks);
+            let resp = eng
+                .serve_batch(&[Request::decode(id, sess, toks)])
+                .unwrap()
+                .remove(0);
+            id += 1;
+            let want = decode_reference(&eng, ctx);
+            assert_eq!(bits(&resp.outputs), bits(&want.outputs),
+                       "session {sess} round {round}");
+            assert_eq!(resp.context_len, ctx.len());
+        }
+    }
+    let stats = eng.session_stats().unwrap();
+    assert!(stats.evictions >= 3, "expected evictions under budget: {stats:?}");
+    assert!(stats.rebuilds >= 3, "expected rebuilds after eviction: {stats:?}");
+    assert_eq!(stats.sessions_created, 2);
+}
+
+#[test]
+fn invalid_decode_requests_reject_without_touching_state() {
+    let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
+    let eng = engine(mode, 1, 2);
+    // empty decode request: the whole batch is refused up front...
+    assert!(eng.serve_batch(&[Request::decode(0, 5, vec![])]).is_err());
+    // ...and no session state was advanced: a valid step still answers
+    // the from-scratch reference.
+    let resp = eng
+        .serve_batch(&[Request::decode(1, 5, vec![3, 4])])
+        .unwrap()
+        .remove(0);
+    let want = decode_reference(&eng, &[3, 4]);
+    assert_eq!(bits(&resp.outputs), bits(&want.outputs));
+    assert_eq!(resp.context_len, 2);
+}

@@ -251,11 +251,10 @@ fn serving_engine_end_to_end() {
             let mut stream = Stream::new(Dataset::Sst2s, Split::Eval, seq_len, 1);
             for id in 0..80u64 {
                 let ex = stream.next_example();
-                b.submit(Request {
+                b.submit(Request::oneshot(
                     id,
-                    tokens: ex.tokens.iter().map(|&t| t as i32).collect(),
-                    enqueued: std::time::Instant::now(),
-                })
+                    ex.tokens.iter().map(|&t| t as i32).collect(),
+                ))
                 .unwrap();
             }
             b.close();

@@ -11,7 +11,7 @@
 //! workload deterministically from its tokens (`derive_head_inputs`).
 
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use hdp::attention::hdp::hdp_head_reference;
 use hdp::coordinator::{derive_head_inputs, pooled_label, Batcher, Engine,
@@ -30,11 +30,10 @@ fn engine(mode: ServeMode, threads: usize, max_batch: usize) -> Engine {
 
 fn request(id: u64, seq_len: usize) -> Request {
     let mut rng = SplitMix64::new(0xBEEF ^ id);
-    Request {
+    Request::oneshot(
         id,
-        tokens: (0..seq_len).map(|_| rng.next_below(30_000) as i32).collect(),
-        enqueued: Instant::now(),
-    }
+        (0..seq_len).map(|_| rng.next_below(30_000) as i32).collect(),
+    )
 }
 
 /// What sequential single-request reference execution says one request's
@@ -365,7 +364,7 @@ fn sharded_rejection_path_bitwise_equal_across_shard_counts() {
         let mut rejections: Vec<Response> = Vec::new();
         for r in &reqs {
             if let Err(back) = batcher.submit(r.clone()) {
-                rejections.push(Response::reject(back.id, back.enqueued));
+                rejections.push(Response::reject(&back));
             }
         }
         batcher.close();

@@ -4,17 +4,21 @@
 #
 #   scripts/bench.sh [attention_out.json] [--quick]
 #
-# Writes BENCH_attention.json (bench_micro: kernel + substrate ops) and
+# Writes BENCH_attention.json (bench_micro: kernel + substrate ops),
 # BENCH_serving.json (bench_serving: native serve_batch throughput vs
-# batch size, plus sharded-coordinator throughput vs shard count), each
-# with one record per op: {op, ns_per_iter, p50_ns, p95_ns,
-# throughput_per_s, unit}. Headlines to watch:
+# batch size, plus sharded-coordinator throughput vs shard count) and
+# BENCH_decode.json (bench_decode: cached decode_step tokens/sec vs
+# context length against full recompute), each with one record per op:
+# {op, ns_per_iter, p50_ns, p95_ns, throughput_per_s, unit}. Headlines
+# to watch:
 #   * `kernel.head_ws 128x64 rho=0.9` must stay >= 3x faster than
 #     `... rho=0.0` (sparse-first scaling);
 #   * `serve_batch b=8 (batched pool)` must stay >= 2x the throughput
 #     of `serve b=8 (sequential 1-at-a-time)` (batch-level fan-out);
 #   * `serve_sharded shards=4 b=8` must stay >= 1.5x the throughput of
-#     `serve_sharded shards=1 b=8` on a multi-core runner (lane scaling).
+#     `serve_sharded shards=1 b=8` on a multi-core runner (lane scaling);
+#   * `decode_step ctx=1024 (cached)` must stay >= 3x the throughput of
+#     `full_recompute ctx=1024 (one token)` (KV-cache decode scaling).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -29,3 +33,6 @@ echo "bench results written to $out"
 
 cargo bench --bench bench_serving -- --json BENCH_serving.json "$@"
 echo "serving bench results written to BENCH_serving.json"
+
+cargo bench --bench bench_decode -- --json BENCH_decode.json "$@"
+echo "decode bench results written to BENCH_decode.json"

@@ -11,11 +11,17 @@ cd "$(dirname "$0")/.."
 cargo build --release --all-targets
 
 cargo test -q --lib --bins
+# Decode conformance as its own named gate: every incremental decode
+# step (prefill, mid-block lengths, eviction rebuilds, sticky shards)
+# must be bitwise identical to the full-recompute reference — a failure
+# here must identify itself, not hide inside the glob below.
+cargo test -q --test decode_conformance
 # Integration harnesses as an explicit second gate (auto-discovers any
 # future file under rust/tests/): serve_conformance proves the batched
 # native serving path is bitwise identical to sequential reference
-# execution; sim_cross_validation and pjrt_roundtrip cover the PJRT
-# artifacts (they self-skip when artifacts/ is absent).
+# execution; decode_conformance pins the session/KV-cache decode path;
+# sim_cross_validation and pjrt_roundtrip cover the PJRT artifacts
+# (they self-skip when artifacts/ is absent).
 cargo test -q --test '*'
 
 if cargo clippy --version >/dev/null 2>&1; then
