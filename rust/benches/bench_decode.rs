@@ -1,20 +1,30 @@
 //! Decode-path benchmark: cached `MhaKernel::decode_step` tokens/sec
 //! as a function of context length, against recomputing the full
 //! context from scratch for every generated token (what serving had to
-//! do before the session KV cache). `scripts/bench.sh` archives the
-//! curves as `BENCH_decode.json`; the headline to watch is the cached
-//! step beating full recompute by **≥ 3× at 1k context** (the
-//! quadratic→linear collapse leaves far more in practice).
+//! do before the session KV cache) — plus the **batched decode
+//! fan-out** series: one popped batch of b single-token steps from b
+//! sessions through `MhaKernel::decode_batch` (sessions × layers ×
+//! heads in one pool) vs the same b steps served one pop at a time.
+//! `scripts/bench.sh` archives the curves as `BENCH_decode.json`; the
+//! headlines to watch are the cached step beating full recompute by
+//! **≥ 3× at 1k context** (the quadratic→linear collapse leaves far
+//! more in practice) and `decode_batch b=8` beating the sequential
+//! pops by **≥ 2×** on a multi-core runner.
 //!
 //! ```sh
 //! cargo bench --bench bench_decode -- --json BENCH_decode.json
 //! ```
 
+use std::sync::Arc;
+use std::time::Duration;
+
 use hdp::attention::hdp::HdpParams;
 use hdp::attention::kernel::MhaKernel;
-use hdp::coordinator::{derive_session_head_inputs, derive_token_row};
+use hdp::coordinator::{derive_session_head_inputs, derive_token_row, Batcher,
+                       Engine, NativeModelConfig, Request, ServeMode};
 use hdp::fixed::QuantProfile;
 use hdp::session::HeadKv;
+use hdp::sim::SimConfig;
 use hdp::util::bench::{measurements_json, Bench, Measurement};
 
 const DH: usize = 32;
@@ -92,7 +102,78 @@ fn main() {
         ));
     }
 
-    // Headline: cached vs full recompute at the 1k context.
+    // == batched decode fan-out vs sequential per-request pops ==
+    // b sessions each prefilled to a working context; one timed
+    // iteration appends one token to every session — either as a
+    // single popped batch of b decode steps (the sessions × layers ×
+    // heads fan-out) or as b sequential single-request pops (the
+    // pre-batching serving shape). Both series grow their contexts at
+    // the same rate, so the comparison stays fair across samples.
+    const GEOM: NativeModelConfig =
+        NativeModelConfig { n_layers: 2, n_heads: 2, d_head: 32 };
+    const PREFILL: usize = 128;
+    let decode_engine = |max_batch: usize| -> Engine {
+        let batcher =
+            Arc::new(Batcher::new(max_batch, Duration::from_millis(1)));
+        let mode = ServeMode::Hdp { rho: 0.5, tau: -1.0, qstep: 1.0 / 4096.0 };
+        Engine::new_native(GEOM, mode, SimConfig::edge(), batcher, 0)
+            .unwrap()
+            .with_raw_outputs(false)
+    };
+    println!("\n== batched decode fan-out: b sessions x 1-token steps \
+              ({} layers x {} heads, d_head {}, prefill {PREFILL}) ==",
+             GEOM.n_layers, GEOM.n_heads, GEOM.d_head);
+    for &bsz in &[1usize, 4, 8] {
+        let prefill_sessions = |eng: &Engine, id: &mut u64| {
+            for s in 0..bsz as u64 {
+                let tokens: Vec<i32> =
+                    (0..PREFILL).map(|i| (i % 30_000) as i32).collect();
+                eng.serve_batch(&[Request::decode(*id, s, tokens)]).unwrap();
+                *id += 1;
+            }
+        };
+        // One pop of b steps (one per session) through the batched
+        // sessions × layers × heads fan-out.
+        let eng = decode_engine(bsz);
+        let mut id = 0u64;
+        prefill_sessions(&eng, &mut id);
+        let mut tok = 0i32;
+        ms.push(b.run_throughput(
+            &format!("decode_batch b={bsz} sessions={bsz} (one fan-out)"),
+            bsz as f64, "tok",
+            || {
+                let batch: Vec<Request> = (0..bsz as u64)
+                    .map(|s| {
+                        id += 1;
+                        tok = (tok + 1) % 30_000;
+                        Request::decode(id, s, vec![tok])
+                    })
+                    .collect();
+                eng.serve_batch(&batch).unwrap()
+            },
+        ));
+        // The same b steps served one pop at a time — the serial
+        // per-request decode loop the fan-out replaces.
+        let eng = decode_engine(bsz);
+        let mut id = 0u64;
+        prefill_sessions(&eng, &mut id);
+        let mut tok = 0i32;
+        ms.push(b.run_throughput(
+            &format!("decode_one b={bsz} (sequential x{bsz})"),
+            bsz as f64, "tok",
+            || {
+                for s in 0..bsz as u64 {
+                    id += 1;
+                    tok = (tok + 1) % 30_000;
+                    eng.serve_batch(&[Request::decode(id, s, vec![tok])])
+                        .unwrap();
+                }
+            },
+        ));
+    }
+
+    // Headlines: cached vs full recompute at the 1k context, and the
+    // batched fan-out vs sequential pops at b=8.
     let find = |needle: &str| -> Option<f64> {
         ms.iter().find(|m| m.name.contains(needle)).map(Measurement::mean)
     };
@@ -101,6 +182,13 @@ fn main() {
     {
         println!("\ncached decode_step speedup over full recompute at 1k \
                   context: {:.1}x (target >= 3x)", full / cached);
+    }
+    if let (Some(batched), Some(seq)) =
+        (find("decode_batch b=8"), find("decode_one b=8"))
+    {
+        println!("batched decode fan-out speedup over sequential pops at \
+                  b=8: {:.1}x (target >= 2x on a multi-core runner)",
+                 seq / batched);
     }
 
     if let Some(path) = json_path {

@@ -66,7 +66,7 @@ use crate::attention::hdp::{
     block_importance_into, hw_exp, hw_reciprocal, n_blocks, row_threshold, HdpHeadOutput,
     HdpParams, NEG_INF,
 };
-use crate::session::{HeadKv, TokenRow};
+use crate::session::{HeadKv, KvCache, TokenRow};
 use crate::tensor::Tensor;
 use crate::util::threadpool::{configured_threads, parallel_map_with};
 
@@ -664,6 +664,30 @@ pub struct DecodeRow {
     pub blocks_total: usize,
 }
 
+/// One session's share of a batched decode fan-out — the unit
+/// [`MhaKernel::decode_batch`] flattens into per-(session, layer, head)
+/// tasks over the shared worker pool.
+///
+/// * `cache` — the session's `layers × heads` grid of per-head-locked
+///   [`HeadKv`]s; each task locks exactly its own head, so tasks from
+///   *different* sessions (and different heads of one session) run
+///   concurrently without contention.
+/// * `replay` — tokens to re-append state-only before any step (the
+///   eviction decode-from-scratch rebuild; empty for a warm session).
+/// * `steps` — the session's decode requests in arrival order: each
+///   group appends its tokens and the group's **last** token produces
+///   an output row. Same-session order is preserved because one task
+///   owns the head for all of its session's steps.
+/// * `inv_scale` — per-session calibration override of
+///   [`HdpParams::inv_scale`] (`None` = the kernel's configured value).
+#[derive(Debug)]
+pub struct DecodeTask<'a> {
+    pub cache: &'a KvCache,
+    pub replay: &'a [i32],
+    pub steps: &'a [&'a [i32]],
+    pub inv_scale: Option<f32>,
+}
+
 /// Borrowed references to one head's inputs: `(iq, fq, ik, fk, v)`.
 pub type HeadRefs<'a> = (&'a Tensor, &'a Tensor, &'a Tensor, &'a Tensor, &'a Tensor);
 
@@ -902,6 +926,101 @@ impl MhaKernel {
     pub fn decode_append(&self, kv: &mut HeadKv, row: &TokenRow) {
         let mut pooled = PooledWorkspace::take(&self.pool);
         pooled.get().decode_append(kv, row, self.params);
+    }
+
+    /// Execute a whole batch of decode steps — every popped decode
+    /// request of every session — as **one** fan-out over the shared
+    /// worker pool, mirroring [`Self::forward_batch`]: the task list is
+    /// the flattened `sessions × layers × heads` grid, each worker
+    /// checks a [`Workspace`] arena out of the pool for its entire task
+    /// loop, and each task locks exactly its own [`HeadKv`] (disjoint
+    /// per-head `Mutex`es, across sessions too — no contention). One
+    /// task owns its (session, layer, head) for *all* of that session's
+    /// steps in the batch, so same-session steps stay sequential in
+    /// arrival order while everything else proceeds concurrently — the
+    /// cross-session parallelism a serial per-request decode loop
+    /// leaves on the table.
+    ///
+    /// `derive(token, pos, layer, head)` produces the cached row fields
+    /// (the engine's per-token workload derivation); it must be a pure
+    /// function so every task derives identical rows regardless of
+    /// scheduling.
+    ///
+    /// Returns, per task, per step (arrival order), the
+    /// `layers × heads` [`DecodeRow`]s in layer-major order — bitwise
+    /// identical to running each session's steps alone through
+    /// [`Self::decode_step`] / [`Self::decode_append`], for any batch
+    /// composition or thread count (each (session, head) trajectory is
+    /// an independent pure function of its tokens; pinned by the unit
+    /// test here and end-to-end by `rust/tests/decode_conformance.rs`).
+    pub fn decode_batch(
+        &self,
+        tasks: &[DecodeTask<'_>],
+        derive: impl Fn(i32, usize, usize, usize) -> TokenRow + Sync,
+    ) -> Vec<Vec<Vec<DecodeRow>>> {
+        // Flat spans: task `ti` owns flat indices
+        // `starts[ti] .. starts[ti] + layers×heads`.
+        let mut starts = Vec::with_capacity(tasks.len());
+        let mut total = 0usize;
+        for t in tasks {
+            starts.push(total);
+            total += t.cache.n_layers() * t.cache.n_heads();
+        }
+        let flat: Vec<Vec<DecodeRow>> = parallel_map_with(
+            total,
+            self.threads,
+            || PooledWorkspace::take(&self.pool),
+            |pooled, g| {
+                let ti = starts.partition_point(|&s| s <= g) - 1;
+                let task = &tasks[ti];
+                let n_heads = task.cache.n_heads();
+                let lh = g - starts[ti];
+                let (layer, head) = (lh / n_heads, lh % n_heads);
+                let p = HdpParams {
+                    inv_scale: task.inv_scale.unwrap_or(self.params.inv_scale),
+                    ..self.params
+                };
+                let ws = pooled.get();
+                let mut kv = task.cache.head(layer, head).lock().unwrap();
+                for &tok in task.replay {
+                    let row = derive(tok, kv.len(), layer, head);
+                    ws.decode_append(&mut kv, &row, p);
+                }
+                let mut rows = Vec::with_capacity(task.steps.len());
+                for step in task.steps {
+                    assert!(!step.is_empty(), "decode step with no tokens");
+                    for (k, &tok) in step.iter().enumerate() {
+                        let row = derive(tok, kv.len(), layer, head);
+                        if k + 1 == step.len() {
+                            rows.push(ws.decode_step(&mut kv, &row, p));
+                        } else {
+                            ws.decode_append(&mut kv, &row, p);
+                        }
+                    }
+                }
+                rows
+            },
+        );
+        // Regroup [flat grid task][step] → [task][step][layer-major
+        // head], moving every row exactly once.
+        let mut flat = flat.into_iter();
+        tasks
+            .iter()
+            .map(|task| {
+                let grid = task.cache.n_layers() * task.cache.n_heads();
+                let mut per_step: Vec<Vec<DecodeRow>> = (0..task.steps.len())
+                    .map(|_| Vec::with_capacity(grid))
+                    .collect();
+                for _ in 0..grid {
+                    let rows = flat.next().expect("flat results aligned");
+                    debug_assert_eq!(rows.len(), task.steps.len());
+                    for (slot, row) in per_step.iter_mut().zip(rows) {
+                        slot.push(row);
+                    }
+                }
+                per_step
+            })
+            .collect()
     }
 }
 
@@ -1317,6 +1436,174 @@ mod tests {
         assert_eq!(a.theta_head.to_bits(), last_b.theta_head.to_bits());
         assert_eq!(a.kept_blocks, last_b.kept_blocks);
         assert_eq!(kv_a.len(), kv_b.len());
+    }
+
+    /// Deterministic per-(token, pos, layer, head) row derivation for
+    /// the decode_batch tests — the kernel-side stand-in for the
+    /// engine's `derive_token_row` (pure, so any schedule derives
+    /// identical rows).
+    fn derive_test_row(tok: i32, pos: usize, layer: usize, head: usize,
+                       dh: usize, dv: usize) -> TokenRow {
+        let seed = 0xABCD_EF01u64
+            ^ ((layer as u64) << 40)
+            ^ ((head as u64) << 24)
+            ^ ((pos as u64) << 8)
+            ^ (tok as u32 as u64);
+        let mut rng = SplitMix64::new(seed);
+        let prof = QuantProfile::Q4_12;
+        let mut field = |w: usize| {
+            let mut ints = Vec::with_capacity(w);
+            let mut fracs = Vec::with_capacity(w);
+            for _ in 0..w {
+                let f = crate::fixed::split(crate::fixed::quantize(
+                    rng.next_normal() as f32 * 1.5, 1.0, prof));
+                ints.push(f.int_part);
+                fracs.push(f.frac_part);
+            }
+            (ints, fracs)
+        };
+        let (iq, fq) = field(dh);
+        let (ik, fk) = field(dh);
+        let v = (0..dv).map(|_| rng.next_normal() as f32).collect();
+        TokenRow { iq, fq, ik, fk, v }
+    }
+
+    #[test]
+    fn decode_batch_matches_sequential_decode_steps_bitwise() {
+        // The batched fan-out contract at kernel level: flattening
+        // several sessions' step groups (replay included) into one
+        // pool must reproduce, bit for bit, each session stepped alone
+        // through decode_append/decode_step — for any thread count.
+        let (dh, dv, layers, heads) = (8usize, 8usize, 2usize, 2usize);
+        let p = params(0.4, 0.0, 0.05);
+        let derive =
+            |tok: i32, pos: usize, layer: usize, head: usize| -> TokenRow {
+                derive_test_row(tok, pos, layer, head, dh, dv)
+            };
+        // Session shapes: multi-step, single-step, and evicted-replay.
+        let replays: [&[i32]; 3] = [&[], &[], &[11, 12, 13]];
+        let steps: [Vec<Vec<i32>>; 3] = [
+            vec![vec![1, 2, 3], vec![4], vec![5]],
+            vec![vec![9]],
+            vec![vec![7, 8], vec![1]],
+        ];
+        let mut baseline: Option<Vec<Vec<Vec<DecodeRow>>>> = None;
+        for threads in [1usize, 4] {
+            let kernel = MhaKernel::new(p).with_threads(threads);
+            let caches: Vec<KvCache> = (0..3)
+                .map(|_| KvCache::new(layers, heads, dh, dv, p.block, p.block * 4))
+                .collect();
+            let step_refs: Vec<Vec<&[i32]>> = steps
+                .iter()
+                .map(|g| g.iter().map(|s| s.as_slice()).collect())
+                .collect();
+            let tasks: Vec<DecodeTask> = caches
+                .iter()
+                .zip(&replays)
+                .zip(&step_refs)
+                .map(|((cache, &replay), steps)| DecodeTask {
+                    cache,
+                    replay,
+                    steps: steps.as_slice(),
+                    inv_scale: None,
+                })
+                .collect();
+            let got = kernel.decode_batch(&tasks, derive);
+            assert_eq!(got.len(), 3);
+            // Sequential reference: each session alone, head by head.
+            for (si, (replay, groups)) in replays.iter().zip(&steps).enumerate() {
+                let kv_ref = KvCache::new(layers, heads, dh, dv, p.block, p.block * 4);
+                let seq = MhaKernel::new(p).with_threads(1);
+                for layer in 0..layers {
+                    for head in 0..heads {
+                        let mut kv = kv_ref.head(layer, head).lock().unwrap();
+                        for &tok in *replay {
+                            seq.decode_append(&mut kv, &derive(tok, kv.len(), layer, head));
+                        }
+                        for (gi, group) in groups.iter().enumerate() {
+                            let mut last = None;
+                            for (k, &tok) in group.iter().enumerate() {
+                                let row = derive(tok, kv.len(), layer, head);
+                                if k + 1 == group.len() {
+                                    last = Some(seq.decode_step(&mut kv, &row, None));
+                                } else {
+                                    seq.decode_append(&mut kv, &row);
+                                }
+                            }
+                            let want = last.expect("nonempty group");
+                            let b = &got[si][gi][layer * heads + head];
+                            assert_eq!(
+                                b.out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                                want.out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                                "threads={threads} session {si} step {gi} l{layer} h{head}"
+                            );
+                            assert_eq!(b.theta_head.to_bits(), want.theta_head.to_bits());
+                            assert_eq!(b.head_kept, want.head_kept);
+                            assert_eq!(b.kept_blocks, want.kept_blocks);
+                            assert_eq!(b.blocks_total, want.blocks_total);
+                        }
+                    }
+                }
+                // batched caches advanced exactly as far as the reference
+                assert_eq!(caches[si].len(), kv_ref.len(), "session {si}");
+            }
+            // ...and thread counts agree with each other bitwise.
+            let view: Vec<Vec<Vec<DecodeRow>>> = got;
+            match &baseline {
+                None => baseline = Some(view),
+                Some(b) => {
+                    for (x, y) in b.iter().flatten().flatten()
+                        .zip(view.iter().flatten().flatten())
+                    {
+                        assert_eq!(
+                            x.out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                            y.out.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_batch_empty_and_per_task_inv_scale() {
+        let p = params(0.4, 0.0, 0.05);
+        let kernel = MhaKernel::new(p).with_threads(2);
+        let derive = |tok: i32, pos: usize, layer: usize, head: usize| {
+            derive_test_row(tok, pos, layer, head, 8, 8)
+        };
+        assert!(kernel.decode_batch(&[], &derive).is_empty());
+        // A calibrated session in the batch matches a kernel configured
+        // with that inv_scale outright; the unit-scale one is unmoved.
+        let mk_cache = || KvCache::new(1, 1, 8, 8, p.block, p.block * 4);
+        let (ca, cb) = (mk_cache(), mk_cache());
+        let toks: Vec<i32> = vec![3, 1, 4, 1, 5];
+        let groups: Vec<&[i32]> = vec![&toks];
+        let tasks = vec![
+            DecodeTask { cache: &ca, replay: &[], steps: &groups[..], inv_scale: None },
+            DecodeTask { cache: &cb, replay: &[], steps: &groups[..], inv_scale: Some(0.11) },
+        ];
+        let got = kernel.decode_batch(&tasks, derive);
+        for (cache, kp) in [(mk_cache(), p), (mk_cache(), params(0.4, 0.0, 0.11))] {
+            let seq = MhaKernel::new(kp).with_threads(1);
+            let mut kv = cache.head(0, 0).lock().unwrap();
+            let mut last = None;
+            for (k, &tok) in toks.iter().enumerate() {
+                let row = derive(tok, kv.len(), 0, 0);
+                if k + 1 == toks.len() {
+                    last = Some(seq.decode_step(&mut kv, &row, None));
+                } else {
+                    seq.decode_append(&mut kv, &row);
+                }
+            }
+            let want = last.unwrap();
+            let idx = usize::from(kp.inv_scale != p.inv_scale);
+            assert_eq!(
+                got[idx][0][0].out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                want.out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "task {idx}"
+            );
+        }
     }
 
     #[test]

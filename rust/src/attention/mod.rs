@@ -13,7 +13,7 @@ pub mod reference;
 pub mod topk;
 
 pub use hdp::{hdp_head, HdpHeadOutput, HdpParams};
-pub use kernel::{BatchRequest, DecodeRow, HeadOutput, HeadRefs, MhaKernel,
-                 RequestOutput, RequestStats, Workspace};
+pub use kernel::{BatchRequest, DecodeRow, DecodeTask, HeadOutput, HeadRefs,
+                 MhaKernel, RequestOutput, RequestStats, Workspace};
 pub use reference::dense_head;
 pub use topk::topk_head;

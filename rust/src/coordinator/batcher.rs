@@ -43,7 +43,13 @@ use std::time::{Duration, Instant};
 ///   and the response answers the last appended token's attention.
 ///   Same-session steps must be submitted in order; the sticky
 ///   session→lane routing ([`super::shard::SessionRouter`]) plus the
-///   FIFO queue preserve that order end to end.
+///   FIFO queue preserve that order end to end. A step built with
+///   [`Request::decode_at`] additionally asserts its stream position,
+///   and the server refuses it (typed
+///   [`super::engine::RejectReason::StreamGap`]) when the session's
+///   committed context length disagrees — the gap detection that stops
+///   a client who ignored a rejection from silently corrupting its
+///   session's derivation.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
@@ -52,18 +58,40 @@ pub struct Request {
     /// `Some(session)` marks a decode step into that session's KV
     /// cache; `None` is the one-shot path.
     pub session: Option<u64>,
+    /// The stream position this decode step claims to append at — the
+    /// session's context length *before* its tokens, as the client
+    /// counts it. `Some` turns on server-side gap detection for this
+    /// step; `None` (one-shots, and free-running decode clients that
+    /// track resync themselves) appends unchecked.
+    pub pos: Option<usize>,
 }
 
 impl Request {
     /// One-shot request: the whole workload derives from `tokens`.
     pub fn oneshot(id: u64, tokens: Vec<i32>) -> Self {
-        Self { id, tokens, enqueued: Instant::now(), session: None }
+        Self { id, tokens, enqueued: Instant::now(), session: None, pos: None }
     }
 
     /// Decode-step request: append `tokens` to `session`'s cached
-    /// context (a session's first request is its prefill).
+    /// context (a session's first request is its prefill), without
+    /// asserting a stream position — the server appends wherever the
+    /// stream currently is, so a client that ignores rejections can
+    /// silently diverge. Prefer [`Request::decode_at`].
     pub fn decode(id: u64, session: u64, tokens: Vec<i32>) -> Self {
-        Self { id, tokens, enqueued: Instant::now(), session: Some(session) }
+        Self { id, tokens, enqueued: Instant::now(), session: Some(session), pos: None }
+    }
+
+    /// Position-asserted decode step: append `tokens` at stream
+    /// position `pos` (the session's context length before this step).
+    /// The serving engine validates the claim against the session's
+    /// committed length *before any state mutates* and refuses the
+    /// whole batch with a typed
+    /// [`super::engine::StreamGapError`] on a mismatch — gapped (the
+    /// client ignored a rejection and kept streaming), replayed, or
+    /// out-of-order streams are caught server-side instead of
+    /// corrupting the cached derivation.
+    pub fn decode_at(id: u64, session: u64, pos: usize, tokens: Vec<i32>) -> Self {
+        Self { id, tokens, enqueued: Instant::now(), session: Some(session), pos: Some(pos) }
     }
 }
 

@@ -12,10 +12,17 @@
 //!   tokens ([`derive_head_inputs`]) and executed in-process by the
 //!   sparse-first [`MhaKernel::forward_batch`], which fans the whole
 //!   batch through one worker pool with per-worker workspace arenas.
-//!   Outputs are bitwise identical to sequential single-request
-//!   reference execution for any thread count or batch composition
-//!   (pinned by `rust/tests/serve_conformance.rs`), and the measured
-//!   per-request head/block pruning lands in [`Metrics`].
+//!   Decode steps ride the same shape: *all* decode requests in a
+//!   popped batch flatten into one `sessions × layers × heads` task
+//!   list over the same pool ([`MhaKernel::decode_batch`] — see
+//!   `Engine::serve_decodes` for the checkout → fan-out → commit
+//!   protocol), so cross-session decode traffic saturates the cores a
+//!   serial per-request loop would leave idle. Outputs are bitwise
+//!   identical to sequential single-request reference execution for
+//!   any thread count or batch composition (pinned by
+//!   `rust/tests/serve_conformance.rs` and
+//!   `rust/tests/decode_conformance.rs`), and the measured per-request
+//!   head/block pruning lands in [`Metrics`].
 //!
 //! One engine is one execution lane. Multiple lanes over the same
 //! [`Batcher`] — the sharded scale-out — live in
@@ -31,12 +38,17 @@
 //! [`Batcher`] refuses them at `submit` (see the admission-control
 //! section in [`super::batcher`]), handing the request back to the
 //! producer, who answers with [`Response::reject`]. Such a response
-//! carries `rejected = true`, the request id, `label = -1` and the
-//! time-to-rejection in `e2e_seconds`; every other field is zero /
-//! empty. `run_loop` reuses the same carrier to shed a batch whose
-//! execution failed, so every admitted request still gets exactly one
-//! response. Served responses always carry `rejected = false`.
+//! carries `rejected = true`, the request id, `label = -1`, a typed
+//! [`RejectReason`] and the time-to-rejection in `e2e_seconds`; every
+//! other field is zero / empty. `run_loop` reuses the same carrier to
+//! shed a batch whose execution failed (`RejectReason::Shed`, or
+//! [`RejectReason::StreamGap`] on the decode step whose asserted
+//! position tripped server-side gap detection — see
+//! [`StreamGapError`]), so every admitted request still gets exactly
+//! one response. Served responses always carry `rejected = false`.
 
+use std::collections::HashMap;
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -44,7 +56,8 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::attention::hdp::HdpParams;
-use crate::attention::kernel::{BatchRequest, DecodeRow, MhaKernel, RequestStats};
+use crate::attention::kernel::{BatchRequest, DecodeTask, MhaKernel,
+                               RequestStats};
 use crate::fixed::{self, QuantProfile};
 use crate::model::ParamStore;
 use crate::runtime::{lit_i32, lit_scalar_f32, to_vec_f32, Runtime};
@@ -63,6 +76,66 @@ pub enum ServeMode {
     Dense,
     Hdp { rho: f32, tau: f32, qstep: f32 },
 }
+
+/// Why a request was *not served* — carried on the rejection
+/// [`Response`] so clients can tell backpressure (retry later) apart
+/// from a broken decode stream (resync before retrying).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Refused at the batcher door: the bounded queue was full
+    /// (admission control). Nothing about the request was wrong.
+    Admission,
+    /// Shed because the batch it was admitted into failed validation
+    /// or execution — some request in the batch (possibly this one)
+    /// was invalid, and the whole batch was refused before any state
+    /// mutated.
+    Shed,
+    /// Server-side decode-stream gap detection fired on **this** step:
+    /// it claimed to append at `claimed`, but the session's committed
+    /// context length is `expected`. The stream is gapped (claimed >
+    /// expected: the client ignored an earlier rejection and kept
+    /// streaming), replayed (claimed < expected) or out-of-order; the
+    /// client must resync from `expected` — nothing was appended.
+    StreamGap { expected: usize, claimed: usize },
+}
+
+/// The typed error [`Engine::serve_batch`] returns when decode-stream
+/// gap detection refuses a batch: identifies the offending step and
+/// both positions. `run_loop` downcasts it to stamp
+/// [`RejectReason::StreamGap`] on the offender's rejection response
+/// (co-batched requests are shed with [`RejectReason::Shed`]); direct
+/// `serve_batch` callers can `downcast_ref` it off the `anyhow::Error`
+/// the same way.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamGapError {
+    pub id: u64,
+    pub session: u64,
+    pub expected: usize,
+    pub claimed: usize,
+}
+
+impl fmt::Display for StreamGapError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "decode request {}: session {} stream gap — step claims \
+             position {} but the committed context length is {} \
+             ({}; resync from {})",
+            self.id,
+            self.session,
+            self.claimed,
+            self.expected,
+            if self.claimed > self.expected {
+                "gapped stream: an earlier step was rejected or lost"
+            } else {
+                "replayed or out-of-order step"
+            },
+            self.expected,
+        )
+    }
+}
+
+impl std::error::Error for StreamGapError {}
 
 /// Geometry of the native in-process model: the layers × heads
 /// attention workload the batched kernel executes per request. Sequence
@@ -99,7 +172,18 @@ pub struct Response {
     /// failed to execute (see [`Response::reject`]). The
     /// backpressure signal a client retries or sheds on. Always
     /// `false` on a served response.
+    ///
+    /// Invariant: `rejected == reason.is_some()`, always. Rejection
+    /// responses are only built through [`Response::reject`] /
+    /// [`Response::reject_because`] (which set both); served
+    /// responses set neither.
     pub rejected: bool,
+    /// Why, when `rejected` — admission refusal, batch shed, or a
+    /// typed decode stream-gap detection ([`RejectReason::StreamGap`],
+    /// which means *this* step must resync before the session can
+    /// continue). `None` on served responses (see the invariant on
+    /// [`Response::rejected`]).
+    pub reason: Option<RejectReason>,
     /// Decode responses echo their session id (`None` on one-shot and
     /// rejection responses).
     pub session: Option<u64>,
@@ -118,9 +202,19 @@ impl Response {
     /// A rejected **decode step** echoes its session id so the client
     /// can tell which stream broke: its tokens were *not* appended, so
     /// the client must resubmit that step (and hold the session's later
-    /// steps) before continuing, or the session's cached context would
-    /// silently diverge from the intended prefix.
+    /// steps) before continuing — and since PR 5 the server *enforces*
+    /// this for position-asserted steps ([`Request::decode_at`]): a
+    /// later step that ignores the rejection is refused with
+    /// [`RejectReason::StreamGap`] instead of silently diverging the
+    /// session's cached derivation.
     pub fn reject(req: &Request) -> Self {
+        Self::reject_because(req, RejectReason::Admission)
+    }
+
+    /// [`Response::reject`] with an explicit [`RejectReason`] — what
+    /// `run_loop` sheds failed batches with (`Shed`, or `StreamGap` on
+    /// the step that tripped gap detection).
+    pub fn reject_because(req: &Request, reason: RejectReason) -> Self {
         Response {
             id: req.id,
             label: -1,
@@ -131,6 +225,7 @@ impl Response {
             kept_density: 0.0,
             outputs: Vec::new(),
             rejected: true,
+            reason: Some(reason),
             session: req.session,
             context_len: 0,
         }
@@ -655,6 +750,7 @@ impl Engine {
                 kept_density: mean_density,
                 outputs: Vec::new(),
                 rejected: false,
+                reason: None,
                 session: None,
                 context_len: 0,
             })
@@ -671,8 +767,10 @@ impl Engine {
                         "batch size {} not in 1..={}", reqs.len(), self.batch);
         let block = kernel.params().block;
         // Validate the whole batch before touching any session state:
-        // a batch that fails admission here mutated nothing, so the
-        // run_loop shed path never leaves a cache half-advanced.
+        // a batch that fails admission here mutated nothing — no
+        // checkout, no append, no commit for *any* request's session —
+        // so the run_loop shed path never leaves a cache half-advanced
+        // (pinned by decode_conformance's side-effect-free tests).
         for r in reqs {
             if r.session.is_some() {
                 // Decode appends token-by-token: any positive length is
@@ -699,6 +797,33 @@ impl Engine {
                 );
             }
         }
+        // Decode-stream gap detection, still before any mutation: walk
+        // the batch's position-asserted steps against each session's
+        // committed context length, accumulating in-batch appends so
+        // chained steps of one session validate against where the
+        // *batch* will have left the stream.
+        let has_decode = reqs.iter().any(|r| r.session.is_some());
+        if let (Some(store_mutex), true) = (&self.sessions, has_decode) {
+            let store = store_mutex.lock().unwrap();
+            let mut expect: HashMap<u64, usize> = HashMap::new();
+            for r in reqs {
+                let Some(session) = r.session else { continue };
+                let e = expect
+                    .entry(session)
+                    .or_insert_with(|| store.expected_pos(session));
+                if let Some(claimed) = r.pos {
+                    if claimed != *e {
+                        return Err(anyhow::Error::new(StreamGapError {
+                            id: r.id,
+                            session,
+                            expected: *e,
+                            claimed,
+                        }));
+                    }
+                }
+                *e += r.tokens.len();
+            }
+        }
 
         let mut responses: Vec<Option<Response>> =
             (0..reqs.len()).map(|_| None).collect();
@@ -716,12 +841,12 @@ impl Engine {
             }
         }
 
-        // Decode steps, in arrival order — same-session steps must stay
-        // sequential (the sticky router guarantees they share a lane).
-        for (i, r) in reqs.iter().enumerate() {
-            if r.session.is_some() {
-                responses[i] = Some(self.decode_one(kernel, profile, r));
-            }
+        // Decode sub-batch: every decode step of every session through
+        // one kernel fan-out (sessions × layers × heads task list) —
+        // see `serve_decodes`. Same-session steps stay sequential in
+        // arrival order inside their per-head tasks.
+        if has_decode {
+            self.serve_decodes(kernel, profile, reqs, &mut responses);
         }
 
         let compute_s = t0.elapsed().as_secs_f64();
@@ -848,6 +973,7 @@ impl Engine {
                     kept_density: stats.kept_density(),
                     outputs,
                     rejected: false,
+                    reason: None,
                     session: None,
                     context_len: 0,
                 }
@@ -855,114 +981,177 @@ impl Engine {
             .collect()
     }
 
-    /// Serve one decode step against the session store: check the
-    /// session out (replaying its history state-only if it was evicted
-    /// — decode-from-scratch), append the request's tokens through the
-    /// incremental kernel, and answer the *last* token's attention row
-    /// across all layers × heads. Infallible past batch validation, so
-    /// a served batch never leaves a cache half-advanced.
-    fn decode_one(
+    /// Serve **every decode step in the batch** as one kernel fan-out:
+    /// the task list is the flattened `sessions × layers × heads` grid
+    /// ([`MhaKernel::decode_batch`]), mirroring what `forward_batch`
+    /// does for one-shots — cross-session decode work saturates the
+    /// worker pool instead of running session after session.
+    ///
+    /// Protocol (the checkout/commit contract, batch-wide):
+    ///
+    /// 1. **Checkout phase** — every session in the batch is checked
+    ///    out of the store up front, in first-arrival order (eviction
+    ///    rebuilds decided *here*, whole-batch, before any kernel
+    ///    work); the store lock is then released for the compute.
+    /// 2. **Fan-out** — one task per (session, layer, head) holds its
+    ///    own [`crate::session::HeadKv`] lock for all of that session's
+    ///    steps in the batch (same-session order preserved; different
+    ///    sessions' heads proceed concurrently on separate caches).
+    /// 3. **Commit phase** — the store lock is retaken and every step
+    ///    commits in order (history + page budget; evictions land
+    ///    here, a performance event only).
+    ///
+    /// Infallible past batch validation, so a served batch never
+    /// leaves a cache half-advanced; outputs are bitwise identical to
+    /// serving each session's steps sequentially (batch composition,
+    /// thread count and shard count never change results — pinned by
+    /// `rust/tests/decode_conformance.rs`).
+    fn serve_decodes(
         &self,
         kernel: &MhaKernel,
         profile: QuantProfile,
-        req: &Request,
-    ) -> Response {
-        let session = req.session.expect("decode request");
-        let store_mutex =
-            self.sessions.as_ref().expect("native engine has a session store");
-        let mut store = store_mutex.lock().unwrap();
-        let stats0 = store.stats();
-        let (cache, replay) = store.checkout(session);
+        reqs: &[Request],
+        responses: &mut [Option<Response>],
+    ) {
+        struct Group {
+            session: u64,
+            cache: Arc<crate::session::KvCache>,
+            replay: Vec<i32>,
+            /// Committed context length at checkout (== after replay).
+            base_len: usize,
+            /// Whether checkout rebuilt an evicted cache.
+            rebuilt: bool,
+            /// Batch indices of this session's steps, arrival order.
+            idxs: Vec<usize>,
+        }
 
-        let n_heads = self.n_heads;
-        let d_head = self.d_head;
-        let scale = self.cal_scale;
-        let inv = self.request_inv_scale();
-        // Fan the layers × heads grid across the kernel's thread
-        // budget: each task owns its head's cache exclusively (disjoint
-        // per-head locks — no contention), replays evicted history
-        // state-only, then steps the new tokens; only the last one
-        // produces an output row. Results return in index order, so
-        // the fan-out width never changes the response.
-        let rows: Vec<DecodeRow> = parallel_map(
-            self.n_layers * n_heads,
-            kernel.threads(),
-            |t| {
-                let (layer, head) = (t / n_heads, t % n_heads);
-                let mut kv = cache.head(layer, head).lock().unwrap();
-                for (pos, &tok) in replay.iter().enumerate() {
-                    let row = derive_token_row(tok, pos, layer, head, d_head,
-                                               profile, scale);
-                    kernel.decode_append(&mut kv, &row);
-                }
-                let mut last = None;
-                for (off, &tok) in req.tokens.iter().enumerate() {
-                    let pos = kv.len();
-                    let row = derive_token_row(tok, pos, layer, head, d_head,
-                                               profile, scale);
-                    if off + 1 == req.tokens.len() {
-                        last = Some(kernel.decode_step(&mut kv, &row, inv));
-                    } else {
-                        kernel.decode_append(&mut kv, &row);
+        let store_mutex =
+            self.sessions.as_ref().expect("validated: store present");
+        // -- checkout phase: all sessions, before any kernel work -----
+        let mut groups: Vec<Group> = Vec::new();
+        {
+            let mut store = store_mutex.lock().unwrap();
+            let mut by_session: HashMap<u64, usize> = HashMap::new();
+            for (i, r) in reqs.iter().enumerate() {
+                let Some(session) = r.session else { continue };
+                match by_session.get(&session) {
+                    Some(&g) => groups[g].idxs.push(i),
+                    None => {
+                        by_session.insert(session, groups.len());
+                        let base_len = store.history_len(session);
+                        let rebuilds0 = store.stats().rebuilds;
+                        let (cache, replay) = store.checkout(session);
+                        groups.push(Group {
+                            session,
+                            cache,
+                            replay,
+                            base_len,
+                            rebuilt: store.stats().rebuilds > rebuilds0,
+                            idxs: vec![i],
+                        });
                     }
                 }
-                last.expect("decode request carries at least one token")
-            },
-        );
-        let context_len = cache.len();
-
-        let mut stats = RequestStats::default();
-        for d in &rows {
-            stats.heads_total += 1;
-            stats.heads_pruned += usize::from(!d.head_kept);
-            stats.kept_blocks += d.kept_blocks;
-            stats.blocks_total += d.blocks_total;
-        }
-        let (outputs, label) = if self.keep_outputs {
-            let mut outputs = Vec::with_capacity(rows.len() * self.d_head);
-            for d in &rows {
-                outputs.extend_from_slice(&d.out);
             }
-            let label = pooled_label(&outputs);
-            (outputs, label)
-        } else {
-            let label =
-                pooled_label_from(rows.iter().flat_map(|d| d.out.iter().copied()));
-            (Vec::new(), label)
-        };
+        } // store lock released: the fan-out runs against Arc'd caches
 
-        store.commit(session, &req.tokens);
-        let stats1 = store.stats();
+        // -- fan-out: sessions × layers × heads through one pool ------
+        let steps: Vec<Vec<&[i32]>> = groups
+            .iter()
+            .map(|g| g.idxs.iter().map(|&i| reqs[i].tokens.as_slice()).collect())
+            .collect();
+        let inv = self.request_inv_scale();
+        let tasks: Vec<DecodeTask> = groups
+            .iter()
+            .zip(&steps)
+            .map(|(g, steps)| DecodeTask {
+                cache: g.cache.as_ref(),
+                replay: &g.replay,
+                steps: steps.as_slice(),
+                inv_scale: inv,
+            })
+            .collect();
+        let d_head = self.d_head;
+        let scale = self.cal_scale;
+        let results = kernel.decode_batch(&tasks, |tok, pos, layer, head| {
+            derive_token_row(tok, pos, layer, head, d_head, profile, scale)
+        });
+
+        // -- commit phase + per-request roll-up -----------------------
+        let mut store = store_mutex.lock().unwrap();
+        let mut profiles: Vec<sim::DecodeProfile> = Vec::new();
+        let mut order: Vec<usize> = Vec::new(); // batch index per profile
+        for (g, per_step) in groups.iter().zip(results) {
+            let mut ctx = g.base_len;
+            for (k, (&i, rows)) in g.idxs.iter().zip(per_step).enumerate() {
+                let req = &reqs[i];
+                ctx += req.tokens.len();
+                let mut stats = RequestStats::default();
+                for d in &rows {
+                    stats.heads_total += 1;
+                    stats.heads_pruned += usize::from(!d.head_kept);
+                    stats.kept_blocks += d.kept_blocks;
+                    stats.blocks_total += d.blocks_total;
+                }
+                let (outputs, label) = if self.keep_outputs {
+                    let mut outputs =
+                        Vec::with_capacity(rows.len() * self.d_head);
+                    for d in &rows {
+                        outputs.extend_from_slice(&d.out);
+                    }
+                    let label = pooled_label(&outputs);
+                    (outputs, label)
+                } else {
+                    let label = pooled_label_from(
+                        rows.iter().flat_map(|d| d.out.iter().copied()));
+                    (Vec::new(), label)
+                };
+                let evictions0 = store.stats().evictions;
+                store.commit(g.session, &req.tokens);
+                let evictions = store.stats().evictions - evictions0;
+                self.metrics.record_pruning(
+                    stats.heads_pruned as u64, stats.heads_total as u64,
+                    stats.kept_blocks as u64, stats.blocks_total as u64);
+                // The rebuild was decided once at checkout; charge it
+                // to the session's first step in the batch.
+                self.metrics.record_decode(
+                    req.tokens.len() as u64,
+                    u64::from(g.rebuilt && k == 0),
+                    evictions);
+                profiles.push(sim::DecodeProfile {
+                    ctx_len: ctx,
+                    kept_density: stats.kept_density(),
+                    head_kept_frac: stats.head_kept_frac(),
+                });
+                order.push(i);
+                responses[i] = Some(Response {
+                    id: req.id,
+                    label,
+                    e2e_seconds: 0.0, // caller stamps the batch e2e
+                    sim_seconds: 0.0, // stamped from the batch estimate
+                    heads_pruned: stats.heads_pruned,
+                    heads_total: stats.heads_total,
+                    kept_density: stats.kept_density(),
+                    outputs,
+                    rejected: false,
+                    reason: None,
+                    session: Some(g.session),
+                    context_len: ctx,
+                });
+            }
+        }
         drop(store);
 
-        // Co-processor model of the cached step + serving bookkeeping.
-        let rep = sim::estimate_decode_step(
+        // Co-processor model of the whole decode sub-batch, per step.
+        let (per_step, total) = sim::estimate_decode_batch(
             &self.sim_cfg, self.n_layers, self.d_head, self.n_heads,
-            context_len, stats.kept_density(), stats.head_kept_frac(),
-            kernel.params().use_ff);
-        self.metrics.record_sim(rep.cycles, rep.energy_pj, rep.dram_bytes,
-                                rep.heads_pruned as u64,
-                                rep.heads_total as u64);
-        self.metrics.record_pruning(
-            stats.heads_pruned as u64, stats.heads_total as u64,
-            stats.kept_blocks as u64, stats.blocks_total as u64);
-        self.metrics.record_decode(
-            req.tokens.len() as u64,
-            stats1.rebuilds - stats0.rebuilds,
-            stats1.evictions - stats0.evictions);
-
-        Response {
-            id: req.id,
-            label,
-            e2e_seconds: 0.0, // caller stamps the batch e2e
-            sim_seconds: self.sim_cfg.cycles_to_seconds(rep.cycles),
-            heads_pruned: stats.heads_pruned,
-            heads_total: stats.heads_total,
-            kept_density: stats.kept_density(),
-            outputs,
-            rejected: false,
-            session: Some(session),
-            context_len,
+            &profiles, kernel.params().use_ff);
+        self.metrics.record_sim(total.cycles, total.energy_pj,
+                                total.dram_bytes, total.heads_pruned as u64,
+                                total.heads_total as u64);
+        for (&i, rep) in order.iter().zip(&per_step) {
+            if let Some(resp) = responses[i].as_mut() {
+                resp.sim_seconds = self.sim_cfg.cycles_to_seconds(rep.cycles);
+            }
         }
     }
 
@@ -991,10 +1180,25 @@ impl Engine {
                     // A failed batch must not make its requests vanish:
                     // every admitted request gets exactly one response,
                     // so shed the batch with not-served markers (same
-                    // carrier as an admission rejection).
+                    // carrier as an admission rejection). A decode
+                    // stream-gap refusal is typed: the offending step's
+                    // rejection carries the positions so its client
+                    // knows to resync, while co-batched requests are
+                    // plain sheds (nothing mutated — resubmit as-is).
                     eprintln!("batch failed: {e:#}");
+                    let gap = e.downcast_ref::<StreamGapError>().copied();
                     self.responses.lock().unwrap().extend(
-                        batch.iter().map(Response::reject),
+                        batch.iter().map(|r| {
+                            let reason = match gap {
+                                Some(g) if g.id == r.id =>
+                                    RejectReason::StreamGap {
+                                        expected: g.expected,
+                                        claimed: g.claimed,
+                                    },
+                                _ => RejectReason::Shed,
+                            };
+                            Response::reject_because(r, reason)
+                        }),
                     );
                 }
             }

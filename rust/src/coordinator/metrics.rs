@@ -339,6 +339,24 @@ mod tests {
     }
 
     #[test]
+    fn single_pop_lane_quantiles_are_the_sample() {
+        // A lane that popped exactly one batch (one queue-wait sample)
+        // must report that wait for every quantile the fleet summary
+        // prints — p95 included — and keep the exact boundaries after
+        // an absorb merge.
+        let lane = Metrics::new();
+        lane.record_queue_wait(&[0.0123]);
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(lane.queue_wait_quantile(q), 0.0123, "q={q}");
+        }
+        let fleet = Metrics::new();
+        fleet.record_queue_wait(&[0.001, 0.002]);
+        fleet.absorb(&lane);
+        assert_eq!(fleet.queue_wait_quantile(1.0), 0.0123, "merged max exact");
+        assert_eq!(fleet.queue_wait_quantile(0.0), 0.001, "merged min exact");
+    }
+
+    #[test]
     fn absorb_merges_counters_and_histograms() {
         let a = Metrics::new();
         let b = Metrics::new();

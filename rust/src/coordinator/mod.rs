@@ -28,7 +28,8 @@ pub mod shard;
 pub use batcher::{Batcher, Request};
 pub use engine::{derive_head_inputs, derive_head_inputs_scaled,
                  derive_session_head_inputs, derive_token_row, pooled_label,
-                 Engine, NativeModelConfig, Response, ServeMode};
+                 Engine, NativeModelConfig, RejectReason, Response, ServeMode,
+                 StreamGapError};
 pub use metrics::Metrics;
 pub use shard::{EngineFactory, Readiness, SessionRouter, ShardReport,
                 ShardStats, ShardedCoordinator};

@@ -42,11 +42,14 @@
 //! decode requests route by `session % shards` (the cache-owning
 //! lane, every time), one-shots to the least-loaded lane. Per-lane
 //! FIFO order then guarantees same-session steps execute in submit
-//! order. Work stealing is deliberately traded away on this path —
-//! stickiness is what makes the cache hit; the determinism guarantee
-//! is unchanged because every response is still a pure per-request
-//! (per-session-stream) function, pinned across shard counts by
-//! `rust/tests/decode_conformance.rs`.
+//! order — including *inside* a popped batch, where the lane's engine
+//! flattens every decode step into one `sessions × layers × heads`
+//! kernel fan-out (`MhaKernel::decode_batch`) while keeping each
+//! session's steps sequential in its per-head tasks. Work stealing is
+//! deliberately traded away on this path — stickiness is what makes
+//! the cache hit; the determinism guarantee is unchanged because every
+//! response is still a pure per-request (per-session-stream) function,
+//! pinned across shard counts by `rust/tests/decode_conformance.rs`.
 //!
 //! # Metrics and degraded runs
 //!

@@ -220,7 +220,10 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
                  (no artifacts or weights needed)")
         .switch("decode", "demo: multi-session incremental decode loop \
                  over the session KV cache (sticky session->lane \
-                 affinity; implies --demo)")
+                 affinity; each popped batch runs as one sessions x \
+                 layers x heads fan-out, and every step asserts its \
+                 stream position for server-side gap detection; \
+                 implies --demo)")
         .flag("sessions", "4", "decode demo: concurrent sessions")
         .flag("decode-steps", "32", "decode demo: single-token steps per \
                session after prefill")
@@ -453,9 +456,12 @@ fn serve_demo(args: &Args) -> Result<()> {
 /// S sessions prefill a context, then decode single tokens round-robin
 /// through the sticky coordinator (one batcher per lane; a session's
 /// KV cache lives on its `session % shards` lane for the whole run).
-/// Each step scores only the cached blocks for the one new query row;
-/// `--kv-pages` bounds the per-lane session store so LRU eviction and
-/// decode-from-scratch rebuilds can be watched live.
+/// Each popped batch of steps executes as one sessions × layers ×
+/// heads kernel fan-out, each step scoring only the cached blocks for
+/// its one new query row; every step asserts its stream position
+/// (server-side gap detection), and `--kv-pages` bounds the per-lane
+/// session store so LRU eviction and decode-from-scratch rebuilds can
+/// be watched live.
 fn serve_demo_decode(args: &Args, cfg: NativeModelConfig, mode: ServeMode,
                      chip: SimConfig) -> Result<()> {
     let shards = args.get_usize("shards")?;
@@ -496,11 +502,23 @@ fn serve_demo_decode(args: &Args, cfg: NativeModelConfig, mode: ServeMode,
         let mut rng = SplitMix64::new(23);
         let mut rejections = Vec::new();
         let mut id = 0u64;
-        let mut submit = |req: Request, rejections: &mut Vec<Response>| {
-            if let Err(back) = router.submit(req) {
-                rejections.push(Response::reject(&back));
-            }
-        };
+        // A well-behaved decode client: every step asserts its stream
+        // position (`Request::decode_at`, validated server-side by gap
+        // detection), and the position only advances when the step was
+        // actually admitted — an admission rejection means those
+        // tokens were never appended, so the next step re-claims the
+        // same position instead of silently gapping the stream.
+        let mut pos = vec![0usize; sessions];
+        let mut submit =
+            |req: Request, rejections: &mut Vec<Response>| -> bool {
+                match router.submit(req) {
+                    Ok(()) => true,
+                    Err(back) => {
+                        rejections.push(Response::reject(&back));
+                        false
+                    }
+                }
+            };
         if ready.wait_any() {
             // Prefill every session's context, then interleave
             // single-token steps round-robin — the multi-turn traffic
@@ -509,13 +527,21 @@ fn serve_demo_decode(args: &Args, cfg: NativeModelConfig, mode: ServeMode,
                 let tokens: Vec<i32> = (0..context)
                     .map(|_| rng.next_below(30_000) as i32)
                     .collect();
-                submit(Request::decode(id, s, tokens), &mut rejections);
+                let n = tokens.len();
+                let req = Request::decode_at(id, s, pos[s as usize], tokens);
+                if submit(req, &mut rejections) {
+                    pos[s as usize] += n;
+                }
                 id += 1;
             }
             for _ in 0..steps {
                 for s in 0..sessions as u64 {
                     let tok = rng.next_below(30_000) as i32;
-                    submit(Request::decode(id, s, vec![tok]), &mut rejections);
+                    let req =
+                        Request::decode_at(id, s, pos[s as usize], vec![tok]);
+                    if submit(req, &mut rejections) {
+                        pos[s as usize] += 1;
+                    }
                     id += 1;
                 }
             }

@@ -15,14 +15,21 @@
 //! * [`cache::KvCache`] — one session's `layers × heads` grid of
 //!   `HeadKv`s (per-head `Mutex`es: disjoint parallel decode).
 //! * [`store::SessionStore`] — session id → cache, page-denominated
-//!   capacity accounting, and the pluggable [`store::EvictionPolicy`]
-//!   (LRU by default). Eviction drops pages, never history: an evicted
-//!   session decodes from scratch on its next step, bitwise unchanged.
+//!   capacity accounting, the per-session committed stream position
+//!   ([`store::SessionStore::expected_pos`] — what server-side gap
+//!   detection validates against), and the pluggable
+//!   [`store::EvictionPolicy`] (LRU by default). Eviction drops pages,
+//!   never history: an evicted session decodes from scratch on its
+//!   next step, bitwise unchanged. Checkout hands out `Arc`'d caches
+//!   so a whole batch of sessions is held concurrently during the
+//!   batched decode fan-out.
 //!
 //! The decode math lives in [`crate::attention::kernel`]
-//! (`MhaKernel::decode_step`); the serving integration — session
-//! requests, sticky session→lane affinity, the `hdp serve --demo
-//! --decode` loop — lives in [`crate::coordinator`]. The end-to-end
+//! (`MhaKernel::decode_step`, and `MhaKernel::decode_batch` for the
+//! whole-batch `sessions × layers × heads` fan-out); the serving
+//! integration — session requests, position-asserted decode steps,
+//! sticky session→lane affinity, the `hdp serve --demo --decode` loop
+//! — lives in [`crate::coordinator`]. The end-to-end
 //! flow is mapped in ARCHITECTURE.md (§ Session / KV-cache flow) and
 //! pinned by `rust/tests/decode_conformance.rs`.
 

@@ -5,7 +5,12 @@
 //! a session before a decode step (creating or rebuilding its cache as
 //! needed), run the step against the returned cache, then `commit` the
 //! appended tokens — which is also where the capacity bound is
-//! enforced. Eviction is *session-granular* and drops only the heavy
+//! enforced. Checkout hands back an `Arc`'d cache, so the batched
+//! decode path checks out *every* session in a popped batch up front,
+//! releases the store lock for the kernel fan-out, and commits step by
+//! step afterwards (the engine's validate → checkout-all → fan-out →
+//! commit protocol; per-head `Mutex`es inside the caches keep the
+//! concurrent multi-session work sound). Eviction is *session-granular* and drops only the heavy
 //! page state: the token history survives, so an evicted session's
 //! next decode step transparently **decodes from scratch** (the store
 //! hands back the history to replay) and produces bitwise-identical
@@ -22,6 +27,7 @@
 //! without touching the store.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use super::cache::KvCache;
 
@@ -95,8 +101,11 @@ struct SessionEntry {
     /// eviction, and is exactly what a decode-from-scratch rebuild
     /// replays.
     history: Vec<i32>,
-    /// The heavy paged state; `None` after eviction.
-    cache: Option<KvCache>,
+    /// The heavy paged state; `None` after eviction. Handed out as an
+    /// [`Arc`] so a batched decode step can hold *several* sessions'
+    /// caches at once (each head behind its own `Mutex`) while the
+    /// store lock is released for the duration of the kernel fan-out.
+    cache: Option<Arc<KvCache>>,
     /// Page count as of this session's last commit. Kept so the budget
     /// check and the eviction loop are O(1) bookkeeping instead of
     /// walking every cached session's per-head locks on the per-token
@@ -172,14 +181,29 @@ impl SessionStore {
         self.sessions.get(&session).map_or(0, |e| e.history.len())
     }
 
+    /// The stream position the server expects a session's next decode
+    /// step to append at — its committed context length (0 for a
+    /// session the store has never seen). This is the per-session
+    /// sequence number the engine's gap detection validates
+    /// position-asserted decode steps against: a step claiming any
+    /// other position is gapped (too high: the client ignored a
+    /// rejection and kept streaming), replayed (too low) or
+    /// out-of-order, and is refused before any state mutates.
+    pub fn expected_pos(&self, session: u64) -> usize {
+        self.history_len(session)
+    }
+
     /// Check a session out for a decode step: touches the eviction
     /// policy, creates the session on first sight, and — when the
     /// session was evicted — allocates a fresh cache and returns the
     /// committed history the caller must replay through the decode
     /// path before appending new tokens (decode-from-scratch). The
-    /// returned cache reference is valid until the next `&mut`
-    /// use of the store (the caller commits afterwards).
-    pub fn checkout(&mut self, session: u64) -> (&KvCache, Vec<i32>) {
+    /// cache comes back as an [`Arc`] clone, so a batched decode can
+    /// check out every session in its batch up front, drop the store
+    /// lock for the kernel fan-out, and `commit` afterwards — the
+    /// per-head `Mutex`es inside [`KvCache`] keep concurrent
+    /// multi-session work sound without the store in the loop.
+    pub fn checkout(&mut self, session: u64) -> (Arc<KvCache>, Vec<i32>) {
         if !self.sessions.contains_key(&session) {
             self.sessions.insert(
                 session,
@@ -192,21 +216,21 @@ impl SessionStore {
         let entry = self.sessions.get_mut(&session).expect("just ensured");
         let mut replay = Vec::new();
         if entry.cache.is_none() {
-            entry.cache = Some(KvCache::new(
+            entry.cache = Some(Arc::new(KvCache::new(
                 cfg.n_layers,
                 cfg.n_heads,
                 cfg.d_head,
                 cfg.d_v,
                 cfg.block,
                 cfg.page_tokens,
-            ));
+            )));
             if !entry.history.is_empty() {
                 replay = entry.history.clone();
                 self.stats.rebuilds += 1;
             }
         }
-        let cache = self.sessions[&session].cache.as_ref().expect("just ensured");
-        (cache, replay)
+        let cache = entry.cache.as_ref().expect("just ensured");
+        (Arc::clone(cache), replay)
     }
 
     /// Record tokens appended to a checked-out session and enforce the
@@ -218,7 +242,7 @@ impl SessionStore {
             e.history.extend_from_slice(appended);
             // Re-charge only this session's pages (its heads are idle
             // now); every other session keeps its committed count.
-            let now = e.cache.as_ref().map_or(0, KvCache::pages);
+            let now = e.cache.as_ref().map_or(0, |c| c.pages());
             self.charged_pages = self.charged_pages - e.pages + now;
             e.pages = now;
         }
@@ -355,7 +379,7 @@ mod tests {
                 .sessions
                 .values()
                 .filter_map(|e| e.cache.as_ref())
-                .map(KvCache::pages)
+                .map(|c| c.pages())
                 .sum();
             assert_eq!(store.total_pages(), live, "after session {s} += {n}");
         }
@@ -369,6 +393,47 @@ mod tests {
             cache.head(0, 0).lock().unwrap().append(&row());
         }
         store.commit(session, &vec![7i32; n]);
+    }
+
+    #[test]
+    fn multiple_sessions_check_out_concurrently() {
+        // The batched-decode shape: every session in a batch checked
+        // out up front (Arc handles), worked concurrently through the
+        // per-head locks, then committed — with the store free in
+        // between.
+        let mut store = SessionStore::new(cfg(usize::MAX));
+        let (a, ra) = store.checkout(1);
+        let (b, rb) = store.checkout(2);
+        assert!(ra.is_empty() && rb.is_empty());
+        std::thread::scope(|s| {
+            for cache in [&a, &b] {
+                s.spawn(move || {
+                    for _ in 0..3 {
+                        cache.head(0, 0).lock().unwrap().append(&row());
+                    }
+                });
+            }
+        });
+        store.commit(1, &[7, 7, 7]);
+        store.commit(2, &[8, 8, 8]);
+        assert_eq!(store.history_len(1), 3);
+        assert_eq!(store.history_len(2), 3);
+        assert_eq!(store.total_pages(), 4, "2 pages per 3-token session");
+    }
+
+    #[test]
+    fn expected_pos_tracks_committed_stream_position() {
+        let mut store = SessionStore::new(cfg(4));
+        assert_eq!(store.expected_pos(1), 0, "unknown session starts at 0");
+        grow(&mut store, 1, 3);
+        assert_eq!(store.expected_pos(1), 3);
+        grow(&mut store, 1, 1);
+        assert_eq!(store.expected_pos(1), 4);
+        // Eviction drops pages, never the stream position: the session
+        // still appends at its committed length.
+        grow(&mut store, 2, 6); // 3 pages: evicts session 1 (budget 4)
+        assert_eq!(store.stats().evictions, 1);
+        assert_eq!(store.expected_pos(1), 4, "position survives eviction");
     }
 
     #[test]

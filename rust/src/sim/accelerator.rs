@@ -202,6 +202,44 @@ pub struct RequestProfile {
     pub head_kept_frac: f32,
 }
 
+/// Measured diagnostics of one *cached decode step* in a batch: the
+/// context length after the step and the step's kept-block density /
+/// kept-head fraction across its layers × heads.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeProfile {
+    pub ctx_len: usize,
+    pub kept_density: f32,
+    pub head_kept_frac: f32,
+}
+
+/// Co-processor view of one *batched decode* pop: each decode step in
+/// the batch runs [`estimate_decode_step`] with its own measured
+/// diagnostics, and the batch total is their serial composition — the
+/// decode counterpart of [`estimate_batch`], which is what the serving
+/// engine stamps per-response `sim_seconds` from on the batched decode
+/// path. Returns the per-step reports in input order plus the total.
+pub fn estimate_decode_batch(
+    cfg: &SimConfig,
+    n_layers: usize,
+    d_head: usize,
+    n_heads: usize,
+    steps: &[DecodeProfile],
+    use_ff: bool,
+) -> (Vec<ChipReport>, ChipReport) {
+    let per: Vec<ChipReport> = steps
+        .iter()
+        .map(|s| {
+            estimate_decode_step(cfg, n_layers, d_head, n_heads, s.ctx_len,
+                                 s.kept_density, s.head_kept_frac, use_ff)
+        })
+        .collect();
+    let mut total = ChipReport::default();
+    for r in &per {
+        total.add_serial(r);
+    }
+    (per, total)
+}
+
 /// Co-processor view of one served batch: each request's `n_layers`
 /// attention layers run back to back on one chip, driven by that
 /// request's *measured* pruning diagnostics (the serving engine's
@@ -354,6 +392,34 @@ mod tests {
         let pruned = estimate_decode_step(&cfg, 2, 32, 8, 1024, 0.3, 0.0, false);
         assert!(pruned.cycles < step.cycles);
         assert_eq!(pruned.heads_pruned, 16);
+    }
+
+    #[test]
+    fn decode_batch_estimate_composes_per_step_reports() {
+        let cfg = SimConfig::edge();
+        let steps = [
+            DecodeProfile { ctx_len: 128, kept_density: 0.3, head_kept_frac: 0.75 },
+            DecodeProfile { ctx_len: 1024, kept_density: 0.3, head_kept_frac: 0.75 },
+            DecodeProfile { ctx_len: 128, kept_density: 0.9, head_kept_frac: 1.0 },
+        ];
+        let (per, total) = estimate_decode_batch(&cfg, 2, 32, 8, &steps, false);
+        assert_eq!(per.len(), 3);
+        // each step is exactly its standalone estimate...
+        for (p, s) in per.iter().zip(&steps) {
+            let solo = estimate_decode_step(&cfg, 2, 32, 8, s.ctx_len,
+                                            s.kept_density, s.head_kept_frac,
+                                            false);
+            assert_eq!(p.cycles, solo.cycles);
+            assert_eq!(p.heads_total, solo.heads_total);
+        }
+        // ...and the total is their serial composition.
+        let sum: f64 = per.iter().map(|r| r.cycles).sum();
+        assert!((total.cycles - sum).abs() < 1e-6 * sum.max(1.0));
+        assert_eq!(total.heads_total, 3 * 2 * 8);
+        assert!(per[1].cycles > per[0].cycles, "longer context costs more");
+        let (per0, total0) = estimate_decode_batch(&cfg, 2, 32, 8, &[], false);
+        assert!(per0.is_empty());
+        assert_eq!(total0.cycles, 0.0);
     }
 
     #[test]

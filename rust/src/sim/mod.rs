@@ -19,9 +19,10 @@ pub mod pe_array;
 pub mod softmax_unit;
 pub mod sparsity_engine;
 
-pub use accelerator::{estimate_batch, estimate_decode_step, estimate_layer,
+pub use accelerator::{estimate_batch, estimate_decode_batch,
+                      estimate_decode_step, estimate_layer,
                       estimate_layer_dense, estimate_model, run_layer,
-                      ChipReport, RequestProfile};
+                      ChipReport, DecodeProfile, RequestProfile};
 pub use config::{MacKind, SimConfig, Widths, W12, W16};
 pub use core::{cost_decode_head, cost_head, cost_head_dense, run_head,
                HeadRun, Report};

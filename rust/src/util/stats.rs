@@ -109,11 +109,26 @@ impl Histogram {
         if self.count == 0 { 0.0 } else { self.max }
     }
 
-    /// Approximate quantile from the log buckets (≤ ~4% relative error).
+    /// Approximate quantile from the log buckets (≤ ~4% relative
+    /// error), nearest-rank at the boundaries: `q <= 0` is exactly the
+    /// recorded minimum and `q >= 1` exactly the maximum — the bucket
+    /// midpoint would otherwise drift off them by up to a bucket width
+    /// (min sitting in its bucket's lower half reported ~2% high, max
+    /// in its upper half reported ~2% low). A single-sample histogram
+    /// (min == max) therefore answers every quantile with its one
+    /// sample exactly — what a lane that popped one batch reports as
+    /// its p95.
     pub fn quantile(&self, q: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
         }
+        if q <= 0.0 {
+            return self.min;
+        }
+        if q >= 1.0 {
+            return self.max;
+        }
+        // Nearest-rank: the ceil(q·n)-th smallest sample's bucket.
         let target = (q * self.count as f64).ceil().max(1.0) as u64;
         let mut acc = 0u64;
         for (i, c) in self.buckets.iter().enumerate() {
@@ -213,5 +228,63 @@ mod tests {
         h.record(1e9);
         assert_eq!(h.count(), 2);
         assert!(h.quantile(0.0) >= 1e-12);
+    }
+
+    #[test]
+    fn quantile_boundaries_are_exact_min_max() {
+        // Nearest-rank at the edges: q=0 is the exact minimum and q=1
+        // the exact maximum, not a log-bucket midpoint ±4% off them.
+        let mut h = Histogram::new();
+        for v in [0.00137, 0.0091, 0.044, 0.27] {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.0), 0.00137);
+        assert_eq!(h.quantile(1.0), 0.27);
+        // ...and out-of-range q clamps to the same answers.
+        assert_eq!(h.quantile(-0.5), 0.00137);
+        assert_eq!(h.quantile(1.5), 0.27);
+        // interior quantiles stay within the recorded range
+        let p50 = h.quantile(0.5);
+        assert!((0.00137..=0.27).contains(&p50), "{p50}");
+    }
+
+    #[test]
+    fn single_sample_answers_every_quantile_exactly() {
+        // A lane that popped exactly one batch reports that batch's
+        // wait for p50, p95 and p99 alike — bitwise the sample.
+        let mut h = Histogram::new();
+        h.record(0.0423);
+        for q in [0.0, 0.25, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 0.0423, "q={q}");
+        }
+        assert_eq!(h.min(), 0.0423);
+        assert_eq!(h.max(), 0.0423);
+    }
+
+    #[test]
+    fn quantile_after_merge_pins_boundaries_and_rank() {
+        // Merging lanes must behave like one shared histogram: the
+        // boundary quantiles are the merged min/max exactly, and an
+        // interior quantile ranks across both lanes' samples.
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(0.001); // the fleet minimum, on lane a
+        b.record(0.9); // the fleet maximum, on lane b
+        for _ in 0..98 {
+            b.record(0.01);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 100);
+        assert_eq!(a.quantile(0.0), 0.001);
+        assert_eq!(a.quantile(1.0), 0.9);
+        // p50 over the merged population sits at the 0.01 mass
+        let p50 = a.quantile(0.5);
+        assert!((p50 - 0.01).abs() / 0.01 < 0.06, "{p50}");
+        // merging into a single-sample histogram keeps the edges exact
+        let mut solo = Histogram::new();
+        solo.record(0.5);
+        solo.merge(&a);
+        assert_eq!(solo.quantile(0.0), 0.001);
+        assert_eq!(solo.quantile(1.0), 0.9);
     }
 }

@@ -1,10 +1,18 @@
 //! End-to-end conformance of the incremental decode path: at **every
 //! step** of a multi-step decode — prefill, single-token steps,
 //! mid-block (odd) context lengths, eviction-forced rebuilds, sticky
-//! sharding — the served outputs must be **bitwise identical** to the
-//! full-recompute reference: `hdp_head_reference` over the session's
-//! whole context (per layer × head, last query row), driven by the
-//! same per-token workload derivation (`derive_session_head_inputs`).
+//! sharding, and whole batches of decode steps flattened into one
+//! kernel fan-out — the served outputs must be **bitwise identical**
+//! to the full-recompute reference: `hdp_head_reference` over the
+//! session's whole context (per layer × head, last query row), driven
+//! by the same per-token workload derivation
+//! (`derive_session_head_inputs`).
+//!
+//! Also the regression surface for the serving-path bugfixes: batched
+//! decode validation is side-effect-free (an invalid request in a
+//! mixed batch mutates *no* session state before the error reports),
+//! and server-side stream-gap detection refuses position-asserted
+//! steps that would gap, replay, or reorder a session's stream.
 //!
 //! Needs no artifacts: the native backend derives every cached token's
 //! row deterministically from `(token, position, layer, head)`.
@@ -16,9 +24,11 @@ use std::time::Duration;
 use hdp::attention::hdp::hdp_head_reference;
 use hdp::coordinator::{derive_head_inputs, derive_session_head_inputs,
                        pooled_label, Batcher, Engine, NativeModelConfig,
-                       Request, ServeMode, ShardedCoordinator};
+                       RejectReason, Request, ServeMode, ShardedCoordinator,
+                       StreamGapError};
 use hdp::sim::SimConfig;
 use hdp::util::rng::SplitMix64;
+use hdp::util::threadpool::configured_threads;
 
 const GEOM: NativeModelConfig =
     NativeModelConfig { n_layers: 2, n_heads: 3, d_head: 8 };
@@ -246,18 +256,19 @@ fn sticky_sharded_decode_bitwise_across_shard_counts() {
         )
         .unwrap();
         let router = coord.router().expect("sticky router");
-        let producer = {
-            let schedule = schedule.clone();
-            let router = router.clone();
-            std::thread::spawn(move || {
-                for (id, (s, toks)) in schedule.into_iter().enumerate() {
-                    router.submit(Request::decode(id as u64, s, toks)).unwrap();
-                }
-                router.close();
-            })
-        };
+        // Queue the whole schedule before any lane starts, so lanes
+        // pop full multi-session batches — the batched decode fan-out
+        // under sticky sharding, not just single-step pops. Every step
+        // asserts its stream position (`decode_at`); lane-FIFO keeps
+        // same-session chains in order, so none of them gaps.
+        for (id, (s, toks)) in schedule.iter().enumerate() {
+            let pos = prefixes[id].len() - toks.len();
+            router
+                .submit(Request::decode_at(id as u64, *s, pos, toks.clone()))
+                .unwrap();
+        }
+        router.close();
         let report = coord.run().unwrap();
-        producer.join().unwrap();
         assert_eq!(report.responses.len(), total, "shards={shards}");
         assert!(report.lane_errors.is_empty(), "shards={shards}");
         let mut got: Vec<(u64, Vec<u32>)> = report
@@ -335,4 +346,326 @@ fn invalid_decode_requests_reject_without_touching_state() {
     let want = decode_reference(&eng, &[3, 4]);
     assert_eq!(bits(&resp.outputs), bits(&want.outputs));
     assert_eq!(resp.context_len, 2);
+}
+
+/// Check one served decode response against the full-recompute
+/// reference of its session prefix (outputs, label, pruning trail,
+/// context length) — the shared assertion of the batched-matrix tests.
+fn check_against_reference(
+    eng: &Engine,
+    resp: &hdp::coordinator::Response,
+    prefix: &[i32],
+    label: &str,
+) {
+    let want = decode_reference(eng, prefix);
+    assert_eq!(bits(&resp.outputs), bits(&want.outputs), "{label}");
+    assert_eq!(resp.label, want.label, "{label}");
+    assert_eq!(resp.heads_pruned, want.heads_pruned, "{label}");
+    assert_eq!(resp.heads_total, want.heads_total, "{label}");
+    let want_density = want.kept_blocks as f32 / want.blocks_total as f32;
+    assert_eq!(resp.kept_density.to_bits(), want_density.to_bits(), "{label}");
+    assert_eq!(resp.context_len, prefix.len(), "{label}");
+    assert!(!resp.rejected, "{label}");
+    assert_eq!(resp.reason, None, "{label}");
+    assert!(resp.sim_seconds > 0.0, "{label}: sim timing");
+}
+
+#[test]
+fn batched_decode_fanout_matrix_bitwise() {
+    // The tentpole matrix: batch sizes {1, 4, 8} × sessions-per-batch
+    // {1, b} × pruning knobs × fan-out widths {1, all}. Every response
+    // of every batched pop — chained same-session steps and
+    // cross-session fan-outs alike — must be bitwise the full-recompute
+    // reference of its session prefix, so batch composition and thread
+    // count never change results.
+    let mut rng = SplitMix64::new(0xBA7C);
+    for &(rho, tau) in &[(0.0f32, f32::NEG_INFINITY), (0.4, 0.0), (0.9, 1e9)] {
+        for &b in &[1usize, 4, 8] {
+            for &sessions in &[1usize, b] {
+                for threads in [1usize, configured_threads()] {
+                    let mode = ServeMode::Hdp { rho, tau, qstep: 1.0 / 4096.0 };
+                    let eng = engine(mode, threads, b);
+                    let mut ctx: Vec<Vec<i32>> = vec![Vec::new(); sessions];
+                    let mut id = 0u64;
+                    for round in 0..3 {
+                        // One popped batch of b decode steps:
+                        // sessions == 1 chains b steps of one stream
+                        // inside the batch; sessions == b decodes b
+                        // streams at once. Odd prefills leave every
+                        // later step on a mid-block (ragged) context.
+                        let mut batch = Vec::with_capacity(b);
+                        let mut after: Vec<(usize, usize)> = Vec::new();
+                        for k in 0..b {
+                            let s = k % sessions;
+                            let n = if ctx[s].is_empty() { 3 } else { 1 };
+                            let toks: Vec<i32> = (0..n)
+                                .map(|_| rng.next_below(30_000) as i32)
+                                .collect();
+                            let pos = ctx[s].len();
+                            ctx[s].extend_from_slice(&toks);
+                            batch.push(Request::decode_at(id, s as u64, pos, toks));
+                            after.push((s, ctx[s].len()));
+                            id += 1;
+                        }
+                        let resps = eng.serve_batch(&batch).unwrap();
+                        assert_eq!(resps.len(), b);
+                        for (resp, &(s, len)) in resps.iter().zip(&after) {
+                            assert_eq!(resp.session, Some(s as u64));
+                            check_against_reference(
+                                &eng, resp, &ctx[s][..len],
+                                &format!("rho={rho} tau={tau} b={b} \
+                                          sessions={sessions} \
+                                          threads={threads} round={round} \
+                                          req={}", resp.id),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_pop_equals_sequential_pops_bitwise() {
+    // Beyond reference equality: one batched pop of 8 decode steps and
+    // the same 8 steps served one request per pop, on fresh engines,
+    // are bitwise-identical response streams — the direct
+    // batched-vs-sequential pin (stats fields included).
+    let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
+    let mut rng = SplitMix64::new(0x5E0);
+    let mut schedule: Vec<(u64, Vec<i32>)> = Vec::new();
+    for s in 0..3u64 {
+        let n = 3 + s as usize; // odd/even prefills, mid-block included
+        schedule.push((s, (0..n).map(|_| rng.next_below(30_000) as i32).collect()));
+    }
+    for _ in 0..2 {
+        for s in 0..3u64 {
+            schedule.push((s, vec![rng.next_below(30_000) as i32]));
+        }
+    }
+    // (9 steps; serve the first 8 in one batch, engines sized to 8)
+    schedule.truncate(8);
+    let reqs: Vec<Request> = schedule
+        .iter()
+        .enumerate()
+        .map(|(id, (s, toks))| Request::decode(id as u64, *s, toks.clone()))
+        .collect();
+    let batched = engine(mode, 4, 8).serve_batch(&reqs).unwrap();
+    let seq_eng = engine(mode, 1, 8);
+    let sequential: Vec<_> = reqs
+        .iter()
+        .map(|r| seq_eng.serve_batch(std::slice::from_ref(r)).unwrap().remove(0))
+        .collect();
+    for (a, b) in batched.iter().zip(&sequential) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(bits(&a.outputs), bits(&b.outputs), "req {}", a.id);
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.heads_pruned, b.heads_pruned);
+        assert_eq!(a.heads_total, b.heads_total);
+        assert_eq!(a.kept_density.to_bits(), b.kept_density.to_bits());
+        assert_eq!(a.context_len, b.context_len);
+        assert_eq!(a.session, b.session);
+    }
+}
+
+#[test]
+fn eviction_mid_batch_replays_from_scratch_bitwise() {
+    // A page budget that fits one session: by the time a batch pairing
+    // both sessions is popped, the earlier session has been evicted —
+    // its share of the batched fan-out replays the whole history from
+    // scratch *inside* the batched step, concurrently with the warm
+    // session's step, and every output stays bitwise the reference.
+    let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
+    // GEOM = 2 layers × 3 heads = 6 HeadKvs per session ⇒ 6 pages min.
+    let eng = engine(mode, 2, 4).with_kv_capacity(6);
+    let mut rng = SplitMix64::new(0xE71C);
+    let mut next = |n: usize| -> Vec<i32> {
+        (0..n).map(|_| rng.next_below(30_000) as i32).collect()
+    };
+    // Grow A, then B (evicts A), then serve one batch with a step for
+    // each: A must rebuild mid-batch.
+    let mut ctx_a = next(5);
+    let mut ctx_b = next(4);
+    eng.serve_batch(&[Request::decode_at(0, 100, 0, ctx_a.clone())]).unwrap();
+    eng.serve_batch(&[Request::decode_at(1, 200, 0, ctx_b.clone())]).unwrap();
+    let rebuilds0 = eng.session_stats().unwrap().rebuilds;
+    let (ta, tb) = (next(1), next(1));
+    let (pa, pb) = (ctx_a.len(), ctx_b.len());
+    ctx_a.extend_from_slice(&ta);
+    ctx_b.extend_from_slice(&tb);
+    let resps = eng
+        .serve_batch(&[
+            Request::decode_at(2, 100, pa, ta),
+            Request::decode_at(3, 200, pb, tb),
+        ])
+        .unwrap();
+    check_against_reference(&eng, &resps[0], &ctx_a, "evicted session A");
+    check_against_reference(&eng, &resps[1], &ctx_b, "warm/evicted B");
+    let stats = eng.session_stats().unwrap();
+    assert!(stats.rebuilds > rebuilds0,
+            "a session must have replayed inside the batch: {stats:?}");
+    assert!(stats.evictions >= 1, "{stats:?}");
+}
+
+#[test]
+fn stream_gap_detection_refuses_unsynced_resubmission() {
+    // The server-side gap-detection bugfix: a client whose step was
+    // rejected but keeps streaming is refused with a typed error until
+    // it resyncs from the server's committed position — and the
+    // resynced stream is bitwise the never-gapped one.
+    let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
+    let eng = engine(mode, 2, 4);
+    let mut ctx: Vec<i32> = vec![5, 6, 7];
+    eng.serve_batch(&[Request::decode_at(0, 9, 0, ctx.clone())]).unwrap();
+    // The client's step at pos 3 (token 4) was rejected upstream
+    // (admission) — it never reached the engine. The client ignores
+    // that and streams the *next* step as if it had landed:
+    let err = eng
+        .serve_batch(&[Request::decode_at(2, 9, 4, vec![8])])
+        .unwrap_err();
+    let gap = err.downcast_ref::<StreamGapError>().expect("typed gap error");
+    assert_eq!(
+        *gap,
+        StreamGapError { id: 2, session: 9, expected: 3, claimed: 4 }
+    );
+    assert!(format!("{err:#}").contains("stream gap"), "{err:#}");
+    // Resubmit-without-resync: refused again, nothing mutated.
+    assert!(eng.serve_batch(&[Request::decode_at(3, 9, 4, vec![8])]).is_err());
+    // A replayed (too-low) position is refused too.
+    let err = eng
+        .serve_batch(&[Request::decode_at(4, 9, 0, vec![1])])
+        .unwrap_err();
+    assert_eq!(err.downcast_ref::<StreamGapError>().unwrap().claimed, 0);
+    // Resync: replay the missing step at the committed position, then
+    // the held step — bitwise the uninterrupted stream.
+    ctx.push(4);
+    let resp = eng
+        .serve_batch(&[Request::decode_at(5, 9, 3, vec![4])])
+        .unwrap()
+        .remove(0);
+    check_against_reference(&eng, &resp, &ctx, "resynced missing step");
+    ctx.push(8);
+    let resp = eng
+        .serve_batch(&[Request::decode_at(6, 9, 4, vec![8])])
+        .unwrap()
+        .remove(0);
+    check_against_reference(&eng, &resp, &ctx, "held step after resync");
+}
+
+#[test]
+fn gap_rejection_carries_typed_reason_through_run_loop() {
+    // Through the serving loop: the gapped step's rejection response
+    // names StreamGap with both positions; the innocent co-batched
+    // request is a plain shed (nothing mutated — resubmit as-is).
+    let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
+    let eng = engine(mode, 1, 2);
+    eng.batcher.submit(Request::decode_at(0, 1, 0, vec![1, 2])).unwrap();
+    eng.batcher.submit(Request::decode_at(1, 2, 5, vec![3])).unwrap();
+    eng.batcher.close();
+    let mut resps = eng.run_loop();
+    resps.sort_by_key(|r| r.id);
+    assert_eq!(resps.len(), 2);
+    assert!(resps.iter().all(|r| r.rejected && r.label == -1));
+    assert_eq!(resps[0].reason, Some(RejectReason::Shed));
+    assert_eq!(resps[0].session, Some(1));
+    assert_eq!(
+        resps[1].reason,
+        Some(RejectReason::StreamGap { expected: 0, claimed: 5 })
+    );
+    assert_eq!(resps[1].session, Some(2), "rejection names the broken stream");
+}
+
+#[test]
+fn invalid_mixed_batch_mutates_no_session_state() {
+    // Whole-batch decode validation must be side-effect-free: a mixed
+    // batch carrying one invalid decode request (zero tokens, or a
+    // gapped stream) reports the error without touching *any* session
+    // — proven by resubmitting the valid step at its original position
+    // afterwards (had state advanced, gap detection would refuse it).
+    let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
+    let eng = engine(mode, 2, 4);
+    let mut rng = SplitMix64::new(0x51DE);
+    let oneshot_toks: Vec<i32> =
+        (0..16).map(|_| rng.next_below(30_000) as i32).collect();
+    eng.serve_batch(&[Request::decode_at(0, 1, 0, vec![5, 6])]).unwrap();
+    let stats0 = eng.session_stats().unwrap();
+
+    // zero-token decode co-batched with a valid one-shot + valid step
+    assert!(eng
+        .serve_batch(&[
+            Request::oneshot(1, oneshot_toks.clone()),
+            Request::decode_at(2, 1, 2, vec![7]),
+            Request::decode(3, 2, vec![]),
+        ])
+        .is_err());
+    // gapped stream co-batched with a valid step of another session
+    assert!(eng
+        .serve_batch(&[
+            Request::decode_at(4, 1, 2, vec![7]),
+            Request::decode_at(5, 3, 9, vec![8]),
+        ])
+        .is_err());
+    // No session was created, rebuilt, or evicted by either failure...
+    assert_eq!(eng.session_stats().unwrap(), stats0,
+               "failed batches must not move store stats");
+    // ...and the valid step still serves at its *original* position,
+    // bitwise the reference — its session's stream never moved.
+    let resp = eng
+        .serve_batch(&[Request::decode_at(6, 1, 2, vec![7])])
+        .unwrap()
+        .remove(0);
+    check_against_reference(&eng, &resp, &[5, 6, 7], "valid step after sheds");
+    // the never-created session decodes from scratch at pos 0
+    let resp = eng
+        .serve_batch(&[Request::decode_at(7, 3, 0, vec![8])])
+        .unwrap()
+        .remove(0);
+    check_against_reference(&eng, &resp, &[8], "session untouched by shed");
+}
+
+#[test]
+fn sticky_sharded_invalid_batch_sheds_without_mutating_state() {
+    // The same side-effect-free contract through the sticky-sharded
+    // path: a lane's batch pairing a valid step with a gapped one is
+    // shed whole (typed reason on the offender), and the valid step
+    // resubmitted at its original position serves bitwise afterwards.
+    let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
+    let coord = ShardedCoordinator::new_native_sticky(
+        2, GEOM, mode, SimConfig::edge(),
+        2, Duration::from_millis(1), 0, 1, usize::MAX, 1.0,
+    )
+    .unwrap();
+    let router = coord.router().expect("sticky router");
+    // Sessions 0 and 2 both pin to lane 0 (even ids, 2 shards); queue
+    // everything before the lanes start so the pops are deterministic:
+    // batch 1 = [valid step, gapped step] → shed; batch 2 = the same
+    // valid step + the gapped session's from-scratch resync.
+    router.submit(Request::decode_at(0, 0, 0, vec![1, 2])).unwrap();
+    router.submit(Request::decode_at(1, 2, 7, vec![3])).unwrap();
+    router.submit(Request::decode_at(2, 0, 0, vec![1, 2])).unwrap();
+    router.submit(Request::decode_at(3, 2, 0, vec![3])).unwrap();
+    router.close();
+    let report = coord.run().unwrap();
+    let mut resps = report.responses.clone();
+    resps.sort_by_key(|r| r.id);
+    assert_eq!(resps.len(), 4);
+    assert!(resps[0].rejected);
+    assert_eq!(resps[0].reason, Some(RejectReason::Shed));
+    assert!(resps[1].rejected);
+    assert_eq!(
+        resps[1].reason,
+        Some(RejectReason::StreamGap { expected: 0, claimed: 7 })
+    );
+    // The shed batch mutated nothing: the identical resubmissions
+    // served, bitwise the from-scratch references.
+    let ref_eng = engine(mode, 1, 4);
+    for (resp, ctx) in
+        [(&resps[2], vec![1, 2]), (&resps[3], vec![3])]
+    {
+        let want = decode_reference(&ref_eng, &ctx);
+        assert!(!resp.rejected, "req {}", resp.id);
+        assert_eq!(bits(&resp.outputs), bits(&want.outputs), "req {}", resp.id);
+        assert_eq!(resp.context_len, ctx.len());
+    }
 }

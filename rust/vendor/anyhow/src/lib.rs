@@ -12,17 +12,25 @@
 //!   `.unwrap()` failures stay readable.
 //! * Any `std::error::Error + Send + Sync + 'static` converts into
 //!   `Error` via `?`.
+//! * [`Error::new`] preserves the concrete error value, and
+//!   [`Error::downcast_ref`] recovers it anywhere along the context
+//!   chain — the typed-error path the serving engine uses to tell a
+//!   decode stream-gap refusal apart from a generic batch failure.
 //!
 //! `Error` intentionally does *not* implement `std::error::Error`
 //! (same as real anyhow) — that is what makes the blanket `From` and
 //! the dual `Context` impls coherent.
 
+use std::any::Any;
 use std::fmt::{self, Debug, Display};
 
-/// Error: a message plus an optional chain of causes.
+/// Error: a message plus an optional chain of causes, optionally
+/// carrying the concrete error value it was built from (for
+/// [`Error::downcast_ref`]).
 pub struct Error {
     msg: String,
     source: Option<Box<Error>>,
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 /// `anyhow::Result<T>` — `Result` with `Error` as the default error.
@@ -31,12 +39,31 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 impl Error {
     /// Build an error from anything displayable.
     pub fn msg<M: Display>(m: M) -> Self {
-        Error { msg: m.to_string(), source: None }
+        Error { msg: m.to_string(), source: None, payload: None }
+    }
+
+    /// Build an error from a concrete error value, keeping the value
+    /// so callers can recover it with [`Error::downcast_ref`] (real
+    /// anyhow's typed-error entry point).
+    pub fn new<E>(e: E) -> Self
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error { msg: e.to_string(), source: None, payload: Some(Box::new(e)) }
     }
 
     /// Wrap `self` with an outer context message.
     pub fn context<C: Display>(self, context: C) -> Self {
-        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+        Error { msg: context.to_string(), source: Some(Box::new(self)), payload: None }
+    }
+
+    /// The first `T` carried anywhere along the context chain
+    /// (outermost first), if this error was built from one via
+    /// [`Error::new`].
+    pub fn downcast_ref<T: 'static>(&self) -> Option<&T> {
+        self.chain().find_map(|e| {
+            e.payload.as_ref().and_then(|p| p.downcast_ref::<T>())
+        })
     }
 
     /// The cause chain, outermost first (the error itself included).
@@ -111,9 +138,11 @@ where
         }
         let mut err: Option<Error> = None;
         for m in msgs.into_iter().rev() {
-            err = Some(Error { msg: m, source: err.map(Box::new) });
+            err = Some(Error { msg: m, source: err.map(Box::new), payload: None });
         }
-        err.expect("at least one message")
+        let mut err = err.expect("at least one message");
+        err.payload = Some(Box::new(e)); // keep the value for downcast_ref
+        err
     }
 }
 
@@ -274,6 +303,40 @@ mod tests {
         }
         assert!(parse("nope").is_err());
         assert_eq!(parse("5").unwrap(), 5);
+    }
+
+    #[derive(Debug, PartialEq)]
+    struct Typed(u32);
+
+    impl Display for Typed {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "typed error {}", self.0)
+        }
+    }
+
+    impl std::error::Error for Typed {}
+
+    #[test]
+    fn new_preserves_value_for_downcast() {
+        let e = Error::new(Typed(7));
+        assert_eq!(e.to_string(), "typed error 7");
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed(7)));
+        assert!(e.downcast_ref::<std::io::Error>().is_none());
+        // ...and the value survives added context layers.
+        let wrapped = e.context("outer");
+        assert_eq!(wrapped.downcast_ref::<Typed>(), Some(&Typed(7)));
+        // messages without a payload downcast to nothing
+        assert!(Error::msg("plain").downcast_ref::<Typed>().is_none());
+    }
+
+    #[test]
+    fn question_mark_preserves_value_for_downcast() {
+        fn fails() -> Result<()> {
+            Err(Typed(9))?;
+            Ok(())
+        }
+        let e = fails().unwrap_err();
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed(9)));
     }
 
     #[test]

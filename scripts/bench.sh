@@ -18,7 +18,10 @@
 #   * `serve_sharded shards=4 b=8` must stay >= 1.5x the throughput of
 #     `serve_sharded shards=1 b=8` on a multi-core runner (lane scaling);
 #   * `decode_step ctx=1024 (cached)` must stay >= 3x the throughput of
-#     `full_recompute ctx=1024 (one token)` (KV-cache decode scaling).
+#     `full_recompute ctx=1024 (one token)` (KV-cache decode scaling);
+#   * `decode_batch b=8 sessions=8 (one fan-out)` must stay >= 2x the
+#     throughput of `decode_one b=8 (sequential x8)` on a multi-core
+#     runner (cross-session batched decode fan-out).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

@@ -12,9 +12,12 @@ cargo build --release --all-targets
 
 cargo test -q --lib --bins
 # Decode conformance as its own named gate: every incremental decode
-# step (prefill, mid-block lengths, eviction rebuilds, sticky shards)
-# must be bitwise identical to the full-recompute reference — a failure
-# here must identify itself, not hide inside the glob below.
+# step (prefill, mid-block lengths, eviction rebuilds, sticky shards,
+# and the batched sessions×layers×heads fan-out matrix — batch sizes ×
+# sessions-per-batch × threads, plus the stream-gap and
+# side-effect-free validation regressions) must be bitwise identical
+# to the full-recompute reference — a failure here must identify
+# itself, not hide inside the glob below.
 cargo test -q --test decode_conformance
 # Integration harnesses as an explicit second gate (auto-discovers any
 # future file under rust/tests/): serve_conformance proves the batched
