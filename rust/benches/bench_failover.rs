@@ -1,0 +1,218 @@
+//! Failover benchmark: what a lane death or a cooperative drain
+//! *costs* — recovery latency (failure detected → queued work re-homed
+//! to survivors) and the serving-throughput dip of a chaos run versus
+//! the same schedule on a healthy fleet. Each sample is one complete
+//! sticky-sharded decode run (8 sessions, 4 lanes) driven by a live
+//! producer; the kill scenario fires an injected `FaultPlan` on lane 0
+//! and the drain scenario retires lane 1 mid-traffic. `scripts/bench.sh`
+//! archives the snapshot as `BENCH_failover.json`; the headlines to
+//! watch are the **sub-millisecond recovery** (re-homing is queue
+//! surgery plus journal bookkeeping, not state copying) and the
+//! throughput dip staying a **fraction of one lane's share** (the
+//! survivors absorb the victim's work; they do not stall).
+//!
+//! ```sh
+//! cargo bench --bench bench_failover -- --json BENCH_failover.json
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hdp::coordinator::{FaultPlan, LaneState, NativeModelConfig, Request,
+                       ServeMode, ShardedCoordinator};
+use hdp::sim::SimConfig;
+use hdp::util::bench::{fmt_time, measurements_json, Measurement};
+
+const GEOM: NativeModelConfig =
+    NativeModelConfig { n_layers: 2, n_heads: 3, d_head: 16 };
+const SHARDS: usize = 4;
+const SESSIONS: u64 = 8;
+const PREFILL: usize = 8;
+
+#[derive(Clone, Copy, PartialEq)]
+enum Scenario {
+    Healthy,
+    Kill,
+    Drain,
+}
+
+/// One complete chaos run; returns `(wall_seconds, requests_served,
+/// recovery_seconds)` — recovery is 0.0 on the healthy baseline.
+fn run_once(scenario: Scenario, rounds: usize) -> (f64, usize, f64) {
+    let mode = ServeMode::Hdp { rho: 0.5, tau: 0.0, qstep: 1.0 / 4096.0 };
+    let mut coord = ShardedCoordinator::new_native_sticky(
+        SHARDS, GEOM, mode, SimConfig::edge(),
+        4, Duration::from_millis(1), 0, 1, usize::MAX, 1.0,
+    )
+    .expect("native sticky coordinator");
+    if scenario == Scenario::Kill {
+        coord = coord.with_fault(
+            0,
+            FaultPlan { kill_at_pop: Some(4), ..FaultPlan::default() },
+        );
+    }
+    let coord = Arc::new(coord);
+    let router = coord.router().expect("sticky router");
+    let ready = coord.readiness();
+    let metrics = Arc::clone(coord.metrics());
+    let directory = coord.directory();
+    let journal = Arc::clone(coord.journal().expect("sticky mode journals"));
+    let total = SESSIONS as usize * (1 + rounds);
+
+    let drainer = (scenario == Scenario::Drain).then(|| {
+        let c = Arc::clone(&coord);
+        std::thread::spawn(move || {
+            // Let every session commit its prefill, then retire lane 1
+            // under live traffic.
+            while journal.stats().records < SESSIONS {
+                std::thread::sleep(Duration::from_micros(100));
+            }
+            c.drain_lane(1).expect("drain of a healthy non-last lane");
+        })
+    });
+
+    let t0 = Instant::now();
+    let producer = std::thread::spawn(move || {
+        assert!(ready.wait_any(), "lanes must come up");
+        let mut id = 0u64;
+        for s in 0..SESSIONS {
+            let tokens: Vec<i32> =
+                (0..PREFILL).map(|i| ((i * 7 + s as usize) % 30_000) as i32).collect();
+            router.submit(Request::decode_at(id, s, 0, tokens)).unwrap();
+            id += 1;
+        }
+        for r in 0..rounds {
+            for s in 0..SESSIONS {
+                let tok = ((r * 13 + s as usize * 5) % 30_000) as i32;
+                router
+                    .submit(Request::decode_at(id, s, PREFILL + r, vec![tok]))
+                    .unwrap();
+                id += 1;
+            }
+        }
+        // Close only once any injected failover resolved, so re-homed
+        // work still finds open survivor queues.
+        match scenario {
+            Scenario::Healthy => {}
+            Scenario::Kill => {
+                while metrics.lane_deaths() == 0 {
+                    std::thread::sleep(Duration::from_micros(100));
+                }
+            }
+            Scenario::Drain => {
+                while directory.state(1) != LaneState::Retired {
+                    std::thread::sleep(Duration::from_micros(100));
+                }
+            }
+        }
+        router.close();
+    });
+    let report = coord.run().expect("degraded, never failed");
+    producer.join().unwrap();
+    if let Some(d) = drainer {
+        d.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // Keep the numbers honest: a chaos run that loses work would
+    // benchmark a different (broken) system.
+    let served = report.responses.iter().filter(|r| !r.rejected).count();
+    assert_eq!(served, total, "zero lost requests");
+    (wall, total, report.metrics.recovery_quantile(0.5))
+}
+
+/// Repeat a scenario and fold it into two measurements: serving
+/// throughput (tokens/s over the whole run) and — for chaos scenarios
+/// — the recovery latency the coordinator recorded.
+fn measure(
+    name: &str,
+    scenario: Scenario,
+    rounds: usize,
+    runs: usize,
+    ms: &mut Vec<Measurement>,
+) -> f64 {
+    let mut walls = Vec::with_capacity(runs);
+    let mut recoveries = Vec::with_capacity(runs);
+    let mut units = 0usize;
+    for _ in 0..runs {
+        let (wall, total, recovery) = run_once(scenario, rounds);
+        walls.push(wall);
+        recoveries.push(recovery);
+        units = total;
+    }
+    let m = Measurement {
+        name: format!("decode_run {name}"),
+        samples: walls,
+        units_per_iter: Some((units as f64, "tok")),
+    };
+    println!("{}", m.report());
+    let rate = m.units_per_iter.unwrap().0 / m.mean();
+    ms.push(m);
+    if scenario != Scenario::Healthy {
+        let r = Measurement {
+            name: format!("recovery_latency {name}"),
+            samples: recoveries,
+            units_per_iter: None,
+        };
+        println!("{}", r.report());
+        ms.push(r);
+    }
+    rate
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut json_path: Option<String> = None;
+    let mut quick = false;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--json" => {
+                i += 1;
+                match argv.get(i) {
+                    Some(p) if !p.starts_with("--") => json_path = Some(p.clone()),
+                    _ => {
+                        eprintln!("bench_failover: --json needs a file path");
+                        std::process::exit(2);
+                    }
+                }
+            }
+            "--quick" => quick = true,
+            _ => {} // tolerate harness-injected flags
+        }
+        i += 1;
+    }
+    let (rounds, runs) = if quick { (16, 5) } else { (40, 12) };
+    let mut ms: Vec<Measurement> = Vec::new();
+
+    println!("== lane failover: {SESSIONS} sessions x {} steps over \
+              {SHARDS} lanes ({} layers x {} heads, d_head {}) ==",
+             rounds, GEOM.n_layers, GEOM.n_heads, GEOM.d_head);
+    let healthy = measure("healthy", Scenario::Healthy, rounds, runs, &mut ms);
+    let kill = measure("kill-lane-0", Scenario::Kill, rounds, runs, &mut ms);
+    let drain = measure("drain-lane-1", Scenario::Drain, rounds, runs, &mut ms);
+
+    let find = |needle: &str| ms.iter().find(|m| m.name.contains(needle));
+    if let Some(r) = find("recovery_latency kill") {
+        println!("\nrecovery latency after a lane kill: mean {} p95 {} \
+                  (queue re-homing + journal bookkeeping, no state copy)",
+                 fmt_time(r.mean()), fmt_time(r.p95()));
+    }
+    if let Some(r) = find("recovery_latency drain") {
+        println!("drain migration latency: mean {} p95 {} (includes \
+                  waiting out the in-flight batch)",
+                 fmt_time(r.mean()), fmt_time(r.p95()));
+    }
+    println!("throughput dip vs healthy: kill {:.1}% drain {:.1}% \
+              (one lane of {SHARDS} lost mid-run; full loss of its \
+              share would be {:.1}%)",
+             (1.0 - kill / healthy) * 100.0,
+             (1.0 - drain / healthy) * 100.0,
+             100.0 / SHARDS as f64);
+
+    if let Some(path) = json_path {
+        let doc = measurements_json("bench_failover", &ms);
+        std::fs::write(&path, format!("{doc}\n")).expect("write bench json");
+        println!("wrote {} ({} measurements)", path, ms.len());
+    }
+}

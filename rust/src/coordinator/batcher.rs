@@ -99,6 +99,13 @@ impl Request {
 struct Queue {
     items: VecDeque<Request>,
     closed: bool,
+    /// Batches popped by [`Batcher::next_batch`] but not yet reported
+    /// done ([`Batcher::batch_done`]). Counted under the queue mutex at
+    /// the pop itself, so `items.is_empty() && inflight == 0` (what
+    /// [`Batcher::wait_idle`] waits for) is a race-free quiescence
+    /// barrier — there is no window where a batch has left the queue
+    /// without being counted in flight.
+    inflight: usize,
 }
 
 /// Thread-safe dynamic batching queue.
@@ -117,7 +124,7 @@ impl Batcher {
     pub fn new(max_batch: usize, linger: Duration) -> Self {
         assert!(max_batch > 0);
         Self {
-            q: Mutex::new(Queue { items: VecDeque::new(), closed: false }),
+            q: Mutex::new(Queue { items: VecDeque::new(), closed: false, inflight: 0 }),
             cv: Condvar::new(),
             max_batch,
             linger,
@@ -159,18 +166,82 @@ impl Batcher {
         self.q.lock().unwrap().items.len()
     }
 
+    /// Recovery-path enqueue: accept `req` even when the queue is
+    /// closed or at `max_queue`. Failover re-routes requests that were
+    /// *already admitted* on a lane that died or drained — bouncing
+    /// them at the survivor's door would break the answered-exactly-
+    /// once contract, and the originating queue may legitimately have
+    /// closed by the time a recovery runs. Never exposed to clients.
+    pub(crate) fn readmit(&self, req: Request) {
+        let mut q = self.q.lock().unwrap();
+        q.items.push_back(req);
+        self.cv.notify_all();
+    }
+
+    /// Recovery-path *front* enqueue: put `reqs` back at the head of
+    /// the queue, preserving their order. A dying lane uses this to
+    /// return the batch it had popped but not committed, so the
+    /// requests re-home ahead of everything still queued behind them —
+    /// lane-FIFO per session survives the failure.
+    pub(crate) fn readmit_front(&self, reqs: Vec<Request>) {
+        let mut q = self.q.lock().unwrap();
+        for req in reqs.into_iter().rev() {
+            q.items.push_front(req);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Recovery-path drain: remove and return every queued request in
+    /// FIFO order, regardless of closed state. Failover empties a dead
+    /// or draining lane's queue with this before re-routing.
+    pub(crate) fn take_all(&self) -> Vec<Request> {
+        let mut q = self.q.lock().unwrap();
+        let taken = q.items.drain(..).collect();
+        self.cv.notify_all();
+        taken
+    }
+
+    /// Report a popped batch finished (served, shed, or readmitted) —
+    /// the other half of the in-flight accounting `next_batch` opens at
+    /// the pop. Engines call this on *every* exit from a pop, so
+    /// [`Batcher::wait_idle`] is a true quiescence barrier.
+    pub(crate) fn batch_done(&self) {
+        let mut q = self.q.lock().unwrap();
+        debug_assert!(q.inflight > 0, "batch_done without a popped batch");
+        q.inflight = q.inflight.saturating_sub(1);
+        self.cv.notify_all();
+    }
+
+    /// Batches currently popped but not yet reported done.
+    pub(crate) fn inflight(&self) -> usize {
+        self.q.lock().unwrap().inflight
+    }
+
+    /// Block until no popped batch is outstanding. The drain path calls
+    /// this after [`Batcher::take_all`]: once it returns, every request
+    /// this lane ever admitted has been either taken back or fully
+    /// answered, so migrating the lane's sessions is safe.
+    pub(crate) fn wait_idle(&self) {
+        let mut q = self.q.lock().unwrap();
+        while q.inflight > 0 {
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+
     /// Block until a batch is ready (full, lingered, or queue closed
     /// with leftovers). Returns `None` when closed and drained.
     pub fn next_batch(&self) -> Option<Vec<Request>> {
         let mut q = self.q.lock().unwrap();
         loop {
             if q.items.len() >= self.max_batch {
+                q.inflight += 1;
                 return Some(drain(&mut q.items, self.max_batch));
             }
             if let Some(first) = q.items.front() {
                 let age = first.enqueued.elapsed();
                 if age >= self.linger || q.closed {
                     let n = q.items.len().min(self.max_batch);
+                    q.inflight += 1;
                     return Some(drain(&mut q.items, n));
                 }
                 let wait = self.linger - age;
@@ -373,6 +444,70 @@ mod tests {
         assert_eq!(served, vec![0, 1, 2, 3, 4], "admitted prefix, FIFO, once");
         assert_eq!(b.pending(), 0);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn readmit_bypasses_bounds_and_close() {
+        // Recovery enqueues must land even where submit would refuse:
+        // a full queue and a closed queue both accept readmitted work.
+        let b = Batcher::new(4, Duration::from_secs(10)).with_max_queue(1);
+        b.submit(req(0)).unwrap();
+        assert!(b.submit(req(1)).is_err(), "admission bound holds");
+        b.readmit(req(1));
+        b.close();
+        b.readmit(req(2));
+        let ids: Vec<u64> =
+            std::iter::from_fn(|| b.next_batch()).flatten().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2], "readmitted work drains in order");
+    }
+
+    #[test]
+    fn readmit_front_restores_popped_batch_ahead_of_queue() {
+        // A dying lane hands back the batch it popped but never
+        // committed; those requests must run before anything that was
+        // queued behind them.
+        let b = Batcher::new(2, Duration::from_secs(10));
+        for i in 0..4 {
+            b.submit(req(i)).unwrap();
+        }
+        let popped = b.next_batch().unwrap();
+        assert_eq!(popped.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        b.readmit_front(popped);
+        b.close();
+        let ids: Vec<u64> =
+            std::iter::from_fn(|| b.next_batch()).flatten().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3], "front readmit preserves FIFO");
+    }
+
+    #[test]
+    fn take_all_drains_even_after_close() {
+        let b = Batcher::new(8, Duration::from_secs(10));
+        b.submit(req(5)).unwrap();
+        b.submit(req(6)).unwrap();
+        b.close();
+        let taken = b.take_all();
+        assert_eq!(taken.iter().map(|r| r.id).collect::<Vec<_>>(), vec![5, 6]);
+        assert_eq!(b.pending(), 0);
+        assert!(b.next_batch().is_none(), "closed and drained after take_all");
+    }
+
+    #[test]
+    fn inflight_counts_pops_and_wait_idle_blocks_until_done() {
+        let b = Arc::new(Batcher::new(2, Duration::from_secs(10)));
+        b.submit(req(0)).unwrap();
+        b.submit(req(1)).unwrap();
+        assert_eq!(b.inflight(), 0);
+        let _batch = b.next_batch().unwrap();
+        assert_eq!(b.inflight(), 1, "pop counted under the queue lock");
+        let w = Arc::clone(&b);
+        let waiter = std::thread::spawn(move || {
+            w.wait_idle();
+            w.inflight()
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!waiter.is_finished(), "wait_idle blocks while in flight");
+        b.batch_done();
+        assert_eq!(waiter.join().unwrap(), 0, "batch_done releases wait_idle");
     }
 
     #[test]

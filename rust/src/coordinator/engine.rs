@@ -47,7 +47,7 @@
 //! [`StreamGapError`]), so every admitted request still gets exactly
 //! one response. Served responses always carry `rejected = false`.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -61,7 +61,7 @@ use crate::attention::kernel::{BatchRequest, DecodeTask, MhaKernel,
 use crate::fixed::{self, QuantProfile};
 use crate::model::ParamStore;
 use crate::runtime::{lit_i32, lit_scalar_f32, to_vec_f32, Runtime};
-use crate::session::{KvCacheConfig, SessionStore, TokenRow};
+use crate::session::{KvCacheConfig, SessionJournal, SessionStore, TokenRow};
 use crate::sim::{self, SimConfig};
 use crate::tensor::Tensor;
 use crate::util::rng::SplitMix64;
@@ -75,6 +75,31 @@ use super::metrics::Metrics;
 pub enum ServeMode {
     Dense,
     Hdp { rho: f32, tau: f32, qstep: f32 },
+}
+
+/// Injected faults at the engine/lane boundary — the chaos harness's
+/// hook into [`Engine::run_serving`]. All fields default to "no
+/// fault"; pop counts are 1-based (`kill_at_pop: Some(1)` dies at the
+/// first batch the lane pops). Faults fire at the clean pop boundary,
+/// before any of the popped batch executed or committed, so recovery
+/// never sees a half-served batch.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultPlan {
+    /// Die at this pop, *before* serving: the popped batch is handed
+    /// back to the queue front (stream FIFO order preserved for
+    /// recovery) and the lane stops with an error — or a worker panic
+    /// when `kill_by_panic` is set; the coordinator must recover both
+    /// identically.
+    pub kill_at_pop: Option<u64>,
+    /// Kill by panicking instead of returning an error, exercising the
+    /// coordinator's panic-containment path.
+    pub kill_by_panic: bool,
+    /// Sleep this long at every pop before serving (slow-lane fault).
+    pub delay_pop: Option<std::time::Duration>,
+    /// Shed this pop's whole batch ([`RejectReason::Shed`]) without
+    /// executing it — a poisoned batch. Nothing mutates, every request
+    /// is answered, and the lane keeps serving; clients retry.
+    pub poison_at_pop: Option<u64>,
 }
 
 /// Why a request was *not served* — carried on the rejection
@@ -449,6 +474,14 @@ pub struct Engine {
     cal_scale: f32,
     /// Per-session KV caches for the decode path (native backend only).
     sessions: Option<Mutex<SessionStore>>,
+    /// Fleet-shared session journal (failover layer): committed decode
+    /// streams are recorded here, and re-homed sessions hydrate from
+    /// it before serving. `None` = no journaling (single-lane runs).
+    journal: Option<Arc<SessionJournal>>,
+    /// Injected faults for the chaos harness (default: none).
+    fault: FaultPlan,
+    /// Batches popped so far — the clock `fault` counts in.
+    pops: AtomicU64,
     backend: Backend,
     responses: Arc<Mutex<Vec<Response>>>,
     inflight: Arc<AtomicU64>,
@@ -478,6 +511,9 @@ impl Engine {
             keep_outputs: true,
             cal_scale: 1.0,
             sessions: None,
+            journal: None,
+            fault: FaultPlan::default(),
+            pops: AtomicU64::new(0),
             backend: Backend::Pjrt {
                 rt,
                 params: params.data.clone(),
@@ -533,6 +569,9 @@ impl Engine {
             keep_outputs: true,
             cal_scale: 1.0,
             sessions: Some(Mutex::new(SessionStore::new(kv_cfg))),
+            journal: None,
+            fault: FaultPlan::default(),
+            pops: AtomicU64::new(0),
             backend: Backend::Native { kernel, profile },
             responses: Arc::new(Mutex::new(Vec::new())),
             inflight: Arc::new(AtomicU64::new(0)),
@@ -568,6 +607,26 @@ impl Engine {
             cfg.capacity_pages = pages;
             *store = Mutex::new(SessionStore::new(cfg));
         }
+        self
+    }
+
+    /// Journal every committed decode stream (plus periodic θ/KV
+    /// checkpoints, when `journal` keeps them) into the fleet-shared
+    /// [`SessionJournal`] — the failover layer's source of truth. The
+    /// same call turns on *adoption*: a decode step whose journaled
+    /// stream is longer than this lane's local history was re-homed
+    /// here, and the lane hydrates it from the journal (bitwise
+    /// replay through the eviction-rebuild path) before gap detection
+    /// runs.
+    pub fn with_journal(mut self, journal: Arc<SessionJournal>) -> Self {
+        self.journal = Some(journal);
+        self
+    }
+
+    /// Inject `plan`'s faults into this lane's serving loop (the chaos
+    /// harness; the default plan injects nothing).
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault = plan;
         self
     }
 
@@ -804,7 +863,41 @@ impl Engine {
         // *batch* will have left the stream.
         let has_decode = reqs.iter().any(|r| r.session.is_some());
         if let (Some(store_mutex), true) = (&self.sessions, has_decode) {
-            let store = store_mutex.lock().unwrap();
+            let mut store = store_mutex.lock().unwrap();
+            // Journal hydration (failover adoption), before gap
+            // detection: a session whose journaled stream is longer
+            // than this lane's local history was re-homed here from a
+            // dead or draining lane. Adopt the journaled tokens (and
+            // checkpoint, when one is kept) so the step replays
+            // through the same eviction-rebuild path an evicted
+            // session uses — bitwise identical to never having moved.
+            // A policy-scale mismatch errs, shedding the batch: a
+            // divergent replay must never serve.
+            if let Some(journal) = &self.journal {
+                let mut seen: HashSet<u64> = HashSet::new();
+                for r in reqs {
+                    let Some(session) = r.session else { continue };
+                    if !seen.insert(session) {
+                        continue;
+                    }
+                    if journal.len(session) <= store.history_len(session) {
+                        continue;
+                    }
+                    if let Some(restore) =
+                        journal.restore_for(session, self.cal_scale)?
+                    {
+                        store.adopt(
+                            session,
+                            &restore.tokens,
+                            restore
+                                .checkpoint
+                                .as_ref()
+                                .map(|(at, snap)| (*at, snap.as_ref())),
+                        );
+                        self.metrics.record_session_rehomed();
+                    }
+                }
+            }
             let mut expect: HashMap<u64, usize> = HashMap::new();
             for r in reqs {
                 let Some(session) = r.session else { continue };
@@ -1108,6 +1201,22 @@ impl Engine {
                 let evictions0 = store.stats().evictions;
                 store.commit(g.session, &req.tokens);
                 let evictions = store.stats().evictions - evictions0;
+                if let Some(journal) = &self.journal {
+                    // Journal inside the commit phase: the journal is
+                    // always at least as current as any response the
+                    // fleet has produced, so a lane death after this
+                    // point loses nothing.
+                    journal.record(g.session, &req.tokens, self.cal_scale);
+                    // Checkpoint only after the session's *last* step
+                    // in the batch — that is the moment the live cache
+                    // holds exactly the committed stream (a snapshot
+                    // taken mid-group would be refused as
+                    // mispositioned).
+                    if k + 1 == g.idxs.len() && journal.wants_checkpoint(g.session)
+                    {
+                        journal.checkpoint(g.session, &g.cache);
+                    }
+                }
                 self.metrics.record_pruning(
                     stats.heads_pruned as u64, stats.heads_total as u64,
                     stats.kept_blocks as u64, stats.blocks_total as u64);
@@ -1164,7 +1273,40 @@ impl Engine {
     /// The native backend keeps the same shape: its parallelism lives
     /// inside `forward_batch`'s worker pool.
     pub fn run_loop(&self) -> Vec<Response> {
+        let (responses, died) = self.run_serving();
+        if let Some(e) = died {
+            eprintln!("lane stopped serving: {e:#}");
+        }
+        responses
+    }
+
+    /// [`Engine::run_loop`] with an explicit outcome: consume the
+    /// batcher until it closes and drains (`None`), or until this
+    /// lane's [`FaultPlan`] kills it (`Some(error)`). A killed lane
+    /// dies at the clean pop boundary — the popped batch is handed
+    /// back to the *front* of its queue, unexecuted and uncommitted,
+    /// so the failover recovery re-homes every stream in FIFO order.
+    /// The sharded coordinator runs lanes through this so a lane death
+    /// is a value it can recover from, not a process exit.
+    pub fn run_serving(&self) -> (Vec<Response>, Option<anyhow::Error>) {
         while let Some(batch) = self.batcher.next_batch() {
+            let pop = self.pops.fetch_add(1, Ordering::SeqCst) + 1;
+            if let Some(delay) = self.fault.delay_pop {
+                std::thread::sleep(delay);
+            }
+            if self.fault.kill_at_pop == Some(pop) {
+                self.batcher.readmit_front(batch);
+                self.batcher.batch_done();
+                if self.fault.kill_by_panic {
+                    panic!("injected fault: lane killed at pop {pop}");
+                }
+                return (
+                    self.take_responses(),
+                    Some(anyhow::anyhow!(
+                        "injected fault: lane killed at pop {pop}"
+                    )),
+                );
+            }
             // Queue wait measured at the pop itself — the pure
             // scheduling delay each request saw, before any compute
             // (the `queue wait@pop` report line; per-shard in the
@@ -1174,6 +1316,20 @@ impl Engine {
                 batch.iter().map(|r| (now - r.enqueued).as_secs_f64()).collect();
             self.metrics.record_queue_wait(&waits);
             self.inflight.fetch_add(1, Ordering::SeqCst);
+            if self.fault.poison_at_pop == Some(pop) {
+                // Poisoned batch: shed it whole, exactly like a batch
+                // that failed validation — nothing mutated, every
+                // request answered, the lane keeps serving. Clients
+                // retry (a shed decode step was never appended, so the
+                // retried step re-claims the same position bitwise).
+                eprintln!("injected fault: batch poisoned at pop {pop}");
+                self.responses.lock().unwrap().extend(batch.iter().map(|r| {
+                    Response::reject_because(r, RejectReason::Shed)
+                }));
+                self.inflight.fetch_sub(1, Ordering::SeqCst);
+                self.batcher.batch_done();
+                continue;
+            }
             match self.serve_batch(&batch) {
                 Ok(resps) => self.responses.lock().unwrap().extend(resps),
                 Err(e) => {
@@ -1203,7 +1359,28 @@ impl Engine {
                 }
             }
             self.inflight.fetch_sub(1, Ordering::SeqCst);
+            self.batcher.batch_done();
         }
-        std::mem::take(&mut self.responses.lock().unwrap())
+        (self.take_responses(), None)
+    }
+
+    /// Drain every response accumulated so far. Poison-robust: a lane
+    /// that died by panic mid-run must still surrender the responses it
+    /// already committed (the failover path extracts them through the
+    /// shared handle), so a poisoned mutex yields its data instead of
+    /// propagating the panic.
+    pub fn take_responses(&self) -> Vec<Response> {
+        let mut guard = match self.responses.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        std::mem::take(&mut *guard)
+    }
+
+    /// Shared handle to this engine's response sink — the coordinator
+    /// clones it *before* running the lane so a panicking lane's
+    /// committed responses survive the unwind.
+    pub fn responses_handle(&self) -> Arc<Mutex<Vec<Response>>> {
+        Arc::clone(&self.responses)
     }
 }

@@ -44,6 +44,16 @@ struct Inner {
     meas_heads_total: u64,
     meas_kept_blocks: u64,
     meas_blocks_total: u64,
+    // failover / draining (sticky fleet availability layer)
+    lane_deaths: u64,
+    lane_drains: u64,
+    /// Requests re-routed off a dead or draining lane to a survivor.
+    requests_rehomed: u64,
+    /// Sessions hydrated from the journal by an adopting lane.
+    sessions_rehomed: u64,
+    /// Recovery latency: failure (or drain start) → every stranded
+    /// request re-routed to a survivor's queue, seconds.
+    recovery: Histogram,
 }
 
 #[derive(Debug)]
@@ -163,6 +173,56 @@ impl Metrics {
         }
     }
 
+    /// Record one lane death: `rehomed` requests were re-routed to
+    /// survivors, `recovery_s` seconds after the failure was detected.
+    pub fn record_lane_death(&self, rehomed: u64, recovery_s: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.lane_deaths += 1;
+        m.requests_rehomed += rehomed;
+        m.recovery.record(recovery_s);
+    }
+
+    /// Record one cooperative lane drain: `rehomed` resident requests
+    /// migrated to survivors in `recovery_s` seconds.
+    pub fn record_lane_drain(&self, rehomed: u64, recovery_s: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.lane_drains += 1;
+        m.requests_rehomed += rehomed;
+        m.recovery.record(recovery_s);
+    }
+
+    /// Record one session hydrated from the journal (an adopting lane
+    /// rebuilt a re-homed session's state by replay).
+    pub fn record_session_rehomed(&self) {
+        self.inner.lock().unwrap().sessions_rehomed += 1;
+    }
+
+    pub fn lane_deaths(&self) -> u64 {
+        self.inner.lock().unwrap().lane_deaths
+    }
+
+    pub fn lane_drains(&self) -> u64 {
+        self.inner.lock().unwrap().lane_drains
+    }
+
+    pub fn requests_rehomed(&self) -> u64 {
+        self.inner.lock().unwrap().requests_rehomed
+    }
+
+    pub fn sessions_rehomed(&self) -> u64 {
+        self.inner.lock().unwrap().sessions_rehomed
+    }
+
+    /// Recovery-latency quantile over every death/drain recorded so
+    /// far, seconds (0.0 before any).
+    pub fn recovery_quantile(&self, q: f64) -> f64 {
+        self.inner.lock().unwrap().recovery.quantile(q)
+    }
+
+    pub fn recovery_count(&self) -> u64 {
+        self.inner.lock().unwrap().recovery.count()
+    }
+
     pub fn requests(&self) -> u64 {
         self.inner.lock().unwrap().requests
     }
@@ -200,6 +260,11 @@ impl Metrics {
         m.meas_heads_total += snap.meas_heads_total;
         m.meas_kept_blocks += snap.meas_kept_blocks;
         m.meas_blocks_total += snap.meas_blocks_total;
+        m.lane_deaths += snap.lane_deaths;
+        m.lane_drains += snap.lane_drains;
+        m.requests_rehomed += snap.requests_rehomed;
+        m.sessions_rehomed += snap.sessions_rehomed;
+        m.recovery.merge(&snap.recovery);
     }
 
     pub fn throughput_rps(&self) -> f64 {
@@ -251,6 +316,14 @@ impl Metrics {
                 m.sim_dram_bytes / 1e6,
                 m.heads_pruned,
                 m.heads_total,
+            ));
+        }
+        if m.lane_deaths + m.lane_drains > 0 {
+            s.push_str(&format!(
+                "failover       {} death(s), {} drain(s): {} requests \
+                 re-routed, {} sessions re-homed, recovery {}\n",
+                m.lane_deaths, m.lane_drains, m.requests_rehomed,
+                m.sessions_rehomed, m.recovery.summary("s"),
             ));
         }
         if m.meas_heads_total > 0 {
@@ -379,6 +452,54 @@ mod tests {
         assert!(r.contains("3/16 heads pruned"), "{r}");
         // the absorbed lane is untouched
         assert_eq!(b.requests(), 3);
+    }
+
+    #[test]
+    fn failover_counters_record_merge_and_report() {
+        let fleet = Metrics::new();
+        let lane = Metrics::new();
+        lane.record_lane_death(5, 0.002);
+        lane.record_session_rehomed();
+        lane.record_session_rehomed();
+        fleet.record_lane_drain(3, 0.001);
+        fleet.absorb(&lane);
+        assert_eq!(fleet.lane_deaths(), 1);
+        assert_eq!(fleet.lane_drains(), 1);
+        assert_eq!(fleet.requests_rehomed(), 8);
+        assert_eq!(fleet.sessions_rehomed(), 2);
+        assert_eq!(fleet.recovery_count(), 2);
+        assert_eq!(fleet.recovery_quantile(1.0), 0.002, "merged max exact");
+        let r = fleet.report();
+        assert!(r.contains("failover       1 death(s), 1 drain(s)"), "{r}");
+        assert!(r.contains("8 requests"), "{r}");
+        // quiet fleets don't print the failover line
+        assert!(!Metrics::new().report().contains("failover"));
+        // the absorbed lane is untouched
+        assert_eq!(lane.lane_deaths(), 1);
+        assert_eq!(lane.recovery_count(), 1);
+    }
+
+    #[test]
+    fn absorb_of_partial_lane_is_exactly_once() {
+        // A lane that died mid-run still has its partial counters
+        // merged into the fleet report exactly once: absorbing the
+        // fleet-side copy again (as a buggy re-home path might) must be
+        // detectable, so pin the arithmetic of a single absorb.
+        let fleet = Metrics::new();
+        let dead_lane = Metrics::new();
+        dead_lane.record_batch(2, &[0.001, 0.001], 0.004, &[0.005, 0.005]);
+        dead_lane.record_decode(7, 1, 0);
+        fleet.absorb(&dead_lane);
+        assert_eq!(fleet.requests(), 2);
+        assert_eq!(fleet.decode_tokens(), 7);
+        // the dead lane's view survives for post-mortem, unmerged
+        assert_eq!(dead_lane.requests(), 2);
+        // a second absorb would double-count — exactly what the shard
+        // runner must never do (its single-absorb discipline is pinned
+        // end to end in rust/tests/failover_conformance.rs).
+        fleet.absorb(&dead_lane);
+        assert_eq!(fleet.requests(), 4, "double absorb doubles: callers \
+                    must absorb a dead lane exactly once");
     }
 
     #[test]

@@ -15,9 +15,11 @@
 //!               │            (each: forward_batch → Metrics)
 //!               └─ reject → Response::reject (rejected = true)
 //!
-//! decode producers → SessionRouter (sticky: session % shards)
+//! decode producers → SessionRouter (sticky: session % shards,
+//!               re-homed by the LaneDirectory when a lane dies/drains)
 //!               → that lane's own Batcher → Engine decode path
 //!                 (SessionStore → KvCache pages → MhaKernel::decode_step)
+//!                 commits → SessionJournal (replayed on failover)
 //! ```
 
 pub mod batcher;
@@ -28,8 +30,9 @@ pub mod shard;
 pub use batcher::{Batcher, Request};
 pub use engine::{derive_head_inputs, derive_head_inputs_scaled,
                  derive_session_head_inputs, derive_token_row, pooled_label,
-                 Engine, NativeModelConfig, RejectReason, Response, ServeMode,
-                 StreamGapError};
+                 Engine, FaultPlan, NativeModelConfig, RejectReason, Response,
+                 ServeMode, StreamGapError};
 pub use metrics::Metrics;
-pub use shard::{EngineFactory, Readiness, SessionRouter, ShardReport,
-                ShardStats, ShardedCoordinator};
+pub use shard::{rehome_lane, EngineFactory, LaneDirectory, LaneState,
+                Readiness, ReadinessError, RetryPolicy, SessionRouter,
+                ShardReport, ShardStats, ShardedCoordinator};

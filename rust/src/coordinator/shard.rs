@@ -51,30 +51,65 @@
 //! response is still a pure per-request (per-session-stream) function,
 //! pinned across shard counts by `rust/tests/decode_conformance.rs`.
 //!
+//! # Lane lifecycle: failover and draining
+//!
+//! Sticky affinity raises the stakes of a lane failure: the lane *is*
+//! its sessions' home. The coordinator therefore tracks every lane in
+//! a [`LaneDirectory`] (`Up → Dead` on failure, `Up → Draining →
+//! Retired` on cooperative drain) and recovers by **re-homing**:
+//!
+//! 1. A dying lane stops at a clean pop boundary — its [`FaultPlan`]
+//!    (or a worker panic, contained per lane) hands the popped batch
+//!    back to the *front* of its queue uncommitted, so no request is
+//!    half-served.
+//! 2. Recovery marks the lane `Dead`, bumps the routing epoch, drains
+//!    the lane's queue, and readmits every stranded request to its
+//!    re-home lane ([`rehome_lane`] — deterministic, so identical
+//!    failure schedules reproduce identical assignments), all under
+//!    the directory's write lock so no submit can race the map change.
+//! 3. The adopting lane restores each re-homed session from the shared
+//!    [`SessionJournal`] — bitwise replay through the same
+//!    eviction-rebuild path an evicted session uses, optionally
+//!    accelerated by a θ/KV checkpoint. Surviving streams are bitwise
+//!    equal to an uninterrupted run (`rust/tests/failover_conformance.rs`).
+//!
+//! [`ShardedCoordinator::drain_lane`] is the cooperative variant: stop
+//! dispatch, wait for the in-flight batch, migrate queued work, retire
+//! the lane — same re-home map, zero lost requests. ARCHITECTURE.md
+//! (§ Failover & draining) has the full state diagram.
+//!
 //! # Metrics and degraded runs
 //!
 //! Each shard's engine records into its own [`Metrics`]; [`run`]
 //! merges them with [`Metrics::absorb`] into the coordinator's
 //! instance, so a multi-shard run still ends in one report (fleet-wide
 //! histograms, summed counters) plus per-shard [`ShardStats`] for
-//! load-balance visibility. A lane whose factory fails *degrades* the
-//! run — survivors pick up its batches and the failure is carried in
+//! load-balance visibility. A lane whose factory fails — or that dies
+//! mid-run — *degrades* the run: survivors pick up its work, its
+//! already-committed responses and metrics are still collected
+//! (exactly once), and the failure is carried in
 //! [`ShardReport::lane_errors`]; `run` errors only when every lane
-//! fails. Producers can gate traffic on [`Readiness::wait_any`] so a
-//! bounded queue doesn't mistake cold start for overload.
+//! fails to boot. Producers can gate traffic on [`Readiness::wait_any`]
+//! (or the typed [`Readiness::wait_any_timeout`]) so a bounded queue
+//! doesn't mistake cold start for overload.
 //!
 //! [`run`]: ShardedCoordinator::run
 
-use std::sync::{Arc, Condvar, Mutex};
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::session::SessionJournal;
 use crate::sim::SimConfig;
 
 use super::batcher::{Batcher, Request};
-use super::engine::{Engine, NativeModelConfig, Response, ServeMode};
+use super::engine::{
+    Engine, FaultPlan, NativeModelConfig, RejectReason, Response, ServeMode,
+};
 use super::metrics::Metrics;
 
 /// Builds one shard's engine over the shared batcher. Called once per
@@ -84,9 +119,139 @@ use super::metrics::Metrics;
 pub type EngineFactory =
     Box<dyn Fn(usize, Arc<Batcher>) -> Result<Engine> + Send + Sync>;
 
-/// What one shard thread hands back: its index, the responses it
-/// served, and its engine's metrics.
-type ShardRun = (usize, Vec<Response>, Arc<Metrics>);
+/// What one shard thread hands back: the responses it committed (even
+/// a lane that died mid-run surrenders what it served), its engine's
+/// metrics (absorbed exactly once), and how it ended.
+struct LaneRun {
+    shard: usize,
+    responses: Vec<Response>,
+    metrics: Arc<Metrics>,
+    /// `Some` when the lane died mid-run (injected fault or contained
+    /// panic) — its queued work was already re-homed to survivors.
+    died: Option<anyhow::Error>,
+}
+
+/// One lane's position in its lifecycle. Healthy lanes are `Up`;
+/// failure moves a lane to `Dead` (its work re-homes to survivors) and
+/// cooperative draining moves it `Draining → Retired` (same re-home,
+/// but the lane finishes its in-flight batch first). Dead and retired
+/// lanes never come back — sessions don't move twice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaneState {
+    /// Serving: routable, pulling batches.
+    Up,
+    /// Cooperatively winding down: dispatch stopped, in-flight batch
+    /// finishing, queued work migrating.
+    Draining,
+    /// Failed (injected fault, worker panic, or factory error): queued
+    /// work was re-homed, committed work already journaled.
+    Dead,
+    /// Drained to completion: every resident session migrated.
+    Retired,
+}
+
+impl fmt::Display for LaneState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            LaneState::Up => "up",
+            LaneState::Draining => "draining",
+            LaneState::Dead => "dead",
+            LaneState::Retired => "retired",
+        };
+        f.write_str(s)
+    }
+}
+
+#[derive(Debug)]
+struct DirectoryInner {
+    states: Vec<LaneState>,
+    /// Bumped on every state change — producers can cheaply detect that
+    /// the routing map moved under them.
+    epoch: u64,
+}
+
+/// Shared, epoch-versioned lane state map. The [`SessionRouter`] reads
+/// it on every submit (routing around non-`Up` lanes); recovery and
+/// draining mutate it under the write lock, so a submit can never
+/// interleave between "lane marked dead" and "its queue re-homed" —
+/// the window where a request could strand on a corpse.
+#[derive(Clone)]
+pub struct LaneDirectory {
+    inner: Arc<RwLock<DirectoryInner>>,
+}
+
+impl LaneDirectory {
+    fn new(lanes: usize) -> Self {
+        Self {
+            inner: Arc::new(RwLock::new(DirectoryInner {
+                states: vec![LaneState::Up; lanes],
+                epoch: 0,
+            })),
+        }
+    }
+
+    // Poison-robust guards: lane panics are contained per lane and the
+    // directory lock is never held across one, but recovery must keep
+    // working even if that invariant ever slips.
+    fn read(&self) -> RwLockReadGuard<'_, DirectoryInner> {
+        match self.inner.read() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    fn write(&self) -> RwLockWriteGuard<'_, DirectoryInner> {
+        match self.inner.write() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Current state of `lane`.
+    pub fn state(&self, lane: usize) -> LaneState {
+        self.read().states[lane]
+    }
+
+    /// Snapshot of every lane's state (index = lane).
+    pub fn states(&self) -> Vec<LaneState> {
+        self.read().states.clone()
+    }
+
+    /// Routing-map version: bumped on every lane state change.
+    pub fn epoch(&self) -> u64 {
+        self.read().epoch
+    }
+
+    /// Lanes currently serving.
+    pub fn lanes_up(&self) -> usize {
+        self.read().states.iter().filter(|s| **s == LaneState::Up).count()
+    }
+}
+
+/// The deterministic re-home map: where `session`'s requests go given
+/// the current lane states. The primary lane (`session % lanes`) wins
+/// while it is `Up`; otherwise the session re-homes to one of the `Up`
+/// lanes, chosen by `session % |up|` over the ascending lane index
+/// list. `None` when no lane is up (unroutable — the caller sheds).
+///
+/// Pure function of `(session, states)`: identical failure schedules
+/// reproduce identical session→lane assignments, across runs and
+/// across shard counts — what makes failover testable bitwise and
+/// keeps every step of one session on one adopter (lane-FIFO order
+/// survives the failure).
+pub fn rehome_lane(session: u64, states: &[LaneState]) -> Option<usize> {
+    let primary = (session % states.len() as u64) as usize;
+    if states[primary] == LaneState::Up {
+        return Some(primary);
+    }
+    let up: Vec<usize> = (0..states.len())
+        .filter(|&i| states[i] == LaneState::Up)
+        .collect();
+    if up.is_empty() {
+        return None;
+    }
+    Some(up[(session % up.len() as u64) as usize])
+}
 
 #[derive(Debug, Default)]
 struct LaneCounts {
@@ -94,6 +259,33 @@ struct LaneCounts {
     up: usize,
     failed: usize,
 }
+
+/// Typed outcome of a bounded readiness wait — distinguishes "the
+/// fleet is definitively down" from "still booting when patience ran
+/// out", which call for different producer reactions (give up vs.
+/// retry / lengthen the deadline).
+#[derive(Debug, PartialEq, Eq)]
+pub enum ReadinessError {
+    /// Every lane's factory failed: nothing will ever drain the queue.
+    AllLanesFailed { lanes: usize },
+    /// No lane came up (or definitively failed) within the deadline.
+    Timeout { waited: Duration },
+}
+
+impl fmt::Display for ReadinessError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReadinessError::AllLanesFailed { lanes } => {
+                write!(f, "all {lanes} lane(s) failed to construct")
+            }
+            ReadinessError::Timeout { waited } => {
+                write!(f, "no lane came up within {waited:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ReadinessError {}
 
 /// Cross-thread readiness latch for a sharded run: producers hold
 /// their submissions until a lane is actually pulling batches, so a
@@ -140,16 +332,62 @@ impl Readiness {
         }
         g.up > 0
     }
+
+    /// [`Readiness::wait_any`] with a deadline: `Ok(())` once a lane
+    /// serves, or a typed [`ReadinessError`] — all lanes failed, or the
+    /// deadline passed first. A coordinator that was never `run` simply
+    /// times out (no lane ever resolves).
+    pub fn wait_any_timeout(
+        &self,
+        timeout: Duration,
+    ) -> Result<(), ReadinessError> {
+        let (m, cv) = &*self.state;
+        let deadline = Instant::now() + timeout;
+        let mut g = m.lock().unwrap();
+        loop {
+            if g.up > 0 {
+                return Ok(());
+            }
+            if g.up + g.failed >= g.shards {
+                return Err(ReadinessError::AllLanesFailed { lanes: g.shards });
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(ReadinessError::Timeout { waited: timeout });
+            }
+            let (guard, _timeout) = cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+}
+
+/// Bounded exponential backoff for retrying admission-rejected
+/// submits ([`SessionRouter::submit_with_retry`]): `max_retries`
+/// re-attempts, sleeping `base_backoff` before the first and doubling
+/// each round. The default (5 retries from 200µs) rides out a batch
+/// drain or a failover window without hammering the door.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    pub max_retries: u32,
+    pub base_backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { max_retries: 5, base_backoff: Duration::from_micros(200) }
+    }
 }
 
 /// Routes requests to lane batchers when the coordinator runs sticky
-/// (per-lane queues): decode steps go to their session's home lane —
-/// `session % lanes`, the same lane every time, where the KV cache
-/// lives — and one-shots to the least-loaded lane. Cloneable; hand one
-/// to each producer thread.
+/// (per-lane queues): decode steps go to their session's home lane
+/// under the current [`LaneDirectory`] map ([`rehome_lane`] — the
+/// primary `session % lanes` while it's up, its deterministic adopter
+/// after a failure) and one-shots to the least-loaded `Up` lane.
+/// Cloneable; hand one to each producer thread.
 #[derive(Clone)]
 pub struct SessionRouter {
     lanes: Vec<Arc<Batcher>>,
+    directory: LaneDirectory,
 }
 
 impl SessionRouter {
@@ -157,22 +395,66 @@ impl SessionRouter {
         self.lanes.len()
     }
 
-    /// The lane a request routes to (sticky for decode sessions).
-    pub fn lane_of(&self, req: &Request) -> usize {
+    /// The lane state map this router routes by.
+    pub fn directory(&self) -> &LaneDirectory {
+        &self.directory
+    }
+
+    fn route(&self, req: &Request, states: &[LaneState]) -> Option<usize> {
         match req.session {
-            Some(s) => (s % self.lanes.len() as u64) as usize,
-            None => (0..self.lanes.len())
-                .min_by_key(|&i| self.lanes[i].pending())
-                .unwrap_or(0),
+            Some(s) => rehome_lane(s, states),
+            None => (0..states.len())
+                .filter(|&i| states[i] == LaneState::Up)
+                .min_by_key(|&i| self.lanes[i].pending()),
         }
+    }
+
+    /// The lane a request routes to right now (sticky for decode
+    /// sessions); `None` when no lane is up.
+    pub fn lane_of(&self, req: &Request) -> Option<usize> {
+        let guard = self.directory.read();
+        self.route(req, &guard.states)
     }
 
     /// Submit through the sticky routing; the admission contract is
     /// the lane batcher's (`Err(Request)` hands a rejected request
-    /// back, see [`Batcher::submit`]).
+    /// back, see [`Batcher::submit`]) — and an unroutable request (no
+    /// lane up) is handed back the same way. The directory read lock
+    /// is held across route *and* enqueue, so a concurrent failover
+    /// can't retarget the map between the two: a request either lands
+    /// before the recovery drains the dying lane's queue (and is
+    /// re-homed with it) or routes on the post-failure map.
     pub fn submit(&self, req: Request) -> Result<(), Request> {
-        let lane = self.lane_of(&req);
+        let guard = self.directory.read();
+        let Some(lane) = self.route(&req, &guard.states) else {
+            return Err(req);
+        };
         self.lanes[lane].submit(req)
+    }
+
+    /// [`SessionRouter::submit`] with bounded exponential backoff: a
+    /// rejected submit (queue full, or mid-failover with no lane up)
+    /// is retried per `policy`, and only handed back as `Err` once the
+    /// budget is exhausted. Safe for decode streams: a rejected step
+    /// was never enqueued, so the retry claims the same stream
+    /// position and the served stream stays bitwise identical
+    /// (`shed_then_retry` in `rust/tests/failover_conformance.rs`).
+    pub fn submit_with_retry(
+        &self,
+        req: Request,
+        policy: &RetryPolicy,
+    ) -> Result<(), Request> {
+        let mut req = req;
+        let mut backoff = policy.base_backoff;
+        for _ in 0..policy.max_retries {
+            match self.submit(req) {
+                Ok(()) => return Ok(()),
+                Err(back) => req = back,
+            }
+            thread::sleep(backoff);
+            backoff *= 2;
+        }
+        self.submit(req)
     }
 
     /// Close every lane queue (pending requests still drain).
@@ -209,11 +491,12 @@ pub struct ShardReport {
     pub responses: Vec<Response>,
     pub metrics: Arc<Metrics>,
     pub per_shard: Vec<ShardStats>,
-    /// Lanes whose engine factory failed, with their errors. Their
-    /// batches were picked up by the surviving lanes, so `responses`
-    /// is still complete — a degraded run, not a failed one. (When
-    /// *every* lane fails, [`ShardedCoordinator::run`] returns `Err`
-    /// instead.)
+    /// Lanes that failed — factory errors and mid-run deaths (injected
+    /// faults, contained panics) alike. Their queued work was re-homed
+    /// to the surviving lanes and their committed responses/metrics
+    /// are still in `responses` / `metrics`, so this is a *degraded*
+    /// run, not a failed one. (When *every* lane fails to boot,
+    /// [`ShardedCoordinator::run`] returns `Err` instead.)
     pub lane_errors: Vec<(usize, anyhow::Error)>,
 }
 
@@ -242,8 +525,8 @@ impl ShardReport {
 
 /// N engine lanes behind one batcher (work stealing), or behind one
 /// batcher *each* with sticky session routing (the decode path). See
-/// the module docs for the dispatch, determinism and admission-control
-/// contracts.
+/// the module docs for the dispatch, determinism, admission-control
+/// and failover contracts.
 pub struct ShardedCoordinator {
     batcher: Arc<Batcher>,
     /// Per-lane queues when running sticky (`None` = the shared-queue
@@ -251,6 +534,13 @@ pub struct ShardedCoordinator {
     lane_batchers: Option<Vec<Arc<Batcher>>>,
     metrics: Arc<Metrics>,
     readiness: Readiness,
+    directory: LaneDirectory,
+    /// Fleet-shared journal (sticky mode): every lane records its
+    /// committed streams and hydrates re-homed sessions from it.
+    journal: Option<Arc<SessionJournal>>,
+    /// Per-lane injected faults (all-default = no faults) — the chaos
+    /// harness's knob, applied to each lane's engine at boot.
+    faults: Vec<FaultPlan>,
     shards: usize,
     keep_outputs: bool,
     factory: EngineFactory,
@@ -273,6 +563,9 @@ impl ShardedCoordinator {
             lane_batchers: None,
             metrics: Arc::new(Metrics::new()),
             readiness: Readiness::new(shards),
+            directory: LaneDirectory::new(shards),
+            journal: None,
+            faults: vec![FaultPlan::default(); shards],
             shards,
             keep_outputs: true,
             factory: Box::new(factory),
@@ -287,6 +580,10 @@ impl ShardedCoordinator {
     /// `kv_capacity_pages` bounds each lane's session store
     /// (`usize::MAX` = unbounded); `cal_scale` is the native
     /// derivation's calibration (1.0 = unit grid).
+    ///
+    /// Sticky coordinators always carry a [`SessionJournal`] — lane
+    /// failover and draining depend on it; add θ/KV checkpoints with
+    /// [`ShardedCoordinator::with_checkpoints`].
     pub fn new_native_sticky(
         shards: usize,
         cfg: NativeModelConfig,
@@ -317,6 +614,7 @@ impl ShardedCoordinator {
             },
         )?;
         coord.lane_batchers = Some(lanes);
+        coord.journal = Some(Arc::new(SessionJournal::new()));
         Ok(coord)
     }
 
@@ -324,9 +622,10 @@ impl ShardedCoordinator {
     /// shared-queue work-stealing mode — submit to
     /// [`ShardedCoordinator::batcher`] there instead).
     pub fn router(&self) -> Option<SessionRouter> {
-        self.lane_batchers
-            .as_ref()
-            .map(|lanes| SessionRouter { lanes: lanes.clone() })
+        self.lane_batchers.as_ref().map(|lanes| SessionRouter {
+            lanes: lanes.clone(),
+            directory: self.directory.clone(),
+        })
     }
 
     /// N native in-process lanes with identical geometry and mode —
@@ -365,6 +664,26 @@ impl ShardedCoordinator {
         self
     }
 
+    /// Checkpoint each session's θ/KV state every `every` committed
+    /// tokens (0 = tokens-only journal), so a re-homed session replays
+    /// only the suffix past its last snapshot. Sticky mode only (the
+    /// shared-queue mode has no journal to configure).
+    pub fn with_checkpoints(mut self, every: usize) -> Self {
+        if self.journal.is_some() {
+            self.journal = Some(Arc::new(SessionJournal::with_checkpoints(every)));
+        }
+        self
+    }
+
+    /// Inject `plan` into lane `lane`'s engine — the chaos harness
+    /// knob (`hdp serve --demo --decode --kill-lane K --at-step S`
+    /// drives it from the CLI).
+    pub fn with_fault(mut self, lane: usize, plan: FaultPlan) -> Self {
+        assert!(lane < self.shards, "fault lane {lane} out of range");
+        self.faults[lane] = plan;
+        self
+    }
+
     pub fn batcher(&self) -> &Arc<Batcher> {
         &self.batcher
     }
@@ -373,8 +692,18 @@ impl ShardedCoordinator {
         self.shards
     }
 
+    /// The lane lifecycle map (shared with every router clone).
+    pub fn directory(&self) -> LaneDirectory {
+        self.directory.clone()
+    }
+
+    /// The fleet's session journal (`Some` in sticky mode).
+    pub fn journal(&self) -> Option<&Arc<SessionJournal>> {
+        self.journal.as_ref()
+    }
+
     /// The merged metrics (valid after [`ShardedCoordinator::run`];
-    /// empty before).
+    /// failover counters update live as recoveries happen).
     pub fn metrics(&self) -> &Arc<Metrics> {
         &self.metrics
     }
@@ -387,47 +716,221 @@ impl ShardedCoordinator {
         self.readiness.clone()
     }
 
+    /// Cooperatively drain lane `shard`: stop dispatch to it, let its
+    /// in-flight batch finish (commits land in store *and* journal),
+    /// migrate every queued request to the survivors under the same
+    /// deterministic re-home map a failure uses, and retire the lane.
+    /// Returns the number of requests migrated; resident sessions with
+    /// nothing queued re-home lazily — their next step routes to the
+    /// adopter, which hydrates from the journal.
+    ///
+    /// Refused (typed `Err`, no state change) when the coordinator is
+    /// not sticky, `shard` is out of range or not `Up`, or it is the
+    /// last `Up` lane (draining it would strand the fleet).
+    pub fn drain_lane(&self, shard: usize) -> Result<u64> {
+        let t0 = Instant::now();
+        let lanes = self.lane_batchers.as_ref().ok_or_else(|| {
+            anyhow::anyhow!("drain requires sticky per-lane queues")
+        })?;
+        anyhow::ensure!(
+            self.journal.is_some(),
+            "drain requires a session journal to migrate sessions"
+        );
+        anyhow::ensure!(
+            shard < self.shards,
+            "lane {shard} out of range ({} shards)",
+            self.shards
+        );
+        let mut dir = self.directory.write();
+        anyhow::ensure!(
+            dir.states[shard] == LaneState::Up,
+            "lane {shard} is {}, not up",
+            dir.states[shard]
+        );
+        let up = dir.states.iter().filter(|s| **s == LaneState::Up).count();
+        anyhow::ensure!(up > 1, "refusing to drain the last up lane");
+        dir.states[shard] = LaneState::Draining;
+        dir.epoch += 1;
+        // Dispatch stops here: the write lock holds every submit out
+        // while the map changes, and take_all empties what was queued.
+        let stranded = lanes[shard].take_all();
+        // Retire the consumer loop: close wakes it, wait_idle blocks
+        // until its in-flight batch (if any) reported done — those
+        // commits are in the journal, so the migrated sessions' next
+        // steps replay a complete stream.
+        lanes[shard].close();
+        lanes[shard].wait_idle();
+        let mut rehomed = 0u64;
+        for req in stranded {
+            let target = match req.session {
+                Some(s) => rehome_lane(s, &dir.states),
+                None => (0..dir.states.len())
+                    .filter(|&i| dir.states[i] == LaneState::Up)
+                    .min_by_key(|&i| lanes[i].pending()),
+            };
+            let lane = target.expect("up > 1: survivors exist");
+            lanes[lane].readmit(req);
+            rehomed += 1;
+        }
+        dir.states[shard] = LaneState::Retired;
+        dir.epoch += 1;
+        drop(dir);
+        self.metrics.record_lane_drain(rehomed, t0.elapsed().as_secs_f64());
+        Ok(rehomed)
+    }
+
+    /// Failure-path recovery for lane `shard`: mark it `Dead`, bump
+    /// the routing epoch, and re-home its queued requests to the
+    /// survivors — all under the directory write lock, so no submit
+    /// can race the map change. Unroutable requests (no lane up) go
+    /// back onto the dead lane's queue for the final sweep to shed
+    /// (answered exactly once, never silently dropped). Idempotent:
+    /// a lane that already left `Up` is not recovered twice.
+    fn recover_dead_lane(&self, shard: usize) {
+        let t0 = Instant::now();
+        let mut dir = self.directory.write();
+        if dir.states[shard] != LaneState::Up {
+            return;
+        }
+        dir.states[shard] = LaneState::Dead;
+        dir.epoch += 1;
+        let Some(lanes) = &self.lane_batchers else {
+            // Shared-queue mode: survivors pull from the same batcher,
+            // so nothing strands on a per-lane queue.
+            drop(dir);
+            self.metrics.record_lane_death(0, t0.elapsed().as_secs_f64());
+            return;
+        };
+        let stranded = lanes[shard].take_all();
+        let mut rehomed = 0u64;
+        let mut unroutable = Vec::new();
+        for req in stranded {
+            let target = match req.session {
+                Some(s) => rehome_lane(s, &dir.states),
+                None => (0..dir.states.len())
+                    .filter(|&i| dir.states[i] == LaneState::Up)
+                    .min_by_key(|&i| lanes[i].pending()),
+            };
+            match target {
+                Some(lane) => {
+                    lanes[lane].readmit(req);
+                    rehomed += 1;
+                }
+                None => unroutable.push(req),
+            }
+        }
+        if !unroutable.is_empty() {
+            lanes[shard].readmit_front(unroutable);
+        }
+        drop(dir);
+        self.metrics.record_lane_death(rehomed, t0.elapsed().as_secs_f64());
+    }
+
+    /// Exactly-one-response backstop, run after every lane finished:
+    /// shed whatever is still queued anywhere (possible only when no
+    /// survivor was left to adopt it). Answered with
+    /// [`RejectReason::Shed`], same carrier as any other shed.
+    fn sweep_stranded(&self) -> Vec<Response> {
+        let mut stranded: Vec<Request> = Vec::new();
+        match &self.lane_batchers {
+            Some(lanes) => {
+                for lane in lanes {
+                    stranded.extend(lane.take_all());
+                }
+            }
+            None => stranded.extend(self.batcher.take_all()),
+        }
+        stranded
+            .iter()
+            .map(|r| Response::reject_because(r, RejectReason::Shed))
+            .collect()
+    }
+
+    /// One shard thread's whole life: build the engine (journal +
+    /// fault plan applied), serve until the queue closes or the lane
+    /// dies, and — on death, by error *or contained panic* — recover
+    /// its queued work onto the survivors before reporting. Committed
+    /// responses and metrics are surrendered on every path.
+    fn run_lane(&self, shard: usize) -> Result<LaneRun, (usize, anyhow::Error)> {
+        // Sticky mode: each lane consumes its own queue; shared mode:
+        // every lane steals from the one batcher.
+        let lane_batcher = self
+            .lane_batchers
+            .as_ref()
+            .map_or(&self.batcher, |lanes| &lanes[shard]);
+        let built = (self.factory)(shard, Arc::clone(lane_batcher));
+        let engine = match built {
+            Ok(e) => {
+                self.readiness.lane_up();
+                let mut e = e.with_raw_outputs(self.keep_outputs);
+                if let Some(journal) = &self.journal {
+                    e = e.with_journal(Arc::clone(journal));
+                }
+                e.with_fault_plan(self.faults[shard])
+            }
+            Err(e) => {
+                self.readiness.lane_failed();
+                // A lane that never booted serves nothing: re-home
+                // anything already queued on it so survivors pick the
+                // work up instead of letting it strand.
+                self.recover_dead_lane(shard);
+                return Err((shard, e));
+            }
+        };
+        let responses_handle = engine.responses_handle();
+        let metrics = Arc::clone(&engine.metrics);
+        match catch_unwind(AssertUnwindSafe(|| engine.run_serving())) {
+            Ok((responses, None)) => {
+                Ok(LaneRun { shard, responses, metrics, died: None })
+            }
+            Ok((responses, Some(err))) => {
+                self.recover_dead_lane(shard);
+                Ok(LaneRun { shard, responses, metrics, died: Some(err) })
+            }
+            Err(payload) => {
+                // Contained worker panic: same recovery as an error
+                // death, and the responses the lane committed before
+                // panicking are extracted through the shared handle
+                // (poison-robust — the mutex may have died with it).
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "opaque panic payload".to_string());
+                self.recover_dead_lane(shard);
+                let responses = {
+                    let mut guard = match responses_handle.lock() {
+                        Ok(g) => g,
+                        Err(poisoned) => poisoned.into_inner(),
+                    };
+                    std::mem::take(&mut *guard)
+                };
+                Ok(LaneRun {
+                    shard,
+                    responses,
+                    metrics,
+                    died: Some(anyhow::anyhow!("lane panicked: {msg}")),
+                })
+            }
+        }
+    }
+
     /// Spawn one thread per shard, each building its engine via the
-    /// factory and consuming the shared batcher until it closes and
-    /// drains, then merge every lane's metrics. Blocks until all lanes
-    /// finish; producers feed (and close) the batcher from other
-    /// threads. A lane whose factory fails degrades the run, it does
-    /// not fail it: surviving lanes pick up its batches, every served
-    /// response is returned, and the failure lands in
-    /// [`ShardReport::lane_errors`]. Only when *every* lane fails —
-    /// nothing drained, nothing served — does `run` return `Err`.
+    /// factory and consuming its batcher until it closes and drains,
+    /// then merge every lane's metrics. Blocks until all lanes finish;
+    /// producers feed (and close) the batcher from other threads. A
+    /// lane that fails to boot — or dies mid-run to an injected fault
+    /// or contained panic — degrades the run, it does not fail it:
+    /// its queued work re-homes to the survivors, its committed
+    /// responses and metrics are collected exactly once, and the
+    /// failure lands in [`ShardReport::lane_errors`]. Only when
+    /// *every* lane fails to boot — nothing drained, nothing served —
+    /// does `run` return `Err`.
     pub fn run(&self) -> Result<ShardReport> {
-        let runs: Vec<Result<ShardRun, (usize, anyhow::Error)>> =
+        let runs: Vec<Result<LaneRun, (usize, anyhow::Error)>> =
             thread::scope(|s| {
                 let handles: Vec<_> = (0..self.shards)
-                    .map(|shard| {
-                        s.spawn(move || -> Result<ShardRun, (usize, anyhow::Error)> {
-                            // Sticky mode: each lane consumes its own
-                            // queue; shared mode: every lane steals
-                            // from the one batcher.
-                            let lane_batcher = self
-                                .lane_batchers
-                                .as_ref()
-                                .map_or(&self.batcher, |lanes| &lanes[shard]);
-                            let built = (self.factory)(
-                                shard,
-                                Arc::clone(lane_batcher),
-                            );
-                            let engine = match built {
-                                Ok(e) => {
-                                    self.readiness.lane_up();
-                                    e.with_raw_outputs(self.keep_outputs)
-                                }
-                                Err(e) => {
-                                    self.readiness.lane_failed();
-                                    return Err((shard, e));
-                                }
-                            };
-                            let responses = engine.run_loop();
-                            let metrics = Arc::clone(&engine.metrics);
-                            Ok((shard, responses, metrics))
-                        })
-                    })
+                    .map(|shard| s.spawn(move || self.run_lane(shard)))
                     .collect();
                 handles
                     .into_iter()
@@ -439,16 +942,19 @@ impl ShardedCoordinator {
         let mut lane_errors = Vec::new();
         for run in runs {
             match run {
-                Ok((shard, resps, metrics)) => {
-                    self.metrics.absorb(&metrics);
+                Ok(lane) => {
+                    self.metrics.absorb(&lane.metrics);
                     per_shard.push(ShardStats {
-                        shard,
-                        requests: resps.len(),
-                        batches: metrics.batches(),
-                        queue_wait_mean_s: metrics.queue_wait_mean(),
-                        queue_wait_p95_s: metrics.queue_wait_quantile(0.95),
+                        shard: lane.shard,
+                        requests: lane.responses.len(),
+                        batches: lane.metrics.batches(),
+                        queue_wait_mean_s: lane.metrics.queue_wait_mean(),
+                        queue_wait_p95_s: lane.metrics.queue_wait_quantile(0.95),
                     });
-                    responses.extend(resps);
+                    responses.extend(lane.responses);
+                    if let Some(e) = lane.died {
+                        lane_errors.push((lane.shard, e));
+                    }
                 }
                 Err(lane_err) => lane_errors.push(lane_err),
             }
@@ -462,6 +968,7 @@ impl ShardedCoordinator {
                 "every lane failed; first failure on shard {shard}"
             )));
         }
+        responses.extend(self.sweep_stranded());
         Ok(ShardReport {
             responses,
             metrics: Arc::clone(&self.metrics),
@@ -498,6 +1005,22 @@ mod tests {
             Arc::new(Batcher::new(max_batch, Duration::from_millis(1)));
         ShardedCoordinator::new_native(
             shards, GEOM, mode(), SimConfig::edge(), batcher, 1,
+        )
+        .unwrap()
+    }
+
+    fn sticky(shards: usize, max_batch: usize, max_queue: usize) -> ShardedCoordinator {
+        ShardedCoordinator::new_native_sticky(
+            shards,
+            GEOM,
+            mode(),
+            SimConfig::edge(),
+            max_batch,
+            Duration::from_millis(1),
+            max_queue,
+            1,
+            usize::MAX,
+            1.0,
         )
         .unwrap()
     }
@@ -605,6 +1128,7 @@ mod tests {
         assert_eq!(coord.metrics().requests(), 5);
         assert_eq!(coord.batcher().pending(), 0, "queue drained");
         assert!(report.summary().contains("FAILED"), "{}", report.summary());
+        assert_eq!(coord.directory().state(1), LaneState::Dead);
     }
 
     #[test]
@@ -623,6 +1147,32 @@ mod tests {
         assert!(format!("{err:#}").contains("every lane failed"));
         // wait_any must not hang: every lane resolved (as failed)
         assert!(!ready.wait_any(), "no lane ever came up");
+    }
+
+    #[test]
+    fn readiness_timeout_and_all_failed_are_typed() {
+        let batcher = Arc::new(Batcher::new(2, Duration::from_millis(1)));
+        let coord = ShardedCoordinator::from_factory(
+            2,
+            Arc::clone(&batcher),
+            |_, _| anyhow::bail!("no lane boots"),
+        )
+        .unwrap();
+        let ready = coord.readiness();
+        // Nothing running yet: the bounded wait resolves as a typed
+        // timeout instead of hanging.
+        let waited = Duration::from_millis(30);
+        assert_eq!(
+            ready.wait_any_timeout(waited),
+            Err(ReadinessError::Timeout { waited })
+        );
+        batcher.close();
+        assert!(coord.run().is_err());
+        // Every factory failed: typed as definitively down, and the
+        // error says so when displayed.
+        let err = ready.wait_any_timeout(Duration::from_secs(5)).unwrap_err();
+        assert_eq!(err, ReadinessError::AllLanesFailed { lanes: 2 });
+        assert!(err.to_string().contains("2 lane(s) failed"));
     }
 
     #[test]
@@ -668,27 +1218,15 @@ mod tests {
 
     #[test]
     fn sticky_router_pins_sessions_and_serves_decode() {
-        let coord = ShardedCoordinator::new_native_sticky(
-            2,
-            GEOM,
-            mode(),
-            SimConfig::edge(),
-            4,
-            Duration::from_millis(1),
-            0,
-            1,
-            usize::MAX,
-            1.0,
-        )
-        .unwrap();
+        let coord = sticky(2, 4, 0);
         let router = coord.router().expect("sticky mode has a router");
         assert_eq!(router.lanes(), 2);
         // Decode requests route by session id — stable, cache-owning lane.
         let a = Request::decode(1, 42, vec![1, 2]);
         let b = Request::decode(2, 42, vec![3]);
         assert_eq!(router.lane_of(&a), router.lane_of(&b), "same session, same lane");
-        assert_eq!(router.lane_of(&a), 0, "42 % 2 lanes");
-        assert_eq!(router.lane_of(&Request::decode(3, 7, vec![1])), 1);
+        assert_eq!(router.lane_of(&a), Some(0), "42 % 2 lanes");
+        assert_eq!(router.lane_of(&Request::decode(3, 7, vec![1])), Some(1));
         // A small multi-session decode run end to end.
         let producer = {
             let r = router.clone();
@@ -740,5 +1278,145 @@ mod tests {
         assert!(producer.join().unwrap(), "lanes came up");
         assert_eq!(report.responses.len(), 4);
         assert!(report.lane_errors.is_empty());
+    }
+
+    #[test]
+    fn rehome_map_is_deterministic_and_sticky() {
+        use LaneState::{Dead, Up};
+        for shards in [2usize, 4] {
+            let mut states = vec![Up; shards];
+            // Healthy fleet: always the primary lane.
+            for s in 0..64u64 {
+                assert_eq!(
+                    rehome_lane(s, &states),
+                    Some((s % shards as u64) as usize)
+                );
+            }
+            states[0] = Dead;
+            // Same failure schedule ⇒ same assignment, every time.
+            let a: Vec<_> = (0..64u64).map(|s| rehome_lane(s, &states)).collect();
+            let b: Vec<_> = (0..64u64).map(|s| rehome_lane(s, &states)).collect();
+            assert_eq!(a, b, "re-home map is deterministic");
+            for (s, lane) in a.iter().enumerate() {
+                let lane = lane.expect("survivors exist");
+                assert_ne!(lane, 0, "dead lane never assigned");
+                if s % shards != 0 {
+                    assert_eq!(lane, s % shards, "unaffected sessions stay put");
+                }
+            }
+            // No survivors at all: unroutable, typed as None.
+            assert_eq!(rehome_lane(7, &vec![Dead; shards]), None);
+        }
+    }
+
+    #[test]
+    fn drain_refusals_are_typed() {
+        // Shared-queue mode has no per-lane queues to drain.
+        let shared = coordinator(2, 4);
+        assert!(shared.drain_lane(0).is_err(), "not sticky");
+        let coord = sticky(2, 4, 0);
+        assert!(coord.drain_lane(5).is_err(), "out of range");
+        assert_eq!(coord.drain_lane(1).unwrap(), 0, "idle lane drains empty");
+        assert_eq!(coord.directory().state(1), LaneState::Retired);
+        assert!(coord.drain_lane(1).is_err(), "already retired");
+        assert!(coord.drain_lane(0).is_err(), "never drain the last up lane");
+        assert_eq!(coord.directory().state(0), LaneState::Up, "refusal is a no-op");
+        assert_eq!(coord.metrics().lane_drains(), 1);
+    }
+
+    #[test]
+    fn submit_with_retry_backs_off_and_bounds() {
+        let coord = sticky(1, 1, 1);
+        let router = coord.router().unwrap();
+        router.submit(Request::decode(0, 0, vec![1])).unwrap();
+        // Queue full (max_queue = 1): a bounded retry budget exhausts
+        // and hands the request back, having actually backed off.
+        let policy = RetryPolicy {
+            max_retries: 2,
+            base_backoff: Duration::from_micros(500),
+        };
+        let t0 = Instant::now();
+        let back = router
+            .submit_with_retry(Request::decode(1, 0, vec![2]), &policy)
+            .unwrap_err();
+        assert_eq!(back.id, 1, "rejected request handed back untouched");
+        assert!(
+            t0.elapsed() >= Duration::from_micros(1500),
+            "500µs + 1000µs of backoff must have elapsed"
+        );
+        // A consumer frees the slot mid-backoff: the retry lands.
+        let lane = Arc::clone(&coord.lane_batchers.as_ref().unwrap()[0]);
+        let drainer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            let batch = lane.next_batch().unwrap();
+            lane.batch_done();
+            batch.len()
+        });
+        router
+            .submit_with_retry(
+                Request::decode(1, 0, vec![2]),
+                &RetryPolicy {
+                    max_retries: 20,
+                    base_backoff: Duration::from_millis(1),
+                },
+            )
+            .expect("retry succeeds once the queue drains");
+        assert_eq!(drainer.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn killed_lane_rehomes_queued_work_to_survivor() {
+        // Lane 0 dies at its first pop; its queued decode steps re-home
+        // to lane 1 in FIFO order (the position-asserted stream serves
+        // gap-free on the adopter), the death is visible in the
+        // directory and metrics, and no request is lost or re-routed
+        // back to the corpse.
+        let coord = sticky(2, 1, 0).with_fault(
+            0,
+            FaultPlan { kill_at_pop: Some(1), ..FaultPlan::default() },
+        );
+        let router = coord.router().unwrap();
+        let dir = coord.directory();
+        let ready = coord.readiness();
+        let producer = std::thread::spawn(move || {
+            assert!(ready.wait_any());
+            for step in 0..4u64 {
+                // Session 42's primary is lane 0 (42 % 2).
+                router
+                    .submit(Request::decode_at(step, 42, step as usize, vec![7]))
+                    .unwrap();
+            }
+            // Close only after the failover resolved, so every re-homed
+            // step is adopted before the survivor drains out.
+            while dir.state(0) != LaneState::Dead {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            router.close();
+        });
+        let report = coord.run().unwrap();
+        producer.join().unwrap();
+        assert_eq!(report.responses.len(), 4, "every step answered");
+        assert!(
+            report.responses.iter().all(|r| !r.rejected),
+            "re-homed steps served, not shed: {:?}",
+            report
+                .responses
+                .iter()
+                .map(|r| (r.id, r.rejected))
+                .collect::<Vec<_>>()
+        );
+        assert_eq!(
+            report.responses.iter().map(|r| r.context_len).max(),
+            Some(4),
+            "the adopter served the full stream in order"
+        );
+        assert_eq!(report.lane_errors.len(), 1);
+        assert_eq!(report.lane_errors[0].0, 0, "lane 0 reported dead");
+        assert!(format!("{:#}", report.lane_errors[0].1)
+            .contains("injected fault"));
+        assert_eq!(coord.directory().state(0), LaneState::Dead);
+        assert_eq!(coord.metrics().lane_deaths(), 1);
+        assert!(coord.metrics().requests_rehomed() >= 1, "queued work moved");
+        assert!(coord.metrics().recovery_count() >= 1);
     }
 }

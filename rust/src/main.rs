@@ -15,9 +15,9 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
-use hdp::coordinator::{Batcher, Engine, NativeModelConfig, Readiness,
-                       Request, Response, ServeMode, ShardReport,
-                       ShardedCoordinator};
+use hdp::coordinator::{Batcher, Engine, FaultPlan, NativeModelConfig,
+                       Readiness, Request, Response, RetryPolicy, ServeMode,
+                       ShardReport, ShardedCoordinator};
 use hdp::data::{Dataset, Split, Stream};
 use hdp::model::{Evaluator, ParamStore, Trainer};
 use hdp::model::evaluator::Variant;
@@ -232,6 +232,17 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .flag("kv-pages", "0", "decode demo: session-store page budget \
                per lane (0 = unbounded; LRU eviction, evicted sessions \
                decode from scratch)")
+        .flag("kill-lane", "", "decode demo chaos: kill this lane \
+               mid-run; its sessions re-home to survivors and replay \
+               from the journal (empty = no kill)")
+        .flag("at-step", "2", "decode demo chaos: the batch pop at \
+               which --kill-lane fires (1-based)")
+        .flag("drain-lane", "", "decode demo: cooperatively drain this \
+               lane once traffic is flowing — stop dispatch, migrate \
+               its sessions, retire it (empty = no drain)")
+        .flag("checkpoint-every", "0", "decode demo: journal a th/KV \
+               snapshot every N committed tokens so re-homed sessions \
+               replay only the suffix (0 = tokens-only journal)")
         .flag("layers", "2", "demo: attention layers per request")
         .flag("heads", "4", "demo: heads per layer")
         .flag("d-head", "16", "demo: head dimension")
@@ -478,7 +489,21 @@ fn serve_demo_decode(args: &Args, cfg: NativeModelConfig, mode: ServeMode,
         0 => usize::MAX,
         n => n,
     };
-    let coordinator = ShardedCoordinator::new_native_sticky(
+    let parse_lane = |name: &str| -> Result<Option<usize>> {
+        let v = args.get(name);
+        if v.is_empty() {
+            return Ok(None);
+        }
+        let lane: usize = v.parse().map_err(|_| {
+            anyhow::anyhow!("--{name}: '{v}' is not a lane index")
+        })?;
+        anyhow::ensure!(lane < shards,
+                        "--{name}: lane {lane} out of range ({shards} shards)");
+        Ok(Some(lane))
+    };
+    let kill_lane = parse_lane("kill-lane")?;
+    let drain_lane = parse_lane("drain-lane")?;
+    let mut coordinator = ShardedCoordinator::new_native_sticky(
         shards,
         cfg,
         mode,
@@ -490,14 +515,51 @@ fn serve_demo_decode(args: &Args, cfg: NativeModelConfig, mode: ServeMode,
         kv_pages,
         1.0,
     )?
-    .with_raw_outputs(false);
+    .with_raw_outputs(false)
+    .with_checkpoints(args.get_usize("checkpoint-every")?);
+    if let Some(lane) = kill_lane {
+        let at = args.get_usize("at-step")?.max(1) as u64;
+        println!("chaos: lane {lane} will be killed at its pop #{at}");
+        coordinator = coordinator.with_fault(
+            lane,
+            FaultPlan { kill_at_pop: Some(at), ..FaultPlan::default() },
+        );
+    }
+    let coordinator = Arc::new(coordinator);
     let router = coordinator.router().expect("sticky coordinator has a router");
     let ready = coordinator.readiness();
+    // Cooperative drain, triggered once traffic is demonstrably flowing
+    // (the journal records every committed batch live): stop dispatch
+    // to the lane, migrate its queued work and sessions, retire it.
+    let drainer = drain_lane.map(|lane| {
+        let c = Arc::clone(&coordinator);
+        let threshold = (sessions as u64).max(1);
+        std::thread::spawn(move || {
+            let journal = c.journal().expect("sticky mode journals").clone();
+            let t0 = Instant::now();
+            while journal.stats().records < threshold {
+                if t0.elapsed() > Duration::from_secs(30) {
+                    eprintln!("drain of lane {lane} skipped: no traffic \
+                               committed within 30s");
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            match c.drain_lane(lane) {
+                Ok(moved) => println!(
+                    "drained lane {lane}: {moved} queued request(s) migrated"
+                ),
+                Err(e) => eprintln!("drain of lane {lane} refused: {e:#}"),
+            }
+        })
+    });
     println!("decoding {steps} step(s) x {sessions} session(s) on {shards} \
               sticky lane(s): {} layers x {} heads x d_head {}, prefill \
               context {context}",
              cfg.n_layers, cfg.n_heads, cfg.d_head);
 
+    let chaos_lane = kill_lane.or(drain_lane);
+    let directory = coordinator.directory();
     let producer = std::thread::spawn(move || {
         let mut rng = SplitMix64::new(23);
         let mut rejections = Vec::new();
@@ -508,10 +570,16 @@ fn serve_demo_decode(args: &Args, cfg: NativeModelConfig, mode: ServeMode,
         // actually admitted — an admission rejection means those
         // tokens were never appended, so the next step re-claims the
         // same position instead of silently gapping the stream.
+        // Rejections are first retried with bounded exponential
+        // backoff (`submit_with_retry`): a queue-full or mid-failover
+        // reject is transient, and the retried step is bitwise
+        // identical to the never-rejected one because nothing was
+        // appended when it bounced.
+        let retry = RetryPolicy::default();
         let mut pos = vec![0usize; sessions];
         let mut submit =
             |req: Request, rejections: &mut Vec<Response>| -> bool {
-                match router.submit(req) {
+                match router.submit_with_retry(req, &retry) {
                     Ok(()) => true,
                     Err(back) => {
                         rejections.push(Response::reject(&back));
@@ -546,6 +614,19 @@ fn serve_demo_decode(args: &Args, cfg: NativeModelConfig, mode: ServeMode,
                 }
             }
         }
+        // With chaos scheduled, keep the queues open until the kill or
+        // drain actually resolved: re-homed steps must still find live
+        // survivors, so the demo demonstrates zero lost sessions rather
+        // than a race between the fault and shutdown.
+        if let Some(lane) = chaos_lane {
+            use hdp::coordinator::LaneState;
+            let t0 = Instant::now();
+            while directory.state(lane) == LaneState::Up
+                && t0.elapsed() < Duration::from_secs(30)
+            {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
         router.close();
         rejections
     });
@@ -553,6 +634,9 @@ fn serve_demo_decode(args: &Args, cfg: NativeModelConfig, mode: ServeMode,
     let t0 = Instant::now();
     let report = coordinator.run()?;
     let rejections = producer.join().unwrap();
+    if let Some(d) = drainer {
+        d.join().unwrap();
+    }
     let wall = t0.elapsed().as_secs_f64();
     print_serve_report(&report, &rejections, Some(wall));
     let tokens = report.metrics.decode_tokens();
@@ -560,6 +644,14 @@ fn serve_demo_decode(args: &Args, cfg: NativeModelConfig, mode: ServeMode,
               across {} decode steps)",
              tokens as f64 / wall.max(1e-9),
              report.metrics.decode_requests());
+    let m = &report.metrics;
+    if m.lane_deaths() + m.lane_drains() > 0 {
+        println!("failover: {} lane death(s), {} drain(s); {} request(s) \
+                  re-routed, {} session(s) re-homed and replayed from the \
+                  journal",
+                 m.lane_deaths(), m.lane_drains(), m.requests_rehomed(),
+                 m.sessions_rehomed());
+    }
     if let Some(r) = report.responses.iter().max_by_key(|r| r.context_len) {
         println!("deepest context: session {} at {} tokens; last cached \
                   step's simulated co-processor latency {:.3} ms",

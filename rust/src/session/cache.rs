@@ -55,7 +55,7 @@ pub struct TokenRow {
 /// One fixed-capacity page of cached token rows (`page_tokens` rows of
 /// `iq`/`ik`/`fk` at `d_head` and `v` at `d_v`). Buffers are allocated
 /// once at page creation; rows fill in append order.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 struct Page {
     used: usize,
     iq: Vec<f32>,
@@ -305,6 +305,24 @@ impl HeadKv {
         }
         acc
     }
+
+    /// Deep copy of the full head state — pages, θ matrix, and the
+    /// partial tail-column scores. A snapshot restored later continues
+    /// decoding bitwise identically to the head it was taken from,
+    /// because every field that feeds the incremental θ fold is copied
+    /// verbatim (the fold order is a function of state, not identity).
+    pub fn snapshot(&self) -> HeadKv {
+        HeadKv {
+            d_head: self.d_head,
+            d_v: self.d_v,
+            block: self.block,
+            page_tokens: self.page_tokens,
+            len: self.len,
+            pages: self.pages.clone(),
+            theta: self.theta.clone(),
+            tail_abs: self.tail_abs.clone(),
+        }
+    }
 }
 
 /// One session's cache: the `layers × heads` grid of [`HeadKv`]s, each
@@ -361,6 +379,23 @@ impl KvCache {
     /// accounting unit.
     pub fn pages(&self) -> usize {
         self.heads.iter().map(|h| h.lock().unwrap().pages()).sum()
+    }
+
+    /// Deep copy of the whole `layers × heads` grid (a frozen
+    /// checkpoint). Locks each head once, disjointly, so a snapshot
+    /// may be taken while other sessions decode; the caller must not
+    /// be mid-append on *this* session (heads advance in lockstep, so
+    /// snapshot between decode steps, never inside one).
+    pub fn snapshot(&self) -> KvCache {
+        KvCache {
+            n_layers: self.n_layers,
+            n_heads: self.n_heads,
+            heads: self
+                .heads
+                .iter()
+                .map(|h| Mutex::new(h.lock().unwrap().snapshot()))
+                .collect(),
+        }
     }
 }
 
@@ -497,6 +532,62 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn snapshot_restores_bitwise_identical_decode_state() {
+        // Take a snapshot mid-stream, keep appending to both the
+        // original and the snapshot with the same rows: every θ cell
+        // and the head statistic must stay bitwise equal — the
+        // checkpointed-restore contract of `session::journal`.
+        let mut rng = SplitMix64::new(21);
+        let rows: Vec<TokenRow> =
+            (0..13).map(|_| rand_row(&mut rng, 4, 4)).collect();
+        let mut kv = HeadKv::new(4, 4, 2, 4);
+        for row in &rows[..7] {
+            append_and_update(&mut kv, row);
+        }
+        let mut restored = kv.snapshot();
+        assert_eq!(restored.len(), 7);
+        assert_eq!(restored.pages(), kv.pages());
+        for row in &rows[7..] {
+            append_and_update(&mut kv, row);
+            append_and_update(&mut restored, row);
+        }
+        assert_eq!(restored.len(), kv.len());
+        for bi in 0..kv.n_blocks_ctx() {
+            for (a, b) in kv.theta_row(bi).iter().zip(restored.theta_row(bi)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "theta block-row {bi}");
+            }
+        }
+        assert_eq!(kv.theta_head().to_bits(), restored.theta_head().to_bits());
+        for i in 0..kv.len() {
+            assert_eq!(kv.ik_row(i), restored.ik_row(i), "ik row {i}");
+            assert_eq!(kv.v_row(i), restored.v_row(i), "v row {i}");
+        }
+    }
+
+    #[test]
+    fn kv_cache_snapshot_is_independent() {
+        let cache = KvCache::new(2, 2, 4, 4, 2, 4);
+        let mut rng = SplitMix64::new(5);
+        let row = rand_row(&mut rng, 4, 4);
+        for layer in 0..2 {
+            for head in 0..2 {
+                cache.head(layer, head).lock().unwrap().append(&row);
+            }
+        }
+        let snap = cache.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap.pages(), cache.pages());
+        // Growing the original must not disturb the frozen snapshot.
+        for layer in 0..2 {
+            for head in 0..2 {
+                cache.head(layer, head).lock().unwrap().append(&row);
+            }
+        }
+        assert_eq!(cache.len(), 2);
+        assert_eq!(snap.len(), 1, "snapshot is a deep copy");
     }
 
     #[test]

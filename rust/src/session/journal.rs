@@ -1,0 +1,311 @@
+//! Fleet-wide session journal: the durable record a session restores
+//! from when its lane dies or drains.
+//!
+//! # What is journaled — and the replay-bitwise contract
+//!
+//! A [`SessionJournal`] records, per session, the **committed token
+//! stream** and the policy parameters the stream was served under (the
+//! host-quantizer calibration scale) — *tokens only, never KV pages*.
+//! That is enough for exact recovery because of the repo's core
+//! serving invariant, pinned since the session subsystem landed
+//! (`rust/tests/decode_conformance.rs`): every cached derivation is a
+//! pure function of the committed token stream, and **incremental
+//! decode equals full recompute bitwise at every step**. A re-homed
+//! session therefore restores by replaying its journaled tokens
+//! through the *same* eviction-rebuild path an evicted session already
+//! uses ([`super::SessionStore::checkout`] hands back the missing
+//! history as replay) — lane failover is, by construction, the
+//! eviction contract applied across lanes, and the surviving stream is
+//! bitwise equal to an uninterrupted sequential reference run
+//! (`rust/tests/failover_conformance.rs` pins this).
+//!
+//! # Checkpoints
+//!
+//! Replay cost is `O(context)`. When configured with
+//! [`SessionJournal::with_checkpoints`], the journal additionally
+//! keeps, per session, one frozen θ/KV snapshot
+//! ([`KvCache::snapshot`]), refreshed every `checkpoint_every`
+//! committed tokens. A restore seeds the adopting store with a deep
+//! copy of the snapshot and replays only the suffix past it —
+//! bitwise identical to full replay (the snapshot copies every field
+//! that feeds the incremental θ fold verbatim), just faster. The
+//! journal itself stays authoritative on the tokens: a checkpoint is
+//! an accelerator, never a source of truth.
+//!
+//! # Concurrency
+//!
+//! One journal is shared (`Arc`) by every lane of a fleet. `record` is
+//! called inside the owning engine's commit phase; since exactly one
+//! lane serves a session at a time (sticky routing, and failover
+//! re-homes only *after* a lane stopped serving), per-session entries
+//! are never raced. The interior `Mutex` makes cross-session access
+//! from many lanes sound.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::cache::KvCache;
+
+/// Lifetime counters the failover metrics and tests surface.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct JournalStats {
+    /// Commit batches recorded (one per `record` call).
+    pub records: u64,
+    /// θ/KV snapshots taken.
+    pub checkpoints: u64,
+    /// Restores handed out, total.
+    pub restores: u64,
+    /// Restores that carried a checkpoint (suffix replay instead of
+    /// full replay).
+    pub checkpoint_restores: u64,
+}
+
+/// What a restore hands back: the full committed stream, the policy
+/// scale it was served under, and — when checkpointing is on — the
+/// frozen snapshot plus its stream position. The adopting store deep-
+/// copies the snapshot ([`super::SessionStore::adopt`]); the journal
+/// keeps its own copy frozen.
+#[derive(Debug, Clone)]
+pub struct SessionRestore {
+    pub tokens: Vec<i32>,
+    /// Calibration scale the stream was served at — the adopting lane
+    /// must be configured identically or the derivation would diverge;
+    /// [`SessionJournal::restore_for`] enforces this.
+    pub cal_scale: f32,
+    /// `(position, snapshot)`: the snapshot holds exactly `position`
+    /// tokens of cached state; `tokens[position..]` is the replay
+    /// suffix.
+    pub checkpoint: Option<(usize, Arc<KvCache>)>,
+}
+
+#[derive(Debug)]
+struct JournalEntry {
+    tokens: Vec<i32>,
+    cal_scale: f32,
+    checkpoint: Option<(usize, Arc<KvCache>)>,
+}
+
+/// The journal proper. See the module docs for the contract.
+#[derive(Debug)]
+pub struct SessionJournal {
+    inner: Mutex<HashMap<u64, JournalEntry>>,
+    /// Snapshot refresh period in committed tokens; 0 disables
+    /// checkpointing (tokens-only journal, full replay on restore).
+    checkpoint_every: usize,
+    stats: Mutex<JournalStats>,
+}
+
+impl SessionJournal {
+    /// Tokens-only journal: restores replay the full stream.
+    pub fn new() -> Self {
+        Self::with_checkpoints(0)
+    }
+
+    /// Journal that additionally snapshots each session's θ/KV state
+    /// every `checkpoint_every` committed tokens (0 = off), so
+    /// restores replay only the suffix past the last snapshot.
+    pub fn with_checkpoints(checkpoint_every: usize) -> Self {
+        Self {
+            inner: Mutex::new(HashMap::new()),
+            checkpoint_every,
+            stats: Mutex::new(JournalStats::default()),
+        }
+    }
+
+    pub fn stats(&self) -> JournalStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Sessions the journal knows.
+    pub fn sessions(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    /// Committed stream length of `session` (0 if unknown) — what a
+    /// lane compares its local history against to decide whether a
+    /// session was re-homed to it.
+    pub fn len(&self, session: u64) -> usize {
+        self.inner.lock().unwrap().get(&session).map_or(0, |e| e.tokens.len())
+    }
+
+    /// Record a commit: `appended` extends `session`'s journaled
+    /// stream, served at `cal_scale`. Returns the new stream length.
+    /// Called by the owning lane inside its commit phase, so the
+    /// journal is always at least as current as any response the fleet
+    /// has produced.
+    pub fn record(&self, session: u64, appended: &[i32], cal_scale: f32) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let e = inner.entry(session).or_insert_with(|| JournalEntry {
+            tokens: Vec::new(),
+            cal_scale,
+            checkpoint: None,
+        });
+        debug_assert_eq!(
+            e.cal_scale.to_bits(),
+            cal_scale.to_bits(),
+            "session {session}: policy scale changed mid-stream"
+        );
+        e.tokens.extend_from_slice(appended);
+        let len = e.tokens.len();
+        drop(inner);
+        self.stats.lock().unwrap().records += 1;
+        len
+    }
+
+    /// Whether `session` is due for a fresh snapshot: checkpointing is
+    /// on and at least `checkpoint_every` tokens were committed past
+    /// the last one. The engine checks this after a commit and, when
+    /// true, hands the live cache to [`SessionJournal::checkpoint`].
+    pub fn wants_checkpoint(&self, session: u64) -> bool {
+        if self.checkpoint_every == 0 {
+            return false;
+        }
+        let inner = self.inner.lock().unwrap();
+        inner.get(&session).is_some_and(|e| {
+            let at = e.checkpoint.as_ref().map_or(0, |(at, _)| *at);
+            e.tokens.len() >= at + self.checkpoint_every
+        })
+    }
+
+    /// Snapshot `cache` as `session`'s checkpoint. The cache must hold
+    /// exactly the journaled stream (call between decode steps, right
+    /// after the commit that made the session due) — a mismatched
+    /// length is refused, keeping the previous checkpoint.
+    pub fn checkpoint(&self, session: u64, cache: &KvCache) {
+        let snap = cache.snapshot(); // deep copy outside the map lock
+        let at = snap.len();
+        let mut inner = self.inner.lock().unwrap();
+        let Some(e) = inner.get_mut(&session) else { return };
+        if at != e.tokens.len() {
+            return; // cache not at the committed stream position
+        }
+        e.checkpoint = Some((at, Arc::new(snap)));
+        drop(inner);
+        self.stats.lock().unwrap().checkpoints += 1;
+    }
+
+    /// Restore `session` for an adopting lane running at `cal_scale`.
+    /// Returns `None` when the session is unknown; errs when the lane's
+    /// policy scale differs from the one the stream was served under
+    /// (replaying under different parameters would diverge the
+    /// derivation, silently — refusing is the only safe answer).
+    pub fn restore_for(
+        &self,
+        session: u64,
+        cal_scale: f32,
+    ) -> anyhow::Result<Option<SessionRestore>> {
+        let inner = self.inner.lock().unwrap();
+        let Some(e) = inner.get(&session) else { return Ok(None) };
+        anyhow::ensure!(
+            e.cal_scale.to_bits() == cal_scale.to_bits(),
+            "session {session}: journaled at calibration scale {} but the \
+             adopting lane runs at {} — refusing a divergent replay",
+            e.cal_scale,
+            cal_scale,
+        );
+        let restore = SessionRestore {
+            tokens: e.tokens.clone(),
+            cal_scale: e.cal_scale,
+            checkpoint: e.checkpoint.clone(),
+        };
+        drop(inner);
+        let mut stats = self.stats.lock().unwrap();
+        stats.restores += 1;
+        stats.checkpoint_restores += u64::from(restore.checkpoint.is_some());
+        Ok(Some(restore))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::cache::TokenRow;
+    use super::*;
+
+    fn row() -> TokenRow {
+        TokenRow {
+            iq: vec![1.0; 4],
+            fq: vec![0.0; 4],
+            ik: vec![1.0; 4],
+            fk: vec![0.0; 4],
+            v: vec![1.0; 4],
+        }
+    }
+
+    fn cache_with(n: usize) -> KvCache {
+        let cache = KvCache::new(1, 1, 4, 4, 2, 2);
+        for _ in 0..n {
+            cache.head(0, 0).lock().unwrap().append(&row());
+        }
+        cache
+    }
+
+    #[test]
+    fn records_accumulate_the_stream() {
+        let j = SessionJournal::new();
+        assert_eq!(j.len(7), 0);
+        assert_eq!(j.record(7, &[1, 2], 1.0), 2);
+        assert_eq!(j.record(7, &[3], 1.0), 3);
+        assert_eq!(j.len(7), 3);
+        assert_eq!(j.sessions(), 1);
+        let r = j.restore_for(7, 1.0).unwrap().expect("known session");
+        assert_eq!(r.tokens, vec![1, 2, 3]);
+        assert!(r.checkpoint.is_none());
+        assert_eq!(j.stats().records, 2);
+        assert_eq!(j.stats().restores, 1);
+    }
+
+    #[test]
+    fn unknown_session_restores_none() {
+        let j = SessionJournal::new();
+        assert!(j.restore_for(99, 1.0).unwrap().is_none());
+    }
+
+    #[test]
+    fn policy_scale_mismatch_is_refused() {
+        let j = SessionJournal::new();
+        j.record(1, &[5], 0.5);
+        assert!(j.restore_for(1, 1.0).is_err());
+        assert!(j.restore_for(1, 0.5).unwrap().is_some());
+    }
+
+    #[test]
+    fn checkpoint_cadence_and_refresh() {
+        let j = SessionJournal::with_checkpoints(4);
+        j.record(1, &[1, 2, 3], 1.0);
+        assert!(!j.wants_checkpoint(1), "3 < 4 tokens since last");
+        j.record(1, &[4], 1.0);
+        assert!(j.wants_checkpoint(1));
+        j.checkpoint(1, &cache_with(4));
+        assert!(!j.wants_checkpoint(1), "fresh checkpoint at 4");
+        j.record(1, &[5, 6, 7], 1.0);
+        assert!(!j.wants_checkpoint(1), "7 - 4 < 4");
+        j.record(1, &[8], 1.0);
+        assert!(j.wants_checkpoint(1));
+        let r = j.restore_for(1, 1.0).unwrap().unwrap();
+        let (at, snap) = r.checkpoint.expect("checkpointed");
+        assert_eq!(at, 4);
+        assert_eq!(snap.len(), 4);
+        assert_eq!(r.tokens.len(), 8, "tokens stay authoritative");
+        assert_eq!(j.stats().checkpoints, 1);
+        assert_eq!(j.stats().checkpoint_restores, 1);
+    }
+
+    #[test]
+    fn mispositioned_checkpoint_is_refused() {
+        let j = SessionJournal::with_checkpoints(2);
+        j.record(1, &[1, 2, 3], 1.0);
+        j.checkpoint(1, &cache_with(2)); // cache behind the stream
+        let r = j.restore_for(1, 1.0).unwrap().unwrap();
+        assert!(r.checkpoint.is_none(), "stale-length snapshot refused");
+        j.checkpoint(1, &cache_with(3));
+        let r = j.restore_for(1, 1.0).unwrap().unwrap();
+        assert_eq!(r.checkpoint.unwrap().0, 3);
+    }
+
+    #[test]
+    fn zero_period_never_wants_checkpoints() {
+        let j = SessionJournal::new();
+        j.record(1, &[1, 2, 3, 4, 5], 1.0);
+        assert!(!j.wants_checkpoint(1));
+    }
+}

@@ -24,17 +24,29 @@
 //!   so a whole batch of sessions is held concurrently during the
 //!   batched decode fan-out.
 //!
+//! * [`journal::SessionJournal`] — the fleet-wide availability layer:
+//!   per-session committed token streams (plus optional θ/KV
+//!   checkpoints) that a session restores from when its lane dies or
+//!   drains. Restoration is bitwise replay through the same
+//!   eviction-rebuild path ([`store::SessionStore::adopt`] +
+//!   `checkout`'s suffix replay), pinned by
+//!   `rust/tests/failover_conformance.rs`.
+//!
 //! The decode math lives in [`crate::attention::kernel`]
 //! (`MhaKernel::decode_step`, and `MhaKernel::decode_batch` for the
 //! whole-batch `sessions × layers × heads` fan-out); the serving
 //! integration — session requests, position-asserted decode steps,
-//! sticky session→lane affinity, the `hdp serve --demo --decode` loop
-//! — lives in [`crate::coordinator`]. The end-to-end
-//! flow is mapped in ARCHITECTURE.md (§ Session / KV-cache flow) and
-//! pinned by `rust/tests/decode_conformance.rs`.
+//! sticky session→lane affinity, lane failover/draining, the
+//! `hdp serve --demo --decode` loop — lives in [`crate::coordinator`].
+//! The end-to-end flow is mapped in ARCHITECTURE.md (§ Session /
+//! KV-cache flow, § Failover & draining) and pinned by
+//! `rust/tests/decode_conformance.rs` and
+//! `rust/tests/failover_conformance.rs`.
 
 pub mod cache;
+pub mod journal;
 pub mod store;
 
 pub use cache::{HeadKv, KvCache, TokenRow};
+pub use journal::{JournalStats, SessionJournal, SessionRestore};
 pub use store::{EvictionPolicy, KvCacheConfig, LruPolicy, SessionStore, StoreStats};

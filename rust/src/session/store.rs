@@ -119,6 +119,9 @@ pub struct StoreStats {
     pub sessions_created: u64,
     pub evictions: u64,
     pub rebuilds: u64,
+    /// Sessions seeded from a fleet journal (`adopt`) — lane-failover
+    /// re-homes, as opposed to locally created sessions.
+    pub adoptions: u64,
 }
 
 /// Session id → cache, plus the eviction machinery. See the module
@@ -214,7 +217,20 @@ impl SessionStore {
         self.policy.touch(session);
         let cfg = self.cfg;
         let entry = self.sessions.get_mut(&session).expect("just ensured");
-        let mut replay = Vec::new();
+        // A cache holding *more* tokens than the committed history can
+        // only mean a step appended but never committed (an
+        // interrupted serve); the prefix property is gone, so drop it
+        // and rebuild from the committed stream (defensive — the
+        // engine's validate-before-mutate protocol never produces it).
+        if entry
+            .cache
+            .as_ref()
+            .is_some_and(|c| c.len() > entry.history.len())
+        {
+            self.charged_pages -= entry.pages;
+            entry.pages = 0;
+            entry.cache = None;
+        }
         if entry.cache.is_none() {
             entry.cache = Some(Arc::new(KvCache::new(
                 cfg.n_layers,
@@ -224,13 +240,83 @@ impl SessionStore {
                 cfg.block,
                 cfg.page_tokens,
             )));
-            if !entry.history.is_empty() {
-                replay = entry.history.clone();
-                self.stats.rebuilds += 1;
-            }
         }
         let cache = entry.cache.as_ref().expect("just ensured");
+        // Replay whatever committed history the cache is missing.
+        // Covers the full spectrum with one rule: a warm cache replays
+        // nothing, an evicted session replays everything, and a
+        // checkpoint-seeded cache (see `adopt`) replays only the
+        // suffix past the checkpoint — all bitwise identical, because
+        // incremental decode equals full recompute at every step.
+        let cached = cache.len();
+        let replay = if cached < entry.history.len() {
+            self.stats.rebuilds += 1;
+            entry.history[cached..].to_vec()
+        } else {
+            Vec::new()
+        };
         (Arc::clone(cache), replay)
+    }
+
+    /// Seed a re-homed session from the fleet journal: install its
+    /// committed token stream and, when the journal carries a θ/KV
+    /// checkpoint no longer than the stream, a deep copy of the
+    /// checkpointed cache so the next `checkout` replays only the
+    /// suffix past it. A session whose local history is already at
+    /// least as long is untouched (the journal can never be *behind*
+    /// a correct lane — commits reach it before responses exist); a
+    /// shorter local prefix keeps its cache (append-only streams make
+    /// any prefix consistent) and just extends the history.
+    pub fn adopt(
+        &mut self,
+        session: u64,
+        tokens: &[i32],
+        checkpoint: Option<(usize, &KvCache)>,
+    ) {
+        let entry = self.sessions.entry(session).or_insert_with(|| {
+            SessionEntry { history: Vec::new(), cache: None, pages: 0 }
+        });
+        if entry.history.len() >= tokens.len() {
+            return;
+        }
+        debug_assert_eq!(
+            &tokens[..entry.history.len()],
+            &entry.history[..],
+            "journal must extend the local stream, never contradict it"
+        );
+        entry.history = tokens.to_vec();
+        if entry.cache.is_none() {
+            if let Some((at, snap)) = checkpoint {
+                if at <= tokens.len() && at == snap.len() {
+                    let cache = Arc::new(snap.snapshot());
+                    self.charged_pages += cache.pages();
+                    entry.pages = cache.pages();
+                    entry.cache = Some(cache);
+                }
+            }
+        }
+        self.stats.adoptions += 1;
+        self.policy.touch(session);
+        // A checkpoint's pages count against the budget like any other
+        // resident state; shed colder sessions if it overflowed.
+        self.enforce_budget(session);
+    }
+
+    fn enforce_budget(&mut self, keep: u64) {
+        while self.charged_pages > self.cfg.capacity_pages {
+            let victim = match self.policy.victim(keep) {
+                Some(v) => v,
+                None => break, // nothing (else) evictable: let it run
+            };
+            self.policy.forget(victim);
+            if let Some(e) = self.sessions.get_mut(&victim) {
+                if e.cache.take().is_some() {
+                    self.charged_pages -= e.pages;
+                    e.pages = 0;
+                    self.stats.evictions += 1;
+                }
+            }
+        }
     }
 
     /// Record tokens appended to a checked-out session and enforce the
@@ -246,20 +332,7 @@ impl SessionStore {
             self.charged_pages = self.charged_pages - e.pages + now;
             e.pages = now;
         }
-        while self.charged_pages > self.cfg.capacity_pages {
-            let victim = match self.policy.victim(session) {
-                Some(v) => v,
-                None => break, // nothing (else) evictable: let it run
-            };
-            self.policy.forget(victim);
-            if let Some(e) = self.sessions.get_mut(&victim) {
-                if e.cache.take().is_some() {
-                    self.charged_pages -= e.pages;
-                    e.pages = 0;
-                    self.stats.evictions += 1;
-                }
-            }
-        }
+        self.enforce_budget(session);
     }
 }
 
@@ -434,6 +507,90 @@ mod tests {
         grow(&mut store, 2, 6); // 3 pages: evicts session 1 (budget 4)
         assert_eq!(store.stats().evictions, 1);
         assert_eq!(store.expected_pos(1), 4, "position survives eviction");
+    }
+
+    #[test]
+    fn adopt_seeds_history_and_suffix_replays_past_checkpoint() {
+        // A re-homed session with a checkpoint at 4 of 6 tokens must
+        // check out replaying only the 2-token suffix.
+        let c = cfg(usize::MAX);
+        let mut donor = SessionStore::new(c);
+        grow(&mut donor, 9, 4);
+        let (snap_src, _) = donor.checkout(9);
+        let snap = snap_src.snapshot();
+
+        let mut store = SessionStore::new(c);
+        let full: Vec<i32> = vec![7; 6];
+        store.adopt(9, &full, Some((4, &snap)));
+        assert_eq!(store.stats().adoptions, 1);
+        assert_eq!(store.expected_pos(9), 6);
+        let (cache, replay) = store.checkout(9);
+        assert_eq!(cache.len(), 4, "checkpoint pages installed");
+        assert_eq!(replay, vec![7i32; 2], "only the suffix replays");
+        assert_eq!(store.stats().rebuilds, 1);
+        assert_eq!(store.total_pages(), cache.pages());
+    }
+
+    #[test]
+    fn adopt_without_checkpoint_replays_everything() {
+        let mut store = SessionStore::new(cfg(usize::MAX));
+        store.adopt(3, &[1, 2, 3, 4, 5], None);
+        let (cache, replay) = store.checkout(3);
+        assert_eq!(cache.len(), 0);
+        assert_eq!(replay, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn adopt_is_idempotent_and_never_rewinds() {
+        let mut store = SessionStore::new(cfg(usize::MAX));
+        grow(&mut store, 1, 4);
+        // A journal at or behind the local stream is a no-op: the
+        // local lane already owns at least this much committed state.
+        store.adopt(1, &[7, 7, 7], None);
+        store.adopt(1, &[7, 7, 7, 7], None);
+        assert_eq!(store.stats().adoptions, 0);
+        assert_eq!(store.expected_pos(1), 4);
+        let (_, replay) = store.checkout(1);
+        assert!(replay.is_empty(), "warm cache untouched by adopt");
+        // A longer journal extends the history; the warm cache stays
+        // (it is a consistent prefix) and only the gap replays.
+        store.adopt(1, &[7, 7, 7, 7, 9, 9], None);
+        assert_eq!(store.stats().adoptions, 1);
+        let (cache, replay) = store.checkout(1);
+        assert_eq!(cache.len(), 4);
+        assert_eq!(replay, vec![9, 9]);
+    }
+
+    #[test]
+    fn adopted_checkpoint_pages_count_against_budget() {
+        let c = cfg(usize::MAX);
+        let mut donor = SessionStore::new(c);
+        grow(&mut donor, 1, 6);
+        let (src, _) = donor.checkout(1);
+        let snap = src.snapshot(); // 3 pages at 2 tokens/page
+
+        let mut store = SessionStore::new(cfg(4));
+        grow(&mut store, 2, 4); // 2 pages resident
+        store.adopt(1, &vec![7i32; 6], Some((6, &snap)));
+        // 3 + 2 = 5 pages > budget 4: the colder session 2 is evicted.
+        assert_eq!(store.stats().evictions, 1);
+        assert!(store.total_pages() <= 4);
+        let (_, replay) = store.checkout(1);
+        assert!(replay.is_empty(), "adopted session kept its checkpoint");
+    }
+
+    #[test]
+    fn overlong_cache_is_dropped_and_rebuilt() {
+        // An appended-but-never-committed cache (interrupted serve)
+        // must not survive checkout: the store rebuilds from the
+        // committed history.
+        let mut store = SessionStore::new(cfg(usize::MAX));
+        grow(&mut store, 1, 2);
+        let (cache, _) = store.checkout(1);
+        cache.head(0, 0).lock().unwrap().append(&row()); // no commit
+        let (fresh, replay) = store.checkout(1);
+        assert_eq!(fresh.len(), 0, "tainted cache dropped");
+        assert_eq!(replay, vec![7i32; 2], "committed stream replays");
     }
 
     #[test]

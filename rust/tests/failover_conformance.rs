@@ -1,0 +1,451 @@
+//! Chaos conformance of lane failover: kill (or drain) a lane under
+//! live multi-session decode traffic and pin the recovery contract —
+//! **zero lost sessions** (every admitted request is answered, none
+//! shed) and **every surviving stream bitwise equal** to the
+//! uninterrupted sequential reference (`hdp_head_reference` full
+//! recompute over the session's whole context, per layer × head).
+//!
+//! Failover is, by construction, the eviction contract applied across
+//! lanes: a re-homed session replays its journaled token stream
+//! through the same eviction-rebuild path (`SessionStore::adopt` +
+//! `checkout` suffix replay), so a lane death is a performance event,
+//! never a correctness one. The matrix here exercises shards {2, 4} ×
+//! pruning knobs × KV eviction pressure, error-kills and panic-kills,
+//! cooperative draining, checkpoint-accelerated restores, and the
+//! shed-then-retry client path.
+//!
+//! Needs no artifacts: the native backend derives every cached token's
+//! row deterministically from `(token, position, layer, head)`.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hdp::attention::hdp::hdp_head_reference;
+use hdp::coordinator::{derive_session_head_inputs, pooled_label, Batcher,
+                       Engine, FaultPlan, LaneState, RejectReason, Request,
+                       ServeMode, ShardReport, ShardedCoordinator};
+use hdp::sim::SimConfig;
+use hdp::util::rng::SplitMix64;
+
+const GEOM: hdp::coordinator::NativeModelConfig =
+    hdp::coordinator::NativeModelConfig { n_layers: 2, n_heads: 3, d_head: 8 };
+
+fn engine(mode: ServeMode, threads: usize, max_batch: usize) -> Engine {
+    let batcher = Arc::new(Batcher::new(max_batch, Duration::from_millis(1)));
+    Engine::new_native(GEOM, mode, SimConfig::edge(), batcher, threads).unwrap()
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Full-recompute reference for one session context: the last query
+/// row of every (layer, head), flattened — what a served decode step
+/// must reproduce bitwise (same helper as `decode_conformance`).
+fn reference_bits(eng: &Engine, context: &[i32]) -> Vec<u32> {
+    let p = eng.native_kernel_params().expect("native engine");
+    let profile = eng.native_profile().expect("native engine");
+    let scale = eng.calibration_scale();
+    let l = context.len();
+    let mut outputs = Vec::new();
+    for layer in 0..GEOM.n_layers {
+        for head in 0..GEOM.n_heads {
+            let (iq, fq, ik, fk, v) = derive_session_head_inputs(
+                context, layer, head, GEOM.d_head, profile, scale);
+            let out = hdp_head_reference(&iq, &fq, &ik, &fk, &v, p);
+            outputs.extend_from_slice(
+                &out.out.data()[(l - 1) * GEOM.d_head..l * GEOM.d_head]);
+        }
+    }
+    bits(&outputs)
+}
+
+fn mode_of(rho: f32, tau: f32) -> ServeMode {
+    ServeMode::Hdp { rho, tau, qstep: 1.0 / 4096.0 }
+}
+
+/// A deterministic multi-session decode schedule: per-session prefill
+/// (3–5 tokens, two of them mid-block), then `rounds` interleaved
+/// single-token steps per session. Returns `(schedule, prefixes)`
+/// where `prefixes[id]` is the session context after request `id`.
+fn make_schedule(
+    sessions: u64,
+    rounds: usize,
+    seed: u64,
+) -> (Vec<(u64, Vec<i32>)>, Vec<Vec<i32>>) {
+    let mut rng = SplitMix64::new(seed);
+    let mut schedule: Vec<(u64, Vec<i32>)> = Vec::new();
+    for s in 0..sessions {
+        let n = 3 + (s as usize % 3);
+        schedule.push((s, (0..n).map(|_| rng.next_below(30_000) as i32).collect()));
+    }
+    for _ in 0..rounds {
+        for s in 0..sessions {
+            schedule.push((s, vec![rng.next_below(30_000) as i32]));
+        }
+    }
+    let mut ctx: HashMap<u64, Vec<i32>> = HashMap::new();
+    let prefixes: Vec<Vec<i32>> = schedule
+        .iter()
+        .map(|(s, toks)| {
+            let c = ctx.entry(*s).or_default();
+            c.extend_from_slice(toks);
+            c.clone()
+        })
+        .collect();
+    (schedule, prefixes)
+}
+
+/// Pin a finished chaos run against the sequential reference: every
+/// request answered exactly once, nothing rejected or shed, and every
+/// response bitwise equal to the full recompute of its session prefix.
+fn assert_streams_bitwise(
+    report: &ShardReport,
+    prefixes: &[Vec<i32>],
+    mode: ServeMode,
+    label: &str,
+) {
+    assert_eq!(report.responses.len(), prefixes.len(),
+               "{label}: zero lost requests");
+    let ref_eng = engine(mode, 1, 4);
+    let mut seen = vec![false; prefixes.len()];
+    for r in &report.responses {
+        assert!(!r.rejected, "{label}: request {} shed ({:?})", r.id, r.reason);
+        let id = r.id as usize;
+        assert!(!seen[id], "{label}: request {} answered twice", r.id);
+        seen[id] = true;
+        let prefix = &prefixes[id];
+        assert_eq!(r.context_len, prefix.len(), "{label}: request {}", r.id);
+        assert_eq!(bits(&r.outputs), reference_bits(&ref_eng, prefix),
+                   "{label}: request {} diverged from the sequential \
+                    reference", r.id);
+        assert_eq!(r.label, pooled_label(&r.outputs), "{label}: request {}", r.id);
+    }
+    assert!(seen.iter().all(|&s| s), "{label}: every request answered");
+}
+
+/// Run one kill-a-lane chaos scenario: live producer, deterministic
+/// schedule, lane `victim` killed at its `kill_at_pop`-th pop; the
+/// producer holds the queues open until the failover resolved, so
+/// re-homed work always finds live survivors.
+fn run_kill_chaos(
+    shards: usize,
+    sessions: u64,
+    rounds: usize,
+    kv_pages: usize,
+    mode: ServeMode,
+    victim: usize,
+    plan: FaultPlan,
+    seed: u64,
+) -> (ShardReport, Vec<Vec<i32>>, ShardedCoordinator) {
+    let (schedule, prefixes) = make_schedule(sessions, rounds, seed);
+    let coord = ShardedCoordinator::new_native_sticky(
+        shards, GEOM, mode, SimConfig::edge(),
+        2, Duration::from_millis(1), 0, 1, kv_pages, 1.0,
+    )
+    .unwrap()
+    .with_fault(victim, plan);
+    let router = coord.router().expect("sticky router");
+    let ready = coord.readiness();
+    let metrics = Arc::clone(coord.metrics());
+    let producer = std::thread::spawn(move || {
+        assert!(ready.wait_any(), "lanes must come up");
+        for (id, (s, toks)) in schedule.iter().enumerate() {
+            let pos = prefixes[id].len() - toks.len();
+            router
+                .submit(Request::decode_at(id as u64, *s, pos, toks.clone()))
+                .expect("unbounded queues admit everything");
+        }
+        // Close only after the kill resolved: the survivors' queues
+        // must still be open when the re-homed work arrives.
+        let t0 = Instant::now();
+        while metrics.lane_deaths() == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(30),
+                    "injected kill never fired");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        router.close();
+        prefixes
+    });
+    let report = coord.run().unwrap();
+    let prefixes = producer.join().unwrap();
+    (report, prefixes, coord)
+}
+
+#[test]
+fn killed_lane_chaos_matrix_zero_loss_bitwise() {
+    // The acceptance matrix: shards {2, 4} × pruning knobs × KV
+    // eviction pressure, ≥ 8 live decode sessions, lane 0 killed at
+    // its second pop. Every run must end with zero lost sessions and
+    // every stream bitwise the uninterrupted sequential reference —
+    // under pressure the adopting lane additionally evicts and
+    // rebuilds mid-replay, which must change nothing.
+    let mut combo = 0u64;
+    for shards in [2usize, 4] {
+        for (rho, tau) in [(0.4f32, 0.0f32), (0.9, 1e9)] {
+            // 6 pages = one resident session per lane: re-homing under
+            // continuous eviction pressure.
+            for kv_pages in [usize::MAX, 6] {
+                combo += 1;
+                let mode = mode_of(rho, tau);
+                let label = format!(
+                    "shards={shards} rho={rho} tau={tau} kv={kv_pages}");
+                let (report, prefixes, coord) = run_kill_chaos(
+                    shards, 8, 3, kv_pages, mode, 0,
+                    FaultPlan { kill_at_pop: Some(2), ..FaultPlan::default() },
+                    0xC4A05 ^ combo,
+                );
+                assert_streams_bitwise(&report, &prefixes, mode, &label);
+                assert_eq!(report.lane_errors.len(), 1, "{label}");
+                assert_eq!(report.lane_errors[0].0, 0, "{label}");
+                assert!(format!("{:#}", report.lane_errors[0].1)
+                    .contains("injected fault"), "{label}");
+                assert_eq!(coord.directory().state(0), LaneState::Dead,
+                           "{label}");
+                assert_eq!(report.metrics.lane_deaths(), 1, "{label}");
+                assert_eq!(report.metrics.decode_requests() as usize,
+                           prefixes.len(),
+                           "{label}: fleet metrics absorbed exactly once");
+                assert!(report.metrics.recovery_count() >= 1, "{label}");
+                // The journal adopted at least one of the victim's
+                // sessions (lane 0 owned sessions ≡ 0 mod shards).
+                assert!(report.metrics.sessions_rehomed() >= 1, "{label}");
+                assert!(coord.journal().unwrap().stats().restores >= 1,
+                        "{label}");
+            }
+        }
+    }
+}
+
+#[test]
+fn panic_killed_lane_recovers_identically() {
+    // Same recovery, different death: the lane dies by worker panic
+    // instead of a returned error. The coordinator contains the panic
+    // to that lane, re-homes its work, and the run degrades instead
+    // of crashing — with the identical bitwise guarantee.
+    let mode = mode_of(0.4, 0.0);
+    let (report, prefixes, coord) = run_kill_chaos(
+        2, 4, 3, usize::MAX, mode, 1,
+        FaultPlan {
+            kill_at_pop: Some(2),
+            kill_by_panic: true,
+            ..FaultPlan::default()
+        },
+        0xFA11,
+    );
+    assert_streams_bitwise(&report, &prefixes, mode, "panic kill");
+    assert_eq!(report.lane_errors.len(), 1);
+    assert_eq!(report.lane_errors[0].0, 1);
+    assert!(format!("{:#}", report.lane_errors[0].1).contains("panicked"));
+    assert_eq!(coord.directory().state(1), LaneState::Dead);
+    assert_eq!(report.metrics.lane_deaths(), 1);
+}
+
+#[test]
+fn checkpointed_restore_replays_suffix_bitwise() {
+    // θ/KV checkpoints accelerate the replay without touching its
+    // result: with a 3-token checkpoint cadence, the victim's sessions
+    // are restored from a snapshot + suffix instead of a full replay —
+    // and the streams stay bitwise the reference. The journal's stats
+    // prove the fast path actually ran.
+    let mode = mode_of(0.4, 0.0);
+    let sessions = 4u64;
+    let (schedule, prefixes) = make_schedule(sessions, 3, 0xC8EC);
+    let coord = ShardedCoordinator::new_native_sticky(
+        2, GEOM, mode, SimConfig::edge(),
+        1, Duration::from_millis(1), 0, 1, usize::MAX, 1.0,
+    )
+    .unwrap()
+    .with_checkpoints(3)
+    .with_fault(
+        0,
+        // max_batch = 1: pops 1–2 are lane 0's two prefills (3 and 5
+        // tokens — both at/past the checkpoint cadence), pop 3 — the
+        // first single-token step — kills it. The adopter must then
+        // restore from a checkpoint, not from scratch.
+        FaultPlan { kill_at_pop: Some(3), ..FaultPlan::default() },
+    );
+    let journal = Arc::clone(coord.journal().expect("sticky mode journals"));
+    let router = coord.router().unwrap();
+    let ready = coord.readiness();
+    let metrics = Arc::clone(coord.metrics());
+    let producer = std::thread::spawn(move || {
+        assert!(ready.wait_any());
+        // Prefills first, and wait until every one committed — the
+        // kill must find checkpointable streams in the journal.
+        for (id, (s, toks)) in schedule.iter().take(sessions as usize).enumerate() {
+            router
+                .submit(Request::decode_at(id as u64, *s, 0, toks.clone()))
+                .unwrap();
+        }
+        let t0 = Instant::now();
+        while journal.stats().records < sessions {
+            assert!(t0.elapsed() < Duration::from_secs(30), "prefills stalled");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        for (id, (s, toks)) in schedule.iter().enumerate().skip(sessions as usize) {
+            let pos = prefixes[id].len() - toks.len();
+            router
+                .submit(Request::decode_at(id as u64, *s, pos, toks.clone()))
+                .unwrap();
+        }
+        let t0 = Instant::now();
+        while metrics.lane_deaths() == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(30), "kill never fired");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        router.close();
+        prefixes
+    });
+    let report = coord.run().unwrap();
+    let prefixes = producer.join().unwrap();
+    assert_streams_bitwise(&report, &prefixes, mode, "checkpointed restore");
+    let stats = coord.journal().unwrap().stats();
+    assert!(stats.checkpoints >= 1, "snapshots were taken: {stats:?}");
+    assert!(stats.checkpoint_restores >= 1,
+            "a restore rode the checkpoint fast path: {stats:?}");
+    assert_eq!(report.metrics.lane_deaths(), 1);
+}
+
+#[test]
+fn drained_lane_migrates_every_session_bitwise() {
+    // Cooperative draining under live traffic: once every session has
+    // committed its prefill, lane 1 is drained — dispatch stops, its
+    // in-flight batch finishes, queued work migrates, the lane
+    // retires. The producer keeps stepping *all* sessions afterwards
+    // (the drained lane's sessions re-home through the journal), and
+    // every stream stays bitwise the reference with zero loss.
+    let mode = mode_of(0.4, 0.0);
+    let sessions = 8u64;
+    let (schedule, prefixes) = make_schedule(sessions, 4, 0xD8A1);
+    let coord = Arc::new(
+        ShardedCoordinator::new_native_sticky(
+            2, GEOM, mode, SimConfig::edge(),
+            2, Duration::from_millis(1), 0, 1, usize::MAX, 1.0,
+        )
+        .unwrap(),
+    );
+    let router = coord.router().unwrap();
+    let ready = coord.readiness();
+    let directory = coord.directory();
+    let journal = Arc::clone(coord.journal().unwrap());
+    let drain_trigger = {
+        let c = Arc::clone(&coord);
+        std::thread::spawn(move || {
+            // Every session journaled ⇒ lane 1's residents committed
+            // their prefills there, so retirement forces real
+            // journal-replay adoptions on lane 0.
+            let t0 = Instant::now();
+            while journal.sessions() < sessions as usize {
+                assert!(t0.elapsed() < Duration::from_secs(30),
+                        "prefills stalled");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            c.drain_lane(1).expect("drain of a healthy non-last lane")
+        })
+    };
+    let producer = std::thread::spawn(move || {
+        assert!(ready.wait_any());
+        for (id, (s, toks)) in schedule.iter().enumerate() {
+            let pos = prefixes[id].len() - toks.len();
+            router
+                .submit(Request::decode_at(id as u64, *s, pos, toks.clone()))
+                .unwrap();
+        }
+        let t0 = Instant::now();
+        while directory.state(1) != LaneState::Retired {
+            assert!(t0.elapsed() < Duration::from_secs(30),
+                    "drain never resolved");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        router.close();
+        prefixes
+    });
+    let report = coord.run().unwrap();
+    let prefixes = producer.join().unwrap();
+    drain_trigger.join().unwrap();
+    assert_streams_bitwise(&report, &prefixes, mode, "drain");
+    assert!(report.lane_errors.is_empty(),
+            "a drained lane exits cleanly, it does not die");
+    assert_eq!(coord.directory().state(1), LaneState::Retired);
+    assert_eq!(report.metrics.lane_drains(), 1);
+    assert_eq!(report.metrics.lane_deaths(), 0);
+    // Odd sessions (lane 1's residents) kept decoding after retirement
+    // — their adopter replayed them from the journal.
+    assert!(report.metrics.sessions_rehomed() >= 1);
+    assert_eq!(report.metrics.decode_requests() as usize, prefixes.len());
+}
+
+#[test]
+fn shed_then_retried_stream_is_bitwise_identical() {
+    // The client-retry regression: a poisoned pop sheds a decode step
+    // (typed `Shed`, nothing committed); the client retries it at the
+    // *same* asserted position, and the completed stream is bitwise
+    // the never-interrupted reference. max_batch = 1 makes the pop
+    // order FIFO-deterministic: pop 1 = prefill, pop 2 = the poisoned
+    // step, pops 3–4 = the retry and the next step.
+    let mode = mode_of(0.4, 0.0);
+    let eng = engine(mode, 1, 1).with_fault_plan(FaultPlan {
+        poison_at_pop: Some(2),
+        ..FaultPlan::default()
+    });
+    let prefill = vec![5, 6, 7];
+    eng.batcher.submit(Request::decode_at(0, 9, 0, prefill.clone())).unwrap();
+    eng.batcher.submit(Request::decode_at(1, 9, 3, vec![11])).unwrap(); // poisoned
+    eng.batcher.submit(Request::decode_at(2, 9, 3, vec![11])).unwrap(); // retry
+    eng.batcher.submit(Request::decode_at(3, 9, 4, vec![13])).unwrap();
+    eng.batcher.close();
+    let mut resps = eng.run_loop();
+    resps.sort_by_key(|r| r.id);
+    assert_eq!(resps.len(), 4, "every request answered exactly once");
+    // The poisoned step is a typed shed naming the stream…
+    assert!(resps[1].rejected);
+    assert_eq!(resps[1].reason, Some(RejectReason::Shed));
+    assert_eq!(resps[1].session, Some(9));
+    // …and nothing else was: the retry landed at the same position.
+    let ref_eng = engine(mode, 1, 1);
+    for (r, prefix) in [
+        (&resps[0], vec![5, 6, 7]),
+        (&resps[2], vec![5, 6, 7, 11]),
+        (&resps[3], vec![5, 6, 7, 11, 13]),
+    ] {
+        assert!(!r.rejected, "req {}", r.id);
+        assert_eq!(r.context_len, prefix.len(), "req {}", r.id);
+        assert_eq!(bits(&r.outputs), reference_bits(&ref_eng, &prefix),
+                   "req {}: retried stream must equal the uninterrupted one",
+                   r.id);
+    }
+}
+
+#[test]
+fn delayed_lane_is_slow_but_correct() {
+    // The delay fault is a latency event only: a lane sleeping at
+    // every pop changes nothing about results or loss accounting.
+    let mode = mode_of(0.4, 0.0);
+    let (schedule, prefixes) = make_schedule(4, 2, 0x510);
+    let coord = ShardedCoordinator::new_native_sticky(
+        2, GEOM, mode, SimConfig::edge(),
+        2, Duration::from_millis(1), 0, 1, usize::MAX, 1.0,
+    )
+    .unwrap()
+    .with_fault(
+        0,
+        FaultPlan {
+            delay_pop: Some(Duration::from_millis(2)),
+            ..FaultPlan::default()
+        },
+    );
+    let router = coord.router().unwrap();
+    for (id, (s, toks)) in schedule.iter().enumerate() {
+        let pos = prefixes[id].len() - toks.len();
+        router
+            .submit(Request::decode_at(id as u64, *s, pos, toks.clone()))
+            .unwrap();
+    }
+    router.close();
+    let report = coord.run().unwrap();
+    assert_streams_bitwise(&report, &prefixes, mode, "delayed lane");
+    assert!(report.lane_errors.is_empty());
+    assert_eq!(report.metrics.lane_deaths(), 0);
+}

@@ -6,11 +6,13 @@
 #
 # Writes BENCH_attention.json (bench_micro: kernel + substrate ops),
 # BENCH_serving.json (bench_serving: native serve_batch throughput vs
-# batch size, plus sharded-coordinator throughput vs shard count) and
+# batch size, plus sharded-coordinator throughput vs shard count),
 # BENCH_decode.json (bench_decode: cached decode_step tokens/sec vs
-# context length against full recompute), each with one record per op:
-# {op, ns_per_iter, p50_ns, p95_ns, throughput_per_s, unit}. Headlines
-# to watch:
+# context length against full recompute) and BENCH_failover.json
+# (bench_failover: recovery latency after a lane kill / drain and the
+# chaos run's throughput dip vs a healthy fleet), each with one record
+# per op: {op, ns_per_iter, p50_ns, p95_ns, throughput_per_s, unit}.
+# Headlines to watch:
 #   * `kernel.head_ws 128x64 rho=0.9` must stay >= 3x faster than
 #     `... rho=0.0` (sparse-first scaling);
 #   * `serve_batch b=8 (batched pool)` must stay >= 2x the throughput
@@ -21,7 +23,12 @@
 #     `full_recompute ctx=1024 (one token)` (KV-cache decode scaling);
 #   * `decode_batch b=8 sessions=8 (one fan-out)` must stay >= 2x the
 #     throughput of `decode_one b=8 (sequential x8)` on a multi-core
-#     runner (cross-session batched decode fan-out).
+#     runner (cross-session batched decode fan-out);
+#   * `recovery_latency kill-lane-0` must stay sub-millisecond at p95
+#     (re-homing is queue surgery + journal bookkeeping, not state
+#     copying), and the `decode_run kill-lane-0` / `decode_run
+#     drain-lane-1` throughput dip vs `decode_run healthy` must stay
+#     well under one lane's 25% share (survivors absorb the work).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -39,3 +46,6 @@ echo "serving bench results written to BENCH_serving.json"
 
 cargo bench --bench bench_decode -- --json BENCH_decode.json "$@"
 echo "decode bench results written to BENCH_decode.json"
+
+cargo bench --bench bench_failover -- --json BENCH_failover.json "$@"
+echo "failover bench results written to BENCH_failover.json"

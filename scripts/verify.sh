@@ -19,12 +19,20 @@ cargo test -q --lib --bins
 # to the full-recompute reference — a failure here must identify
 # itself, not hide inside the glob below.
 cargo test -q --test decode_conformance
+# Failover conformance as its own named gate: the chaos harness kills
+# (and drains) lanes under live multi-session decode traffic — shards
+# {2,4} × pruning knobs × KV eviction pressure, error-kills and
+# panic-kills, checkpointed restores, and the shed-then-retry client
+# path — and must end every run with zero lost sessions and every
+# surviving stream bitwise identical to the sequential reference.
+cargo test -q --test failover_conformance
 # Integration harnesses as an explicit second gate (auto-discovers any
 # future file under rust/tests/): serve_conformance proves the batched
 # native serving path is bitwise identical to sequential reference
 # execution; decode_conformance pins the session/KV-cache decode path;
-# sim_cross_validation and pjrt_roundtrip cover the PJRT artifacts
-# (they self-skip when artifacts/ is absent).
+# failover_conformance pins lane failover; sim_cross_validation and
+# pjrt_roundtrip cover the PJRT artifacts (they self-skip when
+# artifacts/ is absent).
 cargo test -q --test '*'
 
 if cargo clippy --version >/dev/null 2>&1; then
