@@ -8,8 +8,11 @@
 //! `scripts/bench.sh` archives the curves as `BENCH_decode.json`; the
 //! headlines to watch are the cached step beating full recompute by
 //! **≥ 3× at 1k context** (the quadratic→linear collapse leaves far
-//! more in practice) and `decode_batch b=8` beating the sequential
-//! pops by **≥ 2×** on a multi-core runner.
+//! more in practice), `decode_batch b=8` beating the sequential
+//! pops by **≥ 2×** on a multi-core runner, and the continuous
+//! iteration scheduler sustaining **≥ 1×** pop-batch tokens/s under
+//! churning session membership (same kernel work, batch re-formed
+//! every iteration).
 //!
 //! ```sh
 //! cargo bench --bench bench_decode -- --json BENCH_decode.json
@@ -172,8 +175,58 @@ fn main() {
         ));
     }
 
-    // Headlines: cached vs full recompute at the 1k context, and the
-    // batched fan-out vs sequential pops at b=8.
+    // == continuous vs pop-batch sustained decode under churn ==
+    // A churning schedule: 6 sessions with staggered prefills and
+    // chain lengths (session s decodes 4+s tokens after a 16-token
+    // prefill), steps interleaved round-robin so the live set overlaps
+    // and thins as short chains finish. One timed iteration builds a
+    // fresh engine, queues the whole schedule, and runs the serving
+    // loop to completion in either shape — run-to-completion pops vs
+    // the continuous iteration scheduler re-forming the batch every
+    // step. Tokens served per run is fixed, so the two series are
+    // directly comparable sustained tokens/s.
+    println!("\n== continuous vs pop-batch sustained decode tokens/s \
+              (churning session membership, max_batch 8) ==");
+    let mut schedule: Vec<(u64, usize, Vec<i32>)> = Vec::new();
+    let mut pos = [0usize; 6];
+    for s in 0..6usize {
+        let toks: Vec<i32> =
+            (0..16).map(|i| ((s * 31 + i) % 30_000) as i32).collect();
+        pos[s] = toks.len();
+        schedule.push((s as u64, 0, toks));
+    }
+    for round in 0..9usize {
+        for s in 0..6usize {
+            if round < 4 + s {
+                schedule.push((s as u64, pos[s],
+                               vec![((round * 7 + s) % 30_000) as i32]));
+                pos[s] += 1;
+            }
+        }
+    }
+    let total_tokens: usize = schedule.iter().map(|(_, _, t)| t.len()).sum();
+    for &continuous in &[false, true] {
+        let name = if continuous {
+            "decode_serve continuous (churning sessions)"
+        } else {
+            "decode_serve pop-batch (churning sessions)"
+        };
+        ms.push(b.run_throughput(name, total_tokens as f64, "tok", || {
+            let eng = decode_engine(8).with_continuous(continuous);
+            for (i, (s, pos, toks)) in schedule.iter().enumerate() {
+                eng.batcher
+                    .submit(Request::decode_at(i as u64, *s, *pos, toks.clone()))
+                    .unwrap();
+            }
+            eng.batcher.close();
+            let resps = eng.run_loop();
+            assert_eq!(resps.len(), schedule.len());
+        }));
+    }
+
+    // Headlines: cached vs full recompute at the 1k context, the
+    // batched fan-out vs sequential pops at b=8, and continuous vs
+    // pop-batch under churn.
     let find = |needle: &str| -> Option<f64> {
         ms.iter().find(|m| m.name.contains(needle)).map(Measurement::mean)
     };
@@ -189,6 +242,13 @@ fn main() {
         println!("batched decode fan-out speedup over sequential pops at \
                   b=8: {:.1}x (target >= 2x on a multi-core runner)",
                  seq / batched);
+    }
+    if let (Some(cont), Some(popb)) =
+        (find("decode_serve continuous"), find("decode_serve pop-batch"))
+    {
+        println!("continuous vs pop-batch sustained tokens/s under churning \
+                  session membership: {:.2}x (>= 1x expected — same kernel \
+                  work, per-iteration batch re-forming)", popb / cont);
     }
 
     if let Some(path) = json_path {

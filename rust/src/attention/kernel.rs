@@ -953,6 +953,14 @@ impl MhaKernel {
     /// composition or thread count (each (session, head) trajectory is
     /// an independent pure function of its tokens; pinned by the unit
     /// test here and end-to-end by `rust/tests/decode_conformance.rs`).
+    ///
+    /// The task list is rebuilt by the caller on every call, and the
+    /// continuous iteration scheduler leans on that: membership may
+    /// *churn* between calls — sessions joining, leaving, and sharing
+    /// iterations with different peers — because a session's trajectory
+    /// depends only on its own cache state and token order, never on
+    /// which other tasks rode the same fan-out (pinned by the churn
+    /// test here).
     pub fn decode_batch(
         &self,
         tasks: &[DecodeTask<'_>],
@@ -1559,6 +1567,91 @@ mod tests {
                             x.out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
                             y.out.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
                         );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_batch_membership_churn_is_invisible_bitwise() {
+        // The continuous scheduler re-forms the task list every
+        // iteration, so a session decodes alongside different peers on
+        // every call — here A+B, then B+C, then C alone. Each session's
+        // rows must be bitwise identical to decoding it alone step by
+        // step: churn in who shares the fan-out can never leak into a
+        // trajectory.
+        let (dh, dv, layers, heads) = (8usize, 8usize, 2usize, 2usize);
+        let p = params(0.4, 0.0, 0.05);
+        let derive =
+            |tok: i32, pos: usize, layer: usize, head: usize| -> TokenRow {
+                derive_test_row(tok, pos, layer, head, dh, dv)
+            };
+        let kernel = MhaKernel::new(p).with_threads(4);
+        let mk_cache =
+            || KvCache::new(layers, heads, dh, dv, p.block, p.block * 4);
+        let (ca, cb, cc) = (mk_cache(), mk_cache(), mk_cache());
+        // Per-session step schedule across three iterations (None =
+        // the session is not a member of that iteration).
+        let toks_a: [Option<Vec<i32>>; 3] = [Some(vec![1, 2, 3]), None, None];
+        let toks_b: [Option<Vec<i32>>; 3] =
+            [Some(vec![4]), Some(vec![5]), None];
+        let toks_c: [Option<Vec<i32>>; 3] =
+            [None, Some(vec![6, 7]), Some(vec![8])];
+        let mut got: Vec<Vec<Vec<Vec<DecodeRow>>>> = Vec::new();
+        for it in 0..3 {
+            let mut tasks: Vec<DecodeTask> = Vec::new();
+            let mut groups: Vec<Vec<&[i32]>> = Vec::new();
+            for (cache, sched) in
+                [(&ca, &toks_a), (&cb, &toks_b), (&cc, &toks_c)]
+            {
+                if let Some(step) = &sched[it] {
+                    groups.push(vec![step.as_slice()]);
+                    tasks.push(DecodeTask {
+                        cache,
+                        replay: &[],
+                        steps: &[],
+                        inv_scale: None,
+                    });
+                }
+            }
+            for (task, group) in tasks.iter_mut().zip(&groups) {
+                task.steps = group.as_slice();
+            }
+            got.push(kernel.decode_batch(&tasks, derive));
+        }
+        // Sequential reference: each session alone, in step order.
+        for (si, sched) in [&toks_a, &toks_b, &toks_c].iter().enumerate() {
+            let kv_ref = mk_cache();
+            let seq = MhaKernel::new(p).with_threads(1);
+            for layer in 0..layers {
+                for head in 0..heads {
+                    let mut kv = kv_ref.head(layer, head).lock().unwrap();
+                    for (it, step) in sched.iter().enumerate() {
+                        let Some(step) = step else { continue };
+                        let mut last = None;
+                        for (k, &tok) in step.iter().enumerate() {
+                            let row = derive(tok, kv.len(), layer, head);
+                            if k + 1 == step.len() {
+                                last = Some(seq.decode_step(&mut kv, &row, None));
+                            } else {
+                                seq.decode_append(&mut kv, &row);
+                            }
+                        }
+                        let want = last.expect("nonempty step");
+                        // This session's slot within iteration `it`'s
+                        // task list (membership order is A, B, C).
+                        let slot = [&toks_a, &toks_b, &toks_c][..si]
+                            .iter()
+                            .filter(|s| s[it].is_some())
+                            .count();
+                        let b = &got[it][slot][0][layer * heads + head];
+                        assert_eq!(
+                            b.out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                            want.out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                            "session {si} iteration {it} l{layer} h{head}"
+                        );
+                        assert_eq!(b.kept_blocks, want.kept_blocks);
                     }
                 }
             }

@@ -27,10 +27,50 @@
 //!   [`super::engine::Response`] with `rejected = true` (see
 //!   [`super::engine::Response::reject`]), so clients always get an
 //!   answer; the batcher itself never fabricates responses.
+//!
+//! # Two release doors
+//!
+//! Engines pull admitted work through one of two doors, both counted
+//! by the same in-flight quiescence accounting:
+//!
+//! * [`Batcher::next_batch`] — the pop-batch door: blocks until a full
+//!   batch forms or the oldest request lingers past the deadline, then
+//!   releases up to `max_batch` requests that run to completion.
+//! * [`Batcher::admit_pending`] — the per-step admission door for the
+//!   continuous (iteration-level) decode scheduler: hands over
+//!   *everything queued right now*, without waiting for the batch to
+//!   fill or the linger clock — so a request submitted mid-flight joins
+//!   the engine's very next iteration instead of its next pop. The
+//!   engine's live session set, not this queue, decides how much of
+//!   that work each iteration actually schedules (by [`Priority`]
+//!   class, then arrival order).
+//!
+//! Queue-wait is a property of the *request*, not of the pop: the
+//! enqueue instant is stamped once at admission and
+//! [`Request::take_queue_wait`] yields a metric sample exactly once,
+//! so a request readmitted after a lane death (see
+//! [`Batcher::readmit_front`]) does not double-count its wait.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// SLO class of a request — the continuous (iteration-level) decode
+/// scheduler orders each iteration's candidates by class first, then
+/// arrival, so a short interactive stream is not starved behind a long
+/// bulk one when an iteration is capacity-bound. The pop-batch door is
+/// strictly FIFO and ignores the class. Ordering is scheduling order:
+/// `Interactive` schedules before `Standard` before `Bulk`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// Latency-sensitive short streams: scheduled first.
+    Interactive,
+    /// The default class.
+    #[default]
+    Standard,
+    /// Throughput-oriented long streams: yield capacity to the others.
+    Bulk,
+}
 
 /// One serving request. Two kinds share the carrier:
 ///
@@ -64,12 +104,27 @@ pub struct Request {
     /// step; `None` (one-shots, and free-running decode clients that
     /// track resync themselves) appends unchecked.
     pub pos: Option<usize>,
+    /// SLO class; see [`Priority`]. Defaults to [`Priority::Standard`].
+    pub priority: Priority,
+    /// Whether this request's queue wait has already been sampled into
+    /// the metrics — set by [`Request::take_queue_wait`] and preserved
+    /// across failover readmission, so the wait is counted exactly once
+    /// however many times the request is popped.
+    pub(crate) wait_recorded: bool,
 }
 
 impl Request {
     /// One-shot request: the whole workload derives from `tokens`.
     pub fn oneshot(id: u64, tokens: Vec<i32>) -> Self {
-        Self { id, tokens, enqueued: Instant::now(), session: None, pos: None }
+        Self {
+            id,
+            tokens,
+            enqueued: Instant::now(),
+            session: None,
+            pos: None,
+            priority: Priority::default(),
+            wait_recorded: false,
+        }
     }
 
     /// Decode-step request: append `tokens` to `session`'s cached
@@ -78,20 +133,42 @@ impl Request {
     /// stream currently is, so a client that ignores rejections can
     /// silently diverge. Prefer [`Request::decode_at`].
     pub fn decode(id: u64, session: u64, tokens: Vec<i32>) -> Self {
-        Self { id, tokens, enqueued: Instant::now(), session: Some(session), pos: None }
+        Self { session: Some(session), ..Self::oneshot(id, tokens) }
     }
 
     /// Position-asserted decode step: append `tokens` at stream
     /// position `pos` (the session's context length before this step).
     /// The serving engine validates the claim against the session's
-    /// committed length *before any state mutates* and refuses the
-    /// whole batch with a typed
-    /// [`super::engine::StreamGapError`] on a mismatch — gapped (the
-    /// client ignored a rejection and kept streaming), replayed, or
+    /// committed length *before any state mutates* and refuses a
+    /// mismatched step with a typed
+    /// [`super::engine::RejectReason::StreamGap`] — gapped (the client
+    /// ignored a rejection and kept streaming), replayed, or
     /// out-of-order streams are caught server-side instead of
-    /// corrupting the cached derivation.
+    /// corrupting the cached derivation. Only the offending step is
+    /// refused; co-batched peers (and in-sync steps of other sessions
+    /// in the same iteration) keep decoding.
     pub fn decode_at(id: u64, session: u64, pos: usize, tokens: Vec<i32>) -> Self {
-        Self { id, tokens, enqueued: Instant::now(), session: Some(session), pos: Some(pos) }
+        Self { session: Some(session), pos: Some(pos), ..Self::oneshot(id, tokens) }
+    }
+
+    /// Set the SLO class (builder-style); see [`Priority`].
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Yield this request's queue-wait sample (seconds from admission
+    /// to `now`) exactly once; subsequent calls return `None`. The
+    /// engine calls this where it records queue-wait metrics, so a
+    /// request that is popped, readmitted by a dying lane, and popped
+    /// again by a survivor contributes one sample covering its full
+    /// wait — not one sample per pop.
+    pub(crate) fn take_queue_wait(&mut self, now: Instant) -> Option<f64> {
+        if self.wait_recorded {
+            return None;
+        }
+        self.wait_recorded = true;
+        Some(now.saturating_duration_since(self.enqueued).as_secs_f64())
     }
 }
 
@@ -224,6 +301,43 @@ impl Batcher {
     pub(crate) fn wait_idle(&self) {
         let mut q = self.q.lock().unwrap();
         while q.inflight > 0 {
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+
+    /// Per-step admission door for the continuous (iteration-level)
+    /// scheduler: hand over every request queued *right now*, without
+    /// waiting for a full batch or the linger deadline.
+    ///
+    /// * `wait = true` (the engine's live set is empty — nothing to
+    ///   iterate on): block until at least one request arrives, then
+    ///   return the non-empty drain; `None` once closed and drained.
+    /// * `wait = false` (the engine has live sessions to keep
+    ///   serving): return immediately — possibly `Some(vec![])` when
+    ///   nothing is queued. `None` still means closed *and* drained.
+    ///
+    /// Quiescence accounting: a non-empty drain increments the
+    /// in-flight count under the same lock, exactly like a pop — there
+    /// is no window where admitted work has left the queue uncounted.
+    /// The engine holds that count (collapsing overlapping admissions
+    /// to one, see `batch_done`) until its live set is fully answered,
+    /// so [`Batcher::wait_idle`] remains a race-free barrier for the
+    /// drain/failover paths: it waits out the *iterations*, not just a
+    /// pop.
+    pub fn admit_pending(&self, wait: bool) -> Option<Vec<Request>> {
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if !q.items.is_empty() {
+                q.inflight += 1;
+                let n = q.items.len();
+                return Some(drain(&mut q.items, n));
+            }
+            if q.closed {
+                return None;
+            }
+            if !wait {
+                return Some(Vec::new());
+            }
             q = self.cv.wait(q).unwrap();
         }
     }
@@ -508,6 +622,91 @@ mod tests {
         assert!(!waiter.is_finished(), "wait_idle blocks while in flight");
         b.batch_done();
         assert_eq!(waiter.join().unwrap(), 0, "batch_done releases wait_idle");
+    }
+
+    #[test]
+    fn queue_wait_sampled_once_across_failover_readmit() {
+        // Satellite bugfix: queue-wait used to be recorded at every
+        // pop, so a batch a dying lane readmitted via `readmit_front`
+        // double-counted its wait when the survivor popped it again.
+        // The sample now belongs to the request: stamped from the one
+        // admission-time enqueue instant, yielded exactly once.
+        let b = Batcher::new(2, Duration::from_millis(1));
+        b.submit(req(0)).unwrap();
+        b.submit(req(1)).unwrap();
+        let mut popped = b.next_batch().unwrap();
+        let now = Instant::now();
+        let first: Vec<f64> =
+            popped.iter_mut().filter_map(|r| r.take_queue_wait(now)).collect();
+        assert_eq!(first.len(), 2, "first pop samples every request once");
+        assert!(first.iter().all(|w| *w >= 0.0));
+        // The lane dies: the popped-but-uncommitted batch goes back to
+        // the front of the queue, and a survivor pops it again.
+        b.readmit_front(popped);
+        b.batch_done();
+        let mut again = b.next_batch().unwrap();
+        assert_eq!(again.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        let second: Vec<f64> = again
+            .iter_mut()
+            .filter_map(|r| r.take_queue_wait(Instant::now()))
+            .collect();
+        assert!(second.is_empty(), "re-pop after readmit contributes no new samples");
+    }
+
+    #[test]
+    fn priority_defaults_standard_and_orders_classes() {
+        assert_eq!(req(0).priority, Priority::Standard);
+        let hot = req(1).with_priority(Priority::Interactive);
+        let cold = req(2).with_priority(Priority::Bulk);
+        assert!(hot.priority < req(0).priority, "interactive schedules first");
+        assert!(req(0).priority < cold.priority, "bulk yields to standard");
+    }
+
+    #[test]
+    fn admit_pending_drains_everything_without_linger() {
+        // The per-step admission door must not wait for a full batch or
+        // the linger clock, and must hand over *more* than max_batch if
+        // that much is queued — the iteration scheduler, not the queue,
+        // caps what actually runs.
+        let b = Batcher::new(2, Duration::from_secs(60));
+        for i in 0..5 {
+            b.submit(req(i)).unwrap();
+        }
+        let t0 = Instant::now();
+        let admitted = b.admit_pending(false).unwrap();
+        assert_eq!(admitted.len(), 5, "everything queued joins at once");
+        assert!(t0.elapsed() < Duration::from_secs(30), "no linger wait");
+        assert_eq!(b.inflight(), 1, "non-empty admission counted in flight");
+        // Nothing queued + live work elsewhere: immediate empty drain.
+        assert_eq!(b.admit_pending(false).unwrap().len(), 0);
+        assert_eq!(b.inflight(), 1, "empty drain leaves accounting alone");
+        b.batch_done();
+        b.close();
+        assert!(b.admit_pending(false).is_none(), "closed and drained");
+    }
+
+    #[test]
+    fn admit_pending_blocks_when_idle_until_arrival_or_close() {
+        let b = Arc::new(Batcher::new(4, Duration::from_secs(60)));
+        let c = Arc::clone(&b);
+        let consumer = std::thread::spawn(move || {
+            let first = c.admit_pending(true);
+            c.batch_done();
+            let second = c.admit_pending(true);
+            (first, second)
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!consumer.is_finished(), "idle admission door blocks");
+        b.submit(req(7)).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        b.close();
+        let (first, second) = consumer.join().unwrap();
+        assert_eq!(
+            first.unwrap().iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![7],
+            "arrival wakes the blocked door"
+        );
+        assert!(second.is_none(), "close wakes and reports drained");
     }
 
     #[test]

@@ -32,6 +32,25 @@
 //! results (the bitwise-determinism guarantee, pinned by
 //! `serve_conformance`).
 //!
+//! # Two serving loops
+//!
+//! [`Engine::run_serving`] drives one of two schedulers over the same
+//! `serve_batch`:
+//!
+//! * **Pop-batch** (default) — [`Batcher::next_batch`] releases a
+//!   batch that runs to completion before the next pop; arrivals wait
+//!   for the next pop boundary.
+//! * **Continuous** ([`Engine::with_continuous`]) — iteration-level
+//!   scheduling: the lane keeps a live set of active sessions, drains
+//!   the admission door between iterations
+//!   ([`Batcher::admit_pending`]), and re-forms the `sessions × layers
+//!   × heads` task list every iteration, one step per session, ordered
+//!   by [`super::batcher::Priority`] class then admission age. A
+//!   request submitted mid-flight is served starting at the *next
+//!   iteration*. Results are bitwise identical between the two loops
+//!   (and to sequential reference execution) — scheduling shape never
+//!   changes outputs.
+//!
 //! # Admission-control contract
 //!
 //! Engines never see admission-rejected requests: a bounded
@@ -41,11 +60,15 @@
 //! carries `rejected = true`, the request id, `label = -1`, a typed
 //! [`RejectReason`] and the time-to-rejection in `e2e_seconds`; every
 //! other field is zero / empty. `run_loop` reuses the same carrier to
-//! shed a batch whose execution failed (`RejectReason::Shed`, or
-//! [`RejectReason::StreamGap`] on the decode step whose asserted
-//! position tripped server-side gap detection — see
-//! [`StreamGapError`]), so every admitted request still gets exactly
-//! one response. Served responses always carry `rejected = false`.
+//! shed a batch whose execution failed structurally
+//! (`RejectReason::Shed` — nothing mutated, resubmit as-is), so every
+//! admitted request still gets exactly one response. A decode step
+//! whose asserted position trips server-side gap detection is refused
+//! *alone*, inside `serve_batch`, with a typed
+//! [`RejectReason::StreamGap`] answer (see [`StreamGapError`]) — its
+//! co-batched peers serve, bitwise identical to a batch the gapped
+//! step was never part of. Served responses always carry
+//! `rejected = false`.
 
 use std::collections::{HashMap, HashSet};
 use std::fmt;
@@ -124,13 +147,31 @@ pub enum RejectReason {
     StreamGap { expected: usize, claimed: usize },
 }
 
-/// The typed error [`Engine::serve_batch`] returns when decode-stream
-/// gap detection refuses a batch: identifies the offending step and
-/// both positions. `run_loop` downcasts it to stamp
-/// [`RejectReason::StreamGap`] on the offender's rejection response
-/// (co-batched requests are shed with [`RejectReason::Shed`]); direct
-/// `serve_batch` callers can `downcast_ref` it off the `anyhow::Error`
-/// the same way.
+impl RejectReason {
+    /// Whether blind resubmission of the *same* request can ever
+    /// succeed. [`RejectReason::Admission`] and [`RejectReason::Shed`]
+    /// are transient backpressure — nothing about the request was
+    /// wrong, so the retry-with-backoff client
+    /// ([`super::shard::RetryPolicy`]) resubmits as-is.
+    /// [`RejectReason::StreamGap`] is **not retryable**: the step's
+    /// asserted position disagrees with the session's committed stream,
+    /// and resubmitting it unchanged will be refused forever — the
+    /// client must resync from `expected` first. Burning a backoff
+    /// budget on it only delays the resync.
+    pub fn is_retryable(&self) -> bool {
+        !matches!(self, RejectReason::StreamGap { .. })
+    }
+}
+
+/// The typed description of a decode-stream gap refusal: identifies
+/// the offending step and both positions. Gap detection refuses **only
+/// the offending step** — `serve_batch` answers it inline with a
+/// [`RejectReason::StreamGap`] rejection response (logging this type's
+/// rendering) while its co-batched peers serve normally, bitwise
+/// identical to a batch the gapped step was never part of. A
+/// `serve_batch` `Err` is therefore always a *structural* whole-batch
+/// failure (empty decode tokens, sessionless lane, journal divergence),
+/// never a stream gap.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct StreamGapError {
     pub id: u64,
@@ -480,8 +521,13 @@ pub struct Engine {
     journal: Option<Arc<SessionJournal>>,
     /// Injected faults for the chaos harness (default: none).
     fault: FaultPlan,
-    /// Batches popped so far — the clock `fault` counts in.
+    /// Batches popped so far — the clock `fault` counts in. The
+    /// continuous scheduler counts its *iterations* on the same clock,
+    /// so one fault plan drives both serving loops.
     pops: AtomicU64,
+    /// Serve with the continuous (iteration-level) scheduler instead
+    /// of run-to-completion pop-batches; see [`Engine::run_serving`].
+    continuous: bool,
     backend: Backend,
     responses: Arc<Mutex<Vec<Response>>>,
     inflight: Arc<AtomicU64>,
@@ -514,6 +560,7 @@ impl Engine {
             journal: None,
             fault: FaultPlan::default(),
             pops: AtomicU64::new(0),
+            continuous: false,
             backend: Backend::Pjrt {
                 rt,
                 params: params.data.clone(),
@@ -572,6 +619,7 @@ impl Engine {
             journal: None,
             fault: FaultPlan::default(),
             pops: AtomicU64::new(0),
+            continuous: false,
             backend: Backend::Native { kernel, profile },
             responses: Arc::new(Mutex::new(Vec::new())),
             inflight: Arc::new(AtomicU64::new(0)),
@@ -627,6 +675,21 @@ impl Engine {
     /// harness; the default plan injects nothing).
     pub fn with_fault_plan(mut self, plan: FaultPlan) -> Self {
         self.fault = plan;
+        self
+    }
+
+    /// Select the continuous (iteration-level) scheduler for
+    /// [`Engine::run_serving`]: instead of popping a batch and running
+    /// it to completion, the lane keeps a live set of active sessions,
+    /// re-forms the `sessions × layers × heads` task list every
+    /// iteration, and re-opens the admission door between iterations —
+    /// so a request submitted mid-flight joins the *next iteration*,
+    /// not the next pop. Off by default (the pop-batch loop).
+    /// `serve_batch` and all results are unchanged either way: outputs
+    /// stay bitwise equal to sequential reference execution regardless
+    /// of which iterations a stream shared with which peers.
+    pub fn with_continuous(mut self, continuous: bool) -> Self {
+        self.continuous = continuous;
         self
     }
 
@@ -860,8 +923,11 @@ impl Engine {
         // the batch's position-asserted steps against each session's
         // committed context length, accumulating in-batch appends so
         // chained steps of one session validate against where the
-        // *batch* will have left the stream.
+        // *batch* will have left the stream. A mismatch refuses only
+        // the offending step (typed [`RejectReason::StreamGap`] answer
+        // built below); everything else in the batch serves.
         let has_decode = reqs.iter().any(|r| r.session.is_some());
+        let mut refused: Vec<Option<RejectReason>> = vec![None; reqs.len()];
         if let (Some(store_mutex), true) = (&self.sessions, has_decode) {
             let mut store = store_mutex.lock().unwrap();
             // Journal hydration (failover adoption), before gap
@@ -899,27 +965,45 @@ impl Engine {
                 }
             }
             let mut expect: HashMap<u64, usize> = HashMap::new();
-            for r in reqs {
+            for (i, r) in reqs.iter().enumerate() {
                 let Some(session) = r.session else { continue };
                 let e = expect
                     .entry(session)
                     .or_insert_with(|| store.expected_pos(session));
                 if let Some(claimed) = r.pos {
                     if claimed != *e {
-                        return Err(anyhow::Error::new(StreamGapError {
-                            id: r.id,
-                            session,
-                            expected: *e,
-                            claimed,
-                        }));
+                        // Refuse *this step only*: co-batched peers —
+                        // other sessions, and other steps of this one —
+                        // keep serving. The refused step appends
+                        // nothing, so `e` stays put: a chained later
+                        // step that assumed the gapped step landed
+                        // mismatches in turn (refused with its own
+                        // positions), while a resync step re-claiming
+                        // `e` is admitted — per-step admission, even
+                        // inside one batch.
+                        eprintln!(
+                            "{}",
+                            StreamGapError {
+                                id: r.id,
+                                session,
+                                expected: *e,
+                                claimed,
+                            }
+                        );
+                        refused[i] =
+                            Some(RejectReason::StreamGap { expected: *e, claimed });
+                        continue;
                     }
                 }
                 *e += r.tokens.len();
             }
         }
 
-        let mut responses: Vec<Option<Response>> =
-            (0..reqs.len()).map(|_| None).collect();
+        let mut responses: Vec<Option<Response>> = reqs
+            .iter()
+            .zip(&refused)
+            .map(|(r, reason)| reason.map(|why| Response::reject_because(r, why)))
+            .collect();
 
         // One-shot sub-batch through the batched kernel.
         let ones: Vec<&Request> =
@@ -934,11 +1018,17 @@ impl Engine {
             }
         }
 
-        // Decode sub-batch: every decode step of every session through
-        // one kernel fan-out (sessions × layers × heads task list) —
-        // see `serve_decodes`. Same-session steps stay sequential in
-        // arrival order inside their per-head tasks.
-        if has_decode {
+        // Decode sub-batch: every *admitted* decode step of every
+        // session through one kernel fan-out (sessions × layers ×
+        // heads task list) — see `serve_decodes`; gap-refused steps
+        // were already answered above and stay out of the task list.
+        // Same-session steps stay sequential in arrival order inside
+        // their per-head tasks.
+        let decode_live = reqs
+            .iter()
+            .zip(&responses)
+            .any(|(r, slot)| r.session.is_some() && slot.is_none());
+        if decode_live {
             self.serve_decodes(kernel, profile, reqs, &mut responses);
         }
 
@@ -1074,7 +1164,8 @@ impl Engine {
             .collect()
     }
 
-    /// Serve **every decode step in the batch** as one kernel fan-out:
+    /// Serve **every admitted decode step in the batch** (gap-refused
+    /// steps were answered before this runs) as one kernel fan-out:
     /// the task list is the flattened `sessions × layers × heads` grid
     /// ([`MhaKernel::decode_batch`]), mirroring what `forward_batch`
     /// does for one-shots — cross-session decode work saturates the
@@ -1127,6 +1218,12 @@ impl Engine {
             let mut by_session: HashMap<u64, usize> = HashMap::new();
             for (i, r) in reqs.iter().enumerate() {
                 let Some(session) = r.session else { continue };
+                if responses[i].is_some() {
+                    // Gap-refused step: already answered, never
+                    // checked out — its session only groups here if
+                    // an *admitted* step of it is also in the batch.
+                    continue;
+                }
                 match by_session.get(&session) {
                     Some(&g) => groups[g].idxs.push(i),
                     None => {
@@ -1289,7 +1386,10 @@ impl Engine {
     /// The sharded coordinator runs lanes through this so a lane death
     /// is a value it can recover from, not a process exit.
     pub fn run_serving(&self) -> (Vec<Response>, Option<anyhow::Error>) {
-        while let Some(batch) = self.batcher.next_batch() {
+        if self.continuous {
+            return self.run_continuous();
+        }
+        while let Some(mut batch) = self.batcher.next_batch() {
             let pop = self.pops.fetch_add(1, Ordering::SeqCst) + 1;
             if let Some(delay) = self.fault.delay_pop {
                 std::thread::sleep(delay);
@@ -1310,10 +1410,12 @@ impl Engine {
             // Queue wait measured at the pop itself — the pure
             // scheduling delay each request saw, before any compute
             // (the `queue wait@pop` report line; per-shard in the
-            // fleet report).
+            // fleet report). Sampled exactly once per request
+            // (`take_queue_wait`): a batch a dying lane readmitted is
+            // re-popped by its survivor without double-counting.
             let now = Instant::now();
             let waits: Vec<f64> =
-                batch.iter().map(|r| (now - r.enqueued).as_secs_f64()).collect();
+                batch.iter_mut().filter_map(|r| r.take_queue_wait(now)).collect();
             self.metrics.record_queue_wait(&waits);
             self.inflight.fetch_add(1, Ordering::SeqCst);
             if self.fault.poison_at_pop == Some(pop) {
@@ -1336,29 +1438,217 @@ impl Engine {
                     // A failed batch must not make its requests vanish:
                     // every admitted request gets exactly one response,
                     // so shed the batch with not-served markers (same
-                    // carrier as an admission rejection). A decode
-                    // stream-gap refusal is typed: the offending step's
-                    // rejection carries the positions so its client
-                    // knows to resync, while co-batched requests are
-                    // plain sheds (nothing mutated — resubmit as-is).
+                    // carrier as an admission rejection). Only
+                    // *structural* failures surface here — empty decode
+                    // tokens, a sessionless lane, journal divergence —
+                    // and those refuse the whole batch before any state
+                    // mutated (resubmit as-is). A stream gap never
+                    // lands here: `serve_batch` answers the gapped step
+                    // inline with [`RejectReason::StreamGap`] and
+                    // serves its co-batched peers.
                     eprintln!("batch failed: {e:#}");
-                    let gap = e.downcast_ref::<StreamGapError>().copied();
                     self.responses.lock().unwrap().extend(
                         batch.iter().map(|r| {
-                            let reason = match gap {
-                                Some(g) if g.id == r.id =>
-                                    RejectReason::StreamGap {
-                                        expected: g.expected,
-                                        claimed: g.claimed,
-                                    },
-                                _ => RejectReason::Shed,
-                            };
-                            Response::reject_because(r, reason)
+                            Response::reject_because(r, RejectReason::Shed)
                         }),
                     );
                 }
             }
             self.inflight.fetch_sub(1, Ordering::SeqCst);
+            self.batcher.batch_done();
+        }
+        (self.take_responses(), None)
+    }
+
+    /// The continuous (iteration-level) serving loop
+    /// ([`Engine::with_continuous`]). Structure of one iteration:
+    ///
+    /// 1. **Admission door** — [`Batcher::admit_pending`] drains every
+    ///    request queued *right now* into the live set (blocking only
+    ///    when the live set is empty). New arrivals therefore join the
+    ///    very next iteration; nothing waits for a pop boundary.
+    /// 2. **Schedule** — every live session offers the *head* of its
+    ///    FIFO step chain; pending one-shots offer themselves. The
+    ///    candidates are ordered by ([`super::batcher::Priority`]
+    ///    class, admission order) and capped at the engine's batch
+    ///    width; deferred candidates count as starvation and win by
+    ///    age next iteration.
+    /// 3. **Serve** — the scheduled steps run through the ordinary
+    ///    `serve_batch` (one `sessions × layers × heads` fan-out;
+    ///    per-step gap refusal answers a gapped stream alone while its
+    ///    iteration peers keep decoding).
+    ///
+    /// Per-session step order is preserved end to end, so every
+    /// stream's outputs are bitwise identical to sequential reference
+    /// execution no matter how membership churned. Quiescence: one
+    /// unit of the batcher's in-flight accounting is held from first
+    /// admission until the live set is fully answered, so
+    /// `wait_idle`-based drain/failover barriers wait out the
+    /// iterations. Fault injection counts iterations on the pop clock;
+    /// a killed lane hands its entire live set back to the queue front
+    /// in admission order (per-session FIFO preserved) for re-homing.
+    fn run_continuous(&self) -> (Vec<Response>, Option<anyhow::Error>) {
+        use std::collections::VecDeque;
+        // Live set: per-session FIFO chains + one-shots, tagged with
+        // admission sequence numbers (the age used for scheduling).
+        let mut chains: HashMap<u64, VecDeque<(u64, Request)>> = HashMap::new();
+        let mut oneshots: VecDeque<(u64, Request)> = VecDeque::new();
+        let mut joined: HashSet<u64> = HashSet::new();
+        let mut next_seq: u64 = 0;
+        let mut live: usize = 0;
+        let mut holding = false; // one in-flight unit held while live > 0
+        loop {
+            // -- per-step admission door ------------------------------
+            match self.batcher.admit_pending(live == 0) {
+                Some(arrivals) if !arrivals.is_empty() => {
+                    // `admit_pending` counted one in-flight unit under
+                    // its own lock (no uncounted window); collapse
+                    // overlapping admissions to the single unit held
+                    // for the whole live set.
+                    if holding {
+                        self.batcher.batch_done();
+                    } else {
+                        holding = true;
+                    }
+                    let now = Instant::now();
+                    let mut arrivals = arrivals;
+                    let waits: Vec<f64> = arrivals
+                        .iter_mut()
+                        .filter_map(|r| r.take_queue_wait(now))
+                        .collect();
+                    self.metrics.record_queue_wait(&waits);
+                    for r in arrivals {
+                        let seq = next_seq;
+                        next_seq += 1;
+                        live += 1;
+                        match r.session {
+                            Some(s) => {
+                                chains.entry(s).or_default().push_back((seq, r))
+                            }
+                            None => oneshots.push_back((seq, r)),
+                        }
+                    }
+                }
+                Some(_) => {} // nothing queued; keep iterating the live set
+                None => {
+                    // Closed and drained; finish the live set first.
+                    if live == 0 {
+                        break;
+                    }
+                }
+            }
+            if live == 0 {
+                continue;
+            }
+
+            // -- fault hooks: iterations tick the pop clock -----------
+            let pop = self.pops.fetch_add(1, Ordering::SeqCst) + 1;
+            if let Some(delay) = self.fault.delay_pop {
+                std::thread::sleep(delay);
+            }
+            if self.fault.kill_at_pop == Some(pop) {
+                // Hand the whole live set back to the queue front in
+                // admission order — per-session FIFO survives, exactly
+                // like a pop-batch lane returning its popped batch.
+                let mut back: Vec<(u64, Request)> = oneshots.drain(..).collect();
+                for (_, chain) in chains.drain() {
+                    back.extend(chain);
+                }
+                back.sort_by_key(|&(seq, _)| seq);
+                self.batcher
+                    .readmit_front(back.into_iter().map(|(_, r)| r).collect());
+                if holding {
+                    self.batcher.batch_done();
+                }
+                if self.fault.kill_by_panic {
+                    panic!("injected fault: lane killed at iteration {pop}");
+                }
+                return (
+                    self.take_responses(),
+                    Some(anyhow::anyhow!(
+                        "injected fault: lane killed at iteration {pop}"
+                    )),
+                );
+            }
+
+            // -- schedule: one head step per session + one-shots, by
+            //    (priority class, admission age), capped at batch width
+            let mut cands: Vec<(super::batcher::Priority, u64, Option<u64>)> =
+                oneshots.iter().map(|(seq, r)| (r.priority, *seq, None)).collect();
+            for (s, chain) in &chains {
+                if let Some((seq, head)) = chain.front() {
+                    cands.push((head.priority, *seq, Some(*s)));
+                }
+            }
+            cands.sort_unstable_by_key(|&(p, seq, _)| (p, seq));
+            let scheduled_n = cands.len().min(self.batch);
+            let deferred = (cands.len() - scheduled_n) as u64;
+            self.metrics.record_iteration(scheduled_n, self.batch, deferred);
+            let mut iter_batch: Vec<Request> = Vec::with_capacity(scheduled_n);
+            for (_, seq, slot) in cands.into_iter().take(scheduled_n) {
+                match slot {
+                    Some(s) => {
+                        let chain =
+                            chains.get_mut(&s).expect("candidate session live");
+                        let (_, r) = chain.pop_front().expect("head offered");
+                        if chain.is_empty() {
+                            chains.remove(&s);
+                        }
+                        iter_batch.push(r);
+                    }
+                    None => {
+                        let at = oneshots
+                            .iter()
+                            .position(|&(q, _)| q == seq)
+                            .expect("candidate one-shot live");
+                        let (_, r) = oneshots.remove(at).expect("index valid");
+                        iter_batch.push(r);
+                    }
+                }
+            }
+
+            // -- serve the iteration ----------------------------------
+            if self.fault.poison_at_pop == Some(pop) {
+                eprintln!("injected fault: batch poisoned at iteration {pop}");
+                self.responses.lock().unwrap().extend(iter_batch.iter().map(
+                    |r| Response::reject_because(r, RejectReason::Shed),
+                ));
+            } else {
+                // Join latency: submit → the first iteration that
+                // schedules the session (served or typed-refused — the
+                // stream got its first answer either way).
+                let now = Instant::now();
+                for r in &iter_batch {
+                    if let Some(s) = r.session {
+                        if joined.insert(s) {
+                            self.metrics.record_join_latency(
+                                now.saturating_duration_since(r.enqueued)
+                                    .as_secs_f64(),
+                            );
+                        }
+                    }
+                }
+                self.inflight.fetch_add(1, Ordering::SeqCst);
+                match self.serve_batch(&iter_batch) {
+                    Ok(resps) => self.responses.lock().unwrap().extend(resps),
+                    Err(e) => {
+                        eprintln!("iteration failed: {e:#}");
+                        self.responses.lock().unwrap().extend(
+                            iter_batch.iter().map(|r| {
+                                Response::reject_because(r, RejectReason::Shed)
+                            }),
+                        );
+                    }
+                }
+                self.inflight.fetch_sub(1, Ordering::SeqCst);
+            }
+            live -= iter_batch.len();
+            if live == 0 && holding {
+                self.batcher.batch_done();
+                holding = false;
+            }
+        }
+        if holding {
             self.batcher.batch_done();
         }
         (self.take_responses(), None)

@@ -54,6 +54,17 @@ struct Inner {
     /// Recovery latency: failure (or drain start) → every stranded
     /// request re-routed to a survivor's queue, seconds.
     recovery: Histogram,
+    // continuous (iteration-level) scheduler
+    /// Iterations the continuous loop ran (0 on pop-batch lanes).
+    iterations: u64,
+    /// Per-iteration occupancy: scheduled steps / batch capacity.
+    iter_occupancy: Histogram,
+    /// Submit → the first iteration that scheduled the session,
+    /// seconds — how long a mid-flight arrival waited to join.
+    join_latency: Histogram,
+    /// Head steps that were ready but deferred past an iteration by
+    /// priority/capacity — the starvation pressure counter.
+    starved_steps: u64,
 }
 
 #[derive(Debug)]
@@ -197,6 +208,51 @@ impl Metrics {
         self.inner.lock().unwrap().sessions_rehomed += 1;
     }
 
+    /// Record one continuous-scheduler iteration: `scheduled` steps ran
+    /// out of `capacity` batch slots, and `deferred` ready head steps
+    /// were pushed to the next iteration by priority/capacity.
+    pub fn record_iteration(&self, scheduled: usize, capacity: usize,
+                            deferred: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.iterations += 1;
+        m.iter_occupancy
+            .record(scheduled as f64 / capacity.max(1) as f64);
+        m.starved_steps += deferred;
+    }
+
+    /// Record one session's join latency: submit → the first iteration
+    /// that scheduled it (seconds).
+    pub fn record_join_latency(&self, seconds: f64) {
+        self.inner.lock().unwrap().join_latency.record(seconds);
+    }
+
+    /// Continuous-scheduler iterations run so far (0 on pop-batch lanes).
+    pub fn iterations(&self) -> u64 {
+        self.inner.lock().unwrap().iterations
+    }
+
+    /// Mean per-iteration occupancy (scheduled / capacity; 0.0 before
+    /// any iteration).
+    pub fn iter_occupancy_mean(&self) -> f64 {
+        self.inner.lock().unwrap().iter_occupancy.mean()
+    }
+
+    /// Sessions whose join latency was recorded (== sessions that have
+    /// been scheduled at least once by the continuous loop).
+    pub fn join_count(&self) -> u64 {
+        self.inner.lock().unwrap().join_latency.count()
+    }
+
+    /// Join-latency quantile, seconds (0.0 before any join).
+    pub fn join_latency_quantile(&self, q: f64) -> f64 {
+        self.inner.lock().unwrap().join_latency.quantile(q)
+    }
+
+    /// Ready head steps deferred past an iteration by priority/capacity.
+    pub fn starved_steps(&self) -> u64 {
+        self.inner.lock().unwrap().starved_steps
+    }
+
     pub fn lane_deaths(&self) -> u64 {
         self.inner.lock().unwrap().lane_deaths
     }
@@ -265,6 +321,10 @@ impl Metrics {
         m.requests_rehomed += snap.requests_rehomed;
         m.sessions_rehomed += snap.sessions_rehomed;
         m.recovery.merge(&snap.recovery);
+        m.iterations += snap.iterations;
+        m.iter_occupancy.merge(&snap.iter_occupancy);
+        m.join_latency.merge(&snap.join_latency);
+        m.starved_steps += snap.starved_steps;
     }
 
     pub fn throughput_rps(&self) -> f64 {
@@ -316,6 +376,17 @@ impl Metrics {
                 m.sim_dram_bytes / 1e6,
                 m.heads_pruned,
                 m.heads_total,
+            ));
+        }
+        if m.iterations > 0 {
+            s.push_str(&format!(
+                "continuous     {} iterations, mean occupancy {:.2}, \
+                 {} sessions joined (p95 join {}), {} steps deferred\n",
+                m.iterations,
+                m.iter_occupancy.mean(),
+                m.join_latency.count(),
+                crate::util::bench::fmt_time(m.join_latency.quantile(0.95)),
+                m.starved_steps,
             ));
         }
         if m.lane_deaths + m.lane_drains > 0 {
@@ -500,6 +571,31 @@ mod tests {
         fleet.absorb(&dead_lane);
         assert_eq!(fleet.requests(), 4, "double absorb doubles: callers \
                     must absorb a dead lane exactly once");
+    }
+
+    #[test]
+    fn iteration_counters_record_merge_and_report() {
+        let fleet = Metrics::new();
+        let lane = Metrics::new();
+        lane.record_iteration(4, 8, 0); // half-full iteration
+        lane.record_iteration(8, 8, 3); // full, 3 head steps deferred
+        lane.record_join_latency(0.002);
+        lane.record_join_latency(0.010);
+        assert_eq!(lane.iterations(), 2);
+        assert!((lane.iter_occupancy_mean() - 0.75).abs() < 1e-12);
+        assert_eq!(lane.join_count(), 2);
+        assert_eq!(lane.starved_steps(), 3);
+        assert_eq!(lane.join_latency_quantile(1.0), 0.010);
+        fleet.record_iteration(2, 8, 1);
+        fleet.absorb(&lane);
+        assert_eq!(fleet.iterations(), 3, "iteration counters add");
+        assert_eq!(fleet.starved_steps(), 4);
+        assert_eq!(fleet.join_count(), 2, "join histogram merges");
+        let r = fleet.report();
+        assert!(r.contains("continuous     3 iterations"), "{r}");
+        assert!(r.contains("2 sessions joined"), "{r}");
+        // pop-batch lanes never print the continuous line
+        assert!(!Metrics::new().report().contains("continuous"));
     }
 
     #[test]

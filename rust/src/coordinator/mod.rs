@@ -21,13 +21,21 @@
 //!                 (SessionStore → KvCache pages → MhaKernel::decode_step)
 //!                 commits → SessionJournal (replayed on failover)
 //! ```
+//!
+//! Decode lanes run in one of two serving shapes: the legacy pop-batch
+//! loop (a popped batch runs to completion) or the continuous
+//! iteration loop (`Engine::with_continuous` /
+//! `ShardedCoordinator::with_continuous`), which re-forms the batch
+//! every iteration from a live set of session chains — arrivals join
+//! at the next *iteration*, a gapped stream is refused alone, and
+//! `Priority` classes order admission within each iteration.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod shard;
 
-pub use batcher::{Batcher, Request};
+pub use batcher::{Batcher, Priority, Request};
 pub use engine::{derive_head_inputs, derive_head_inputs_scaled,
                  derive_session_head_inputs, derive_token_row, pooled_label,
                  Engine, FaultPlan, NativeModelConfig, RejectReason, Response,

@@ -457,6 +457,27 @@ impl SessionRouter {
         self.submit(req)
     }
 
+    /// Typed retry gate for a request the *server* answered with a
+    /// rejection [`Response`]: resubmit through
+    /// [`SessionRouter::submit_with_retry`] only when the reason is
+    /// retryable ([`RejectReason::is_retryable`] — `Admission`/`Shed`
+    /// backpressure). A [`RejectReason::StreamGap`] refusal is handed
+    /// straight back without touching the backoff budget: the step's
+    /// asserted position is permanently wrong, and re-submitting it
+    /// unchanged would be refused forever — the client must resync
+    /// from the reported `expected` position instead.
+    pub fn resubmit_rejected(
+        &self,
+        req: Request,
+        reason: RejectReason,
+        policy: &RetryPolicy,
+    ) -> Result<(), Request> {
+        if !reason.is_retryable() {
+            return Err(req);
+        }
+        self.submit_with_retry(req, policy)
+    }
+
     /// Close every lane queue (pending requests still drain).
     pub fn close(&self) {
         for lane in &self.lanes {
@@ -543,6 +564,13 @@ pub struct ShardedCoordinator {
     faults: Vec<FaultPlan>,
     shards: usize,
     keep_outputs: bool,
+    /// Serve every lane with the continuous (iteration-level)
+    /// scheduler instead of run-to-completion pop-batches
+    /// ([`Engine::with_continuous`]); sticky lanes then re-open their
+    /// admission door between iterations, and the drain/failover
+    /// quiescence barrier (`wait_idle`) waits out a lane's live set
+    /// per-iteration instead of a single pop.
+    continuous: bool,
     factory: EngineFactory,
 }
 
@@ -568,6 +596,7 @@ impl ShardedCoordinator {
             faults: vec![FaultPlan::default(); shards],
             shards,
             keep_outputs: true,
+            continuous: false,
             factory: Box::new(factory),
         })
     }
@@ -672,6 +701,18 @@ impl ShardedCoordinator {
         if self.journal.is_some() {
             self.journal = Some(Arc::new(SessionJournal::with_checkpoints(every)));
         }
+        self
+    }
+
+    /// Run every lane on the continuous (iteration-level) decode
+    /// scheduler ([`Engine::with_continuous`]): per-step admission so
+    /// a mid-flight submission joins the next iteration, one step per
+    /// session per iteration ordered by
+    /// [`super::batcher::Priority`] class then admission age, and
+    /// per-step gap refusal. Off by default (pop-batch lanes).
+    /// Results are bitwise identical either way.
+    pub fn with_continuous(mut self, continuous: bool) -> Self {
+        self.continuous = continuous;
         self
     }
 
@@ -862,7 +903,9 @@ impl ShardedCoordinator {
         let engine = match built {
             Ok(e) => {
                 self.readiness.lane_up();
-                let mut e = e.with_raw_outputs(self.keep_outputs);
+                let mut e = e
+                    .with_raw_outputs(self.keep_outputs)
+                    .with_continuous(self.continuous);
                 if let Some(journal) = &self.journal {
                     e = e.with_journal(Arc::clone(journal));
                 }
@@ -1362,6 +1405,121 @@ mod tests {
             )
             .expect("retry succeeds once the queue drains");
         assert_eq!(drainer.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn continuous_drain_waits_out_live_set_iterations() {
+        // A continuous lane's in-flight work spans many iterations (one
+        // step per session per iteration), not one pop. Draining it
+        // must wait out the whole live set — the quiescence barrier is
+        // per-iteration now — and the retired lane's session continues
+        // on the survivor from the journal.
+        let coord = sticky(2, 2, 0).with_continuous(true).with_fault(
+            0,
+            FaultPlan {
+                delay_pop: Some(Duration::from_millis(2)),
+                ..Default::default()
+            },
+        );
+        let router = coord.router().unwrap();
+        // Session 0 routes to lane 0: a prefill + step chain that the
+        // admission door swallows into the live set immediately, while
+        // serving it takes many (delayed) iterations.
+        let steps = 6u64;
+        router.submit(Request::decode_at(0, 0, 0, vec![1, 2])).unwrap();
+        for k in 0..steps {
+            router
+                .submit(Request::decode_at(1 + k, 0, 2 + k as usize, vec![3]))
+                .unwrap();
+        }
+        std::thread::scope(|s| {
+            let coord_ref = &coord;
+            let runner = s.spawn(move || coord_ref.run().unwrap());
+            let lane0 = Arc::clone(&coord.lane_batchers.as_ref().unwrap()[0]);
+            while lane0.pending() > 0 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            coord.drain_lane(0).unwrap();
+            // When drain returns, every admitted step has committed:
+            // the journal holds the full stream, no chain abandoned
+            // mid-iteration.
+            assert_eq!(
+                coord.journal.as_ref().unwrap().len(0),
+                2 + steps as usize,
+                "drain waited out the live set's iterations"
+            );
+            assert_eq!(coord.directory().state(0), LaneState::Retired);
+            // The session keeps decoding on the survivor, gap-free.
+            router
+                .submit(Request::decode_at(99, 0, 2 + steps as usize, vec![4]))
+                .unwrap();
+            router.close();
+            let report = runner.join().unwrap();
+            assert!(report.lane_errors.is_empty(), "a drain is not a death");
+            assert_eq!(report.responses.len(), steps as usize + 2);
+            for r in &report.responses {
+                assert!(!r.rejected, "request {} lost to the drain", r.id);
+            }
+            let last = report
+                .responses
+                .iter()
+                .find(|r| r.id == 99)
+                .expect("post-drain step answered");
+            assert_eq!(last.context_len, 2 + steps as usize + 1);
+            assert_eq!(report.metrics.lane_drains(), 1);
+            assert!(
+                report.metrics.iterations() >= 2 + steps,
+                "continuous lanes iterate per step, got {}",
+                report.metrics.iterations()
+            );
+        });
+    }
+
+    #[test]
+    fn retry_classification_is_typed_stream_gap_is_fatal() {
+        // Satellite bugfix: the retry client must not burn its backoff
+        // budget re-submitting a permanently gapped step. The
+        // classification is typed on RejectReason: Admission and Shed
+        // are transient backpressure (retryable as-is), StreamGap
+        // means the step's position is wrong forever until the client
+        // resyncs (fatal — handed straight back, no sleeping).
+        assert!(RejectReason::Admission.is_retryable());
+        assert!(RejectReason::Shed.is_retryable());
+        assert!(!RejectReason::StreamGap { expected: 3, claimed: 7 }.is_retryable());
+
+        let coord = sticky(1, 2, 4);
+        let router = coord.router().unwrap();
+        let policy = RetryPolicy {
+            max_retries: 3,
+            base_backoff: Duration::from_millis(50),
+        };
+        // A gap-refused step comes straight back, without a single
+        // backoff sleep and without being enqueued.
+        let t0 = Instant::now();
+        let back = router
+            .resubmit_rejected(
+                Request::decode_at(9, 0, 7, vec![1]),
+                RejectReason::StreamGap { expected: 3, claimed: 7 },
+                &policy,
+            )
+            .unwrap_err();
+        assert_eq!(back.id, 9, "fatal rejection hands the request back");
+        assert!(
+            t0.elapsed() < Duration::from_millis(40),
+            "no backoff budget burned on a non-retryable rejection"
+        );
+        assert_eq!(router.pending(), 0, "gapped step never re-enqueued");
+        // A shed step is transient: the same gate resubmits it.
+        router
+            .resubmit_rejected(
+                Request::decode_at(10, 0, 0, vec![1]),
+                RejectReason::Shed,
+                &policy,
+            )
+            .expect("retryable rejection resubmits");
+        assert_eq!(router.pending(), 1);
+        router.close();
+        coord.run().unwrap();
     }
 
     #[test]

@@ -243,6 +243,12 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .flag("checkpoint-every", "0", "decode demo: journal a th/KV \
                snapshot every N committed tokens so re-homed sessions \
                replay only the suffix (0 = tokens-only journal)")
+        .switch("continuous", "decode demo: continuous iteration-level \
+                 scheduling — lanes re-form the batch every iteration \
+                 from a live session set (per-step admission, per-step \
+                 gap refusal, priority classes) instead of running \
+                 popped batches to completion; outputs are bitwise \
+                 identical either way")
         .flag("layers", "2", "demo: attention layers per request")
         .flag("heads", "4", "demo: heads per layer")
         .flag("d-head", "16", "demo: head dimension")
@@ -516,7 +522,12 @@ fn serve_demo_decode(args: &Args, cfg: NativeModelConfig, mode: ServeMode,
         1.0,
     )?
     .with_raw_outputs(false)
+    .with_continuous(args.get_bool("continuous"))
     .with_checkpoints(args.get_usize("checkpoint-every")?);
+    if args.get_bool("continuous") {
+        println!("continuous scheduling: lanes re-form the decode batch \
+                  every iteration (per-step admission and gap refusal)");
+    }
     if let Some(lane) = kill_lane {
         let at = args.get_usize("at-step")?.max(1) as u64;
         println!("chaos: lane {lane} will be killed at its pop #{at}");

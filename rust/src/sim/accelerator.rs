@@ -218,6 +218,12 @@ pub struct DecodeProfile {
 /// decode counterpart of [`estimate_batch`], which is what the serving
 /// engine stamps per-response `sim_seconds` from on the batched decode
 /// path. Returns the per-step reports in input order plus the total.
+///
+/// Stateless across calls: the continuous iteration scheduler invokes
+/// this once per iteration over whatever steps that iteration scheduled
+/// (membership churns freely), and each step's estimate depends only on
+/// its own `ctx_len` and diagnostics — never on which peers shared the
+/// call.
 pub fn estimate_decode_batch(
     cfg: &SimConfig,
     n_layers: usize,

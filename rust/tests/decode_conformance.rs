@@ -9,10 +9,15 @@
 //! (`derive_session_head_inputs`).
 //!
 //! Also the regression surface for the serving-path bugfixes: batched
-//! decode validation is side-effect-free (an invalid request in a
-//! mixed batch mutates *no* session state before the error reports),
-//! and server-side stream-gap detection refuses position-asserted
-//! steps that would gap, replay, or reorder a session's stream.
+//! decode validation is side-effect-free (a structurally invalid
+//! request in a mixed batch mutates *no* session state before the
+//! error reports); server-side stream-gap detection refuses **only**
+//! the gapped stream — position-asserted steps that would gap, replay,
+//! or reorder it answer a typed `RejectReason::StreamGap` while
+//! co-batched peers serve bitwise; and the continuous iteration
+//! scheduler (`with_continuous`) serves mid-flight arrivals at the
+//! next iteration with outputs bitwise identical to the pop-batch
+//! path, under churning membership and eviction pressure alike.
 //!
 //! Needs no artifacts: the native backend derives every cached token's
 //! row deterministically from `(token, position, layer, head)`.
@@ -24,8 +29,7 @@ use std::time::Duration;
 use hdp::attention::hdp::hdp_head_reference;
 use hdp::coordinator::{derive_head_inputs, derive_session_head_inputs,
                        pooled_label, Batcher, Engine, NativeModelConfig,
-                       RejectReason, Request, ServeMode, ShardedCoordinator,
-                       StreamGapError};
+                       RejectReason, Request, ServeMode, ShardedCoordinator};
 use hdp::sim::SimConfig;
 use hdp::util::rng::SplitMix64;
 use hdp::util::threadpool::configured_threads;
@@ -510,9 +514,10 @@ fn eviction_mid_batch_replays_from_scratch_bitwise() {
 
 #[test]
 fn stream_gap_detection_refuses_unsynced_resubmission() {
-    // The server-side gap-detection bugfix: a client whose step was
-    // rejected but keeps streaming is refused with a typed error until
-    // it resyncs from the server's committed position — and the
+    // The server-side gap-detection bugfix, per-step shape: a client
+    // whose step was rejected but keeps streaming answers a typed
+    // `StreamGap` rejection *response* — the batch itself serves —
+    // until it resyncs from the server's committed position, and the
     // resynced stream is bitwise the never-gapped one.
     let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
     let eng = engine(mode, 2, 4);
@@ -521,22 +526,29 @@ fn stream_gap_detection_refuses_unsynced_resubmission() {
     // The client's step at pos 3 (token 4) was rejected upstream
     // (admission) — it never reached the engine. The client ignores
     // that and streams the *next* step as if it had landed:
-    let err = eng
+    let resp = eng
         .serve_batch(&[Request::decode_at(2, 9, 4, vec![8])])
-        .unwrap_err();
-    let gap = err.downcast_ref::<StreamGapError>().expect("typed gap error");
-    assert_eq!(
-        *gap,
-        StreamGapError { id: 2, session: 9, expected: 3, claimed: 4 }
-    );
-    assert!(format!("{err:#}").contains("stream gap"), "{err:#}");
+        .unwrap()
+        .remove(0);
+    assert!(resp.rejected && resp.label == -1);
+    assert_eq!(resp.reason,
+               Some(RejectReason::StreamGap { expected: 3, claimed: 4 }));
+    assert_eq!(resp.session, Some(9), "rejection names the broken stream");
+    assert_eq!(resp.context_len, 0, "a refused step appends nothing");
     // Resubmit-without-resync: refused again, nothing mutated.
-    assert!(eng.serve_batch(&[Request::decode_at(3, 9, 4, vec![8])]).is_err());
+    let resp = eng
+        .serve_batch(&[Request::decode_at(3, 9, 4, vec![8])])
+        .unwrap()
+        .remove(0);
+    assert_eq!(resp.reason,
+               Some(RejectReason::StreamGap { expected: 3, claimed: 4 }));
     // A replayed (too-low) position is refused too.
-    let err = eng
+    let resp = eng
         .serve_batch(&[Request::decode_at(4, 9, 0, vec![1])])
-        .unwrap_err();
-    assert_eq!(err.downcast_ref::<StreamGapError>().unwrap().claimed, 0);
+        .unwrap()
+        .remove(0);
+    assert_eq!(resp.reason,
+               Some(RejectReason::StreamGap { expected: 3, claimed: 0 }));
     // Resync: replay the missing step at the committed position, then
     // the held step — bitwise the uninterrupted stream.
     ctx.push(4);
@@ -556,8 +568,10 @@ fn stream_gap_detection_refuses_unsynced_resubmission() {
 #[test]
 fn gap_rejection_carries_typed_reason_through_run_loop() {
     // Through the serving loop: the gapped step's rejection response
-    // names StreamGap with both positions; the innocent co-batched
-    // request is a plain shed (nothing mutated — resubmit as-is).
+    // names StreamGap with both positions while the innocent co-batched
+    // request *serves* in the same pop, bitwise its reference. (The
+    // old contract shed the whole batch — the bugfix this test pins is
+    // that gap refusal is per-step and sheds no innocents.)
     let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
     let eng = engine(mode, 1, 2);
     eng.batcher.submit(Request::decode_at(0, 1, 0, vec![1, 2])).unwrap();
@@ -566,9 +580,10 @@ fn gap_rejection_carries_typed_reason_through_run_loop() {
     let mut resps = eng.run_loop();
     resps.sort_by_key(|r| r.id);
     assert_eq!(resps.len(), 2);
-    assert!(resps.iter().all(|r| r.rejected && r.label == -1));
-    assert_eq!(resps[0].reason, Some(RejectReason::Shed));
     assert_eq!(resps[0].session, Some(1));
+    check_against_reference(&eng, &resps[0], &[1, 2],
+                            "innocent peer serves in the gapped pop");
+    assert!(resps[1].rejected && resps[1].label == -1);
     assert_eq!(
         resps[1].reason,
         Some(RejectReason::StreamGap { expected: 0, claimed: 5 })
@@ -578,11 +593,12 @@ fn gap_rejection_carries_typed_reason_through_run_loop() {
 
 #[test]
 fn invalid_mixed_batch_mutates_no_session_state() {
-    // Whole-batch decode validation must be side-effect-free: a mixed
-    // batch carrying one invalid decode request (zero tokens, or a
-    // gapped stream) reports the error without touching *any* session
-    // — proven by resubmitting the valid step at its original position
-    // afterwards (had state advanced, gap detection would refuse it).
+    // Two different failure shapes, two different contracts. A
+    // *structurally* invalid batch (zero-token decode step) is still
+    // refused whole, side-effect-free: the error reports before any
+    // session is touched. A *gapped* stream, though, is refused alone:
+    // the valid co-batched step serves (advancing its session) while
+    // the gapped session is never created.
     let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
     let eng = engine(mode, 2, 4);
     let mut rng = SplitMix64::new(0x51DE);
@@ -591,7 +607,8 @@ fn invalid_mixed_batch_mutates_no_session_state() {
     eng.serve_batch(&[Request::decode_at(0, 1, 0, vec![5, 6])]).unwrap();
     let stats0 = eng.session_stats().unwrap();
 
-    // zero-token decode co-batched with a valid one-shot + valid step
+    // zero-token decode co-batched with a valid one-shot + valid step:
+    // structural — the whole batch errors, nothing mutated.
     assert!(eng
         .serve_batch(&[
             Request::oneshot(1, oneshot_toks.clone()),
@@ -599,37 +616,47 @@ fn invalid_mixed_batch_mutates_no_session_state() {
             Request::decode(3, 2, vec![]),
         ])
         .is_err());
-    // gapped stream co-batched with a valid step of another session
-    assert!(eng
+    assert_eq!(eng.session_stats().unwrap(), stats0,
+               "a structurally failed batch must not move store stats");
+    // ...and the valid step it carried still serves at its *original*
+    // position — its session's stream never moved under the error.
+    let resp = eng
         .serve_batch(&[
             Request::decode_at(4, 1, 2, vec![7]),
             Request::decode_at(5, 3, 9, vec![8]),
         ])
-        .is_err());
-    // No session was created, rebuilt, or evicted by either failure...
-    assert_eq!(eng.session_stats().unwrap(), stats0,
-               "failed batches must not move store stats");
-    // ...and the valid step still serves at its *original* position,
-    // bitwise the reference — its session's stream never moved.
-    let resp = eng
-        .serve_batch(&[Request::decode_at(6, 1, 2, vec![7])])
         .unwrap()
         .remove(0);
-    check_against_reference(&eng, &resp, &[5, 6, 7], "valid step after sheds");
+    check_against_reference(&eng, &resp, &[5, 6, 7],
+                            "valid step serves beside the gapped one");
+    // The gapped stream co-batched above was refused alone, typed —
+    // and its session was never created.
+    let resps = eng
+        .serve_batch(&[Request::decode_at(6, 3, 9, vec![8])])
+        .unwrap();
+    assert!(resps[0].rejected);
+    assert_eq!(resps[0].reason,
+               Some(RejectReason::StreamGap { expected: 0, claimed: 9 }));
+    assert_eq!(resps[0].session, Some(3));
+    assert_eq!(eng.session_stats().unwrap().sessions_created, 1,
+               "a refused step must not create its session");
     // the never-created session decodes from scratch at pos 0
     let resp = eng
         .serve_batch(&[Request::decode_at(7, 3, 0, vec![8])])
         .unwrap()
         .remove(0);
-    check_against_reference(&eng, &resp, &[8], "session untouched by shed");
+    check_against_reference(&eng, &resp, &[8], "session untouched by refusal");
 }
 
 #[test]
-fn sticky_sharded_invalid_batch_sheds_without_mutating_state() {
-    // The same side-effect-free contract through the sticky-sharded
-    // path: a lane's batch pairing a valid step with a gapped one is
-    // shed whole (typed reason on the offender), and the valid step
-    // resubmitted at its original position serves bitwise afterwards.
+fn sticky_sharded_gapped_step_refused_alone_peers_serve() {
+    // The per-step refusal contract through the sticky-sharded path: a
+    // lane's batch pairing a valid step with a gapped one serves the
+    // valid step and refuses only the offender (typed reason). With
+    // max_batch 2 the lane pops [id 0, id 1] then [id 2, id 3]:
+    // id 0 serves, id 1 gaps; id 2 — the same step as id 0 — is now a
+    // *replay* of a landed step (refused in turn), while id 3 is the
+    // gapped session's from-scratch resync (serves).
     let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
     let coord = ShardedCoordinator::new_native_sticky(
         2, GEOM, mode, SimConfig::edge(),
@@ -638,34 +665,238 @@ fn sticky_sharded_invalid_batch_sheds_without_mutating_state() {
     .unwrap();
     let router = coord.router().expect("sticky router");
     // Sessions 0 and 2 both pin to lane 0 (even ids, 2 shards); queue
-    // everything before the lanes start so the pops are deterministic:
-    // batch 1 = [valid step, gapped step] → shed; batch 2 = the same
-    // valid step + the gapped session's from-scratch resync.
+    // everything before the lanes start so the pops are deterministic.
     router.submit(Request::decode_at(0, 0, 0, vec![1, 2])).unwrap();
     router.submit(Request::decode_at(1, 2, 7, vec![3])).unwrap();
     router.submit(Request::decode_at(2, 0, 0, vec![1, 2])).unwrap();
     router.submit(Request::decode_at(3, 2, 0, vec![3])).unwrap();
     router.close();
     let report = coord.run().unwrap();
+    assert!(report.lane_errors.is_empty(), "{:?}", report.lane_errors);
     let mut resps = report.responses.clone();
     resps.sort_by_key(|r| r.id);
     assert_eq!(resps.len(), 4);
-    assert!(resps[0].rejected);
-    assert_eq!(resps[0].reason, Some(RejectReason::Shed));
+    let ref_eng = engine(mode, 1, 4);
+    // id 0: the valid step serves beside the gapped one, bitwise.
+    let want = decode_reference(&ref_eng, &[1, 2]);
+    assert!(!resps[0].rejected, "innocent peer must serve");
+    assert_eq!(bits(&resps[0].outputs), bits(&want.outputs));
+    assert_eq!(resps[0].context_len, 2);
+    // id 1: refused alone, typed.
     assert!(resps[1].rejected);
     assert_eq!(
         resps[1].reason,
         Some(RejectReason::StreamGap { expected: 0, claimed: 7 })
     );
-    // The shed batch mutated nothing: the identical resubmissions
-    // served, bitwise the from-scratch references.
-    let ref_eng = engine(mode, 1, 4);
-    for (resp, ctx) in
-        [(&resps[2], vec![1, 2]), (&resps[3], vec![3])]
-    {
-        let want = decode_reference(&ref_eng, &ctx);
-        assert!(!resp.rejected, "req {}", resp.id);
-        assert_eq!(bits(&resp.outputs), bits(&want.outputs), "req {}", resp.id);
-        assert_eq!(resp.context_len, ctx.len());
+    // id 2: replays the step id 0 already landed — refused as a gap
+    // (proof that id 0 really committed in the mixed batch).
+    assert!(resps[2].rejected);
+    assert_eq!(
+        resps[2].reason,
+        Some(RejectReason::StreamGap { expected: 2, claimed: 0 })
+    );
+    // id 3: the gapped session resyncs from scratch and serves.
+    let want = decode_reference(&ref_eng, &[3]);
+    assert!(!resps[3].rejected, "resync after refusal must serve");
+    assert_eq!(bits(&resps[3].outputs), bits(&want.outputs));
+    assert_eq!(resps[3].context_len, 1);
+}
+
+#[test]
+fn continuous_mid_flight_submission_joins_next_iteration() {
+    // Tentpole pin: the continuous loop re-forms the batch every
+    // iteration from the live session set, serving one head step per
+    // session per iteration. One chained stream of 8 steps therefore
+    // spans >= 8 iterations — the pop-batch path would chain all of
+    // them inside a single pop (max_batch is 8) — and steps submitted
+    // mid-flight, while the lane is already serving, are admitted at
+    // the next iteration and answer bitwise the same stream.
+    let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
+    let eng = engine(mode, 2, 8).with_continuous(true);
+    let mut rng = SplitMix64::new(0x3017);
+    let mut ctx: Vec<i32> = Vec::new();
+    let mut reqs: Vec<Request> = Vec::new();
+    let mut prefixes: Vec<Vec<i32>> = Vec::new();
+    for i in 0..8u64 {
+        let n = if i == 0 { 3 } else { 1 };
+        let toks: Vec<i32> =
+            (0..n).map(|_| rng.next_below(30_000) as i32).collect();
+        let pos = ctx.len();
+        ctx.extend_from_slice(&toks);
+        prefixes.push(ctx.clone());
+        reqs.push(Request::decode_at(i, 5, pos, toks));
+    }
+    let mut resps = std::thread::scope(|sc| {
+        let run = sc.spawn(|| eng.run_loop());
+        let mut it = reqs.into_iter();
+        for req in it.by_ref().take(4) {
+            eng.batcher.submit(req).unwrap();
+        }
+        // Wait until the lane has committed the first wave, so the
+        // rest genuinely arrives mid-flight — no open pop to ride.
+        while eng.metrics.decode_requests() < 4 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        for req in it {
+            eng.batcher.submit(req).unwrap();
+        }
+        eng.batcher.close();
+        run.join().unwrap()
+    });
+    resps.sort_by_key(|r| r.id);
+    assert_eq!(resps.len(), 8);
+    for (resp, prefix) in resps.iter().zip(&prefixes) {
+        assert_eq!(resp.session, Some(5));
+        check_against_reference(&eng, resp, prefix,
+                                &format!("continuous step {}", resp.id));
+    }
+    assert!(eng.metrics.iterations() >= 8,
+            "8 chained steps must span >= 8 iterations, got {}",
+            eng.metrics.iterations());
+    assert_eq!(eng.metrics.join_count(), 1, "one session joined the live set");
+}
+
+#[test]
+fn continuous_conformance_matrix_churn_bitwise() {
+    // The continuous-batching conformance matrix: churning membership
+    // (staggered chain lengths, so sessions leave the live set at
+    // different iterations, plus a second wave — rejoins and a fresh
+    // session — submitted mid-run) × pruning knobs × sticky shard
+    // counts {1, 2, 4} × eviction pressure (a page budget holding two
+    // sessions per lane, forcing evict/rebuild when more share one) ×
+    // a mid-run gapped stream. Every surviving stream answers bitwise
+    // the full-recompute reference of its prefix at every step, and
+    // the gapped step alone is refused — no matter which peers shared
+    // its iterations.
+    fn push_step(
+        ctx: &mut HashMap<u64, Vec<i32>>,
+        prefixes: &mut HashMap<u64, Vec<i32>>,
+        list: &mut Vec<Request>,
+        id: u64,
+        s: u64,
+        toks: Vec<i32>,
+    ) {
+        let c = ctx.entry(s).or_default();
+        let pos = c.len();
+        c.extend_from_slice(&toks);
+        prefixes.insert(id, c.clone());
+        list.push(Request::decode_at(id, s, pos, toks));
+    }
+    for &(rho, tau) in &[(0.4f32, 0.0f32), (0.9, 1e9)] {
+        for &shards in &[1usize, 2, 4] {
+            // GEOM = 6 pages per session: 12 pages caps each lane at
+            // two resident sessions.
+            for &kv_pages in &[usize::MAX, 12] {
+                let mode = ServeMode::Hdp { rho, tau, qstep: 1.0 / 4096.0 };
+                let label =
+                    format!("rho={rho} tau={tau} shards={shards} kv={kv_pages}");
+                let mut rng = SplitMix64::new(0xC0117);
+                let mut ctx: HashMap<u64, Vec<i32>> = HashMap::new();
+                let mut prefixes: HashMap<u64, Vec<i32>> = HashMap::new();
+                let mut id = 0u64;
+                // wave 1: five sessions, ragged prefills; session s
+                // stays for s+1 single-token rounds, so members leave
+                // the live set at different iterations.
+                let mut reqs1: Vec<Request> = Vec::new();
+                for s in 0..5u64 {
+                    let n = 3 + (s as usize % 3);
+                    let toks =
+                        (0..n).map(|_| rng.next_below(30_000) as i32).collect();
+                    push_step(&mut ctx, &mut prefixes, &mut reqs1, id, s, toks);
+                    id += 1;
+                }
+                for round in 0..5usize {
+                    for s in 0..5u64 {
+                        if round <= s as usize {
+                            let toks = vec![rng.next_below(30_000) as i32];
+                            push_step(&mut ctx, &mut prefixes, &mut reqs1,
+                                      id, s, toks);
+                            id += 1;
+                        }
+                    }
+                }
+                // wave 2, submitted mid-run: sessions 0 and 1 rejoin
+                // after having left the live set, session 7 arrives
+                // fresh, and session 9 prefills then *gaps* (claims
+                // position 99) before resyncing from its committed
+                // position.
+                let mut reqs2: Vec<Request> = Vec::new();
+                for (s, n) in
+                    [(0u64, 1usize), (1, 1), (7, 2), (0, 1), (1, 1), (7, 1)]
+                {
+                    let toks =
+                        (0..n).map(|_| rng.next_below(30_000) as i32).collect();
+                    push_step(&mut ctx, &mut prefixes, &mut reqs2, id, s, toks);
+                    id += 1;
+                }
+                let toks =
+                    (0..2).map(|_| rng.next_below(30_000) as i32).collect();
+                push_step(&mut ctx, &mut prefixes, &mut reqs2, id, 9, toks);
+                id += 1;
+                let gap_id = id;
+                reqs2.push(Request::decode_at(gap_id, 9, 99, vec![1]));
+                id += 1;
+                let toks = vec![rng.next_below(30_000) as i32];
+                push_step(&mut ctx, &mut prefixes, &mut reqs2, id, 9, toks);
+                let total = prefixes.len() + 1; // + the gapped step
+                let coord = ShardedCoordinator::new_native_sticky(
+                    shards, GEOM, mode, SimConfig::edge(),
+                    4, Duration::from_millis(1), 0, 2, kv_pages, 1.0,
+                )
+                .unwrap()
+                .with_continuous(true);
+                let router = coord.router().expect("sticky router");
+                let report = std::thread::scope(|sc| {
+                    let runner = sc.spawn(|| coord.run());
+                    for req in reqs1 {
+                        router.submit(req).unwrap();
+                    }
+                    // A beat later, while lanes are mid-iteration: the
+                    // second wave. Bitwise equality must hold no
+                    // matter which iteration it lands in.
+                    std::thread::sleep(Duration::from_millis(5));
+                    for req in reqs2 {
+                        router.submit(req).unwrap();
+                    }
+                    router.close();
+                    runner.join().unwrap()
+                })
+                .unwrap();
+                assert!(report.lane_errors.is_empty(),
+                        "{label}: {:?}", report.lane_errors);
+                assert_eq!(report.responses.len(), total, "{label}");
+                let ref_eng = engine(mode, 1, 4);
+                let mut refused = 0usize;
+                for resp in &report.responses {
+                    if resp.id == gap_id {
+                        assert!(resp.rejected, "{label}");
+                        assert_eq!(
+                            resp.reason,
+                            Some(RejectReason::StreamGap {
+                                expected: 2,
+                                claimed: 99,
+                            }),
+                            "{label}"
+                        );
+                        assert_eq!(resp.session, Some(9), "{label}");
+                        refused += 1;
+                        continue;
+                    }
+                    check_against_reference(
+                        &ref_eng, resp, &prefixes[&resp.id],
+                        &format!("{label} req {}", resp.id),
+                    );
+                }
+                assert_eq!(refused, 1,
+                           "{label}: only the gapped step is refused");
+                // session 4's chain alone is 6 steps — one head step
+                // per iteration means its lane iterated >= 6 times.
+                assert!(report.metrics.iterations() >= 6,
+                        "{label}: iterations = {}",
+                        report.metrics.iterations());
+                assert_eq!(report.metrics.join_count(), 7,
+                           "{label}: sessions 0-4, 7 and 9 each join once");
+            }
+        }
     }
 }

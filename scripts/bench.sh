@@ -24,6 +24,11 @@
 #   * `decode_batch b=8 sessions=8 (one fan-out)` must stay >= 2x the
 #     throughput of `decode_one b=8 (sequential x8)` on a multi-core
 #     runner (cross-session batched decode fan-out);
+#   * `decode_serve continuous (churning sessions)` must stay >= 1x
+#     the throughput of `decode_serve pop-batch (churning sessions)` —
+#     continuous vs pop-batch sustained tokens/s under churning
+#     session membership: same kernel work, batch re-formed every
+#     iteration;
 #   * `recovery_latency kill-lane-0` must stay sub-millisecond at p95
 #     (re-homing is queue surgery + journal bookkeeping, not state
 #     copying), and the `decode_run kill-lane-0` / `decode_run

@@ -14,10 +14,13 @@ cargo test -q --lib --bins
 # Decode conformance as its own named gate: every incremental decode
 # step (prefill, mid-block lengths, eviction rebuilds, sticky shards,
 # and the batched sessions×layers×heads fan-out matrix — batch sizes ×
-# sessions-per-batch × threads, plus the stream-gap and
-# side-effect-free validation regressions) must be bitwise identical
-# to the full-recompute reference — a failure here must identify
-# itself, not hide inside the glob below.
+# sessions-per-batch × threads, plus the per-step stream-gap refusal
+# and side-effect-free validation regressions, and the continuous-
+# batching matrix: churning session membership × pruning knobs ×
+# shard counts × eviction pressure × a mid-run gapped stream, with
+# mid-flight arrivals joining at the next iteration) must be bitwise
+# identical to the full-recompute reference — a failure here must
+# identify itself, not hide inside the glob below.
 cargo test -q --test decode_conformance
 # Failover conformance as its own named gate: the chaos harness kills
 # (and drains) lanes under live multi-session decode traffic — shards
