@@ -12,7 +12,14 @@
 //! pops by **≥ 2×** on a multi-core runner, and the continuous
 //! iteration scheduler sustaining **≥ 1×** pop-batch tokens/s under
 //! churning session membership (same kernel work, batch re-formed
-//! every iteration).
+//! every iteration). Two long-context / tiering series ride along:
+//! cached decode_step at context {1k, 8k, 32k} in both session modes
+//! (the causal `w=256` step stays ~flat while the bidirectional step
+//! scales with `l`; 32k-bidirectional is **skipped loudly** — its θ
+//! grid is O(nb²) ≈ 1 GiB/head at block=2 — never capped silently),
+//! and four sessions round-robin decoding at a fixed page budget that
+//! keeps only two resident, where the spill/restore tier must beat
+//! evict+replay (restores instead of decode-from-scratch rebuilds).
 //!
 //! ```sh
 //! cargo bench --bench bench_decode -- --json BENCH_decode.json
@@ -26,7 +33,7 @@ use hdp::attention::kernel::MhaKernel;
 use hdp::coordinator::{derive_session_head_inputs, derive_token_row, Batcher,
                        Engine, NativeModelConfig, Request, ServeMode};
 use hdp::fixed::QuantProfile;
-use hdp::session::HeadKv;
+use hdp::session::{HeadKv, InMemorySpillTier, LargestFirstPolicy, SessionMode};
 use hdp::sim::SimConfig;
 use hdp::util::bench::{measurements_json, Bench, Measurement};
 
@@ -103,6 +110,59 @@ fn main() {
             &format!("full_recompute ctx={ctx} (one token)"), 1.0, "tok",
             || kernel.forward_layer(&[(&iq, &fq, &ik, &fk, &v)]),
         ));
+    }
+
+    // == long-context decode: bidirectional vs causal session mode ==
+    // The same cached decode_step measurement pushed to long contexts
+    // in both modes. The causal head scores only the `w`-token window
+    // and keeps row-only θ (O(nb) cells), so its step cost saturates
+    // once `l > w`; the bidirectional head scores the whole context
+    // and keeps the full nb × nb θ grid. At block=2 that grid is
+    // ~1 GiB for a single 32k-context head, so the 32k-bidirectional
+    // cell is skipped with a printed note — never capped silently.
+    const WINDOW: usize = 256;
+    println!("\n== long-context decode tokens/sec: bidirectional vs causal \
+              w={WINDOW} (1 head, d_head {DH}, 1 thread) ==");
+    for &ctx in &[1024usize, 8192, 32_768] {
+        for causal in [false, true] {
+            let name = if causal {
+                format!("decode_step ctx={ctx} causal w={WINDOW}")
+            } else {
+                format!("decode_step ctx={ctx} bidirectional")
+            };
+            if !causal && ctx > 8192 {
+                let nb = ctx / p.block;
+                println!(
+                    "SKIPPED {name}: bidirectional theta is O(nb^2) = \
+                     {nb}x{nb} cells (~{:.1} GiB for one head at \
+                     block={}) — long contexts are the causal mode's job",
+                    nb as f64 * nb as f64 * 4.0 / (1u64 << 30) as f64,
+                    p.block);
+                continue;
+            }
+            let mode = if causal {
+                SessionMode::Causal { window: Some(WINDOW) }
+            } else {
+                SessionMode::Bidirectional
+            };
+            let mut kv =
+                HeadKv::with_mode(DH, DH, p.block, p.block * 8, mode);
+            for pos in 0..ctx {
+                let row = derive_token_row((pos % 30_000) as i32, pos, 0, 0,
+                                           DH, PROFILE, 1.0);
+                kernel.decode_append(&mut kv, &row);
+            }
+            println!("prefilled ctx={ctx} {}: {} theta cells",
+                     if causal { "causal (row-only)" }
+                     else { "bidirectional (full grid)" },
+                     kv.theta_cells());
+            ms.push(b.run_throughput(&name, 1.0, "tok", || {
+                let pos = kv.len();
+                let row = derive_token_row((pos % 30_000) as i32, pos, 0, 0,
+                                           DH, PROFILE, 1.0);
+                kernel.decode_step(&mut kv, &row, None)
+            }));
+        }
     }
 
     // == batched decode fan-out vs sequential per-request pops ==
@@ -224,9 +284,77 @@ fn main() {
         }));
     }
 
+    // == resident sessions at a fixed page budget: spill vs replay ==
+    // Four sessions share a page budget that keeps only two of them
+    // resident (after a 32-token prefill each session holds 2 layers ×
+    // 2 heads × 2 pages = 8 pages; the budget is 16). Round-robin
+    // single-token steps then force an eviction + cold checkout on
+    // almost every touch — served either by a decode-from-scratch
+    // replay of the whole context, or by spilling the victim's pages
+    // (θ rows included) to the in-memory tier and restoring them on
+    // the next checkout. The unbounded series is the all-resident
+    // baseline the tier is trying to get back to.
+    const BUDGET_SESSIONS: u64 = 4;
+    const BUDGET_PREFILL: usize = 32;
+    const BUDGET_PAGES: usize = 16;
+    const BUDGET_ROUNDS: usize = 6;
+    println!("\n== resident sessions at a fixed page budget: \
+              {BUDGET_SESSIONS} sessions, {BUDGET_PAGES}-page budget \
+              (2 resident), spill tier vs evict+replay ==");
+    let budget_tokens = (BUDGET_SESSIONS as usize
+        * (BUDGET_PREFILL + BUDGET_ROUNDS)) as f64;
+    let run_budget = |eng: &Engine| {
+        let mut id = 0u64;
+        for s in 0..BUDGET_SESSIONS {
+            let toks: Vec<i32> = (0..BUDGET_PREFILL)
+                .map(|i| ((s as usize * 131 + i) % 30_000) as i32)
+                .collect();
+            eng.serve_batch(&[Request::decode(id, s, toks)]).unwrap();
+            id += 1;
+        }
+        for round in 0..BUDGET_ROUNDS {
+            for s in 0..BUDGET_SESSIONS {
+                let tok = ((round * 17 + s as usize) % 30_000) as i32;
+                eng.serve_batch(&[Request::decode(id, s, vec![tok])])
+                    .unwrap();
+                id += 1;
+            }
+        }
+    };
+    let spill_engine = || {
+        decode_engine(1)
+            .with_kv_capacity(BUDGET_PAGES)
+            .with_eviction_policy(Box::new(LargestFirstPolicy::new()))
+            .with_spill_tier(Box::new(InMemorySpillTier::new()))
+    };
+    ms.push(b.run_throughput(
+        "decode_budget sessions=4 pages=unbounded (resident)",
+        budget_tokens, "tok",
+        || run_budget(&decode_engine(1)),
+    ));
+    ms.push(b.run_throughput(
+        "decode_budget sessions=4 pages=16 (evict+replay)",
+        budget_tokens, "tok",
+        || run_budget(&decode_engine(1).with_kv_capacity(BUDGET_PAGES)),
+    ));
+    ms.push(b.run_throughput(
+        "decode_budget sessions=4 pages=16 (evict+spill-restore)",
+        budget_tokens, "tok",
+        || run_budget(&spill_engine()),
+    ));
+    // One untimed pass to show the tier actually carried the traffic.
+    let eng = spill_engine();
+    run_budget(&eng);
+    let ss = eng.session_spill_stats().unwrap();
+    let st = eng.session_stats().unwrap();
+    println!("spill tier at the {BUDGET_PAGES}-page budget: {} spills, \
+              {} restores, {} rebuilds (restores replace replay)",
+             ss.spills, ss.restores, st.rebuilds);
+
     // Headlines: cached vs full recompute at the 1k context, the
-    // batched fan-out vs sequential pops at b=8, and continuous vs
-    // pop-batch under churn.
+    // batched fan-out vs sequential pops at b=8, continuous vs
+    // pop-batch under churn, causal vs bidirectional at long context,
+    // and the spill tier vs evict+replay at the fixed page budget.
     let find = |needle: &str| -> Option<f64> {
         ms.iter().find(|m| m.name.contains(needle)).map(Measurement::mean)
     };
@@ -249,6 +377,21 @@ fn main() {
         println!("continuous vs pop-batch sustained tokens/s under churning \
                   session membership: {:.2}x (>= 1x expected — same kernel \
                   work, per-iteration batch re-forming)", popb / cont);
+    }
+    if let (Some(bi), Some(ca)) = (find("decode_step ctx=8192 bidirectional"),
+                                   find("decode_step ctx=8192 causal"))
+    {
+        println!("causal w=256 decode_step speedup over bidirectional at 8k \
+                  context: {:.1}x (windowed scoring + O(nb) theta vs full-\
+                  context scoring + O(nb^2))", bi / ca);
+    }
+    if let (Some(replay), Some(spill)) = (find("(evict+replay)"),
+                                          find("(evict+spill-restore)"))
+    {
+        println!("spill-restore tier speedup over evict+replay at the fixed \
+                  {BUDGET_PAGES}-page budget (2 of 4 sessions resident): \
+                  {:.2}x (target >= 1x — restores are page copies, replays \
+                  recompute the context)", replay / spill);
     }
 
     if let Some(path) = json_path {

@@ -301,6 +301,127 @@ pub fn hdp_head_reference(
     HdpHeadOutput { out, probs, mask, theta, theta_head, head_kept, kept_density }
 }
 
+/// Is score cell `(i, j)` inside the causal window? Causality keeps
+/// `j <= i`; a finite `window` W additionally requires
+/// `j >= i + 1 - W` (each query attends to its own key and the W-1
+/// preceding ones). `j + w > i` is that bound without underflow.
+pub fn causal_in_window(i: usize, j: usize, window: Option<usize>) -> bool {
+    j <= i && window.map_or(true, |w| j + w > i)
+}
+
+/// The executable specification of the **causal/windowed decode mode**
+/// — the conformance anchor for `SessionMode::Causal`, exactly as
+/// [`hdp_head_reference`] anchors the default bidirectional path.
+///
+/// Semantics: [`hdp_head_reference`] with every score cell outside the
+/// causal window ([`causal_in_window`]) masked out of *both* the θ
+/// statistics and the softmax. Concretely:
+///
+/// - the integer score is computed densely, then out-of-window cells
+///   are **zeroed before** [`block_importance`]. This defines the
+///   causal θ accumulation order: each θ tile folds its in-window
+///   `|score|` terms in the bidirectional order (ascending `j` within
+///   ascending `i`) with the masked cells contributing `+0.0` in
+///   place. Because every θ term is an `abs()` (so ≥ +0.0) and the
+///   accumulator starts at +0.0, `acc + 0.0 == acc` **bitwise** — the
+///   incremental row-only θ in `session::cache` may therefore skip
+///   masked cells entirely and still match this fold bit for bit.
+/// - `theta_head`, the block mask, `head_kept` and `kept_density` are
+///   computed from that masked θ with the unchanged formulas, except
+///   that each block-row's **diagonal block is force-kept**. Blocks
+///   strictly above the diagonal have θ = 0 by construction; the
+///   per-row threshold still runs over the **full** `nb`-width θ row,
+///   zeros included (the incremental path must mirror this). The
+///   diagonal force-keep is what guarantees every query row retains at
+///   least one real (in-window) score: the row's self-cell `(i, i)` is
+///   always in-window and always lives in the diagonal block. Without
+///   it, a block-row whose threshold survivors are all out-of-window
+///   for one of its rows would leave that row fully sentinel-valued —
+///   the dense softmax would then spread probability uniformly over
+///   masked cells, breaking causality (the bidirectional path never
+///   hits this because a kept block gives real scores to every row
+///   crossing it).
+/// - in the dense score fill, out-of-window cells stay at the
+///   `NEG_INF` sentinel even inside kept blocks, so the softmax
+///   assigns them zero probability like pruned blocks.
+pub fn hdp_causal_reference(
+    iq: &Tensor,
+    fq: &Tensor,
+    ik: &Tensor,
+    fk: &Tensor,
+    v: &Tensor,
+    p: HdpParams,
+    window: Option<usize>,
+) -> HdpHeadOutput {
+    let l = iq.rows();
+    let mut int_score = iq.matmul_nt(ik);
+    for i in 0..l {
+        for j in 0..l {
+            if !causal_in_window(i, j, window) {
+                int_score.set(i, j, 0.0);
+            }
+        }
+    }
+    let theta = block_importance(&int_score, p.block);
+    let theta_head: f32 = theta.data().iter().sum();
+    let mut mask = block_mask(&theta, p.rho);
+    let nb = n_blocks(l, p.block);
+    for bi in 0..nb {
+        mask.set(bi, bi, 1.0); // diagonal force-keep (see above)
+    }
+    let head_kept = theta_head > p.tau;
+    let kept_density =
+        mask.data().iter().sum::<f32>() / mask.len() as f32;
+
+    let b = p.block;
+    let dh = iq.cols();
+    let mut score = Tensor::zeros(&[l, l]);
+    score.data_mut().fill(NEG_INF);
+    let (iqd, fqd, ikd, fkd) = (iq.data(), fq.data(), ik.data(), fk.data());
+    for bi in 0..nb {
+        for bj in 0..nb {
+            if mask.at(bi, bj) == 0.0 {
+                continue;
+            }
+            for i in bi * b..((bi + 1) * b).min(l) {
+                let iqr = &iqd[i * dh..(i + 1) * dh];
+                let fqr = &fqd[i * dh..(i + 1) * dh];
+                for j in bj * b..((bj + 1) * b).min(l) {
+                    if !causal_in_window(i, j, window) {
+                        continue; // stays NEG_INF inside a kept block
+                    }
+                    let ikr = &ikd[j * dh..(j + 1) * dh];
+                    let fkr = &fkd[j * dh..(j + 1) * dh];
+                    let mut acc = int_score.at(i, j);
+                    if p.use_ff {
+                        for k in 0..dh {
+                            acc += iqr[k] * fkr[k]
+                                + fqr[k] * (ikr[k] + fkr[k]);
+                        }
+                    } else {
+                        for k in 0..dh {
+                            acc += iqr[k] * fkr[k] + fqr[k] * ikr[k];
+                        }
+                    }
+                    score.set(i, j, acc * p.inv_scale);
+                }
+            }
+        }
+    }
+
+    let probs = if p.use_hw_softmax {
+        hw_softmax_rows(&score)
+    } else {
+        score.softmax_rows()
+    };
+    let out = if head_kept {
+        probs.matmul(v)
+    } else {
+        Tensor::zeros(&[l, v.cols()])
+    };
+    HdpHeadOutput { out, probs, mask, theta, theta_head, head_kept, kept_density }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -654,6 +775,108 @@ mod tests {
         assert_eq!(p.row(0), &[0.0, 0.0, 0.0]);
         assert!(p.data().iter().all(|x| x.is_finite()));
         assert!((p.row(1).iter().sum::<f32>() - 1.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn causal_window_predicate() {
+        // Unwindowed: plain causality.
+        assert!(causal_in_window(3, 3, None));
+        assert!(causal_in_window(3, 0, None));
+        assert!(!causal_in_window(2, 3, None));
+        // Window 2: j in {i-1, i}.
+        assert!(causal_in_window(3, 2, Some(2)));
+        assert!(causal_in_window(3, 3, Some(2)));
+        assert!(!causal_in_window(3, 1, Some(2)));
+        assert!(!causal_in_window(3, 4, Some(2)));
+        // Window 1: only the diagonal.
+        assert!(causal_in_window(5, 5, Some(1)));
+        assert!(!causal_in_window(5, 4, Some(1)));
+        // No underflow at the origin.
+        assert!(causal_in_window(0, 0, Some(1)));
+    }
+
+    #[test]
+    fn causal_reference_theta_is_lower_block_triangular() {
+        // Blocks strictly above the diagonal see only masked cells, so
+        // their θ is exactly 0.0 and their probabilities exactly zero.
+        for (l, window) in [(9usize, None), (16, None), (16, Some(4)), (13, Some(256))] {
+            let (iq, fq, ik, fk, v, inv) = rand_inputs(97 + l as u64, l, 8);
+            let p = HdpParams { rho: 0.4, tau: -1.0, inv_scale: inv, ..Default::default() };
+            let o = hdp_causal_reference(&iq, &fq, &ik, &fk, &v, p, window);
+            let nb = n_blocks(l, p.block);
+            for bi in 0..nb {
+                for bj in (bi + 1)..nb {
+                    assert_eq!(o.theta.at(bi, bj).to_bits(), 0.0f32.to_bits(),
+                               "theta[{bi}][{bj}] l={l}");
+                }
+            }
+            for i in 0..l {
+                for j in 0..l {
+                    if !causal_in_window(i, j, window) {
+                        assert_eq!(o.probs.at(i, j), 0.0, "p[{i}][{j}] l={l}");
+                    }
+                }
+                // every in-window row has at least the diagonal kept —
+                // rows sum to ~1 unless the head itself is pruned
+                let s: f32 = o.probs.row(i).iter().sum();
+                assert!((s - 1.0).abs() < 1e-3, "row {i} sums to {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn causal_reference_huge_window_equals_unwindowed_bitwise() {
+        // window >= l never masks an in-causal cell: Some(l) and None
+        // must be the same function, bit for bit.
+        for l in [1usize, 5, 8, 13] {
+            let (iq, fq, ik, fk, v, inv) = rand_inputs(7 + l as u64, l, 8);
+            let p = HdpParams { rho: 0.5, tau: -1.0, inv_scale: inv, ..Default::default() };
+            let a = hdp_causal_reference(&iq, &fq, &ik, &fk, &v, p, None);
+            let b = hdp_causal_reference(&iq, &fq, &ik, &fk, &v, p, Some(l));
+            assert_eq!(a.out.data(), b.out.data(), "l={l}");
+            assert_eq!(a.theta.data(), b.theta.data(), "l={l}");
+            assert_eq!(a.theta_head.to_bits(), b.theta_head.to_bits(), "l={l}");
+        }
+    }
+
+    #[test]
+    fn causal_reference_l1_matches_bidirectional_bitwise() {
+        // A single token has nothing to mask: causal == bidirectional.
+        let (iq, fq, ik, fk, v, inv) = rand_inputs(23, 1, 8);
+        let p = HdpParams { rho: 0.3, tau: -1.0, inv_scale: inv, ..Default::default() };
+        let a = hdp_causal_reference(&iq, &fq, &ik, &fk, &v, p, None);
+        let b = hdp_head_reference(&iq, &fq, &ik, &fk, &v, p);
+        assert_eq!(a.out.data(), b.out.data());
+        assert_eq!(a.probs.data(), b.probs.data());
+        assert_eq!(a.theta_head.to_bits(), b.theta_head.to_bits());
+    }
+
+    #[test]
+    fn prop_zero_fold_is_bitwise_noop_for_abs_accumulation() {
+        // The accumulation-order cornerstone of the causal mode: folding
+        // +0.0 into an abs-value accumulator never changes its bits, so
+        // "mask to zero then fold densely" (this reference) and "skip
+        // masked cells entirely" (the incremental row-only θ) are the
+        // same fold. Holds because every partial sum of abs() terms is
+        // >= +0.0, and IEEE-754 x + (+0.0) == x bitwise for x >= +0.0.
+        check("skip-fold == zero-fold (bitwise)", 50, |g| {
+            let n = g.usize(1, 64);
+            let mut r = SplitMix64::new(g.u64(0, u64::MAX / 2));
+            let vals: Vec<f32> =
+                (0..n).map(|_| r.next_normal() as f32 * 10.0).collect();
+            let keep: Vec<bool> = (0..n).map(|_| g.bool()).collect();
+            let mut dense = 0.0f32;
+            for (x, &k) in vals.iter().zip(&keep) {
+                dense += if k { x.abs() } else { 0.0 };
+            }
+            let mut skipped = 0.0f32;
+            for (x, &k) in vals.iter().zip(&keep) {
+                if k {
+                    skipped += x.abs();
+                }
+            }
+            prop_assert(dense.to_bits() == skipped.to_bits(), "fold bits")
+        });
     }
 
     #[test]

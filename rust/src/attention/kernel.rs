@@ -395,6 +395,9 @@ impl Workspace {
     /// the cache's θ state in reference order
     /// ([`HeadKv::update_theta`]). Returns the new context length.
     fn decode_update(&mut self, kv: &mut HeadKv, row: &TokenRow) -> usize {
+        if kv.mode().is_causal() {
+            return self.decode_update_causal(kv, row);
+        }
         let dh = kv.d_head();
         assert_eq!(row.iq.len(), dh, "iq row width");
         assert_eq!(row.fq.len(), dh, "fq row width");
@@ -416,6 +419,30 @@ impl Workspace {
         l
     }
 
+    /// Causal-mode stages 1–2 of a decode step: the new query row is
+    /// scored only against the in-window keys `j in lo..l` with
+    /// `lo = l.saturating_sub(window)` — `O(min(l, w)·d)` work, and no
+    /// column scores at all (the new key is masked for every older
+    /// query), which is what lets [`HeadKv::update_theta_causal`] keep
+    /// θ in O(nb). Returns the new context length.
+    fn decode_update_causal(&mut self, kv: &mut HeadKv, row: &TokenRow) -> usize {
+        let dh = kv.d_head();
+        assert_eq!(row.iq.len(), dh, "iq row width");
+        assert_eq!(row.fq.len(), dh, "fq row width");
+        let window = kv.mode().window();
+        kv.append(row);
+        let l = kv.len();
+        let lo = window.map_or(0, |w| l.saturating_sub(w));
+        self.dec_row.resize(l, 0.0);
+        for j in lo..l {
+            self.dec_row[j] = dot(&row.iq, kv.ik_row(j));
+        }
+        self.dec_row_abs.clear();
+        self.dec_row_abs.extend(self.dec_row[lo..l].iter().map(|s| s.abs()));
+        kv.update_theta_causal(lo, &self.dec_row_abs);
+        l
+    }
+
     /// Append one token to the cached context, updating the pruning
     /// state but producing no output row — the prefill / eviction-replay
     /// path, where only the final token's attention is served.
@@ -434,6 +461,9 @@ impl Workspace {
     /// contract `rust/tests/decode_conformance.rs` pins.
     pub fn decode_step(&mut self, kv: &mut HeadKv, row: &TokenRow, p: HdpParams) -> DecodeRow {
         assert_eq!(p.block, kv.block(), "kernel/cache block mismatch");
+        if kv.mode().is_causal() {
+            return self.decode_step_causal(kv, row, p);
+        }
         let (dh, dv, b) = (kv.d_head(), kv.d_v(), p.block);
         let l = self.decode_update(kv, row);
         let r = l - 1;
@@ -535,6 +565,151 @@ impl Workspace {
 
         // P·V over kept columns in ascending order, skipping exact
         // zeros just as the dense matmul does.
+        let mut vi = 0usize;
+        for kidx in ks..ke {
+            let bj = self.kept.cols[kidx] as usize;
+            for j in bj * b..((bj + 1) * b).min(l) {
+                let pij = self.vals[vi];
+                vi += 1;
+                if pij == 0.0 {
+                    continue;
+                }
+                let vrow = kv.v_row(j);
+                for (o, &vv) in self.out.iter_mut().zip(vrow) {
+                    *o += pij * vv;
+                }
+            }
+        }
+
+        DecodeRow {
+            out: self.out.clone(),
+            theta_head,
+            head_kept,
+            kept_blocks,
+            blocks_total: nb,
+        }
+    }
+
+    /// [`Workspace::decode_step`] for a [`crate::session::SessionMode::
+    /// Causal`] head — bitwise identical to the last row of
+    /// [`crate::attention::hdp::hdp_causal_reference`] recomputed over
+    /// the whole context. Differences from the bidirectional step:
+    ///
+    /// * scores and θ come from [`Workspace::decode_update_causal`]
+    ///   (in-window dots only, row-only θ);
+    /// * the kept list thresholds the causal θ row and **force-keeps
+    ///   the diagonal block** `br`, mirroring the reference's mask (the
+    ///   guarantee that the new row always retains its self-score);
+    /// * inside kept blocks, out-of-window cells `j < lo` push the
+    ///   `NEG_INF` sentinel the reference's dense score carries there —
+    ///   the row max then folds them naturally, and their exponentials
+    ///   underflow to the exact zeros the dense sum adds.
+    pub fn decode_step_causal(
+        &mut self,
+        kv: &mut HeadKv,
+        row: &TokenRow,
+        p: HdpParams,
+    ) -> DecodeRow {
+        assert_eq!(p.block, kv.block(), "kernel/cache block mismatch");
+        let (dh, dv, b) = (kv.d_head(), kv.d_v(), p.block);
+        let window = kv.mode().window();
+        let l = self.decode_update_causal(kv, row);
+        let r = l - 1;
+        let lo = window.map_or(0, |w| l.saturating_sub(w));
+        let nb = n_blocks(l, b);
+        let br = r / b;
+
+        let theta_head = kv.theta_head_causal();
+        let head_kept = theta_head > p.tau;
+        self.kept.clear(1, nb);
+        {
+            let trow = kv.theta_row_causal();
+            debug_assert_eq!(trow.len(), nb, "causal theta row width");
+            let th = row_threshold(trow, p.rho);
+            for (bj, &t) in trow.iter().enumerate() {
+                if t >= th || bj == br {
+                    self.kept.cols.push(bj as u32);
+                }
+            }
+        }
+        self.kept.row_ptr.push(self.kept.cols.len() as u32);
+        let kept_blocks = self.kept.kept();
+
+        self.out.clear();
+        self.out.resize(dv, 0.0);
+        if !head_kept {
+            return DecodeRow {
+                out: self.out.clone(),
+                theta_head,
+                head_kept,
+                kept_blocks,
+                blocks_total: nb,
+            };
+        }
+
+        // FUM over the kept blocks of the one new row; out-of-window
+        // cells inside kept blocks carry the reference's sentinel.
+        self.vals.clear();
+        self.vals.reserve(l);
+        let (ks, ke) = self.kept.row_range(0);
+        for kidx in ks..ke {
+            let bj = self.kept.cols[kidx] as usize;
+            for j in bj * b..((bj + 1) * b).min(l) {
+                if j < lo {
+                    self.vals.push(NEG_INF);
+                    continue;
+                }
+                let ikr = kv.ik_row(j);
+                let fkr = kv.fk_row(j);
+                let mut acc = self.dec_row[j];
+                if p.use_ff {
+                    for k in 0..dh {
+                        acc += row.iq[k] * fkr[k] + row.fq[k] * (ikr[k] + fkr[k]);
+                    }
+                } else {
+                    for k in 0..dh {
+                        acc += row.iq[k] * fkr[k] + row.fq[k] * ikr[k];
+                    }
+                }
+                self.vals.push(acc * p.inv_scale);
+            }
+        }
+
+        // Row softmax: pruned blocks' sentinels enter through the mx
+        // seed exactly as in the bidirectional step; in-vals sentinels
+        // (out-of-window cells) fold into the max directly.
+        let mut mx = if kept_blocks < nb { NEG_INF } else { f32::NEG_INFINITY };
+        for &x in &self.vals {
+            mx = mx.max(x);
+        }
+        let mut sum = 0.0f32;
+        for x in &mut self.vals {
+            let e = if p.use_hw_softmax {
+                hw_exp(*x - mx)
+            } else {
+                let d = *x - mx;
+                if d < -80.0 {
+                    0.0
+                } else {
+                    d.exp()
+                }
+            };
+            *x = e;
+            sum += e;
+        }
+        if sum != 0.0 {
+            if p.use_hw_softmax {
+                let rec = hw_reciprocal(sum);
+                for x in &mut self.vals {
+                    *x *= rec;
+                }
+            } else {
+                for x in &mut self.vals {
+                    *x /= sum;
+                }
+            }
+        }
+
         let mut vi = 0usize;
         for kidx in ks..ke {
             let bj = self.kept.cols[kidx] as usize;
@@ -1409,6 +1584,82 @@ mod tests {
             let got = kernel.decode_step(&mut kv, &rows[t], None);
             let (iq, fq, ik, fk, v) = stack_rows(&rows[..=t], dh, dv);
             let want = hdp_head_reference(&iq, &fq, &ik, &fk, &v, p);
+            let want_row = &want.out.data()[t * dv..(t + 1) * dv];
+            assert_eq!(
+                got.out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                want_row.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "step {t}"
+            );
+        }
+    }
+
+    #[test]
+    fn causal_decode_step_matches_causal_reference_bitwise() {
+        // The causal-mode decode contract at kernel level: every step —
+        // aligned or mid-block, windowed or not — must reproduce the
+        // last output row of `hdp_causal_reference` recomputed over the
+        // whole context, bit for bit, along with the pruning trail
+        // (whose kept count includes the reference's diagonal
+        // force-keep).
+        use crate::attention::hdp::hdp_causal_reference;
+        use crate::session::SessionMode;
+        let (dh, dv) = (8usize, 8);
+        for (seed, rho, tau, window) in [
+            (80u64, 0.0f32, -1.0f32, None),
+            (81, 0.5, 0.0, None),
+            (82, 0.9, -1.0, Some(4usize)),
+            (83, -0.5, 1e9, Some(4)),
+            (84, 0.5, -1.0, Some(1)),
+            (85, 0.4, -1.0, Some(256)),
+        ] {
+            let rows = rand_token_rows(seed, 9, dh, dv);
+            let p = params(rho, tau, 0.05);
+            let kernel = MhaKernel::new(p);
+            let mode = SessionMode::Causal { window };
+            let mut kv = HeadKv::with_mode(dh, dv, p.block, 4, mode);
+            for t in 0..rows.len() {
+                let got = kernel.decode_step(&mut kv, &rows[t], None);
+                let (iq, fq, ik, fk, v) = stack_rows(&rows[..=t], dh, dv);
+                let want = hdp_causal_reference(&iq, &fq, &ik, &fk, &v, p, window);
+                let l = t + 1;
+                let want_row = &want.out.data()[(l - 1) * dv..l * dv];
+                let got_bits: Vec<u32> = got.out.iter().map(|x| x.to_bits()).collect();
+                let want_bits: Vec<u32> = want_row.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got_bits, want_bits, "seed {seed} step {t}");
+                assert_eq!(got.theta_head.to_bits(), want.theta_head.to_bits(),
+                           "seed {seed} step {t}");
+                assert_eq!(got.head_kept, want.head_kept, "seed {seed} step {t}");
+                let br = (l - 1) / p.block;
+                let kept_want =
+                    want.mask.row(br).iter().filter(|&&m| m == 1.0).count();
+                assert_eq!(got.kept_blocks, kept_want, "seed {seed} step {t}");
+                assert_eq!(got.blocks_total, want.mask.cols(), "seed {seed} step {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn causal_decode_hw_softmax_and_exact_ff_match_reference() {
+        use crate::attention::hdp::hdp_causal_reference;
+        use crate::session::SessionMode;
+        let (dh, dv) = (8usize, 8);
+        let rows = rand_token_rows(57, 6, dh, dv);
+        let p = HdpParams {
+            rho: 0.4,
+            tau: -1.0,
+            inv_scale: 0.05,
+            use_ff: true,
+            use_hw_softmax: true,
+            ..Default::default()
+        };
+        let window = Some(3);
+        let kernel = MhaKernel::new(p);
+        let mut kv =
+            HeadKv::with_mode(dh, dv, p.block, 4, SessionMode::Causal { window });
+        for t in 0..rows.len() {
+            let got = kernel.decode_step(&mut kv, &rows[t], None);
+            let (iq, fq, ik, fk, v) = stack_rows(&rows[..=t], dh, dv);
+            let want = hdp_causal_reference(&iq, &fq, &ik, &fk, &v, p, window);
             let want_row = &want.out.data()[t * dv..(t + 1) * dv];
             assert_eq!(
                 got.out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),

@@ -55,6 +55,8 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::session::SessionMode;
+
 /// SLO class of a request — the continuous (iteration-level) decode
 /// scheduler orders each iteration's candidates by class first, then
 /// arrival, so a short interactive stream is not starved behind a long
@@ -104,6 +106,14 @@ pub struct Request {
     /// step; `None` (one-shots, and free-running decode clients that
     /// track resync themselves) appends unchecked.
     pub pos: Option<usize>,
+    /// The attention mode this decode step claims its session runs in
+    /// (ignored on one-shots). A session's mode is fixed by its first
+    /// request; the serving engine refuses a later step naming a
+    /// different mode with a typed
+    /// [`super::engine::RejectReason::ModeMismatch`] *before any state
+    /// mutates* — co-batched peers are unaffected. Defaults to
+    /// [`SessionMode::Bidirectional`] (the repo's spine path).
+    pub mode: SessionMode,
     /// SLO class; see [`Priority`]. Defaults to [`Priority::Standard`].
     pub priority: Priority,
     /// Whether this request's queue wait has already been sampled into
@@ -122,6 +132,7 @@ impl Request {
             enqueued: Instant::now(),
             session: None,
             pos: None,
+            mode: SessionMode::default(),
             priority: Priority::default(),
             wait_recorded: false,
         }
@@ -154,6 +165,16 @@ impl Request {
     /// Set the SLO class (builder-style); see [`Priority`].
     pub fn with_priority(mut self, priority: Priority) -> Self {
         self.priority = priority;
+        self
+    }
+
+    /// Name the session's attention mode (builder-style); see
+    /// [`Request::mode`]. A causal session's *every* step must carry
+    /// [`SessionMode::Causal`] with the same window — the engine fixes
+    /// the mode at the session's first request and refuses mismatched
+    /// later steps before any mutation.
+    pub fn with_mode(mut self, mode: SessionMode) -> Self {
+        self.mode = mode;
         self
     }
 

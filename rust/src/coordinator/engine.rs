@@ -84,7 +84,9 @@ use crate::attention::kernel::{BatchRequest, DecodeTask, MhaKernel,
 use crate::fixed::{self, QuantProfile};
 use crate::model::ParamStore;
 use crate::runtime::{lit_i32, lit_scalar_f32, to_vec_f32, Runtime};
-use crate::session::{KvCacheConfig, SessionJournal, SessionStore, TokenRow};
+use crate::session::{EvictionPolicy, KvCacheConfig, SessionJournal,
+                     SessionMode, SessionStore, SpillStats, SpillTier,
+                     TokenRow};
 use crate::sim::{self, SimConfig};
 use crate::tensor::Tensor;
 use crate::util::rng::SplitMix64;
@@ -145,6 +147,14 @@ pub enum RejectReason {
     /// streaming), replayed (claimed < expected) or out-of-order; the
     /// client must resync from `expected` — nothing was appended.
     StreamGap { expected: usize, claimed: usize },
+    /// The step named the wrong attention mode for an open session: the
+    /// session was created (or journaled) as `expected`, but this step
+    /// claimed `claimed`. A session's mode is fixed at its first
+    /// request — bidirectional and causal θ state are not
+    /// interconvertible — so the step is refused *before any mutation*
+    /// (nothing appended, co-batched peers unaffected) and the client
+    /// must resubmit naming the session's actual mode.
+    ModeMismatch { expected: SessionMode, claimed: SessionMode },
 }
 
 impl RejectReason {
@@ -158,8 +168,14 @@ impl RejectReason {
     /// and resubmitting it unchanged will be refused forever — the
     /// client must resync from `expected` first. Burning a backoff
     /// budget on it only delays the resync.
+    /// [`RejectReason::ModeMismatch`] is not retryable for the same
+    /// reason: the session's mode never changes, so the unchanged step
+    /// will be refused forever — resubmit with the right mode instead.
     pub fn is_retryable(&self) -> bool {
-        !matches!(self, RejectReason::StreamGap { .. })
+        !matches!(
+            self,
+            RejectReason::StreamGap { .. } | RejectReason::ModeMismatch { .. }
+        )
     }
 }
 
@@ -515,6 +531,11 @@ pub struct Engine {
     cal_scale: f32,
     /// Per-session KV caches for the decode path (native backend only).
     sessions: Option<Mutex<SessionStore>>,
+    /// Cumulative spill-tier counters already reported into [`Metrics`]
+    /// — `serve_batch` diffs the store's [`SpillStats`] against this
+    /// after every decode batch, so each spill/restore is recorded
+    /// exactly once however the batches interleave.
+    spill_reported: Mutex<SpillStats>,
     /// Fleet-shared session journal (failover layer): committed decode
     /// streams are recorded here, and re-homed sessions hydrate from
     /// it before serving. `None` = no journaling (single-lane runs).
@@ -557,6 +578,7 @@ impl Engine {
             keep_outputs: true,
             cal_scale: 1.0,
             sessions: None,
+            spill_reported: Mutex::new(SpillStats::default()),
             journal: None,
             fault: FaultPlan::default(),
             pops: AtomicU64::new(0),
@@ -616,6 +638,7 @@ impl Engine {
             keep_outputs: true,
             cal_scale: 1.0,
             sessions: Some(Mutex::new(SessionStore::new(kv_cfg))),
+            spill_reported: Mutex::new(SpillStats::default()),
             journal: None,
             fault: FaultPlan::default(),
             pops: AtomicU64::new(0),
@@ -648,12 +671,40 @@ impl Engine {
     }
 
     /// Bound the session store's page budget (native backend). Replaces
-    /// the store, so call before serving traffic. No-op on PJRT.
+    /// the store, so call before serving traffic — and before
+    /// [`Engine::with_eviction_policy`] / [`Engine::with_spill_tier`],
+    /// which mutate the live store. No-op on PJRT.
     pub fn with_kv_capacity(mut self, pages: usize) -> Self {
         if let Some(store) = &mut self.sessions {
             let mut cfg = store.get_mut().unwrap().config();
             cfg.capacity_pages = pages;
             *store = Mutex::new(SessionStore::new(cfg));
+        }
+        self
+    }
+
+    /// Swap the session store's eviction policy (native backend; LRU is
+    /// the default — [`crate::session::LargestFirstPolicy`] and
+    /// [`crate::session::TtlPolicy`] are the cost-aware alternatives).
+    /// Mutates the live store, so call *after*
+    /// [`Engine::with_kv_capacity`] (which replaces it). No-op on PJRT.
+    pub fn with_eviction_policy(mut self, policy: Box<dyn EvictionPolicy>) -> Self {
+        if let Some(store) = &mut self.sessions {
+            store.get_mut().unwrap().set_policy(policy);
+        }
+        self
+    }
+
+    /// Attach a KV spill tier (native backend): eviction under page
+    /// pressure *spills* the victim's pages — θ rows included — into
+    /// `tier` instead of dropping them, and a later decode step
+    /// *restores* them (replaying only the committed suffix) instead of
+    /// rebuilding from scratch. Spills, restores, bytes moved and
+    /// restore latency land in [`Metrics`]. Mutates the live store, so
+    /// call *after* [`Engine::with_kv_capacity`]. No-op on PJRT.
+    pub fn with_spill_tier(mut self, tier: Box<dyn SpillTier>) -> Self {
+        if let Some(store) = &mut self.sessions {
+            store.get_mut().unwrap().attach_spill_tier(tier);
         }
         self
     }
@@ -723,6 +774,12 @@ impl Engine {
     /// PJRT path).
     pub fn session_stats(&self) -> Option<crate::session::StoreStats> {
         self.sessions.as_ref().map(|s| s.lock().unwrap().stats())
+    }
+
+    /// Snapshot of the session store's spill-tier counters (`None` on
+    /// the PJRT path; all-zero when no tier is attached).
+    pub fn session_spill_stats(&self) -> Option<SpillStats> {
+        self.sessions.as_ref().map(|s| s.lock().unwrap().spill_stats())
     }
 
     fn entry(&self) -> &'static str {
@@ -954,6 +1011,7 @@ impl Engine {
                     {
                         store.adopt(
                             session,
+                            restore.mode,
                             &restore.tokens,
                             restore
                                 .checkpoint
@@ -964,9 +1022,44 @@ impl Engine {
                     }
                 }
             }
+            // Session-mode validation, after hydration (so a re-homed
+            // session's journaled mode is already on record) and before
+            // gap detection: a session's attention mode is fixed at its
+            // first request, so a later step naming a different mode is
+            // refused *alone* with a typed [`RejectReason::ModeMismatch`]
+            // — nothing mutates for the refused step, and co-batched
+            // peers (other sessions, and in-mode steps of this one)
+            // serve normally. Within one batch the session's mode is
+            // the store's recorded mode, or the batch's first-seen
+            // claim when the session is brand new.
+            let mut modes: HashMap<u64, SessionMode> = HashMap::new();
+            for (i, r) in reqs.iter().enumerate() {
+                let Some(session) = r.session else { continue };
+                let expected = *modes
+                    .entry(session)
+                    .or_insert_with(|| store.mode_of(session).unwrap_or(r.mode));
+                if r.mode != expected {
+                    eprintln!(
+                        "decode request {}: session {} mode mismatch — step \
+                         claims {} but the session is {} (refused; nothing \
+                         appended)",
+                        r.id, session, r.mode, expected
+                    );
+                    refused[i] = Some(RejectReason::ModeMismatch {
+                        expected,
+                        claimed: r.mode,
+                    });
+                }
+            }
             let mut expect: HashMap<u64, usize> = HashMap::new();
             for (i, r) in reqs.iter().enumerate() {
                 let Some(session) = r.session else { continue };
+                if refused[i].is_some() {
+                    // Mode-refused step: appends nothing, so the
+                    // session's expected position stays put for the
+                    // batch's later steps.
+                    continue;
+                }
                 let e = expect
                     .entry(session)
                     .or_insert_with(|| store.expected_pos(session));
@@ -1030,6 +1123,28 @@ impl Engine {
             .any(|(r, slot)| r.session.is_some() && slot.is_none());
         if decode_live {
             self.serve_decodes(kernel, profile, reqs, &mut responses);
+        }
+
+        // Spill-tier accounting: whatever this batch's hydration,
+        // checkouts and commits moved through the tier lands in
+        // [`Metrics`] exactly once — the store's cumulative counters
+        // are diffed against what was already reported.
+        if has_decode {
+            if let Some(store_mutex) = &self.sessions {
+                let cur = store_mutex.lock().unwrap().spill_stats();
+                let mut last = self.spill_reported.lock().unwrap();
+                let spills = cur.spills - last.spills;
+                let restores = cur.restores - last.restores;
+                if spills + restores > 0 {
+                    self.metrics.record_spill_tier(
+                        spills,
+                        restores,
+                        cur.bytes_spilled - last.bytes_spilled,
+                        cur.bytes_restored - last.bytes_restored,
+                    );
+                }
+                *last = cur;
+            }
         }
 
         let compute_s = t0.elapsed().as_secs_f64();
@@ -1205,6 +1320,9 @@ impl Engine {
             base_len: usize,
             /// Whether checkout rebuilt an evicted cache.
             rebuilt: bool,
+            /// The session's attention mode (validated before this runs;
+            /// every admitted step of the group claims it).
+            mode: SessionMode,
             /// Batch indices of this session's steps, arrival order.
             idxs: Vec<usize>,
         }
@@ -1230,13 +1348,25 @@ impl Engine {
                         by_session.insert(session, groups.len());
                         let base_len = store.history_len(session);
                         let rebuilds0 = store.stats().rebuilds;
-                        let (cache, replay) = store.checkout(session);
+                        let restores0 = store.spill_stats().restores;
+                        let t_checkout = Instant::now();
+                        let (cache, replay) =
+                            store.checkout_mode(session, r.mode);
+                        if store.spill_stats().restores > restores0 {
+                            // This checkout pulled the session's pages
+                            // back from the spill tier — the restore
+                            // latency the tier's speed shows up as.
+                            self.metrics.record_restore_latency(
+                                t_checkout.elapsed().as_secs_f64(),
+                            );
+                        }
                         groups.push(Group {
                             session,
                             cache,
                             replay,
                             base_len,
                             rebuilt: store.stats().rebuilds > rebuilds0,
+                            mode: r.mode,
                             idxs: vec![i],
                         });
                     }
@@ -1303,7 +1433,8 @@ impl Engine {
                     // always at least as current as any response the
                     // fleet has produced, so a lane death after this
                     // point loses nothing.
-                    journal.record(g.session, &req.tokens, self.cal_scale);
+                    journal.record(g.session, &req.tokens, self.cal_scale,
+                                   g.mode);
                     // Checkpoint only after the session's *last* step
                     // in the batch — that is the moment the live cache
                     // holds exactly the committed stream (a snapshot

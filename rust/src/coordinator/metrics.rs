@@ -32,6 +32,19 @@ struct Inner {
     decode_tokens: u64,
     session_rebuilds: u64,
     session_evictions: u64,
+    // KV tiering (session-store spill tier)
+    /// Sessions whose pages were spilled to the slow tier on eviction.
+    session_spills: u64,
+    /// Sessions restored from the slow tier at checkout.
+    session_restores: u64,
+    /// Nominal bytes moved store → tier (pages × page size).
+    spill_bytes: u64,
+    /// Nominal bytes moved tier → store.
+    restore_bytes: u64,
+    /// Checkout latency of decode steps that restored a session from
+    /// the spill tier, seconds — the cost a client pays to come back
+    /// from the slow tier instead of a warm hit.
+    restore_latency: Histogram,
     // co-processor model aggregates
     sim_cycles: f64,
     sim_energy_pj: f64,
@@ -131,6 +144,48 @@ impl Metrics {
         m.decode_tokens += tokens;
         m.session_rebuilds += rebuilds;
         m.session_evictions += evictions;
+    }
+
+    /// Record spill-tier traffic deltas observed at a commit point:
+    /// `spills`/`restores` sessions moved, carrying the given nominal
+    /// byte payloads. The engine diffs the store's `SpillStats`
+    /// around each serve, so every move is counted exactly once.
+    pub fn record_spill_tier(&self, spills: u64, restores: u64,
+                             bytes_spilled: u64, bytes_restored: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.session_spills += spills;
+        m.session_restores += restores;
+        m.spill_bytes += bytes_spilled;
+        m.restore_bytes += bytes_restored;
+    }
+
+    /// Record the checkout latency of one decode step that restored
+    /// its session from the spill tier (seconds).
+    pub fn record_restore_latency(&self, seconds: f64) {
+        self.inner.lock().unwrap().restore_latency.record(seconds);
+    }
+
+    pub fn session_spills(&self) -> u64 {
+        self.inner.lock().unwrap().session_spills
+    }
+
+    pub fn session_restores(&self) -> u64 {
+        self.inner.lock().unwrap().session_restores
+    }
+
+    /// Nominal bytes moved between store and tier, both directions.
+    pub fn spill_bytes_moved(&self) -> u64 {
+        let m = self.inner.lock().unwrap();
+        m.spill_bytes + m.restore_bytes
+    }
+
+    /// Restore-latency quantile, seconds (0.0 before any restore).
+    pub fn restore_latency_quantile(&self, q: f64) -> f64 {
+        self.inner.lock().unwrap().restore_latency.quantile(q)
+    }
+
+    pub fn restore_latency_count(&self) -> u64 {
+        self.inner.lock().unwrap().restore_latency.count()
     }
 
     pub fn decode_requests(&self) -> u64 {
@@ -307,6 +362,11 @@ impl Metrics {
         m.decode_tokens += snap.decode_tokens;
         m.session_rebuilds += snap.session_rebuilds;
         m.session_evictions += snap.session_evictions;
+        m.session_spills += snap.session_spills;
+        m.session_restores += snap.session_restores;
+        m.spill_bytes += snap.spill_bytes;
+        m.restore_bytes += snap.restore_bytes;
+        m.restore_latency.merge(&snap.restore_latency);
         m.sim_cycles += snap.sim_cycles;
         m.sim_energy_pj += snap.sim_energy_pj;
         m.sim_dram_bytes += snap.sim_dram_bytes;
@@ -366,6 +426,16 @@ impl Metrics {
                  {} evictions\n",
                 m.decode_requests, m.decode_tokens, m.session_rebuilds,
                 m.session_evictions,
+            ));
+        }
+        if m.session_spills + m.session_restores > 0 {
+            s.push_str(&format!(
+                "kv tiering     {} spill(s), {} restore(s), {:.2} MB moved, \
+                 restore latency {}\n",
+                m.session_spills,
+                m.session_restores,
+                (m.spill_bytes + m.restore_bytes) as f64 / 1e6,
+                m.restore_latency.summary("s"),
             ));
         }
         if m.heads_total > 0 {
@@ -548,6 +618,29 @@ mod tests {
         // the absorbed lane is untouched
         assert_eq!(lane.lane_deaths(), 1);
         assert_eq!(lane.recovery_count(), 1);
+    }
+
+    #[test]
+    fn spill_tier_counters_record_merge_and_report() {
+        let fleet = Metrics::new();
+        let lane = Metrics::new();
+        lane.record_spill_tier(2, 1, 4096, 2048);
+        lane.record_restore_latency(0.003);
+        fleet.record_spill_tier(1, 1, 1024, 1024);
+        fleet.record_restore_latency(0.001);
+        fleet.absorb(&lane);
+        assert_eq!(fleet.session_spills(), 3);
+        assert_eq!(fleet.session_restores(), 2);
+        assert_eq!(fleet.spill_bytes_moved(), 8192);
+        assert_eq!(fleet.restore_latency_count(), 2, "histogram merges");
+        assert_eq!(fleet.restore_latency_quantile(1.0), 0.003, "merged max");
+        let r = fleet.report();
+        assert!(r.contains("kv tiering     3 spill(s), 2 restore(s)"), "{r}");
+        // untiered lanes never print the line
+        assert!(!Metrics::new().report().contains("kv tiering"));
+        // the absorbed lane is untouched
+        assert_eq!(lane.session_spills(), 2);
+        assert_eq!(lane.restore_latency_count(), 1);
     }
 
     #[test]

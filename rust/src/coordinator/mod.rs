@@ -41,6 +41,6 @@ pub use engine::{derive_head_inputs, derive_head_inputs_scaled,
                  Engine, FaultPlan, NativeModelConfig, RejectReason, Response,
                  ServeMode, StreamGapError};
 pub use metrics::Metrics;
-pub use shard::{rehome_lane, EngineFactory, LaneDirectory, LaneState,
-                Readiness, ReadinessError, RetryPolicy, SessionRouter,
-                ShardReport, ShardStats, ShardedCoordinator};
+pub use shard::{rehome_lane, EngineFactory, EvictionKind, LaneDirectory,
+                LaneState, Readiness, ReadinessError, RetryPolicy,
+                SessionRouter, ShardReport, ShardStats, ShardedCoordinator};

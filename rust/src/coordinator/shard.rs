@@ -103,7 +103,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::session::SessionJournal;
+use crate::session::{EvictionPolicy, InMemorySpillTier, LargestFirstPolicy,
+                     LruPolicy, SessionJournal, TtlPolicy};
 use crate::sim::SimConfig;
 
 use super::batcher::{Batcher, Request};
@@ -118,6 +119,36 @@ use super::metrics::Metrics;
 /// each lane constructs and owns its runtime locally.
 pub type EngineFactory =
     Box<dyn Fn(usize, Arc<Batcher>) -> Result<Engine> + Send + Sync>;
+
+/// Which eviction policy each lane's session store ranks candidates
+/// with under page pressure — the `Copy` configuration surface the
+/// coordinator (and CLI) stamp onto every lane, building the boxed
+/// [`EvictionPolicy`] per lane at boot. See the policy types in
+/// [`crate::session`] for the exact ordering each one guarantees.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EvictionKind {
+    /// Least-recently-used (the default — recency-ordered).
+    #[default]
+    Lru,
+    /// Largest-first: evict the session charging the most pages, so
+    /// one eviction frees the most budget (ties fall back to LRU).
+    LargestFirst,
+    /// TTL: sessions idle for more than `ttl` store operations expire
+    /// first (oldest expired wins; LRU fallback when none expired, so
+    /// the page budget still closes).
+    Ttl { ttl: u64 },
+}
+
+impl EvictionKind {
+    /// Build the boxed policy this kind names (one per lane).
+    pub fn build(self) -> Box<dyn EvictionPolicy> {
+        match self {
+            EvictionKind::Lru => Box::new(LruPolicy::new()),
+            EvictionKind::LargestFirst => Box::new(LargestFirstPolicy::new()),
+            EvictionKind::Ttl { ttl } => Box::new(TtlPolicy::new(ttl)),
+        }
+    }
+}
 
 /// What one shard thread hands back: the responses it committed (even
 /// a lane that died mid-run surrenders what it served), its engine's
@@ -562,6 +593,12 @@ pub struct ShardedCoordinator {
     /// Per-lane injected faults (all-default = no faults) — the chaos
     /// harness's knob, applied to each lane's engine at boot.
     faults: Vec<FaultPlan>,
+    /// Eviction policy every lane's session store runs (LRU default).
+    eviction: EvictionKind,
+    /// Attach an in-memory [`InMemorySpillTier`] to every lane's store,
+    /// so page-pressure evictions spill KV pages (θ rows included) and
+    /// later checkouts restore them instead of journal-replaying.
+    spill: bool,
     shards: usize,
     keep_outputs: bool,
     /// Serve every lane with the continuous (iteration-level)
@@ -594,6 +631,8 @@ impl ShardedCoordinator {
             directory: LaneDirectory::new(shards),
             journal: None,
             faults: vec![FaultPlan::default(); shards],
+            eviction: EvictionKind::default(),
+            spill: false,
             shards,
             keep_outputs: true,
             continuous: false,
@@ -713,6 +752,25 @@ impl ShardedCoordinator {
     /// Results are bitwise identical either way.
     pub fn with_continuous(mut self, continuous: bool) -> Self {
         self.continuous = continuous;
+        self
+    }
+
+    /// Run every lane's session store on `kind`'s eviction policy
+    /// instead of the LRU default ([`EvictionKind`]; one boxed policy
+    /// is built per lane at boot). No effect on sessionless lanes.
+    pub fn with_eviction(mut self, kind: EvictionKind) -> Self {
+        self.eviction = kind;
+        self
+    }
+
+    /// Attach an in-memory spill tier to every lane's session store:
+    /// page-pressure evictions *spill* the victim's KV pages (θ rows
+    /// included) into the tier and a later decode step *restores* them
+    /// — replaying only the committed suffix — instead of rebuilding
+    /// from scratch. Spill/restore traffic lands in each lane's
+    /// [`Metrics`] and merges fleet-wide. Off by default.
+    pub fn with_spill(mut self, spill: bool) -> Self {
+        self.spill = spill;
         self
     }
 
@@ -906,6 +964,12 @@ impl ShardedCoordinator {
                 let mut e = e
                     .with_raw_outputs(self.keep_outputs)
                     .with_continuous(self.continuous);
+                if self.eviction != EvictionKind::default() {
+                    e = e.with_eviction_policy(self.eviction.build());
+                }
+                if self.spill {
+                    e = e.with_spill_tier(Box::new(InMemorySpillTier::new()));
+                }
                 if let Some(journal) = &self.journal {
                     e = e.with_journal(Arc::clone(journal));
                 }
@@ -1486,6 +1550,13 @@ mod tests {
         assert!(RejectReason::Admission.is_retryable());
         assert!(RejectReason::Shed.is_retryable());
         assert!(!RejectReason::StreamGap { expected: 3, claimed: 7 }.is_retryable());
+        // A mode-mismatched step is wrong forever too: the session's
+        // mode never changes, so resubmitting unchanged cannot help.
+        assert!(!RejectReason::ModeMismatch {
+            expected: crate::session::SessionMode::Bidirectional,
+            claimed: crate::session::SessionMode::Causal { window: None },
+        }
+        .is_retryable());
 
         let coord = sticky(1, 2, 4);
         let router = coord.router().unwrap();
@@ -1520,6 +1591,75 @@ mod tests {
         assert_eq!(router.pending(), 1);
         router.close();
         coord.run().unwrap();
+    }
+
+    #[test]
+    fn sticky_spill_tier_spills_and_restores_under_pressure() {
+        // One lane whose page budget holds a single resident session,
+        // spill tier on: two interleaved sessions evict each other at
+        // every commit, each eviction *spills* the victim's pages and
+        // the victim's next step *restores* them instead of replaying
+        // — every step still serves, and the tier traffic lands in the
+        // fleet metrics.
+        let coord = ShardedCoordinator::new_native_sticky(
+            1,
+            GEOM,
+            mode(),
+            SimConfig::edge(),
+            1, // max_batch 1: co-batched peers never hold each other's Arc
+            Duration::from_millis(1),
+            0,
+            1,
+            1, // capacity: one page — every commit is under pressure
+            1.0,
+        )
+        .unwrap()
+        .with_spill(true)
+        .with_eviction(EvictionKind::LargestFirst);
+        let router = coord.router().unwrap();
+        let producer = {
+            let r = router.clone();
+            std::thread::spawn(move || {
+                for step in 0..4u64 {
+                    for session in 0..2u64 {
+                        r.submit(Request::decode_at(
+                            step * 2 + session,
+                            session,
+                            step as usize,
+                            vec![5 + step as i32],
+                        ))
+                        .unwrap();
+                    }
+                }
+                r.close();
+            })
+        };
+        let report = coord.run().unwrap();
+        producer.join().unwrap();
+        assert_eq!(report.responses.len(), 8);
+        assert!(
+            report.responses.iter().all(|r| !r.rejected),
+            "spill pressure must not refuse steps: {:?}",
+            report
+                .responses
+                .iter()
+                .map(|r| (r.id, r.rejected))
+                .collect::<Vec<_>>()
+        );
+        assert_eq!(
+            report.responses.iter().map(|r| r.context_len).max(),
+            Some(4),
+            "both streams ran to completion"
+        );
+        assert!(report.metrics.session_spills() > 0, "pressure spilled");
+        assert!(report.metrics.session_restores() > 0, "checkouts restored");
+        assert!(report.metrics.spill_bytes_moved() > 0);
+        assert!(report.metrics.restore_latency_count() > 0);
+        assert!(
+            report.summary().contains("kv tiering"),
+            "{}",
+            report.summary()
+        );
     }
 
     #[test]

@@ -15,15 +15,17 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
-use hdp::coordinator::{Batcher, Engine, FaultPlan, NativeModelConfig,
-                       Readiness, Request, Response, RetryPolicy, ServeMode,
-                       ShardReport, ShardedCoordinator};
+use hdp::coordinator::{Batcher, Engine, EvictionKind, FaultPlan,
+                       NativeModelConfig, Readiness, Request, Response,
+                       RetryPolicy, ServeMode, ShardReport,
+                       ShardedCoordinator};
 use hdp::data::{Dataset, Split, Stream};
 use hdp::model::{Evaluator, ParamStore, Trainer};
 use hdp::model::evaluator::Variant;
 use hdp::model::trainer::HdpTrainKnobs;
 use hdp::repro::figures;
 use hdp::runtime::Runtime;
+use hdp::session::SessionMode;
 use hdp::sim::SimConfig;
 use hdp::util::cli::Args;
 use hdp::util::rng::SplitMix64;
@@ -209,7 +211,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .flag("requests", "256", "number of requests")
         .flag("rate", "100", "Poisson arrival rate (req/s)")
         .flag("linger-ms", "5", "batcher linger deadline")
-        .flag("mode", "hdp", "hdp|dense")
+        .flag("mode", "hdp", "hdp|dense|causal (causal: HDP attention \
+               with causal/windowed decode sessions — decode demo only)")
         .flag("rho", "0.4", "HDP block pruning ratio")
         .flag("tau", "4096", "HDP head pruning threshold")
         .flag("chip", "edge", "co-processor model: edge|server")
@@ -230,8 +233,18 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .flag("context", "16", "decode demo: prefill context length per \
                session")
         .flag("kv-pages", "0", "decode demo: session-store page budget \
-               per lane (0 = unbounded; LRU eviction, evicted sessions \
-               decode from scratch)")
+               per lane (0 = unbounded; evicted sessions decode from \
+               scratch unless --spill is on)")
+        .flag("window", "0", "decode demo: causal attention window in \
+               tokens (--mode causal only; 0 = unbounded causal)")
+        .switch("spill", "decode demo: attach an in-memory KV spill \
+                 tier per lane — page-pressure evictions spill pages \
+                 (th rows included) and later steps restore them \
+                 instead of replaying from scratch")
+        .flag("eviction", "lru", "decode demo: session eviction policy: \
+               lru|largest|ttl:<ops> (largest frees the most pages per \
+               eviction; ttl expires sessions idle for <ops> store \
+               operations)")
         .flag("kill-lane", "", "decode demo chaos: kill this lane \
                mid-run; its sessions re-home to survivors and replay \
                from the journal (empty = no kill)")
@@ -323,6 +336,28 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
                  r.sim_seconds * 1e3);
     }
     Ok(())
+}
+
+/// `--eviction` parser: `lru` (the default), `largest`
+/// (largest-first), or `ttl:<ops>` (expire sessions idle for `<ops>`
+/// store operations).
+fn parse_eviction(v: &str) -> Result<EvictionKind> {
+    match v {
+        "" | "lru" => Ok(EvictionKind::Lru),
+        "largest" => Ok(EvictionKind::LargestFirst),
+        _ => match v.strip_prefix("ttl:") {
+            Some(n) => {
+                let ttl: u64 = n.parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "--eviction ttl:<ops>: '{n}' is not a count")
+                })?;
+                anyhow::ensure!(ttl > 0, "--eviction ttl:<ops> needs ops >= 1");
+                Ok(EvictionKind::Ttl { ttl })
+            }
+            None => anyhow::bail!(
+                "--eviction: '{v}' is not lru|largest|ttl:<ops>"),
+        },
+    }
 }
 
 /// Batcher for `hdp serve`: release size from the model/CLI, linger
@@ -495,6 +530,23 @@ fn serve_demo_decode(args: &Args, cfg: NativeModelConfig, mode: ServeMode,
         0 => usize::MAX,
         n => n,
     };
+    // `--mode causal` selects the causal/windowed *session* mode (the
+    // attention variant stays HDP): every decode step names it, the
+    // engine fixes it at each session's first request, and θ stays
+    // row-only O(nb) per head. The default is the bidirectional spine.
+    let session_mode = if args.get("mode") == "causal" {
+        SessionMode::Causal {
+            window: match args.get_usize("window")? {
+                0 => None,
+                w => Some(w),
+            },
+        }
+    } else {
+        anyhow::ensure!(args.get_usize("window")? == 0,
+                        "--window needs --mode causal");
+        SessionMode::Bidirectional
+    };
+    let eviction = parse_eviction(&args.get("eviction"))?;
     let parse_lane = |name: &str| -> Result<Option<usize>> {
         let v = args.get(name);
         if v.is_empty() {
@@ -523,7 +575,19 @@ fn serve_demo_decode(args: &Args, cfg: NativeModelConfig, mode: ServeMode,
     )?
     .with_raw_outputs(false)
     .with_continuous(args.get_bool("continuous"))
-    .with_checkpoints(args.get_usize("checkpoint-every")?);
+    .with_checkpoints(args.get_usize("checkpoint-every")?)
+    .with_eviction(eviction)
+    .with_spill(args.get_bool("spill"));
+    if session_mode.is_causal() {
+        println!("causal decode sessions ({session_mode}): row-only theta \
+                  statistics, O(n/b) per head, pinned against \
+                  hdp_causal_reference");
+    }
+    if args.get_bool("spill") {
+        println!("kv spill tier: page-pressure evictions spill to the \
+                  in-memory slow tier; later steps restore instead of \
+                  replaying ({eviction:?} eviction)");
+    }
     if args.get_bool("continuous") {
         println!("continuous scheduling: lanes re-form the decode batch \
                   every iteration (per-step admission and gap refusal)");
@@ -607,7 +671,8 @@ fn serve_demo_decode(args: &Args, cfg: NativeModelConfig, mode: ServeMode,
                     .map(|_| rng.next_below(30_000) as i32)
                     .collect();
                 let n = tokens.len();
-                let req = Request::decode_at(id, s, pos[s as usize], tokens);
+                let req = Request::decode_at(id, s, pos[s as usize], tokens)
+                    .with_mode(session_mode);
                 if submit(req, &mut rejections) {
                     pos[s as usize] += n;
                 }
@@ -617,7 +682,8 @@ fn serve_demo_decode(args: &Args, cfg: NativeModelConfig, mode: ServeMode,
                 for s in 0..sessions as u64 {
                     let tok = rng.next_below(30_000) as i32;
                     let req =
-                        Request::decode_at(id, s, pos[s as usize], vec![tok]);
+                        Request::decode_at(id, s, pos[s as usize], vec![tok])
+                            .with_mode(session_mode);
                     if submit(req, &mut rejections) {
                         pos[s as usize] += 1;
                     }
@@ -656,6 +722,12 @@ fn serve_demo_decode(args: &Args, cfg: NativeModelConfig, mode: ServeMode,
              tokens as f64 / wall.max(1e-9),
              report.metrics.decode_requests());
     let m = &report.metrics;
+    if m.session_spills() + m.session_restores() > 0 {
+        println!("kv tiering: {} spill(s), {} restore(s), {:.2} MB moved \
+                  through the slow tier",
+                 m.session_spills(), m.session_restores(),
+                 m.spill_bytes_moved() as f64 / 1e6);
+    }
     if m.lane_deaths() + m.lane_drains() > 0 {
         println!("failover: {} lane death(s), {} drain(s); {} request(s) \
                   re-routed, {} session(s) re-homed and replayed from the \

@@ -28,6 +28,16 @@
 //!   block-row are recomputed from these retained columns each step
 //!   and the buffer is dropped the moment the block-column completes.
 //!
+//! The θ matrix and tail columns above describe the default
+//! **bidirectional** mode, whose per-head θ cost is O(nb²). A head
+//! created with [`SessionMode::Causal`] instead keeps **row-only θ
+//! statistics** — the current block-row plus one frozen `theta_head`
+//! prefix scalar, O(nb) total — because under a causal mask a new key
+//! column never scores against older query rows, so no completed θ
+//! cell can ever change. See [`HeadKv::update_theta_causal`] for the
+//! accumulation-order argument; the conformance anchor is
+//! [`crate::attention::hdp::hdp_causal_reference`].
+//!
 //! The decode math itself (scoring, threshold, FUM, softmax, P·V)
 //! lives in [`crate::attention::kernel`] (`MhaKernel::decode_step`);
 //! this type owns the state and its growth/bookkeeping invariants.
@@ -38,6 +48,52 @@
 use std::sync::Mutex;
 
 use crate::attention::hdp::n_blocks;
+
+/// How a session's decode steps attend to their cached context — fixed
+/// at the session's first request and checked on every later step.
+///
+/// * [`SessionMode::Bidirectional`] (the default) is the repo's spine:
+///   every step is bitwise identical to
+///   [`crate::attention::hdp::hdp_head_reference`] full recompute. Its
+///   θ matrix costs O(nb²) per head.
+/// * [`SessionMode::Causal`] is the explicitly-selected long-context
+///   mode: token `i` attends to keys `j <= i` (and `j >= i + 1 - w`
+///   when `window = Some(w)`), pinned bitwise against
+///   [`crate::attention::hdp::hdp_causal_reference`]. Only the current
+///   block-row of θ plus one frozen prefix scalar are kept — O(nb)
+///   per head — which is what makes 8k+ contexts affordable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum SessionMode {
+    #[default]
+    Bidirectional,
+    /// Causal decode; `window = Some(w)` additionally restricts each
+    /// query to the `w` most recent keys (its own included).
+    Causal { window: Option<usize> },
+}
+
+impl SessionMode {
+    pub fn is_causal(&self) -> bool {
+        matches!(self, SessionMode::Causal { .. })
+    }
+
+    /// The attention window, if this mode restricts one.
+    pub fn window(&self) -> Option<usize> {
+        match self {
+            SessionMode::Bidirectional => None,
+            SessionMode::Causal { window } => *window,
+        }
+    }
+}
+
+impl std::fmt::Display for SessionMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionMode::Bidirectional => write!(f, "bidirectional"),
+            SessionMode::Causal { window: None } => write!(f, "causal"),
+            SessionMode::Causal { window: Some(w) } => write!(f, "causal/w{w}"),
+        }
+    }
+}
 
 /// One token's derived attention-row fields on the quant grid:
 /// quantized query/key integer+fraction fields (`d_head` each) plus
@@ -84,19 +140,45 @@ pub struct HeadKv {
     d_v: usize,
     block: usize,
     page_tokens: usize,
+    mode: SessionMode,
     len: usize,
     pages: Vec<Page>,
     /// θ rows, one `Vec` per block-row, every row `n_blocks(len)` long.
     /// Row-major iteration reproduces the reference's flat layout.
+    /// Bidirectional mode only — stays empty in causal mode.
     theta: Vec<Vec<f32>>,
     /// `|integer score|` columns of the partial tail block-column
     /// (column-major, ascending column index; each column holds `len`
-    /// entries). Empty whenever `len` is block-aligned.
+    /// entries). Empty whenever `len` is block-aligned. Bidirectional
+    /// mode only.
     tail_abs: Vec<Vec<f32>>,
+    /// Causal mode's whole θ state, part 1: the θ row of the *current*
+    /// (growing) block-row, `n_blocks(len)` cells. O(nb).
+    causal_row: Vec<f32>,
+    /// Causal mode's whole θ state, part 2: the running flat row-major
+    /// fold of every *completed* block-row's θ cells — exactly the
+    /// single-accumulator state the reference's `theta_head` sum
+    /// reaches after those rows (trailing zero cells added as nb grows
+    /// later are bitwise no-ops: every θ term is an `abs()` so the
+    /// accumulator is ≥ +0.0, and `x + 0.0 == x` bitwise there).
+    causal_frozen: f32,
 }
 
 impl HeadKv {
     pub fn new(d_head: usize, d_v: usize, block: usize, page_tokens: usize) -> Self {
+        Self::with_mode(d_head, d_v, block, page_tokens, SessionMode::Bidirectional)
+    }
+
+    /// Like [`HeadKv::new`] but with an explicit [`SessionMode`]; the
+    /// mode is fixed for the head's lifetime (a session never changes
+    /// mode mid-stream — the store refuses such steps upstream).
+    pub fn with_mode(
+        d_head: usize,
+        d_v: usize,
+        block: usize,
+        page_tokens: usize,
+        mode: SessionMode,
+    ) -> Self {
         assert!(d_head > 0 && d_v > 0 && block > 0, "degenerate head geometry");
         assert!(
             page_tokens > 0 && page_tokens % block == 0,
@@ -107,11 +189,19 @@ impl HeadKv {
             d_v,
             block,
             page_tokens,
+            mode,
             len: 0,
             pages: Vec::new(),
             theta: Vec::new(),
             tail_abs: Vec::new(),
+            causal_row: Vec::new(),
+            causal_frozen: 0.0,
         }
+    }
+
+    /// The attention mode this head was created for.
+    pub fn mode(&self) -> SessionMode {
+        self.mode
     }
 
     /// Cached context length in tokens.
@@ -287,6 +377,88 @@ impl HeadKv {
         }
     }
 
+    /// Causal-mode θ fold for the newest token. Call once per appended
+    /// token, *after* [`HeadKv::append`], with the in-window score
+    /// magnitudes of the new query row:
+    /// `s_abs[k] = |IQ_r · IK_{lo+k}|` for `lo + k in lo..len`, where
+    /// `lo = (r + 1).saturating_sub(window)` (`lo = 0` unwindowed) and
+    /// `r = len - 1`.
+    ///
+    /// Why this is bitwise identical to [`crate::attention::hdp::
+    /// hdp_causal_reference`]'s θ (which masks out-of-window score
+    /// cells to zero and then runs the full `block_importance` fold):
+    ///
+    /// * A new key column is masked for every *older* query row
+    ///   (`j = r > i`), so unlike the bidirectional path no θ cell
+    ///   above the current block-row ever changes — there is no tail
+    ///   block-column to repair and nothing to retain beyond the
+    ///   current block-row itself.
+    /// * Within the current block-row, the reference folds score rows
+    ///   `i` ascending and columns `j` ascending; the new row `r` is
+    ///   the largest `i` in its block, so appending its in-window
+    ///   terms (ascending `j`) extends each cell's fold at the end.
+    /// * The reference's masked cells contribute `+0.0` in place;
+    ///   skipping them entirely is the same fold bit for bit because
+    ///   every partial sum of `abs()` terms is ≥ +0.0 and IEEE-754
+    ///   `x + (+0.0) == x` bitwise there
+    ///   (`prop_zero_fold_is_bitwise_noop_for_abs_accumulation` in
+    ///   `attention::hdp` pins the argument).
+    ///
+    /// When a later token opens a new block-row, the completed row is
+    /// folded (ascending `bj`) into the frozen prefix scalar — the
+    /// accumulation order of the reference's flat row-major
+    /// `theta_head` sum — and the live row resets. Total state: one
+    /// `nb`-cell row plus one scalar, O(nb).
+    pub fn update_theta_causal(&mut self, lo: usize, s_abs: &[f32]) {
+        assert!(self.mode.is_causal(), "causal update on {} head", self.mode);
+        let l = self.len;
+        assert!(l > 0, "update_theta_causal before first append");
+        let r = l - 1;
+        let b = self.block;
+        assert_eq!(s_abs.len(), l - lo, "windowed score row length");
+        let nb = n_blocks(l, b);
+        if r % b == 0 && r > 0 {
+            // `r` opened a new block-row: the previous one is complete
+            // and final — fold it into the frozen theta_head prefix in
+            // flat row-major order, then reset the live row.
+            for &t in &self.causal_row {
+                self.causal_frozen += t;
+            }
+            self.causal_row.clear();
+        }
+        self.causal_row.resize(nb, 0.0);
+        for (k, &s) in s_abs.iter().enumerate() {
+            self.causal_row[(lo + k) / b] += s;
+        }
+    }
+
+    /// θ row of the *current* block-row in causal mode — the row the
+    /// newest query thresholds (full `nb` width, trailing zeros
+    /// included, exactly like the reference's `block_mask` row).
+    pub fn theta_row_causal(&self) -> &[f32] {
+        &self.causal_row
+    }
+
+    /// Causal-mode head statistic: the frozen prefix continued through
+    /// the live row — bitwise identical to the reference's flat
+    /// row-major `theta.data().iter().sum()`.
+    pub fn theta_head_causal(&self) -> f32 {
+        let mut acc = self.causal_frozen;
+        for &t in &self.causal_row {
+            acc += t;
+        }
+        acc
+    }
+
+    /// Live θ-statistic cells this head holds — the quantity the mode
+    /// memory guarantee is stated in: O(nb²) bidirectional (θ matrix +
+    /// partial tail columns), O(nb) causal (one block-row + a scalar).
+    pub fn theta_cells(&self) -> usize {
+        self.theta.iter().map(Vec::len).sum::<usize>()
+            + self.tail_abs.iter().map(Vec::len).sum::<usize>()
+            + self.causal_row.len()
+    }
+
     /// θ row of block-row `bi` (what the decode step thresholds for
     /// the newest query).
     pub fn theta_row(&self, bi: usize) -> &[f32] {
@@ -317,10 +489,13 @@ impl HeadKv {
             d_v: self.d_v,
             block: self.block,
             page_tokens: self.page_tokens,
+            mode: self.mode,
             len: self.len,
             pages: self.pages.clone(),
             theta: self.theta.clone(),
             tail_abs: self.tail_abs.clone(),
+            causal_row: self.causal_row.clone(),
+            causal_frozen: self.causal_frozen,
         }
     }
 }
@@ -333,6 +508,7 @@ impl HeadKv {
 pub struct KvCache {
     n_layers: usize,
     n_heads: usize,
+    mode: SessionMode,
     heads: Vec<Mutex<HeadKv>>,
 }
 
@@ -345,11 +521,32 @@ impl KvCache {
         block: usize,
         page_tokens: usize,
     ) -> Self {
+        Self::with_mode(
+            n_layers,
+            n_heads,
+            d_head,
+            d_v,
+            block,
+            page_tokens,
+            SessionMode::Bidirectional,
+        )
+    }
+
+    /// Like [`KvCache::new`] but every head is created in `mode`.
+    pub fn with_mode(
+        n_layers: usize,
+        n_heads: usize,
+        d_head: usize,
+        d_v: usize,
+        block: usize,
+        page_tokens: usize,
+        mode: SessionMode,
+    ) -> Self {
         assert!(n_layers > 0 && n_heads > 0, "degenerate cache geometry");
         let heads = (0..n_layers * n_heads)
-            .map(|_| Mutex::new(HeadKv::new(d_head, d_v, block, page_tokens)))
+            .map(|_| Mutex::new(HeadKv::with_mode(d_head, d_v, block, page_tokens, mode)))
             .collect();
-        Self { n_layers, n_heads, heads }
+        Self { n_layers, n_heads, mode, heads }
     }
 
     pub fn n_layers(&self) -> usize {
@@ -358,6 +555,17 @@ impl KvCache {
 
     pub fn n_heads(&self) -> usize {
         self.n_heads
+    }
+
+    /// The attention mode every head in the grid was created for.
+    pub fn mode(&self) -> SessionMode {
+        self.mode
+    }
+
+    /// Live θ-statistic cells across the grid — what the causal-mode
+    /// O(nb) memory test asserts on.
+    pub fn theta_cells(&self) -> usize {
+        self.heads.iter().map(|h| h.lock().unwrap().theta_cells()).sum()
     }
 
     /// The (layer, head) cell. Lock order never matters: a decode step
@@ -390,6 +598,7 @@ impl KvCache {
         KvCache {
             n_layers: self.n_layers,
             n_heads: self.n_heads,
+            mode: self.mode,
             heads: self
                 .heads
                 .iter()
@@ -442,6 +651,17 @@ mod tests {
         let col_abs: Vec<f32> =
             (0..r).map(|i| dot(kv.iq_row(i), kv.ik_row(r)).abs()).collect();
         kv.update_theta(&s_row_abs, &col_abs);
+    }
+
+    /// Drive the causal per-step θ update the way the kernel does:
+    /// dots only for the in-window keys, no column scores at all.
+    fn append_and_update_causal(kv: &mut HeadKv, row: &TokenRow, window: Option<usize>) {
+        kv.append(row);
+        let l = kv.len();
+        let lo = window.map_or(0, |w| l.saturating_sub(w));
+        let s_abs: Vec<f32> =
+            (lo..l).map(|j| dot(&row.iq, kv.ik_row(j)).abs()).collect();
+        kv.update_theta_causal(lo, &s_abs);
     }
 
     #[test]
@@ -532,6 +752,129 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_causal_row_theta_matches_causal_reference_bitwise() {
+        // The causal-mode counterpart of the invariant above, against
+        // the causal reference's θ accumulation: mask the integer score
+        // outside the causal window to zero, run the *full*
+        // `block_importance` fold — the O(nb) row-only state must agree
+        // bitwise at every length, ragged mid-block and block-aligned
+        // alike, and hold exactly nb live θ cells while doing so.
+        use crate::attention::hdp::causal_in_window;
+        check("causal row theta == masked block_importance (bitwise)", 20, |g| {
+            let dh = *g.choice(&[3usize, 8]);
+            let block = *g.choice(&[1usize, 2, 4]);
+            let steps = g.usize(1, 17);
+            let window = *g.choice(&[None, Some(1usize), Some(3), Some(8), Some(256)]);
+            let mut rng = SplitMix64::new(g.u64(0, u64::MAX / 2));
+            let mode = SessionMode::Causal { window };
+            let mut kv = HeadKv::with_mode(dh, 4, block, 4 * block, mode);
+            let mut rows: Vec<TokenRow> = Vec::new();
+            for _ in 0..steps {
+                let row = rand_row(&mut rng, dh, 4);
+                append_and_update_causal(&mut kv, &row, window);
+                rows.push(row);
+                let l = rows.len();
+                let mut iq_data = Vec::with_capacity(l * dh);
+                let mut ik_data = Vec::with_capacity(l * dh);
+                for r in &rows {
+                    iq_data.extend_from_slice(&r.iq);
+                    ik_data.extend_from_slice(&r.ik);
+                }
+                let iq = Tensor::new(&[l, dh], iq_data);
+                let ik = Tensor::new(&[l, dh], ik_data);
+                let mut s = iq.matmul_nt(&ik);
+                for i in 0..l {
+                    for j in 0..l {
+                        if !causal_in_window(i, j, window) {
+                            s.set(i, j, 0.0);
+                        }
+                    }
+                }
+                let want = block_importance(&s, block);
+                let br = (l - 1) / block;
+                let got = kv.theta_row_causal();
+                prop_assert(got.len() == want.cols(), "row width")?;
+                for (bj, (a, b)) in got.iter().zip(want.row(br)).enumerate() {
+                    prop_assert(
+                        a.to_bits() == b.to_bits(),
+                        format!("causal theta[{br}][{bj}] {a} != {b} at l={l}"),
+                    )?;
+                }
+                let mut flat = 0.0f32;
+                for &t in want.data() {
+                    flat += t;
+                }
+                prop_assert(
+                    kv.theta_head_causal().to_bits() == flat.to_bits(),
+                    format!("causal theta_head at l={l}"),
+                )?;
+                prop_assert(
+                    kv.theta_cells() == want.cols(),
+                    format!("O(nb) cells: {} != {}", kv.theta_cells(), want.cols()),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn causal_8k_context_holds_o_nb_theta_cells() {
+        // The acceptance bound of the causal mode: at 8k context the
+        // live θ state is exactly nb cells (one block-row) per head —
+        // linear in context — where the bidirectional matrix would hold
+        // nb² + tail cells (~16.8M at block 2). Windowed so the test's
+        // scoring work stays O(l·w) and the suite stays fast.
+        let window = Some(256);
+        let mode = SessionMode::Causal { window };
+        let mut rng = SplitMix64::new(41);
+        let mut kv = HeadKv::with_mode(3, 4, 2, 64, mode);
+        for _ in 0..8192 {
+            append_and_update_causal(&mut kv, &rand_row(&mut rng, 3, 4), window);
+        }
+        assert_eq!(kv.len(), 8192);
+        let nb = kv.n_blocks_ctx();
+        assert_eq!(nb, 4096);
+        assert_eq!(kv.theta_cells(), nb, "row-only state is O(nb)");
+        assert_eq!(kv.pages(), 8192 / 64);
+    }
+
+    #[test]
+    fn causal_snapshot_restores_bitwise_identical_decode_state() {
+        // Snapshot mid-stream in causal mode (including mid-block, so
+        // the live row and the frozen prefix are both nontrivial), keep
+        // appending to both copies: θ row and head statistic must stay
+        // bitwise equal — the spill/restore and checkpoint contract.
+        let window = Some(5);
+        let mode = SessionMode::Causal { window };
+        let mut rng = SplitMix64::new(33);
+        let rows: Vec<TokenRow> =
+            (0..13).map(|_| rand_row(&mut rng, 4, 4)).collect();
+        let mut kv = HeadKv::with_mode(4, 4, 2, 4, mode);
+        for row in &rows[..7] {
+            append_and_update_causal(&mut kv, row, window);
+        }
+        let mut restored = kv.snapshot();
+        assert_eq!(restored.len(), 7);
+        assert_eq!(restored.mode(), mode);
+        for row in &rows[7..] {
+            append_and_update_causal(&mut kv, row, window);
+            append_and_update_causal(&mut restored, row, window);
+        }
+        assert_eq!(restored.len(), kv.len());
+        for (a, b) in kv.theta_row_causal().iter().zip(restored.theta_row_causal()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "live causal theta row");
+        }
+        assert_eq!(
+            kv.theta_head_causal().to_bits(),
+            restored.theta_head_causal().to_bits()
+        );
+        for i in 0..kv.len() {
+            assert_eq!(kv.ik_row(i), restored.ik_row(i), "ik row {i}");
+            assert_eq!(kv.v_row(i), restored.v_row(i), "v row {i}");
+        }
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //!
 //! A [`SessionJournal`] records, per session, the **committed token
 //! stream** and the policy parameters the stream was served under (the
-//! host-quantizer calibration scale) — *tokens only, never KV pages*.
+//! host-quantizer calibration scale and the session's
+//! [`SessionMode`]) — *tokens only, never KV pages*.
 //! That is enough for exact recovery because of the repo's core
 //! serving invariant, pinned since the session subsystem landed
 //! (`rust/tests/decode_conformance.rs`): every cached derivation is a
@@ -44,7 +45,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use super::cache::KvCache;
+use super::cache::{KvCache, SessionMode};
 
 /// Lifetime counters the failover metrics and tests surface.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -72,6 +73,11 @@ pub struct SessionRestore {
     /// must be configured identically or the derivation would diverge;
     /// [`SessionJournal::restore_for`] enforces this.
     pub cal_scale: f32,
+    /// The session's attention mode, fixed at its first journaled
+    /// commit. The adopting store seeds its entry with it, so a
+    /// re-homed causal session keeps refusing bidirectional steps
+    /// (and vice versa) exactly like the lane it left.
+    pub mode: SessionMode,
     /// `(position, snapshot)`: the snapshot holds exactly `position`
     /// tokens of cached state; `tokens[position..]` is the replay
     /// suffix.
@@ -82,6 +88,7 @@ pub struct SessionRestore {
 struct JournalEntry {
     tokens: Vec<i32>,
     cal_scale: f32,
+    mode: SessionMode,
     checkpoint: Option<(usize, Arc<KvCache>)>,
 }
 
@@ -129,21 +136,34 @@ impl SessionJournal {
     }
 
     /// Record a commit: `appended` extends `session`'s journaled
-    /// stream, served at `cal_scale`. Returns the new stream length.
-    /// Called by the owning lane inside its commit phase, so the
-    /// journal is always at least as current as any response the fleet
-    /// has produced.
-    pub fn record(&self, session: u64, appended: &[i32], cal_scale: f32) -> usize {
+    /// stream, served at `cal_scale` in `mode` (both fixed at the
+    /// first record — the engine refuses mismatching steps before they
+    /// reach the journal). Returns the new stream length. Called by
+    /// the owning lane inside its commit phase, so the journal is
+    /// always at least as current as any response the fleet has
+    /// produced.
+    pub fn record(
+        &self,
+        session: u64,
+        appended: &[i32],
+        cal_scale: f32,
+        mode: SessionMode,
+    ) -> usize {
         let mut inner = self.inner.lock().unwrap();
         let e = inner.entry(session).or_insert_with(|| JournalEntry {
             tokens: Vec::new(),
             cal_scale,
+            mode,
             checkpoint: None,
         });
         debug_assert_eq!(
             e.cal_scale.to_bits(),
             cal_scale.to_bits(),
             "session {session}: policy scale changed mid-stream"
+        );
+        debug_assert_eq!(
+            e.mode, mode,
+            "session {session}: mode changed mid-stream"
         );
         e.tokens.extend_from_slice(appended);
         let len = e.tokens.len();
@@ -206,6 +226,7 @@ impl SessionJournal {
         let restore = SessionRestore {
             tokens: e.tokens.clone(),
             cal_scale: e.cal_scale,
+            mode: e.mode,
             checkpoint: e.checkpoint.clone(),
         };
         drop(inner);
@@ -243,8 +264,8 @@ mod tests {
     fn records_accumulate_the_stream() {
         let j = SessionJournal::new();
         assert_eq!(j.len(7), 0);
-        assert_eq!(j.record(7, &[1, 2], 1.0), 2);
-        assert_eq!(j.record(7, &[3], 1.0), 3);
+        assert_eq!(j.record(7, &[1, 2], 1.0, SessionMode::default()), 2);
+        assert_eq!(j.record(7, &[3], 1.0, SessionMode::default()), 3);
         assert_eq!(j.len(7), 3);
         assert_eq!(j.sessions(), 1);
         let r = j.restore_for(7, 1.0).unwrap().expect("known session");
@@ -263,7 +284,7 @@ mod tests {
     #[test]
     fn policy_scale_mismatch_is_refused() {
         let j = SessionJournal::new();
-        j.record(1, &[5], 0.5);
+        j.record(1, &[5], 0.5, SessionMode::default());
         assert!(j.restore_for(1, 1.0).is_err());
         assert!(j.restore_for(1, 0.5).unwrap().is_some());
     }
@@ -271,15 +292,15 @@ mod tests {
     #[test]
     fn checkpoint_cadence_and_refresh() {
         let j = SessionJournal::with_checkpoints(4);
-        j.record(1, &[1, 2, 3], 1.0);
+        j.record(1, &[1, 2, 3], 1.0, SessionMode::default());
         assert!(!j.wants_checkpoint(1), "3 < 4 tokens since last");
-        j.record(1, &[4], 1.0);
+        j.record(1, &[4], 1.0, SessionMode::default());
         assert!(j.wants_checkpoint(1));
         j.checkpoint(1, &cache_with(4));
         assert!(!j.wants_checkpoint(1), "fresh checkpoint at 4");
-        j.record(1, &[5, 6, 7], 1.0);
+        j.record(1, &[5, 6, 7], 1.0, SessionMode::default());
         assert!(!j.wants_checkpoint(1), "7 - 4 < 4");
-        j.record(1, &[8], 1.0);
+        j.record(1, &[8], 1.0, SessionMode::default());
         assert!(j.wants_checkpoint(1));
         let r = j.restore_for(1, 1.0).unwrap().unwrap();
         let (at, snap) = r.checkpoint.expect("checkpointed");
@@ -293,7 +314,7 @@ mod tests {
     #[test]
     fn mispositioned_checkpoint_is_refused() {
         let j = SessionJournal::with_checkpoints(2);
-        j.record(1, &[1, 2, 3], 1.0);
+        j.record(1, &[1, 2, 3], 1.0, SessionMode::default());
         j.checkpoint(1, &cache_with(2)); // cache behind the stream
         let r = j.restore_for(1, 1.0).unwrap().unwrap();
         assert!(r.checkpoint.is_none(), "stale-length snapshot refused");
@@ -303,9 +324,21 @@ mod tests {
     }
 
     #[test]
+    fn mode_round_trips_through_restore() {
+        let j = SessionJournal::new();
+        let causal = SessionMode::Causal { window: Some(8) };
+        j.record(1, &[1, 2], 1.0, causal);
+        j.record(2, &[3], 1.0, SessionMode::default());
+        let r1 = j.restore_for(1, 1.0).unwrap().unwrap();
+        assert_eq!(r1.mode, causal, "causal session restores causal");
+        let r2 = j.restore_for(2, 1.0).unwrap().unwrap();
+        assert_eq!(r2.mode, SessionMode::Bidirectional);
+    }
+
+    #[test]
     fn zero_period_never_wants_checkpoints() {
         let j = SessionJournal::new();
-        j.record(1, &[1, 2, 3, 4, 5], 1.0);
+        j.record(1, &[1, 2, 3, 4, 5], 1.0, SessionMode::default());
         assert!(!j.wants_checkpoint(1));
     }
 }

@@ -14,15 +14,29 @@
 //!   context).
 //! * [`cache::KvCache`] — one session's `layers × heads` grid of
 //!   `HeadKv`s (per-head `Mutex`es: disjoint parallel decode).
+//! * [`cache::SessionMode`] — how a session attends: the default
+//!   bidirectional mode (O(nb²) θ, pinned against
+//!   `hdp_head_reference`) or the explicitly-selected causal/windowed
+//!   mode (row-only O(nb) θ, pinned against
+//!   [`crate::attention::hdp::hdp_causal_reference`]). Fixed at the
+//!   session's first request; a later step naming the wrong mode is
+//!   refused with a typed reason before any mutation.
 //! * [`store::SessionStore`] — session id → cache, page-denominated
 //!   capacity accounting, the per-session committed stream position
 //!   ([`store::SessionStore::expected_pos`] — what server-side gap
 //!   detection validates against), and the pluggable
-//!   [`store::EvictionPolicy`] (LRU by default). Eviction drops pages,
-//!   never history: an evicted session decodes from scratch on its
-//!   next step, bitwise unchanged. Checkout hands out `Arc`'d caches
-//!   so a whole batch of sessions is held concurrently during the
-//!   batched decode fan-out.
+//!   [`store::EvictionPolicy`] (LRU by default; [`store::
+//!   LargestFirstPolicy`] and [`store::TtlPolicy`] are the cost-aware
+//!   alternatives — policies rank a store-built candidate slice that
+//!   already excludes checked-out sessions, so no policy can starve
+//!   under concurrent checkout). Eviction drops pages, never history:
+//!   an evicted session decodes from scratch on its next step, bitwise
+//!   unchanged — unless a [`store::SpillTier`] is attached, in which
+//!   case eviction *spills* the victim's pages (θ rows included) to
+//!   the slow tier and a later checkout *restores* them, replaying
+//!   only the suffix. Checkout hands out `Arc`'d caches so a whole
+//!   batch of sessions is held concurrently during the batched decode
+//!   fan-out.
 //!
 //! * [`journal::SessionJournal`] — the fleet-wide availability layer:
 //!   per-session committed token streams (plus optional θ/KV
@@ -47,6 +61,9 @@ pub mod cache;
 pub mod journal;
 pub mod store;
 
-pub use cache::{HeadKv, KvCache, TokenRow};
+pub use cache::{HeadKv, KvCache, SessionMode, TokenRow};
 pub use journal::{JournalStats, SessionJournal, SessionRestore};
-pub use store::{EvictionPolicy, KvCacheConfig, LruPolicy, SessionStore, StoreStats};
+pub use store::{
+    EvictionCandidate, EvictionPolicy, InMemorySpillTier, KvCacheConfig, LargestFirstPolicy,
+    LruPolicy, SessionStore, SpillStats, SpillTier, StoreStats, TtlPolicy,
+};

@@ -1,5 +1,7 @@
 //! Session-keyed store over the per-session [`KvCache`]s, with
-//! explicit capacity accounting and a pluggable eviction policy.
+//! explicit capacity accounting, a pluggable eviction policy, and an
+//! optional spill tier — the first rung of a production KV memory
+//! hierarchy.
 //!
 //! The store is the serving engine's view of decode state: `checkout`
 //! a session before a decode step (creating or rebuilding its cache as
@@ -20,16 +22,38 @@
 //! Capacity is counted in **pages** (the [`KvCache`] allocation unit)
 //! across every cached session; the unit is what a real paged-KV
 //! serving system budgets, and it makes the eviction trigger exact
-//! rather than token-approximate. The policy decides *who* goes —
-//! [`LruPolicy`] (least recently `checkout`ed) is the default; the
-//! [`EvictionPolicy`] trait keeps the decision separable from the
-//! bookkeeping so cost-aware policies (largest-first, TTL) can slot in
-//! without touching the store.
+//! rather than token-approximate.
+//!
+//! **Who goes** is the policy's call, but on the store's terms: each
+//! round of budget enforcement the store builds a slice of
+//! [`EvictionCandidate`]s — every session *except* the one being
+//! served, sessions whose cache is checked out elsewhere (`Arc` held
+//! outside the store), and sessions with no pages to free — and the
+//! [`EvictionPolicy`] only *ranks* that slice. Policies therefore
+//! cannot starve the budget loop or evict a cache that a concurrent
+//! batch is decoding into, no matter how they order candidates.
+//! [`LruPolicy`] (least recently `checkout`ed) is the default;
+//! [`LargestFirstPolicy`] (most pages freed per eviction) and
+//! [`TtlPolicy`] (idle-expiry with an LRU fallback) are the cost-aware
+//! alternatives.
+//!
+//! **Where the pages go** is the [`SpillTier`]'s call: with a tier
+//! attached ([`SessionStore::attach_spill_tier`]), eviction *spills*
+//! the victim's full snapshot — KV pages plus θ state, row-only in
+//! causal mode — to the slow tier instead of discarding it, and the
+//! session's next `checkout` *restores* the snapshot and replays only
+//! whatever suffix committed after the spill. Restore-from-tier and
+//! decode-from-scratch are bitwise interchangeable (the snapshot is a
+//! verbatim deep copy of state that is itself pinned bitwise against
+//! full recompute), so the tier, like eviction, is purely a
+//! performance event. Spilled pages are *not* charged against the
+//! budget; [`SpillStats`] counts spills/restores and nominal bytes
+//! moved for the serving metrics.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use super::cache::KvCache;
+use super::cache::{KvCache, SessionMode};
 
 /// Geometry + budget of a session store: the per-head cache shape
 /// (mirroring the engine's native model geometry, `d_v == d_head`
@@ -47,51 +71,164 @@ pub struct KvCacheConfig {
     pub capacity_pages: usize,
 }
 
-/// Who to evict when the page budget is exceeded. The store calls
-/// `touch` on every checkout, `forget` when a session's pages are
-/// dropped, and `victim` (excluding the session being served) until
-/// the budget holds. Implementations only rank sessions; the store
-/// owns all state mutation.
-pub trait EvictionPolicy: Send + std::fmt::Debug {
-    /// `session` was just used — most recently used from now on.
-    fn touch(&mut self, session: u64);
-    /// `session`'s pages were dropped; stop tracking it.
-    fn forget(&mut self, session: u64);
-    /// Next victim among tracked sessions, never `keep`. `None` means
-    /// nothing (else) is evictable.
-    fn victim(&mut self, keep: u64) -> Option<u64>;
+impl KvCacheConfig {
+    /// Nominal payload of one page: `page_tokens` rows of iq/ik/fk
+    /// (`d_head` lanes each) and v (`d_v` lanes) on the f32 grid. Used
+    /// to denominate spill/restore traffic in bytes for the metrics —
+    /// a fixed per-page figure, so byte counters stay exact multiples
+    /// of page moves.
+    pub fn page_bytes(&self) -> usize {
+        self.page_tokens * (3 * self.d_head + self.d_v) * std::mem::size_of::<f32>()
+    }
 }
 
-/// Least-recently-used: a logical clock stamped per touch; the victim
-/// is the smallest stamp.
-#[derive(Debug, Default)]
-pub struct LruPolicy {
-    clock: u64,
-    stamp: HashMap<u64, u64>,
+/// One evictable session as the store presents it to the policy: the
+/// stable id, the pages an eviction would free, and the logical-clock
+/// stamp of its last `checkout`/`adopt` (the store's clock ticks once
+/// per touch; larger = more recent). The store pre-filters the slice —
+/// the session being served, `Arc`-held (checked-out) caches, and
+/// pageless sessions never appear — so any ranking over it is safe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EvictionCandidate {
+    pub session: u64,
+    pub pages: usize,
+    pub last_touch: u64,
 }
+
+/// Ranks eviction candidates when the page budget is exceeded. The
+/// store owns all state and bookkeeping: it builds the candidate
+/// slice (already excluding the served session, checked-out caches,
+/// and pageless entries), passes its logical clock as `now`, and
+/// evicts whichever candidate the policy names — one per round, until
+/// the budget holds or the slice is empty. Policies are pure ranking
+/// functions over the slice, which is what makes them starvation-free
+/// under concurrent checkout by construction.
+pub trait EvictionPolicy: Send + std::fmt::Debug {
+    /// The victim among `candidates`, or `None` to decline (the store
+    /// stops evicting this round). `now` is the store's logical clock
+    /// — the same units as [`EvictionCandidate::last_touch`].
+    fn select(&self, now: u64, candidates: &[EvictionCandidate]) -> Option<u64>;
+}
+
+/// Least-recently-used: the candidate with the smallest touch stamp.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LruPolicy;
 
 impl LruPolicy {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl EvictionPolicy for LruPolicy {
+    fn select(&self, _now: u64, candidates: &[EvictionCandidate]) -> Option<u64> {
+        candidates.iter().min_by_key(|c| c.last_touch).map(|c| c.session)
+    }
+}
+
+/// Cost-aware largest-first: evict the candidate freeing the most
+/// pages, so the budget closes in the fewest evictions (each one may
+/// cost a future rebuild or restore). Ties break toward the *least*
+/// recently used, i.e. LRU among equals.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LargestFirstPolicy;
+
+impl LargestFirstPolicy {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl EvictionPolicy for LargestFirstPolicy {
+    fn select(&self, _now: u64, candidates: &[EvictionCandidate]) -> Option<u64> {
+        candidates
+            .iter()
+            // Max by pages; on equal pages the *older* stamp wins the
+            // comparison (reversed order), so `max_by` lands on it.
+            .max_by(|a, b| {
+                a.pages
+                    .cmp(&b.pages)
+                    .then(b.last_touch.cmp(&a.last_touch))
+            })
+            .map(|c| c.session)
+    }
+}
+
+/// Time-to-live in logical-clock ticks (one tick per store touch, so
+/// deterministic and simulation-friendly): a candidate is *expired*
+/// once it has sat idle for more than `ttl` ticks, and the oldest
+/// expired candidate goes first. When nothing has expired the policy
+/// **falls back to LRU** rather than declining — the budget is a hard
+/// bound and must still close; TTL only changes who pays, preferring
+/// provably idle sessions when they exist.
+#[derive(Debug, Clone, Copy)]
+pub struct TtlPolicy {
+    ttl: u64,
+}
+
+impl TtlPolicy {
+    pub fn new(ttl: u64) -> Self {
+        assert!(ttl > 0, "zero TTL is plain LRU; use LruPolicy");
+        Self { ttl }
+    }
+}
+
+impl EvictionPolicy for TtlPolicy {
+    fn select(&self, now: u64, candidates: &[EvictionCandidate]) -> Option<u64> {
+        candidates
+            .iter()
+            .filter(|c| now.saturating_sub(c.last_touch) > self.ttl)
+            .min_by_key(|c| c.last_touch)
+            .or_else(|| candidates.iter().min_by_key(|c| c.last_touch))
+            .map(|c| c.session)
+    }
+}
+
+/// A slower, larger memory tier that evicted sessions' page state can
+/// move to instead of being discarded. Implementations store verbatim
+/// [`KvCache`] snapshots keyed by session — KV pages *and* θ state
+/// (row-only in causal mode), so a restore resumes incremental decode
+/// exactly where the spill left it, bitwise. The store drives both
+/// directions: eviction under page pressure calls `spill`, the
+/// session's next checkout calls `restore` (which removes the
+/// snapshot — the tier never holds a stale copy of a resident
+/// session).
+pub trait SpillTier: Send + std::fmt::Debug {
+    /// Persist `snapshot` for `session`, replacing any earlier spill.
+    fn spill(&mut self, session: u64, snapshot: KvCache);
+    /// Remove and return the spilled snapshot, if one exists.
+    fn restore(&mut self, session: u64) -> Option<KvCache>;
+    /// Sessions currently resident in the tier.
+    fn spilled(&self) -> usize;
+}
+
+/// Default slow tier: an in-process map. Stands in for host RAM
+/// behind an accelerator's HBM — the latency gap is real in
+/// production but the *protocol* (what moves, when, and the bitwise
+/// restore guarantee) is identical, which is what the conformance
+/// suites pin.
+#[derive(Debug, Default)]
+pub struct InMemorySpillTier {
+    slots: HashMap<u64, KvCache>,
+}
+
+impl InMemorySpillTier {
     pub fn new() -> Self {
         Self::default()
     }
 }
 
-impl EvictionPolicy for LruPolicy {
-    fn touch(&mut self, session: u64) {
-        self.clock += 1;
-        self.stamp.insert(session, self.clock);
+impl SpillTier for InMemorySpillTier {
+    fn spill(&mut self, session: u64, snapshot: KvCache) {
+        self.slots.insert(session, snapshot);
     }
 
-    fn forget(&mut self, session: u64) {
-        self.stamp.remove(&session);
+    fn restore(&mut self, session: u64) -> Option<KvCache> {
+        self.slots.remove(&session)
     }
 
-    fn victim(&mut self, keep: u64) -> Option<u64> {
-        self.stamp
-            .iter()
-            .filter(|(s, _)| **s != keep)
-            .min_by_key(|(_, stamp)| **stamp)
-            .map(|(s, _)| *s)
+    fn spilled(&self) -> usize {
+        self.slots.len()
     }
 }
 
@@ -111,6 +248,14 @@ struct SessionEntry {
     /// walking every cached session's per-head locks on the per-token
     /// hot path.
     pages: usize,
+    /// Logical-clock stamp of the last `checkout`/`adopt` — the
+    /// recency signal every [`EvictionPolicy`] ranks on.
+    last_touch: u64,
+    /// How this session attends, fixed at first sight. Cache
+    /// allocations (fresh or rebuilt) always use it, and the engine
+    /// refuses any later step naming a different mode before touching
+    /// state.
+    mode: SessionMode,
 }
 
 /// Store-lifetime counters the serving metrics surface.
@@ -124,6 +269,17 @@ pub struct StoreStats {
     pub adoptions: u64,
 }
 
+/// Spill-tier traffic counters: how many sessions moved each way and
+/// the nominal bytes (pages × [`KvCacheConfig::page_bytes`]) they
+/// carried. Zero whenever no tier is attached.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpillStats {
+    pub spills: u64,
+    pub restores: u64,
+    pub bytes_spilled: u64,
+    pub bytes_restored: u64,
+}
+
 /// Session id → cache, plus the eviction machinery. See the module
 /// docs for the checkout/commit protocol.
 #[derive(Debug)]
@@ -131,13 +287,19 @@ pub struct SessionStore {
     cfg: KvCacheConfig,
     sessions: HashMap<u64, SessionEntry>,
     policy: Box<dyn EvictionPolicy>,
+    spill: Option<Box<dyn SpillTier>>,
     stats: StoreStats,
+    spill_stats: SpillStats,
     /// Σ of every entry's committed `pages` — the O(1) budget check.
+    /// Spilled sessions charge nothing here.
     charged_pages: usize,
+    /// Logical clock: one tick per `checkout`/`adopt`. Denominates
+    /// [`EvictionCandidate::last_touch`] and [`TtlPolicy`] idle time.
+    clock: u64,
 }
 
 impl SessionStore {
-    /// Store with the default [`LruPolicy`].
+    /// Store with the default [`LruPolicy`] and no spill tier.
     pub fn new(cfg: KvCacheConfig) -> Self {
         Self::with_policy(cfg, Box::new(LruPolicy::new()))
     }
@@ -148,9 +310,27 @@ impl SessionStore {
             cfg,
             sessions: HashMap::new(),
             policy,
+            spill: None,
             stats: StoreStats::default(),
+            spill_stats: SpillStats::default(),
             charged_pages: 0,
+            clock: 0,
         }
+    }
+
+    /// Swap the eviction policy. Policies are pure rankings over
+    /// store-built candidate slices, so swapping mid-life is safe —
+    /// the next budget round simply ranks differently.
+    pub fn set_policy(&mut self, policy: Box<dyn EvictionPolicy>) {
+        self.policy = policy;
+    }
+
+    /// Attach (or replace) the slow tier evictions spill to. Sessions
+    /// already spilled to a previous tier are lost to the store —
+    /// their next checkout falls back to decode-from-scratch, which
+    /// is bitwise identical anyway.
+    pub fn attach_spill_tier(&mut self, tier: Box<dyn SpillTier>) {
+        self.spill = Some(tier);
     }
 
     pub fn config(&self) -> KvCacheConfig {
@@ -159,6 +339,16 @@ impl SessionStore {
 
     pub fn stats(&self) -> StoreStats {
         self.stats
+    }
+
+    pub fn spill_stats(&self) -> SpillStats {
+        self.spill_stats
+    }
+
+    /// Sessions currently resident in the attached spill tier (0
+    /// without one).
+    pub fn spilled_sessions(&self) -> usize {
+        self.spill.as_ref().map_or(0, |t| t.spilled())
     }
 
     /// Sessions known to the store (cached or evicted).
@@ -184,6 +374,15 @@ impl SessionStore {
         self.sessions.get(&session).map_or(0, |e| e.history.len())
     }
 
+    /// The attention mode a session was opened with (`None` for a
+    /// session the store has never seen). This is what the engine's
+    /// validate-before-mutate step checks a decode request's claimed
+    /// mode against: a mismatch is refused with a typed reason before
+    /// any state — cache, history, journal — is touched.
+    pub fn mode_of(&self, session: u64) -> Option<SessionMode> {
+        self.sessions.get(&session).map(|e| e.mode)
+    }
+
     /// The stream position the server expects a session's next decode
     /// step to append at — its committed context length (0 for a
     /// session the store has never seen). This is the per-session
@@ -196,27 +395,60 @@ impl SessionStore {
         self.history_len(session)
     }
 
-    /// Check a session out for a decode step: touches the eviction
-    /// policy, creates the session on first sight, and — when the
-    /// session was evicted — allocates a fresh cache and returns the
-    /// committed history the caller must replay through the decode
-    /// path before appending new tokens (decode-from-scratch). The
+    /// [`Self::checkout_mode`] with the session's recorded mode (or
+    /// the default for a first sight) — the path for callers that
+    /// already validated the request mode, and for rebuild-only flows
+    /// like failover replay.
+    pub fn checkout(&mut self, session: u64) -> (Arc<KvCache>, Vec<i32>) {
+        let mode = self.mode_of(session).unwrap_or_default();
+        self.checkout_mode(session, mode)
+    }
+
+    /// Check a session out for a decode step: touches the recency
+    /// clock, creates the session on first sight (fixing `mode` for
+    /// its lifetime), and — when the session was evicted — restores
+    /// its snapshot from the spill tier if one is resident, else
+    /// allocates a fresh cache. Either way the caller gets back the
+    /// committed history the cache is missing and must replay through
+    /// the decode path before appending new tokens (empty for a warm
+    /// or fully-restored cache; everything for decode-from-scratch;
+    /// the suffix past a checkpoint or spill point otherwise — all
+    /// bitwise identical, because incremental decode equals full
+    /// recompute at every step and spill snapshots are verbatim). The
     /// cache comes back as an [`Arc`] clone, so a batched decode can
     /// check out every session in its batch up front, drop the store
     /// lock for the kernel fan-out, and `commit` afterwards — the
     /// per-head `Mutex`es inside [`KvCache`] keep concurrent
-    /// multi-session work sound without the store in the loop.
-    pub fn checkout(&mut self, session: u64) -> (Arc<KvCache>, Vec<i32>) {
+    /// multi-session work sound without the store in the loop, and an
+    /// outstanding `Arc` also shields the session from eviction.
+    pub fn checkout_mode(
+        &mut self,
+        session: u64,
+        mode: SessionMode,
+    ) -> (Arc<KvCache>, Vec<i32>) {
         if !self.sessions.contains_key(&session) {
             self.sessions.insert(
                 session,
-                SessionEntry { history: Vec::new(), cache: None, pages: 0 },
+                SessionEntry {
+                    history: Vec::new(),
+                    cache: None,
+                    pages: 0,
+                    last_touch: 0,
+                    mode,
+                },
             );
             self.stats.sessions_created += 1;
         }
-        self.policy.touch(session);
+        self.clock += 1;
         let cfg = self.cfg;
+        let page_bytes = cfg.page_bytes();
+        let now = self.clock;
         let entry = self.sessions.get_mut(&session).expect("just ensured");
+        entry.last_touch = now;
+        debug_assert_eq!(
+            entry.mode, mode,
+            "mode mismatches are refused by the engine before checkout"
+        );
         // A cache holding *more* tokens than the committed history can
         // only mean a step appended but never committed (an
         // interrupted serve); the prefix property is gone, so drop it
@@ -232,22 +464,38 @@ impl SessionStore {
             entry.cache = None;
         }
         if entry.cache.is_none() {
-            entry.cache = Some(Arc::new(KvCache::new(
+            // Evicted: prefer restoring the spilled snapshot over
+            // decoding from scratch. The snapshot re-charges its pages
+            // (commit re-enforces the budget); a snapshot that somehow
+            // outran the committed history is discarded — the prefix
+            // property is the correctness line.
+            if let Some(tier) = self.spill.as_mut() {
+                if let Some(snap) = tier.restore(session) {
+                    if snap.len() <= entry.history.len() && snap.mode() == entry.mode {
+                        self.spill_stats.restores += 1;
+                        self.spill_stats.bytes_restored +=
+                            (snap.pages() * page_bytes) as u64;
+                        let cache = Arc::new(snap);
+                        self.charged_pages += cache.pages();
+                        entry.pages = cache.pages();
+                        entry.cache = Some(cache);
+                    }
+                }
+            }
+        }
+        if entry.cache.is_none() {
+            entry.cache = Some(Arc::new(KvCache::with_mode(
                 cfg.n_layers,
                 cfg.n_heads,
                 cfg.d_head,
                 cfg.d_v,
                 cfg.block,
                 cfg.page_tokens,
+                entry.mode,
             )));
         }
         let cache = entry.cache.as_ref().expect("just ensured");
         // Replay whatever committed history the cache is missing.
-        // Covers the full spectrum with one rule: a warm cache replays
-        // nothing, an evicted session replays everything, and a
-        // checkpoint-seeded cache (see `adopt`) replays only the
-        // suffix past the checkpoint — all bitwise identical, because
-        // incremental decode equals full recompute at every step.
         let cached = cache.len();
         let replay = if cached < entry.history.len() {
             self.stats.rebuilds += 1;
@@ -266,16 +514,29 @@ impl SessionStore {
     /// least as long is untouched (the journal can never be *behind*
     /// a correct lane — commits reach it before responses exist); a
     /// shorter local prefix keeps its cache (append-only streams make
-    /// any prefix consistent) and just extends the history.
+    /// any prefix consistent) and just extends the history. `mode` is
+    /// the journaled session mode — it fixes the mode of a session
+    /// the store has never seen, exactly like a first checkout.
     pub fn adopt(
         &mut self,
         session: u64,
+        mode: SessionMode,
         tokens: &[i32],
         checkpoint: Option<(usize, &KvCache)>,
     ) {
-        let entry = self.sessions.entry(session).or_insert_with(|| {
-            SessionEntry { history: Vec::new(), cache: None, pages: 0 }
+        self.clock += 1;
+        let now = self.clock;
+        let entry = self.sessions.entry(session).or_insert_with(|| SessionEntry {
+            history: Vec::new(),
+            cache: None,
+            pages: 0,
+            last_touch: 0,
+            mode,
         });
+        debug_assert_eq!(
+            entry.mode, mode,
+            "journal and store must agree on a session's mode"
+        );
         if entry.history.len() >= tokens.len() {
             return;
         }
@@ -285,6 +546,7 @@ impl SessionStore {
             "journal must extend the local stream, never contradict it"
         );
         entry.history = tokens.to_vec();
+        entry.last_touch = now;
         if entry.cache.is_none() {
             if let Some((at, snap)) = checkpoint {
                 if at <= tokens.len() && at == snap.len() {
@@ -296,7 +558,6 @@ impl SessionStore {
             }
         }
         self.stats.adoptions += 1;
-        self.policy.touch(session);
         // A checkpoint's pages count against the budget like any other
         // resident state; shed colder sessions if it overflowed.
         self.enforce_budget(session);
@@ -304,23 +565,54 @@ impl SessionStore {
 
     fn enforce_budget(&mut self, keep: u64) {
         while self.charged_pages > self.cfg.capacity_pages {
-            let victim = match self.policy.victim(keep) {
+            // Rebuilt every round: an eviction changes the slice, and
+            // `Arc::strong_count == 1` (only the store's handle) is
+            // what guarantees no checked-out cache is ever a
+            // candidate — the engine holds its `Arc` from checkout
+            // until after commit.
+            let candidates: Vec<EvictionCandidate> = self
+                .sessions
+                .iter()
+                .filter(|(s, e)| {
+                    **s != keep
+                        && e.pages > 0
+                        && e.cache
+                            .as_ref()
+                            .is_some_and(|c| Arc::strong_count(c) == 1)
+                })
+                .map(|(s, e)| EvictionCandidate {
+                    session: *s,
+                    pages: e.pages,
+                    last_touch: e.last_touch,
+                })
+                .collect();
+            if candidates.is_empty() {
+                break; // nothing (else) evictable: let it run
+            }
+            let victim = match self.policy.select(self.clock, &candidates) {
                 Some(v) => v,
-                None => break, // nothing (else) evictable: let it run
+                None => break, // policy declined
             };
-            self.policy.forget(victim);
-            if let Some(e) = self.sessions.get_mut(&victim) {
-                if e.cache.take().is_some() {
-                    self.charged_pages -= e.pages;
-                    e.pages = 0;
-                    self.stats.evictions += 1;
-                }
+            if !candidates.iter().any(|c| c.session == victim) {
+                break; // defensive: a policy may only pick candidates
+            }
+            let page_bytes = self.cfg.page_bytes();
+            let entry = self.sessions.get_mut(&victim).expect("candidate exists");
+            let cache = entry.cache.take().expect("candidates are cached");
+            self.charged_pages -= entry.pages;
+            entry.pages = 0;
+            self.stats.evictions += 1;
+            if let Some(tier) = self.spill.as_mut() {
+                let snap = cache.snapshot();
+                self.spill_stats.spills += 1;
+                self.spill_stats.bytes_spilled += (snap.pages() * page_bytes) as u64;
+                tier.spill(victim, snap);
             }
         }
     }
 
     /// Record tokens appended to a checked-out session and enforce the
-    /// page budget, evicting least-recently-used *other* sessions until
+    /// page budget, evicting *other* sessions (per the policy) until
     /// it holds (the active session is never evicted under itself —
     /// a single oversized session may exceed the budget alone).
     pub fn commit(&mut self, session: u64, appended: &[i32]) {
@@ -363,6 +655,23 @@ mod tests {
         }
     }
 
+    /// A token-indexed row with distinct values per position, so
+    /// bitwise payload comparisons actually discriminate.
+    fn vrow(t: usize) -> TokenRow {
+        let f = |k: usize| ((t * 31 + k * 7) % 13) as f32 - 6.0;
+        TokenRow {
+            iq: (0..4).map(f).collect(),
+            fq: (4..8).map(f).collect(),
+            ik: (8..12).map(f).collect(),
+            fk: (12..16).map(f).collect(),
+            v: (16..20).map(f).collect(),
+        }
+    }
+
+    fn cand(session: u64, pages: usize, last_touch: u64) -> EvictionCandidate {
+        EvictionCandidate { session, pages, last_touch }
+    }
+
     /// Append `n` tokens to every head of `session` and commit them.
     fn grow(store: &mut SessionStore, session: u64, n: usize) {
         let (cache, replay) = store.checkout(session);
@@ -370,23 +679,42 @@ mod tests {
         for _ in 0..n {
             cache.head(0, 0).lock().unwrap().append(&row());
         }
+        drop(cache);
         store.commit(session, &vec![7i32; n]);
     }
 
     #[test]
-    fn lru_policy_orders_by_recency() {
-        let mut p = LruPolicy::new();
-        p.touch(1);
-        p.touch(2);
-        p.touch(3);
-        p.touch(1); // 2 is now the oldest
-        assert_eq!(p.victim(99), Some(2));
-        assert_eq!(p.victim(2), Some(3), "excluded session skipped");
-        p.forget(2);
-        assert_eq!(p.victim(99), Some(3));
-        p.forget(3);
-        p.forget(1);
-        assert_eq!(p.victim(99), None, "nothing tracked");
+    fn lru_policy_picks_smallest_stamp() {
+        let p = LruPolicy::new();
+        let c = [cand(1, 2, 30), cand(2, 9, 10), cand(3, 1, 20)];
+        assert_eq!(p.select(31, &c), Some(2));
+        assert_eq!(p.select(31, &[]), None, "empty slice: nothing evictable");
+    }
+
+    #[test]
+    fn largest_first_picks_most_pages_ties_by_age() {
+        let p = LargestFirstPolicy::new();
+        let c = [cand(1, 2, 30), cand(2, 9, 10), cand(3, 9, 5), cand(4, 1, 1)];
+        // 2 and 3 tie on pages; 3 is older (stamp 5 < 10).
+        assert_eq!(p.select(31, &c), Some(3));
+        assert_eq!(p.select(31, &[cand(7, 4, 2)]), Some(7));
+        assert_eq!(p.select(31, &[]), None);
+    }
+
+    #[test]
+    fn ttl_policy_expired_oldest_then_lru_fallback() {
+        let p = TtlPolicy::new(10);
+        let c = [cand(1, 2, 5), cand(2, 9, 90), cand(3, 1, 50)];
+        // now=95: sessions 1 (idle 90) and 3 (idle 45) are expired;
+        // the oldest expired goes first.
+        assert_eq!(p.select(95, &c), Some(1));
+        // now=58: only session 1 is expired (idle 53 > 10).
+        assert_eq!(p.select(58, &c), Some(1));
+        // now=12: nothing expired (idle ≤ 10) → LRU fallback, budget
+        // still closes.
+        assert_eq!(p.select(12, &c), Some(1));
+        let fresh = [cand(4, 3, 11), cand(5, 1, 12)];
+        assert_eq!(p.select(13, &fresh), Some(4), "fallback is pure LRU");
     }
 
     #[test]
@@ -423,6 +751,49 @@ mod tests {
         grow(&mut store, 6, 2);
         assert_eq!(store.stats().evictions, 1);
         assert_eq!(store.total_pages(), 1);
+    }
+
+    #[test]
+    fn checked_out_sessions_are_never_evicted() {
+        // Session 1 is the LRU victim on paper, but its cache is
+        // checked out (Arc held outside the store) — the candidate
+        // filter must skip it and evict session 2 instead, for every
+        // policy (the filter is store-side, policy-agnostic).
+        let policies: [Box<dyn EvictionPolicy>; 3] = [
+            Box::new(LruPolicy::new()),
+            Box::new(LargestFirstPolicy::new()),
+            Box::new(TtlPolicy::new(1)),
+        ];
+        for policy in policies {
+            let mut store = SessionStore::with_policy(cfg(4), policy);
+            grow(&mut store, 1, 4);
+            let (held, _) = store.checkout(1);
+            grow(&mut store, 2, 4);
+            grow(&mut store, 3, 2); // overflow: must evict someone
+            assert_eq!(store.stats().evictions, 1);
+            let (_, r1) = store.checkout(1);
+            assert!(r1.is_empty(), "held session kept its pages");
+            let (_, r2) = store.checkout(2);
+            assert_eq!(r2.len(), 4, "unheld session paid instead");
+            drop(held);
+        }
+    }
+
+    #[test]
+    fn largest_first_store_frees_budget_in_one_eviction() {
+        let mut store =
+            SessionStore::with_policy(cfg(6), Box::new(LargestFirstPolicy::new()));
+        grow(&mut store, 1, 2); // 1 page, oldest
+        grow(&mut store, 2, 8); // 4 pages
+        grow(&mut store, 3, 4); // 2 pages → 7 > 6
+        // LRU would evict session 1 (freeing 1 page) and then need a
+        // second victim; largest-first takes session 2 and is done.
+        assert_eq!(store.stats().evictions, 1);
+        assert!(store.total_pages() <= 6);
+        let (_, r1) = store.checkout(1);
+        assert!(r1.is_empty(), "small old session survives");
+        let (_, r2) = store.checkout(2);
+        assert_eq!(r2.len(), 8, "largest session was evicted");
     }
 
     #[test]
@@ -465,6 +836,7 @@ mod tests {
         for _ in 0..replay.len() + n {
             cache.head(0, 0).lock().unwrap().append(&row());
         }
+        drop(cache);
         store.commit(session, &vec![7i32; n]);
     }
 
@@ -510,6 +882,124 @@ mod tests {
     }
 
     #[test]
+    fn mode_fixed_at_first_sight_and_survives_eviction() {
+        let mode = SessionMode::Causal { window: Some(4) };
+        let mut store = SessionStore::new(cfg(2));
+        assert_eq!(store.mode_of(7), None);
+        let (cache, replay) = store.checkout_mode(7, mode);
+        assert!(replay.is_empty());
+        assert_eq!(cache.mode(), mode, "cache allocated in session mode");
+        assert_eq!(store.mode_of(7), Some(mode));
+        for _ in 0..4 {
+            cache.head(0, 0).lock().unwrap().append(&row());
+        }
+        drop(cache);
+        store.commit(7, &[7; 4]);
+        // Plain checkout resolves the recorded mode.
+        let (again, _) = store.checkout(7);
+        assert_eq!(again.mode(), mode);
+        drop(again);
+        // Eviction + rebuild must re-allocate in the *session's* mode,
+        // not the default.
+        grow(&mut store, 8, 4); // budget 2: session 7 evicted
+        assert!(store.stats().evictions >= 1);
+        let (fresh, replay) = store.checkout(7);
+        assert_eq!(fresh.mode(), mode, "rebuilt cache keeps the mode");
+        assert_eq!(replay.len(), 4);
+    }
+
+    #[test]
+    fn spilled_session_restores_without_replay() {
+        let mut store = SessionStore::new(cfg(4));
+        store.attach_spill_tier(Box::new(InMemorySpillTier::new()));
+        grow(&mut store, 1, 4);
+        grow(&mut store, 2, 4);
+        grow(&mut store, 3, 2); // evicts session 1 → spilled, not lost
+        assert_eq!(store.stats().evictions, 1);
+        assert_eq!(store.spill_stats().spills, 1);
+        assert_eq!(store.spilled_sessions(), 1);
+        let want_bytes = (2 * store.config().page_bytes()) as u64;
+        assert_eq!(store.spill_stats().bytes_spilled, want_bytes);
+        // Checkout restores the snapshot: no replay, pages re-charged,
+        // tier slot consumed, and crucially *not* a rebuild.
+        let (cache, replay) = store.checkout(1);
+        assert!(replay.is_empty(), "restored cache is already complete");
+        assert_eq!(cache.len(), 4);
+        assert_eq!(store.spill_stats().restores, 1);
+        assert_eq!(store.spill_stats().bytes_restored, want_bytes);
+        assert_eq!(store.spilled_sessions(), 0);
+        assert_eq!(store.stats().rebuilds, 0, "restore is not a rebuild");
+    }
+
+    #[test]
+    fn restore_matches_journal_replay_bitwise() {
+        // The spill tier's core guarantee: restoring a snapshot and
+        // replaying the history from scratch land on bitwise-identical
+        // KV payloads.
+        let n = 6;
+        let mut spilled = SessionStore::new(cfg(4));
+        spilled.attach_spill_tier(Box::new(InMemorySpillTier::new()));
+        let mut replayed = SessionStore::new(cfg(4));
+        for store in [&mut spilled, &mut replayed] {
+            let (cache, _) = store.checkout(1);
+            for t in 0..n {
+                cache.head(0, 0).lock().unwrap().append(&vrow(t));
+            }
+            drop(cache);
+            store.commit(1, &vec![7i32; n]);
+            grow(store, 2, 4); // evict session 1 in both stores
+            assert_eq!(store.stats().evictions, 1);
+        }
+        let (ca, ra) = spilled.checkout(1);
+        assert!(ra.is_empty(), "spilled store restores");
+        let (cb, rb) = replayed.checkout(1);
+        assert_eq!(rb.len(), n, "plain store decodes from scratch");
+        for t in 0..n {
+            cb.head(0, 0).lock().unwrap().append(&vrow(t));
+        }
+        let ha = ca.head(0, 0).lock().unwrap();
+        let hb = cb.head(0, 0).lock().unwrap();
+        assert_eq!(ha.len(), hb.len());
+        for j in 0..n {
+            assert_eq!(ha.iq_row(j), hb.iq_row(j), "iq row {j}");
+            assert_eq!(ha.ik_row(j), hb.ik_row(j), "ik row {j}");
+            assert_eq!(ha.fk_row(j), hb.fk_row(j), "fk row {j}");
+            assert_eq!(ha.v_row(j), hb.v_row(j), "v row {j}");
+        }
+    }
+
+    #[test]
+    fn page_accounting_stays_exact_across_spill_and_restore() {
+        // The O(1) `charged_pages` must agree with a live walk after
+        // every operation even when sessions bounce through the spill
+        // tier, and spilled sessions must charge exactly nothing.
+        let mut store = SessionStore::new(cfg(4));
+        store.attach_spill_tier(Box::new(InMemorySpillTier::new()));
+        for (s, n) in [(1u64, 4usize), (2, 4), (1, 2), (3, 4), (2, 2), (1, 1)] {
+            grow_any(&mut store, s, n);
+            let live: usize = store
+                .sessions
+                .values()
+                .filter_map(|e| e.cache.as_ref())
+                .map(|c| c.pages())
+                .sum();
+            assert_eq!(store.total_pages(), live, "after session {s} += {n}");
+            assert!(
+                store
+                    .sessions
+                    .values()
+                    .filter(|e| e.cache.is_none())
+                    .all(|e| e.pages == 0),
+                "evicted/spilled sessions charge nothing"
+            );
+        }
+        let ss = store.spill_stats();
+        assert!(ss.spills > 0, "pressure must have spilled something");
+        assert!(ss.restores > 0, "returning sessions must have restored");
+        assert_eq!(store.stats().rebuilds, 0, "every comeback was a restore");
+    }
+
+    #[test]
     fn adopt_seeds_history_and_suffix_replays_past_checkpoint() {
         // A re-homed session with a checkpoint at 4 of 6 tokens must
         // check out replaying only the 2-token suffix.
@@ -521,7 +1011,7 @@ mod tests {
 
         let mut store = SessionStore::new(c);
         let full: Vec<i32> = vec![7; 6];
-        store.adopt(9, &full, Some((4, &snap)));
+        store.adopt(9, SessionMode::default(), &full, Some((4, &snap)));
         assert_eq!(store.stats().adoptions, 1);
         assert_eq!(store.expected_pos(9), 6);
         let (cache, replay) = store.checkout(9);
@@ -534,7 +1024,7 @@ mod tests {
     #[test]
     fn adopt_without_checkpoint_replays_everything() {
         let mut store = SessionStore::new(cfg(usize::MAX));
-        store.adopt(3, &[1, 2, 3, 4, 5], None);
+        store.adopt(3, SessionMode::default(), &[1, 2, 3, 4, 5], None);
         let (cache, replay) = store.checkout(3);
         assert_eq!(cache.len(), 0);
         assert_eq!(replay, vec![1, 2, 3, 4, 5]);
@@ -546,15 +1036,15 @@ mod tests {
         grow(&mut store, 1, 4);
         // A journal at or behind the local stream is a no-op: the
         // local lane already owns at least this much committed state.
-        store.adopt(1, &[7, 7, 7], None);
-        store.adopt(1, &[7, 7, 7, 7], None);
+        store.adopt(1, SessionMode::default(), &[7, 7, 7], None);
+        store.adopt(1, SessionMode::default(), &[7, 7, 7, 7], None);
         assert_eq!(store.stats().adoptions, 0);
         assert_eq!(store.expected_pos(1), 4);
         let (_, replay) = store.checkout(1);
         assert!(replay.is_empty(), "warm cache untouched by adopt");
         // A longer journal extends the history; the warm cache stays
         // (it is a consistent prefix) and only the gap replays.
-        store.adopt(1, &[7, 7, 7, 7, 9, 9], None);
+        store.adopt(1, SessionMode::default(), &[7, 7, 7, 7, 9, 9], None);
         assert_eq!(store.stats().adoptions, 1);
         let (cache, replay) = store.checkout(1);
         assert_eq!(cache.len(), 4);
@@ -568,10 +1058,11 @@ mod tests {
         grow(&mut donor, 1, 6);
         let (src, _) = donor.checkout(1);
         let snap = src.snapshot(); // 3 pages at 2 tokens/page
+        drop(src);
 
         let mut store = SessionStore::new(cfg(4));
         grow(&mut store, 2, 4); // 2 pages resident
-        store.adopt(1, &vec![7i32; 6], Some((6, &snap)));
+        store.adopt(1, SessionMode::default(), &vec![7i32; 6], Some((6, &snap)));
         // 3 + 2 = 5 pages > budget 4: the colder session 2 is evicted.
         assert_eq!(store.stats().evictions, 1);
         assert!(store.total_pages() <= 4);
@@ -588,6 +1079,7 @@ mod tests {
         grow(&mut store, 1, 2);
         let (cache, _) = store.checkout(1);
         cache.head(0, 0).lock().unwrap().append(&row()); // no commit
+        drop(cache);
         let (fresh, replay) = store.checkout(1);
         assert_eq!(fresh.len(), 0, "tainted cache dropped");
         assert_eq!(replay, vec![7i32; 2], "committed stream replays");

@@ -289,6 +289,37 @@ pub fn cost_decode_head(
     r
 }
 
+/// Causal/windowed variant of [`cost_decode_head`]: the new query row
+/// attends only to the last `window` cached tokens (or all of them
+/// when unbounded), so the visible context — and with it the integer
+/// pass, the θ fold, FUM traffic and `P·V` — clamps to
+/// `min(l, window)`. The quadratic→linear collapse of the cached step
+/// becomes *constant* in total context once the window saturates.
+pub fn cost_decode_head_causal(
+    cfg: &SimConfig,
+    l: usize,
+    window: Option<usize>,
+    dh: usize,
+    kept_density: f32,
+    head_kept: bool,
+    use_ff: bool,
+) -> Report {
+    let visible = window.map_or(l, |w| l.min(w));
+    cost_decode_head(cfg, visible, dh, kept_density, head_kept, use_ff)
+}
+
+/// Cost of moving one session's KV pages (plus θ rows in causal mode)
+/// through the spill tier: a pure DRAM stream in either direction —
+/// no PE/SE compute overlaps it, so the latency is the transfer itself
+/// at DRAM bandwidth. `bytes` is the `SpillStats` byte count for the
+/// spill or restore being modelled.
+pub fn cost_spill_transfer(cfg: &SimConfig, bytes: f64) -> Report {
+    let mut r = Report::default();
+    phase(&mut r, cfg, 0.0, 0.0,
+          Traffic { dram_bytes: bytes, sram_bytes: bytes });
+    r
+}
+
 /// Dense-attention cost of the same head on the same substrate
 /// (no SE, no masks, full-width everything) — the speedup denominator.
 pub fn cost_head_dense(cfg: &SimConfig, l: usize, dh: usize) -> Report {
@@ -439,6 +470,47 @@ mod tests {
         // exact arm costs more
         let ff = cost_decode_head(&cfg, 1024, 32, 0.5, true, true);
         assert!(ff.macs > b.macs && ff.energy_pj > b.energy_pj);
+    }
+
+    #[test]
+    fn causal_decode_cost_saturates_at_the_window() {
+        let cfg = SimConfig::edge();
+        // Unbounded causal = the plain cached step.
+        let unbounded = cost_decode_head_causal(&cfg, 1024, None, 32, 0.5,
+                                                true, false);
+        let plain = cost_decode_head(&cfg, 1024, 32, 0.5, true, false);
+        assert_eq!(unbounded.cycles, plain.cycles);
+        assert_eq!(unbounded.macs, plain.macs);
+        // A 256-token window at 8k context costs exactly the 256-token
+        // step — constant in total context once the window saturates.
+        let w8k = cost_decode_head_causal(&cfg, 8192, Some(256), 32, 0.5,
+                                          true, false);
+        let w32k = cost_decode_head_causal(&cfg, 32768, Some(256), 32, 0.5,
+                                           true, false);
+        let short = cost_decode_head(&cfg, 256, 32, 0.5, true, false);
+        assert_eq!(w8k.cycles, short.cycles);
+        assert_eq!(w32k.cycles, w8k.cycles);
+        assert!(w8k.macs < plain.macs);
+        // A window wider than the context is a no-op clamp.
+        let wide = cost_decode_head_causal(&cfg, 128, Some(4096), 32, 0.5,
+                                           true, false);
+        let exact = cost_decode_head(&cfg, 128, 32, 0.5, true, false);
+        assert_eq!(wide.cycles, exact.cycles);
+    }
+
+    #[test]
+    fn spill_transfer_is_linear_dram_traffic() {
+        let cfg = SimConfig::edge();
+        let one = cost_spill_transfer(&cfg, 1 << 20);
+        let four = cost_spill_transfer(&cfg, 4 << 20);
+        assert_eq!(one.dram_bytes, (1u64 << 20) as f64);
+        assert!(one.cycles > 0.0 && one.energy_pj > 0.0);
+        assert_eq!(one.macs, 0.0);
+        assert!((four.cycles / one.cycles - 4.0).abs() < 1e-9);
+        assert!((four.dram_bytes / one.dram_bytes - 4.0).abs() < 1e-9);
+        let zero = cost_spill_transfer(&cfg, 0.0);
+        assert_eq!(zero.cycles, 0.0);
+        assert_eq!(zero.dram_bytes, 0.0);
     }
 
     #[test]

@@ -24,6 +24,7 @@ pub use accelerator::{estimate_batch, estimate_decode_batch,
                       estimate_layer_dense, estimate_model, run_layer,
                       ChipReport, DecodeProfile, RequestProfile};
 pub use config::{MacKind, SimConfig, Widths, W12, W16};
-pub use core::{cost_decode_head, cost_head, cost_head_dense, run_head,
-               HeadRun, Report};
+pub use core::{cost_decode_head, cost_decode_head_causal, cost_head,
+               cost_head_dense, cost_spill_transfer, run_head, HeadRun,
+               Report};
 pub use sparsity_engine::SparsityEngine;

@@ -19,6 +19,16 @@
 //! next iteration with outputs bitwise identical to the pop-batch
 //! path, under churning membership and eviction pressure alike.
 //!
+//! The `causal_`/`spill_` tests extend the same contract to the
+//! explicitly-selected causal/windowed session mode and the KV spill
+//! tier: causal streams are pinned bitwise against
+//! `hdp_causal_reference` (the causal mode's own executable spec)
+//! across windows × pruning knobs × threads × sticky shards × eviction
+//! pressure; a step naming the wrong mode for an open session is
+//! refused with a typed `RejectReason::ModeMismatch` before any
+//! mutation; and spill/restore through the slow tier is bitwise
+//! interchangeable with decode-from-scratch replay.
+//!
 //! Needs no artifacts: the native backend derives every cached token's
 //! row deterministically from `(token, position, layer, head)`.
 
@@ -26,10 +36,12 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Duration;
 
-use hdp::attention::hdp::hdp_head_reference;
+use hdp::attention::hdp::{hdp_causal_reference, hdp_head_reference};
 use hdp::coordinator::{derive_head_inputs, derive_session_head_inputs,
                        pooled_label, Batcher, Engine, NativeModelConfig,
                        RejectReason, Request, ServeMode, ShardedCoordinator};
+use hdp::session::{InMemorySpillTier, LargestFirstPolicy, SessionMode,
+                   SpillStats};
 use hdp::sim::SimConfig;
 use hdp::util::rng::SplitMix64;
 use hdp::util::threadpool::configured_threads;
@@ -66,6 +78,46 @@ fn decode_reference(engine: &Engine, context: &[i32]) -> DecodeReference {
             let (iq, fq, ik, fk, v) = derive_session_head_inputs(
                 context, layer, head, GEOM.d_head, profile, scale);
             let out = hdp_head_reference(&iq, &fq, &ik, &fk, &v, p);
+            outputs.extend_from_slice(
+                &out.out.data()[(l - 1) * GEOM.d_head..l * GEOM.d_head]);
+            total += 1;
+            pruned += usize::from(!out.head_kept);
+            let br = (l - 1) / p.block;
+            kept += out.mask.row(br).iter().filter(|&&m| m == 1.0).count();
+            blocks += out.mask.cols();
+        }
+    }
+    let label = pooled_label(&outputs);
+    DecodeReference {
+        outputs,
+        label,
+        heads_pruned: pruned,
+        heads_total: total,
+        kept_blocks: kept,
+        blocks_total: blocks,
+    }
+}
+
+/// [`decode_reference`] for a causal/windowed session: the same
+/// per-(layer, head) aggregation, anchored on `hdp_causal_reference` —
+/// the causal mode's own executable spec — full-recomputed over the
+/// session's whole context with the session's window.
+fn causal_decode_reference(
+    engine: &Engine,
+    context: &[i32],
+    window: Option<usize>,
+) -> DecodeReference {
+    let p = engine.native_kernel_params().expect("native engine");
+    let profile = engine.native_profile().expect("native engine");
+    let scale = engine.calibration_scale();
+    let l = context.len();
+    let mut outputs = Vec::new();
+    let (mut pruned, mut total, mut kept, mut blocks) = (0usize, 0usize, 0usize, 0usize);
+    for layer in 0..GEOM.n_layers {
+        for head in 0..GEOM.n_heads {
+            let (iq, fq, ik, fk, v) = derive_session_head_inputs(
+                context, layer, head, GEOM.d_head, profile, scale);
+            let out = hdp_causal_reference(&iq, &fq, &ik, &fk, &v, p, window);
             outputs.extend_from_slice(
                 &out.out.data()[(l - 1) * GEOM.d_head..l * GEOM.d_head]);
             total += 1;
@@ -899,4 +951,420 @@ fn continuous_conformance_matrix_churn_bitwise() {
             }
         }
     }
+}
+
+/// [`check_against_reference`], causal flavor: the want-side is the
+/// causal spec recomputed over the prefix with the session's window.
+fn check_against_causal_reference(
+    eng: &Engine,
+    resp: &hdp::coordinator::Response,
+    prefix: &[i32],
+    window: Option<usize>,
+    label: &str,
+) {
+    let want = causal_decode_reference(eng, prefix, window);
+    assert_eq!(bits(&resp.outputs), bits(&want.outputs), "{label}");
+    assert_eq!(resp.label, want.label, "{label}");
+    assert_eq!(resp.heads_pruned, want.heads_pruned, "{label}");
+    assert_eq!(resp.heads_total, want.heads_total, "{label}");
+    let want_density = want.kept_blocks as f32 / want.blocks_total as f32;
+    assert_eq!(resp.kept_density.to_bits(), want_density.to_bits(), "{label}");
+    assert_eq!(resp.context_len, prefix.len(), "{label}");
+    assert!(!resp.rejected, "{label}");
+    assert_eq!(resp.reason, None, "{label}");
+    assert!(resp.sim_seconds > 0.0, "{label}: sim timing");
+}
+
+#[test]
+fn causal_decode_steps_match_causal_reference_across_matrix() {
+    // The causal conformance matrix: window ∈ {unbounded, biting (4),
+    // wider-than-context (256)} × pruning knobs (tau = 1e9 prunes every
+    // head — the causal early-exit must still produce the reference's
+    // zero rows) × fan-out widths. Every step of every stream — ragged
+    // mid-block prefill included — must be bitwise the *causal*
+    // reference full-recomputed over the prefix, while the
+    // bidirectional suite above keeps pinning the default path to
+    // `hdp_head_reference` untouched.
+    let mut rng = SplitMix64::new(0xCA05A1);
+    for window in [None, Some(4), Some(256)] {
+        for &(rho, tau) in &[(0.0f32, f32::NEG_INFINITY), (0.4, 0.0), (1.0, 1e9)] {
+            for threads in [1usize, 4] {
+                let mode = ServeMode::Hdp { rho, tau, qstep: 1.0 / 4096.0 };
+                let eng = engine(mode, threads, 4);
+                let smode = SessionMode::Causal { window };
+                let label =
+                    format!("w={window:?} rho={rho} tau={tau} threads={threads}");
+                let mut ctx: Vec<i32> = Vec::new();
+                // 5-token (mid-block) prefill + 6 single-token steps:
+                // an 11-token stream, so window 4 genuinely clamps and
+                // window 256 genuinely doesn't.
+                for (i, n) in [5usize, 1, 1, 1, 1, 1, 1].into_iter().enumerate() {
+                    let toks: Vec<i32> = (0..n)
+                        .map(|_| rng.next_below(30_000) as i32)
+                        .collect();
+                    ctx.extend_from_slice(&toks);
+                    let resp = eng
+                        .serve_batch(&[
+                            Request::decode(i as u64, 77, toks).with_mode(smode)
+                        ])
+                        .unwrap()
+                        .remove(0);
+                    assert_eq!(resp.session, Some(77), "{label} step {i}");
+                    check_against_causal_reference(
+                        &eng, &resp, &ctx, window,
+                        &format!("{label} step {i}"));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_mode_batch_each_stream_answers_its_own_reference() {
+    // A bidirectional and a causal session co-batched into the same
+    // kernel fan-out: mode dispatch is per-session state, so each
+    // stream must answer its *own* executable spec bitwise — batch
+    // composition never bleeds one mode's semantics into the other.
+    let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
+    let eng = engine(mode, 4, 4);
+    let window = Some(4);
+    let causal = SessionMode::Causal { window };
+    let mut rng = SplitMix64::new(0x3177);
+    let mut ctx_b: Vec<i32> = Vec::new();
+    let mut ctx_c: Vec<i32> = Vec::new();
+    let mut id = 0u64;
+    for round in 0..4 {
+        let n = if round == 0 { 5 } else { 1 };
+        let tb: Vec<i32> =
+            (0..n).map(|_| rng.next_below(30_000) as i32).collect();
+        let tc: Vec<i32> =
+            (0..n).map(|_| rng.next_below(30_000) as i32).collect();
+        ctx_b.extend_from_slice(&tb);
+        ctx_c.extend_from_slice(&tc);
+        let resps = eng
+            .serve_batch(&[
+                Request::decode(id, 1, tb),
+                Request::decode(id + 1, 2, tc).with_mode(causal),
+            ])
+            .unwrap();
+        id += 2;
+        check_against_reference(&eng, &resps[0], &ctx_b,
+                                &format!("bidirectional round {round}"));
+        check_against_causal_reference(&eng, &resps[1], &ctx_c, window,
+                                       &format!("causal round {round}"));
+    }
+}
+
+#[test]
+fn mode_mismatch_refused_before_mutation_peers_serve() {
+    // A session's mode is fixed at its first request: a later step
+    // naming a different mode — bidirectional on a causal session,
+    // causal on a bidirectional one, or merely a different window — is
+    // refused with a typed `ModeMismatch` *before any mutation*, the
+    // co-batched peer serves bitwise, and the refused session's stream
+    // position never moves.
+    let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
+    let eng = engine(mode, 2, 4);
+    let causal = SessionMode::Causal { window: None };
+    let mut ctx1 = vec![1, 2, 3];
+    eng.serve_batch(&[Request::decode(0, 1, ctx1.clone()).with_mode(causal)])
+        .unwrap();
+    eng.serve_batch(&[Request::decode(1, 2, vec![4, 5])]).unwrap();
+    let stats0 = eng.session_stats().unwrap();
+    // A step claiming bidirectional for the causal session, co-batched
+    // with a valid step of the bidirectional peer.
+    let resps = eng
+        .serve_batch(&[
+            Request::decode(2, 1, vec![9]),
+            Request::decode(3, 2, vec![6]),
+        ])
+        .unwrap();
+    assert!(resps[0].rejected && resps[0].label == -1);
+    let reason = resps[0].reason.expect("typed refusal");
+    assert_eq!(reason,
+               RejectReason::ModeMismatch {
+                   expected: causal,
+                   claimed: SessionMode::Bidirectional,
+               });
+    assert!(!reason.is_retryable(),
+            "a mode mismatch is a client bug, not a load condition");
+    assert_eq!(resps[0].session, Some(1), "refusal names the stream");
+    assert_eq!(resps[0].context_len, 0, "a refused step appends nothing");
+    check_against_reference(&eng, &resps[1], &[4, 5, 6],
+                            "peer serves beside the mode mismatch");
+    assert_eq!(eng.session_stats().unwrap().sessions_created,
+               stats0.sessions_created);
+    // Nothing mutated: the same step with the *correct* mode serves at
+    // the original position, bitwise the causal reference.
+    ctx1.push(9);
+    let resp = eng
+        .serve_batch(&[Request::decode(4, 1, vec![9]).with_mode(causal)])
+        .unwrap()
+        .remove(0);
+    check_against_causal_reference(&eng, &resp, &ctx1, None,
+                                   "causal stream resumes after refusal");
+    // The opposite direction refuses too...
+    let resp = eng
+        .serve_batch(&[Request::decode(5, 2, vec![7])
+            .with_mode(SessionMode::Causal { window: Some(4) })])
+        .unwrap()
+        .remove(0);
+    assert_eq!(resp.reason,
+               Some(RejectReason::ModeMismatch {
+                   expected: SessionMode::Bidirectional,
+                   claimed: SessionMode::Causal { window: Some(4) },
+               }));
+    // ...and so does a window change within causal mode (θ state for
+    // one window is not θ state for another).
+    let resp = eng
+        .serve_batch(&[Request::decode(6, 1, vec![8])
+            .with_mode(SessionMode::Causal { window: Some(4) })])
+        .unwrap()
+        .remove(0);
+    assert_eq!(resp.reason,
+               Some(RejectReason::ModeMismatch {
+                   expected: causal,
+                   claimed: SessionMode::Causal { window: Some(4) },
+               }));
+}
+
+#[test]
+fn causal_sticky_sharded_bitwise_across_shards_and_eviction() {
+    // The causal matrix through the sticky-sharded fleet: shard counts
+    // {1, 2, 4} × page budgets {unbounded, one-session-tight}. Under
+    // the tight budget, lanes holding several sessions evict and
+    // decode-from-scratch on nearly every step — and the replay runs
+    // *causally* (mode is session state, surviving eviction), so every
+    // response stays bitwise the causal reference and identical across
+    // every (shards, budget) combination.
+    let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
+    let window = Some(4);
+    let smode = SessionMode::Causal { window };
+    let n_sessions = 3u64;
+    let mut rng = SplitMix64::new(0x5CA1);
+    let mut schedule: Vec<(u64, Vec<i32>)> = Vec::new();
+    for s in 0..n_sessions {
+        let n = 3 + (s as usize % 3);
+        schedule.push((s, (0..n).map(|_| rng.next_below(30_000) as i32).collect()));
+    }
+    for _ in 0..5 {
+        for s in 0..n_sessions {
+            schedule.push((s, vec![rng.next_below(30_000) as i32]));
+        }
+    }
+    let total = schedule.len();
+    let mut ctx: HashMap<u64, Vec<i32>> = HashMap::new();
+    let prefixes: Vec<Vec<i32>> = schedule
+        .iter()
+        .map(|(s, toks)| {
+            let c = ctx.entry(*s).or_default();
+            c.extend_from_slice(toks);
+            c.clone()
+        })
+        .collect();
+    let ref_eng = engine(mode, 1, 4);
+    let refs: Vec<DecodeReference> = prefixes
+        .iter()
+        .map(|c| causal_decode_reference(&ref_eng, c, window))
+        .collect();
+    let mut baseline: Option<Vec<(u64, Vec<u32>)>> = None;
+    for shards in [1usize, 2, 4] {
+        // GEOM = 2 layers × 3 heads = 6 HeadKvs ⇒ 6 pages holds exactly
+        // one of these short sessions.
+        for kv_pages in [usize::MAX, 6] {
+            let label = format!("shards={shards} kv={kv_pages}");
+            let coord = ShardedCoordinator::new_native_sticky(
+                shards, GEOM, mode, SimConfig::edge(),
+                4, Duration::from_millis(1), 0, 2, kv_pages, 1.0,
+            )
+            .unwrap();
+            let router = coord.router().expect("sticky router");
+            for (id, (s, toks)) in schedule.iter().enumerate() {
+                let pos = prefixes[id].len() - toks.len();
+                router
+                    .submit(Request::decode_at(id as u64, *s, pos, toks.clone())
+                        .with_mode(smode))
+                    .unwrap();
+            }
+            router.close();
+            let report = coord.run().unwrap();
+            assert_eq!(report.responses.len(), total, "{label}");
+            assert!(report.lane_errors.is_empty(), "{label}");
+            let mut got: Vec<(u64, Vec<u32>)> = report
+                .responses
+                .iter()
+                .map(|r| {
+                    assert!(!r.rejected, "{label} req {}", r.id);
+                    (r.id, bits(&r.outputs))
+                })
+                .collect();
+            got.sort_by_key(|(id, _)| *id);
+            for (id, got_bits) in &got {
+                assert_eq!(got_bits, &bits(&refs[*id as usize].outputs),
+                           "{label} req {id}");
+            }
+            assert_eq!(report.metrics.decode_requests() as usize, total,
+                       "{label}");
+            match &baseline {
+                None => baseline = Some(got),
+                Some(b) => assert_eq!(b, &got, "{label} diverged"),
+            }
+        }
+    }
+}
+
+#[test]
+fn spill_restore_mid_stream_bitwise_vs_replay_and_unbounded() {
+    // The spill tier's serving-path guarantee: under a one-session
+    // page budget, two interleaved streams bounce through the slow
+    // tier on every step — and restore-from-tier, decode-from-scratch
+    // replay, and never-evicted-at-all are bitwise-indistinguishable
+    // response streams. One session is causal, so the snapshot's
+    // row-only θ state rides the tier too.
+    let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
+    let window = Some(4);
+    let causal = SessionMode::Causal { window };
+    let unbounded = engine(mode, 2, 2);
+    let replaying = engine(mode, 2, 2).with_kv_capacity(6);
+    let spilling = engine(mode, 2, 2)
+        .with_kv_capacity(6)
+        .with_eviction_policy(Box::new(LargestFirstPolicy::new()))
+        .with_spill_tier(Box::new(InMemorySpillTier::new()));
+    let mut rng = SplitMix64::new(0x5B11);
+    let mut ctx_b: Vec<i32> = Vec::new();
+    let mut ctx_c: Vec<i32> = Vec::new();
+    let mut id = 0u64;
+    for round in 0..4 {
+        for (sess, is_causal) in [(100u64, false), (200u64, true)] {
+            let n = if round == 0 { 4 } else { 1 };
+            let toks: Vec<i32> =
+                (0..n).map(|_| rng.next_below(30_000) as i32).collect();
+            let ctx = if is_causal { &mut ctx_c } else { &mut ctx_b };
+            ctx.extend_from_slice(&toks);
+            let mut req = Request::decode(id, sess, toks);
+            if is_causal {
+                req = req.with_mode(causal);
+            }
+            id += 1;
+            let label = format!("session {sess} round {round}");
+            let mut resps: Vec<hdp::coordinator::Response> =
+                [&unbounded, &replaying, &spilling]
+                    .iter()
+                    .map(|eng| {
+                        eng.serve_batch(std::slice::from_ref(&req))
+                            .unwrap()
+                            .remove(0)
+                    })
+                    .collect();
+            let spilled = resps.pop().unwrap();
+            let rebuilt = resps.pop().unwrap();
+            let warm = resps.pop().unwrap();
+            if is_causal {
+                check_against_causal_reference(&spilling, &spilled, ctx,
+                                               window, &label);
+            } else {
+                check_against_reference(&spilling, &spilled, ctx, &label);
+            }
+            for other in [&warm, &rebuilt] {
+                assert_eq!(bits(&spilled.outputs), bits(&other.outputs),
+                           "{label}");
+                assert_eq!(spilled.label, other.label, "{label}");
+                assert_eq!(spilled.kept_density.to_bits(),
+                           other.kept_density.to_bits(), "{label}");
+                assert_eq!(spilled.context_len, other.context_len, "{label}");
+            }
+        }
+    }
+    // The three engines took three different paths to the same bits.
+    assert_eq!(unbounded.session_stats().unwrap().evictions, 0);
+    assert_eq!(unbounded.session_spill_stats().unwrap(), SpillStats::default());
+    let rb = replaying.session_stats().unwrap();
+    assert!(rb.evictions >= 3 && rb.rebuilds >= 3,
+            "tight budget without a tier must replay: {rb:?}");
+    let ss = spilling.session_spill_stats().unwrap();
+    assert!(ss.spills >= 3 && ss.restores >= 3,
+            "tight budget with a tier must spill and restore: {ss:?}");
+    assert!(ss.bytes_spilled > 0 && ss.bytes_restored > 0, "{ss:?}");
+    assert_eq!(spilling.session_stats().unwrap().rebuilds, 0,
+               "every comeback restored from the tier, none replayed");
+    // Exactly-once metrics: the engine's counters equal the store's.
+    assert_eq!(spilling.metrics.session_spills(), ss.spills);
+    assert_eq!(spilling.metrics.session_restores(), ss.restores);
+    assert_eq!(spilling.metrics.spill_bytes_moved(),
+               ss.bytes_spilled + ss.bytes_restored);
+    assert!(spilling.metrics.restore_latency_count() >= 3,
+            "each restore times its checkout");
+    assert!(spilling.metrics.report().contains("kv tiering"));
+}
+
+#[test]
+fn spill_during_batched_fanout_with_checkout_held() {
+    // Spill interacting with the checkout-all → fan-out → commit
+    // protocol: a batch pairing a spilled session with the resident one
+    // restores the former *inside the batched checkout* while the
+    // peer's Arc is held — and while both Arcs are held, neither
+    // session can be spilled out from under the fan-out (the store
+    // tolerates the transient over-budget instead). Everything stays
+    // bitwise; the budget closes on the next commit.
+    let mode = ServeMode::Hdp { rho: 0.4, tau: 0.0, qstep: 1.0 / 4096.0 };
+    let eng = engine(mode, 4, 4)
+        .with_kv_capacity(6)
+        .with_spill_tier(Box::new(InMemorySpillTier::new()));
+    let mut rng = SplitMix64::new(0xFA11);
+    let mut next = |n: usize| -> Vec<i32> {
+        (0..n).map(|_| rng.next_below(30_000) as i32).collect()
+    };
+    // Grow A, then B: B's commit overflows the one-session budget and
+    // spills A to the tier.
+    let mut ctx_a = next(5);
+    let mut ctx_b = next(4);
+    eng.serve_batch(&[Request::decode_at(0, 100, 0, ctx_a.clone())]).unwrap();
+    eng.serve_batch(&[Request::decode_at(1, 200, 0, ctx_b.clone())]).unwrap();
+    let ss = eng.session_spill_stats().unwrap();
+    assert_eq!((ss.spills, ss.restores), (1, 0), "A spilled under B: {ss:?}");
+    // One batch pairing a step of each: A restores at checkout, both
+    // fan out concurrently, both commit — with both Arcs held, the
+    // over-budget pair survives the batch un-spilled.
+    let (ta, tb) = (next(1), next(1));
+    let (pa, pb) = (ctx_a.len(), ctx_b.len());
+    ctx_a.extend_from_slice(&ta);
+    ctx_b.extend_from_slice(&tb);
+    let resps = eng
+        .serve_batch(&[
+            Request::decode_at(2, 100, pa, ta),
+            Request::decode_at(3, 200, pb, tb),
+        ])
+        .unwrap();
+    check_against_reference(&eng, &resps[0], &ctx_a, "restored A in batch");
+    check_against_reference(&eng, &resps[1], &ctx_b, "resident B in batch");
+    let ss = eng.session_spill_stats().unwrap();
+    assert_eq!(ss.restores, 1, "A restored inside the batched checkout");
+    assert_eq!(ss.spills, 1, "checked-out peers are never spilled mid-batch");
+    assert_eq!(eng.session_stats().unwrap().rebuilds, 0,
+               "the comeback was a restore, not a replay");
+    // The next single-session step releases the peer's Arc first: the
+    // budget closes by spilling the *other* session, and that one in
+    // turn restores bitwise on its next step.
+    let t = next(1);
+    let pa = ctx_a.len();
+    ctx_a.extend_from_slice(&t);
+    let resp = eng
+        .serve_batch(&[Request::decode_at(4, 100, pa, t)])
+        .unwrap()
+        .remove(0);
+    check_against_reference(&eng, &resp, &ctx_a, "A after budget closes");
+    let ss = eng.session_spill_stats().unwrap();
+    assert_eq!(ss.spills, 2, "B spilled once A's commit could evict it");
+    let t = next(1);
+    let pb = ctx_b.len();
+    ctx_b.extend_from_slice(&t);
+    let resp = eng
+        .serve_batch(&[Request::decode_at(5, 200, pb, t)])
+        .unwrap()
+        .remove(0);
+    check_against_reference(&eng, &resp, &ctx_b, "B restored after spill");
+    let ss = eng.session_spill_stats().unwrap();
+    assert_eq!(ss.restores, 2, "{ss:?}");
+    assert_eq!(eng.session_stats().unwrap().rebuilds, 0,
+               "restores all the way down: {ss:?}");
 }

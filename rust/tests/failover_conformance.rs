@@ -21,10 +21,12 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use hdp::attention::hdp::hdp_head_reference;
+use hdp::attention::hdp::{hdp_causal_reference, hdp_head_reference};
 use hdp::coordinator::{derive_session_head_inputs, pooled_label, Batcher,
-                       Engine, FaultPlan, LaneState, RejectReason, Request,
-                       ServeMode, ShardReport, ShardedCoordinator};
+                       Engine, EvictionKind, FaultPlan, LaneState,
+                       RejectReason, Request, ServeMode, ShardReport,
+                       ShardedCoordinator};
+use hdp::session::SessionMode;
 use hdp::sim::SimConfig;
 use hdp::util::rng::SplitMix64;
 
@@ -54,6 +56,30 @@ fn reference_bits(eng: &Engine, context: &[i32]) -> Vec<u32> {
             let (iq, fq, ik, fk, v) = derive_session_head_inputs(
                 context, layer, head, GEOM.d_head, profile, scale);
             let out = hdp_head_reference(&iq, &fq, &ik, &fk, &v, p);
+            outputs.extend_from_slice(
+                &out.out.data()[(l - 1) * GEOM.d_head..l * GEOM.d_head]);
+        }
+    }
+    bits(&outputs)
+}
+
+/// [`reference_bits`] for a causal/windowed session, anchored on
+/// `hdp_causal_reference` with the session's window.
+fn causal_reference_bits(
+    eng: &Engine,
+    context: &[i32],
+    window: Option<usize>,
+) -> Vec<u32> {
+    let p = eng.native_kernel_params().expect("native engine");
+    let profile = eng.native_profile().expect("native engine");
+    let scale = eng.calibration_scale();
+    let l = context.len();
+    let mut outputs = Vec::new();
+    for layer in 0..GEOM.n_layers {
+        for head in 0..GEOM.n_heads {
+            let (iq, fq, ik, fk, v) = derive_session_head_inputs(
+                context, layer, head, GEOM.d_head, profile, scale);
+            let out = hdp_causal_reference(&iq, &fq, &ik, &fk, &v, p, window);
             outputs.extend_from_slice(
                 &out.out.data()[(l - 1) * GEOM.d_head..l * GEOM.d_head]);
         }
@@ -216,6 +242,93 @@ fn killed_lane_chaos_matrix_zero_loss_bitwise() {
             }
         }
     }
+}
+
+#[test]
+fn killed_lane_with_spilled_sessions_rehomes_bitwise() {
+    // The spill tier under lane failure: every lane runs a one-session
+    // page budget with a spill tier, so at kill time most of the
+    // victim's sessions live in its *tier*, not its store. The tier is
+    // lane-local state and dies with the lane — re-homed sessions
+    // hydrate from the fleet journal instead (the journal, not the
+    // tier, is the fleet's durability), and they replay *in their own
+    // mode*: odd sessions here are causal/windowed, and odd sessions
+    // are exactly lane 1's residents — the lane that gets killed. Zero
+    // loss, every stream bitwise its own mode's reference, and the
+    // spill metrics already reported stay absorbed exactly once.
+    let mode = mode_of(0.4, 0.0);
+    let window = Some(4);
+    let causal = SessionMode::Causal { window };
+    let sessions = 8u64;
+    let (schedule, prefixes) = make_schedule(sessions, 3, 0x5B1F);
+    let coord = ShardedCoordinator::new_native_sticky(
+        2, GEOM, mode, SimConfig::edge(),
+        2, Duration::from_millis(1), 0, 1, 6, 1.0,
+    )
+    .unwrap()
+    .with_eviction(EvictionKind::LargestFirst)
+    .with_spill(true)
+    .with_fault(1, FaultPlan { kill_at_pop: Some(2), ..FaultPlan::default() });
+    let router = coord.router().expect("sticky router");
+    let ready = coord.readiness();
+    let metrics = Arc::clone(coord.metrics());
+    let producer = std::thread::spawn(move || {
+        assert!(ready.wait_any(), "lanes must come up");
+        for (id, (s, toks)) in schedule.iter().enumerate() {
+            let pos = prefixes[id].len() - toks.len();
+            let mut req = Request::decode_at(id as u64, *s, pos, toks.clone());
+            if s % 2 == 1 {
+                req = req.with_mode(causal);
+            }
+            router.submit(req).expect("unbounded queues admit everything");
+        }
+        let t0 = Instant::now();
+        while metrics.lane_deaths() == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(30),
+                    "injected kill never fired");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        router.close();
+        prefixes
+    });
+    let report = coord.run().unwrap();
+    let prefixes = producer.join().unwrap();
+    assert_eq!(report.responses.len(), prefixes.len(), "zero lost requests");
+    let ref_eng = engine(mode, 1, 4);
+    let mut seen = vec![false; prefixes.len()];
+    for r in &report.responses {
+        assert!(!r.rejected, "request {} shed ({:?})", r.id, r.reason);
+        let id = r.id as usize;
+        assert!(!seen[id], "request {} answered twice", r.id);
+        seen[id] = true;
+        let prefix = &prefixes[id];
+        assert_eq!(r.context_len, prefix.len(), "request {}", r.id);
+        let want = if r.session.expect("decode response") % 2 == 1 {
+            causal_reference_bits(&ref_eng, prefix, window)
+        } else {
+            reference_bits(&ref_eng, prefix)
+        };
+        assert_eq!(bits(&r.outputs), want,
+                   "request {} diverged from its mode's reference", r.id);
+    }
+    assert!(seen.iter().all(|&s| s), "every request answered");
+    assert_eq!(report.lane_errors.len(), 1);
+    assert_eq!(coord.directory().state(1), LaneState::Dead);
+    assert_eq!(report.metrics.lane_deaths(), 1);
+    // The one-session budget really pushed sessions through the tier…
+    assert!(report.metrics.session_spills() > 0,
+            "tight budget must have spilled");
+    assert!(report.metrics.session_restores() > 0,
+            "returning sessions must have restored");
+    assert!(report.metrics.spill_bytes_moved() > 0);
+    // …and exactly once: every fleet-counted restore timed exactly one
+    // checkout — no move double-reported across the kill boundary.
+    assert_eq!(report.metrics.restore_latency_count(),
+               report.metrics.session_restores());
+    // The victim's sessions re-homed via the journal (its tier died
+    // with it), in their journaled — causal — mode.
+    assert!(report.metrics.sessions_rehomed() >= 1);
+    assert!(coord.journal().unwrap().stats().restores >= 1);
 }
 
 #[test]

@@ -8,7 +8,9 @@
 # BENCH_serving.json (bench_serving: native serve_batch throughput vs
 # batch size, plus sharded-coordinator throughput vs shard count),
 # BENCH_decode.json (bench_decode: cached decode_step tokens/sec vs
-# context length against full recompute) and BENCH_failover.json
+# context length against full recompute, the long-context
+# bidirectional-vs-causal series, and the fixed-page-budget spill-tier
+# series) and BENCH_failover.json
 # (bench_failover: recovery latency after a lane kill / drain and the
 # chaos run's throughput dip vs a healthy fleet), each with one record
 # per op: {op, ns_per_iter, p50_ns, p95_ns, throughput_per_s, unit}.
@@ -29,6 +31,16 @@
 #     continuous vs pop-batch sustained tokens/s under churning
 #     session membership: same kernel work, batch re-formed every
 #     iteration;
+#   * `decode_step ctx=8192 causal w=256` must beat `decode_step
+#     ctx=8192 bidirectional` (windowed scoring + row-only O(nb) θ vs
+#     full-context scoring + the O(nb²) θ grid), and the causal series
+#     alone covers the 32k context — bench_decode prints a SKIPPED
+#     note for 32k-bidirectional (θ ≈ 1 GiB/head at block=2) rather
+#     than capping the sweep silently;
+#   * `decode_budget sessions=4 pages=16 (evict+spill-restore)` must
+#     stay >= 1x the throughput of `... (evict+replay)` — at a page
+#     budget keeping 2 of 4 sessions resident, restoring spilled pages
+#     from the tier replaces decode-from-scratch replay;
 #   * `recovery_latency kill-lane-0` must stay sub-millisecond at p95
 #     (re-homing is queue surgery + journal bookkeeping, not state
 #     copying), and the `decode_run kill-lane-0` / `decode_run

@@ -22,6 +22,16 @@ cargo test -q --lib --bins
 # identical to the full-recompute reference — a failure here must
 # identify itself, not hide inside the glob below.
 cargo test -q --test decode_conformance
+# Causal conformance as its own named gate inside the decode harness:
+# the causal/windowed session mode (row-only O(nb) θ) across windows ×
+# pruning knobs × threads × sticky shards × eviction pressure must be
+# bitwise identical to `hdp_causal_reference`, mode-mismatched steps
+# must be refused pre-mutation, and the KV spill/restore tier must
+# serve spilled sessions bitwise (mid-stream, mid-fan-out with the
+# checkout held, and with exactly-once spill metrics). Redundant with
+# the full decode_conformance run above, but named so a long-context /
+# tiering regression identifies itself.
+cargo test -q --test decode_conformance -- causal_ spill_ mixed_mode mode_mismatch
 # Failover conformance as its own named gate: the chaos harness kills
 # (and drains) lanes under live multi-session decode traffic — shards
 # {2,4} × pruning knobs × KV eviction pressure, error-kills and
