@@ -235,6 +235,51 @@ fn main() {
         ));
     }
 
+    // == mixed policy classes on the batched decode fan-out ==
+    // 8 sessions whose pruning classes round-robin over the built-in
+    // table (fixed at prefill, inherited by every later step), one
+    // popped batch of 8 single-token steps per timed iteration — vs
+    // the same batch with every session at the global class. Classes
+    // only swap per-head kernel parameters inside the same
+    // sessions × layers × heads fan-out, so the mixed-tenant batch
+    // should track the single-global baseline.
+    const POLICY_SESSIONS: u64 = 8;
+    println!("\n== mixed-policy-class decode batch vs single-global \
+              baseline (b={POLICY_SESSIONS}, prefill {PREFILL}) ==");
+    let policy_classes = ["global", "exact", "balanced", "aggressive"];
+    for &mixed in &[false, true] {
+        let eng = decode_engine(POLICY_SESSIONS as usize);
+        let table = Arc::clone(eng.policy_table());
+        let mut id = 0u64;
+        for s in 0..POLICY_SESSIONS {
+            let tokens: Vec<i32> =
+                (0..PREFILL).map(|i| (i % 30_000) as i32).collect();
+            let mut req = Request::decode(id, s, tokens);
+            if mixed {
+                let name = policy_classes[s as usize % policy_classes.len()];
+                req = req.with_policy(table.id_of(name).unwrap());
+            }
+            eng.serve_batch(&[req]).unwrap();
+            id += 1;
+        }
+        let name = if mixed {
+            "decode_policy b=8 (mixed classes)"
+        } else {
+            "decode_policy b=8 (single-global baseline)"
+        };
+        let mut tok = 0i32;
+        ms.push(b.run_throughput(name, POLICY_SESSIONS as f64, "tok", || {
+            let batch: Vec<Request> = (0..POLICY_SESSIONS)
+                .map(|s| {
+                    id += 1;
+                    tok = (tok + 1) % 30_000;
+                    Request::decode(id, s, vec![tok])
+                })
+                .collect();
+            eng.serve_batch(&batch).unwrap()
+        }));
+    }
+
     // == continuous vs pop-batch sustained decode under churn ==
     // A churning schedule: 6 sessions with staggered prefills and
     // chain lengths (session s decodes 4+s tokens after a 16-token
@@ -370,6 +415,14 @@ fn main() {
         println!("batched decode fan-out speedup over sequential pops at \
                   b=8: {:.1}x (target >= 2x on a multi-core runner)",
                  seq / batched);
+    }
+    if let (Some(glob), Some(mixedp)) = (
+        find("decode_policy b=8 (single-global"),
+        find("decode_policy b=8 (mixed"),
+    ) {
+        println!("mixed-policy-class decode batch vs single-global baseline \
+                  (8 sessions): {:.2}x (~1x expected — per-session knobs \
+                  ride the same fan-out)", glob / mixedp);
     }
     if let (Some(cont), Some(popb)) =
         (find("decode_serve continuous"), find("decode_serve pop-batch"))

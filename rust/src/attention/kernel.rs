@@ -66,6 +66,7 @@ use crate::attention::hdp::{
     block_importance_into, hw_exp, hw_reciprocal, n_blocks, row_threshold, HdpHeadOutput,
     HdpParams, NEG_INF,
 };
+use crate::policy::PruningPolicy;
 use crate::session::{HeadKv, KvCache, TokenRow};
 use crate::tensor::Tensor;
 use crate::util::threadpool::{configured_threads, parallel_map_with};
@@ -855,12 +856,18 @@ pub struct DecodeRow {
 ///   owns the head for all of its session's steps.
 /// * `inv_scale` — per-session calibration override of
 ///   [`HdpParams::inv_scale`] (`None` = the kernel's configured value).
+/// * `policy` — per-session pruning-policy override: the session's
+///   (rho, tau, head-budget) class replaces the kernel's configured
+///   knobs for every step via
+///   [`PruningPolicy::params_for_head`] (`None` = configured knobs —
+///   bitwise identical to passing the engine's `global` class).
 #[derive(Debug)]
 pub struct DecodeTask<'a> {
     pub cache: &'a KvCache,
     pub replay: &'a [i32],
     pub steps: &'a [&'a [i32]],
     pub inv_scale: Option<f32>,
+    pub policy: Option<PruningPolicy>,
 }
 
 /// Borrowed references to one head's inputs: `(iq, fq, ik, fk, v)`.
@@ -879,6 +886,13 @@ pub struct BatchRequest<'a> {
     /// can share one batch. `None` uses the kernel's configured value —
     /// bitwise identical to passing `Some(params.inv_scale)`.
     pub inv_scale: Option<f32>,
+    /// Per-request pruning-policy override: this request's
+    /// (rho, tau, head-budget) class replaces the kernel's configured
+    /// knobs head-by-head via [`PruningPolicy::params_for_head`], so
+    /// co-batched requests of different classes each run their own
+    /// pruning. `None` uses the configured knobs — bitwise identical
+    /// to passing the engine's `global` class.
+    pub policy: Option<PruningPolicy>,
 }
 
 /// Measured pruning totals of one request across all its layers × heads
@@ -989,16 +1003,19 @@ impl MhaKernel {
     /// workspace out of the pool once, reuses it for every task it
     /// steals, and returns it when the fan-out completes.
     fn map_heads(&self, tasks: &[HeadRefs<'_>]) -> Vec<HeadOutput> {
-        self.map_heads_scaled(tasks, |_| self.params.inv_scale)
+        self.map_heads_with(tasks, |_| self.params)
     }
 
-    /// [`Self::map_heads`] with a per-task `inv_scale` (the batched
-    /// calibration path): task `i` runs with `inv_scale_of(i)` folded
-    /// into the kernel parameters, everything else shared.
-    fn map_heads_scaled(
+    /// [`Self::map_heads`] with fully per-task kernel parameters (the
+    /// batched calibration + pruning-policy path): task `i` runs at
+    /// `params_of(i)` — per-request `inv_scale`, per-class (rho, tau)
+    /// and budget-folded head tau all arrive through this one seam —
+    /// with the workspace pool and fan-out shared. `params_of` must be
+    /// pure: results are bitwise independent of scheduling.
+    fn map_heads_with(
         &self,
         tasks: &[HeadRefs<'_>],
-        inv_scale_of: impl Fn(usize) -> f32 + Sync,
+        params_of: impl Fn(usize) -> HdpParams + Sync,
     ) -> Vec<HeadOutput> {
         parallel_map_with(
             tasks.len(),
@@ -1007,7 +1024,7 @@ impl MhaKernel {
             |pooled, i| {
                 let ws = pooled.get();
                 let (iq, fq, ik, fk, v) = tasks[i];
-                let p = HdpParams { inv_scale: inv_scale_of(i), ..self.params };
+                let p = params_of(i);
                 ws.run(iq, fq, ik, fk, v, p, true);
                 HeadOutput {
                     out: Tensor::new(&[iq.rows(), v.cols()], ws.out().to_vec()),
@@ -1033,17 +1050,23 @@ impl MhaKernel {
     /// composition never changes results, only wall-clock.
     pub fn forward_batch(&self, requests: &[BatchRequest<'_>]) -> Vec<RequestOutput> {
         let mut flat: Vec<HeadRefs<'_>> = Vec::new();
-        let mut scales: Vec<f32> = Vec::new();
+        let mut task_params: Vec<HdpParams> = Vec::new();
         for r in requests {
-            let s = r.inv_scale.unwrap_or(self.params.inv_scale);
+            let base = HdpParams {
+                inv_scale: r.inv_scale.unwrap_or(self.params.inv_scale),
+                ..self.params
+            };
             for heads in &r.layers {
-                for &h in heads {
+                for (head, &h) in heads.iter().enumerate() {
                     flat.push(h);
-                    scales.push(s);
+                    task_params.push(match r.policy {
+                        Some(pol) => pol.params_for_head(head, base),
+                        None => base,
+                    });
                 }
             }
         }
-        let mut outs = self.map_heads_scaled(&flat, |i| scales[i]).into_iter();
+        let mut outs = self.map_heads_with(&flat, |i| task_params[i]).into_iter();
         let block = self.params.block;
         requests
             .iter()
@@ -1159,9 +1182,13 @@ impl MhaKernel {
                 let n_heads = task.cache.n_heads();
                 let lh = g - starts[ti];
                 let (layer, head) = (lh / n_heads, lh % n_heads);
-                let p = HdpParams {
+                let base = HdpParams {
                     inv_scale: task.inv_scale.unwrap_or(self.params.inv_scale),
                     ..self.params
+                };
+                let p = match task.policy {
+                    Some(pol) => pol.params_for_head(head, base),
+                    None => base,
                 };
                 let ws = pooled.get();
                 let mut kv = task.cache.head(layer, head).lock().unwrap();
@@ -1377,6 +1404,7 @@ mod tests {
                     })
                     .collect(),
                 inv_scale: None,
+                policy: None,
             })
             .collect();
         let outs = kernel.forward_batch(&batch);
@@ -1431,7 +1459,11 @@ mod tests {
             .collect();
         let mk = || -> Vec<BatchRequest> {
             refs.iter()
-                .map(|layers| BatchRequest { layers: layers.clone(), inv_scale: None })
+                .map(|layers| BatchRequest {
+                    layers: layers.clone(),
+                    inv_scale: None,
+                    policy: None,
+                })
                 .collect()
         };
         let serial = MhaKernel::new(p).with_threads(1).forward_batch(&mk());
@@ -1765,6 +1797,7 @@ mod tests {
                     replay,
                     steps: steps.as_slice(),
                     inv_scale: None,
+                    policy: None,
                 })
                 .collect();
             let got = kernel.decode_batch(&tasks, derive);
@@ -1863,6 +1896,7 @@ mod tests {
                         replay: &[],
                         steps: &[],
                         inv_scale: None,
+                        policy: None,
                     });
                 }
             }
@@ -1924,8 +1958,20 @@ mod tests {
         let toks: Vec<i32> = vec![3, 1, 4, 1, 5];
         let groups: Vec<&[i32]> = vec![&toks];
         let tasks = vec![
-            DecodeTask { cache: &ca, replay: &[], steps: &groups[..], inv_scale: None },
-            DecodeTask { cache: &cb, replay: &[], steps: &groups[..], inv_scale: Some(0.11) },
+            DecodeTask {
+                cache: &ca,
+                replay: &[],
+                steps: &groups[..],
+                inv_scale: None,
+                policy: None,
+            },
+            DecodeTask {
+                cache: &cb,
+                replay: &[],
+                steps: &groups[..],
+                inv_scale: Some(0.11),
+                policy: None,
+            },
         ];
         let got = kernel.decode_batch(&tasks, derive);
         for (cache, kp) in [(mk_cache(), p), (mk_cache(), params(0.4, 0.0, 0.11))] {
@@ -1962,7 +2008,11 @@ mod tests {
         let refs: Vec<HeadRefs> =
             heads.iter().map(|(a, b, c, d, e, _)| (a, b, c, d, e)).collect();
         let mk = |scale: Option<f32>| {
-            vec![BatchRequest { layers: vec![refs.clone()], inv_scale: scale }]
+            vec![BatchRequest {
+                layers: vec![refs.clone()],
+                inv_scale: scale,
+                policy: None,
+            }]
         };
         let none = kernel.forward_batch(&mk(None));
         let some = kernel.forward_batch(&mk(Some(0.05)));
@@ -1982,8 +2032,12 @@ mod tests {
         // Mixed calibrations in one batch: each request matches its own
         // solo run — batch composition still never changes results.
         let mixed = vec![
-            BatchRequest { layers: vec![refs.clone()], inv_scale: None },
-            BatchRequest { layers: vec![refs.clone()], inv_scale: Some(0.11) },
+            BatchRequest { layers: vec![refs.clone()], inv_scale: None, policy: None },
+            BatchRequest {
+                layers: vec![refs.clone()],
+                inv_scale: Some(0.11),
+                policy: None,
+            },
         ];
         let outs = kernel.forward_batch(&mixed);
         for (a, b) in outs[0].layers[0].iter().zip(&none[0].layers[0]) {
@@ -1992,6 +2046,124 @@ mod tests {
         for (a, b) in outs[1].layers[0].iter().zip(&want) {
             assert_eq!(a.out.data(), b.out.data());
         }
+    }
+
+    #[test]
+    fn per_request_policy_overrides_and_global_is_identity() {
+        use crate::policy::PruningPolicy;
+        // A policy carrying the kernel's own knobs is bitwise a no-op,
+        // a different (rho, tau) matches a kernel configured with those
+        // knobs outright, and a head budget force-prunes exactly the
+        // heads past the cap — all riding one mixed batch.
+        let p = params(0.4, 0.0, 0.05);
+        let kernel = MhaKernel::new(p).with_threads(4);
+        let heads: Vec<_> = (0..3).map(|h| rand_head(1200 + h, 16, 8)).collect();
+        let refs: Vec<HeadRefs> =
+            heads.iter().map(|(a, b, c, d, e, _)| (a, b, c, d, e)).collect();
+        let mk = |policy: Option<PruningPolicy>| BatchRequest {
+            layers: vec![refs.clone()],
+            inv_scale: None,
+            policy,
+        };
+        let global = PruningPolicy::new(p.rho, p.tau, None);
+        let hot = PruningPolicy::new(0.9, 0.0, None);
+        let capped = PruningPolicy::new(0.4, 0.0, Some(1));
+        let outs = kernel.forward_batch(&[
+            mk(None),
+            mk(Some(global)),
+            mk(Some(hot)),
+            mk(Some(capped)),
+        ]);
+        let plain = kernel.forward_layer(&refs);
+        for (a, b) in outs[0].layers[0].iter().zip(&plain) {
+            assert_eq!(a.out.data(), b.out.data(), "no policy == plain");
+        }
+        for (a, b) in outs[1].layers[0].iter().zip(&plain) {
+            assert_eq!(a.out.data(), b.out.data(), "global policy == plain");
+        }
+        let want_hot =
+            MhaKernel::new(params(0.9, 0.0, 0.05)).forward_layer(&refs);
+        for (a, b) in outs[2].layers[0].iter().zip(&want_hot) {
+            assert_eq!(a.out.data(), b.out.data(), "policy knobs == configured");
+            assert_eq!(a.kept_blocks, b.kept_blocks);
+        }
+        // Budgeted request: head 0 matches the unbudgeted run, heads
+        // past the cap are early-pruned (zero output, head_kept=false),
+        // and the stats see them as pruned heads.
+        for (h, out) in outs[3].layers[0].iter().enumerate() {
+            if h == 0 {
+                assert_eq!(out.out.data(), plain[0].out.data(), "head 0 kept");
+            } else {
+                assert!(!out.head_kept, "head {h} past budget");
+                assert!(out.out.data().iter().all(|&x| x == 0.0));
+            }
+        }
+        assert!(outs[3].stats.heads_pruned >= 2);
+    }
+
+    #[test]
+    fn decode_batch_per_task_policy_matches_configured_kernel() {
+        use crate::policy::PruningPolicy;
+        let p = params(0.4, 0.0, 0.05);
+        let kernel = MhaKernel::new(p).with_threads(2);
+        let derive = |tok: i32, pos: usize, layer: usize, head: usize| {
+            derive_test_row(tok, pos, layer, head, 8, 8)
+        };
+        let mk_cache = || KvCache::new(1, 2, 8, 8, p.block, p.block * 4);
+        let (ca, cb) = (mk_cache(), mk_cache());
+        let toks: Vec<i32> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+        let groups: Vec<&[i32]> = vec![&toks];
+        let pol = PruningPolicy::new(0.9, 0.0, Some(1));
+        let tasks = vec![
+            DecodeTask {
+                cache: &ca,
+                replay: &[],
+                steps: &groups[..],
+                inv_scale: None,
+                policy: None,
+            },
+            DecodeTask {
+                cache: &cb,
+                replay: &[],
+                steps: &groups[..],
+                inv_scale: None,
+                policy: Some(pol),
+            },
+        ];
+        let got = kernel.decode_batch(&tasks, derive);
+        // Reference: each head alone at the head's effective params.
+        for (ti, policy) in [None, Some(pol)].into_iter().enumerate() {
+            let cache = mk_cache();
+            for head in 0..2 {
+                let hp = match policy {
+                    Some(pol) => pol.params_for_head(head, p),
+                    None => p,
+                };
+                let seq = MhaKernel::new(hp).with_threads(1);
+                let mut kv = cache.head(0, head).lock().unwrap();
+                let mut last = None;
+                for (k, &tok) in toks.iter().enumerate() {
+                    let row = derive(tok, kv.len(), 0, head);
+                    if k + 1 == toks.len() {
+                        last = Some(seq.decode_step(&mut kv, &row, None));
+                    } else {
+                        seq.decode_append(&mut kv, &row);
+                    }
+                }
+                let want = last.unwrap();
+                let b = &got[ti][0][head];
+                assert_eq!(
+                    b.out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    want.out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "task {ti} head {head}"
+                );
+                assert_eq!(b.head_kept, want.head_kept);
+            }
+        }
+        // The budgeted task's second head was force-pruned…
+        assert!(!got[1][0][1].head_kept);
+        // …but its cache still advanced like everyone else's.
+        assert_eq!(cb.len(), ca.len());
     }
 
     #[test]

@@ -55,6 +55,7 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::policy::PolicyId;
 use crate::session::SessionMode;
 
 /// SLO class of a request — the continuous (iteration-level) decode
@@ -116,6 +117,16 @@ pub struct Request {
     pub mode: SessionMode,
     /// SLO class; see [`Priority`]. Defaults to [`Priority::Standard`].
     pub priority: Priority,
+    /// The pruning-policy class this request asks to run at — an id
+    /// into the engine's [`crate::policy::PolicyTable`]. `None` lets
+    /// the engine decide: the session's established class for decode
+    /// steps, the installed [`crate::policy::PolicyRouter`]'s choice
+    /// (else the `global` class) for one-shots and new sessions. A
+    /// session's class is fixed by its first request; a later step
+    /// naming a *different* class is refused with a typed
+    /// [`super::engine::RejectReason::PolicyMismatch`] before any state
+    /// mutates, exactly like a mode mismatch.
+    pub policy: Option<PolicyId>,
     /// Whether this request's queue wait has already been sampled into
     /// the metrics — set by [`Request::take_queue_wait`] and preserved
     /// across failover readmission, so the wait is counted exactly once
@@ -134,6 +145,7 @@ impl Request {
             pos: None,
             mode: SessionMode::default(),
             priority: Priority::default(),
+            policy: None,
             wait_recorded: false,
         }
     }
@@ -165,6 +177,17 @@ impl Request {
     /// Set the SLO class (builder-style); see [`Priority`].
     pub fn with_priority(mut self, priority: Priority) -> Self {
         self.priority = priority;
+        self
+    }
+
+    /// Name the pruning-policy class (builder-style); see
+    /// [`Request::policy`]. The id comes from the engine's
+    /// [`crate::policy::PolicyTable`] (e.g.
+    /// `table.require("aggressive")?`); an id outside the table is a
+    /// structural error — the engine refuses the whole batch rather
+    /// than guessing.
+    pub fn with_policy(mut self, policy: PolicyId) -> Self {
+        self.policy = Some(policy);
         self
     }
 

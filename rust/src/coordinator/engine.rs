@@ -83,6 +83,8 @@ use crate::attention::kernel::{BatchRequest, DecodeTask, MhaKernel,
                                RequestStats};
 use crate::fixed::{self, QuantProfile};
 use crate::model::ParamStore;
+use crate::policy::{PolicyFeatures, PolicyId, PolicyRouter, PolicyTable,
+                    PruningPolicy};
 use crate::runtime::{lit_i32, lit_scalar_f32, to_vec_f32, Runtime};
 use crate::session::{EvictionPolicy, KvCacheConfig, SessionJournal,
                      SessionMode, SessionStore, SpillStats, SpillTier,
@@ -155,6 +157,17 @@ pub enum RejectReason {
     /// (nothing appended, co-batched peers unaffected) and the client
     /// must resubmit naming the session's actual mode.
     ModeMismatch { expected: SessionMode, claimed: SessionMode },
+    /// The step named the wrong pruning-policy class for an open
+    /// session: the session's class was fixed at its first request (or
+    /// restored from the journal) as `expected`, but this step claimed
+    /// `claimed`. Mid-stream policy changes are refused *before any
+    /// mutation* — the cached θ trajectory was built under `expected`'s
+    /// knobs and switching would silently change what the cached
+    /// context means — so the client must resubmit naming the session's
+    /// actual class (ids index the engine's
+    /// [`crate::policy::PolicyTable`]), or omit the class to inherit
+    /// it. Co-batched peers are unaffected.
+    PolicyMismatch { expected: PolicyId, claimed: PolicyId },
 }
 
 impl RejectReason {
@@ -168,14 +181,23 @@ impl RejectReason {
     /// and resubmitting it unchanged will be refused forever — the
     /// client must resync from `expected` first. Burning a backoff
     /// budget on it only delays the resync.
-    /// [`RejectReason::ModeMismatch`] is not retryable for the same
-    /// reason: the session's mode never changes, so the unchanged step
-    /// will be refused forever — resubmit with the right mode instead.
+    /// [`RejectReason::ModeMismatch`] and
+    /// [`RejectReason::PolicyMismatch`] are not retryable for the same
+    /// reason: a session's mode and pruning-policy class never change,
+    /// so the unchanged step will be refused forever — resubmit naming
+    /// the session's actual mode/class instead.
+    ///
+    /// The match is exhaustive on purpose: a new refusal variant must
+    /// decide its retry class here, at compile time, not inherit one
+    /// from a wildcard (pinned by the truth-table test in
+    /// `super::shard`).
     pub fn is_retryable(&self) -> bool {
-        !matches!(
-            self,
-            RejectReason::StreamGap { .. } | RejectReason::ModeMismatch { .. }
-        )
+        match self {
+            RejectReason::Admission | RejectReason::Shed => true,
+            RejectReason::StreamGap { .. }
+            | RejectReason::ModeMismatch { .. }
+            | RejectReason::PolicyMismatch { .. } => false,
+        }
     }
 }
 
@@ -497,6 +519,35 @@ fn native_params(mode: ServeMode, d_head: usize) -> (HdpParams, QuantProfile) {
     }
 }
 
+/// The [`PruningPolicy`] equivalent of a [`ServeMode`]'s configured
+/// knobs — what the [`PolicyTable`]'s `global` class (id 0) is built
+/// from, so "no policy anywhere" and "explicitly class 0" are the same
+/// execution. `Dense` keeps every block and head; `Hdp` carries its
+/// (rho, tau). Neither has a head budget.
+pub fn global_policy(mode: ServeMode) -> PruningPolicy {
+    match mode {
+        ServeMode::Dense => PruningPolicy::new(-1.0, f32::NEG_INFINITY, None),
+        ServeMode::Hdp { rho, tau, .. } => PruningPolicy::new(rho, tau, None),
+    }
+}
+
+/// The integer routing features the engine derives for an unlabelled
+/// request: token count plus the mass/spread of the probe head's
+/// (layer 0, head 0) quantized integer Q field from
+/// [`derive_head_inputs_scaled`] — statistics the score pipeline's own
+/// derivation already produces, so routing adds no new numerics. Pure,
+/// so the conformance tests re-derive any request's route exactly.
+pub fn policy_features(
+    tokens: &[i32],
+    d_head: usize,
+    profile: QuantProfile,
+    scale: f32,
+) -> PolicyFeatures {
+    let (iq, _, _, _, _) =
+        derive_head_inputs_scaled(tokens, 0, 0, d_head, profile, scale);
+    PolicyFeatures::from_int_field(tokens.len(), iq.data())
+}
+
 enum Backend {
     Pjrt {
         rt: Arc<Runtime>,
@@ -549,6 +600,15 @@ pub struct Engine {
     /// Serve with the continuous (iteration-level) scheduler instead
     /// of run-to-completion pop-batches; see [`Engine::run_serving`].
     continuous: bool,
+    /// The named pruning-policy classes requests select from
+    /// ([`Request::policy`] / the router). Class 0 (`global`) is always
+    /// the engine's own configured knobs and is served without any
+    /// kernel override — bitwise the pre-policy behaviour.
+    policies: Arc<PolicyTable>,
+    /// Routes requests that named no class (`None` = everything
+    /// unlabelled runs `global`). Pure and deterministic; see
+    /// [`crate::policy::PolicyRouter`].
+    router: Option<Arc<dyn PolicyRouter>>,
     backend: Backend,
     responses: Arc<Mutex<Vec<Response>>>,
     inflight: Arc<AtomicU64>,
@@ -583,6 +643,8 @@ impl Engine {
             fault: FaultPlan::default(),
             pops: AtomicU64::new(0),
             continuous: false,
+            policies: Arc::new(PolicyTable::builtin(global_policy(mode))),
+            router: None,
             backend: Backend::Pjrt {
                 rt,
                 params: params.data.clone(),
@@ -643,6 +705,8 @@ impl Engine {
             fault: FaultPlan::default(),
             pops: AtomicU64::new(0),
             continuous: false,
+            policies: Arc::new(PolicyTable::builtin(global_policy(mode))),
+            router: None,
             backend: Backend::Native { kernel, profile },
             responses: Arc::new(Mutex::new(Vec::new())),
             inflight: Arc::new(AtomicU64::new(0)),
@@ -744,6 +808,57 @@ impl Engine {
         self
     }
 
+    /// Install a custom [`PolicyTable`] (default: the built-in classes
+    /// over this engine's [`global_policy`]). The table is fleet-shared
+    /// state: every lane of a sharded coordinator must install the
+    /// *same* table, because ids recorded in session entries and
+    /// journal records are resolved against it after failover. Class 0
+    /// is always served with the engine's own configured knobs,
+    /// whatever the installed table's `global` entry says — build the
+    /// table over [`global_policy`] of the same [`ServeMode`] so the
+    /// two never disagree.
+    pub fn with_policy_table(mut self, table: Arc<PolicyTable>) -> Self {
+        self.policies = table;
+        self
+    }
+
+    /// Install a [`PolicyRouter`] for requests that named no class
+    /// (default: none — unlabelled requests run `global`). The router
+    /// must be deterministic; the same `Arc` should be shared across a
+    /// fleet's lanes so re-homed traffic routes identically.
+    pub fn with_policy_router(mut self, router: Arc<dyn PolicyRouter>) -> Self {
+        self.router = Some(router);
+        self
+    }
+
+    /// The engine's pruning-policy class table (for resolving
+    /// `--policy-class` names and reading reports).
+    pub fn policy_table(&self) -> &Arc<PolicyTable> {
+        &self.policies
+    }
+
+    /// Resolve the class an **unlabelled** request with these tokens
+    /// would run at: the installed router's decision, else `global`
+    /// (id 0). A router verdict naming no table entry (a misconfigured
+    /// `StaticRouter`, say) falls back to `global` rather than
+    /// poisoning the serve. Pure — the conformance tests re-derive
+    /// routed classes through this to build their sequential
+    /// references.
+    pub fn route_for(&self, tokens: &[i32]) -> PolicyId {
+        match (&self.router, self.native_profile()) {
+            (Some(router), Some(profile)) => {
+                let id = router.route(&policy_features(
+                    tokens,
+                    self.d_head,
+                    profile,
+                    self.cal_scale,
+                ));
+                if (id as usize) < self.policies.len() { id } else { 0 }
+            }
+            _ => 0,
+        }
+    }
+
     /// Enable or disable the session store (native backend; enabled by
     /// default). A session's cache lives inside *one* engine, so a
     /// topology where interchangeable lanes steal work from a shared
@@ -768,6 +883,24 @@ impl Engine {
         } else {
             Some(1.0 / (self.cal_scale * self.cal_scale * (self.d_head as f32).sqrt()))
         }
+    }
+
+    /// The kernel-level policy override for a resolved class id.
+    /// Class 0 (`global`) is the engine's own configured knobs, so it
+    /// maps to `None` — no override, bitwise the pre-policy path.
+    /// Resolution validated the id against the table, so the lookup
+    /// cannot miss.
+    fn policy_override(&self, id: PolicyId) -> Option<PruningPolicy> {
+        if id == 0 {
+            None
+        } else {
+            Some(self.policies.get(id).expect("resolved id is in the table"))
+        }
+    }
+
+    /// The class name for a resolved id (reports and metrics keys).
+    fn policy_name(&self, id: PolicyId) -> &str {
+        self.policies.name_of(id).unwrap_or(crate::policy::GLOBAL_CLASS)
     }
 
     /// Snapshot of the session store's cache statistics (`None` on the
@@ -975,7 +1108,39 @@ impl Engine {
                     r.id, r.tokens.len(), block
                 );
             }
+            // An explicit class claim must name a table entry. Still
+            // pre-mutation: a bad id sheds the whole batch with
+            // nothing checked out or appended.
+            if let Some(pid) = r.policy {
+                anyhow::ensure!(
+                    (pid as usize) < self.policies.len(),
+                    "request {}: unknown policy class id {} (table has {} \
+                     classes)",
+                    r.id, pid, self.policies.len()
+                );
+            }
         }
+        // Per-request policy resolution, still before any mutation: an
+        // explicit claim wins; otherwise the configured router decides
+        // from the request's integer features; otherwise class 0
+        // (`global` — the engine's own knobs). For decode steps this is
+        // only the *default*: the session-sticky class recorded in the
+        // store overrides it during validation below.
+        let route = |r: &Request| -> PolicyId {
+            match (r.policy, &self.router) {
+                (Some(id), _) => id,
+                (None, Some(router)) => {
+                    // A router verdict naming no table entry falls back
+                    // to `global` rather than poisoning the serve.
+                    let id = router.route(&policy_features(
+                        &r.tokens, self.d_head, profile, self.cal_scale,
+                    ));
+                    if (id as usize) < self.policies.len() { id } else { 0 }
+                }
+                (None, None) => 0,
+            }
+        };
+        let mut resolved: Vec<PolicyId> = reqs.iter().map(|r| route(r)).collect();
         // Decode-stream gap detection, still before any mutation: walk
         // the batch's position-asserted steps against each session's
         // committed context length, accumulating in-batch appends so
@@ -1012,6 +1177,7 @@ impl Engine {
                         store.adopt(
                             session,
                             restore.mode,
+                            restore.policy,
                             &restore.tokens,
                             restore
                                 .checkpoint
@@ -1051,13 +1217,51 @@ impl Engine {
                     });
                 }
             }
+            // Session-policy validation mirrors the mode rule: a
+            // session's pruning class is fixed at its first request
+            // (recorded in the store and journal), so a later step
+            // claiming a different class is refused *alone* with a
+            // typed [`RejectReason::PolicyMismatch`] — pre-mutation,
+            // nothing appended, co-batched peers unaffected. Unlabelled
+            // steps inherit the recorded class; a brand-new session's
+            // class is the batch's first-seen claim (or the router's
+            // verdict on it).
+            let mut classes: HashMap<u64, PolicyId> = HashMap::new();
+            for (i, r) in reqs.iter().enumerate() {
+                let Some(session) = r.session else { continue };
+                if refused[i].is_some() {
+                    continue;
+                }
+                let expected = *classes.entry(session).or_insert_with(|| {
+                    store.policy_of(session).unwrap_or_else(|| route(r))
+                });
+                if let Some(claimed) = r.policy {
+                    if claimed != expected {
+                        eprintln!(
+                            "decode request {}: session {} policy mismatch \
+                             — step claims class '{}' but the session runs \
+                             class '{}' (refused; nothing appended)",
+                            r.id,
+                            session,
+                            self.policy_name(claimed),
+                            self.policy_name(expected)
+                        );
+                        refused[i] = Some(RejectReason::PolicyMismatch {
+                            expected,
+                            claimed,
+                        });
+                        continue;
+                    }
+                }
+                resolved[i] = expected;
+            }
             let mut expect: HashMap<u64, usize> = HashMap::new();
             for (i, r) in reqs.iter().enumerate() {
                 let Some(session) = r.session else { continue };
                 if refused[i].is_some() {
-                    // Mode-refused step: appends nothing, so the
-                    // session's expected position stays put for the
-                    // batch's later steps.
+                    // A mode- or policy-refused step appends nothing,
+                    // so the session's expected position stays put for
+                    // the batch's later steps.
                     continue;
                 }
                 let e = expect
@@ -1102,7 +1306,13 @@ impl Engine {
         let ones: Vec<&Request> =
             reqs.iter().filter(|r| r.session.is_none()).collect();
         if !ones.is_empty() {
-            let served = self.serve_oneshots(kernel, profile, &ones);
+            let one_ids: Vec<PolicyId> = reqs
+                .iter()
+                .zip(&resolved)
+                .filter(|(r, _)| r.session.is_none())
+                .map(|(_, &id)| id)
+                .collect();
+            let served = self.serve_oneshots(kernel, profile, &ones, &one_ids);
             let mut it = served.into_iter();
             for (slot, r) in responses.iter_mut().zip(reqs) {
                 if r.session.is_none() {
@@ -1122,7 +1332,7 @@ impl Engine {
             .zip(&responses)
             .any(|(r, slot)| r.session.is_some() && slot.is_none());
         if decode_live {
-            self.serve_decodes(kernel, profile, reqs, &mut responses);
+            self.serve_decodes(kernel, profile, reqs, &resolved, &mut responses);
         }
 
         // Spill-tier accounting: whatever this batch's hydration,
@@ -1163,6 +1373,10 @@ impl Engine {
             .map(|(i, r)| {
                 let mut resp = r.expect("every request answered");
                 resp.e2e_seconds = e2e[i];
+                if !resp.rejected {
+                    self.metrics
+                        .record_policy_e2e(self.policy_name(resolved[i]), e2e[i]);
+                }
                 resp
             })
             .collect())
@@ -1177,6 +1391,7 @@ impl Engine {
         kernel: &MhaKernel,
         profile: QuantProfile,
         reqs: &[&Request],
+        classes: &[PolicyId],
     ) -> Vec<Response> {
         // Host-model stand-in: derive each request's layers × heads
         // workload. Each (request, layer, head) derivation is an
@@ -1215,6 +1430,7 @@ impl Engine {
                     })
                     .collect(),
                 inv_scale: inv,
+                policy: self.policy_override(classes[r]),
             })
             .collect();
 
@@ -1245,6 +1461,12 @@ impl Engine {
                 self.metrics.record_pruning(
                     stats.heads_pruned as u64, stats.heads_total as u64,
                     stats.kept_blocks as u64, stats.blocks_total as u64);
+                self.metrics.record_policy_served(
+                    self.policy_name(classes[i]), false,
+                    stats.heads_pruned as u64, stats.heads_total as u64,
+                    stats.kept_blocks as u64, stats.blocks_total as u64);
+                self.metrics.record_policy_sim(
+                    self.policy_name(classes[i]), per_req_sim[i].cycles);
                 let head_outs = || {
                     results[i].layers.iter().flatten().map(|h| h.out.data())
                 };
@@ -1310,6 +1532,7 @@ impl Engine {
         kernel: &MhaKernel,
         profile: QuantProfile,
         reqs: &[Request],
+        resolved: &[PolicyId],
         responses: &mut [Option<Response>],
     ) {
         struct Group {
@@ -1323,6 +1546,9 @@ impl Engine {
             /// The session's attention mode (validated before this runs;
             /// every admitted step of the group claims it).
             mode: SessionMode,
+            /// The session's resolved pruning class (validated before
+            /// this runs; every admitted step resolved to it).
+            policy: PolicyId,
             /// Batch indices of this session's steps, arrival order.
             idxs: Vec<usize>,
         }
@@ -1360,6 +1586,10 @@ impl Engine {
                                 t_checkout.elapsed().as_secs_f64(),
                             );
                         }
+                        // Pin the session's pruning class on first
+                        // checkout (no-op when already recorded —
+                        // validation guaranteed agreement).
+                        store.note_policy(session, resolved[i]);
                         groups.push(Group {
                             session,
                             cache,
@@ -1367,6 +1597,7 @@ impl Engine {
                             base_len,
                             rebuilt: store.stats().rebuilds > rebuilds0,
                             mode: r.mode,
+                            policy: resolved[i],
                             idxs: vec![i],
                         });
                     }
@@ -1388,6 +1619,7 @@ impl Engine {
                 replay: &g.replay,
                 steps: steps.as_slice(),
                 inv_scale: inv,
+                policy: self.policy_override(g.policy),
             })
             .collect();
         let d_head = self.d_head;
@@ -1434,7 +1666,7 @@ impl Engine {
                     // fleet has produced, so a lane death after this
                     // point loses nothing.
                     journal.record(g.session, &req.tokens, self.cal_scale,
-                                   g.mode);
+                                   g.mode, g.policy);
                     // Checkpoint only after the session's *last* step
                     // in the batch — that is the moment the live cache
                     // holds exactly the committed stream (a snapshot
@@ -1446,6 +1678,10 @@ impl Engine {
                     }
                 }
                 self.metrics.record_pruning(
+                    stats.heads_pruned as u64, stats.heads_total as u64,
+                    stats.kept_blocks as u64, stats.blocks_total as u64);
+                self.metrics.record_policy_served(
+                    self.policy_name(g.policy), true,
                     stats.heads_pruned as u64, stats.heads_total as u64,
                     stats.kept_blocks as u64, stats.blocks_total as u64);
                 // The rebuild was decided once at checkout; charge it
@@ -1489,6 +1725,8 @@ impl Engine {
             if let Some(resp) = responses[i].as_mut() {
                 resp.sim_seconds = self.sim_cfg.cycles_to_seconds(rep.cycles);
             }
+            self.metrics
+                .record_policy_sim(self.policy_name(resolved[i]), rep.cycles);
         }
     }
 

@@ -9,10 +9,47 @@
 //! counters add — so a multi-shard run still ends in one report with
 //! fleet-wide quantiles.
 
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::util::stats::Histogram;
+
+/// Per-pruning-class tallies (the policy subsystem's accounting): how
+/// much work each named request class did and what its pruning knobs
+/// actually harvested. Keyed by class name in [`Inner::classes`].
+#[derive(Debug, Default, Clone)]
+struct ClassStats {
+    /// One-shot requests served at this class.
+    requests: u64,
+    /// Decode steps served at this class.
+    steps: u64,
+    /// Measured early-head-pruning decisions (kernel diagnostics).
+    heads_pruned: u64,
+    heads_total: u64,
+    /// Measured 2×2 block pruning decisions.
+    kept_blocks: u64,
+    blocks_total: u64,
+    /// Modeled co-processor cycles attributed to this class.
+    sim_cycles: f64,
+    /// End-to-end latency of this class's requests/steps.
+    e2e: Histogram,
+}
+
+/// One class's accounting as the tests and reports read it — a plain
+/// copy of the counters plus summary points of the latency histogram.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PolicyClassSnapshot {
+    pub requests: u64,
+    pub steps: u64,
+    pub heads_pruned: u64,
+    pub heads_total: u64,
+    pub kept_blocks: u64,
+    pub blocks_total: u64,
+    pub sim_cycles: f64,
+    pub e2e_count: u64,
+    pub e2e_p95: f64,
+}
 
 #[derive(Debug, Default, Clone)]
 struct Inner {
@@ -78,6 +115,10 @@ struct Inner {
     /// Head steps that were ready but deferred past an iteration by
     /// priority/capacity — the starvation pressure counter.
     starved_steps: u64,
+    // pruning-policy classes (per-request policy routing)
+    /// Per-class accounting, keyed by class name. `BTreeMap` so the
+    /// report lists classes in a stable order on every lane.
+    classes: BTreeMap<String, ClassStats>,
 }
 
 #[derive(Debug)]
@@ -215,6 +256,63 @@ impl Metrics {
         m.meas_heads_total += heads_total;
         m.meas_kept_blocks += kept_blocks;
         m.meas_blocks_total += blocks_total;
+    }
+
+    /// Record one served request (one-shot) or decode step at a named
+    /// pruning class: `decode` picks which counter it lands in, the
+    /// rest are the kernel's measured pruning decisions for exactly
+    /// that request/step. The engine calls this once per admitted
+    /// serve, alongside the global `record_pruning` — so per-class
+    /// tallies and the fleet-wide ones stay additive views of the same
+    /// events.
+    pub fn record_policy_served(&self, class: &str, decode: bool,
+                                heads_pruned: u64, heads_total: u64,
+                                kept_blocks: u64, blocks_total: u64) {
+        let mut m = self.inner.lock().unwrap();
+        let c = m.classes.entry(class.to_string()).or_default();
+        if decode {
+            c.steps += 1;
+        } else {
+            c.requests += 1;
+        }
+        c.heads_pruned += heads_pruned;
+        c.heads_total += heads_total;
+        c.kept_blocks += kept_blocks;
+        c.blocks_total += blocks_total;
+    }
+
+    /// Attribute modeled co-processor cycles to a class (one call per
+    /// request/step, from the same batch estimate `record_sim` totals).
+    pub fn record_policy_sim(&self, class: &str, cycles: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.classes.entry(class.to_string()).or_default().sim_cycles += cycles;
+    }
+
+    /// Record one request's/step's end-to-end latency under its class.
+    pub fn record_policy_e2e(&self, class: &str, seconds: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.classes.entry(class.to_string()).or_default().e2e.record(seconds);
+    }
+
+    /// Class names with any recorded work, in stable (sorted) order.
+    pub fn policy_classes(&self) -> Vec<String> {
+        self.inner.lock().unwrap().classes.keys().cloned().collect()
+    }
+
+    /// One class's accounting (`None` if the class never served).
+    pub fn policy_class(&self, class: &str) -> Option<PolicyClassSnapshot> {
+        let m = self.inner.lock().unwrap();
+        m.classes.get(class).map(|c| PolicyClassSnapshot {
+            requests: c.requests,
+            steps: c.steps,
+            heads_pruned: c.heads_pruned,
+            heads_total: c.heads_total,
+            kept_blocks: c.kept_blocks,
+            blocks_total: c.blocks_total,
+            sim_cycles: c.sim_cycles,
+            e2e_count: c.e2e.count(),
+            e2e_p95: c.e2e.quantile(0.95),
+        })
     }
 
     /// Fraction of heads the early decision pruned, over everything
@@ -385,6 +483,17 @@ impl Metrics {
         m.iter_occupancy.merge(&snap.iter_occupancy);
         m.join_latency.merge(&snap.join_latency);
         m.starved_steps += snap.starved_steps;
+        for (name, c) in snap.classes {
+            let dst = m.classes.entry(name).or_default();
+            dst.requests += c.requests;
+            dst.steps += c.steps;
+            dst.heads_pruned += c.heads_pruned;
+            dst.heads_total += c.heads_total;
+            dst.kept_blocks += c.kept_blocks;
+            dst.blocks_total += c.blocks_total;
+            dst.sim_cycles += c.sim_cycles;
+            dst.e2e.merge(&c.e2e);
+        }
     }
 
     pub fn throughput_rps(&self) -> f64 {
@@ -476,6 +585,21 @@ impl Metrics {
                 m.meas_kept_blocks,
                 m.meas_blocks_total,
                 100.0 * m.meas_kept_blocks as f64 / m.meas_blocks_total.max(1) as f64,
+            ));
+        }
+        for (name, c) in &m.classes {
+            s.push_str(&format!(
+                "policy {:<10} {} req + {} steps, {}/{} heads pruned, \
+                 {}/{} blocks kept, {:.2}M cycles, e2e p95 {}\n",
+                name,
+                c.requests,
+                c.steps,
+                c.heads_pruned,
+                c.heads_total,
+                c.kept_blocks,
+                c.blocks_total,
+                c.sim_cycles / 1e6,
+                crate::util::bench::fmt_time(c.e2e.quantile(0.95)),
             ));
         }
         s
@@ -689,6 +813,41 @@ mod tests {
         assert!(r.contains("2 sessions joined"), "{r}");
         // pop-batch lanes never print the continuous line
         assert!(!Metrics::new().report().contains("continuous"));
+    }
+
+    #[test]
+    fn policy_class_counters_record_merge_and_report() {
+        let fleet = Metrics::new();
+        let lane = Metrics::new();
+        lane.record_policy_served("exact", false, 0, 8, 64, 64);
+        lane.record_policy_served("aggressive", true, 6, 8, 16, 64);
+        lane.record_policy_sim("exact", 1_000_000.0);
+        lane.record_policy_e2e("exact", 0.004);
+        fleet.record_policy_served("exact", true, 1, 8, 32, 64);
+        fleet.record_policy_e2e("exact", 0.002);
+        fleet.absorb(&lane);
+        let exact = fleet.policy_class("exact").expect("served");
+        assert_eq!(exact.requests, 1, "one one-shot");
+        assert_eq!(exact.steps, 1, "one decode step");
+        assert_eq!(exact.heads_total, 16);
+        assert_eq!(exact.kept_blocks, 96);
+        assert_eq!(exact.e2e_count, 2, "latency histograms merge");
+        assert_eq!(exact.sim_cycles, 1_000_000.0);
+        let agg = fleet.policy_class("aggressive").expect("served");
+        assert_eq!((agg.requests, agg.steps), (0, 1));
+        assert_eq!(fleet.policy_classes(), vec!["aggressive", "exact"],
+                   "stable sorted order");
+        assert_eq!(fleet.policy_class("balanced"), None);
+        let r = fleet.report();
+        assert!(r.contains("policy exact"), "{r}");
+        assert!(r.contains("policy aggressive"), "{r}");
+        // quiet lanes don't print policy lines
+        assert!(!Metrics::new().report().contains("policy "));
+        // the absorbed lane is untouched; double absorb double-counts
+        // (the shard runner's single-absorb discipline applies here too)
+        assert_eq!(lane.policy_class("exact").unwrap().requests, 1);
+        fleet.absorb(&lane);
+        assert_eq!(fleet.policy_class("exact").unwrap().requests, 2);
     }
 
     #[test]

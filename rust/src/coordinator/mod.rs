@@ -37,10 +37,11 @@ pub mod shard;
 
 pub use batcher::{Batcher, Priority, Request};
 pub use engine::{derive_head_inputs, derive_head_inputs_scaled,
-                 derive_session_head_inputs, derive_token_row, pooled_label,
-                 Engine, FaultPlan, NativeModelConfig, RejectReason, Response,
-                 ServeMode, StreamGapError};
-pub use metrics::Metrics;
+                 derive_session_head_inputs, derive_token_row, global_policy,
+                 policy_features, pooled_label, Engine, FaultPlan,
+                 NativeModelConfig, RejectReason, Response, ServeMode,
+                 StreamGapError};
+pub use metrics::{Metrics, PolicyClassSnapshot};
 pub use shard::{rehome_lane, EngineFactory, EvictionKind, LaneDirectory,
                 LaneState, Readiness, ReadinessError, RetryPolicy,
                 SessionRouter, ShardReport, ShardStats, ShardedCoordinator};

@@ -103,6 +103,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::policy::{PolicyRouter, PolicyTable};
 use crate::session::{EvictionPolicy, InMemorySpillTier, LargestFirstPolicy,
                      LruPolicy, SessionJournal, TtlPolicy};
 use crate::sim::SimConfig;
@@ -608,6 +609,14 @@ pub struct ShardedCoordinator {
     /// quiescence barrier (`wait_idle`) waits out a lane's live set
     /// per-iteration instead of a single pop.
     continuous: bool,
+    /// Fleet-shared pruning-policy table (`None` = every lane runs the
+    /// built-in table over its own knobs). One `Arc` on every lane, so
+    /// class ids — which requests carry and journals persist — resolve
+    /// identically fleet-wide, before and after a failover re-home.
+    policy_table: Option<Arc<PolicyTable>>,
+    /// Router deciding a class for unlabelled requests (`None` = they
+    /// run class 0, the engine's own knobs). Shared like the table.
+    policy_router: Option<Arc<dyn PolicyRouter>>,
     factory: EngineFactory,
 }
 
@@ -636,6 +645,8 @@ impl ShardedCoordinator {
             shards,
             keep_outputs: true,
             continuous: false,
+            policy_table: None,
+            policy_router: None,
             factory: Box::new(factory),
         })
     }
@@ -771,6 +782,25 @@ impl ShardedCoordinator {
     /// [`Metrics`] and merges fleet-wide. Off by default.
     pub fn with_spill(mut self, spill: bool) -> Self {
         self.spill = spill;
+        self
+    }
+
+    /// Install a fleet-shared pruning-policy table: every lane's
+    /// engine resolves request class ids against the same `Arc`, so a
+    /// class id means the same (rho, tau, head-budget) on every lane —
+    /// including the adopter after a failover re-home. See
+    /// [`Engine::with_policy_table`].
+    pub fn with_policy_table(mut self, table: Arc<PolicyTable>) -> Self {
+        self.policy_table = Some(table);
+        self
+    }
+
+    /// Route unlabelled requests to a class with `router` on every
+    /// lane ([`Engine::with_policy_router`]). Routers are pure
+    /// functions of per-request integer features, so the same request
+    /// resolves to the same class whichever lane serves it.
+    pub fn with_policy_router(mut self, router: Arc<dyn PolicyRouter>) -> Self {
+        self.policy_router = Some(router);
         self
     }
 
@@ -972,6 +1002,12 @@ impl ShardedCoordinator {
                 }
                 if let Some(journal) = &self.journal {
                     e = e.with_journal(Arc::clone(journal));
+                }
+                if let Some(table) = &self.policy_table {
+                    e = e.with_policy_table(Arc::clone(table));
+                }
+                if let Some(router) = &self.policy_router {
+                    e = e.with_policy_router(Arc::clone(router));
                 }
                 e.with_fault_plan(self.faults[shard])
             }
@@ -1557,6 +1593,12 @@ mod tests {
             claimed: crate::session::SessionMode::Causal { window: None },
         }
         .is_retryable());
+        // Same for a policy-class mismatch: a session's pruning class
+        // is fixed at its first request, so the unchanged claim would
+        // be refused forever — the client must resubmit naming the
+        // `expected` class (or none, to inherit it).
+        assert!(!RejectReason::PolicyMismatch { expected: 0, claimed: 2 }
+            .is_retryable());
 
         let coord = sticky(1, 2, 4);
         let router = coord.router().unwrap();
@@ -1580,6 +1622,19 @@ mod tests {
             "no backoff budget burned on a non-retryable rejection"
         );
         assert_eq!(router.pending(), 0, "gapped step never re-enqueued");
+        // Policy mismatch goes through the same fatal path: handed
+        // straight back, never enqueued, no backoff burned.
+        let t1 = Instant::now();
+        let back = router
+            .resubmit_rejected(
+                Request::decode_at(11, 0, 0, vec![1]).with_policy(2),
+                RejectReason::PolicyMismatch { expected: 1, claimed: 2 },
+                &policy,
+            )
+            .unwrap_err();
+        assert_eq!(back.id, 11);
+        assert!(t1.elapsed() < Duration::from_millis(40));
+        assert_eq!(router.pending(), 0, "mismatched step never re-enqueued");
         // A shed step is transient: the same gate resubmits it.
         router
             .resubmit_rejected(

@@ -18,13 +18,17 @@
 //!   decode state), and a serving [`coordinator`] — dynamic batcher
 //!   with admission control, sharded multi-engine scale-out with
 //!   sticky session affinity, merged metrics — with the
-//!   figure-reproduction harness behind the `hdp` CLI.
+//!   figure-reproduction harness behind the `hdp` CLI. The [`policy`]
+//!   subsystem makes the pruning knobs per-request state: named
+//!   (rho, tau, head-budget) classes, an integer-statistics router,
+//!   and per-class accounting.
 
 pub mod attention;
 pub mod coordinator;
 pub mod data;
 pub mod fixed;
 pub mod model;
+pub mod policy;
 pub mod repro;
 pub mod runtime;
 pub mod session;

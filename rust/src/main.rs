@@ -15,14 +15,16 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
-use hdp::coordinator::{Batcher, Engine, EvictionKind, FaultPlan,
-                       NativeModelConfig, Readiness, Request, Response,
-                       RetryPolicy, ServeMode, ShardReport,
+use hdp::coordinator::{global_policy, Batcher, Engine, EvictionKind,
+                       FaultPlan, NativeModelConfig, Readiness, Request,
+                       Response, RetryPolicy, ServeMode, ShardReport,
                        ShardedCoordinator};
 use hdp::data::{Dataset, Split, Stream};
 use hdp::model::{Evaluator, ParamStore, Trainer};
 use hdp::model::evaluator::Variant;
 use hdp::model::trainer::HdpTrainKnobs;
+use hdp::policy::{PolicyId, PolicyRouter, PolicyTable, StaticRouter,
+                  StatsRouter};
 use hdp::repro::figures;
 use hdp::runtime::Runtime;
 use hdp::session::SessionMode;
@@ -202,8 +204,10 @@ fn cmd_eval(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(rest: &[String]) -> Result<()> {
-    let args = Args::new("hdp serve", "dynamic-batched serving demo")
+/// The `hdp serve` flag set, factored out of [`cmd_serve`] so the
+/// parse-time refusal tests exercise exactly the shipping spec.
+fn serve_args() -> Args {
+    Args::new("hdp serve", "dynamic-batched serving demo")
         .flag("model", "tiny", "model config")
         .flag("dataset", "sst2s", "request distribution")
         .flag("weights-dir", "weights", "weights directory")
@@ -236,7 +240,17 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
                per lane (0 = unbounded; evicted sessions decode from \
                scratch unless --spill is on)")
         .flag("window", "0", "decode demo: causal attention window in \
-               tokens (--mode causal only; 0 = unbounded causal)")
+               tokens (--mode causal only; omit for unbounded causal — \
+               an explicit --window 0 is refused)")
+        .flag("policy-class", "", "demo: pin every request to this \
+               pruning class (global|exact|balanced|aggressive or a \
+               --policy-table name; empty = unlabelled requests)")
+        .flag("policy-table", "", "demo: extra pruning classes appended \
+               to the builtin table, 'name:rho,tau[,head_budget];...' \
+               (e.g. 'mild:0.2,0')")
+        .flag("router", "", "demo: route unlabelled requests to a \
+               pruning class: 'stats' (integer-feature rule) or \
+               'static:<class>' (empty = unlabelled runs global)")
         .switch("spill", "decode demo: attach an in-memory KV spill \
                  tier per lane — page-pressure evictions spill pages \
                  (th rows included) and later steps restore them \
@@ -270,7 +284,10 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .flag("batch", "8", "demo: max batch size")
         .flag("threads", "0", "demo: kernel worker threads per lane \
                (0 = host default split across --shards lanes)")
-        .parse(rest)?;
+}
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let args = serve_args().parse(rest)?;
 
     if args.get_bool("demo") || args.get_bool("decode") {
         return serve_demo(&args);
@@ -322,7 +339,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     let rate = args.get_f64("rate")?;
     let mut stream = Stream::new(dataset, Split::Eval, seq_len, 42);
     let producer = spawn_producer(
-        Arc::clone(&batcher), coordinator.readiness(), n, rate,
+        Arc::clone(&batcher), coordinator.readiness(), n, rate, None,
         move |_| {
             stream.next_example().tokens.iter().map(|&t| t as i32).collect()
         },
@@ -360,6 +377,51 @@ fn parse_eviction(v: &str) -> Result<EvictionKind> {
     }
 }
 
+/// `--window` parser: `None` when the flag is absent (unbounded causal
+/// attention), `Some(w)` for an explicit positive width. An explicit
+/// `--window 0` is refused: 0 is only the "flag omitted" sentinel, so
+/// typing it means the caller wanted *some* window and should say
+/// which.
+fn parse_window(args: &Args) -> Result<Option<usize>> {
+    let w = args.get_usize("window")?;
+    if !args.was_set("window") {
+        return Ok(None);
+    }
+    anyhow::ensure!(w > 0, "explicit --window 0 is ambiguous: omit the \
+                            flag for an unbounded causal window");
+    Ok(Some(w))
+}
+
+/// `--policy-table` / `--policy-class` / `--router` parser shared by
+/// both demo paths: build the class table over the serve mode's own
+/// knobs (class 0 = `global`), resolve the optional per-request class
+/// label, and construct the optional router for unlabelled requests.
+/// Every refusal is a typed parse-time error — an unknown class name
+/// or malformed table entry never reaches an engine.
+#[allow(clippy::type_complexity)]
+fn parse_policy(
+    args: &Args,
+    mode: ServeMode,
+) -> Result<(Arc<PolicyTable>, Option<PolicyId>, Option<Arc<dyn PolicyRouter>>)> {
+    let table = Arc::new(PolicyTable::parse(&args.get("policy-table"),
+                                            global_policy(mode))?);
+    let class = match args.get("policy-class").as_str() {
+        "" => None,
+        name => Some(table.require(name)?),
+    };
+    let router: Option<Arc<dyn PolicyRouter>> =
+        match args.get("router").as_str() {
+            "" => None,
+            "stats" => Some(Arc::new(StatsRouter::from_table(&table)?)),
+            v => match v.strip_prefix("static:") {
+                Some(name) => Some(Arc::new(StaticRouter(table.require(name)?))),
+                None => anyhow::bail!(
+                    "--router: '{v}' is not stats|static:<class>"),
+            },
+        };
+    Ok((table, class, router))
+}
+
 /// Batcher for `hdp serve`: release size from the model/CLI, linger
 /// from `--linger-ms`, and — when `--max-queue` is nonzero — the
 /// admission bound that turns overload into immediate rejections.
@@ -377,13 +439,15 @@ fn bounded_batcher(args: &Args, max_batch: usize) -> Result<Batcher> {
 /// The serving producer both serve paths share: hold traffic until a
 /// lane is pulling (cold start must not eat the admission budget),
 /// submit `n` requests at a Poisson `rate` with tokens from
-/// `make_tokens`, close the batcher, and hand back the admission
+/// `make_tokens` (labelled with the `--policy-class` pruning class when
+/// one was named), close the batcher, and hand back the admission
 /// rejections.
 fn spawn_producer(
     batcher: Arc<Batcher>,
     ready: Readiness,
     n: usize,
     rate: f64,
+    policy: Option<PolicyId>,
     mut make_tokens: impl FnMut(u64) -> Vec<i32> + Send + 'static,
 ) -> std::thread::JoinHandle<Vec<Response>> {
     std::thread::spawn(move || {
@@ -391,7 +455,10 @@ fn spawn_producer(
         let mut rejections = Vec::new();
         if ready.wait_any() {
             for id in 0..n as u64 {
-                let req = Request::oneshot(id, make_tokens(id));
+                let mut req = Request::oneshot(id, make_tokens(id));
+                if let Some(class) = policy {
+                    req = req.with_policy(class);
+                }
                 if let Err(back) = batcher.submit(req) {
                     rejections.push(Response::reject(&back));
                 }
@@ -466,12 +533,18 @@ fn serve_demo(args: &Args) -> Result<()> {
         0 => (configured_threads() / shards.max(1)).max(1),
         t => t,
     };
+    let (policy_table, policy_class, policy_router) =
+        parse_policy(args, mode)?;
     // Drop raw outputs: the demo loop accumulates every response, and
     // labels/stats/timing don't need the conformance surface.
-    let coordinator = ShardedCoordinator::new_native(
+    let mut coordinator = ShardedCoordinator::new_native(
         shards, cfg, mode, chip, Arc::clone(&batcher), threads,
     )?
-    .with_raw_outputs(false);
+    .with_raw_outputs(false)
+    .with_policy_table(Arc::clone(&policy_table));
+    if let Some(router) = policy_router {
+        coordinator = coordinator.with_policy_router(router);
+    }
 
     let n = args.get_usize("requests")?;
     let rate = args.get_f64("rate")?;
@@ -479,9 +552,17 @@ fn serve_demo(args: &Args) -> Result<()> {
               {shards} native lane(s): {} layers x {} heads x d_head {}, \
               seq {seq}",
              cfg.n_layers, cfg.n_heads, cfg.d_head);
+    if let Some(class) = policy_class {
+        println!("pruning policy: every request pinned to class '{}'",
+                 policy_table.name_of(class).unwrap_or("?"));
+    } else if !args.get("router").is_empty() {
+        println!("pruning policy: unlabelled requests routed per request \
+                  (--router {})", args.get("router"));
+    }
     let mut token_rng = SplitMix64::new(11);
     let producer = spawn_producer(
         Arc::clone(&batcher), coordinator.readiness(), n, rate,
+        policy_class,
         move |id| {
             // Mixed batch compositions: every third request is a short
             // one (when seq/2 still aligns to the 2x2 block grid).
@@ -534,19 +615,16 @@ fn serve_demo_decode(args: &Args, cfg: NativeModelConfig, mode: ServeMode,
     // attention variant stays HDP): every decode step names it, the
     // engine fixes it at each session's first request, and θ stays
     // row-only O(nb) per head. The default is the bidirectional spine.
+    let window = parse_window(args)?;
     let session_mode = if args.get("mode") == "causal" {
-        SessionMode::Causal {
-            window: match args.get_usize("window")? {
-                0 => None,
-                w => Some(w),
-            },
-        }
+        SessionMode::Causal { window }
     } else {
-        anyhow::ensure!(args.get_usize("window")? == 0,
-                        "--window needs --mode causal");
+        anyhow::ensure!(window.is_none(), "--window needs --mode causal");
         SessionMode::Bidirectional
     };
     let eviction = parse_eviction(&args.get("eviction"))?;
+    let (policy_table, policy_class, policy_router) =
+        parse_policy(args, mode)?;
     let parse_lane = |name: &str| -> Result<Option<usize>> {
         let v = args.get(name);
         if v.is_empty() {
@@ -577,7 +655,19 @@ fn serve_demo_decode(args: &Args, cfg: NativeModelConfig, mode: ServeMode,
     .with_continuous(args.get_bool("continuous"))
     .with_checkpoints(args.get_usize("checkpoint-every")?)
     .with_eviction(eviction)
-    .with_spill(args.get_bool("spill"));
+    .with_spill(args.get_bool("spill"))
+    .with_policy_table(Arc::clone(&policy_table));
+    if let Some(router) = policy_router {
+        coordinator = coordinator.with_policy_router(router);
+    }
+    if let Some(class) = policy_class {
+        println!("pruning policy: every session pinned to class '{}' at \
+                  its first step",
+                 policy_table.name_of(class).unwrap_or("?"));
+    } else if !args.get("router").is_empty() {
+        println!("pruning policy: each session's class routed at its \
+                  first step (--router {})", args.get("router"));
+    }
     if session_mode.is_causal() {
         println!("causal decode sessions ({session_mode}): row-only theta \
                   statistics, O(n/b) per head, pinned against \
@@ -671,8 +761,11 @@ fn serve_demo_decode(args: &Args, cfg: NativeModelConfig, mode: ServeMode,
                     .map(|_| rng.next_below(30_000) as i32)
                     .collect();
                 let n = tokens.len();
-                let req = Request::decode_at(id, s, pos[s as usize], tokens)
+                let mut req = Request::decode_at(id, s, pos[s as usize], tokens)
                     .with_mode(session_mode);
+                if let Some(class) = policy_class {
+                    req = req.with_policy(class);
+                }
                 if submit(req, &mut rejections) {
                     pos[s as usize] += n;
                 }
@@ -681,9 +774,12 @@ fn serve_demo_decode(args: &Args, cfg: NativeModelConfig, mode: ServeMode,
             for _ in 0..steps {
                 for s in 0..sessions as u64 {
                     let tok = rng.next_below(30_000) as i32;
-                    let req =
+                    let mut req =
                         Request::decode_at(id, s, pos[s as usize], vec![tok])
                             .with_mode(session_mode);
+                    if let Some(class) = policy_class {
+                        req = req.with_policy(class);
+                    }
                     if submit(req, &mut rejections) {
                         pos[s as usize] += 1;
                     }
@@ -805,4 +901,87 @@ fn cmd_arch(rest: &[String]) -> Result<()> {
         .flag("out", "results", "output directory")
         .parse(rest)?;
     figures::arch(None, "weights", &args.get("out"), 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Parse `raw` against the shipping `hdp serve` flag spec.
+    fn serve(raw: &[&str]) -> Args {
+        let toks: Vec<String> = raw.iter().map(|t| t.to_string()).collect();
+        serve_args().parse(&toks).expect("flag tokens parse")
+    }
+
+    fn mode() -> ServeMode {
+        ServeMode::Hdp { rho: 0.4, tau: 4096.0, qstep: figures::QSTEP16 }
+    }
+
+    #[test]
+    fn eviction_ttl_zero_is_refused_at_parse_time() {
+        let e = parse_eviction("ttl:0").unwrap_err();
+        assert!(e.to_string().contains("ops >= 1"), "typed message: {e}");
+        assert!(parse_eviction("ttl:banana").is_err());
+        assert!(parse_eviction("mru").is_err());
+        assert!(matches!(parse_eviction("lru").unwrap(), EvictionKind::Lru));
+        assert!(matches!(parse_eviction("largest").unwrap(),
+                         EvictionKind::LargestFirst));
+        assert!(matches!(parse_eviction("ttl:5").unwrap(),
+                         EvictionKind::Ttl { ttl: 5 }));
+    }
+
+    #[test]
+    fn explicit_window_zero_is_refused_but_default_is_unbounded() {
+        let e = parse_window(&serve(&["--window", "0"])).unwrap_err();
+        assert!(e.to_string().contains("--window 0"), "typed message: {e}");
+        assert_eq!(parse_window(&serve(&[])).unwrap(), None,
+                   "absent flag means unbounded");
+        assert_eq!(parse_window(&serve(&["--window", "8"])).unwrap(), Some(8));
+    }
+
+    #[test]
+    fn unknown_policy_class_is_refused_at_parse_time() {
+        let e = parse_policy(&serve(&["--policy-class", "mystery"]), mode())
+            .unwrap_err();
+        assert!(e.to_string().contains("mystery"), "names the class: {e}");
+        let (table, class, router) =
+            parse_policy(&serve(&["--policy-class", "aggressive"]), mode())
+                .unwrap();
+        assert_eq!(class, table.id_of("aggressive"));
+        assert!(router.is_none());
+    }
+
+    #[test]
+    fn malformed_policy_table_is_refused_at_parse_time() {
+        for bad in ["bad", "x:0.5", "x:a,b", "global:0.1,0.2", ":0.1,0.2"] {
+            assert!(
+                parse_policy(&serve(&["--policy-table", bad]), mode()).is_err(),
+                "spec '{bad}' must be refused"
+            );
+        }
+        // A well-formed spec extends the builtin table and its classes
+        // resolve by name like the builtins.
+        let (table, class, _) = parse_policy(
+            &serve(&["--policy-table", "mild:0.2,0",
+                     "--policy-class", "mild"]),
+            mode(),
+        )
+        .unwrap();
+        assert_eq!(class, table.id_of("mild"));
+        assert!(table.id_of("balanced").is_some(), "builtins survive");
+    }
+
+    #[test]
+    fn router_flag_parses_or_refuses() {
+        assert!(parse_policy(&serve(&["--router", "stats"]), mode())
+            .unwrap().2.is_some());
+        assert!(parse_policy(&serve(&["--router", "static:exact"]), mode())
+            .unwrap().2.is_some());
+        let e = parse_policy(&serve(&["--router", "bogus"]), mode())
+            .unwrap_err();
+        assert!(e.to_string().contains("stats|static:<class>"),
+                "typed message: {e}");
+        assert!(parse_policy(&serve(&["--router", "static:nope"]), mode())
+            .is_err(), "static router over an unknown class is refused");
+    }
 }

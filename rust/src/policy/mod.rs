@@ -1,0 +1,179 @@
+//! # Per-request pruning policies: classes, table, router
+//!
+//! Every request in the serving stack used to run at one global
+//! (rho, tau) fixed when the engine was built. The paper's premise is
+//! that attention redundancy varies *at run time*, so this subsystem
+//! makes the pruning knobs per-request state — the same promotion
+//! `inv_scale` (calibration) and [`crate::session::SessionMode`] went
+//! through before it:
+//!
+//! * [`PruningPolicy`] — the value type: `(rho, tau, head_budget)`.
+//!   `rho`/`tau` override the kernel's configured knobs wholesale;
+//!   `head_budget` caps how many heads *per layer* may survive the
+//!   early head decision, folded in as `tau = +inf` for head indices
+//!   at or past the budget (a forced early prune, which the sequential
+//!   reference expresses with the same parameters — so budgeted
+//!   execution stays bitwise on the reference contract). `rho` is
+//!   clamped to `[-1, 1]` exactly like
+//!   [`crate::sim::SparsityEngine::new`] and
+//!   [`crate::attention::hdp::row_threshold`] clamp it.
+//! * [`PolicyTable`] — the named request classes a fleet shares:
+//!   `global` (id 0, mirroring the engine's configured knobs — the
+//!   single-global-policy baseline), `exact` (no pruning), `balanced`
+//!   and `aggressive`, extendable/overridable from a
+//!   `name:rho,tau[,budget]` spec string (`--policy-table`). Requests
+//!   name classes by [`PolicyId`] (their index in the table), which
+//!   keeps the id `Copy + Eq` for typed refusals.
+//! * [`PolicyRouter`] — picks a class per request when the client
+//!   didn't. [`StaticRouter`] always answers one class;
+//!   [`StatsRouter`] decides from [`PolicyFeatures`] — cheap integer
+//!   statistics (token count, quantized score mass/spread) the score
+//!   pipeline's own derivation already produces. Both are pure
+//!   functions of their inputs: routing is deterministic and
+//!   unit-testable, never a scheduling side effect.
+//!
+//! ## How a policy flows through the stack
+//!
+//! A request carries an optional [`PolicyId`]
+//! ([`crate::coordinator::Request::with_policy`] / `--policy-class`).
+//! The engine resolves the *effective* class before touching any
+//! state: an explicit id wins; otherwise the router (when installed)
+//! routes the request's features; otherwise the `global` class. For
+//! decode sessions the class is fixed at the session's first request —
+//! recorded in the session store, journaled with the stream, and
+//! restored on eviction replay, spill restore and lane failover — and
+//! a later step naming a *different* class is refused pre-mutation
+//! with the typed, non-retryable
+//! [`crate::coordinator::RejectReason::PolicyMismatch`], exactly like
+//! a mode mismatch. Co-batched requests with different policies each
+//! run their own knobs, bitwise equal to a sequential reference run at
+//! that policy (pinned by `rust/tests/policy_conformance.rs`).
+
+mod router;
+mod table;
+
+pub use router::{PolicyFeatures, PolicyRouter, StaticRouter, StatsRouter};
+pub use table::{PolicyTable, GLOBAL_CLASS};
+
+use crate::attention::hdp::HdpParams;
+
+/// Index of a class in the fleet-shared [`PolicyTable`] — the form a
+/// policy travels in (on requests, in session entries, in journal
+/// records). `u32` keeps it `Copy + Eq + Hash`, so typed refusals can
+/// carry both sides of a mismatch.
+pub type PolicyId = u32;
+
+/// One request class's pruning knobs. See the module docs for how the
+/// three fields act; construction clamps `rho` onto the same `[-1, 1]`
+/// domain the sparsity engine and `row_threshold` enforce, so a table
+/// entry can never disagree with what the kernel actually runs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PruningPolicy {
+    /// Block-pruning aggressiveness (Algorithm 2's Θ interpolation
+    /// knob), clamped to `[-1, 1]`: `-1` keeps every block, `1` keeps
+    /// only each row's argmax.
+    pub rho: f32,
+    /// Early head-pruning threshold: a head survives iff
+    /// `theta_head > tau`. `NEG_INFINITY` keeps every head.
+    pub tau: f32,
+    /// Per-layer cap on surviving heads: head indices `>= budget` run
+    /// at `tau = +inf` (forced early prune — zero output, no FUM /
+    /// softmax / P·V work). `None` = no cap.
+    pub head_budget: Option<usize>,
+}
+
+impl PruningPolicy {
+    /// Policy with `rho` clamped onto the engine's domain (see
+    /// [`PruningPolicy::clamped`]).
+    pub fn new(rho: f32, tau: f32, head_budget: Option<usize>) -> Self {
+        Self { rho, tau, head_budget }.clamped()
+    }
+
+    /// `rho` folded onto `[-1, 1]` — **bitwise** the clamp
+    /// [`crate::sim::SparsityEngine::new`] applies (and
+    /// [`crate::attention::hdp::row_threshold`] re-applies), so a
+    /// policy's stored `rho` always equals the value the sparsity
+    /// engine would run at. `tau` and the budget pass through
+    /// untouched (`tau` has no domain clamp anywhere in the stack).
+    pub fn clamped(self) -> Self {
+        Self { rho: self.rho.clamp(-1.0, 1.0), ..self }
+    }
+
+    /// The kernel parameters head `head` of a layer runs at under this
+    /// policy: `rho`/`tau` replace the base knobs, everything else
+    /// (`inv_scale`, `use_ff`, `use_hw_softmax`, `block`) keeps the
+    /// engine's configuration. A head at or past the budget gets
+    /// `tau = +inf`, which the kernel's early decision
+    /// (`theta_head > tau`) can never pass — the forced prune is
+    /// expressed *in the parameters*, so the sequential reference run
+    /// at the same parameters is bitwise identical by construction.
+    pub fn params_for_head(&self, head: usize, base: HdpParams) -> HdpParams {
+        let tau = match self.head_budget {
+            Some(budget) if head >= budget => f32::INFINITY,
+            _ => self.tau,
+        };
+        HdpParams { rho: self.rho, tau, ..base }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamp_is_bitwise_the_sparsity_engine_clamp() {
+        for rho in [
+            -2.0f32,
+            -1.0 - f32::EPSILON,
+            -1.0,
+            -0.3,
+            0.0,
+            0.4,
+            1.0,
+            1.0 + f32::EPSILON,
+            100.0,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+        ] {
+            let p = PruningPolicy::new(rho, 0.0, None);
+            assert_eq!(
+                p.rho.to_bits(),
+                rho.clamp(-1.0, 1.0).to_bits(),
+                "rho={rho}"
+            );
+        }
+    }
+
+    #[test]
+    fn budget_folds_to_infinite_tau_past_the_cap() {
+        let base = HdpParams::default();
+        let p = PruningPolicy::new(0.5, 0.25, Some(2));
+        for head in 0..2 {
+            let hp = p.params_for_head(head, base);
+            assert_eq!(hp.tau.to_bits(), 0.25f32.to_bits());
+            assert_eq!(hp.rho.to_bits(), 0.5f32.to_bits());
+        }
+        for head in 2..6 {
+            let hp = p.params_for_head(head, base);
+            assert_eq!(hp.tau, f32::INFINITY, "head {head} past budget");
+        }
+        // No budget: every head gets the policy's tau.
+        let open = PruningPolicy::new(0.5, 0.25, None);
+        assert_eq!(open.params_for_head(99, base).tau.to_bits(), 0.25f32.to_bits());
+    }
+
+    #[test]
+    fn params_for_head_preserves_base_execution_knobs() {
+        let base = HdpParams {
+            inv_scale: 0.125,
+            use_ff: true,
+            use_hw_softmax: true,
+            ..Default::default()
+        };
+        let hp = PruningPolicy::new(0.9, 1.0, Some(1)).params_for_head(0, base);
+        assert_eq!(hp.inv_scale.to_bits(), base.inv_scale.to_bits());
+        assert!(hp.use_ff);
+        assert!(hp.use_hw_softmax);
+        assert_eq!(hp.block, base.block);
+    }
+}

@@ -1,0 +1,200 @@
+//! Per-request class selection for requests that didn't name one.
+//!
+//! A [`PolicyRouter`] is a *pure function* from [`PolicyFeatures`] to a
+//! [`PolicyId`] — no clocks, no RNG, no scheduling state — so the class
+//! a request runs at is reproducible from the request alone, and the
+//! conformance harness can re-derive it when building the sequential
+//! reference. The features are integer statistics the score pipeline
+//! already computes: the request's token count plus the mass/spread of
+//! the quantized integer Q field `derive_head_inputs` produces for the
+//! probe head (layer 0, head 0). Quantized field values are exact
+//! small integers (stored in f32 on the grid), so the accumulations
+//! below are exact integer arithmetic — bit-stable across platforms.
+
+use std::fmt;
+
+use super::PolicyId;
+
+/// Cheap, exact integer features of one request, fed to a
+/// [`PolicyRouter`]. See [`PolicyFeatures::from_int_field`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PolicyFeatures {
+    /// Number of input tokens (rows of the quantized Q field).
+    pub token_count: u64,
+    /// Σ|q| over the probe head's quantized integer Q field — total
+    /// score mass; large mass means strong, concentrated activations.
+    pub mass: u64,
+    /// `n·Σq² − (Σ|q|)²` — `n²` times the variance of `|q|` (exact,
+    /// since the field holds integers). Zero means perfectly flat
+    /// magnitudes; large means a few dominant entries.
+    pub spread: u64,
+}
+
+impl PolicyFeatures {
+    /// Derive features from a quantized integer field (the `iq` tensor
+    /// from `derive_head_inputs`, whose entries are exact integers on
+    /// the quant grid). Saturates at `u64::MAX` rather than wrapping so
+    /// the decision stays deterministic for adversarially long inputs.
+    pub fn from_int_field(token_count: usize, ints: &[f32]) -> Self {
+        let mut mass: u128 = 0;
+        let mut m2: u128 = 0;
+        for &q in ints {
+            let a = q.abs() as u128;
+            mass += a;
+            m2 += a * a;
+        }
+        let n = ints.len() as u128;
+        let spread = (n * m2).saturating_sub(mass * mass);
+        Self {
+            token_count: token_count as u64,
+            mass: u64::try_from(mass).unwrap_or(u64::MAX),
+            spread: u64::try_from(spread).unwrap_or(u64::MAX),
+        }
+    }
+}
+
+/// Maps a request's [`PolicyFeatures`] to the [`PolicyId`] it should
+/// run at. Implementations must be deterministic: equal features,
+/// equal class — the conformance suites rely on it.
+pub trait PolicyRouter: Send + Sync + fmt::Debug {
+    /// The class for a request with these features.
+    fn route(&self, features: &PolicyFeatures) -> PolicyId;
+}
+
+/// The trivial router: every unlabelled request runs one fixed class
+/// (a table lookup done once at construction).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StaticRouter(pub PolicyId);
+
+impl PolicyRouter for StaticRouter {
+    fn route(&self, _features: &PolicyFeatures) -> PolicyId {
+        self.0
+    }
+}
+
+/// Integer-statistics router (the msinap/dynamic-pruning idea with the
+/// learned model replaced by a transparent decision rule):
+///
+/// 1. `token_count <= short_tokens` → `exact`. Short requests have
+///    little redundancy to harvest and pruning overhead dominates.
+/// 2. Otherwise, compare the field's relative spread to its mass:
+///    `spread <= mass²` (coefficient of variation of `|q|` at most 1)
+///    → `aggressive`. Flat score magnitudes mean attention is spread
+///    thin and mostly redundant — prune hard.
+/// 3. Otherwise → `balanced`. Spiky magnitudes mean a few
+///    entries carry the row; prune conservatively.
+///
+/// All comparisons are exact integer arithmetic (widened to `u128` for
+/// the square), so the decision is deterministic and platform-stable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StatsRouter {
+    /// Class for rule 1 (short requests).
+    pub exact: PolicyId,
+    /// Class for rule 3 (spiky magnitudes).
+    pub balanced: PolicyId,
+    /// Class for rule 2 (flat magnitudes).
+    pub aggressive: PolicyId,
+    /// Token-count threshold at or below which requests route `exact`.
+    pub short_tokens: u64,
+}
+
+impl StatsRouter {
+    /// Router over the built-in class names of `table`, with the
+    /// default short-request threshold of one 8-token block.
+    pub fn from_table(table: &super::PolicyTable) -> anyhow::Result<Self> {
+        Ok(Self {
+            exact: table.require("exact")?,
+            balanced: table.require("balanced")?,
+            aggressive: table.require("aggressive")?,
+            short_tokens: 8,
+        })
+    }
+}
+
+impl PolicyRouter for StatsRouter {
+    fn route(&self, f: &PolicyFeatures) -> PolicyId {
+        if f.token_count <= self.short_tokens {
+            return self.exact;
+        }
+        let mass_sq = (f.mass as u128) * (f.mass as u128);
+        if (f.spread as u128) <= mass_sq {
+            self.aggressive
+        } else {
+            self.balanced
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{PolicyTable, PruningPolicy};
+    use super::*;
+
+    fn router() -> StatsRouter {
+        let table = PolicyTable::builtin(PruningPolicy::new(0.5, 0.0, None));
+        StatsRouter::from_table(&table).unwrap()
+    }
+
+    #[test]
+    fn features_are_exact_integer_statistics() {
+        // Field [3, -1, 2, 0]: mass = 6, Σq² = 14, spread = 4·14 − 36 = 20.
+        let f = PolicyFeatures::from_int_field(2, &[3.0, -1.0, 2.0, 0.0]);
+        assert_eq!(f, PolicyFeatures { token_count: 2, mass: 6, spread: 20 });
+        // Flat field: zero spread.
+        let flat = PolicyFeatures::from_int_field(4, &[5.0; 8]);
+        assert_eq!(flat.spread, 0);
+        assert_eq!(flat.mass, 40);
+    }
+
+    #[test]
+    fn stats_router_is_deterministic_and_total() {
+        let r = router();
+        let cases = [
+            PolicyFeatures { token_count: 4, mass: 100, spread: 5 },
+            PolicyFeatures { token_count: 8, mass: 0, spread: 0 },
+            PolicyFeatures { token_count: 9, mass: 10, spread: 100 },
+            PolicyFeatures { token_count: 64, mass: 10, spread: 101 },
+            PolicyFeatures { token_count: 64, mass: 10, spread: 99 },
+            PolicyFeatures { token_count: u64::MAX, mass: u64::MAX, spread: u64::MAX },
+        ];
+        for f in cases {
+            let first = r.route(&f);
+            for _ in 0..32 {
+                assert_eq!(r.route(&f), first, "nondeterministic for {f:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn stats_router_decision_boundaries() {
+        let r = router();
+        // Rule 1: at/below the short threshold → exact.
+        assert_eq!(r.route(&PolicyFeatures { token_count: 8, mass: 9, spread: 999 }), r.exact);
+        // Rule 2: spread == mass² sits on the flat side → aggressive.
+        assert_eq!(
+            r.route(&PolicyFeatures { token_count: 9, mass: 10, spread: 100 }),
+            r.aggressive
+        );
+        // Rule 3: just past the boundary → balanced.
+        assert_eq!(
+            r.route(&PolicyFeatures { token_count: 9, mass: 10, spread: 101 }),
+            r.balanced
+        );
+        // mass² widens to u128 — no overflow panic at u64::MAX mass.
+        assert_eq!(
+            r.route(&PolicyFeatures { token_count: 9, mass: u64::MAX, spread: u64::MAX }),
+            r.aggressive
+        );
+    }
+
+    #[test]
+    fn static_router_ignores_features() {
+        let r = StaticRouter(3);
+        for f in [
+            PolicyFeatures { token_count: 0, mass: 0, spread: 0 },
+            PolicyFeatures { token_count: 1 << 40, mass: 77, spread: 1 },
+        ] {
+            assert_eq!(r.route(&f), 3);
+        }
+    }
+}

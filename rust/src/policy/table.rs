@@ -1,0 +1,251 @@
+//! The named, fleet-shared table of request classes.
+//!
+//! A [`PolicyTable`] is built once (engine construction / CLI parse)
+//! and shared read-only by every lane: ids are stable for the life of
+//! the fleet, so a [`PolicyId`](super::PolicyId) recorded in a session
+//! entry or journal record on one lane names the same knobs after a
+//! failover onto another. Class `0` is always [`GLOBAL_CLASS`] — the
+//! engine's own configured knobs — so "no policy anywhere" and
+//! "explicitly the global policy" are the same execution, bitwise.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::{PolicyId, PruningPolicy};
+
+/// Name of the always-present class `0`: the engine's configured
+/// (rho, tau) with no head budget — the single-global-policy baseline.
+pub const GLOBAL_CLASS: &str = "global";
+
+/// An immutable table of named [`PruningPolicy`] classes, indexed by
+/// [`PolicyId`]. See the [module docs](self) for the id-stability
+/// contract and [`PolicyTable::parse`] for the CLI spec grammar.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyTable {
+    names: Vec<String>,
+    policies: Vec<PruningPolicy>,
+}
+
+impl PolicyTable {
+    /// The built-in classes, with `global` (id 0) mirroring the
+    /// engine's configured knobs:
+    ///
+    /// | id | name         | rho  | tau   | head budget |
+    /// |----|--------------|------|-------|-------------|
+    /// | 0  | `global`     | —    | —     | engine knobs, no budget |
+    /// | 1  | `exact`      | -1.0 | -inf  | none (keep everything) |
+    /// | 2  | `balanced`   | 0.4  | 0.0   | none |
+    /// | 3  | `aggressive` | 0.9  | 0.5   | 2 heads/layer |
+    pub fn builtin(global: PruningPolicy) -> Self {
+        let mut t = Self { names: Vec::new(), policies: Vec::new() };
+        t.insert(GLOBAL_CLASS, global);
+        t.insert("exact", PruningPolicy::new(-1.0, f32::NEG_INFINITY, None));
+        t.insert("balanced", PruningPolicy::new(0.4, 0.0, None));
+        t.insert("aggressive", PruningPolicy::new(0.9, 0.5, Some(2)));
+        t
+    }
+
+    /// Extend/override the built-in table from a `--policy-table` spec:
+    /// semicolon-separated `name:rho,tau[,head_budget]` entries, e.g.
+    /// `bulk:0.8,0.25;pinned:0.0,-inf,4`. A known name (other than
+    /// `global`, which always mirrors the engine knobs) replaces that
+    /// class in place — its id is unchanged; a new name appends.
+    /// Malformed entries are typed parse errors, refused before any
+    /// engine is built.
+    pub fn parse(spec: &str, global: PruningPolicy) -> Result<Self> {
+        let mut t = Self::builtin(global);
+        for entry in spec.split(';').filter(|e| !e.trim().is_empty()) {
+            let entry = entry.trim();
+            let (name, knobs) = entry.split_once(':').with_context(|| {
+                format!("policy-table entry '{entry}': expected name:rho,tau[,head_budget]")
+            })?;
+            let name = name.trim();
+            ensure!(!name.is_empty(), "policy-table entry '{entry}': empty class name");
+            ensure!(
+                name != GLOBAL_CLASS,
+                "policy-table entry '{entry}': class '{GLOBAL_CLASS}' always mirrors the \
+                 engine's --rho/--tau knobs and cannot be redefined"
+            );
+            let parts: Vec<&str> = knobs.split(',').map(str::trim).collect();
+            ensure!(
+                parts.len() == 2 || parts.len() == 3,
+                "policy-table entry '{entry}': expected rho,tau or rho,tau,head_budget, \
+                 got {} field(s)",
+                parts.len()
+            );
+            let rho: f32 = parts[0]
+                .parse()
+                .with_context(|| format!("policy-table entry '{entry}': bad rho '{}'", parts[0]))?;
+            ensure!(
+                !rho.is_nan(),
+                "policy-table entry '{entry}': rho must not be NaN"
+            );
+            let tau: f32 = parts[1]
+                .parse()
+                .with_context(|| format!("policy-table entry '{entry}': bad tau '{}'", parts[1]))?;
+            ensure!(
+                !tau.is_nan(),
+                "policy-table entry '{entry}': tau must not be NaN"
+            );
+            let head_budget = match parts.get(2) {
+                None => None,
+                Some(b) => {
+                    let budget: usize = b.parse().with_context(|| {
+                        format!("policy-table entry '{entry}': bad head_budget '{b}'")
+                    })?;
+                    ensure!(
+                        budget > 0,
+                        "policy-table entry '{entry}': head_budget 0 would prune every \
+                         head; use tau=inf on an explicit class if that is really intended"
+                    );
+                    Some(budget)
+                }
+            };
+            t.insert(name, PruningPolicy::new(rho, tau, head_budget));
+        }
+        Ok(t)
+    }
+
+    /// Insert-or-replace by name (replace keeps the existing id).
+    fn insert(&mut self, name: &str, policy: PruningPolicy) {
+        let policy = policy.clamped();
+        match self.names.iter().position(|n| n == name) {
+            Some(i) => self.policies[i] = policy,
+            None => {
+                self.names.push(name.to_string());
+                self.policies.push(policy);
+            }
+        }
+    }
+
+    /// Resolve a class name (as typed on `--policy-class`) to its id.
+    pub fn id_of(&self, name: &str) -> Option<PolicyId> {
+        self.names.iter().position(|n| n == name).map(|i| i as PolicyId)
+    }
+
+    /// Like [`PolicyTable::id_of`] but a typed error naming the known
+    /// classes — the CLI-facing lookup.
+    pub fn require(&self, name: &str) -> Result<PolicyId> {
+        match self.id_of(name) {
+            Some(id) => Ok(id),
+            None => bail!(
+                "unknown policy class '{name}' (known classes: {})",
+                self.names.join(", ")
+            ),
+        }
+    }
+
+    /// The class name for an id (for reports and error messages).
+    pub fn name_of(&self, id: PolicyId) -> Option<&str> {
+        self.names.get(id as usize).map(String::as_str)
+    }
+
+    /// The knobs for an id.
+    pub fn get(&self, id: PolicyId) -> Option<PruningPolicy> {
+        self.policies.get(id as usize).copied()
+    }
+
+    /// Number of classes (ids are `0..len`).
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    /// Always false — `global` is always present.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Iterate `(id, name, policy)` in id order.
+    pub fn iter(&self) -> impl Iterator<Item = (PolicyId, &str, PruningPolicy)> {
+        self.names
+            .iter()
+            .zip(&self.policies)
+            .enumerate()
+            .map(|(i, (n, p))| (i as PolicyId, n.as_str(), *p))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn global() -> PruningPolicy {
+        PruningPolicy::new(0.6, 0.1, None)
+    }
+
+    #[test]
+    fn builtin_has_global_at_id_zero() {
+        let t = PolicyTable::builtin(global());
+        assert_eq!(t.id_of(GLOBAL_CLASS), Some(0));
+        assert_eq!(t.get(0), Some(global()));
+        assert_eq!(t.len(), 4);
+        for name in ["exact", "balanced", "aggressive"] {
+            assert!(t.id_of(name).is_some(), "{name} missing");
+        }
+        let exact = t.get(t.id_of("exact").unwrap()).unwrap();
+        assert_eq!(exact.rho, -1.0);
+        assert_eq!(exact.tau, f32::NEG_INFINITY);
+        assert_eq!(exact.head_budget, None);
+    }
+
+    #[test]
+    fn parse_appends_and_overrides_without_moving_ids() {
+        let t = PolicyTable::parse("bulk:0.8,0.25;balanced:0.5,0.0,4", global()).unwrap();
+        // Override kept balanced's builtin id…
+        let builtin = PolicyTable::builtin(global());
+        assert_eq!(t.id_of("balanced"), builtin.id_of("balanced"));
+        let b = t.get(t.id_of("balanced").unwrap()).unwrap();
+        assert_eq!(b.rho, 0.5);
+        assert_eq!(b.head_budget, Some(4));
+        // …and the new class appended past the builtins.
+        assert_eq!(t.id_of("bulk"), Some(builtin.len() as PolicyId));
+        assert_eq!(t.len(), builtin.len() + 1);
+    }
+
+    #[test]
+    fn parse_clamps_rho_onto_the_engine_domain() {
+        let t = PolicyTable::parse("wild:7.5,0.0", global()).unwrap();
+        let w = t.get(t.id_of("wild").unwrap()).unwrap();
+        assert_eq!(w.rho.to_bits(), 1.0f32.to_bits());
+    }
+
+    #[test]
+    fn parse_refuses_malformed_entries_with_typed_messages() {
+        let cases = [
+            ("noknobs", "expected name:rho,tau"),
+            (":0.5,0.0", "empty class name"),
+            ("a:0.5", "got 1 field"),
+            ("a:0.5,0.0,3,9", "got 4 field"),
+            ("a:x,0.0", "bad rho"),
+            ("a:0.5,y", "bad tau"),
+            ("a:0.5,0.0,many", "bad head_budget"),
+            ("a:0.5,0.0,0", "head_budget 0"),
+            ("a:NaN,0.0", "must not be NaN"),
+            ("global:0.5,0.0", "cannot be redefined"),
+        ];
+        for (spec, needle) in cases {
+            let err = PolicyTable::parse(spec, global()).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains(needle),
+                "spec '{spec}': message '{msg}' missing '{needle}'"
+            );
+        }
+    }
+
+    #[test]
+    fn require_names_known_classes_on_unknown() {
+        let t = PolicyTable::builtin(global());
+        let msg = format!("{:#}", t.require("warp").unwrap_err());
+        assert!(msg.contains("unknown policy class 'warp'"), "{msg}");
+        assert!(msg.contains("exact"), "{msg}");
+        assert_eq!(t.require("aggressive").unwrap(), t.id_of("aggressive").unwrap());
+    }
+
+    #[test]
+    fn iter_is_id_ordered() {
+        let t = PolicyTable::builtin(global());
+        let ids: Vec<PolicyId> = t.iter().map(|(id, _, _)| id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        assert_eq!(t.iter().next().unwrap().1, GLOBAL_CLASS);
+    }
+}

@@ -46,6 +46,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use super::cache::{KvCache, SessionMode};
+use crate::policy::PolicyId;
 
 /// Lifetime counters the failover metrics and tests surface.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -78,6 +79,11 @@ pub struct SessionRestore {
     /// re-homed causal session keeps refusing bidirectional steps
     /// (and vice versa) exactly like the lane it left.
     pub mode: SessionMode,
+    /// The session's pruning-policy class, fixed at its first journaled
+    /// commit alongside the mode. The adopting store pins it, so a
+    /// re-homed session keeps serving — and keeps refusing mismatched
+    /// claims — at exactly the class it started with.
+    pub policy: PolicyId,
     /// `(position, snapshot)`: the snapshot holds exactly `position`
     /// tokens of cached state; `tokens[position..]` is the replay
     /// suffix.
@@ -89,6 +95,7 @@ struct JournalEntry {
     tokens: Vec<i32>,
     cal_scale: f32,
     mode: SessionMode,
+    policy: PolicyId,
     checkpoint: Option<(usize, Arc<KvCache>)>,
 }
 
@@ -136,24 +143,26 @@ impl SessionJournal {
     }
 
     /// Record a commit: `appended` extends `session`'s journaled
-    /// stream, served at `cal_scale` in `mode` (both fixed at the
-    /// first record — the engine refuses mismatching steps before they
-    /// reach the journal). Returns the new stream length. Called by
-    /// the owning lane inside its commit phase, so the journal is
-    /// always at least as current as any response the fleet has
-    /// produced.
+    /// stream, served at `cal_scale` in `mode` at pruning class
+    /// `policy` (all fixed at the first record — the engine refuses
+    /// mismatching steps before they reach the journal). Returns the
+    /// new stream length. Called by the owning lane inside its commit
+    /// phase, so the journal is always at least as current as any
+    /// response the fleet has produced.
     pub fn record(
         &self,
         session: u64,
         appended: &[i32],
         cal_scale: f32,
         mode: SessionMode,
+        policy: PolicyId,
     ) -> usize {
         let mut inner = self.inner.lock().unwrap();
         let e = inner.entry(session).or_insert_with(|| JournalEntry {
             tokens: Vec::new(),
             cal_scale,
             mode,
+            policy,
             checkpoint: None,
         });
         debug_assert_eq!(
@@ -164,6 +173,10 @@ impl SessionJournal {
         debug_assert_eq!(
             e.mode, mode,
             "session {session}: mode changed mid-stream"
+        );
+        debug_assert_eq!(
+            e.policy, policy,
+            "session {session}: pruning class changed mid-stream"
         );
         e.tokens.extend_from_slice(appended);
         let len = e.tokens.len();
@@ -227,6 +240,7 @@ impl SessionJournal {
             tokens: e.tokens.clone(),
             cal_scale: e.cal_scale,
             mode: e.mode,
+            policy: e.policy,
             checkpoint: e.checkpoint.clone(),
         };
         drop(inner);
@@ -264,8 +278,8 @@ mod tests {
     fn records_accumulate_the_stream() {
         let j = SessionJournal::new();
         assert_eq!(j.len(7), 0);
-        assert_eq!(j.record(7, &[1, 2], 1.0, SessionMode::default()), 2);
-        assert_eq!(j.record(7, &[3], 1.0, SessionMode::default()), 3);
+        assert_eq!(j.record(7, &[1, 2], 1.0, SessionMode::default(), 0), 2);
+        assert_eq!(j.record(7, &[3], 1.0, SessionMode::default(), 0), 3);
         assert_eq!(j.len(7), 3);
         assert_eq!(j.sessions(), 1);
         let r = j.restore_for(7, 1.0).unwrap().expect("known session");
@@ -284,7 +298,7 @@ mod tests {
     #[test]
     fn policy_scale_mismatch_is_refused() {
         let j = SessionJournal::new();
-        j.record(1, &[5], 0.5, SessionMode::default());
+        j.record(1, &[5], 0.5, SessionMode::default(), 0);
         assert!(j.restore_for(1, 1.0).is_err());
         assert!(j.restore_for(1, 0.5).unwrap().is_some());
     }
@@ -292,15 +306,15 @@ mod tests {
     #[test]
     fn checkpoint_cadence_and_refresh() {
         let j = SessionJournal::with_checkpoints(4);
-        j.record(1, &[1, 2, 3], 1.0, SessionMode::default());
+        j.record(1, &[1, 2, 3], 1.0, SessionMode::default(), 0);
         assert!(!j.wants_checkpoint(1), "3 < 4 tokens since last");
-        j.record(1, &[4], 1.0, SessionMode::default());
+        j.record(1, &[4], 1.0, SessionMode::default(), 0);
         assert!(j.wants_checkpoint(1));
         j.checkpoint(1, &cache_with(4));
         assert!(!j.wants_checkpoint(1), "fresh checkpoint at 4");
-        j.record(1, &[5, 6, 7], 1.0, SessionMode::default());
+        j.record(1, &[5, 6, 7], 1.0, SessionMode::default(), 0);
         assert!(!j.wants_checkpoint(1), "7 - 4 < 4");
-        j.record(1, &[8], 1.0, SessionMode::default());
+        j.record(1, &[8], 1.0, SessionMode::default(), 0);
         assert!(j.wants_checkpoint(1));
         let r = j.restore_for(1, 1.0).unwrap().unwrap();
         let (at, snap) = r.checkpoint.expect("checkpointed");
@@ -314,7 +328,7 @@ mod tests {
     #[test]
     fn mispositioned_checkpoint_is_refused() {
         let j = SessionJournal::with_checkpoints(2);
-        j.record(1, &[1, 2, 3], 1.0, SessionMode::default());
+        j.record(1, &[1, 2, 3], 1.0, SessionMode::default(), 0);
         j.checkpoint(1, &cache_with(2)); // cache behind the stream
         let r = j.restore_for(1, 1.0).unwrap().unwrap();
         assert!(r.checkpoint.is_none(), "stale-length snapshot refused");
@@ -327,18 +341,20 @@ mod tests {
     fn mode_round_trips_through_restore() {
         let j = SessionJournal::new();
         let causal = SessionMode::Causal { window: Some(8) };
-        j.record(1, &[1, 2], 1.0, causal);
-        j.record(2, &[3], 1.0, SessionMode::default());
+        j.record(1, &[1, 2], 1.0, causal, 2);
+        j.record(2, &[3], 1.0, SessionMode::default(), 0);
         let r1 = j.restore_for(1, 1.0).unwrap().unwrap();
         assert_eq!(r1.mode, causal, "causal session restores causal");
+        assert_eq!(r1.policy, 2, "pruning class restores with the mode");
         let r2 = j.restore_for(2, 1.0).unwrap().unwrap();
         assert_eq!(r2.mode, SessionMode::Bidirectional);
+        assert_eq!(r2.policy, 0);
     }
 
     #[test]
     fn zero_period_never_wants_checkpoints() {
         let j = SessionJournal::new();
-        j.record(1, &[1, 2, 3, 4, 5], 1.0, SessionMode::default());
+        j.record(1, &[1, 2, 3, 4, 5], 1.0, SessionMode::default(), 0);
         assert!(!j.wants_checkpoint(1));
     }
 }

@@ -54,6 +54,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use super::cache::{KvCache, SessionMode};
+use crate::policy::PolicyId;
 
 /// Geometry + budget of a session store: the per-head cache shape
 /// (mirroring the engine's native model geometry, `d_v == d_head`
@@ -256,6 +257,11 @@ struct SessionEntry {
     /// refuses any later step naming a different mode before touching
     /// state.
     mode: SessionMode,
+    /// The pruning-policy class the session decodes at, fixed when the
+    /// engine first serves it (`None` until then — checkout alone does
+    /// not decide a class). Like `mode`, the engine refuses any later
+    /// step claiming a different class before touching state.
+    policy: Option<PolicyId>,
 }
 
 /// Store-lifetime counters the serving metrics surface.
@@ -383,6 +389,32 @@ impl SessionStore {
         self.sessions.get(&session).map(|e| e.mode)
     }
 
+    /// The pruning-policy class a session is pinned to (`None` for a
+    /// session the store has never seen *or* one checked out but not
+    /// yet served — the engine records the class via [`Self::note_policy`]
+    /// on first serve). The engine's validate-before-mutate step checks
+    /// a decode request's claimed class against this, exactly like
+    /// [`Self::mode_of`] for modes.
+    pub fn policy_of(&self, session: u64) -> Option<PolicyId> {
+        self.sessions.get(&session).and_then(|e| e.policy)
+    }
+
+    /// Pin a session's pruning-policy class on first serve. A no-op
+    /// when the class is already recorded — the engine's validation
+    /// guarantees agreement, which the debug assert re-checks — and for
+    /// sessions the store has never seen.
+    pub fn note_policy(&mut self, session: u64, policy: PolicyId) {
+        if let Some(e) = self.sessions.get_mut(&session) {
+            match e.policy {
+                None => e.policy = Some(policy),
+                Some(p) => debug_assert_eq!(
+                    p, policy,
+                    "policy mismatches are refused by the engine before checkout"
+                ),
+            }
+        }
+    }
+
     /// The stream position the server expects a session's next decode
     /// step to append at — its committed context length (0 for a
     /// session the store has never seen). This is the per-session
@@ -435,6 +467,7 @@ impl SessionStore {
                     pages: 0,
                     last_touch: 0,
                     mode,
+                    policy: None,
                 },
             );
             self.stats.sessions_created += 1;
@@ -514,13 +547,15 @@ impl SessionStore {
     /// least as long is untouched (the journal can never be *behind*
     /// a correct lane — commits reach it before responses exist); a
     /// shorter local prefix keeps its cache (append-only streams make
-    /// any prefix consistent) and just extends the history. `mode` is
-    /// the journaled session mode — it fixes the mode of a session
-    /// the store has never seen, exactly like a first checkout.
+    /// any prefix consistent) and just extends the history. `mode` and
+    /// `policy` are the journaled session mode and pruning class —
+    /// they fix both for a session the store has never seen, exactly
+    /// like a first serve.
     pub fn adopt(
         &mut self,
         session: u64,
         mode: SessionMode,
+        policy: PolicyId,
         tokens: &[i32],
         checkpoint: Option<(usize, &KvCache)>,
     ) {
@@ -532,11 +567,19 @@ impl SessionStore {
             pages: 0,
             last_touch: 0,
             mode,
+            policy: Some(policy),
         });
         debug_assert_eq!(
             entry.mode, mode,
             "journal and store must agree on a session's mode"
         );
+        match entry.policy {
+            None => entry.policy = Some(policy),
+            Some(p) => debug_assert_eq!(
+                p, policy,
+                "journal and store must agree on a session's pruning class"
+            ),
+        }
         if entry.history.len() >= tokens.len() {
             return;
         }
@@ -909,6 +952,32 @@ mod tests {
     }
 
     #[test]
+    fn policy_pinned_at_first_serve_and_survives_eviction() {
+        let mut store = SessionStore::new(cfg(2));
+        assert_eq!(store.policy_of(7), None);
+        let (cache, _) = store.checkout(7);
+        assert_eq!(store.policy_of(7), None, "checkout alone decides nothing");
+        store.note_policy(7, 3);
+        assert_eq!(store.policy_of(7), Some(3));
+        store.note_policy(7, 3); // idempotent re-note
+        for _ in 0..4 {
+            cache.head(0, 0).lock().unwrap().append(&row());
+        }
+        drop(cache);
+        store.commit(7, &[7; 4]);
+        // Eviction drops pages, never the class.
+        grow(&mut store, 8, 4); // budget 2: session 7 evicted
+        assert!(store.stats().evictions >= 1);
+        assert_eq!(store.policy_of(7), Some(3), "class survives eviction");
+        // Unknown sessions are ignored — noting is not creating.
+        store.note_policy(99, 1);
+        assert_eq!(store.policy_of(99), None);
+        // A journal-seeded session arrives with its class pinned.
+        store.adopt(42, SessionMode::default(), 2, &[1, 2, 3], None);
+        assert_eq!(store.policy_of(42), Some(2));
+    }
+
+    #[test]
     fn spilled_session_restores_without_replay() {
         let mut store = SessionStore::new(cfg(4));
         store.attach_spill_tier(Box::new(InMemorySpillTier::new()));
@@ -1011,7 +1080,7 @@ mod tests {
 
         let mut store = SessionStore::new(c);
         let full: Vec<i32> = vec![7; 6];
-        store.adopt(9, SessionMode::default(), &full, Some((4, &snap)));
+        store.adopt(9, SessionMode::default(), 0, &full, Some((4, &snap)));
         assert_eq!(store.stats().adoptions, 1);
         assert_eq!(store.expected_pos(9), 6);
         let (cache, replay) = store.checkout(9);
@@ -1024,7 +1093,7 @@ mod tests {
     #[test]
     fn adopt_without_checkpoint_replays_everything() {
         let mut store = SessionStore::new(cfg(usize::MAX));
-        store.adopt(3, SessionMode::default(), &[1, 2, 3, 4, 5], None);
+        store.adopt(3, SessionMode::default(), 0, &[1, 2, 3, 4, 5], None);
         let (cache, replay) = store.checkout(3);
         assert_eq!(cache.len(), 0);
         assert_eq!(replay, vec![1, 2, 3, 4, 5]);
@@ -1036,15 +1105,15 @@ mod tests {
         grow(&mut store, 1, 4);
         // A journal at or behind the local stream is a no-op: the
         // local lane already owns at least this much committed state.
-        store.adopt(1, SessionMode::default(), &[7, 7, 7], None);
-        store.adopt(1, SessionMode::default(), &[7, 7, 7, 7], None);
+        store.adopt(1, SessionMode::default(), 0, &[7, 7, 7], None);
+        store.adopt(1, SessionMode::default(), 0, &[7, 7, 7, 7], None);
         assert_eq!(store.stats().adoptions, 0);
         assert_eq!(store.expected_pos(1), 4);
         let (_, replay) = store.checkout(1);
         assert!(replay.is_empty(), "warm cache untouched by adopt");
         // A longer journal extends the history; the warm cache stays
         // (it is a consistent prefix) and only the gap replays.
-        store.adopt(1, SessionMode::default(), &[7, 7, 7, 7, 9, 9], None);
+        store.adopt(1, SessionMode::default(), 0, &[7, 7, 7, 7, 9, 9], None);
         assert_eq!(store.stats().adoptions, 1);
         let (cache, replay) = store.checkout(1);
         assert_eq!(cache.len(), 4);
@@ -1062,7 +1131,7 @@ mod tests {
 
         let mut store = SessionStore::new(cfg(4));
         grow(&mut store, 2, 4); // 2 pages resident
-        store.adopt(1, SessionMode::default(), &vec![7i32; 6], Some((6, &snap)));
+        store.adopt(1, SessionMode::default(), 0, &vec![7i32; 6], Some((6, &snap)));
         // 3 + 2 = 5 pages > budget 4: the colder session 2 is evicted.
         assert_eq!(store.stats().evictions, 1);
         assert!(store.total_pages() <= 4);

@@ -112,6 +112,14 @@ impl Args {
         Ok(self)
     }
 
+    /// Whether the user passed `--name` explicitly (as opposed to the
+    /// flag resting at its declared default). Lets callers refuse
+    /// values that are only meaningful as an *absence* — e.g. an
+    /// explicit `--window 0` where 0 is the "flag omitted" sentinel.
+    pub fn was_set(&self, name: &str) -> bool {
+        self.values.contains_key(name)
+    }
+
     fn raw(&self, name: &str) -> Option<String> {
         if let Some(v) = self.values.get(name) {
             return Some(v.clone());
@@ -211,6 +219,14 @@ mod tests {
             .parse(&[])
             .unwrap();
         assert_eq!(a.get_list("models"), vec!["tiny", "base"]);
+    }
+
+    #[test]
+    fn was_set_distinguishes_explicit_from_default() {
+        let a = args().parse(&toks(&["--out", "x", "--steps", "100"])).unwrap();
+        assert!(a.was_set("steps"), "explicit --steps 100 is set");
+        assert!(!a.was_set("model"), "defaulted flag is not set");
+        assert_eq!(a.get("model"), "tiny", "default still readable");
     }
 
     #[test]

@@ -1,0 +1,772 @@
+//! End-to-end conformance of per-request pruning policies: co-batched
+//! requests with **different policy classes** must each run their own
+//! knobs, with outputs **bitwise identical** to a sequential reference
+//! run at that request's policy — `hdp_head_reference` per
+//! (layer × head) at `PruningPolicy::params_for_head` over the engine's
+//! base kernel parameters. The matrix covers one-shot and decode
+//! batches, the pop-batch and continuous schedulers, sticky shard
+//! counts {1, 2, 4}, eviction/spill pressure, and a mid-run lane kill
+//! (the class must survive journal replay onto the adopting lane).
+//!
+//! Also the policy subsystem's regression surface: a decode step
+//! claiming a class other than its session's is refused *alone* with
+//! the typed, non-retryable [`RejectReason::PolicyMismatch`] —
+//! pre-mutation, so the correctly-labelled retry serves at the same
+//! position bitwise; the [`StatsRouter`] is a deterministic pure
+//! function the reference re-derives through [`Engine::route_for`];
+//! the policy `rho` clamp is bitwise the [`SparsityEngine`] clamp for
+//! arbitrary f32 bit patterns; and per-class [`Metrics`] accounting
+//! lands exactly once under cross-shard absorb.
+//!
+//! Needs no artifacts: the native backend derives every cached token's
+//! row deterministically from `(token, position, layer, head)`.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hdp::attention::hdp::{hdp_head_reference, row_threshold};
+use hdp::coordinator::{derive_head_inputs, derive_session_head_inputs,
+                       global_policy, pooled_label, Batcher, Engine,
+                       EvictionKind, FaultPlan, NativeModelConfig,
+                       RejectReason, Request, ServeMode, ShardedCoordinator};
+use hdp::policy::{PolicyId, PolicyTable, PruningPolicy, StaticRouter,
+                  StatsRouter};
+use hdp::sim::{SimConfig, SparsityEngine};
+use hdp::util::rng::SplitMix64;
+
+const GEOM: NativeModelConfig =
+    NativeModelConfig { n_layers: 2, n_heads: 3, d_head: 8 };
+
+fn engine(mode: ServeMode, threads: usize, max_batch: usize) -> Engine {
+    let batcher = Arc::new(Batcher::new(max_batch, Duration::from_millis(1)));
+    Engine::new_native(GEOM, mode, SimConfig::edge(), batcher, threads).unwrap()
+}
+
+fn mode_of(rho: f32, tau: f32) -> ServeMode {
+    ServeMode::Hdp { rho, tau, qstep: 1.0 / 4096.0 }
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The policy a class id names in `eng`'s table.
+fn class_policy(eng: &Engine, class: PolicyId) -> PruningPolicy {
+    eng.policy_table().get(class).expect("class is in the table")
+}
+
+/// Sequential reference for a **one-shot** served at `class`: every
+/// (layer, head) recomputed at `params_for_head` over the engine's own
+/// base parameters — for class 0 the clamp is idempotent on the
+/// in-domain configured rho, so "no policy" and "explicitly global"
+/// are the same parameters bitwise.
+fn oneshot_reference_bits(eng: &Engine, tokens: &[i32], class: PolicyId) -> Vec<u32> {
+    let base = eng.native_kernel_params().expect("native engine");
+    let profile = eng.native_profile().expect("native engine");
+    let pol = class_policy(eng, class);
+    let mut outputs = Vec::new();
+    for layer in 0..GEOM.n_layers {
+        for head in 0..GEOM.n_heads {
+            let (iq, fq, ik, fk, v) =
+                derive_head_inputs(tokens, layer, head, GEOM.d_head, profile);
+            let p = pol.params_for_head(head, base);
+            let o = hdp_head_reference(&iq, &fq, &ik, &fk, &v, p);
+            outputs.extend_from_slice(o.out.data());
+        }
+    }
+    bits(&outputs)
+}
+
+/// Sequential reference for a **decode step** of a session served at
+/// `class`: full recompute over the session's whole context, last
+/// query row of every (layer, head), at that class's per-head params.
+fn decode_reference_bits(eng: &Engine, context: &[i32], class: PolicyId) -> Vec<u32> {
+    let base = eng.native_kernel_params().expect("native engine");
+    let profile = eng.native_profile().expect("native engine");
+    let scale = eng.calibration_scale();
+    let pol = class_policy(eng, class);
+    let l = context.len();
+    let mut outputs = Vec::new();
+    for layer in 0..GEOM.n_layers {
+        for head in 0..GEOM.n_heads {
+            let (iq, fq, ik, fk, v) = derive_session_head_inputs(
+                context, layer, head, GEOM.d_head, profile, scale);
+            let p = pol.params_for_head(head, base);
+            let out = hdp_head_reference(&iq, &fq, &ik, &fk, &v, p);
+            outputs.extend_from_slice(
+                &out.out.data()[(l - 1) * GEOM.d_head..l * GEOM.d_head]);
+        }
+    }
+    bits(&outputs)
+}
+
+/// A deterministic multi-session decode schedule (same shape as the
+/// failover suite's): per-session ragged prefill, then `rounds`
+/// interleaved single-token steps. `prefixes[id]` is the session
+/// context after request `id`.
+fn make_schedule(
+    sessions: u64,
+    rounds: usize,
+    seed: u64,
+) -> (Vec<(u64, Vec<i32>)>, Vec<Vec<i32>>) {
+    let mut rng = SplitMix64::new(seed);
+    let mut schedule: Vec<(u64, Vec<i32>)> = Vec::new();
+    for s in 0..sessions {
+        let n = 3 + (s as usize % 3);
+        schedule.push((s, (0..n).map(|_| rng.next_below(30_000) as i32).collect()));
+    }
+    for _ in 0..rounds {
+        for s in 0..sessions {
+            schedule.push((s, vec![rng.next_below(30_000) as i32]));
+        }
+    }
+    let mut ctx: HashMap<u64, Vec<i32>> = HashMap::new();
+    let prefixes: Vec<Vec<i32>> = schedule
+        .iter()
+        .map(|(s, toks)| {
+            let c = ctx.entry(*s).or_default();
+            c.extend_from_slice(toks);
+            c.clone()
+        })
+        .collect();
+    (schedule, prefixes)
+}
+
+/// Class mix used by the multi-session tests: every residue class of
+/// `s % 4` runs a different policy, `None` = unlabelled (resolves to
+/// `global`). `aggressive` (head budget 2 < the 3 geometry heads) and
+/// `exact` both differ bitwise from any non-degenerate global mode, so
+/// a lost or swapped class cannot pass the bitwise check.
+fn class_name_of(s: u64) -> Option<&'static str> {
+    match s % 4 {
+        0 => Some("aggressive"),
+        1 => Some("exact"),
+        2 => None,
+        _ => Some("balanced"),
+    }
+}
+
+fn class_id_of(table: &PolicyTable, s: u64) -> PolicyId {
+    class_name_of(s).map(|n| table.id_of(n).unwrap()).unwrap_or(0)
+}
+
+#[test]
+fn mixed_class_oneshot_batch_each_request_runs_its_own_knobs() {
+    // The tentpole pin, one-shot side: five requests over the *same*
+    // tokens, each naming a different class (plus a custom table
+    // entry), co-batched through one serve — every response bitwise
+    // its own class's sequential reference, across fan-out widths.
+    let mode = mode_of(0.4, 0.0);
+    let table = Arc::new(
+        PolicyTable::parse("mild:0.1,-inf", global_policy(mode)).unwrap());
+    let mut rng = SplitMix64::new(0xA11C_0F);
+    let tokens: Vec<i32> =
+        (0..12).map(|_| rng.next_below(30_000) as i32).collect();
+    for threads in [1usize, 4] {
+        let eng = engine(mode, threads, 8)
+            .with_policy_table(Arc::clone(&table));
+        let classes: Vec<Option<&str>> = vec![
+            None, Some("global"), Some("exact"), Some("balanced"),
+            Some("aggressive"), Some("mild"),
+        ];
+        let reqs: Vec<Request> = classes
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let r = Request::oneshot(i as u64, tokens.clone());
+                match c {
+                    Some(name) => r.with_policy(table.id_of(name).unwrap()),
+                    None => r,
+                }
+            })
+            .collect();
+        let resps = eng.serve_batch(&reqs).unwrap();
+        assert_eq!(resps.len(), classes.len());
+        for (resp, c) in resps.iter().zip(&classes) {
+            let class = c.map(|n| table.id_of(n).unwrap()).unwrap_or(0);
+            assert!(!resp.rejected, "threads={threads} class={c:?}");
+            assert_eq!(bits(&resp.outputs),
+                       oneshot_reference_bits(&eng, &tokens, class),
+                       "threads={threads} class={c:?}");
+            assert_eq!(resp.label, pooled_label(&resp.outputs),
+                       "threads={threads} class={c:?}");
+        }
+        // Unlabelled == explicitly-global, bitwise (same execution)…
+        assert_eq!(bits(&resps[0].outputs), bits(&resps[1].outputs),
+                   "threads={threads}");
+        // …and the classes really diverged on the same tokens: exact
+        // keeps head 2, aggressive's budget force-prunes it.
+        assert_ne!(bits(&resps[2].outputs), bits(&resps[4].outputs),
+                   "threads={threads}: exact and aggressive must differ");
+        assert!(resps[4].heads_pruned >= GEOM.n_layers,
+                "threads={threads}: the budget prunes head 2 per layer");
+    }
+}
+
+#[test]
+fn labelled_class_equals_engine_configured_at_those_knobs() {
+    // A labelled request on the base engine is *the same serve* as an
+    // unlabelled request on an engine configured at that class's
+    // knobs: full response equality, not just outputs. (Classes with
+    // no head budget only — a budget has no engine-knob equivalent.)
+    let base = engine(mode_of(0.4, 0.0), 2, 4);
+    let table = Arc::clone(base.policy_table());
+    let mut rng = SplitMix64::new(0x1AB);
+    let tokens: Vec<i32> =
+        (0..16).map(|_| rng.next_below(30_000) as i32).collect();
+    for name in ["exact", "balanced"] {
+        let id = table.id_of(name).unwrap();
+        let pol = table.get(id).unwrap();
+        let knobs = engine(mode_of(pol.rho, pol.tau), 2, 4);
+        let labelled = base
+            .serve_batch(&[Request::oneshot(0, tokens.clone()).with_policy(id)])
+            .unwrap()
+            .remove(0);
+        let configured = knobs
+            .serve_batch(&[Request::oneshot(0, tokens.clone())])
+            .unwrap()
+            .remove(0);
+        assert_eq!(bits(&labelled.outputs), bits(&configured.outputs), "{name}");
+        assert_eq!(labelled.label, configured.label, "{name}");
+        assert_eq!(labelled.heads_pruned, configured.heads_pruned, "{name}");
+        assert_eq!(labelled.heads_total, configured.heads_total, "{name}");
+        assert_eq!(labelled.kept_density.to_bits(),
+                   configured.kept_density.to_bits(), "{name}");
+    }
+}
+
+#[test]
+fn mixed_class_decode_batch_inherits_sticky_class_per_session() {
+    // The decode side of the tentpole: three sessions at three classes
+    // co-batched through every pop — prefills labelled, later steps
+    // unlabelled (inheriting the session's recorded class), the last
+    // round re-claiming the same class (legal). Every step bitwise its
+    // session's class reference.
+    let eng = engine(mode_of(0.4, 0.0), 4, 8);
+    let table = Arc::clone(eng.policy_table());
+    let sessions: Vec<(u64, Option<&str>)> =
+        vec![(30, Some("exact")), (31, Some("aggressive")), (32, None)];
+    let mut rng = SplitMix64::new(0xDECAF);
+    let mut ctx: HashMap<u64, Vec<i32>> = HashMap::new();
+    let mut id = 0u64;
+    for round in 0..4usize {
+        let reqs: Vec<Request> = sessions
+            .iter()
+            .map(|&(s, class)| {
+                let n = if round == 0 { 4 } else { 1 };
+                let toks: Vec<i32> =
+                    (0..n).map(|_| rng.next_below(30_000) as i32).collect();
+                ctx.entry(s).or_default().extend_from_slice(&toks);
+                let r = Request::decode(id, s, toks);
+                id += 1;
+                match (round, class) {
+                    // prefill and the final round carry the label…
+                    (0, Some(name)) | (3, Some(name)) => {
+                        r.with_policy(table.id_of(name).unwrap())
+                    }
+                    // …intermediate steps inherit it.
+                    _ => r,
+                }
+            })
+            .collect();
+        let resps = eng.serve_batch(&reqs).unwrap();
+        for (resp, &(s, class)) in resps.iter().zip(&sessions) {
+            let cid = class.map(|n| table.id_of(n).unwrap()).unwrap_or(0);
+            assert!(!resp.rejected, "round={round} session={s}");
+            assert_eq!(resp.session, Some(s), "round={round}");
+            assert_eq!(resp.context_len, ctx[&s].len(), "round={round}");
+            assert_eq!(bits(&resp.outputs),
+                       decode_reference_bits(&eng, &ctx[&s], cid),
+                       "round={round} session={s} class={class:?}");
+        }
+        // The aggressive session's budget (2 < 3 heads) force-prunes
+        // head 2 in both layers at every single step.
+        assert!(resps[1].heads_pruned >= GEOM.n_layers, "round={round}");
+    }
+}
+
+#[test]
+fn policy_mismatch_refused_pre_mutation_peers_serve() {
+    // The typed-refusal contract (and the satellite regression): a
+    // step claiming a class other than its session's answers
+    // `PolicyMismatch { expected, claimed }` — non-retryable, nothing
+    // appended — while its co-batched peer serves bitwise; the
+    // unlabelled retry then serves at the *same* position, proving the
+    // refusal mutated no session state.
+    let eng = engine(mode_of(0.4, 0.0), 2, 4);
+    let table = Arc::clone(eng.policy_table());
+    let balanced = table.id_of("balanced").unwrap();
+    let exact = table.id_of("exact").unwrap();
+    let prefill = vec![5, 6, 7, 8];
+    let peer_prefill = vec![11, 12, 13];
+    let r = eng
+        .serve_batch(&[
+            Request::decode_at(0, 40, 0, prefill.clone()).with_policy(balanced),
+            Request::decode_at(1, 41, 0, peer_prefill.clone()),
+        ])
+        .unwrap();
+    assert!(r.iter().all(|x| !x.rejected));
+
+    // The mismatching step, co-batched with an innocent peer step.
+    let resps = eng
+        .serve_batch(&[
+            Request::decode_at(2, 40, 4, vec![21]).with_policy(exact),
+            Request::decode_at(3, 41, 3, vec![23]),
+        ])
+        .unwrap();
+    assert!(resps[0].rejected, "the mismatching step is refused");
+    assert_eq!(
+        resps[0].reason,
+        Some(RejectReason::PolicyMismatch { expected: balanced, claimed: exact })
+    );
+    assert!(!resps[0].reason.unwrap().is_retryable(),
+            "a policy mismatch is a client bug, not backpressure");
+    assert_eq!(resps[0].session, Some(40));
+    // The peer is untouched: served bitwise at its own (global) class.
+    let peer_ctx: Vec<i32> = [peer_prefill.as_slice(), &[23]].concat();
+    assert!(!resps[1].rejected, "co-batched peers are unaffected");
+    assert_eq!(bits(&resps[1].outputs),
+               decode_reference_bits(&eng, &peer_ctx, 0));
+
+    // Nothing was committed for session 40: both the unlabelled retry
+    // and a correctly-labelled one land at the original position and
+    // serve bitwise the uninterrupted reference.
+    let ctx: Vec<i32> = [prefill.as_slice(), &[21]].concat();
+    let retry = eng
+        .serve_batch(&[Request::decode_at(4, 40, 4, vec![21])])
+        .unwrap()
+        .remove(0);
+    assert!(!retry.rejected, "refusal must not have advanced the stream");
+    assert_eq!(retry.context_len, ctx.len());
+    assert_eq!(bits(&retry.outputs),
+               decode_reference_bits(&eng, &ctx, balanced));
+    let ctx2: Vec<i32> = [ctx.as_slice(), &[22]].concat();
+    let labelled = eng
+        .serve_batch(&[Request::decode_at(5, 40, 5, vec![22]).with_policy(balanced)])
+        .unwrap()
+        .remove(0);
+    assert!(!labelled.rejected, "re-claiming the session's class is legal");
+    assert_eq!(bits(&labelled.outputs),
+               decode_reference_bits(&eng, &ctx2, balanced));
+}
+
+#[test]
+fn sticky_sharded_mixed_classes_bitwise_under_spill_pressure() {
+    // The scale-out matrix: sticky shards {1, 2, 4} × KV page budgets
+    // {unbounded, one-resident-session} with the spill tier attached.
+    // Classes are labelled on prefills only; under the tight budget
+    // sessions spill to the slow tier and restore mid-run, and the
+    // class must ride along — a dropped class would serve `global`
+    // knobs and fail the bitwise check on the aggressive/exact streams.
+    let mode = mode_of(0.2, 0.0);
+    let table = Arc::new(PolicyTable::builtin(global_policy(mode)));
+    let ref_eng = engine(mode, 1, 4).with_policy_table(Arc::clone(&table));
+    let mut combo = 0u64;
+    for shards in [1usize, 2, 4] {
+        for kv_pages in [usize::MAX, 6] {
+            combo += 1;
+            let label = format!("shards={shards} kv={kv_pages}");
+            let (schedule, prefixes) = make_schedule(6, 3, 0x57_1C ^ combo);
+            let coord = ShardedCoordinator::new_native_sticky(
+                shards, GEOM, mode, SimConfig::edge(),
+                2, Duration::from_millis(1), 0, 1, kv_pages, 1.0,
+            )
+            .unwrap()
+            .with_eviction(EvictionKind::LargestFirst)
+            .with_spill(true)
+            .with_policy_table(Arc::clone(&table));
+            let router = coord.router().expect("sticky router");
+            let mut labelled: HashSet<u64> = HashSet::new();
+            for (id, (s, toks)) in schedule.iter().enumerate() {
+                let pos = prefixes[id].len() - toks.len();
+                let mut req = Request::decode_at(id as u64, *s, pos, toks.clone());
+                if labelled.insert(*s) {
+                    if let Some(name) = class_name_of(*s) {
+                        req = req.with_policy(table.id_of(name).unwrap());
+                    }
+                }
+                router.submit(req).unwrap();
+            }
+            router.close();
+            let report = coord.run().unwrap();
+            assert!(report.lane_errors.is_empty(), "{label}");
+            assert_eq!(report.responses.len(), prefixes.len(),
+                       "{label}: zero lost requests");
+            let mut seen = vec![false; prefixes.len()];
+            for r in &report.responses {
+                assert!(!r.rejected, "{label}: request {} ({:?})", r.id, r.reason);
+                let id = r.id as usize;
+                assert!(!seen[id], "{label}: request {} answered twice", r.id);
+                seen[id] = true;
+                let s = r.session.expect("decode response");
+                assert_eq!(r.context_len, prefixes[id].len(), "{label}");
+                assert_eq!(
+                    bits(&r.outputs),
+                    decode_reference_bits(&ref_eng, &prefixes[id],
+                                          class_id_of(&table, s)),
+                    "{label}: request {} of session {s} diverged from its \
+                     class's reference", r.id
+                );
+            }
+            assert!(seen.iter().all(|&s| s), "{label}: every request answered");
+            if kv_pages != usize::MAX {
+                assert!(report.metrics.session_spills() > 0,
+                        "{label}: the one-session budget must have spilled");
+                assert!(report.metrics.session_restores() > 0,
+                        "{label}: returning sessions must have restored");
+            }
+        }
+    }
+}
+
+#[test]
+fn killed_lane_preserves_classes_through_journal_replay() {
+    // Failover: classes labelled *only at prefill*, lane 0 killed at
+    // its second pop. The adopting lane hydrates the victim's sessions
+    // from the journal — class included — so every stream (the
+    // re-homed aggressive ones especially) stays bitwise its own
+    // class's reference with zero loss.
+    let mode = mode_of(0.2, 0.0);
+    let table = Arc::new(PolicyTable::builtin(global_policy(mode)));
+    let sessions = 8u64;
+    let (schedule, prefixes) = make_schedule(sessions, 3, 0xF01_1C);
+    let coord = ShardedCoordinator::new_native_sticky(
+        2, GEOM, mode, SimConfig::edge(),
+        2, Duration::from_millis(1), 0, 1, usize::MAX, 1.0,
+    )
+    .unwrap()
+    .with_policy_table(Arc::clone(&table))
+    .with_fault(0, FaultPlan { kill_at_pop: Some(2), ..FaultPlan::default() });
+    let router = coord.router().expect("sticky router");
+    let ready = coord.readiness();
+    let metrics = Arc::clone(coord.metrics());
+    let submit_table = Arc::clone(&table);
+    let producer = std::thread::spawn(move || {
+        assert!(ready.wait_any(), "lanes must come up");
+        for (id, (s, toks)) in schedule.iter().enumerate() {
+            let pos = prefixes[id].len() - toks.len();
+            let mut req = Request::decode_at(id as u64, *s, pos, toks.clone());
+            if (id as u64) < sessions {
+                if let Some(name) = class_name_of(*s) {
+                    req = req.with_policy(submit_table.id_of(name).unwrap());
+                }
+            }
+            router.submit(req).unwrap();
+        }
+        let t0 = Instant::now();
+        while metrics.lane_deaths() == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(30),
+                    "injected kill never fired");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        router.close();
+        prefixes
+    });
+    let report = coord.run().unwrap();
+    let prefixes = producer.join().unwrap();
+    assert_eq!(report.responses.len(), prefixes.len(), "zero lost requests");
+    let ref_eng = engine(mode, 1, 4).with_policy_table(Arc::clone(&table));
+    let mut seen = vec![false; prefixes.len()];
+    for r in &report.responses {
+        assert!(!r.rejected, "request {} shed ({:?})", r.id, r.reason);
+        let id = r.id as usize;
+        assert!(!seen[id], "request {} answered twice", r.id);
+        seen[id] = true;
+        let s = r.session.expect("decode response");
+        assert_eq!(r.context_len, prefixes[id].len(), "request {}", r.id);
+        assert_eq!(
+            bits(&r.outputs),
+            decode_reference_bits(&ref_eng, &prefixes[id],
+                                  class_id_of(&table, s)),
+            "request {} of session {s}: the class did not survive failover",
+            r.id
+        );
+    }
+    assert!(seen.iter().all(|&s| s), "every request answered");
+    assert_eq!(report.metrics.lane_deaths(), 1);
+    // Lane 0 owned the even sessions — aggressive (s % 4 == 0) streams
+    // really were among the re-homed ones the bitwise check pinned.
+    assert!(report.metrics.sessions_rehomed() >= 1);
+    assert!(coord.journal().unwrap().stats().restores >= 1);
+}
+
+#[test]
+fn continuous_scheduler_serves_mixed_classes_bitwise() {
+    // The continuous iteration loop re-forms its batch every iteration
+    // from the live session set, so class membership churns freely —
+    // and a second wave submitted mid-run joins existing sessions'
+    // recorded classes. Same bitwise contract, shards {1, 2}.
+    let mode = mode_of(0.2, 0.0);
+    let table = Arc::new(PolicyTable::builtin(global_policy(mode)));
+    let ref_eng = engine(mode, 1, 4).with_policy_table(Arc::clone(&table));
+    for shards in [1usize, 2] {
+        let label = format!("shards={shards}");
+        let mut rng = SplitMix64::new(0xC017 ^ shards as u64);
+        let mut ctx: HashMap<u64, Vec<i32>> = HashMap::new();
+        let mut prefixes: HashMap<u64, (u64, Vec<i32>)> = HashMap::new();
+        let mut id = 0u64;
+        let mut push = |ctx: &mut HashMap<u64, Vec<i32>>,
+                        prefixes: &mut HashMap<u64, (u64, Vec<i32>)>,
+                        list: &mut Vec<Request>,
+                        id: &mut u64,
+                        s: u64,
+                        toks: Vec<i32>,
+                        class: Option<&str>| {
+            let c = ctx.entry(s).or_default();
+            let pos = c.len();
+            c.extend_from_slice(&toks);
+            prefixes.insert(*id, (s, c.clone()));
+            let mut req = Request::decode_at(*id, s, pos, toks);
+            if let Some(name) = class {
+                req = req.with_policy(table.id_of(name).unwrap());
+            }
+            list.push(req);
+            *id += 1;
+        };
+        // Wave 1: four sessions, one per class, prefill labelled +
+        // two unlabelled rounds.
+        let mut reqs1: Vec<Request> = Vec::new();
+        for s in 0..4u64 {
+            let n = 3 + (s as usize % 3);
+            let toks = (0..n).map(|_| rng.next_below(30_000) as i32).collect();
+            push(&mut ctx, &mut prefixes, &mut reqs1, &mut id, s, toks,
+                 class_name_of(s));
+        }
+        for _ in 0..2 {
+            for s in 0..4u64 {
+                let toks = vec![rng.next_below(30_000) as i32];
+                push(&mut ctx, &mut prefixes, &mut reqs1, &mut id, s, toks, None);
+            }
+        }
+        // Wave 2, submitted mid-run: one more unlabelled round — the
+        // live set must still know each session's class.
+        let mut reqs2: Vec<Request> = Vec::new();
+        for s in 0..4u64 {
+            let toks = vec![rng.next_below(30_000) as i32];
+            push(&mut ctx, &mut prefixes, &mut reqs2, &mut id, s, toks, None);
+        }
+        let total = prefixes.len();
+        let coord = ShardedCoordinator::new_native_sticky(
+            shards, GEOM, mode, SimConfig::edge(),
+            4, Duration::from_millis(1), 0, 2, usize::MAX, 1.0,
+        )
+        .unwrap()
+        .with_continuous(true)
+        .with_policy_table(Arc::clone(&table));
+        let router = coord.router().expect("sticky router");
+        let report = std::thread::scope(|sc| {
+            let runner = sc.spawn(|| coord.run());
+            for req in reqs1 {
+                router.submit(req).unwrap();
+            }
+            std::thread::sleep(Duration::from_millis(5));
+            for req in reqs2 {
+                router.submit(req).unwrap();
+            }
+            router.close();
+            runner.join().unwrap()
+        })
+        .unwrap();
+        assert!(report.lane_errors.is_empty(), "{label}: {:?}",
+                report.lane_errors);
+        assert_eq!(report.responses.len(), total, "{label}");
+        for r in &report.responses {
+            assert!(!r.rejected, "{label}: request {} ({:?})", r.id, r.reason);
+            let (s, prefix) = &prefixes[&r.id];
+            assert_eq!(r.context_len, prefix.len(), "{label}: request {}", r.id);
+            assert_eq!(
+                bits(&r.outputs),
+                decode_reference_bits(&ref_eng, prefix, class_id_of(&table, *s)),
+                "{label}: request {} of session {s} diverged", r.id
+            );
+        }
+        // The loop really iterated: session 0's chain alone is 4 steps.
+        assert!(report.metrics.iterations() >= 4, "{label}: iterations = {}",
+                report.metrics.iterations());
+    }
+}
+
+#[test]
+fn stats_router_is_deterministic_and_reference_rederivable() {
+    // Routing is a pure function of the request: two engines with the
+    // same router agree, repeated routing agrees, and a served
+    // unlabelled request answers bitwise the reference at exactly
+    // `route_for`'s verdict — which is how the references here (and
+    // any client) re-derive a routed class.
+    let mode = mode_of(0.4, 0.0);
+    let table = Arc::new(PolicyTable::builtin(global_policy(mode)));
+    let mk = || {
+        let router = Arc::new(StatsRouter::from_table(&table).unwrap());
+        engine(mode, 2, 8)
+            .with_policy_table(Arc::clone(&table))
+            .with_policy_router(router)
+    };
+    let (eng, twin) = (mk(), mk());
+    let mut rng = SplitMix64::new(0x1207);
+    let mut inputs: Vec<Vec<i32>> = vec![
+        vec![3, 5, 7],        // short → exact by rule 1
+        (0..8).collect(),     // exactly at the threshold → exact
+    ];
+    for n in [9usize, 16, 24, 64] {
+        inputs.push((0..n).map(|_| rng.next_below(30_000) as i32).collect());
+    }
+    let mut routed: HashSet<PolicyId> = HashSet::new();
+    for toks in &inputs {
+        let class = eng.route_for(toks);
+        routed.insert(class);
+        assert_eq!(class, twin.route_for(toks),
+                   "two identically-configured engines must agree");
+        for _ in 0..8 {
+            assert_eq!(class, eng.route_for(toks), "routing must be stable");
+        }
+        let resp = eng
+            .serve_batch(&[Request::oneshot(0, toks.clone())])
+            .unwrap()
+            .remove(0);
+        assert_eq!(bits(&resp.outputs), oneshot_reference_bits(&eng, toks, class),
+                   "unlabelled serve must land on route_for's verdict");
+    }
+    let exact = table.id_of("exact").unwrap();
+    assert_eq!(eng.route_for(&inputs[0]), exact, "short requests route exact");
+    assert_eq!(eng.route_for(&inputs[1]), exact, "threshold is inclusive");
+    assert!(routed.len() >= 2, "the matrix must exercise >= 2 classes");
+
+    // An explicit label always beats the router…
+    let aggressive = table.id_of("aggressive").unwrap();
+    let long = &inputs[4];
+    let resp = eng
+        .serve_batch(&[Request::oneshot(1, long.clone()).with_policy(aggressive)])
+        .unwrap()
+        .remove(0);
+    assert_eq!(bits(&resp.outputs),
+               oneshot_reference_bits(&eng, long, aggressive));
+    // …and a router verdict naming no table entry falls back to
+    // `global` instead of poisoning the serve.
+    let wild = engine(mode, 1, 4).with_policy_router(Arc::new(StaticRouter(99)));
+    assert_eq!(wild.route_for(long), 0);
+    let resp = wild
+        .serve_batch(&[Request::oneshot(2, long.clone())])
+        .unwrap()
+        .remove(0);
+    assert!(!resp.rejected);
+    assert_eq!(bits(&resp.outputs), oneshot_reference_bits(&wild, long, 0));
+}
+
+#[test]
+fn policy_rho_clamp_is_bitwise_the_sparsity_engine_clamp() {
+    // Property pin over arbitrary f32 bit patterns: the rho a policy
+    // stores is bitwise `clamp(-1, 1)` of the raw value — the exact
+    // clamp `SparsityEngine::new` and `row_threshold` apply — so a
+    // sparsity engine run at the raw rho and one run at the policy's
+    // stored rho decide identically (masks, kept blocks, head verdict).
+    let mut rng = SplitMix64::new(0x4C1A);
+    let mut finite = 0usize;
+    for _ in 0..4096 {
+        let raw = f32::from_bits(rng.next_u64() as u32);
+        let p = PruningPolicy::new(raw, 0.0, None);
+        assert_eq!(p.rho.to_bits(), raw.clamp(-1.0, 1.0).to_bits(),
+                   "raw={raw} ({:#010x})", raw.to_bits());
+        if raw.is_nan() {
+            continue;
+        }
+        finite += 1;
+        let row: Vec<f32> =
+            (0..8).map(|_| rng.next_below(64) as f32 - 32.0).collect();
+        assert_eq!(row_threshold(&row, raw).to_bits(),
+                   row_threshold(&row, p.rho).to_bits(),
+                   "raw={raw}");
+        let mut raw_eng = SparsityEngine::new(raw, 0.0);
+        let mut pol_eng = SparsityEngine::new(p.rho, 0.0);
+        for _ in 0..3 {
+            for _ in 0..4 {
+                let theta = rng.next_below(64) as f32 - 32.0;
+                raw_eng.push_theta(theta);
+                pol_eng.push_theta(theta);
+            }
+            raw_eng.end_row();
+            pol_eng.end_row();
+        }
+        assert_eq!(raw_eng.masks(), pol_eng.masks(), "raw={raw}");
+        assert_eq!(raw_eng.kept_blocks(), pol_eng.kept_blocks(), "raw={raw}");
+        assert_eq!(raw_eng.end_head(), pol_eng.end_head(), "raw={raw}");
+    }
+    assert!(finite > 3000, "random f32 bits are mostly finite: {finite}");
+}
+
+#[test]
+fn per_class_metrics_absorb_exactly_once_across_shards() {
+    // Accounting: a two-shard sticky run with one session per class —
+    // after cross-shard absorb every class's step count is exactly its
+    // session's serve count (prefill + rounds), the per-class sums
+    // reconcile with the fleet totals, and the merged report prints
+    // the per-class lines.
+    let mode = mode_of(0.2, 0.0);
+    let table = Arc::new(PolicyTable::builtin(global_policy(mode)));
+    let (schedule, prefixes) = make_schedule(4, 2, 0xACC7);
+    let coord = ShardedCoordinator::new_native_sticky(
+        2, GEOM, mode, SimConfig::edge(),
+        2, Duration::from_millis(1), 0, 1, usize::MAX, 1.0,
+    )
+    .unwrap()
+    .with_policy_table(Arc::clone(&table));
+    let router = coord.router().expect("sticky router");
+    let mut labelled: HashSet<u64> = HashSet::new();
+    for (id, (s, toks)) in schedule.iter().enumerate() {
+        let pos = prefixes[id].len() - toks.len();
+        let mut req = Request::decode_at(id as u64, *s, pos, toks.clone());
+        if labelled.insert(*s) {
+            if let Some(name) = class_name_of(*s) {
+                req = req.with_policy(table.id_of(name).unwrap());
+            }
+        }
+        router.submit(req).unwrap();
+    }
+    router.close();
+    let report = coord.run().unwrap();
+    assert!(report.lane_errors.is_empty());
+    let m = &report.metrics;
+    assert_eq!(m.policy_classes(),
+               vec!["aggressive", "balanced", "exact", "global"],
+               "one session served per class, stable order");
+    let steps_per_session = 3u64; // prefill + 2 rounds
+    let mut steps_sum = 0u64;
+    for name in ["aggressive", "balanced", "exact", "global"] {
+        let snap = m.policy_class(name).expect("class served");
+        assert_eq!(snap.steps, steps_per_session,
+                   "{name}: absorbed exactly once across shards");
+        assert_eq!(snap.requests, 0, "{name}: decode-only run");
+        assert_eq!(snap.e2e_count, steps_per_session, "{name}");
+        assert!(snap.heads_total > 0, "{name}");
+        assert!(snap.sim_cycles > 0.0, "{name}");
+        steps_sum += snap.steps;
+    }
+    assert_eq!(steps_sum as usize, prefixes.len(),
+               "per-class steps partition the fleet's serves");
+    assert_eq!(m.decode_requests(), steps_sum,
+               "class tallies and fleet totals count the same events");
+    // The budgeted class measurably pruned; exact kept everything.
+    let agg = m.policy_class("aggressive").unwrap();
+    assert!(agg.heads_pruned >= steps_per_session * GEOM.n_layers as u64,
+            "the head budget force-prunes head 2 in both layers");
+    let exact = m.policy_class("exact").unwrap();
+    assert_eq!(exact.heads_pruned, 0);
+    assert_eq!(exact.kept_blocks, exact.blocks_total);
+    let rendered = m.report();
+    for name in ["aggressive", "balanced", "exact", "global"] {
+        assert!(rendered.contains(&format!("policy {name}")),
+                "report must list class {name}:\n{rendered}");
+    }
+
+    // One-shot side of the ledger: labelled one-shots land in
+    // `requests`, not `steps`.
+    let eng = engine(mode, 2, 4).with_policy_table(Arc::clone(&table));
+    let exact_id = table.id_of("exact").unwrap();
+    let reqs: Vec<Request> = (0..2)
+        .map(|i| Request::oneshot(i, vec![1, 2, 3, 4]).with_policy(exact_id))
+        .collect();
+    eng.serve_batch(&reqs).unwrap();
+    let snap = eng.metrics.policy_class("exact").expect("served");
+    assert_eq!(snap.requests, 2);
+    assert_eq!(snap.steps, 0);
+}

@@ -31,6 +31,14 @@
 #     continuous vs pop-batch sustained tokens/s under churning
 #     session membership: same kernel work, batch re-formed every
 #     iteration;
+#   * `serve_policy b=8 (mixed classes)` must stay ~1x the throughput
+#     of `serve_policy b=8 (single-global baseline)` — per-request
+#     pruning classes only swap per-head kernel parameters inside the
+#     same fan-out, so mixed-tenant batching is free; `... (all
+#     aggressive)` shows the headroom a harvest-everything class buys
+#     (head budget 2 of 4 + harder block pruning), and
+#     `decode_policy b=8 (mixed classes)` pins the same ~1x contract
+#     on the batched decode fan-out;
 #   * `decode_step ctx=8192 causal w=256` must beat `decode_step
 #     ctx=8192 bidirectional` (windowed scoring + row-only O(nb) θ vs
 #     full-context scoring + the O(nb²) θ grid), and the causal series

@@ -39,11 +39,22 @@ cargo test -q --test decode_conformance -- causal_ spill_ mixed_mode mode_mismat
 # path — and must end every run with zero lost sessions and every
 # surviving stream bitwise identical to the sequential reference.
 cargo test -q --test failover_conformance
+# Policy conformance as its own named gate: co-batched requests with
+# different pruning-policy classes (one-shot and decode, pop-batch and
+# continuous schedulers, sticky shards {1,2,4}, eviction/spill
+# pressure, a mid-run lane kill) must each be bitwise identical to a
+# sequential reference run at that request's policy; a step claiming a
+# class other than its session's answers the typed non-retryable
+# PolicyMismatch pre-mutation; the stats router is deterministic and
+# reference-rederivable; the policy rho clamp is bitwise the sparsity
+# engine's; and per-class metrics absorb exactly once across shards.
+cargo test -q --test policy_conformance
 # Integration harnesses as an explicit second gate (auto-discovers any
 # future file under rust/tests/): serve_conformance proves the batched
 # native serving path is bitwise identical to sequential reference
 # execution; decode_conformance pins the session/KV-cache decode path;
-# failover_conformance pins lane failover; sim_cross_validation and
+# failover_conformance pins lane failover; policy_conformance pins
+# per-request pruning-policy routing; sim_cross_validation and
 # pjrt_roundtrip cover the PJRT artifacts (they self-skip when
 # artifacts/ is absent).
 cargo test -q --test '*'
