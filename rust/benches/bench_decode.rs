@@ -12,11 +12,17 @@
 //! pops by **≥ 2×** on a multi-core runner, and the continuous
 //! iteration scheduler sustaining **≥ 1×** pop-batch tokens/s under
 //! churning session membership (same kernel work, batch re-formed
-//! every iteration). Two long-context / tiering series ride along:
-//! cached decode_step at context {1k, 8k, 32k} in both session modes
-//! (the causal `w=256` step stays ~flat while the bidirectional step
-//! scales with `l`; 32k-bidirectional is **skipped loudly** — its θ
-//! grid is O(nb²) ≈ 1 GiB/head at block=2 — never capped silently),
+//! every iteration). Long-context / prefill / tiering series ride
+//! along: cached decode_step at context {1k, 8k, 32k, 64k} in both
+//! session modes, prefilled by **chunked streaming** — multi-row
+//! `decode_append_rows` fan-outs, the kernel path the serving slicer
+//! rides (the causal `w=256` step stays ~flat while the bidirectional
+//! step scales with `l`; 32k- and 64k-bidirectional are **skipped
+//! loudly** — the θ grid is O(nb²) ≥ 1 GiB/head at block=2 — never
+//! capped silently); chunked vs row-at-a-time prefill tokens/s; the
+//! serving-layer chunked-vs-monolithic comparison (a long Bulk
+//! prefill beside an Interactive stream on a continuous lane:
+//! sustained tokens/s plus the interactive-TTFT headline);
 //! and four sessions round-robin decoding at a fixed page budget that
 //! keeps only two resident, where the spill/restore tier must beat
 //! evict+replay (restores instead of decode-from-scratch rebuilds).
@@ -31,7 +37,8 @@ use std::time::Duration;
 use hdp::attention::hdp::HdpParams;
 use hdp::attention::kernel::MhaKernel;
 use hdp::coordinator::{derive_session_head_inputs, derive_token_row, Batcher,
-                       Engine, NativeModelConfig, Request, ServeMode};
+                       Engine, NativeModelConfig, Priority, Request,
+                       ServeMode};
 use hdp::fixed::QuantProfile;
 use hdp::session::{HeadKv, InMemorySpillTier, LargestFirstPolicy, SessionMode};
 use hdp::sim::SimConfig;
@@ -121,9 +128,14 @@ fn main() {
     // ~1 GiB for a single 32k-context head, so the 32k-bidirectional
     // cell is skipped with a printed note — never capped silently.
     const WINDOW: usize = 256;
+    // Chunk width of the streaming prefills below — one multi-row
+    // `decode_append_rows` fan-out per chunk, the kernel-level shape
+    // the serving slicer (`--prefill-chunk`) drives.
+    const CHUNK_ROWS: usize = 512;
     println!("\n== long-context decode tokens/sec: bidirectional vs causal \
-              w={WINDOW} (1 head, d_head {DH}, 1 thread) ==");
-    for &ctx in &[1024usize, 8192, 32_768] {
+              w={WINDOW} (1 head, d_head {DH}, 1 thread, streaming \
+              prefill chunk={CHUNK_ROWS}) ==");
+    for &ctx in &[1024usize, 8192, 32_768, 65_536] {
         for causal in [false, true] {
             let name = if causal {
                 format!("decode_step ctx={ctx} causal w={WINDOW}")
@@ -147,14 +159,23 @@ fn main() {
             };
             let mut kv =
                 HeadKv::with_mode(DH, DH, p.block, p.block * 8, mode);
-            for pos in 0..ctx {
-                let row = derive_token_row((pos % 30_000) as i32, pos, 0, 0,
-                                           DH, PROFILE, 1.0);
-                kernel.decode_append(&mut kv, &row);
+            let t0 = std::time::Instant::now();
+            let mut pos = 0usize;
+            while pos < ctx {
+                let n = CHUNK_ROWS.min(ctx - pos);
+                let rows: Vec<_> = (pos..pos + n)
+                    .map(|q| derive_token_row((q % 30_000) as i32, q, 0, 0,
+                                              DH, PROFILE, 1.0))
+                    .collect();
+                kernel.decode_append_rows(&mut kv, &rows);
+                pos += n;
             }
-            println!("prefilled ctx={ctx} {}: {} theta cells",
+            let prefill_s = t0.elapsed().as_secs_f64();
+            println!("streaming prefill to ctx={ctx} {}: {:.1} tok/s, \
+                      {} theta cells",
                      if causal { "causal (row-only)" }
                      else { "bidirectional (full grid)" },
+                     ctx as f64 / prefill_s.max(1e-9),
                      kv.theta_cells());
             ms.push(b.run_throughput(&name, 1.0, "tok", || {
                 let pos = kv.len();
@@ -164,6 +185,52 @@ fn main() {
             }));
         }
     }
+
+    // == streaming prefill: chunked multi-row fan-outs vs row-at-a-time ==
+    // The same prefill work in the two kernel shapes: one
+    // `decode_append` call per token vs one `decode_append_rows`
+    // fan-out per CHUNK_ROWS tokens (bitwise-pinned equal by the
+    // kernel's chunk conformance tests). Both rebuild the cache from
+    // empty every timed iteration, so the series are directly
+    // comparable tokens/s.
+    const PREFILL_CTX: usize = 4096;
+    println!("\n== streaming prefill tokens/s: chunk={CHUNK_ROWS} vs \
+              row-at-a-time (causal w={WINDOW}, ctx {PREFILL_CTX}, \
+              1 head, d_head {DH}) ==");
+    let causal_mode = SessionMode::Causal { window: Some(WINDOW) };
+    ms.push(b.run_throughput(
+        &format!("prefill ctx={PREFILL_CTX} causal (row-at-a-time)"),
+        PREFILL_CTX as f64, "tok",
+        || {
+            let mut kv =
+                HeadKv::with_mode(DH, DH, p.block, p.block * 8, causal_mode);
+            for pos in 0..PREFILL_CTX {
+                let row = derive_token_row((pos % 30_000) as i32, pos, 0, 0,
+                                           DH, PROFILE, 1.0);
+                kernel.decode_append(&mut kv, &row);
+            }
+            kv.len()
+        },
+    ));
+    ms.push(b.run_throughput(
+        &format!("prefill ctx={PREFILL_CTX} causal (chunk={CHUNK_ROWS})"),
+        PREFILL_CTX as f64, "tok",
+        || {
+            let mut kv =
+                HeadKv::with_mode(DH, DH, p.block, p.block * 8, causal_mode);
+            let mut pos = 0usize;
+            while pos < PREFILL_CTX {
+                let n = CHUNK_ROWS.min(PREFILL_CTX - pos);
+                let rows: Vec<_> = (pos..pos + n)
+                    .map(|q| derive_token_row((q % 30_000) as i32, q, 0, 0,
+                                              DH, PROFILE, 1.0))
+                    .collect();
+                kernel.decode_append_rows(&mut kv, &rows);
+                pos += n;
+            }
+            kv.len()
+        },
+    ));
 
     // == batched decode fan-out vs sequential per-request pops ==
     // b sessions each prefilled to a working context; one timed
@@ -329,6 +396,73 @@ fn main() {
         }));
     }
 
+    // == serving-layer streaming prefill: chunked vs monolithic ==
+    // A continuous lane serving a long Bulk prefill beside a short
+    // Interactive stream (its own prefill + a 4-step decode chain).
+    // Monolithic admission serves the 1024-token prefill as one
+    // iteration-hogging request, so the interactive stream's first
+    // token waits behind the whole thing; `--prefill-chunk 64` slices
+    // it into budgeted chunk requests co-scheduled with the stream.
+    // Total tokens served per run is fixed and the finished contexts
+    // are bitwise identical (pinned by prefill_conformance), so the
+    // series compare sustained tokens/s — the headline below adds the
+    // interactive-TTFT comparison from an untimed pass per variant.
+    const SERVE_PREFILL: usize = 1024;
+    const SERVE_CHUNK: usize = 64;
+    println!("\n== serving-layer streaming prefill: monolithic vs \
+              chunk={SERVE_CHUNK} (Bulk {SERVE_PREFILL}-token prefill \
+              beside an Interactive stream, continuous lane) ==");
+    let serve_prefill_run = |chunk: Option<usize>| {
+        let eng = decode_engine(4)
+            .with_continuous(true)
+            .with_prefill_chunk(chunk);
+        let bulk: Vec<i32> =
+            (0..SERVE_PREFILL).map(|i| (i % 30_000) as i32).collect();
+        eng.batcher
+            .submit(Request::decode_at(100, 1, 0, bulk)
+                .with_priority(Priority::Bulk))
+            .unwrap();
+        let inter: Vec<i32> = (0..8).map(|i| (i * 3 % 30_000) as i32).collect();
+        eng.batcher
+            .submit(Request::decode_at(200, 2, 0, inter)
+                .with_priority(Priority::Interactive))
+            .unwrap();
+        for step in 0..4usize {
+            eng.batcher
+                .submit(Request::decode_at(201 + step as u64, 2, 8 + step,
+                                           vec![(step * 5 % 30_000) as i32])
+                    .with_priority(Priority::Interactive))
+                .unwrap();
+        }
+        eng.batcher.close();
+        let resps = eng.run_loop();
+        assert_eq!(resps.len(), 6);
+        assert!(resps.iter().all(|r| !r.rejected));
+        eng
+    };
+    let serve_tokens = (SERVE_PREFILL + 8 + 4) as f64;
+    let mut serve_ttft = [0.0f64; 2];
+    for (slot, chunk) in [None, Some(SERVE_CHUNK)].into_iter().enumerate() {
+        let name = match chunk {
+            Some(c) => format!("serve_prefill chunk={c} (bulk 1024 + \
+                                interactive)"),
+            None => "serve_prefill monolithic (bulk 1024 + interactive)"
+                .to_string(),
+        };
+        ms.push(b.run_throughput(&name, serve_tokens, "tok", || {
+            serve_prefill_run(chunk);
+        }));
+        // Untimed pass to read the interactive stream's TTFT: it always
+        // finishes first, so quantile(0.0) — the exact histogram min —
+        // is its submit → first-serve latency.
+        let eng = serve_prefill_run(chunk);
+        assert_eq!(eng.metrics.ttft_count(), 2);
+        serve_ttft[slot] = eng.metrics.ttft_quantile(0.0);
+        println!("{name}: interactive TTFT {:.3} ms (bulk TTFT {:.3} ms)",
+                 serve_ttft[slot] * 1e3,
+                 eng.metrics.ttft_quantile(1.0) * 1e3);
+    }
+
     // == resident sessions at a fixed page budget: spill vs replay ==
     // Four sessions share a page budget that keeps only two of them
     // resident (after a 32-token prefill each session holds 2 layers ×
@@ -399,6 +533,8 @@ fn main() {
     // Headlines: cached vs full recompute at the 1k context, the
     // batched fan-out vs sequential pops at b=8, continuous vs
     // pop-batch under churn, causal vs bidirectional at long context,
+    // chunked vs row-at-a-time streaming prefill, the serving-layer
+    // chunked-vs-monolithic tokens/s + interactive-TTFT comparison,
     // and the spill tier vs evict+replay at the fixed page budget.
     let find = |needle: &str| -> Option<f64> {
         ms.iter().find(|m| m.name.contains(needle)).map(Measurement::mean)
@@ -437,6 +573,26 @@ fn main() {
         println!("causal w=256 decode_step speedup over bidirectional at 8k \
                   context: {:.1}x (windowed scoring + O(nb) theta vs full-\
                   context scoring + O(nb^2))", bi / ca);
+    }
+    if let (Some(row), Some(chunk)) = (find("causal (row-at-a-time)"),
+                                       find("causal (chunk="))
+    {
+        println!("chunked streaming prefill vs row-at-a-time appends at \
+                  {PREFILL_CTX} context: {:.2}x tokens/s (target >= 1x — \
+                  same rows, one fan-out per {CHUNK_ROWS}-token chunk)",
+                 row / chunk);
+    }
+    if let (Some(mono), Some(chunked)) = (find("serve_prefill monolithic"),
+                                          find("serve_prefill chunk="))
+    {
+        println!("chunked vs monolithic serving-layer prefill (bulk \
+                  {SERVE_PREFILL} + interactive stream): {:.2}x sustained \
+                  tokens/s (~1x expected — same kernel work, sliced \
+                  admission); interactive TTFT {:.3} ms vs {:.3} ms \
+                  monolithic ({:.1}x faster first token — the stream no \
+                  longer waits out the whole prefill)",
+                 mono / chunked, serve_ttft[1] * 1e3, serve_ttft[0] * 1e3,
+                 serve_ttft[0] / serve_ttft[1].max(1e-12));
     }
     if let (Some(replay), Some(spill)) = (find("(evict+replay)"),
                                           find("(evict+spill-restore)"))

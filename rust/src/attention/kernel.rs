@@ -452,6 +452,28 @@ impl Workspace {
         self.decode_update(kv, row);
     }
 
+    /// Append a whole *chunk* of tokens to the cached context — the
+    /// streaming-prefill path. Each row folds into θ through exactly
+    /// the same [`Workspace::decode_update`] accumulation the
+    /// row-at-a-time [`Workspace::decode_append`] uses, in order, so
+    /// the resulting cache state is bitwise identical to appending the
+    /// rows one by one (both modes; pinned by
+    /// `decode_append_chunk_matches_row_at_a_time`). The win is at the
+    /// call layer: a caller with k rows in hand pays one workspace
+    /// checkout (and, through [`MhaKernel::decode_append_chunk`], one
+    /// pool fan-out) per chunk instead of per row.
+    pub fn decode_append_chunk(
+        &mut self,
+        kv: &mut HeadKv,
+        rows: &[TokenRow],
+        p: HdpParams,
+    ) {
+        assert_eq!(p.block, kv.block(), "kernel/cache block mismatch");
+        for row in rows {
+            self.decode_update(kv, row);
+        }
+    }
+
     /// One full decode step: append the token, then run the sparsity
     /// engine → early head decision → FUM → sparse softmax → `P·V` for
     /// the **single new query row** over the cached context. Pruned
@@ -1126,6 +1148,53 @@ impl MhaKernel {
         pooled.get().decode_append(kv, row, self.params);
     }
 
+    /// Append a chunk of rows to one head's cached context with a
+    /// single workspace checkout — see
+    /// [`Workspace::decode_append_chunk`]. Bitwise identical to calling
+    /// [`Self::decode_append`] per row, in order.
+    pub fn decode_append_rows(&self, kv: &mut HeadKv, rows: &[TokenRow]) {
+        let mut pooled = PooledWorkspace::take(&self.pool);
+        pooled.get().decode_append_chunk(kv, rows, self.params);
+    }
+
+    /// Append a whole chunk of `tokens` across **every** (layer, head)
+    /// of a session's cache in **one** pool fan-out — the streaming-
+    /// prefill kernel entry. The task list is the `layers × heads`
+    /// grid; each task locks exactly its own [`HeadKv`], derives its k
+    /// rows with the pure `derive(token, pos, layer, head)` callback
+    /// (positions advance from the head's current length), and folds
+    /// them in reference order via [`Workspace::decode_append_chunk`].
+    /// A k-token prefill therefore costs one fan-out per *chunk*
+    /// instead of one per *row* — same θ trajectory, bitwise, as
+    /// row-at-a-time [`Self::decode_append`] over the same tokens
+    /// (both modes; pinned by the chunk-conformance unit test here and
+    /// end to end by `rust/tests/prefill_conformance.rs`).
+    pub fn decode_append_chunk(
+        &self,
+        cache: &KvCache,
+        tokens: &[i32],
+        derive: impl Fn(i32, usize, usize, usize) -> TokenRow + Sync,
+    ) {
+        let (n_layers, n_heads) = (cache.n_layers(), cache.n_heads());
+        parallel_map_with(
+            n_layers * n_heads,
+            self.threads,
+            || PooledWorkspace::take(&self.pool),
+            |pooled, g| {
+                let (layer, head) = (g / n_heads, g % n_heads);
+                let ws = pooled.get();
+                let mut kv = cache.head(layer, head).lock().unwrap();
+                let base = kv.len();
+                let rows: Vec<TokenRow> = tokens
+                    .iter()
+                    .enumerate()
+                    .map(|(k, &tok)| derive(tok, base + k, layer, head))
+                    .collect();
+                ws.decode_append_chunk(&mut kv, &rows, self.params);
+            },
+        );
+    }
+
     /// Execute a whole batch of decode steps — every popped decode
     /// request of every session — as **one** fan-out over the shared
     /// worker pool, mirroring [`Self::forward_batch`]: the task list is
@@ -1727,6 +1796,111 @@ mod tests {
         assert_eq!(a.theta_head.to_bits(), last_b.theta_head.to_bits());
         assert_eq!(a.kept_blocks, last_b.kept_blocks);
         assert_eq!(kv_a.len(), kv_b.len());
+    }
+
+    #[test]
+    fn decode_append_chunk_matches_row_at_a_time() {
+        // The streaming-prefill contract at head level: folding k rows
+        // through one `decode_append_chunk` must leave the cache in
+        // bitwise the same state as k row-at-a-time `decode_append`
+        // calls — for both attention modes, windowed or not, and for
+        // any chunking of the prefix (including chunks that straddle
+        // block and page boundaries).
+        use crate::session::SessionMode;
+        let (dh, dv, n) = (8usize, 8usize, 13usize);
+        for mode in [
+            SessionMode::Bidirectional,
+            SessionMode::Causal { window: None },
+            SessionMode::Causal { window: Some(4) },
+        ] {
+            for chunk in [1usize, 3, 5, 12] {
+                let rows = rand_token_rows(123, n, dh, dv);
+                let p = params(0.4, 0.0, 0.05);
+                let kernel = MhaKernel::new(p);
+                // Reference: row-at-a-time appends, then one step.
+                let mut kv_a = HeadKv::with_mode(dh, dv, p.block, 4, mode);
+                for row in &rows[..n - 1] {
+                    kernel.decode_append(&mut kv_a, row);
+                }
+                let last_a = kernel.decode_step(&mut kv_a, &rows[n - 1], None);
+                // Chunked: the same prefix in `chunk`-sized slices.
+                let mut kv_b = HeadKv::with_mode(dh, dv, p.block, 4, mode);
+                for slice in rows[..n - 1].chunks(chunk) {
+                    kernel.decode_append_rows(&mut kv_b, slice);
+                }
+                let last_b = kernel.decode_step(&mut kv_b, &rows[n - 1], None);
+                assert_eq!(
+                    last_a.out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    last_b.out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "mode {mode:?} chunk {chunk}"
+                );
+                assert_eq!(last_a.theta_head.to_bits(), last_b.theta_head.to_bits(),
+                           "mode {mode:?} chunk {chunk}");
+                assert_eq!(last_a.kept_blocks, last_b.kept_blocks);
+                assert_eq!(last_a.blocks_total, last_b.blocks_total);
+                assert_eq!(kv_a.len(), kv_b.len());
+            }
+        }
+    }
+
+    #[test]
+    fn decode_append_chunk_fanout_matches_row_at_a_time() {
+        // The cache-level one-fan-out entry: chunked prefill across the
+        // whole layers × heads grid must reproduce the row-at-a-time
+        // per-head loop bitwise, for any thread count.
+        use crate::session::SessionMode;
+        let (dh, dv, layers, heads) = (8usize, 8usize, 2usize, 3usize);
+        let p = params(0.4, 0.0, 0.05);
+        let derive =
+            |tok: i32, pos: usize, layer: usize, head: usize| -> TokenRow {
+                derive_test_row(tok, pos, layer, head, dh, dv)
+            };
+        let tokens: Vec<i32> = (0..11).map(|t| 40 + t).collect();
+        for mode in
+            [SessionMode::Bidirectional, SessionMode::Causal { window: Some(4) }]
+        {
+            for threads in [1usize, 4] {
+                let kernel = MhaKernel::new(p).with_threads(threads);
+                let chunked = KvCache::with_mode(
+                    layers, heads, dh, dv, p.block, p.block * 4, mode);
+                for slice in tokens.chunks(3) {
+                    kernel.decode_append_chunk(&chunked, slice, derive);
+                }
+                let rowwise = KvCache::with_mode(
+                    layers, heads, dh, dv, p.block, p.block * 4, mode);
+                for layer in 0..layers {
+                    for head in 0..heads {
+                        let mut kv = rowwise.head(layer, head).lock().unwrap();
+                        for &tok in &tokens {
+                            kernel.decode_append(
+                                &mut kv, &derive(tok, kv.len(), layer, head));
+                        }
+                    }
+                }
+                assert_eq!(chunked.len(), rowwise.len());
+                // The next step over each head must agree bitwise —
+                // i.e. the θ/KV state the chunked prefill left behind
+                // is indistinguishable from the row-at-a-time one.
+                for layer in 0..layers {
+                    for head in 0..heads {
+                        let row = derive(99, tokens.len(), layer, head);
+                        let a = kernel.decode_step(
+                            &mut chunked.head(layer, head).lock().unwrap(),
+                            &row, None);
+                        let b = kernel.decode_step(
+                            &mut rowwise.head(layer, head).lock().unwrap(),
+                            &row, None);
+                        assert_eq!(
+                            a.out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                            b.out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                            "mode {mode:?} threads {threads} l{layer} h{head}"
+                        );
+                        assert_eq!(a.theta_head.to_bits(), b.theta_head.to_bits());
+                        assert_eq!(a.kept_blocks, b.kept_blocks);
+                    }
+                }
+            }
+        }
     }
 
     /// Deterministic per-(token, pos, layer, head) row derivation for

@@ -75,6 +75,29 @@ pub enum Priority {
     Bulk,
 }
 
+/// Which slice of a chunked prefill stream a request carries — the
+/// marker the continuous scheduler stamps when it slices an admitted
+/// long prefill into `--prefill-chunk`-sized pieces
+/// (`Engine::with_prefill_chunk`). Interior chunks advance the
+/// session's cached context but produce no client-visible response;
+/// the `Final` chunk answers for the whole original request (its
+/// response is bitwise the monolithic prefill's). Never set by
+/// clients: requests enter the engine unmarked and only the slicer
+/// marks the clones it fabricates, so exactly one response per
+/// admitted request survives — the exactly-once half of the chunk
+/// lifecycle `rust/tests/prefill_conformance.rs` pins.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum ChunkRole {
+    /// A non-final slice: commits its tokens (position-asserted),
+    /// journaled like any step, but its response is dropped by the
+    /// scheduler — the client never sees interior chunks.
+    Interior,
+    /// The stream's last slice: completes the prefill and carries the
+    /// original request's one response (same id, same outputs as the
+    /// monolithic path).
+    Final,
+}
+
 /// One serving request. Two kinds share the carrier:
 ///
 /// * **one-shot** (`session == None`) — the whole workload derives
@@ -132,6 +155,12 @@ pub struct Request {
     /// across failover readmission, so the wait is counted exactly once
     /// however many times the request is popped.
     pub(crate) wait_recorded: bool,
+    /// `Some` marks a slice of a chunked prefill stream (see
+    /// [`ChunkRole`]). Always `None` on client-built requests; the
+    /// continuous scheduler's slicer is the only writer. Preserved
+    /// across failover readmission so an adopting lane resumes the
+    /// chunk stream instead of re-slicing it.
+    pub(crate) chunk: Option<ChunkRole>,
 }
 
 impl Request {
@@ -147,6 +176,7 @@ impl Request {
             priority: Priority::default(),
             policy: None,
             wait_recorded: false,
+            chunk: None,
         }
     }
 
@@ -456,6 +486,52 @@ mod tests {
         b.close();
         assert_eq!(b.next_batch().unwrap().len(), 2);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn admit_pending_racing_close_resolves_every_request_exactly_once() {
+        // Shutdown race for the continuous admission door: producers
+        // submit (a pending chunk stream, say) while close() fires
+        // mid-drain. Every admitted request must reach the consumer
+        // exactly once — never dropped, never duplicated — and
+        // admit_pending must terminate with None once closed and
+        // drained, leaving the in-flight accounting balanced so
+        // wait_idle is still a true barrier.
+        for round in 0..16u64 {
+            let b = Arc::new(Batcher::new(4, Duration::from_millis(1)));
+            let n: u64 = 64;
+            let consumer = {
+                let b = Arc::clone(&b);
+                std::thread::spawn(move || {
+                    let mut got: Vec<u64> = Vec::new();
+                    while let Some(batch) = b.admit_pending(true) {
+                        if !batch.is_empty() {
+                            got.extend(batch.iter().map(|r| r.id));
+                            b.batch_done();
+                        }
+                    }
+                    got
+                })
+            };
+            let producer = {
+                let b = Arc::clone(&b);
+                std::thread::spawn(move || {
+                    for i in 0..n {
+                        b.submit(req(i)).unwrap();
+                        if i % 7 == round % 7 {
+                            std::thread::yield_now();
+                        }
+                    }
+                    b.close(); // races the consumer's drain loop
+                })
+            };
+            producer.join().unwrap();
+            let mut got = consumer.join().unwrap();
+            got.sort_unstable();
+            assert_eq!(got, (0..n).collect::<Vec<_>>(), "round {round}");
+            assert_eq!(b.inflight(), 0, "round {round}");
+            b.wait_idle(); // immediate: every admission was balanced
+        }
     }
 
     #[test]

@@ -94,7 +94,7 @@ use crate::tensor::Tensor;
 use crate::util::rng::SplitMix64;
 use crate::util::threadpool::parallel_map;
 
-use super::batcher::{Batcher, Request};
+use super::batcher::{Batcher, ChunkRole, Request};
 use super::metrics::Metrics;
 
 /// Attention variant served by the engine.
@@ -168,6 +168,15 @@ pub enum RejectReason {
     /// [`crate::policy::PolicyTable`]), or omit the class to inherit
     /// it. Co-batched peers are unaffected.
     PolicyMismatch { expected: PolicyId, claimed: PolicyId },
+    /// The step claimed a position past the session's committed length
+    /// while a **chunked prefill is still streaming** into the session
+    /// (`Engine::with_prefill_chunk`): the missing positions are in
+    /// flight — queued chunks the continuous scheduler has admitted
+    /// but not yet committed — not lost. Unlike
+    /// [`RejectReason::StreamGap`], this is **retryable**: the same
+    /// step resubmitted after the prefill completes (committed length
+    /// reaches `claimed`) is admitted unchanged. Nothing was appended.
+    PrefillIncomplete { committed: usize, claimed: usize },
 }
 
 impl RejectReason {
@@ -186,6 +195,10 @@ impl RejectReason {
     /// reason: a session's mode and pruning-policy class never change,
     /// so the unchanged step will be refused forever — resubmit naming
     /// the session's actual mode/class instead.
+    /// [`RejectReason::PrefillIncomplete`] **is** retryable: the step
+    /// arrived before the session's chunked prefill finished
+    /// committing, and the very same step succeeds once the in-flight
+    /// chunks land — backoff-and-resubmit is exactly right.
     ///
     /// The match is exhaustive on purpose: a new refusal variant must
     /// decide its retry class here, at compile time, not inherit one
@@ -193,7 +206,9 @@ impl RejectReason {
     /// `super::shard`).
     pub fn is_retryable(&self) -> bool {
         match self {
-            RejectReason::Admission | RejectReason::Shed => true,
+            RejectReason::Admission
+            | RejectReason::Shed
+            | RejectReason::PrefillIncomplete { .. } => true,
             RejectReason::StreamGap { .. }
             | RejectReason::ModeMismatch { .. }
             | RejectReason::PolicyMismatch { .. } => false,
@@ -600,6 +615,15 @@ pub struct Engine {
     /// Serve with the continuous (iteration-level) scheduler instead
     /// of run-to-completion pop-batches; see [`Engine::run_serving`].
     continuous: bool,
+    /// Streaming-prefill chunk size for the continuous scheduler
+    /// (`None` = monolithic prefills, the default). When set, an
+    /// admitted decode request longer than this is sliced into
+    /// position-asserted chunks that stream through the session's FIFO
+    /// chain — one chunk per iteration, co-scheduled with other
+    /// streams' decode steps under the per-iteration token budget —
+    /// instead of absorbing a whole iteration. Pop-batch and one-shot
+    /// paths ignore it.
+    prefill_chunk: Option<usize>,
     /// The named pruning-policy classes requests select from
     /// ([`Request::policy`] / the router). Class 0 (`global`) is always
     /// the engine's own configured knobs and is served without any
@@ -643,6 +667,7 @@ impl Engine {
             fault: FaultPlan::default(),
             pops: AtomicU64::new(0),
             continuous: false,
+            prefill_chunk: None,
             policies: Arc::new(PolicyTable::builtin(global_policy(mode))),
             router: None,
             backend: Backend::Pjrt {
@@ -705,6 +730,7 @@ impl Engine {
             fault: FaultPlan::default(),
             pops: AtomicU64::new(0),
             continuous: false,
+            prefill_chunk: None,
             policies: Arc::new(PolicyTable::builtin(global_policy(mode))),
             router: None,
             backend: Backend::Native { kernel, profile },
@@ -805,6 +831,28 @@ impl Engine {
     /// of which iterations a stream shared with which peers.
     pub fn with_continuous(mut self, continuous: bool) -> Self {
         self.continuous = continuous;
+        self
+    }
+
+    /// Stream prefills through the continuous scheduler in
+    /// `chunk`-token slices instead of as one monolithic request
+    /// (`None` = monolithic, the default; `Some(0)` is refused — the
+    /// CLI rejects it at parse time and this asserts the same
+    /// contract). An admitted decode request longer than `chunk` is
+    /// sliced into position-asserted chunk requests on the session's
+    /// FIFO chain: interior chunks commit (and journal) their tokens
+    /// without a client-visible response, the final chunk answers for
+    /// the original request, and each iteration co-schedules at most
+    /// one chunk per stream with other sessions' decode steps under
+    /// the per-iteration **token** budget `chunk + batch − 1` (room
+    /// for one full chunk plus a single-token step per remaining
+    /// slot) — so a long prefill can no longer starve co-batched
+    /// streams. The finished context is bitwise identical to the
+    /// monolithic path (pinned by `rust/tests/prefill_conformance.rs`);
+    /// only the pop-batch and one-shot paths ignore the knob.
+    pub fn with_prefill_chunk(mut self, chunk: Option<usize>) -> Self {
+        assert!(chunk != Some(0), "prefill chunk must be at least one token");
+        self.prefill_chunk = chunk;
         self
     }
 
@@ -1150,6 +1198,11 @@ impl Engine {
         // built below); everything else in the batch serves.
         let has_decode = reqs.iter().any(|r| r.session.is_some());
         let mut refused: Vec<Option<RejectReason>> = vec![None; reqs.len()];
+        // Which admitted decode steps begin their stream (append at
+        // committed position 0) — those are prefills, and their e2e is
+        // the stream's time-to-first-token sample (chunked streams
+        // sample at the final chunk instead; see the stamp loop).
+        let mut begins: Vec<bool> = vec![false; reqs.len()];
         if let (Some(store_mutex), true) = (&self.sessions, has_decode) {
             let mut store = store_mutex.lock().unwrap();
             // Journal hydration (failover adoption), before gap
@@ -1278,20 +1331,52 @@ impl Engine {
                         // positions), while a resync step re-claiming
                         // `e` is admitted — per-step admission, even
                         // inside one batch.
-                        eprintln!(
-                            "{}",
-                            StreamGapError {
-                                id: r.id,
-                                session,
+                        //
+                        // One carve-out: a step claiming *past* the
+                        // committed length of a session whose chunked
+                        // prefill is still streaming is early, not
+                        // gapped — the missing positions are queued
+                        // chunks, not lost steps — so it gets the
+                        // *retryable* `PrefillIncomplete` instead.
+                        // Chunk slices themselves never take this
+                        // branch: the slicer position-asserts them
+                        // back to back, so each chunk claims exactly
+                        // the committed length when its turn comes.
+                        if claimed > *e
+                            && r.chunk.is_none()
+                            && store.prefill_open(session)
+                        {
+                            eprintln!(
+                                "decode request {}: session {} prefill \
+                                 incomplete — step claims position {} but \
+                                 the chunked prefill has committed {} so \
+                                 far (refused; retry once the stream \
+                                 completes)",
+                                r.id, session, claimed, *e
+                            );
+                            refused[i] = Some(RejectReason::PrefillIncomplete {
+                                committed: *e,
+                                claimed,
+                            });
+                        } else {
+                            eprintln!(
+                                "{}",
+                                StreamGapError {
+                                    id: r.id,
+                                    session,
+                                    expected: *e,
+                                    claimed,
+                                }
+                            );
+                            refused[i] = Some(RejectReason::StreamGap {
                                 expected: *e,
                                 claimed,
-                            }
-                        );
-                        refused[i] =
-                            Some(RejectReason::StreamGap { expected: *e, claimed });
+                            });
+                        }
                         continue;
                     }
                 }
+                begins[i] = *e == 0;
                 *e += r.tokens.len();
             }
         }
@@ -1376,6 +1461,26 @@ impl Engine {
                 if !resp.rejected {
                     self.metrics
                         .record_policy_e2e(self.policy_name(resolved[i]), e2e[i]);
+                    // Streaming-prefill accounting. Time-to-first-token
+                    // is submit → the serve that makes the stream's
+                    // first output available: the whole request for a
+                    // monolithic prefill (it begins its stream at
+                    // position 0), the *final* chunk for a sliced one
+                    // (chunk requests inherit the original enqueue
+                    // instant, so its e2e spans the full stream).
+                    match reqs[i].chunk {
+                        Some(role) => {
+                            self.metrics.record_prefill_chunk(
+                                reqs[i].tokens.len() as u64,
+                                role == ChunkRole::Final,
+                            );
+                            if role == ChunkRole::Final {
+                                self.metrics.record_ttft(e2e[i]);
+                            }
+                        }
+                        None if begins[i] => self.metrics.record_ttft(e2e[i]),
+                        None => {}
+                    }
                 }
                 resp
             })
@@ -1659,6 +1764,16 @@ impl Engine {
                 };
                 let evictions0 = store.stats().evictions;
                 store.commit(g.session, &req.tokens);
+                // Chunk-stream bookkeeping: an interior chunk keeps (or
+                // re-opens, after failover adoption) the mid-prefill
+                // flag so early decode steps draw the retryable
+                // `PrefillIncomplete` refusal; the final chunk closes
+                // it. Plain requests leave the flag alone.
+                match req.chunk {
+                    Some(ChunkRole::Interior) => store.note_prefill(g.session, true),
+                    Some(ChunkRole::Final) => store.note_prefill(g.session, false),
+                    None => {}
+                }
                 let evictions = store.stats().evictions - evictions0;
                 if let Some(journal) = &self.journal {
                     // Journal inside the commit phase: the journal is
@@ -1694,6 +1809,7 @@ impl Engine {
                     ctx_len: ctx,
                     kept_density: stats.kept_density(),
                     head_kept_frac: stats.head_kept_frac(),
+                    new_tokens: req.tokens.len(),
                 });
                 order.push(i);
                 responses[i] = Some(Response {
@@ -1887,14 +2003,32 @@ impl Engine {
                         .collect();
                     self.metrics.record_queue_wait(&waits);
                     for r in arrivals {
-                        let seq = next_seq;
-                        next_seq += 1;
-                        live += 1;
                         match r.session {
                             Some(s) => {
-                                chains.entry(s).or_default().push_back((seq, r))
+                                // Chunk-marked arrivals are a failover
+                                // readmission of an in-flight stream:
+                                // never re-slice (the committed prefix
+                                // is already gone from their tokens),
+                                // but re-open the mid-prefill flag the
+                                // dead lane's store carried.
+                                if r.chunk.is_some() {
+                                    if let Some(store) = &self.sessions {
+                                        store.lock().unwrap().note_prefill(s, true);
+                                    }
+                                }
+                                for part in self.slice_prefill(r) {
+                                    let seq = next_seq;
+                                    next_seq += 1;
+                                    live += 1;
+                                    chains.entry(s).or_default().push_back((seq, part));
+                                }
                             }
-                            None => oneshots.push_back((seq, r)),
+                            None => {
+                                let seq = next_seq;
+                                next_seq += 1;
+                                live += 1;
+                                oneshots.push_back((seq, r));
+                            }
                         }
                     }
                 }
@@ -1942,19 +2076,52 @@ impl Engine {
 
             // -- schedule: one head step per session + one-shots, by
             //    (priority class, admission age), capped at batch width
-            let mut cands: Vec<(super::batcher::Priority, u64, Option<u64>)> =
-                oneshots.iter().map(|(seq, r)| (r.priority, *seq, None)).collect();
+            //    AND the per-iteration token budget
+            let mut cands: Vec<(super::batcher::Priority, u64, Option<u64>, usize)> =
+                oneshots
+                    .iter()
+                    .map(|(seq, r)| (r.priority, *seq, None, r.tokens.len()))
+                    .collect();
             for (s, chain) in &chains {
                 if let Some((seq, head)) = chain.front() {
-                    cands.push((head.priority, *seq, Some(*s)));
+                    cands.push((head.priority, *seq, Some(*s), head.tokens.len()));
                 }
             }
-            cands.sort_unstable_by_key(|&(p, seq, _)| (p, seq));
-            let scheduled_n = cands.len().min(self.batch);
-            let deferred = (cands.len() - scheduled_n) as u64;
-            self.metrics.record_iteration(scheduled_n, self.batch, deferred);
-            let mut iter_batch: Vec<Request> = Vec::with_capacity(scheduled_n);
-            for (_, seq, slot) in cands.into_iter().take(scheduled_n) {
+            cands.sort_unstable_by_key(|&(p, seq, _, _)| (p, seq));
+            // Per-iteration *token* budget: unlimited when chunking is
+            // off (the scheduler degenerates to the request-count cap,
+            // bitwise-preserving every existing continuous trace); with
+            // `--prefill-chunk C`, one full chunk plus a single-token
+            // decode step for every remaining batch slot — a streaming
+            // prefill can fill at most one slot's worth of chunk work
+            // per iteration, so co-batched Interactive decode streams
+            // keep getting served every iteration instead of stalling
+            // behind a 32k context.
+            let budget = match self.prefill_chunk {
+                Some(c) => c + self.batch.saturating_sub(1),
+                None => usize::MAX,
+            };
+            let mut picked: Vec<(u64, Option<u64>)> = Vec::new();
+            let mut tokens_used: usize = 0;
+            for &(_, seq, slot, toks) in &cands {
+                if picked.len() == self.batch {
+                    break;
+                }
+                // Skip-not-stop: a candidate that would blow the token
+                // budget is deferred (it ages and wins next iteration),
+                // but smaller candidates behind it may still fill this
+                // one. The first pick always lands even over budget —
+                // every iteration must make progress.
+                if !picked.is_empty() && tokens_used + toks > budget {
+                    continue;
+                }
+                tokens_used += toks;
+                picked.push((seq, slot));
+            }
+            let deferred = (cands.len() - picked.len()) as u64;
+            self.metrics.record_iteration(picked.len(), self.batch, deferred);
+            let mut iter_batch: Vec<Request> = Vec::with_capacity(picked.len());
+            for (seq, slot) in picked {
                 match slot {
                     Some(s) => {
                         let chain =
@@ -1977,8 +2144,41 @@ impl Engine {
             }
 
             // -- serve the iteration ----------------------------------
+            // Exactly-once response surface for chunk streams: when a
+            // chunk is refused or shed, the whole stream is dead — the
+            // remaining queued chunks (they share the original request
+            // id) are purged from the session chain so the client sees
+            // exactly one answer per admitted request, and the
+            // mid-prefill flag closes so a follow-up decode step gets a
+            // clean `StreamGap` rather than "retry later" forever.
+            let purge_chunk_stream = |chains: &mut HashMap<u64, VecDeque<(u64, Request)>>,
+                                      req: &Request|
+             -> usize {
+                let Some(s) = req.session else { return 0 };
+                let removed = match chains.get_mut(&s) {
+                    Some(chain) => {
+                        let before = chain.len();
+                        chain.retain(|(_, q)| q.id != req.id);
+                        let after = chain.len();
+                        if chain.is_empty() {
+                            chains.remove(&s);
+                        }
+                        before - after
+                    }
+                    None => 0,
+                };
+                if let Some(store) = &self.sessions {
+                    store.lock().unwrap().note_prefill(s, false);
+                }
+                removed
+            };
             if self.fault.poison_at_pop == Some(pop) {
                 eprintln!("injected fault: batch poisoned at iteration {pop}");
+                for r in &iter_batch {
+                    if r.chunk.is_some() {
+                        live -= purge_chunk_stream(&mut chains, r);
+                    }
+                }
                 self.responses.lock().unwrap().extend(iter_batch.iter().map(
                     |r| Response::reject_because(r, RejectReason::Shed),
                 ));
@@ -1999,9 +2199,37 @@ impl Engine {
                 }
                 self.inflight.fetch_add(1, Ordering::SeqCst);
                 match self.serve_batch(&iter_batch) {
-                    Ok(resps) => self.responses.lock().unwrap().extend(resps),
+                    Ok(resps) => {
+                        // Chunk streams answer exactly once: a served
+                        // interior chunk's response is dropped (the
+                        // final chunk carries the request's one answer,
+                        // with e2e spanning the whole stream); a
+                        // *refused* chunk's refusal stands as that one
+                        // answer and kills the rest of the stream.
+                        let mut out = Vec::with_capacity(resps.len());
+                        for (resp, req) in resps.into_iter().zip(&iter_batch) {
+                            match req.chunk {
+                                Some(role) => {
+                                    if resp.rejected {
+                                        live -= purge_chunk_stream(
+                                            &mut chains, req);
+                                        out.push(resp);
+                                    } else if role == ChunkRole::Final {
+                                        out.push(resp);
+                                    }
+                                }
+                                None => out.push(resp),
+                            }
+                        }
+                        self.responses.lock().unwrap().extend(out);
+                    }
                     Err(e) => {
                         eprintln!("iteration failed: {e:#}");
+                        for r in &iter_batch {
+                            if r.chunk.is_some() {
+                                live -= purge_chunk_stream(&mut chains, r);
+                            }
+                        }
                         self.responses.lock().unwrap().extend(
                             iter_batch.iter().map(|r| {
                                 Response::reject_because(r, RejectReason::Shed)
@@ -2021,6 +2249,46 @@ impl Engine {
             self.batcher.batch_done();
         }
         (self.take_responses(), None)
+    }
+
+    /// Slice an admitted prefill into a budgeted stream of chunk
+    /// requests (the continuous scheduler's slicer — the only writer of
+    /// [`Request::chunk`]). A request is sliced only when chunking is
+    /// on, it targets a session, it is not already a chunk (failover
+    /// readmissions arrive pre-sliced), and it is longer than one
+    /// chunk. Each slice is an ordinary position-asserted multi-token
+    /// decode step — `tokens[k·C .. (k+1)·C]` claiming position
+    /// `pos + k·C` — so the commit/journal/gap machinery needs no new
+    /// cases and the finished context is bitwise-equal to the
+    /// monolithic path. Slicing opens the session's mid-prefill flag;
+    /// the final chunk's commit closes it.
+    fn slice_prefill(&self, r: Request) -> Vec<Request> {
+        let (Some(c), Some(s)) = (self.prefill_chunk, r.session) else {
+            return vec![r];
+        };
+        if r.chunk.is_some() || r.tokens.len() <= c {
+            return vec![r];
+        }
+        if let Some(store) = &self.sessions {
+            store.lock().unwrap().note_prefill(s, true);
+        }
+        let total = r.tokens.len();
+        let mut parts = Vec::with_capacity(total.div_ceil(c));
+        let mut start = 0;
+        while start < total {
+            let end = (start + c).min(total);
+            let mut part = r.clone();
+            part.tokens = r.tokens[start..end].to_vec();
+            part.pos = r.pos.map(|p| p + start);
+            part.chunk = Some(if end == total {
+                ChunkRole::Final
+            } else {
+                ChunkRole::Interior
+            });
+            parts.push(part);
+            start = end;
+        }
+        parts
     }
 
     /// Drain every response accumulated so far. Poison-robust: a lane

@@ -115,6 +115,19 @@ struct Inner {
     /// Head steps that were ready but deferred past an iteration by
     /// priority/capacity — the starvation pressure counter.
     starved_steps: u64,
+    // streaming prefill (chunked prefill through the continuous loop)
+    /// Prefill chunk requests served (interior + final).
+    prefill_chunks: u64,
+    /// Tokens appended by served prefill chunks.
+    prefill_chunk_tokens: u64,
+    /// Chunked prefills whose final chunk committed — the stream is
+    /// fully resident and ordinary decode steps are admissible.
+    prefills_completed: u64,
+    /// Time-to-first-token: submit → the serve that produced the
+    /// stream's first output (the final chunk for a sliced prefill, so
+    /// the sample spans the whole chunk stream; the single serve for a
+    /// monolithic one), seconds.
+    ttft: Histogram,
     // pruning-policy classes (per-request policy routing)
     /// Per-class accounting, keyed by class name. `BTreeMap` so the
     /// report lists classes in a stable order on every lane.
@@ -379,6 +392,46 @@ impl Metrics {
         self.inner.lock().unwrap().join_latency.record(seconds);
     }
 
+    /// Record one served prefill chunk: it appended `tokens`, and
+    /// `last` marks the stream's final chunk (completing the prefill).
+    pub fn record_prefill_chunk(&self, tokens: u64, last: bool) {
+        let mut m = self.inner.lock().unwrap();
+        m.prefill_chunks += 1;
+        m.prefill_chunk_tokens += tokens;
+        m.prefills_completed += u64::from(last);
+    }
+
+    /// Record one stream's time-to-first-token (seconds); see
+    /// `Inner::ttft` for what counts as the first token.
+    pub fn record_ttft(&self, seconds: f64) {
+        self.inner.lock().unwrap().ttft.record(seconds);
+    }
+
+    /// Prefill chunk requests served so far (interior + final).
+    pub fn prefill_chunks(&self) -> u64 {
+        self.inner.lock().unwrap().prefill_chunks
+    }
+
+    /// Tokens appended by served prefill chunks.
+    pub fn prefill_chunk_tokens(&self) -> u64 {
+        self.inner.lock().unwrap().prefill_chunk_tokens
+    }
+
+    /// Chunked prefills whose final chunk has committed.
+    pub fn prefills_completed(&self) -> u64 {
+        self.inner.lock().unwrap().prefills_completed
+    }
+
+    /// Streams with a recorded time-to-first-token sample.
+    pub fn ttft_count(&self) -> u64 {
+        self.inner.lock().unwrap().ttft.count()
+    }
+
+    /// Time-to-first-token quantile, seconds (0.0 before any stream).
+    pub fn ttft_quantile(&self, q: f64) -> f64 {
+        self.inner.lock().unwrap().ttft.quantile(q)
+    }
+
     /// Continuous-scheduler iterations run so far (0 on pop-batch lanes).
     pub fn iterations(&self) -> u64 {
         self.inner.lock().unwrap().iterations
@@ -483,6 +536,10 @@ impl Metrics {
         m.iter_occupancy.merge(&snap.iter_occupancy);
         m.join_latency.merge(&snap.join_latency);
         m.starved_steps += snap.starved_steps;
+        m.prefill_chunks += snap.prefill_chunks;
+        m.prefill_chunk_tokens += snap.prefill_chunk_tokens;
+        m.prefills_completed += snap.prefills_completed;
+        m.ttft.merge(&snap.ttft);
         for (name, c) in snap.classes {
             let dst = m.classes.entry(name).or_default();
             dst.requests += c.requests;
@@ -566,6 +623,16 @@ impl Metrics {
                 m.join_latency.count(),
                 crate::util::bench::fmt_time(m.join_latency.quantile(0.95)),
                 m.starved_steps,
+            ));
+        }
+        if m.prefill_chunks > 0 || m.ttft.count() > 0 {
+            s.push_str(&format!(
+                "prefill        {} chunk(s), {} tokens, {} stream(s) \
+                 completed, ttft {}\n",
+                m.prefill_chunks,
+                m.prefill_chunk_tokens,
+                m.prefills_completed,
+                m.ttft.summary("s"),
             ));
         }
         if m.lane_deaths + m.lane_drains > 0 {
@@ -813,6 +880,33 @@ mod tests {
         assert!(r.contains("2 sessions joined"), "{r}");
         // pop-batch lanes never print the continuous line
         assert!(!Metrics::new().report().contains("continuous"));
+    }
+
+    #[test]
+    fn prefill_counters_record_merge_and_report() {
+        let fleet = Metrics::new();
+        let lane = Metrics::new();
+        lane.record_prefill_chunk(8, false);
+        lane.record_prefill_chunk(8, false);
+        lane.record_prefill_chunk(3, true); // final chunk of one stream
+        lane.record_ttft(0.020);
+        assert_eq!(lane.prefill_chunks(), 3);
+        assert_eq!(lane.prefill_chunk_tokens(), 19);
+        assert_eq!(lane.prefills_completed(), 1);
+        assert_eq!(lane.ttft_count(), 1);
+        assert_eq!(lane.ttft_quantile(0.95), 0.020);
+        fleet.record_ttft(0.005);
+        fleet.absorb(&lane);
+        assert_eq!(fleet.prefill_chunks(), 3, "chunk counters add");
+        assert_eq!(fleet.prefills_completed(), 1);
+        assert_eq!(fleet.ttft_count(), 2, "ttft histogram merges");
+        assert_eq!(fleet.ttft_quantile(1.0), 0.020, "merged max exact");
+        let r = fleet.report();
+        assert!(r.contains("prefill        3 chunk(s), 19 tokens"), "{r}");
+        // lanes that never chunked don't print the line
+        assert!(!Metrics::new().report().contains("prefill "));
+        // the absorbed lane is untouched
+        assert_eq!(lane.prefill_chunks(), 3);
     }
 
     #[test]

@@ -609,6 +609,11 @@ pub struct ShardedCoordinator {
     /// quiescence barrier (`wait_idle`) waits out a lane's live set
     /// per-iteration instead of a single pop.
     continuous: bool,
+    /// Slice every lane's admitted prefills into token chunks of this
+    /// size and co-schedule them under the per-iteration token budget
+    /// ([`Engine::with_prefill_chunk`]); `None` = monolithic prefills.
+    /// Continuous lanes only — pop-batch lanes ignore it.
+    prefill_chunk: Option<usize>,
     /// Fleet-shared pruning-policy table (`None` = every lane runs the
     /// built-in table over its own knobs). One `Arc` on every lane, so
     /// class ids — which requests carry and journals persist — resolve
@@ -645,6 +650,7 @@ impl ShardedCoordinator {
             shards,
             keep_outputs: true,
             continuous: false,
+            prefill_chunk: None,
             policy_table: None,
             policy_router: None,
             factory: Box::new(factory),
@@ -763,6 +769,19 @@ impl ShardedCoordinator {
     /// Results are bitwise identical either way.
     pub fn with_continuous(mut self, continuous: bool) -> Self {
         self.continuous = continuous;
+        self
+    }
+
+    /// Stream every lane's long prefills through the continuous
+    /// scheduler in `chunk`-token slices
+    /// ([`Engine::with_prefill_chunk`]): a 32k context no longer
+    /// occupies one iteration slot whole, so co-batched Interactive
+    /// decode streams keep being served while it streams. `None`
+    /// (default) keeps monolithic prefills. Finished contexts are
+    /// bitwise identical either way.
+    pub fn with_prefill_chunk(mut self, chunk: Option<usize>) -> Self {
+        assert!(chunk != Some(0), "prefill chunk must be at least one token");
+        self.prefill_chunk = chunk;
         self
     }
 
@@ -993,7 +1012,8 @@ impl ShardedCoordinator {
                 self.readiness.lane_up();
                 let mut e = e
                     .with_raw_outputs(self.keep_outputs)
-                    .with_continuous(self.continuous);
+                    .with_continuous(self.continuous)
+                    .with_prefill_chunk(self.prefill_chunk);
                 if self.eviction != EvictionKind::default() {
                     e = e.with_eviction_policy(self.eviction.build());
                 }
@@ -1599,6 +1619,12 @@ mod tests {
         // `expected` class (or none, to inherit it).
         assert!(!RejectReason::PolicyMismatch { expected: 0, claimed: 2 }
             .is_retryable());
+        // A step refused because its session's chunked prefill is
+        // still streaming is *retryable*: the missing positions are
+        // queued chunks, and the unchanged step is admissible the
+        // moment the final chunk commits.
+        assert!(RejectReason::PrefillIncomplete { committed: 4, claimed: 16 }
+            .is_retryable());
 
         let coord = sticky(1, 2, 4);
         let router = coord.router().unwrap();
@@ -1644,8 +1670,106 @@ mod tests {
             )
             .expect("retryable rejection resubmits");
         assert_eq!(router.pending(), 1);
+        // A prefill-incomplete step is transient the same way: the
+        // gate resubmits it unchanged, to land once the stream closes.
+        router
+            .resubmit_rejected(
+                Request::decode_at(12, 1, 16, vec![1]),
+                RejectReason::PrefillIncomplete { committed: 4, claimed: 16 },
+                &policy,
+            )
+            .expect("prefill-incomplete resubmits");
+        assert_eq!(router.pending(), 2);
         router.close();
         coord.run().unwrap();
+    }
+
+    #[test]
+    fn mid_prefill_refusals_stay_pre_mutation_and_stream_resumes() {
+        // Satellite regression: while a session's chunked prefill is
+        // streaming, every flavor of refused step — the retryable
+        // `PrefillIncomplete`, a fatal `ModeMismatch`, a fatal
+        // `StreamGap` — must leave the partially-committed prefix
+        // intact, so the stream resumes at exactly position p and the
+        // finished context is bitwise the monolithic one. Chunk-marked
+        // requests are hand-built here (the crate-internal slicer
+        // representation) and run through a pop-batch lane: the refusal
+        // machinery is shared with the continuous path.
+        use super::super::batcher::ChunkRole;
+        use crate::session::SessionMode;
+        let chunked = |id: u64, pos: usize, tokens: Vec<i32>, role| {
+            let mut r = Request::decode_at(id, 7, pos, tokens);
+            r.chunk = Some(role);
+            r
+        };
+        let toks: Vec<i32> = (0..5).map(|t| t * 3 + 1).collect();
+
+        // Reference: monolithic prefill + one decode step.
+        let coord = sticky(1, 1, 0);
+        let router = coord.router().unwrap();
+        router.submit(Request::decode_at(0, 7, 0, toks.clone())).unwrap();
+        router.submit(Request::decode_at(1, 7, 5, vec![99])).unwrap();
+        router.close();
+        let reference = coord.run().unwrap();
+        let ref_out = reference
+            .responses
+            .iter()
+            .find(|r| r.id == 1)
+            .unwrap()
+            .outputs
+            .clone();
+
+        let coord = sticky(1, 1, 0);
+        let router = coord.router().unwrap();
+        // interior chunk commits positions 0..2 and opens the flag
+        router
+            .submit(chunked(10, 0, toks[..2].to_vec(), ChunkRole::Interior))
+            .unwrap();
+        // a step claiming the *finished* position is early, not gapped
+        router.submit(Request::decode_at(11, 7, 5, vec![99])).unwrap();
+        // a mode-mismatched step mid-prefill is fatal, pre-mutation
+        router
+            .submit(Request::decode_at(12, 7, 2, vec![88])
+                .with_mode(SessionMode::Causal { window: None }))
+            .unwrap();
+        // a replayed position mid-prefill is a plain gap (fatal)
+        router.submit(Request::decode_at(13, 7, 1, vec![77])).unwrap();
+        // the stream resumes at exactly the committed position...
+        router
+            .submit(chunked(14, 2, toks[2..].to_vec(), ChunkRole::Final))
+            .unwrap();
+        // ...and an ordinary post-prefill step serves
+        router.submit(Request::decode_at(15, 7, 5, vec![99])).unwrap();
+        router.close();
+        let report = coord.run().unwrap();
+        let by_id = |id: u64| {
+            report.responses.iter().find(|r| r.id == id).unwrap()
+        };
+        assert!(matches!(
+            by_id(11).reason,
+            Some(RejectReason::PrefillIncomplete { committed: 2, claimed: 5 })
+        ));
+        assert!(by_id(11).reason.unwrap().is_retryable(),
+                "early step retries once the stream completes");
+        assert!(matches!(by_id(12).reason,
+                         Some(RejectReason::ModeMismatch { .. })));
+        assert!(matches!(
+            by_id(13).reason,
+            Some(RejectReason::StreamGap { expected: 2, claimed: 1 })
+        ));
+        assert!(!by_id(14).rejected, "stream resumes at position p");
+        let done = by_id(15);
+        assert!(!done.rejected);
+        assert_eq!(done.context_len, 6);
+        assert_eq!(done.outputs, ref_out,
+                   "refusals appended nothing: the resumed stream is \
+                    bitwise the monolithic one");
+        // chunk accounting: two chunks, 5 tokens, one stream completed,
+        // and the final chunk stamped the stream's TTFT sample
+        assert_eq!(report.metrics.prefill_chunks(), 2);
+        assert_eq!(report.metrics.prefill_chunk_tokens(), 5);
+        assert_eq!(report.metrics.prefills_completed(), 1);
+        assert_eq!(report.metrics.ttft_count(), 1);
     }
 
     #[test]

@@ -276,6 +276,11 @@ fn serve_args() -> Args {
                  gap refusal, priority classes) instead of running \
                  popped batches to completion; outputs are bitwise \
                  identical either way")
+        .flag("prefill-chunk", "0", "decode demo: stream each prefill \
+               through the continuous scheduler in chunks of this many \
+               tokens, co-scheduled with decode steps under a \
+               per-iteration token budget (needs --continuous; omit \
+               for monolithic prefills — an explicit 0 is refused)")
         .flag("layers", "2", "demo: attention layers per request")
         .flag("heads", "4", "demo: heads per layer")
         .flag("d-head", "16", "demo: head dimension")
@@ -390,6 +395,22 @@ fn parse_window(args: &Args) -> Result<Option<usize>> {
     anyhow::ensure!(w > 0, "explicit --window 0 is ambiguous: omit the \
                             flag for an unbounded causal window");
     Ok(Some(w))
+}
+
+/// `--prefill-chunk` parser: `None` when the flag is absent
+/// (monolithic prefills), `Some(c)` for an explicit positive chunk
+/// size. An explicit `--prefill-chunk 0` is refused at parse time,
+/// exactly like `--window 0` and `--eviction ttl:0`: 0 is only the
+/// "flag omitted" sentinel, so typing it means the caller wanted
+/// *some* chunking and should say how much.
+fn parse_prefill_chunk(args: &Args) -> Result<Option<usize>> {
+    let c = args.get_usize("prefill-chunk")?;
+    if !args.was_set("prefill-chunk") {
+        return Ok(None);
+    }
+    anyhow::ensure!(c > 0, "explicit --prefill-chunk 0 is ambiguous: omit \
+                            the flag for monolithic prefills");
+    Ok(Some(c))
 }
 
 /// `--policy-table` / `--policy-class` / `--router` parser shared by
@@ -623,6 +644,10 @@ fn serve_demo_decode(args: &Args, cfg: NativeModelConfig, mode: ServeMode,
         SessionMode::Bidirectional
     };
     let eviction = parse_eviction(&args.get("eviction"))?;
+    let prefill_chunk = parse_prefill_chunk(args)?;
+    anyhow::ensure!(prefill_chunk.is_none() || args.get_bool("continuous"),
+                    "--prefill-chunk needs --continuous (chunks are \
+                     co-scheduled by the iteration-level scheduler)");
     let (policy_table, policy_class, policy_router) =
         parse_policy(args, mode)?;
     let parse_lane = |name: &str| -> Result<Option<usize>> {
@@ -653,6 +678,7 @@ fn serve_demo_decode(args: &Args, cfg: NativeModelConfig, mode: ServeMode,
     )?
     .with_raw_outputs(false)
     .with_continuous(args.get_bool("continuous"))
+    .with_prefill_chunk(prefill_chunk)
     .with_checkpoints(args.get_usize("checkpoint-every")?)
     .with_eviction(eviction)
     .with_spill(args.get_bool("spill"))
@@ -937,6 +963,24 @@ mod tests {
         assert_eq!(parse_window(&serve(&[])).unwrap(), None,
                    "absent flag means unbounded");
         assert_eq!(parse_window(&serve(&["--window", "8"])).unwrap(), Some(8));
+    }
+
+    #[test]
+    fn explicit_prefill_chunk_zero_is_refused_but_default_is_monolithic() {
+        let e = parse_prefill_chunk(&serve(&["--prefill-chunk", "0"]))
+            .unwrap_err();
+        assert!(e.to_string().contains("--prefill-chunk 0"),
+                "typed message: {e}");
+        assert_eq!(parse_prefill_chunk(&serve(&[])).unwrap(), None,
+                   "absent flag means monolithic prefills");
+        assert_eq!(parse_prefill_chunk(&serve(&["--prefill-chunk", "64"]))
+                       .unwrap(),
+                   Some(64));
+        // non-integer chunk sizes are refused by the flag parser itself
+        assert!(serve_args()
+            .parse(&["--prefill-chunk".into(), "many".into()])
+            .and_then(|a| parse_prefill_chunk(&a))
+            .is_err());
     }
 
     #[test]

@@ -33,6 +33,18 @@
 //! journal itself stays authoritative on the tokens: a checkpoint is
 //! an accelerator, never a source of truth.
 //!
+//! # Chunked prefill
+//!
+//! A streaming prefill (`Engine::with_prefill_chunk`) journals one
+//! `record` per committed *chunk*, exactly as a monolithic prefill
+//! journals one record for the whole context — the journal sees only
+//! committed token spans and never needs to know about chunking. A
+//! session that dies mid-prefill therefore restores up to its last
+//! committed chunk boundary (position p), and the adopting lane's
+//! readmitted chunk requests resume the stream from p — the journal
+//! never re-serves committed rows, because replay *is* the committed
+//! stream and the remaining chunks are ordinary queued requests.
+//!
 //! # Concurrency
 //!
 //! One journal is shared (`Arc`) by every lane of a fleet. `record` is

@@ -50,7 +50,7 @@
 //! budget; [`SpillStats`] counts spills/restores and nominal bytes
 //! moved for the serving metrics.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 
 use super::cache::{KvCache, SessionMode};
@@ -302,6 +302,19 @@ pub struct SessionStore {
     /// Logical clock: one tick per `checkout`/`adopt`. Denominates
     /// [`EvictionCandidate::last_touch`] and [`TtlPolicy`] idle time.
     clock: u64,
+    /// Sessions with a chunked prefill in flight: opened by the
+    /// continuous scheduler's slicer (and by every interior-chunk
+    /// commit, so an adopting lane re-learns the state from the
+    /// readmitted chunks themselves), closed when the final chunk
+    /// commits or the stream is cancelled. While a session is here, a
+    /// decode step claiming a position *past* the committed length is
+    /// refused with the retryable `PrefillIncomplete` instead of the
+    /// fatal `StreamGap` — the missing positions are in flight, not
+    /// lost. Deliberately a side table, not entry state: it must be
+    /// settable before the session's first commit creates an entry,
+    /// and eviction/spill (which drop pages, never history) must not
+    /// disturb it.
+    prefill_open: HashSet<u64>,
 }
 
 impl SessionStore {
@@ -321,6 +334,7 @@ impl SessionStore {
             spill_stats: SpillStats::default(),
             charged_pages: 0,
             clock: 0,
+            prefill_open: HashSet::new(),
         }
     }
 
@@ -425,6 +439,31 @@ impl SessionStore {
     /// out-of-order, and is refused before any state mutates.
     pub fn expected_pos(&self, session: u64) -> usize {
         self.history_len(session)
+    }
+
+    /// Mark a session's chunked prefill in flight (`open = true`) or
+    /// complete/cancelled (`open = false`). The continuous scheduler
+    /// opens it when it slices an admitted prefill (and every
+    /// interior-chunk commit re-opens it, so an adopting lane
+    /// re-learns the state from readmitted chunks after a failover);
+    /// the final chunk's commit — or a refusal that cancels the stream
+    /// — closes it. Idempotent both ways.
+    pub fn note_prefill(&mut self, session: u64, open: bool) {
+        if open {
+            self.prefill_open.insert(session);
+        } else {
+            self.prefill_open.remove(&session);
+        }
+    }
+
+    /// Whether a chunked prefill is currently streaming into this
+    /// session — i.e. positions past [`Self::expected_pos`] are *in
+    /// flight*, not lost. Gap detection consults this to answer a
+    /// too-early decode step with the retryable
+    /// `RejectReason::PrefillIncomplete` (retry once the stream
+    /// commits) instead of the fatal `StreamGap`.
+    pub fn prefill_open(&self, session: u64) -> bool {
+        self.prefill_open.contains(&session)
     }
 
     /// [`Self::checkout_mode`] with the session's recorded mode (or

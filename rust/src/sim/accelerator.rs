@@ -210,6 +210,11 @@ pub struct DecodeProfile {
     pub ctx_len: usize,
     pub kept_density: f32,
     pub head_kept_frac: f32,
+    /// Tokens this step appended. `1` is an ordinary decode step;
+    /// `> 1` marks a multi-token append (a prefill chunk or monolithic
+    /// prefill), priced by [`estimate_prefill_chunk`] instead of a
+    /// single [`estimate_decode_step`].
+    pub new_tokens: usize,
 }
 
 /// Co-processor view of one *batched decode* pop: each decode step in
@@ -235,8 +240,16 @@ pub fn estimate_decode_batch(
     let per: Vec<ChipReport> = steps
         .iter()
         .map(|s| {
-            estimate_decode_step(cfg, n_layers, d_head, n_heads, s.ctx_len,
-                                 s.kept_density, s.head_kept_frac, use_ff)
+            if s.new_tokens > 1 {
+                estimate_prefill_chunk(cfg, n_layers, d_head, n_heads,
+                                       s.ctx_len, s.new_tokens,
+                                       s.kept_density, s.head_kept_frac,
+                                       use_ff)
+            } else {
+                estimate_decode_step(cfg, n_layers, d_head, n_heads,
+                                     s.ctx_len, s.kept_density,
+                                     s.head_kept_frac, use_ff)
+            }
         })
         .collect();
     let mut total = ChipReport::default();
@@ -244,6 +257,43 @@ pub fn estimate_decode_batch(
         total.add_serial(r);
     }
     (per, total)
+}
+
+/// Co-processor estimate of one *prefill chunk*: a multi-token append
+/// into a cached session, landing at context `ctx_len` (*after* the
+/// chunk). The chunk's rows stream through the incremental decode
+/// datapath one position at a time: every row pays the integer
+/// row/column statistics pass over the context resident at its position
+/// (the θ fold — never skippable, it is what keeps chunked state
+/// bitwise-equal to the stepped reference), and only the chunk's *last*
+/// row continues into FUM → softmax → `P·V` to produce the stream's
+/// next output. Interior rows are therefore priced as decode steps with
+/// every head pruned (`head_kept_frac = 0`) at their growing context;
+/// the final row is a full step with the chunk's measured diagnostics.
+pub fn estimate_prefill_chunk(
+    cfg: &SimConfig,
+    n_layers: usize,
+    d_head: usize,
+    n_heads: usize,
+    ctx_len: usize,
+    new_tokens: usize,
+    kept_density: f32,
+    head_kept_frac: f32,
+    use_ff: bool,
+) -> ChipReport {
+    debug_assert!(new_tokens >= 1 && ctx_len >= new_tokens);
+    let mut total = ChipReport::default();
+    let first_ctx = ctx_len - new_tokens + 1;
+    for ctx in first_ctx..ctx_len {
+        total.add_serial(&estimate_decode_step(
+            cfg, n_layers, d_head, n_heads, ctx, kept_density, 0.0, use_ff,
+        ));
+    }
+    total.add_serial(&estimate_decode_step(
+        cfg, n_layers, d_head, n_heads, ctx_len, kept_density, head_kept_frac,
+        use_ff,
+    ));
+    total
 }
 
 /// Co-processor view of one served batch: each request's `n_layers`
@@ -404,9 +454,12 @@ mod tests {
     fn decode_batch_estimate_composes_per_step_reports() {
         let cfg = SimConfig::edge();
         let steps = [
-            DecodeProfile { ctx_len: 128, kept_density: 0.3, head_kept_frac: 0.75 },
-            DecodeProfile { ctx_len: 1024, kept_density: 0.3, head_kept_frac: 0.75 },
-            DecodeProfile { ctx_len: 128, kept_density: 0.9, head_kept_frac: 1.0 },
+            DecodeProfile { ctx_len: 128, kept_density: 0.3, head_kept_frac: 0.75,
+                            new_tokens: 1 },
+            DecodeProfile { ctx_len: 1024, kept_density: 0.3, head_kept_frac: 0.75,
+                            new_tokens: 1 },
+            DecodeProfile { ctx_len: 128, kept_density: 0.9, head_kept_frac: 1.0,
+                            new_tokens: 1 },
         ];
         let (per, total) = estimate_decode_batch(&cfg, 2, 32, 8, &steps, false);
         assert_eq!(per.len(), 3);
@@ -426,6 +479,44 @@ mod tests {
         let (per0, total0) = estimate_decode_batch(&cfg, 2, 32, 8, &[], false);
         assert!(per0.is_empty());
         assert_eq!(total0.cycles, 0.0);
+    }
+
+    #[test]
+    fn prefill_chunk_estimate_prices_interior_rows_as_pruned_steps() {
+        let cfg = SimConfig::edge();
+        // A 4-token chunk landing at ctx 128: three interior rows pay
+        // the statistics-only pass at their growing context, the final
+        // row is a full step with the measured diagnostics.
+        let chunk = estimate_prefill_chunk(&cfg, 2, 32, 8, 128, 4, 0.3,
+                                           0.75, false);
+        let mut expect = ChipReport::default();
+        for ctx in 125..128 {
+            expect.add_serial(&estimate_decode_step(&cfg, 2, 32, 8, ctx, 0.3,
+                                                    0.0, false));
+        }
+        expect.add_serial(&estimate_decode_step(&cfg, 2, 32, 8, 128, 0.3,
+                                                0.75, false));
+        assert_eq!(chunk.cycles, expect.cycles);
+        // one-token "chunk" degenerates to the plain decode step
+        let one = estimate_prefill_chunk(&cfg, 2, 32, 8, 128, 1, 0.3, 0.75,
+                                         false);
+        let step = estimate_decode_step(&cfg, 2, 32, 8, 128, 0.3, 0.75,
+                                        false);
+        assert_eq!(one.cycles, step.cycles);
+        // a chunk costs more than its final step alone, but less than
+        // running every row through the full kept-head datapath
+        assert!(chunk.cycles > step.cycles);
+        let mut dense = ChipReport::default();
+        for ctx in 125..=128 {
+            dense.add_serial(&estimate_decode_step(&cfg, 2, 32, 8, ctx, 0.3,
+                                                   0.75, false));
+        }
+        assert!(chunk.cycles < dense.cycles);
+        // the batch estimator dispatches on new_tokens
+        let steps = [DecodeProfile { ctx_len: 128, kept_density: 0.3,
+                                     head_kept_frac: 0.75, new_tokens: 4 }];
+        let (per, _) = estimate_decode_batch(&cfg, 2, 32, 8, &steps, false);
+        assert_eq!(per[0].cycles, chunk.cycles);
     }
 
     #[test]

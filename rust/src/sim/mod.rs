@@ -21,7 +21,8 @@ pub mod sparsity_engine;
 
 pub use accelerator::{estimate_batch, estimate_decode_batch,
                       estimate_decode_step, estimate_layer,
-                      estimate_layer_dense, estimate_model, run_layer,
+                      estimate_layer_dense, estimate_model,
+                      estimate_prefill_chunk, run_layer,
                       ChipReport, DecodeProfile, RequestProfile};
 pub use config::{MacKind, SimConfig, Widths, W12, W16};
 pub use core::{cost_decode_head, cost_decode_head_causal, cost_head,

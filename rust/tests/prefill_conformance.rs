@@ -1,0 +1,472 @@
+//! Conformance of the chunked streaming-prefill path: when the
+//! continuous scheduler slices an admitted long prefill into
+//! `--prefill-chunk`-sized position-asserted chunk requests, the
+//! finished context must be **bitwise identical** to the monolithic
+//! (single multi-token request) path and to the sequential
+//! full-recompute reference (`hdp_head_reference` /
+//! `hdp_causal_reference` over the session's whole context, per
+//! layer × head) — chunking is a scheduling transform, never a
+//! numerical one.
+//!
+//! The matrix: chunk sizes × modes (bidirectional + causal/windowed)
+//! × pruning knobs × sticky shards {1, 2, 4} × eviction/spill
+//! pressure × a mid-prefill lane kill. Alongside bitwise equality the
+//! suite pins **exactly-once chunk accounting**: one response per
+//! admitted request no matter how many chunks served it, prefill
+//! chunk/TTFT counters that add up exactly, and a journal that holds
+//! every committed token exactly once (a failover adopter resumes the
+//! chunk stream at the committed position — it never re-serves
+//! committed rows). The co-scheduling test pins the per-iteration
+//! token budget: a long Bulk prefill streams through the scheduler
+//! without starving an Interactive decode stream for even one
+//! iteration.
+//!
+//! Needs no artifacts: the native backend derives every cached token's
+//! row deterministically from `(token, position, layer, head)`.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hdp::attention::hdp::{hdp_causal_reference, hdp_head_reference};
+use hdp::coordinator::{derive_session_head_inputs, pooled_label, Batcher,
+                       Engine, FaultPlan, LaneState, NativeModelConfig,
+                       Priority, Request, ServeMode, ShardReport,
+                       ShardedCoordinator};
+use hdp::session::SessionMode;
+use hdp::sim::SimConfig;
+use hdp::util::rng::SplitMix64;
+
+const GEOM: NativeModelConfig =
+    NativeModelConfig { n_layers: 2, n_heads: 3, d_head: 8 };
+
+/// Window of the matrix's causal session — small enough that an
+/// 8-token prefill genuinely clamps.
+const WINDOW: Option<usize> = Some(4);
+
+fn engine(mode: ServeMode, threads: usize, max_batch: usize) -> Engine {
+    let batcher = Arc::new(Batcher::new(max_batch, Duration::from_millis(1)));
+    Engine::new_native(GEOM, mode, SimConfig::edge(), batcher, threads).unwrap()
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Full-recompute reference for one session context: the last query
+/// row of every (layer, head), flattened — what a served step must
+/// reproduce bitwise (same helper as `decode_conformance`).
+fn reference_bits(eng: &Engine, context: &[i32]) -> Vec<u32> {
+    let p = eng.native_kernel_params().expect("native engine");
+    let profile = eng.native_profile().expect("native engine");
+    let scale = eng.calibration_scale();
+    let l = context.len();
+    let mut outputs = Vec::new();
+    for layer in 0..GEOM.n_layers {
+        for head in 0..GEOM.n_heads {
+            let (iq, fq, ik, fk, v) = derive_session_head_inputs(
+                context, layer, head, GEOM.d_head, profile, scale);
+            let out = hdp_head_reference(&iq, &fq, &ik, &fk, &v, p);
+            outputs.extend_from_slice(
+                &out.out.data()[(l - 1) * GEOM.d_head..l * GEOM.d_head]);
+        }
+    }
+    bits(&outputs)
+}
+
+/// [`reference_bits`] for a causal/windowed session, anchored on
+/// `hdp_causal_reference` with the session's window.
+fn causal_reference_bits(
+    eng: &Engine,
+    context: &[i32],
+    window: Option<usize>,
+) -> Vec<u32> {
+    let p = eng.native_kernel_params().expect("native engine");
+    let profile = eng.native_profile().expect("native engine");
+    let scale = eng.calibration_scale();
+    let l = context.len();
+    let mut outputs = Vec::new();
+    for layer in 0..GEOM.n_layers {
+        for head in 0..GEOM.n_heads {
+            let (iq, fq, ik, fk, v) = derive_session_head_inputs(
+                context, layer, head, GEOM.d_head, profile, scale);
+            let out = hdp_causal_reference(&iq, &fq, &ik, &fk, &v, p, window);
+            outputs.extend_from_slice(
+                &out.out.data()[(l - 1) * GEOM.d_head..l * GEOM.d_head]);
+        }
+    }
+    bits(&outputs)
+}
+
+fn mode_of(rho: f32, tau: f32) -> ServeMode {
+    ServeMode::Hdp { rho, tau, qstep: 1.0 / 4096.0 }
+}
+
+/// One scheduled step: `(session, asserted position, tokens, causal)`.
+type Step = (u64, usize, Vec<i32>, bool);
+
+fn push_step(
+    rng: &mut SplitMix64,
+    ctx: &mut HashMap<u64, Vec<i32>>,
+    schedule: &mut Vec<Step>,
+    prefixes: &mut Vec<Vec<i32>>,
+    s: u64,
+    n: usize,
+    causal: bool,
+) {
+    let toks: Vec<i32> = (0..n).map(|_| rng.next_below(30_000) as i32).collect();
+    let c = ctx.entry(s).or_default();
+    let pos = c.len();
+    c.extend_from_slice(&toks);
+    schedule.push((s, pos, toks, causal));
+    prefixes.push(c.clone());
+}
+
+/// The matrix's workload: session 0 bidirectional (7-token prefill +
+/// 3 steps), session 1 causal window 4 (8-token prefill + 3 steps),
+/// session 2 bidirectional mid-block (5-token prefill + 2 steps).
+/// Every prefill is longer than every chunk size under test, so the
+/// slicer engages on all three, and the odd lengths leave ragged
+/// final chunks. Returns `(schedule, prefixes)` where `prefixes[id]`
+/// is the session context after request `id` commits.
+fn matrix_schedule(seed: u64) -> (Vec<Step>, Vec<Vec<i32>>) {
+    const PREFILL: [usize; 3] = [7, 8, 5];
+    const ROUNDS: [usize; 3] = [3, 3, 2];
+    let mut rng = SplitMix64::new(seed);
+    let mut ctx: HashMap<u64, Vec<i32>> = HashMap::new();
+    let mut schedule: Vec<Step> = Vec::new();
+    let mut prefixes: Vec<Vec<i32>> = Vec::new();
+    for s in 0..3u64 {
+        push_step(&mut rng, &mut ctx, &mut schedule, &mut prefixes,
+                  s, PREFILL[s as usize], s == 1);
+    }
+    for round in 0..3usize {
+        for s in 0..3u64 {
+            if round < ROUNDS[s as usize] {
+                push_step(&mut rng, &mut ctx, &mut schedule, &mut prefixes,
+                          s, 1, s == 1);
+            }
+        }
+    }
+    (schedule, prefixes)
+}
+
+/// Run the matrix schedule through a continuous sticky fleet with the
+/// given chunking knob and pressure profile, then assert the journal
+/// holds every committed token exactly once (chunked serving never
+/// double-records a row).
+fn run_matrix(
+    schedule: &[Step],
+    mode: ServeMode,
+    shards: usize,
+    kv_pages: usize,
+    spill: bool,
+    chunk: Option<usize>,
+    label: &str,
+) -> ShardReport {
+    let mut coord = ShardedCoordinator::new_native_sticky(
+        shards, GEOM, mode, SimConfig::edge(),
+        4, Duration::from_millis(1), 0, 2, kv_pages, 1.0,
+    )
+    .unwrap()
+    .with_continuous(true)
+    .with_prefill_chunk(chunk);
+    if spill {
+        coord = coord.with_spill(true);
+    }
+    let router = coord.router().expect("sticky router");
+    for (id, (s, pos, toks, causal)) in schedule.iter().enumerate() {
+        let mut req = Request::decode_at(id as u64, *s, *pos, toks.clone());
+        if *causal {
+            req = req.with_mode(SessionMode::Causal { window: WINDOW });
+        }
+        router.submit(req).unwrap();
+    }
+    router.close();
+    let report = coord.run().unwrap();
+    let journal = coord.journal().expect("sticky fleets journal");
+    for (s, want) in [(0u64, 10usize), (1, 11), (2, 7)] {
+        assert_eq!(journal.len(s), want,
+                   "{label}: journal holds session {s}'s stream exactly once");
+    }
+    report
+}
+
+/// Shared per-run assertion: exactly one response per admitted
+/// request, none refused, every one bitwise the sequential reference
+/// of its prefix. Returns the response stream keyed by id for
+/// chunked-vs-monolithic comparison.
+fn check_run(
+    report: &ShardReport,
+    refs: &[Vec<u32>],
+    prefixes: &[Vec<i32>],
+    label: &str,
+) -> Vec<(u64, Option<u64>, usize, Vec<u32>, i32)> {
+    assert!(report.lane_errors.is_empty(), "{label}: {:?}", report.lane_errors);
+    assert_eq!(report.responses.len(), refs.len(),
+               "{label}: exactly one response per admitted request");
+    let mut seen = vec![false; refs.len()];
+    let mut stream = Vec::with_capacity(report.responses.len());
+    for r in &report.responses {
+        let id = r.id as usize;
+        assert!(!seen[id], "{label}: request {} answered twice", r.id);
+        seen[id] = true;
+        assert!(!r.rejected, "{label}: request {} refused ({:?})", r.id, r.reason);
+        assert_eq!(r.context_len, prefixes[id].len(), "{label}: request {}", r.id);
+        assert_eq!(bits(&r.outputs), refs[id],
+                   "{label}: request {} diverged from the sequential \
+                    reference", r.id);
+        assert_eq!(r.label, pooled_label(&r.outputs), "{label}: request {}", r.id);
+        assert!(r.sim_seconds > 0.0, "{label}: request {} sim timing", r.id);
+        stream.push((r.id, r.session, r.context_len, bits(&r.outputs), r.label));
+    }
+    stream.sort_by_key(|t| t.0);
+    stream
+}
+
+#[test]
+fn chunked_prefill_matrix_bitwise_vs_monolithic_and_reference() {
+    // The tentpole matrix: chunk sizes {1, 3} × modes (bidirectional +
+    // causal window 4, co-resident in every run) × pruning knobs ×
+    // sticky shards {1, 2, 4} × pressure (unbounded / one-session page
+    // budget forcing evict-rebuild / the same budget with a spill
+    // tier). Every run's response stream must be bitwise identical to
+    // the monolithic run's and to the sequential reference, with
+    // chunk/TTFT counters adding up exactly.
+    let (schedule, prefixes) = matrix_schedule(0xC4F111);
+    for (rho, tau) in [(0.4f32, 0.0f32), (0.9, 1e9)] {
+        let mode = mode_of(rho, tau);
+        let ref_eng = engine(mode, 1, 4);
+        let refs: Vec<Vec<u32>> = schedule
+            .iter()
+            .zip(&prefixes)
+            .map(|((_, _, _, causal), prefix)| {
+                if *causal {
+                    causal_reference_bits(&ref_eng, prefix, WINDOW)
+                } else {
+                    reference_bits(&ref_eng, prefix)
+                }
+            })
+            .collect();
+        for shards in [1usize, 2, 4] {
+            // GEOM = 2 layers × 3 heads = 6 HeadKvs ⇒ 6 pages holds
+            // exactly one session: lanes owning several sessions churn
+            // through evictions (and, third variant, the spill tier)
+            // between every chunk.
+            for (kv_pages, spill) in [(usize::MAX, false), (6, false), (6, true)]
+            {
+                let label = format!(
+                    "rho={rho} tau={tau} shards={shards} kv={kv_pages} \
+                     spill={spill}");
+                let mono = run_matrix(&schedule, mode, shards, kv_pages,
+                                      spill, None, &label);
+                let mono_stream = check_run(&mono, &refs, &prefixes, &label);
+                assert_eq!(mono.metrics.prefill_chunks(), 0,
+                           "{label}: monolithic prefills are never chunked");
+                assert_eq!(mono.metrics.ttft_count(), 3,
+                           "{label}: one TTFT sample per started stream");
+                for chunk in [1usize, 3] {
+                    let clabel = format!("{label} chunk={chunk}");
+                    let rep = run_matrix(&schedule, mode, shards, kv_pages,
+                                         spill, Some(chunk), &clabel);
+                    let stream = check_run(&rep, &refs, &prefixes, &clabel);
+                    assert_eq!(stream, mono_stream,
+                               "{clabel}: chunked and monolithic response \
+                                streams diverged");
+                    // Exactly-once chunk accounting: ceil(n/C) chunks
+                    // per sliced prefill, each serving once.
+                    let want_chunks: u64 = [7usize, 8, 5]
+                        .iter()
+                        .map(|&n| n.div_ceil(chunk) as u64)
+                        .sum();
+                    assert_eq!(rep.metrics.prefill_chunks(), want_chunks,
+                               "{clabel}");
+                    assert_eq!(rep.metrics.prefill_chunk_tokens(), 20,
+                               "{clabel}: chunk tokens sum to the prefills");
+                    assert_eq!(rep.metrics.prefills_completed(), 3, "{clabel}");
+                    assert_eq!(rep.metrics.ttft_count(), 3,
+                               "{clabel}: TTFT stamps the final chunk only");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn long_prefill_coschedules_interactive_decode_every_iteration() {
+    // The anti-starvation pin behind the per-iteration token budget: a
+    // 32-token Bulk prefill streaming in 2-token chunks and an
+    // Interactive session (4-token prefill + 8 decode steps) share the
+    // scheduler. Budget = C + batch − 1 = 5 tokens fits one chunk plus
+    // the Interactive head every iteration, so the Interactive chain
+    // drains during the Bulk stream, not after it: the loop ends in
+    // exactly max(16, 10) = 16 iterations. Serial scheduling (prefill
+    // first) would take 26 — the assertion is deterministic, not a
+    // latency measurement.
+    let mode = mode_of(0.4, 0.0);
+    let eng = engine(mode, 2, 4)
+        .with_continuous(true)
+        .with_prefill_chunk(Some(2));
+    let mut rng = SplitMix64::new(0x57A12);
+    let bulk_ctx: Vec<i32> =
+        (0..32).map(|_| rng.next_below(30_000) as i32).collect();
+    let mut inter_ctx: Vec<i32> =
+        (0..4).map(|_| rng.next_below(30_000) as i32).collect();
+    // Bulk submitted first: without class ordering + the token budget
+    // it would hog every iteration until its 32 tokens finished.
+    eng.batcher
+        .submit(Request::decode_at(100, 1, 0, bulk_ctx.clone())
+            .with_priority(Priority::Bulk))
+        .unwrap();
+    eng.batcher
+        .submit(Request::decode_at(200, 2, 0, inter_ctx.clone())
+            .with_priority(Priority::Interactive))
+        .unwrap();
+    let mut inter_prefixes: Vec<(u64, Vec<i32>)> = vec![(200, inter_ctx.clone())];
+    for k in 0..8u64 {
+        let tok = rng.next_below(30_000) as i32;
+        let pos = inter_ctx.len();
+        inter_ctx.push(tok);
+        eng.batcher
+            .submit(Request::decode_at(201 + k, 2, pos, vec![tok])
+                .with_priority(Priority::Interactive))
+            .unwrap();
+        inter_prefixes.push((201 + k, inter_ctx.clone()));
+    }
+    eng.batcher.close();
+    let mut resps = eng.run_loop();
+    resps.sort_by_key(|r| r.id);
+    assert_eq!(resps.len(), 10, "one answer per admitted request");
+    // The Bulk prefill's one answer carries the whole 32-token context,
+    // bitwise the monolithic reference.
+    assert!(!resps[0].rejected, "{:?}", resps[0].reason);
+    assert_eq!(resps[0].id, 100);
+    assert_eq!(resps[0].context_len, 32);
+    assert_eq!(bits(&resps[0].outputs), reference_bits(&eng, &bulk_ctx),
+               "bulk prefill diverged");
+    for (r, (id, prefix)) in resps[1..].iter().zip(&inter_prefixes) {
+        assert_eq!(r.id, *id);
+        assert!(!r.rejected, "interactive step {} refused ({:?})", id, r.reason);
+        assert_eq!(r.context_len, prefix.len(), "step {id}");
+        assert_eq!(bits(&r.outputs), reference_bits(&eng, prefix),
+                   "interactive step {id} diverged beside the bulk stream");
+    }
+    // Co-scheduling, deterministically: the Interactive chain (10
+    // entries) rode inside the Bulk stream's 16 iterations.
+    assert_eq!(eng.metrics.iterations(), 16,
+               "16 chunks co-scheduled with 10 interactive steps must \
+                end in 16 iterations (serial would be 26), got {}",
+               eng.metrics.iterations());
+    assert_eq!(eng.metrics.starved_steps(), 0,
+               "the budget fits both streams — nothing deferred");
+    assert_eq!(eng.metrics.prefill_chunks(), 18,
+               "16 bulk + 2 interactive chunks");
+    assert_eq!(eng.metrics.prefill_chunk_tokens(), 36);
+    assert_eq!(eng.metrics.prefills_completed(), 2);
+    assert_eq!(eng.metrics.ttft_count(), 2);
+    assert_eq!(eng.metrics.join_count(), 2);
+    assert!(eng.metrics.join_latency_quantile(0.95).is_finite(),
+            "interactive join latency stays bounded under the stream");
+}
+
+#[test]
+fn mid_prefill_lane_kill_resumes_chunk_stream_bitwise() {
+    // A lane dies at its second iteration with every one of its
+    // sessions mid-prefill (9-token prefills in 2-token chunks = 5
+    // chunks each; iteration 1 served at most two of them). The
+    // failover contract carries over to chunk streams: the survivor
+    // adopts the journaled committed prefix, resumes each stream at
+    // its committed position without re-serving a single committed
+    // row, and every request — prefill and follow-up decode steps —
+    // answers exactly once, bitwise the uninterrupted reference.
+    let mode = mode_of(0.4, 0.0);
+    let sessions = 6u64;
+    let mut rng = SplitMix64::new(0xA11B);
+    let mut ctx: HashMap<u64, Vec<i32>> = HashMap::new();
+    let mut schedule: Vec<Step> = Vec::new();
+    let mut prefixes: Vec<Vec<i32>> = Vec::new();
+    for s in 0..sessions {
+        push_step(&mut rng, &mut ctx, &mut schedule, &mut prefixes, s, 9, false);
+    }
+    for _ in 0..2 {
+        for s in 0..sessions {
+            push_step(&mut rng, &mut ctx, &mut schedule, &mut prefixes,
+                      s, 1, false);
+        }
+    }
+    let total = schedule.len();
+    let coord = ShardedCoordinator::new_native_sticky(
+        2, GEOM, mode, SimConfig::edge(),
+        2, Duration::from_millis(1), 0, 1, usize::MAX, 1.0,
+    )
+    .unwrap()
+    .with_continuous(true)
+    .with_prefill_chunk(Some(2))
+    .with_fault(0, FaultPlan { kill_at_pop: Some(2), ..FaultPlan::default() });
+    let router = coord.router().expect("sticky router");
+    let ready = coord.readiness();
+    let metrics = Arc::clone(coord.metrics());
+    let producer = std::thread::spawn(move || {
+        assert!(ready.wait_any(), "lanes must come up");
+        for (id, (s, pos, toks, _)) in schedule.iter().enumerate() {
+            router
+                .submit(Request::decode_at(id as u64, *s, *pos, toks.clone()))
+                .expect("unbounded queues admit everything");
+        }
+        // Close only after the kill resolved: the survivor's queue must
+        // still be open when the re-homed chunk streams arrive.
+        let t0 = Instant::now();
+        while metrics.lane_deaths() == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(30),
+                    "injected kill never fired");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        router.close();
+    });
+    let report = coord.run().unwrap();
+    producer.join().unwrap();
+    // Zero loss, exactly once, bitwise.
+    assert_eq!(report.responses.len(), total,
+               "every admitted request answers exactly once across the kill");
+    let ref_eng = engine(mode, 1, 4);
+    let mut seen = vec![false; total];
+    for r in &report.responses {
+        assert!(!r.rejected, "request {} shed ({:?})", r.id, r.reason);
+        let id = r.id as usize;
+        assert!(!seen[id], "request {} answered twice", r.id);
+        seen[id] = true;
+        assert_eq!(r.context_len, prefixes[id].len(), "request {}", r.id);
+        assert_eq!(bits(&r.outputs), reference_bits(&ref_eng, &prefixes[id]),
+                   "request {} diverged after the mid-prefill kill", r.id);
+    }
+    assert!(seen.iter().all(|&s| s), "every request answered");
+    // The kill really fired mid-run and the journal drove the adoption.
+    assert_eq!(report.lane_errors.len(), 1);
+    assert_eq!(report.lane_errors[0].0, 0);
+    assert!(format!("{:#}", report.lane_errors[0].1).contains("injected fault"));
+    assert_eq!(coord.directory().state(0), LaneState::Dead);
+    assert_eq!(report.metrics.lane_deaths(), 1);
+    assert!(report.metrics.sessions_rehomed() >= 1,
+            "the victim's sessions were adopted");
+    let journal = coord.journal().expect("sticky fleets journal");
+    assert!(journal.stats().restores >= 1,
+            "adoption restored from the journal");
+    // Exactly-once chunk accounting across the kill: ceil(9/2) = 5
+    // chunks per session, each served once fleet-wide — committed
+    // chunks stay with the victim's metrics (absorbed once), the rest
+    // serve on the adopter; none repeat, none vanish.
+    assert_eq!(report.metrics.prefill_chunks(), sessions * 5);
+    assert_eq!(report.metrics.prefill_chunk_tokens(), sessions * 9);
+    assert_eq!(report.metrics.prefills_completed(), sessions);
+    assert_eq!(report.metrics.ttft_count(), sessions,
+               "one TTFT per stream, stamped by whichever lane served \
+                the final chunk");
+    assert_eq!(report.metrics.decode_requests(), sessions * 7,
+               "5 chunks + 2 decode steps per session, served once each");
+    assert_eq!(report.metrics.decode_tokens(), sessions * 11);
+    for s in 0..sessions {
+        assert_eq!(journal.len(s), 11,
+                   "journal holds session {s}'s stream exactly once — \
+                    the adopter never re-recorded committed rows");
+    }
+}

@@ -9,7 +9,9 @@
 # batch size, plus sharded-coordinator throughput vs shard count),
 # BENCH_decode.json (bench_decode: cached decode_step tokens/sec vs
 # context length against full recompute, the long-context
-# bidirectional-vs-causal series, and the fixed-page-budget spill-tier
+# bidirectional-vs-causal series up to 64k via chunked streaming
+# prefill, the chunked-vs-row-at-a-time prefill and serving-layer
+# chunked-vs-monolithic series, and the fixed-page-budget spill-tier
 # series) and BENCH_failover.json
 # (bench_failover: recovery latency after a lane kill / drain and the
 # chaos run's throughput dip vs a healthy fleet), each with one record
@@ -42,9 +44,20 @@
 #   * `decode_step ctx=8192 causal w=256` must beat `decode_step
 #     ctx=8192 bidirectional` (windowed scoring + row-only O(nb) θ vs
 #     full-context scoring + the O(nb²) θ grid), and the causal series
-#     alone covers the 32k context — bench_decode prints a SKIPPED
-#     note for 32k-bidirectional (θ ≈ 1 GiB/head at block=2) rather
-#     than capping the sweep silently;
+#     alone covers the 32k and 64k contexts — bench_decode prints a
+#     SKIPPED note for 32k-/64k-bidirectional (θ is O(nb²), ≥ 1
+#     GiB/head at block=2) rather than capping the sweep silently;
+#   * `prefill ctx=4096 causal (chunk=512)` must stay >= 1x the
+#     tokens/s of `... (row-at-a-time)` — chunked streaming prefill
+#     (one multi-row decode_append_rows fan-out per chunk, the kernel
+#     shape the serving slicer drives) does the same work in far fewer
+#     calls, and prefill_conformance pins it bitwise;
+#   * `serve_prefill chunk=64 (bulk 1024 + interactive)` must stay ~1x
+#     the sustained tokens/s of `serve_prefill monolithic ...` while
+#     the printed interactive-TTFT headline drops sharply — slicing a
+#     long Bulk prefill into budgeted chunks lets the continuous
+#     scheduler serve the Interactive stream's first token without
+#     waiting out the whole prefill;
 #   * `decode_budget sessions=4 pages=16 (evict+spill-restore)` must
 #     stay >= 1x the throughput of `... (evict+replay)` — at a page
 #     budget keeping 2 of 4 sessions resident, restoring spilled pages

@@ -49,12 +49,25 @@ cargo test -q --test failover_conformance
 # reference-rederivable; the policy rho clamp is bitwise the sparsity
 # engine's; and per-class metrics absorb exactly once across shards.
 cargo test -q --test policy_conformance
+# Prefill conformance as its own named gate: chunked streaming prefill
+# (the continuous scheduler slicing long prefills into --prefill-chunk
+# sized position-asserted chunk requests under a per-iteration token
+# budget) must be bitwise identical to the monolithic path and the
+# sequential reference across chunk sizes × modes (bidirectional +
+# causal/windowed) × pruning knobs × sticky shards {1,2,4} ×
+# eviction/spill pressure × a mid-prefill lane kill, with exactly-once
+# chunk accounting (one response per admitted request, chunk/TTFT
+# counters that add up, a journal that never re-records committed
+# rows) and deterministic co-scheduling (a long Bulk prefill cannot
+# starve an Interactive decode stream for even one iteration).
+cargo test -q --test prefill_conformance
 # Integration harnesses as an explicit second gate (auto-discovers any
 # future file under rust/tests/): serve_conformance proves the batched
 # native serving path is bitwise identical to sequential reference
 # execution; decode_conformance pins the session/KV-cache decode path;
 # failover_conformance pins lane failover; policy_conformance pins
-# per-request pruning-policy routing; sim_cross_validation and
+# per-request pruning-policy routing; prefill_conformance pins chunked
+# streaming prefill; sim_cross_validation and
 # pjrt_roundtrip cover the PJRT artifacts (they self-skip when
 # artifacts/ is absent).
 cargo test -q --test '*'
